@@ -1,0 +1,72 @@
+//! Figure 2 reproduction: runtime on the Airline dataset for 1–8 devices.
+//!
+//! The paper's Figure 2 shows XGBoost's end-to-end runtime on the 115M-row
+//! airline dataset falling from 1 to 8 V100s. Here each device's shard
+//! compute is *measured* and the ring all-reduce is priced by the
+//! calibrated α–β cost model (DESIGN.md §5) — see `benches/fig2_scaling.rs`
+//! for the paper-format series; this example is the interactive version.
+//!
+//! ```text
+//! cargo run --release --example airline_scaling [-- --rows 200000 --rounds 20]
+//! ```
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::util::ArgParser;
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgParser::from_env();
+    let rows: usize = args.get_parse("rows", 200_000);
+    let rounds: usize = args.get_parse("rounds", 20);
+    let max_p: usize = args.get_parse("max-devices", 8);
+
+    let data = generate(&DatasetSpec::airline_like(rows), 1);
+    println!(
+        "airline-like: {} rows x {} cols ({}x smaller than the paper's 115M)",
+        data.train.n_rows(),
+        data.train.n_cols(),
+        115_000_000 / rows.max(1)
+    );
+
+    let mut table = Table::new(&[
+        "devices", "simulated time (s)", "speedup", "hist max/dev (s)", "comm (s)",
+        "MB/device",
+    ]);
+    let mut t1 = 0.0f64;
+    for p in 1..=max_p {
+        let params = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: rounds,
+            max_bins: 256,
+            max_depth: 6,
+            n_devices: p,
+            compress: true,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let booster = Booster::train(&params, &data.train, None)?;
+        let sim = booster.simulated_secs;
+        if p == 1 {
+            t1 = sim;
+        }
+        let s = &booster.build_stats;
+        table.add_row(vec![
+            format!("{p}"),
+            format!("{sim:.3}"),
+            format!("{:.2}x", t1 / sim),
+            format!("{:.3}", s.hist_secs.iter().cloned().fold(0.0, f64::max)),
+            format!("{:.4}", s.allreduce_sim_secs),
+            format!("{:.1}", s.comm_bytes_per_device as f64 / 1e6),
+        ]);
+        eprintln!("p={p}: simulated {sim:.3}s");
+    }
+    println!("\nFigure 2 (simulated multi-device clock, DESIGN.md §5):\n");
+    print!("{}", table.render());
+    println!(
+        "\npaper shape check: runtime should fall with p until the per-round\n\
+         all-reduce cost (constant in p for large histograms) catches the\n\
+         shrinking per-device histogram work."
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Regenerate Table 1 of the paper: the dataset registry with measured
+//! shape / sparsity / quantisation statistics of the synthetic stand-ins.
+//!
+//! ```text
+//! cargo run --release --example datasets_table [-- --scale 0.002]
+//! ```
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::compress::CompressedMatrix;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::quantile::{HistogramCuts, Quantizer};
+use xgb_tpu::util::ArgParser;
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgParser::from_env();
+    let scale: f64 = args.get_parse("scale", 0.002);
+    let max_bins: usize = args.get_parse("max-bins", 256);
+
+    let mut table = Table::new(&[
+        "Name", "Rows(paper)", "Rows(run)", "Columns", "Task", "Density",
+        "Bins", "Sym bits", "vs f32", "vs csr-entry",
+    ]);
+    for spec in DatasetSpec::table1(scale) {
+        let paper_rows = match spec.name {
+            "YearPredictionMSD" => 515_000usize,
+            "Synthetic" => 10_000_000,
+            "Higgs" => 11_000_000,
+            "Cover Type" => 581_000,
+            "Bosch" => 1_000_000,
+            "Airline" => 115_000_000,
+            _ => 0,
+        };
+        let g = generate(&spec, 42);
+        let cuts = HistogramCuts::from_dmatrix(&g.train.x, max_bins, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&g.train.x);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        table.add_row(vec![
+            spec.name.to_string(),
+            format!("{paper_rows}"),
+            format!("{}", g.train.n_rows() + g.valid.n_rows()),
+            format!("{}", spec.cols),
+            format!("{:?}", spec.task),
+            format!("{:.2}", g.train.x.density()),
+            format!("{}", cuts.total_bins()),
+            format!("{}", cm.symbol_bits),
+            format!("{:.2}x", cm.ratio_vs_float()),
+            format!("{:.2}x", cm.ratio_vs_csr_entry()),
+        ]);
+    }
+    println!("Table 1 (synthetic stand-ins at scale {scale}; DESIGN.md §2):\n");
+    print!("{}", table.render());
+    Ok(())
+}

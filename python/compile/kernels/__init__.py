@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spot (gradient histogram
+# accumulation) plus the pure-jnp correctness oracles in ref.py.
+from . import histogram, ref  # noqa: F401

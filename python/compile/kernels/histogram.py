@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: gradient histogram accumulation.
+
+The paper's CUDA kernel accumulates gradient pairs into shared-memory
+histograms with atomic adds (§2.3).  Atomics do not exist in the TPU
+programming model, so the kernel re-expresses the same segmented reduction
+as dense linear algebra the MXU can run (DESIGN.md §1):
+
+    hist[b, :] = sum_i  onehot(bin_i)[b] * weight_i[:]
+               = onehot(bins)^T @ weights
+
+Per grid step a ``(TILE, )`` slice of quantised bin symbols and the
+matching ``(TILE, 2)`` gradient-pair rows are staged into VMEM, the one-hot
+``(TILE, BINS)`` matrix is formed in registers from an iota comparison and
+contracted against the weights on the MXU; the ``(BINS, 2)`` output block
+lives in VMEM across grid steps and accumulates (sequential-grid revisiting
+on TPU).
+
+Out-of-range symbols (the ELLPACK null/padding symbol, or bins outside the
+``bin_offset`` window the caller selected) one-hot to the zero row and so
+contribute nothing — this is how a single fixed-shape artifact covers
+matrices whose total bin count exceeds ``BINS``.
+
+Shapes are static: callers (``compile/model.py`` and the Rust runtime via
+the AOT artifact) pad the last tile.  ``interpret=True`` everywhere — the
+CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU performance is
+estimated analytically in DESIGN.md §7.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact tile geometry (see aot.py).
+TILE = 4096  # flattened (row, slot) symbols per grid step
+BINS = 512   # histogram bins per call window
+
+
+def _hist_kernel(bins_ref, w_ref, out_ref, *, n_bins: int):
+    """One grid step: out += onehot(bins)^T @ w."""
+    step = pl.program_id(0)
+
+    bins = bins_ref[...]  # (TILE,) int32, already offset-local
+    w = w_ref[...]        # (TILE, 2) float32
+
+    # one-hot via iota comparison; out-of-range symbols match nothing
+    ids = jax.lax.broadcasted_iota(jnp.int32, (bins.shape[0], n_bins), 1)
+    onehot = (bins[:, None] == ids).astype(jnp.float32)  # (TILE, BINS)
+
+    # (BINS, TILE) @ (TILE, 2) on the MXU
+    partial_hist = jax.lax.dot_general(
+        onehot,
+        w,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BINS, 2)
+
+    # zero the accumulator on the first step, then accumulate
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial_hist
+
+
+def histogram_tile(bins_local: jax.Array, weights: jax.Array,
+                   n_bins: int = BINS, tile: int = TILE) -> jax.Array:
+    """Histogram of one row tile via the Pallas kernel.
+
+    Args:
+      bins_local: ``(N,)`` int32 — bin symbols already shifted by the
+        caller's bin-window offset; anything outside ``[0, n_bins)`` is
+        ignored (null symbol, padding, other windows).
+      weights: ``(N, 2)`` float32 — (grad, hess) per symbol (rows repeated
+        per slot by the caller); padded entries must be zero.
+      n_bins: histogram width of this call window.
+      tile: symbols per grid step; must divide ``N``.
+
+    Returns:
+      ``(n_bins, 2)`` float32 gradient histogram.
+    """
+    n = bins_local.shape[0]
+    assert n % tile == 0, f"flattened length {n} not a multiple of tile {tile}"
+    grid = (n // tile,)
+    return pl.pallas_call(
+        partial(_hist_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_bins, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_bins, 2), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(bins_local, weights)
+
+
+def vmem_bytes(tile: int = TILE, n_bins: int = BINS) -> int:
+    """Static VMEM footprint estimate of one grid step (DESIGN.md §7):
+    bins block + weights block + one-hot intermediate + output block."""
+    return (
+        tile * 4              # bins int32
+        + tile * 2 * 4        # weights f32
+        + tile * n_bins * 4   # one-hot f32 (register/VMEM resident)
+        + n_bins * 2 * 4      # output accumulator
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp correctness oracles for the L1/L2 computations.
+
+Every kernel / model function has an oracle here written with the most
+obvious jnp formulation; pytest asserts allclose between the two across a
+shape/dtype sweep (python/tests/).  The Rust side re-checks the same
+numerics against its native implementations through the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def histogram_ref(bins_local, weights, n_bins):
+    """Segment-sum gradient histogram.
+
+    Args:
+      bins_local: (N,) int32 bin ids; out-of-range ids are dropped.
+      weights: (N, 2) float32 gradient pairs.
+      n_bins: output width.
+
+    Returns:
+      (n_bins, 2) float32.
+    """
+    bins_local = bins_local.astype(jnp.int32)
+    valid = (bins_local >= 0) & (bins_local < n_bins)
+    clamped = jnp.where(valid, bins_local, 0)
+    w = jnp.where(valid[:, None], weights, 0.0)
+    out = jnp.zeros((n_bins, 2), dtype=jnp.float32)
+    return out.at[clamped].add(w)
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def logistic_gradients_ref(margins, labels):
+    """Paper equations (1)-(2)."""
+    p = sigmoid(margins)
+    return p - labels, p * (1.0 - p)
+
+
+def squared_gradients_ref(margins, labels):
+    return margins - labels, jnp.ones_like(margins)
+
+
+def softmax_gradients_ref(margins, labels, n_class):
+    """margins: (N, K); labels: (N,) int. Returns (N, K) g and h."""
+    z = margins - margins.max(axis=1, keepdims=True)
+    e = jnp.exp(z)
+    p = e / e.sum(axis=1, keepdims=True)
+    onehot = jnp.eye(n_class, dtype=p.dtype)[labels.astype(jnp.int32)]
+    g = p - onehot
+    h = 2.0 * p * (1.0 - p)
+    return g, h
+
+
+def predict_ensemble_ref(x, trees):
+    """Reference predictor: plain python traversal.
+
+    Args:
+      x: (N, F) numpy-like with NaN missing.
+      trees: list of dicts with keys feature/threshold/left/right/
+        default_left/leaf_value, each a 1-D array indexed by node id.
+
+    Returns:
+      (N,) float margins (sum over trees).
+    """
+    import numpy as np
+
+    x = np.asarray(x)
+    n = x.shape[0]
+    out = np.zeros(n, dtype=np.float32)
+    for t in trees:
+        feature = np.asarray(t["feature"])
+        threshold = np.asarray(t["threshold"])
+        left = np.asarray(t["left"])
+        right = np.asarray(t["right"])
+        default_left = np.asarray(t["default_left"])
+        leaf_value = np.asarray(t["leaf_value"])
+        for i in range(n):
+            nid = 0
+            while left[nid] != -1:
+                v = x[i, feature[nid]]
+                if np.isnan(v):
+                    go_left = bool(default_left[nid])
+                else:
+                    go_left = bool(v < threshold[nid])
+                nid = int(left[nid] if go_left else right[nid])
+            out[i] += leaf_value[nid]
+    return out

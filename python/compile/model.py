@@ -1,0 +1,149 @@
+"""L2: the JAX compute graphs AOT-lowered into the Rust hot path.
+
+Three entry points, mirroring the phases the paper moves onto the device
+(Figure 1):
+
+* ``logistic_gradients`` / ``squared_gradients`` — per-instance gradient
+  pairs (paper §2.5, equations 1-2; one thread per instance becomes one
+  vector lane per instance),
+* ``histogram_fn`` — the §2.3 hot-spot, calling the L1 Pallas kernel
+  (kernels/histogram.py),
+* ``predict_ensemble`` — §2.4 batched tree traversal over array-encoded
+  trees (one lane per instance, trees iterated sequentially, exactly the
+  paper's mapping).
+
+Everything here executes at build time only: aot.py lowers these with
+fixed tile shapes to HLO text, and rust/src/runtime/ replays them through
+PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import histogram as hist_kernel
+
+
+# ---------------------------------------------------------------- gradients
+
+def logistic_gradients(margins, labels):
+    """Paper equations (1)-(2): g = sigmoid(ŷ) − y, h = σ(ŷ)(1−σ(ŷ)).
+
+    Returns (g, h) as float32 vectors; the Rust booster masks padded rows.
+    """
+    p = jax.nn.sigmoid(margins)
+    return p - labels, jnp.maximum(p * (1.0 - p), 1e-16)
+
+
+def squared_gradients(margins, labels):
+    """reg:squarederror: g = ŷ − y, h = 1."""
+    return margins - labels, jnp.ones_like(margins)
+
+
+# ---------------------------------------------------------------- histogram
+
+def histogram_fn(bins, grads, bin_offset):
+    """Gradient histogram of one row tile over one bin window.
+
+    Args:
+      bins: (R, S) int32 global bin symbols (ELLPACK layout; null/padding
+        symbols are any value outside the window).
+      grads: (R, 2) float32 gradient pairs per row (zero for padded rows).
+      bin_offset: () int32 — start of the bin window this call covers.
+
+    Returns:
+      (BINS, 2) float32 histogram of bins [offset, offset + BINS).
+    """
+    r, s = bins.shape
+    local = bins - bin_offset  # out-of-window symbols fall outside [0, BINS)
+    flat_bins = local.reshape(r * s)
+    # each of a row's S slots carries the row's gradient pair
+    flat_w = jnp.broadcast_to(grads[:, None, :], (r, s, 2)).reshape(r * s, 2)
+    return hist_kernel.histogram_tile(
+        flat_bins, flat_w, n_bins=hist_kernel.BINS, tile=min(hist_kernel.TILE, r * s)
+    )
+
+
+# ----------------------------------------------------------------- predict
+
+def predict_ensemble(x, feature, threshold, left, right, default_left,
+                     leaf_value, *, max_iters=32):
+    """Batched prediction over an array-encoded tree ensemble (§2.4).
+
+    Args:
+      x: (R, F) float32, NaN = missing.
+      feature, threshold, left, right, default_left, leaf_value:
+        (T, M) per-tree node arrays (see rust RegTree::to_arrays); padding
+        trees are single leaves with leaf_value 0.
+      max_iters: static traversal depth bound (>= max node depth).
+
+    Returns:
+      (R,) float32 margin sums over all T trees.
+    """
+    r = x.shape[0]
+    t = feature.shape[0]
+
+    # Node-id state is laid out (T, R) so per-tree node-array gathers run
+    # along axis 1 with take_along_axis.
+    nid = jnp.zeros((t, r), dtype=jnp.int32)
+
+    def step(_, nid):
+        feat = jnp.take_along_axis(feature, nid, axis=1)         # (T, R)
+        thr = jnp.take_along_axis(threshold, nid, axis=1)
+        lft = jnp.take_along_axis(left, nid, axis=1)
+        rgt = jnp.take_along_axis(right, nid, axis=1)
+        dfl = jnp.take_along_axis(default_left, nid, axis=1)
+        is_leaf = lft == -1
+        # x values: rows gather their feature column per tree
+        fv = x[jnp.arange(r)[None, :], jnp.clip(feat, 0, x.shape[1] - 1)]  # (T, R)
+        missing = jnp.isnan(fv)
+        go_left = jnp.where(missing, dfl == 1, fv < thr)
+        nxt = jnp.where(go_left, lft, rgt)
+        return jnp.where(is_leaf, nid, nxt)
+
+    nid = jax.lax.fori_loop(0, max_iters, step, nid)
+    leaves = jnp.take_along_axis(leaf_value, nid, axis=1)  # (T, R)
+    return leaves.sum(axis=0)
+
+
+# --------------------------------------------------------------- jit wrappers
+
+def lowerable_histogram(r, s):
+    """jit-able histogram closure for fixed (R, S)."""
+    def fn(bins, grads, bin_offset):
+        return (histogram_fn(bins, grads, bin_offset),)
+    return fn, (
+        jax.ShapeDtypeStruct((r, s), jnp.int32),
+        jax.ShapeDtypeStruct((r, 2), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def lowerable_gradients(kind, n):
+    fn = {"logistic": logistic_gradients, "squared": squared_gradients}[kind]
+    def wrapped(margins, labels):
+        return fn(margins, labels)
+    return wrapped, (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def lowerable_predict(r, f, t, m, max_iters=32):
+    def fn(x, feature, threshold, left, right, default_left, leaf_value):
+        return (
+            predict_ensemble(
+                x, feature, threshold, left, right, default_left, leaf_value,
+                max_iters=max_iters,
+            ),
+        )
+    i32 = jnp.int32
+    f32 = jnp.float32
+    return fn, (
+        jax.ShapeDtypeStruct((r, f), f32),
+        jax.ShapeDtypeStruct((t, m), i32),
+        jax.ShapeDtypeStruct((t, m), f32),
+        jax.ShapeDtypeStruct((t, m), i32),
+        jax.ShapeDtypeStruct((t, m), i32),
+        jax.ShapeDtypeStruct((t, m), i32),
+        jax.ShapeDtypeStruct((t, m), f32),
+    )

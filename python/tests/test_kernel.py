@@ -1,0 +1,81 @@
+"""Pallas histogram kernel vs pure-jnp oracle — the core L1 correctness
+signal, swept over shapes, bin counts, paddings and degenerate inputs
+(hand-rolled sweep; the `hypothesis` package is not available offline)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import histogram as hk
+from compile.kernels import ref
+
+
+def _rand_case(rng, n, n_bins, p_invalid=0.1, tile=None):
+    bins = rng.integers(0, n_bins, size=n).astype(np.int32)
+    # sprinkle out-of-range symbols (null / other windows)
+    mask = rng.random(n) < p_invalid
+    bins[mask] = n_bins + rng.integers(0, 1000, size=mask.sum())
+    neg = rng.random(n) < p_invalid / 2
+    bins[neg] = -rng.integers(1, 1000, size=neg.sum()).astype(np.int32)
+    w = rng.normal(size=(n, 2)).astype(np.float32)
+    return jnp.asarray(bins), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("n,tile", [(4096, 4096), (8192, 4096), (16384, 4096)])
+def test_kernel_matches_ref(seed, n, tile):
+    rng = np.random.default_rng(seed)
+    bins, w = _rand_case(rng, n, hk.BINS)
+    got = hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=tile)
+    want = ref.histogram_ref(bins, w, hk.BINS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_bins", [8, 64, 512])
+def test_kernel_bin_widths(n_bins):
+    rng = np.random.default_rng(42)
+    bins, w = _rand_case(rng, 4096, n_bins)
+    got = hk.histogram_tile(bins, w, n_bins=n_bins, tile=4096)
+    want = ref.histogram_ref(bins, w, n_bins)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_all_invalid_symbols_give_zero():
+    bins = jnp.full((4096,), 10_000, dtype=jnp.int32)
+    w = jnp.ones((4096, 2), dtype=jnp.float32)
+    got = hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=4096)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_single_bin_concentration():
+    bins = jnp.zeros((4096,), dtype=jnp.int32)
+    w = jnp.ones((4096, 2), dtype=jnp.float32)
+    got = np.asarray(hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=4096))
+    assert got[0, 0] == pytest.approx(4096.0)
+    assert got[0, 1] == pytest.approx(4096.0)
+    assert np.abs(got[1:]).max() == 0.0
+
+def test_multi_step_accumulation_matches_single():
+    # the same data as one grid step vs four must agree exactly
+    rng = np.random.default_rng(7)
+    bins, w = _rand_case(rng, 16384, hk.BINS)
+    one = hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=16384)
+    four = hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=4096)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(four),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_weighted_sum_total_preserved():
+    rng = np.random.default_rng(3)
+    bins = jnp.asarray(rng.integers(0, hk.BINS, size=4096).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(4096, 2)).astype(np.float32))
+    got = np.asarray(hk.histogram_tile(bins, w, n_bins=hk.BINS, tile=4096))
+    np.testing.assert_allclose(got.sum(axis=0), np.asarray(w).sum(axis=0),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md §7: one grid step's working set must fit a 16 MiB VMEM
+    assert hk.vmem_bytes() <= 16 * 1024 * 1024

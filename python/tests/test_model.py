@@ -1,0 +1,154 @@
+"""L2 model graphs vs oracles: gradients (paper eq. 1-2), the histogram
+wrapper, and the array-encoded ensemble predictor vs a plain python
+traversal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import histogram as hk
+from compile.kernels import ref
+
+
+# --------------------------------------------------------------- gradients
+
+@pytest.mark.parametrize("seed", range(3))
+def test_logistic_gradients_match_ref(seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=512).astype(np.float32) * 3)
+    y = jnp.asarray((rng.random(512) < 0.5).astype(np.float32))
+    g, h = model.logistic_gradients(m, y)
+    rg, rh = ref.logistic_gradients_ref(m, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh), rtol=1e-6, atol=1e-15)
+    # hessian positivity (clamped)
+    assert float(jnp.min(h)) > 0.0
+
+
+def test_squared_gradients_match_ref():
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    g, h = model.squared_gradients(m, y)
+    rg, rh = ref.squared_gradients_ref(m, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh))
+
+
+def test_logistic_gradient_values_paper_eq():
+    # at margin 0: p=0.5 -> g = 0.5 - y, h = 0.25
+    g, h = model.logistic_gradients(jnp.zeros(2), jnp.asarray([0.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(g), [0.5, -0.5], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h), [0.25, 0.25], rtol=1e-6)
+
+
+# --------------------------------------------------------------- histogram
+
+@pytest.mark.parametrize("seed", range(3))
+def test_histogram_fn_windows(seed):
+    rng = np.random.default_rng(seed)
+    r, s = 1024, 16
+    total_bins = 1200  # wider than one window
+    bins = rng.integers(0, total_bins + 1, size=(r, s)).astype(np.int32)
+    grads = rng.normal(size=(r, 2)).astype(np.float32)
+    full = np.zeros((total_bins + 1, 2), dtype=np.float64)
+    for i in range(r):
+        for j in range(s):
+            full[bins[i, j]] += grads[i]
+    for offset in (0, hk.BINS):
+        got = model.histogram_fn(jnp.asarray(bins), jnp.asarray(grads),
+                                 jnp.int32(offset))
+        want = np.zeros((hk.BINS, 2), dtype=np.float64)
+        hi = min(offset + hk.BINS, total_bins)  # exclude the null symbol
+        want[: hi - offset] = full[offset:hi]
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
+
+
+def test_histogram_fn_padded_rows_ignored():
+    r, s = 1024, 16
+    bins = np.full((r, s), 7, dtype=np.int32)
+    grads = np.ones((r, 2), dtype=np.float32)
+    grads[512:] = 0.0  # padded rows must carry zero gradients
+    got = np.asarray(model.histogram_fn(jnp.asarray(bins), jnp.asarray(grads),
+                                        jnp.int32(0)))
+    assert got[7, 0] == pytest.approx(512 * s)
+
+
+# ----------------------------------------------------------------- predict
+
+def _random_tree(rng, max_nodes, n_features, depth=4):
+    """Build a random valid tree in array encoding; returns dict."""
+    feature = np.zeros(max_nodes, dtype=np.int32)
+    threshold = np.zeros(max_nodes, dtype=np.float32)
+    left = np.full(max_nodes, -1, dtype=np.int32)
+    right = np.full(max_nodes, -1, dtype=np.int32)
+    default_left = np.ones(max_nodes, dtype=np.int32)
+    leaf_value = np.zeros(max_nodes, dtype=np.float32)
+    next_id = [1]
+
+    def grow(nid, d):
+        if d >= depth or rng.random() < 0.3 or next_id[0] + 2 > max_nodes:
+            leaf_value[nid] = rng.normal()
+            return
+        feature[nid] = rng.integers(0, n_features)
+        threshold[nid] = rng.normal()
+        default_left[nid] = rng.integers(0, 2)
+        l, r = next_id[0], next_id[0] + 1
+        next_id[0] += 2
+        left[nid], right[nid] = l, r
+        grow(l, d + 1)
+        grow(r, d + 1)
+
+    grow(0, 0)
+    return dict(feature=feature, threshold=threshold, left=left, right=right,
+                default_left=default_left, leaf_value=leaf_value)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_predict_matches_reference_traversal(seed):
+    rng = np.random.default_rng(seed)
+    r, f, t, m = 256, 8, 5, 64
+    x = rng.normal(size=(r, f)).astype(np.float32)
+    x[rng.random((r, f)) < 0.15] = np.nan  # missing values
+    trees = [_random_tree(rng, m, f) for _ in range(t)]
+    stack = lambda k, dt: jnp.asarray(np.stack([tr[k] for tr in trees]).astype(dt))
+    got = model.predict_ensemble(
+        jnp.asarray(x),
+        stack("feature", np.int32),
+        stack("threshold", np.float32),
+        stack("left", np.int32),
+        stack("right", np.int32),
+        stack("default_left", np.int32),
+        stack("leaf_value", np.float32),
+        max_iters=16,
+    )
+    want = ref.predict_ensemble_ref(x, trees)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_padding_trees_contribute_zero():
+    r, f = 16, 4
+    x = np.zeros((r, f), dtype=np.float32)
+    # two identical stumps + one all-padding tree
+    stump = dict(
+        feature=np.zeros(8, np.int32), threshold=np.full(8, 0.5, np.float32),
+        left=np.array([1] + [-1] * 7, np.int32),
+        right=np.array([2] + [-1] * 7, np.int32),
+        default_left=np.ones(8, np.int32),
+        leaf_value=np.array([0, 1.5, -1.0] + [0] * 5, np.float32),
+    )
+    pad = dict(
+        feature=np.zeros(8, np.int32), threshold=np.zeros(8, np.float32),
+        left=np.full(8, -1, np.int32), right=np.full(8, -1, np.int32),
+        default_left=np.ones(8, np.int32), leaf_value=np.zeros(8, np.float32),
+    )
+    trees = [stump, stump, pad]
+    stack = lambda k, dt: jnp.asarray(np.stack([tr[k] for tr in trees]).astype(dt))
+    got = model.predict_ensemble(
+        jnp.asarray(x), stack("feature", np.int32), stack("threshold", np.float32),
+        stack("left", np.int32), stack("right", np.int32),
+        stack("default_left", np.int32), stack("leaf_value", np.float32),
+        max_iters=8,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.full(r, 3.0), rtol=1e-6)

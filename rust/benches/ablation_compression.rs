@@ -1,0 +1,79 @@
+//! A1-runtime ablation: §2.2 claims bit-pack/unpack "incur[s] no visible
+//! performance penalty" while cutting memory 4x. Measures histogram-build
+//! throughput and end-to-end training over the packed vs unpacked matrix,
+//! and the memory saved.
+
+use xgb_tpu::bench::{Runner, Table};
+use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::GradPair;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = env_usize("XGB_BENCH_ROWS", 60_000);
+    let rounds = env_usize("XGB_BENCH_ROUNDS", 15);
+    eprintln!("ablation_compression: rows={rows} rounds={rounds}");
+    let runner = Runner::from_env();
+
+    let data = generate(&DatasetSpec::higgs_like(rows), 13);
+    let grads: Vec<GradPair> = data
+        .train
+        .y
+        .iter()
+        .map(|&y| GradPair::new(0.5 - y, 0.25))
+        .collect();
+
+    let mut t = Table::new(&[
+        "storage", "matrix MB", "hist build (ms)", "cells/s (M)", "train (s)",
+        "valid acc",
+    ]);
+    for compress in [false, true] {
+        let params = CoordinatorParams {
+            n_devices: 1,
+            compress,
+            max_bins: 256,
+            ..Default::default()
+        };
+        let mut c = MultiDeviceCoordinator::from_dmatrix(&data.train.x, params)?;
+        let mb = c.device_bytes().iter().sum::<usize>() as f64 / 1e6;
+        // histogram micro-bench: one full root build
+        let res = runner.run(format!("hist compress={compress}"), || {
+            c.build_tree(&grads).unwrap()
+        });
+        // full training
+        let bp = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: rounds,
+            max_bins: 256,
+            compress,
+            eval_metric: "accuracy".into(),
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&bp, &data.train, Some(&data.valid))?;
+        let acc = b.eval_history.last().and_then(|r| r.valid).unwrap_or(f64::NAN);
+        let stats = c.build_tree(&grads)?.stats;
+        let cells_per_sec =
+            stats.hist_cells as f64 / stats.hist_secs.iter().sum::<f64>().max(1e-9);
+        t.add_row(vec![
+            if compress { "packed (§2.2)" } else { "u32 bins" }.into(),
+            format!("{mb:.1}"),
+            format!("{:.1}", res.mean_secs * 1e3),
+            format!("{:.1}", cells_per_sec / 1e6),
+            format!("{:.2}", b.train_secs),
+            format!("{acc:.3}"),
+        ]);
+        eprintln!("  compress={compress}: {mb:.1} MB, tree build {:.1} ms", res.mean_secs * 1e3);
+    }
+    println!("\n=== A1-runtime: compression on/off ===\n");
+    print!("{}", t.render());
+    println!(
+        "\npaper claim: packed form costs ~nothing at runtime while using\n\
+         ~4x less memory (here: per-symbol shift/mask on unpack)."
+    );
+    Ok(())
+}

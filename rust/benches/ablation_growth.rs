@@ -1,0 +1,65 @@
+//! A2 ablation: the §2.3 "reconfigurable growth strategy" — depth-wise
+//! (expand closest to root) vs loss-guided (expand highest gain) on equal
+//! leaf budgets: time, tree shape, accuracy.
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = env_usize("XGB_BENCH_ROWS", 40_000);
+    let rounds = env_usize("XGB_BENCH_ROUNDS", 30);
+    eprintln!("ablation_growth: rows={rows} rounds={rounds}");
+
+    let data = generate(&DatasetSpec::higgs_like(rows), 3);
+    let mut t = Table::new(&[
+        "policy", "constraint", "time (s)", "valid acc", "mean leaves/tree",
+        "mean depth",
+    ]);
+
+    for (policy, max_depth, max_leaves, label) in [
+        ("depthwise", 6usize, 0usize, "max_depth=6"),
+        ("lossguide", 0, 64, "max_leaves=64"),
+        ("depthwise", 4, 0, "max_depth=4"),
+        ("lossguide", 0, 16, "max_leaves=16"),
+    ] {
+        let params = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: rounds,
+            max_bins: 64,
+            max_depth,
+            max_leaves,
+            grow_policy: policy.into(),
+            eval_metric: "accuracy".into(),
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&params, &data.train, Some(&data.valid))?;
+        let acc = b.eval_history.last().and_then(|r| r.valid).unwrap_or(f64::NAN);
+        let trees = &b.trees[0];
+        let leaves: f64 =
+            trees.iter().map(|t| t.n_leaves() as f64).sum::<f64>() / trees.len() as f64;
+        let depth: f64 =
+            trees.iter().map(|t| t.max_depth() as f64).sum::<f64>() / trees.len() as f64;
+        t.add_row(vec![
+            policy.into(),
+            label.into(),
+            format!("{:.2}", b.train_secs),
+            format!("{acc:.3}"),
+            format!("{leaves:.1}"),
+            format!("{depth:.1}"),
+        ]);
+        eprintln!("  {policy} {label}: {:.2}s acc={acc:.3}", b.train_secs);
+    }
+    println!("\n=== A2: growth policy ablation (§2.3) ===\n");
+    print!("{}", t.render());
+    println!(
+        "\nexpected shape: lossguide reaches deeper, more unbalanced trees for\n\
+         the same leaf count; accuracy comparable on tabular data of this kind."
+    );
+    Ok(())
+}

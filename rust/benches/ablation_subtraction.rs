@@ -1,0 +1,78 @@
+//! A3 ablation: the histogram subtraction trick (sibling = parent − built
+//! child). With it, each split costs one histogram build over the smaller
+//! child; without it, both children are built — ~2x the histogram cells on
+//! balanced trees, more on skewed ones.
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::tree::TreeParams;
+use xgb_tpu::GradPair;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = env_usize("XGB_BENCH_ROWS", 60_000);
+    let trees = env_usize("XGB_BENCH_TREES", 10);
+    eprintln!("ablation_subtraction: rows={rows} trees={trees}");
+
+    let data = generate(&DatasetSpec::higgs_like(rows), 9);
+    let grads: Vec<GradPair> = data
+        .train
+        .y
+        .iter()
+        .map(|&y| GradPair::new(0.5 - y, 0.25))
+        .collect();
+
+    let mut t = Table::new(&[
+        "subtraction", "hist rounds", "hist cells (M)", "hist time (s)",
+        "simulated (s)", "identical trees",
+    ]);
+    let mut results = Vec::new();
+    for subtraction in [true, false] {
+        let params = CoordinatorParams {
+            n_devices: 1,
+            compress: false,
+            subtraction,
+            max_bins: 64,
+            tree: TreeParams {
+                max_depth: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c = MultiDeviceCoordinator::from_dmatrix(&data.train.x, params)?;
+        let mut stats = xgb_tpu::coordinator::BuildStats::default();
+        let mut built = Vec::new();
+        for _ in 0..trees {
+            let r = c.build_tree(&grads)?;
+            stats.accumulate(&r.stats);
+            built.push(r.tree);
+        }
+        results.push((subtraction, stats, built));
+    }
+
+    let same = results[0].2 == results[1].2;
+    for (subtraction, stats, _) in &results {
+        t.add_row(vec![
+            format!("{subtraction}"),
+            format!("{}", stats.hist_rounds),
+            format!("{:.1}", stats.hist_cells as f64 / 1e6),
+            format!("{:.3}", stats.hist_secs.iter().sum::<f64>()),
+            format!("{:.3}", stats.simulated_secs),
+            format!("{same}"),
+        ]);
+    }
+    println!("\n=== A3: subtraction trick ablation ===\n");
+    print!("{}", t.render());
+    let with = &results[0].1;
+    let without = &results[1].1;
+    println!(
+        "\ncells without/with = {:.2}x (expected ~1.5-2x); trees identical: {same}",
+        without.hist_cells as f64 / with.hist_cells as f64
+    );
+    assert!(same, "the trick must not change results");
+    Ok(())
+}

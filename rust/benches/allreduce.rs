@@ -1,0 +1,53 @@
+//! Collective benchmark: the exact ring all-reduce simulation vs the
+//! gather+broadcast reference, host execution time and modeled NCCL-ring
+//! wall-clock across device counts and histogram sizes (§2.3's
+//! `AllReduceHistograms` step).
+
+use xgb_tpu::bench::{fmt_secs, Runner, Table};
+use xgb_tpu::comm::{allreduce, AllReduceAlgo, CostModel};
+use xgb_tpu::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let runner = Runner::from_env();
+    let cost = CostModel::default();
+    let mut t = Table::new(&[
+        "algo", "devices", "hist elems", "host time", "modeled GPU time",
+        "bytes/device",
+    ]);
+
+    // histogram sizes: 256 bins x 28 feats x 2 = 14k elems (higgs-like),
+    // and a big 968-feature bosch-like one
+    for &n in &[14_336usize, 123_904] {
+        for &p in &[2usize, 4, 8] {
+            for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Serial] {
+                let mut rng = Pcg64::new((n + p) as u64);
+                let template: Vec<Vec<f64>> = (0..p)
+                    .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+                    .collect();
+                let mut stats = None;
+                let res = runner.run(format!("{algo:?}/p{p}/n{n}"), || {
+                    let mut bufs = template.clone();
+                    stats = Some(allreduce(algo, &mut bufs));
+                    bufs
+                });
+                let stats = stats.unwrap();
+                t.add_row(vec![
+                    format!("{algo:?}"),
+                    format!("{p}"),
+                    format!("{n}"),
+                    fmt_secs(res.mean_secs),
+                    fmt_secs(cost.time(&stats)),
+                    format!("{}", stats.bytes_per_device),
+                ]);
+            }
+        }
+    }
+    println!("\n=== AllReduce: ring vs serial ===\n");
+    print!("{}", t.render());
+    println!(
+        "\nshape: ring bytes/device ~ 2(p-1)/p * n * 8 (constant-ish in p);\n\
+         serial leader traffic grows linearly in p -> ring wins at scale,\n\
+         which is why the paper uses NCCL's ring."
+    );
+    Ok(())
+}

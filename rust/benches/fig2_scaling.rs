@@ -1,0 +1,95 @@
+//! Figure 2 reproduction: XGBoost runtime on the Airline dataset, 1–8
+//! devices. Prints the measured-compute + modeled-communication series
+//! (DESIGN.md §5) and the closed-form analytic projection, plus the
+//! paper-shape check (monotone decrease, diminishing returns).
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::comm::CostModel;
+use xgb_tpu::coordinator::builder::project_scaling;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = env_usize("XGB_BENCH_FIG2_ROWS", 200_000);
+    let rounds = env_usize("XGB_BENCH_ROUNDS", 20);
+    eprintln!("fig2: airline-like rows={rows} rounds={rounds}");
+
+    let data = generate(&DatasetSpec::airline_like(rows), 1);
+    let mut table = Table::new(&[
+        "devices", "simulated (s)", "speedup", "analytic (s)", "hist max/dev (s)",
+        "allreduce (s)",
+    ]);
+
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    let mut t1 = 0.0;
+    let mut single_compute = 0.0;
+    let mut hist_elems = 0usize;
+    let mut hist_rounds = 0usize;
+    for p in [1usize, 2, 3, 4, 5, 6, 7, 8] {
+        let params = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: rounds,
+            max_bins: 256,
+            max_depth: 6,
+            n_devices: p,
+            compress: true,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&params, &data.train, None)?;
+        let s = &b.build_stats;
+        if p == 1 {
+            t1 = b.simulated_secs;
+            single_compute = s.total_compute_secs();
+            hist_elems = 2 * (s.comm_bytes_per_device / 8).max(1); // approx per-round
+            hist_rounds = s.hist_rounds;
+        }
+        let analytic = project_scaling(
+            single_compute,
+            if hist_rounds > 0 { hist_elems / hist_rounds.max(1) } else { 0 },
+            hist_rounds,
+            p,
+            &CostModel::default(),
+        );
+        table.add_row(vec![
+            format!("{p}"),
+            format!("{:.3}", b.simulated_secs),
+            format!("{:.2}x", t1 / b.simulated_secs),
+            format!("{analytic:.3}"),
+            format!("{:.3}", s.hist_secs.iter().cloned().fold(0.0, f64::max)),
+            format!("{:.4}", s.allreduce_sim_secs),
+        ]);
+        results.push((p, b.simulated_secs));
+        eprintln!("  p={p}: simulated {:.3}s", b.simulated_secs);
+    }
+
+    println!("\n=== Figure 2: runtime vs devices (airline-like) ===\n");
+    print!("{}", table.render());
+
+    // paper-shape checks
+    let t8 = results.last().unwrap().1;
+    let monotone_mostly = results.windows(2).filter(|w| w[1].1 <= w[0].1 * 1.05).count();
+    println!("\nshape checks:");
+    println!(
+        "  [\u{2713}?] runtime falls 1->8 devices: {:.3}s -> {:.3}s ({:.2}x, paper fig2 ~4-5x at 8 GPUs)",
+        t1, t8, t1 / t8
+    );
+    println!(
+        "  [{}] near-monotone decrease: {}/{} steps non-increasing",
+        if monotone_mostly >= 5 { "ok" } else { "DIFF" },
+        monotone_mostly,
+        results.len() - 1
+    );
+    let mid = results[3].1; // p=4
+    println!(
+        "  [{}] diminishing returns: speedup(4)={:.2}x vs speedup(8)={:.2}x",
+        if (t1 / mid) / 4.0 > (t1 / t8) / 8.0 { "ok" } else { "DIFF" },
+        t1 / mid,
+        t1 / t8
+    );
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Table 2 reproduction: training time and accuracy for six systems on the
+//! six Table-1 datasets.
+//!
+//! Systems:
+//! * `xgb-cpu-hist`  — this crate's booster, 1 device, measured wall-clock.
+//! * `xgb-gpu-hist`  — the paper's contribution: 8 simulated devices with
+//!   compression; time = the simulated multi-device clock (measured
+//!   per-shard compute + ring-all-reduce cost model, DESIGN.md §5).
+//! * `lightgbm-cpu`  — leaf-wise + GOSS re-implementation, measured.
+//! * `lightgbm-gpu`  — modeled: LightGBM's GPU code accelerates histogram
+//!   construction only and pays a per-histogram launch overhead, which is
+//!   why the paper shows it *slower* than its own CPU on several datasets.
+//!   model: t = other + partition + hist/HIST_SPEEDUP + rounds·OVERHEAD.
+//! * `cat-cpu`       — oblivious-tree re-implementation, measured.
+//! * `cat-gpu`       — modeled: CatBoost's symmetric trees map extremely
+//!   well to GPU (one histogram pass per level, massive leaves);
+//!   model: t = other + partition/8 + hist/CAT_GPU_SPEEDUP + rounds·OVERHEAD.
+//!   Reported N/A for multiclass (unsupported, as in the paper).
+//!
+//! Accuracy columns are measured from the actually-trained models in all
+//! six rows (the GPU models change time only — the algorithms are
+//! identical, as they are in the real packages).
+//!
+//! Scale: rows default to paper × `XGB_BENCH_SCALE` (default 0.002) and
+//! `XGB_BENCH_ROUNDS` boosting rounds (default 50; paper used 500).
+//! Absolute times are incomparable to the paper's testbed (1 core here);
+//! the reproduction targets are the *orderings and ratios* — see
+//! EXPERIMENTS.md §T2.
+
+use xgb_tpu::baselines::{
+    train_catboost_like, train_lightgbm_like, CatBoostParams, LightGbmParams,
+};
+use xgb_tpu::bench::Table;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec, Task};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+
+fn env_f64(k: &str, d: f64) -> f64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+// GPU execution-model constants (documented above; ablate via env).
+const LGB_GPU_HIST_SPEEDUP: f64 = 4.0;
+const LGB_GPU_ROUND_OVERHEAD: f64 = 120e-6; // per histogram build
+const CAT_GPU_HIST_SPEEDUP: f64 = 24.0;
+const CAT_GPU_ROUND_OVERHEAD: f64 = 60e-6;
+
+struct Row {
+    system: &'static str,
+    time: Option<f64>,
+    score: Option<f64>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = env_f64("XGB_BENCH_SCALE", 0.002);
+    let rounds = env_usize("XGB_BENCH_ROUNDS", 50);
+    let max_bins = env_usize("XGB_BENCH_BINS", 64);
+    eprintln!("table2: scale={scale} rounds={rounds} max_bins={max_bins} (paper: full data, 500 rounds)");
+
+    let paper: &[(&str, [(&str, f64, f64); 6])] = &[
+        ("YearPredictionMSD", [
+            ("xgb-cpu-hist", 216.71, 8.8794), ("xgb-gpu-hist", 30.39, 8.8799),
+            ("lightgbm-cpu", 30.82, 8.8777), ("lightgbm-gpu", 25.39, 8.8777),
+            ("cat-cpu", 39.93, 8.9933), ("cat-gpu", 10.15, 9.0637)]),
+        ("Synthetic", [
+            ("xgb-cpu-hist", 580.72, 13.6105), ("xgb-gpu-hist", 43.14, 13.4606),
+            ("lightgbm-cpu", 463.79, 13.585), ("lightgbm-gpu", 576.67, 13.585),
+            ("cat-cpu", 426.31, 9.387), ("cat-gpu", 36.66, 9.3805)]),
+        ("Higgs", [
+            ("xgb-cpu-hist", 509.29, 74.74), ("xgb-gpu-hist", 38.41, 74.75),
+            ("lightgbm-cpu", 330.25, 74.74), ("lightgbm-gpu", 725.91, 74.70),
+            ("cat-cpu", 393.21, 74.06), ("cat-gpu", 30.37, 74.08)]),
+        ("Cover Type", [
+            ("xgb-cpu-hist", 3532.26, 89.20), ("xgb-gpu-hist", 107.70, 89.34),
+            ("lightgbm-cpu", 186.27, 89.28), ("lightgbm-gpu", 383.03, 89.26),
+            ("cat-cpu", 306.17, 85.14), ("cat-gpu", f64::NAN, f64::NAN)]),
+        ("Bosch", [
+            ("xgb-cpu-hist", 810.36, 99.45), ("xgb-gpu-hist", 27.97, 99.44),
+            ("lightgbm-cpu", 162.29, 99.44), ("lightgbm-gpu", 409.93, 99.44),
+            ("cat-cpu", 255.72, 99.44), ("cat-gpu", f64::NAN, f64::NAN)]),
+        ("Airline", [
+            ("xgb-cpu-hist", 1948.26, 74.94), ("xgb-gpu-hist", 110.29, 74.95),
+            ("lightgbm-cpu", 916.04, 75.05), ("lightgbm-gpu", 614.74, 74.99),
+            ("cat-cpu", 2949.04, 72.66), ("cat-gpu", 303.36, 72.77)]),
+    ];
+
+    let mut all_rows: Vec<(String, Vec<Row>)> = Vec::new();
+    for spec in DatasetSpec::table1(scale) {
+        eprintln!("== {} ({} rows x {} cols) ==", spec.name, spec.rows, spec.cols);
+        let data = generate(&spec, 42);
+        let metric = spec.task.metric();
+        let objective = spec.task.objective().to_string();
+        let num_class = spec.task.num_class();
+        let mut rows: Vec<Row> = Vec::new();
+
+        // ---- xgb-cpu-hist
+        let params_cpu = BoosterParams {
+            objective: objective.clone(),
+            num_class,
+            num_rounds: rounds,
+            max_bins,
+            eval_every: 0,
+            eval_metric: metric.into(),
+            n_devices: 1,
+            compress: false,
+            ..Default::default()
+        };
+        let b = Booster::train(&params_cpu, &data.train, Some(&data.valid))?;
+        let score = b.eval_history.last().and_then(|r| r.valid);
+        rows.push(Row { system: "xgb-cpu-hist", time: Some(b.train_secs), score });
+        eprintln!("  xgb-cpu-hist: {:.2}s {metric}={:?}", b.train_secs, score);
+
+        // ---- xgb-gpu-hist (8 simulated devices, compressed)
+        let params_gpu = BoosterParams {
+            n_devices: 8,
+            compress: true,
+            ..params_cpu.clone()
+        };
+        let b = Booster::train(&params_gpu, &data.train, Some(&data.valid))?;
+        let score = b.eval_history.last().and_then(|r| r.valid);
+        rows.push(Row { system: "xgb-gpu-hist", time: Some(b.simulated_secs), score });
+        eprintln!("  xgb-gpu-hist: {:.2}s (simulated) {metric}={:?}", b.simulated_secs, score);
+
+        // ---- lightgbm-cpu / -gpu
+        let lgb = LightGbmParams {
+            objective: objective.clone(),
+            num_class,
+            num_rounds: rounds,
+            max_bins,
+            ..Default::default()
+        };
+        let (b, stats) = train_lightgbm_like(&lgb, &data.train)?;
+        let score = Some(b.evaluate(&data.valid, metric)?);
+        rows.push(Row { system: "lightgbm-cpu", time: Some(stats.total()), score });
+        let lgb_gpu = stats.other_secs
+            + stats.partition_secs
+            + stats.hist_secs / LGB_GPU_HIST_SPEEDUP
+            + stats.hist_rounds as f64 * LGB_GPU_ROUND_OVERHEAD;
+        rows.push(Row { system: "lightgbm-gpu", time: Some(lgb_gpu), score });
+        eprintln!("  lightgbm: cpu {:.2}s / gpu-model {:.2}s {metric}={:?}",
+                  stats.total(), lgb_gpu, score);
+
+        // ---- cat-cpu / -gpu
+        let cat = CatBoostParams {
+            objective: objective.clone(),
+            num_class,
+            num_rounds: rounds,
+            max_bins: max_bins.min(128),
+            ..Default::default()
+        };
+        let (b, stats) = train_catboost_like(&cat, &data.train)?;
+        let score = Some(b.evaluate(&data.valid, metric)?);
+        rows.push(Row { system: "cat-cpu", time: Some(stats.total()), score });
+        if matches!(spec.task, Task::Multiclass(_)) {
+            // the real cat-gpu lacks multiclass (paper prints N/A)
+            rows.push(Row { system: "cat-gpu", time: None, score: None });
+            eprintln!("  cat: cpu {:.2}s / gpu N/A (multiclass)", stats.total());
+        } else {
+            let cat_gpu = stats.other_secs
+                + stats.partition_secs / 8.0
+                + stats.hist_secs / CAT_GPU_HIST_SPEEDUP
+                + stats.hist_rounds as f64 * CAT_GPU_ROUND_OVERHEAD;
+            rows.push(Row { system: "cat-gpu", time: Some(cat_gpu), score });
+            eprintln!("  cat: cpu {:.2}s / gpu-model {:.2}s {metric}={:?}",
+                      stats.total(), cat_gpu, score);
+        }
+        all_rows.push((spec.name.to_string(), rows));
+    }
+
+    // render measured table
+    println!("\n=== Table 2 (this reproduction; time in seconds) ===\n");
+    let mut t = Table::new(&["System", "Dataset", "Time(s)", "Metric"]);
+    for (ds, rows) in &all_rows {
+        for r in rows {
+            t.add_row(vec![
+                r.system.to_string(),
+                ds.clone(),
+                r.time.map(|v| format!("{v:.2}")).unwrap_or("N/A".into()),
+                r.score.map(|v| format!("{v:.4}")).unwrap_or("N/A".into()),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // shape checks vs the paper
+    println!("\n=== Shape checks vs paper Table 2 ===\n");
+    let mut checks_passed = 0;
+    let mut checks_total = 0;
+    for (ds, rows) in &all_rows {
+        let get = |name: &str| rows.iter().find(|r| r.system == name).and_then(|r| r.time);
+        let paper_row = paper.iter().find(|(n, _)| n == ds).map(|(_, r)| r);
+        let mut check = |label: String, ours: bool, paper_holds: bool| {
+            checks_total += 1;
+            let ok = ours == paper_holds;
+            checks_passed += usize::from(ok);
+            println!("  [{}] {ds}: {label} (paper: {paper_holds}, ours: {ours})",
+                     if ok { "ok" } else { "DIFF" });
+        };
+        if let (Some(cpu), Some(gpu), Some(prow)) =
+            (get("xgb-cpu-hist"), get("xgb-gpu-hist"), paper_row)
+        {
+            let p_cpu = prow[0].1;
+            let p_gpu = prow[1].1;
+            check("xgb-gpu faster than xgb-cpu".into(), gpu < cpu, p_gpu < p_cpu);
+        }
+        if let (Some(lc), Some(lg), Some(prow)) =
+            (get("lightgbm-cpu"), get("lightgbm-gpu"), paper_row)
+        {
+            check(
+                "lightgbm-gpu faster than lightgbm-cpu".into(),
+                lg < lc,
+                prow[3].1 < prow[2].1,
+            );
+        }
+        if let (Some(cc), Some(cg), Some(prow)) = (get("cat-cpu"), get("cat-gpu"), paper_row) {
+            if !prow[5].1.is_nan() {
+                check("cat-gpu faster than cat-cpu".into(), cg < cc, prow[5].1 < prow[4].1);
+            }
+        }
+    }
+    println!("\nshape checks: {checks_passed}/{checks_total} match the paper's orderings");
+    println!("(absolute times are per-core on this host; the paper used 64 CPU cores / 8 V100s)");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Competitor re-implementations for the Table 2 comparison.
+//!
+//! The paper benchmarks against LightGBM and CatBoost binaries; neither is
+//! available in this offline environment, so the *algorithms* that drive
+//! their speed/accuracy trade-offs are re-implemented on this crate's
+//! substrates (quantisation, histograms, split evaluation), per the
+//! substitution rule in DESIGN.md §2:
+//!
+//! * [`lightgbm_like`] — leaf-wise (best-first) growth with GOSS
+//!   (Gradient-based One-Side Sampling), LightGBM's two signature
+//!   techniques (Ke et al., 2017),
+//! * [`catboost_like`] — oblivious (symmetric) decision tables, CatBoost's
+//!   signature structure: one shared split per level, which is fast and
+//!   regularising but less expressive (the paper's Table 2 shows CatBoost
+//!   fastest on GPU yet least accurate — this structure is why).
+//!
+//! Both produce a [`crate::gbm::Booster`] via `from_parts`, so prediction
+//! and metric evaluation are shared with the main system, and both report
+//! per-phase timings so the bench harness can apply the GPU-execution
+//! models described in `benches/table2.rs`.
+
+pub mod catboost_like;
+pub mod lightgbm_like;
+
+pub use catboost_like::{train_catboost_like, CatBoostParams};
+pub use lightgbm_like::{train_lightgbm_like, LightGbmParams};
+
+/// Per-phase timing shared by both baseline trainers, mirroring
+/// [`crate::coordinator::BuildStats`] at the granularity the GPU models
+/// need.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineStats {
+    /// Seconds spent building gradient histograms.
+    pub hist_secs: f64,
+    /// Seconds spent partitioning / reassigning rows.
+    pub partition_secs: f64,
+    /// Everything else (gradients, split search, bookkeeping).
+    pub other_secs: f64,
+    /// Number of histogram build passes.
+    pub hist_rounds: usize,
+}
+
+impl BaselineStats {
+    pub fn total(&self) -> f64 {
+        self.hist_secs + self.partition_secs + self.other_secs
+    }
+}

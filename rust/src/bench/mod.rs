@@ -1,0 +1,223 @@
+//! Micro-benchmark harness (the offline crate mirror has no `criterion`):
+//! warmup + timed iterations with mean/p50/p95/stddev, throughput
+//! helpers, and paper-style table printing used by every target in
+//! `rust/benches/`.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub stddev_secs: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_secs
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.p50_secs),
+            fmt_secs(self.p95_secs),
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Runner {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner {
+            warmup: 1,
+            iters: 5,
+        }
+    }
+}
+
+impl Runner {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Runner { warmup, iters }
+    }
+
+    /// From env (`XGB_BENCH_WARMUP` / `XGB_BENCH_ITERS`) with defaults.
+    pub fn from_env() -> Self {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        Runner::new(get("XGB_BENCH_WARMUP", 1), get("XGB_BENCH_ITERS", 5))
+    }
+
+    /// Time `f` and return statistics. The closure's return value is
+    /// black-boxed to keep the optimiser honest.
+    pub fn run<T>(&self, name: impl Into<String>, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        BenchResult {
+            name: name.into(),
+            iters: n,
+            mean_secs: mean,
+            p50_secs: samples[n / 2],
+            p95_secs: samples[(n * 95 / 100).min(n - 1)],
+            stddev_secs: var.sqrt(),
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "mean", "p50", "p95"
+        )
+    }
+}
+
+/// Optimisation barrier (re-exported so benches don't import std::hint
+/// everywhere).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-style tables.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_statistics_sane() {
+        let r = Runner::new(0, 7);
+        let res = r.run("sleep", || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert_eq!(res.iters, 7);
+        assert!(res.mean_secs >= 0.002);
+        assert!(res.p50_secs <= res.p95_secs);
+        assert!(res.row().contains("sleep"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let res = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_secs: 0.5,
+            p50_secs: 0.5,
+            p95_secs: 0.5,
+            stddev_secs: 0.0,
+        };
+        assert_eq!(res.throughput(100.0), 200.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.0025).contains("ms"));
+        assert!(fmt_secs(0.0000025).contains("us"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.add_row(vec!["a".into(), "1".into()]);
+        t.add_row(vec!["longer-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| name "));
+        assert!(s.contains("| longer-name |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["x".into()]);
+    }
+}

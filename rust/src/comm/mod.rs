@@ -1,0 +1,69 @@
+//! Collective communication substrate (paper §2.3: "The partial histograms
+//! are merged using an AllReduce operation provided by the NCCL library").
+//!
+//! This environment has no GPUs and no NCCL, so the collective is built
+//! from scratch and *executed exactly*: [`ring::ring_allreduce`] simulates
+//! the chunked ring schedule NCCL uses (reduce-scatter + all-gather),
+//! message by message, so every device ends with the true elementwise sum
+//! and the per-step traffic is accounted. A calibrated α–β
+//! [`cost::CostModel`] converts that traffic into the wall-clock a real
+//! NVLink ring would take — this is what the Figure 2 scaling bench
+//! reports (see DESIGN.md §5).
+
+pub mod cost;
+pub mod ring;
+
+pub use cost::CostModel;
+pub use ring::{ring_allreduce, serial_allreduce, AllReduceStats};
+
+/// Strategy selector for histogram merging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// NCCL-style chunked ring (the paper's configuration).
+    Ring,
+    /// Gather-to-leader + broadcast (reference implementation; ablation).
+    Serial,
+}
+
+impl std::str::FromStr for AllReduceAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ring" => Ok(AllReduceAlgo::Ring),
+            "serial" | "naive" => Ok(AllReduceAlgo::Serial),
+            other => Err(format!("unknown allreduce algo {other:?}")),
+        }
+    }
+}
+
+/// Run the selected all-reduce over per-device buffers in place: after the
+/// call every device's buffer holds the elementwise sum.
+pub fn allreduce(algo: AllReduceAlgo, buffers: &mut [Vec<f64>]) -> AllReduceStats {
+    match algo {
+        AllReduceAlgo::Ring => ring_allreduce(buffers),
+        AllReduceAlgo::Serial => serial_allreduce(buffers),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse() {
+        assert_eq!("ring".parse::<AllReduceAlgo>().unwrap(), AllReduceAlgo::Ring);
+        assert_eq!("serial".parse::<AllReduceAlgo>().unwrap(), AllReduceAlgo::Serial);
+        assert!("tree".parse::<AllReduceAlgo>().is_err());
+    }
+
+    #[test]
+    fn dispatcher_reduces() {
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Serial] {
+            let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+            allreduce(algo, &mut bufs);
+            for b in &bufs {
+                assert_eq!(b, &vec![111.0, 222.0]);
+            }
+        }
+    }
+}

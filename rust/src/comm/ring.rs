@@ -1,0 +1,273 @@
+//! Exact simulation of the NCCL-style chunked ring all-reduce.
+//!
+//! The schedule is the standard two-phase ring over `p` devices with the
+//! buffer split into `p` chunks:
+//!
+//! 1. **reduce-scatter** — `p−1` steps; in step `s`, device `d` sends chunk
+//!    `(d − s) mod p` to device `(d+1) mod p`, which adds it into its own
+//!    copy. After the phase, device `d` owns the fully reduced chunk
+//!    `(d+1) mod p`.
+//! 2. **all-gather** — `p−1` steps circulating the reduced chunks.
+//!
+//! Total bytes sent per device: `2 (p−1)/p · n·8`, the textbook
+//! bandwidth-optimal figure the [`crate::comm::cost::CostModel`] prices.
+//! The simulation performs the real additions in schedule order, so
+//! numerical results (including f64 rounding order) are reproducible and
+//! independent of host thread count.
+
+/// Traffic statistics of one collective, consumed by the cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllReduceStats {
+    /// Number of participating devices.
+    pub n_devices: usize,
+    /// Elements per device buffer.
+    pub n_elems: usize,
+    /// Bytes sent by each device over the whole collective (max over
+    /// devices — the ring is symmetric so all are equal).
+    pub bytes_per_device: usize,
+    /// Number of communication steps (latency terms).
+    pub steps: usize,
+}
+
+impl AllReduceStats {
+    pub fn noop(n_elems: usize) -> Self {
+        AllReduceStats {
+            n_devices: 1,
+            n_elems,
+            bytes_per_device: 0,
+            steps: 0,
+        }
+    }
+}
+
+/// Chunk boundaries: chunk `c` covers `chunk_range(n, p, c)`.
+#[inline]
+fn chunk_range(n: usize, p: usize, c: usize) -> std::ops::Range<usize> {
+    let base = n / p;
+    let rem = n % p;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    start..start + len
+}
+
+/// Ring all-reduce over per-device buffers, in place. All buffers must
+/// have equal length. Returns traffic stats for the cost model.
+pub fn ring_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
+    let p = buffers.len();
+    assert!(p > 0, "need at least one device");
+    let n = buffers[0].len();
+    assert!(
+        buffers.iter().all(|b| b.len() == n),
+        "all device buffers must have equal length"
+    );
+    if p == 1 {
+        return AllReduceStats::noop(n);
+    }
+
+    let mut bytes_per_device = 0usize;
+
+    // Phase 1: reduce-scatter. Message payloads must be snapshotted per
+    // step (all sends happen "simultaneously"), matching real NCCL
+    // semantics where a step's send uses the pre-step buffer state.
+    for step in 0..p - 1 {
+        let mut messages: Vec<(usize, usize, Vec<f64>)> = Vec::with_capacity(p);
+        let mut step_max_bytes = 0usize;
+        for d in 0..p {
+            let c = (d + p - step) % p;
+            let r = chunk_range(n, p, c);
+            step_max_bytes = step_max_bytes.max((r.end - r.start) * 8);
+            messages.push((d, c, buffers[d][r].to_vec()));
+        }
+        for (d, c, payload) in messages {
+            let dst = (d + 1) % p;
+            let r = chunk_range(n, p, c);
+            for (x, v) in buffers[dst][r].iter_mut().zip(payload.iter()) {
+                *x += *v;
+            }
+        }
+        bytes_per_device += step_max_bytes;
+    }
+
+    // Phase 2: all-gather. Device d now owns reduced chunk (d+1) mod p;
+    // circulate the reduced chunks around the ring.
+    for step in 0..p - 1 {
+        let mut messages: Vec<(usize, usize, Vec<f64>)> = Vec::with_capacity(p);
+        let mut step_max_bytes = 0usize;
+        for d in 0..p {
+            let c = (d + 1 + p - step) % p;
+            let r = chunk_range(n, p, c);
+            step_max_bytes = step_max_bytes.max((r.end - r.start) * 8);
+            messages.push((d, c, buffers[d][r].to_vec()));
+        }
+        for (d, c, payload) in messages {
+            let dst = (d + 1) % p;
+            let r = chunk_range(n, p, c);
+            buffers[dst][r].copy_from_slice(&payload);
+        }
+        bytes_per_device += step_max_bytes;
+    }
+
+    AllReduceStats {
+        n_devices: p,
+        n_elems: n,
+        bytes_per_device,
+        steps: 2 * (p - 1),
+    }
+}
+
+/// Reference all-reduce: gather to device 0, then broadcast. Used to
+/// verify the ring and as the "naive" ablation (p−1× more leader traffic).
+pub fn serial_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
+    let p = buffers.len();
+    assert!(p > 0);
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n));
+    if p == 1 {
+        return AllReduceStats::noop(n);
+    }
+    let (leader, rest) = buffers.split_first_mut().unwrap();
+    for b in rest.iter() {
+        for (x, v) in leader.iter_mut().zip(b.iter()) {
+            *x += *v;
+        }
+    }
+    for b in rest.iter_mut() {
+        b.copy_from_slice(leader);
+    }
+    AllReduceStats {
+        n_devices: p,
+        n_elems: n,
+        // leader receives (p-1)·n and sends (p-1)·n — it is the bottleneck
+        bytes_per_device: 2 * (p - 1) * n * 8,
+        steps: 2 * (p - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_buffers(p: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Pcg64::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    fn expected_sum(buffers: &[Vec<f64>]) -> Vec<f64> {
+        let n = buffers[0].len();
+        let mut out = vec![0.0; n];
+        for b in buffers {
+            for (o, v) in out.iter_mut().zip(b.iter()) {
+                *o += *v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ring_equals_sum_various_p_and_n() {
+        for p in [1, 2, 3, 4, 7, 8] {
+            for n in [1, 2, 5, 16, 64, 257] {
+                if n < p {
+                    continue;
+                }
+                let mut bufs = random_buffers(p, n, (p * 1000 + n) as u64);
+                let want = expected_sum(&bufs);
+                let stats = ring_allreduce(&mut bufs);
+                for (d, b) in bufs.iter().enumerate() {
+                    for (i, (&x, &w)) in b.iter().zip(want.iter()).enumerate() {
+                        assert!(
+                            (x - w).abs() < 1e-9,
+                            "p={p} n={n} dev={d} idx={i}: {x} vs {w}"
+                        );
+                    }
+                }
+                assert_eq!(stats.steps, if p == 1 { 0 } else { 2 * (p - 1) });
+            }
+        }
+    }
+
+    #[test]
+    fn ring_handles_n_smaller_than_p() {
+        // 3 elements over 8 devices: some chunks are empty
+        let mut bufs = random_buffers(8, 3, 42);
+        let want = expected_sum(&bufs);
+        ring_allreduce(&mut bufs);
+        for b in &bufs {
+            for (x, w) in b.iter().zip(want.iter()) {
+                assert!((x - w).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_equals_sum() {
+        let mut bufs = random_buffers(5, 33, 7);
+        let want = expected_sum(&bufs);
+        serial_allreduce(&mut bufs);
+        for b in &bufs {
+            for (x, w) in b.iter().zip(want.iter()) {
+                assert!((x - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_serial() {
+        let mut a = random_buffers(4, 100, 9);
+        let mut b = a.clone();
+        ring_allreduce(&mut a);
+        serial_allreduce(&mut b);
+        for (x, y) in a[0].iter().zip(b[0].iter()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ring_bandwidth_is_optimal_factor() {
+        // bytes per device ≈ 2 (p-1)/p · n · 8
+        let p = 8;
+        let n = 8000;
+        let mut bufs = random_buffers(p, n, 11);
+        let stats = ring_allreduce(&mut bufs);
+        let ideal = 2.0 * (p as f64 - 1.0) / p as f64 * n as f64 * 8.0;
+        let got = stats.bytes_per_device as f64;
+        assert!((got - ideal).abs() / ideal < 0.01, "{got} vs {ideal}");
+        // serial leader traffic is ~p/2x worse
+        let mut bufs = random_buffers(p, n, 11);
+        let serial = serial_allreduce(&mut bufs);
+        assert!(serial.bytes_per_device > stats.bytes_per_device * 3);
+    }
+
+    #[test]
+    fn single_device_noop() {
+        let mut bufs = vec![vec![1.0, 2.0, 3.0]];
+        let stats = ring_allreduce(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.bytes_per_device, 0);
+    }
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for n in [1usize, 7, 16, 100] {
+            for p in [1usize, 2, 3, 8] {
+                let mut covered = 0;
+                for c in 0..p {
+                    let r = chunk_range(n, p, c);
+                    assert_eq!(r.start, covered);
+                    covered = r.end;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn unequal_buffers_panic() {
+        let mut bufs = vec![vec![1.0], vec![1.0, 2.0]];
+        ring_allreduce(&mut bufs);
+    }
+}

@@ -1,0 +1,246 @@
+//! A simulated accelerator device: owns one shard of the quantised
+//! training matrix, its row partitioner, and the histogram backend that
+//! executes the shard's compute (native Rust, or the AOT-compiled XLA
+//! kernel via [`crate::runtime`]).
+
+use anyhow::Result;
+
+use crate::compress::CompressedMatrix;
+use crate::hist::{self, Histogram};
+use crate::quantile::{HistogramCuts, QuantizedMatrix};
+use crate::tree::partitioner::BinSource;
+use crate::tree::{RowPartitioner, SplitCandidate};
+use crate::GradPair;
+
+/// Pluggable executor for the histogram hot-spot. The native backend runs
+/// the Rust loop of [`crate::hist`]; the XLA backend
+/// (`crate::runtime::XlaHistBackend`) feeds row tiles through the
+/// AOT-compiled Pallas one-hot-matmul kernel.
+///
+/// Deliberately not `Send`: the PJRT client handle in the `xla` crate is
+/// `Rc`-based, and the coordinator executes device shards serially (the
+/// multi-device clock is simulated — DESIGN.md §5).
+pub trait HistBackend {
+    /// Accumulate the gradient histogram of `rows` into `out`
+    /// (`out.n_bins()` == total bins).
+    fn build_histogram(
+        &mut self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        out: &mut Histogram,
+    ) -> Result<()>;
+
+    /// Human-readable name for logs / EXPERIMENTS.md.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust histogram backend (also the `xgb-cpu-hist` baseline's engine).
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl HistBackend for NativeBackend {
+    fn build_histogram(
+        &mut self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        out: &mut Histogram,
+    ) -> Result<()> {
+        match &shard.storage {
+            ShardStorage::Quantized(qm) => {
+                hist::build_histogram_quantized(qm, &shard.gradients, rows, out)
+            }
+            ShardStorage::Compressed(cm) => {
+                hist::build_histogram_compressed(cm, &shard.gradients, rows, out)
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Shard storage: raw u32 bins or bit-packed (§2.2).
+#[derive(Debug, Clone)]
+pub enum ShardStorage {
+    Quantized(QuantizedMatrix),
+    Compressed(CompressedMatrix),
+}
+
+impl ShardStorage {
+    pub fn n_rows(&self) -> usize {
+        match self {
+            ShardStorage::Quantized(q) => q.n_rows,
+            ShardStorage::Compressed(c) => c.n_rows,
+        }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        match self {
+            ShardStorage::Quantized(q) => q.n_bins,
+            ShardStorage::Compressed(c) => c.n_bins,
+        }
+    }
+
+    pub fn row_stride(&self) -> usize {
+        match self {
+            ShardStorage::Quantized(q) => q.row_stride,
+            ShardStorage::Compressed(c) => c.row_stride,
+        }
+    }
+
+    /// Resident bytes of the feature matrix on this device — the quantity
+    /// behind the paper's "600 MB per GPU" claim.
+    pub fn bytes(&self) -> usize {
+        match self {
+            ShardStorage::Quantized(q) => q.bytes(),
+            ShardStorage::Compressed(c) => c.bytes(),
+        }
+    }
+
+    pub fn bin_source(&self) -> BinSource<'_> {
+        match self {
+            ShardStorage::Quantized(q) => BinSource::Quantized(q),
+            ShardStorage::Compressed(c) => BinSource::Compressed(c),
+        }
+    }
+}
+
+/// One simulated device and its local state.
+pub struct DeviceShard {
+    pub id: usize,
+    /// Global row index of this shard's local row 0 (shards are
+    /// contiguous).
+    pub row_offset: usize,
+    pub storage: ShardStorage,
+    /// Per-local-row gradient pairs for the current boosting iteration.
+    pub gradients: Vec<GradPair>,
+    pub partitioner: RowPartitioner,
+}
+
+impl DeviceShard {
+    pub fn new(id: usize, row_offset: usize, storage: ShardStorage) -> Self {
+        let n = storage.n_rows();
+        DeviceShard {
+            id,
+            row_offset,
+            storage,
+            gradients: Vec::new(),
+            partitioner: RowPartitioner::new(n),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.storage.n_rows()
+    }
+
+    /// Install this iteration's gradients (slice of the global gradient
+    /// vector covering `row_offset .. row_offset + n_rows`) and reset the
+    /// partitioner for a fresh tree.
+    pub fn begin_tree(&mut self, gradients: &[GradPair]) {
+        debug_assert_eq!(gradients.len(), self.n_rows());
+        self.gradients.clear();
+        self.gradients.extend_from_slice(gradients);
+        self.partitioner = RowPartitioner::new(self.n_rows());
+    }
+
+    /// Shard-local gradient sum over all rows (root reduction input).
+    pub fn local_sum(&self) -> (f64, f64) {
+        let mut g = 0.0;
+        let mut h = 0.0;
+        for gp in &self.gradients {
+            g += gp.grad as f64;
+            h += gp.hess as f64;
+        }
+        (g, h)
+    }
+
+    /// `RepartitionInstances` for one applied split; returns local
+    /// `(n_left, n_right)`.
+    pub fn repartition(
+        &mut self,
+        nid: usize,
+        split: &SplitCandidate,
+        left: usize,
+        right: usize,
+        cuts: &HistogramCuts,
+    ) -> (usize, usize) {
+        let src = self.storage.bin_source();
+        self.partitioner.apply_split(nid, split, left, right, &src, cuts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+    use crate::quantile::Quantizer;
+    use crate::Float;
+
+    fn make_shard(compress: bool) -> (DeviceShard, HistogramCuts) {
+        let vals: Vec<Float> = (0..64).map(|i| (i % 16) as Float).collect();
+        let x = DMatrix::dense(vals, 32, 2);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let storage = if compress {
+            ShardStorage::Compressed(crate::compress::CompressedMatrix::from_quantized(&qm))
+        } else {
+            ShardStorage::Quantized(qm)
+        };
+        let mut s = DeviceShard::new(0, 0, storage);
+        let grads: Vec<GradPair> = (0..32)
+            .map(|i| GradPair::new(i as f32 / 32.0 - 0.5, 1.0))
+            .collect();
+        s.begin_tree(&grads);
+        (s, cuts)
+    }
+
+    #[test]
+    fn local_sum_matches_direct() {
+        let (s, _) = make_shard(false);
+        let (g, h) = s.local_sum();
+        let expect_g: f64 = (0..32).map(|i| i as f64 / 32.0 - 0.5).sum();
+        assert!((g - expect_g).abs() < 1e-6);
+        assert!((h - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_backend_same_result_compressed_or_not() {
+        let (s1, _) = make_shard(false);
+        let (s2, _) = make_shard(true);
+        let rows: Vec<u32> = (0..32).collect();
+        let mut h1 = Histogram::zeros(s1.storage.n_bins());
+        let mut h2 = Histogram::zeros(s2.storage.n_bins());
+        let mut be = NativeBackend;
+        be.build_histogram(&s1, &rows, &mut h1).unwrap();
+        be.build_histogram(&s2, &rows, &mut h2).unwrap();
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn begin_tree_resets_partitioner() {
+        let (mut s, cuts) = make_shard(false);
+        let split = SplitCandidate {
+            feature: 0,
+            split_bin: 2,
+            threshold: 0.0,
+            default_left: true,
+            gain: 1.0,
+            left_sum: Default::default(),
+            right_sum: Default::default(),
+        };
+        s.repartition(0, &split, 1, 2, &cuts);
+        assert!(s.partitioner.node_count(1) > 0);
+        let grads = s.gradients.clone();
+        s.begin_tree(&grads);
+        assert_eq!(s.partitioner.node_count(0), 32);
+    }
+
+    #[test]
+    fn compressed_storage_is_smaller() {
+        let (raw, _) = make_shard(false);
+        let (packed, _) = make_shard(true);
+        assert!(packed.storage.bytes() < raw.storage.bytes());
+    }
+}

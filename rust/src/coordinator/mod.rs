@@ -1,0 +1,79 @@
+//! Multi-device decision tree construction — Algorithm 1 of the paper, the
+//! system's coordination contribution.
+//!
+//! Each simulated device owns a contiguous shard of training rows in
+//! quantised (optionally bit-packed, §2.2) form. Per expanded node the
+//! coordinator:
+//!
+//! 1. `RepartitionInstances` — every device re-sorts its shard's rows into
+//!    the new leaves ([`crate::tree::RowPartitioner`]),
+//! 2. `BuildPartialHistograms` — every device accumulates a partial
+//!    gradient histogram for the *smaller* child over its rows (the
+//!    subtraction trick derives the sibling),
+//! 3. `AllReduceHistograms` — partial histograms are merged with the ring
+//!    collective ([`crate::comm`]), traffic priced by the cost model,
+//! 4. `EvaluateSplit` — the merged histogram is scanned for both children
+//!    and feasible splits are queued under the configured growth policy
+//!    (§2.3 "reconfigurable growth strategy").
+//!
+//! Device compute is *executed* (natively or through the AOT-compiled XLA
+//! kernel via [`crate::runtime`]); multi-device wall-clock is reported as
+//! `max(per-device compute) + collective cost` per round (DESIGN.md §5),
+//! which is exact for data-parallel identical devices up to the comm
+//! model.
+
+pub mod builder;
+pub mod device;
+
+pub use builder::{BuildStats, MultiDeviceCoordinator, TreeBuildResult};
+pub use device::{DeviceShard, HistBackend, NativeBackend};
+
+use crate::comm::{AllReduceAlgo, CostModel};
+use crate::tree::{GrowthPolicy, TreeParams};
+
+/// Configuration of the multi-device tree builder.
+#[derive(Debug, Clone)]
+pub struct CoordinatorParams {
+    /// Number of simulated devices (the paper's GPUs).
+    pub n_devices: usize,
+    /// Store shards bit-packed (§2.2) instead of as raw u32 bins.
+    pub compress: bool,
+    /// Tree regularisation / size limits.
+    pub tree: TreeParams,
+    /// Growth strategy (§2.3).
+    pub policy: GrowthPolicy,
+    /// Collective algorithm for histogram merging.
+    pub allreduce: AllReduceAlgo,
+    /// Communication cost model for the simulated wall-clock.
+    pub cost: CostModel,
+    /// Learning rate applied to leaf values at construction time.
+    pub eta: f64,
+    /// Maximum bins per feature for quantisation.
+    pub max_bins: usize,
+    /// Use the subtraction trick (sibling = parent − built child). Off
+    /// builds both children's histograms — the A3 ablation.
+    pub subtraction: bool,
+    /// Fraction of features considered per tree (`colsample_bytree`);
+    /// 1.0 = all features.
+    pub colsample_bytree: f64,
+    /// Seed for the per-tree column sample.
+    pub seed: u64,
+}
+
+impl Default for CoordinatorParams {
+    fn default() -> Self {
+        CoordinatorParams {
+            n_devices: 1,
+            compress: true,
+            tree: TreeParams::default(),
+            policy: GrowthPolicy::DepthWise,
+            allreduce: AllReduceAlgo::Ring,
+            cost: CostModel::default(),
+            eta: 0.3,
+            max_bins: 256,
+            subtraction: true,
+            colsample_bytree: 1.0,
+            seed: 0,
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! `DMatrix`: the input feature matrix, in either dense row-major or CSR
+//! sparse form, with NaN denoting missing values (XGBoost convention).
+//!
+//! All downstream stages (quantile sketch, quantisation, compression) read
+//! through the [`DMatrix::iter_row`] / [`DMatrix::for_each_in_column`]
+//! accessors so dense and sparse inputs share one code path.
+
+use crate::Float;
+
+/// Feature matrix. Missing entries are `NaN` in dense form, absent in CSR.
+#[derive(Debug, Clone)]
+pub enum DMatrix {
+    /// Row-major dense: `values[row * n_cols + col]`.
+    Dense {
+        values: Vec<Float>,
+        n_rows: usize,
+        n_cols: usize,
+    },
+    /// CSR sparse.
+    Csr {
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<Float>,
+        n_rows: usize,
+        n_cols: usize,
+    },
+}
+
+impl DMatrix {
+    /// Build a dense matrix from a row-major buffer.
+    pub fn dense(values: Vec<Float>, n_rows: usize, n_cols: usize) -> Self {
+        assert_eq!(values.len(), n_rows * n_cols, "dense shape mismatch");
+        DMatrix::Dense {
+            values,
+            n_rows,
+            n_cols,
+        }
+    }
+
+    /// Build a CSR matrix. `indptr.len() == n_rows + 1`.
+    pub fn csr(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<Float>,
+        n_rows: usize,
+        n_cols: usize,
+    ) -> Self {
+        assert_eq!(indptr.len(), n_rows + 1, "csr indptr length");
+        assert_eq!(indices.len(), values.len(), "csr nnz mismatch");
+        assert_eq!(*indptr.last().unwrap(), values.len(), "csr indptr tail");
+        debug_assert!(indices.iter().all(|&c| (c as usize) < n_cols));
+        DMatrix::Csr {
+            indptr,
+            indices,
+            values,
+            n_rows,
+            n_cols,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        match self {
+            DMatrix::Dense { n_rows, .. } | DMatrix::Csr { n_rows, .. } => *n_rows,
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        match self {
+            DMatrix::Dense { n_cols, .. } | DMatrix::Csr { n_cols, .. } => *n_cols,
+        }
+    }
+
+    /// Number of stored (present, non-NaN) entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            DMatrix::Dense { values, .. } => values.iter().filter(|v| !v.is_nan()).count(),
+            DMatrix::Csr { values, .. } => values.len(),
+        }
+    }
+
+    /// Density of present values in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        let total = self.n_rows() * self.n_cols();
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Value at `(row, col)`; `None` if missing.
+    pub fn get(&self, row: usize, col: usize) -> Option<Float> {
+        match self {
+            DMatrix::Dense { values, n_cols, .. } => {
+                let v = values[row * n_cols + col];
+                if v.is_nan() {
+                    None
+                } else {
+                    Some(v)
+                }
+            }
+            DMatrix::Csr {
+                indptr,
+                indices,
+                values,
+                ..
+            } => {
+                let (lo, hi) = (indptr[row], indptr[row + 1]);
+                indices[lo..hi]
+                    .binary_search(&(col as u32))
+                    .ok()
+                    .map(|i| values[lo + i])
+            }
+        }
+    }
+
+    /// Iterate present `(col, value)` pairs of one row.
+    pub fn iter_row(&self, row: usize) -> RowIter<'_> {
+        match self {
+            DMatrix::Dense { values, n_cols, .. } => RowIter::Dense {
+                slice: &values[row * n_cols..(row + 1) * n_cols],
+                col: 0,
+            },
+            DMatrix::Csr {
+                indptr,
+                indices,
+                values,
+                ..
+            } => RowIter::Csr {
+                indices: &indices[indptr[row]..indptr[row + 1]],
+                values: &values[indptr[row]..indptr[row + 1]],
+                pos: 0,
+            },
+        }
+    }
+
+    /// Visit every present value of a column as `(row, value)`.
+    /// Dense: O(n_rows); CSR: O(nnz) full scan — callers that need repeated
+    /// column access should construct a [`ColumnView`] once instead.
+    pub fn for_each_in_column(&self, col: usize, mut f: impl FnMut(usize, Float)) {
+        match self {
+            DMatrix::Dense {
+                values,
+                n_rows,
+                n_cols,
+            } => {
+                for row in 0..*n_rows {
+                    let v = values[row * n_cols + col];
+                    if !v.is_nan() {
+                        f(row, v);
+                    }
+                }
+            }
+            DMatrix::Csr {
+                indptr,
+                indices,
+                values,
+                n_rows,
+                ..
+            } => {
+                for row in 0..*n_rows {
+                    let (lo, hi) = (indptr[row], indptr[row + 1]);
+                    if let Ok(i) = indices[lo..hi].binary_search(&(col as u32)) {
+                        f(row, values[lo + i]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Take a subset of rows (used to shard the training set over devices
+    /// and for train/validation splitting).
+    pub fn take_rows(&self, rows: &[usize]) -> DMatrix {
+        match self {
+            DMatrix::Dense {
+                values, n_cols, ..
+            } => {
+                let mut out = Vec::with_capacity(rows.len() * n_cols);
+                for &r in rows {
+                    out.extend_from_slice(&values[r * n_cols..(r + 1) * n_cols]);
+                }
+                DMatrix::dense(out, rows.len(), *n_cols)
+            }
+            DMatrix::Csr {
+                indptr,
+                indices,
+                values,
+                n_cols,
+                ..
+            } => {
+                let mut new_indptr = Vec::with_capacity(rows.len() + 1);
+                let mut new_indices = Vec::new();
+                let mut new_values = Vec::new();
+                new_indptr.push(0usize);
+                for &r in rows {
+                    let (lo, hi) = (indptr[r], indptr[r + 1]);
+                    new_indices.extend_from_slice(&indices[lo..hi]);
+                    new_values.extend_from_slice(&values[lo..hi]);
+                    new_indptr.push(new_indices.len());
+                }
+                DMatrix::csr(new_indptr, new_indices, new_values, rows.len(), *n_cols)
+            }
+        }
+    }
+
+    /// Convert to dense (NaN-filled). Used by the XLA prediction path whose
+    /// AOT artifact has a dense input signature.
+    pub fn to_dense(&self) -> DMatrix {
+        match self {
+            DMatrix::Dense { .. } => self.clone(),
+            DMatrix::Csr {
+                indptr,
+                indices,
+                values,
+                n_rows,
+                n_cols,
+            } => {
+                let mut out = vec![Float::NAN; n_rows * n_cols];
+                for row in 0..*n_rows {
+                    for i in indptr[row]..indptr[row + 1] {
+                        out[row * n_cols + indices[i] as usize] = values[i];
+                    }
+                }
+                DMatrix::dense(out, *n_rows, *n_cols)
+            }
+        }
+    }
+
+    /// In-memory size of the raw float representation, in bytes — the
+    /// baseline against which the paper's compression factor (§2.2) is
+    /// measured.
+    pub fn float_bytes(&self) -> usize {
+        match self {
+            DMatrix::Dense { values, .. } => values.len() * std::mem::size_of::<Float>(),
+            DMatrix::Csr {
+                indices, values, indptr, ..
+            } => {
+                values.len() * std::mem::size_of::<Float>()
+                    + indices.len() * std::mem::size_of::<u32>()
+                    + indptr.len() * std::mem::size_of::<usize>()
+            }
+        }
+    }
+}
+
+/// Iterator over present `(col, value)` pairs of one row.
+pub enum RowIter<'a> {
+    Dense { slice: &'a [Float], col: usize },
+    Csr {
+        indices: &'a [u32],
+        values: &'a [Float],
+        pos: usize,
+    },
+}
+
+impl<'a> Iterator for RowIter<'a> {
+    type Item = (usize, Float);
+
+    fn next(&mut self) -> Option<(usize, Float)> {
+        match self {
+            RowIter::Dense { slice, col } => {
+                while *col < slice.len() {
+                    let c = *col;
+                    *col += 1;
+                    if !slice[c].is_nan() {
+                        return Some((c, slice[c]));
+                    }
+                }
+                None
+            }
+            RowIter::Csr {
+                indices,
+                values,
+                pos,
+            } => {
+                if *pos < indices.len() {
+                    let p = *pos;
+                    *pos += 1;
+                    Some((indices[p] as usize, values[p]))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// A labelled dataset: features + labels (+ optional ranking groups).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: DMatrix,
+    pub y: Vec<Float>,
+    /// Query-group boundaries for ranking tasks (`rank:pairwise`): group `g`
+    /// spans rows `groups[g]..groups[g+1]`. Empty for non-ranking tasks.
+    pub groups: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(x: DMatrix, y: Vec<Float>) -> Self {
+        assert_eq!(x.n_rows(), y.len(), "labels/rows mismatch");
+        Dataset {
+            x,
+            y,
+            groups: Vec::new(),
+        }
+    }
+
+    pub fn with_groups(x: DMatrix, y: Vec<Float>, groups: Vec<usize>) -> Self {
+        assert_eq!(x.n_rows(), y.len(), "labels/rows mismatch");
+        if !groups.is_empty() {
+            assert_eq!(groups[0], 0);
+            assert_eq!(*groups.last().unwrap(), y.len());
+            assert!(groups.windows(2).all(|w| w[0] < w[1]));
+        }
+        Dataset { x, y, groups }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Split into `(train, valid)` with `valid_frac` of rows held out,
+    /// deterministically shuffled by `seed`.
+    pub fn split(&self, valid_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.n_rows();
+        let n_valid = ((n as f64) * valid_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = crate::util::Pcg64::new(seed);
+        rng.shuffle(&mut idx);
+        let (valid_idx, train_idx) = idx.split_at(n_valid);
+        let take = |rows: &[usize]| {
+            Dataset::new(
+                self.x.take_rows(rows),
+                rows.iter().map(|&r| self.y[r]).collect(),
+            )
+        };
+        (take(train_idx), take(valid_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_dense() -> DMatrix {
+        // 3x3 with one missing
+        DMatrix::dense(
+            vec![1.0, 2.0, 3.0, 4.0, Float::NAN, 6.0, 7.0, 8.0, 9.0],
+            3,
+            3,
+        )
+    }
+
+    fn sample_csr() -> DMatrix {
+        // same logical content as sample_dense
+        DMatrix::csr(
+            vec![0, 3, 5, 8],
+            vec![0, 1, 2, 0, 2, 0, 1, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 6.0, 7.0, 8.0, 9.0],
+            3,
+            3,
+        )
+    }
+
+    #[test]
+    fn get_dense_and_csr_agree() {
+        let d = sample_dense();
+        let s = sample_csr();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.get(r, c), s.get(r, c), "({r},{c})");
+            }
+        }
+        assert_eq!(d.get(1, 1), None);
+    }
+
+    #[test]
+    fn nnz_and_density() {
+        assert_eq!(sample_dense().nnz(), 8);
+        assert_eq!(sample_csr().nnz(), 8);
+        assert!((sample_dense().density() - 8.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_iter_skips_missing() {
+        let d = sample_dense();
+        let row: Vec<_> = d.iter_row(1).collect();
+        assert_eq!(row, vec![(0, 4.0), (2, 6.0)]);
+        let s = sample_csr();
+        let row_s: Vec<_> = s.iter_row(1).collect();
+        assert_eq!(row, row_s);
+    }
+
+    #[test]
+    fn column_visit_agrees() {
+        let d = sample_dense();
+        let s = sample_csr();
+        for c in 0..3 {
+            let mut dv = Vec::new();
+            let mut sv = Vec::new();
+            d.for_each_in_column(c, |r, v| dv.push((r, v)));
+            s.for_each_in_column(c, |r, v| sv.push((r, v)));
+            assert_eq!(dv, sv);
+        }
+    }
+
+    #[test]
+    fn take_rows_dense() {
+        let d = sample_dense();
+        let sub = d.take_rows(&[2, 0]);
+        assert_eq!(sub.n_rows(), 2);
+        assert_eq!(sub.get(0, 0), Some(7.0));
+        assert_eq!(sub.get(1, 2), Some(3.0));
+    }
+
+    #[test]
+    fn take_rows_csr_preserves_missing() {
+        let s = sample_csr();
+        let sub = s.take_rows(&[1]);
+        assert_eq!(sub.n_rows(), 1);
+        assert_eq!(sub.get(0, 1), None);
+        assert_eq!(sub.get(0, 2), Some(6.0));
+    }
+
+    #[test]
+    fn csr_to_dense_roundtrip() {
+        let s = sample_csr();
+        let d = s.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.get(r, c), s.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_split_partitions_rows() {
+        let d = sample_dense();
+        let ds = Dataset::new(d, vec![0.0, 1.0, 2.0]);
+        let (train, valid) = ds.split(1.0 / 3.0, 7);
+        assert_eq!(train.n_rows() + valid.n_rows(), 3);
+        assert_eq!(valid.n_rows(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels/rows mismatch")]
+    fn dataset_shape_check() {
+        Dataset::new(sample_dense(), vec![0.0; 2]);
+    }
+
+    #[test]
+    fn groups_validate() {
+        let x = sample_dense();
+        let ds = Dataset::with_groups(x, vec![0.0, 1.0, 0.0], vec![0, 2, 3]);
+        assert_eq!(ds.groups.len(), 3);
+    }
+
+    #[test]
+    fn float_bytes_dense() {
+        assert_eq!(sample_dense().float_bytes(), 9 * 4);
+    }
+}

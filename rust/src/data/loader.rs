@@ -1,0 +1,271 @@
+//! File loaders: CSV (dense) and LibSVM (sparse), the two formats the
+//! paper's benchmark repository uses for its public datasets.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{DMatrix, Dataset};
+use crate::Float;
+
+/// Load a CSV file into a dense [`Dataset`].
+///
+/// * `label_col` — index of the label column; all other columns are
+///   features in order.
+/// * `has_header` — skip the first line.
+/// * empty fields and the literal strings `na`, `nan`, `?` (case
+///   insensitive) become missing values.
+pub fn load_csv(path: impl AsRef<Path>, label_col: usize, has_header: bool) -> Result<Dataset> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    parse_csv(BufReader::new(file), label_col, has_header)
+}
+
+/// CSV parser over any reader (unit-testable without files).
+pub fn parse_csv(reader: impl Read, label_col: usize, has_header: bool) -> Result<Dataset> {
+    let reader = BufReader::new(reader);
+    let mut values: Vec<Float> = Vec::new();
+    let mut labels: Vec<Float> = Vec::new();
+    let mut n_cols_file: Option<usize> = None;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading csv line")?;
+        if lineno == 0 && has_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        match n_cols_file {
+            None => {
+                if label_col >= fields.len() {
+                    bail!("label column {label_col} out of range ({} fields)", fields.len());
+                }
+                n_cols_file = Some(fields.len());
+            }
+            Some(n) if n != fields.len() => {
+                bail!("line {}: expected {} fields, got {}", lineno + 1, n, fields.len())
+            }
+            _ => {}
+        }
+        for (i, f) in fields.iter().enumerate() {
+            let v = parse_field(f)
+                .with_context(|| format!("line {} field {}: {:?}", lineno + 1, i, f))?;
+            if i == label_col {
+                if v.is_nan() {
+                    bail!("line {}: missing label", lineno + 1);
+                }
+                labels.push(v);
+            } else {
+                values.push(v);
+            }
+        }
+    }
+    let n_rows = labels.len();
+    let n_cols = n_cols_file.map(|n| n - 1).unwrap_or(0);
+    Ok(Dataset::new(DMatrix::dense(values, n_rows, n_cols), labels))
+}
+
+fn parse_field(f: &str) -> Result<Float> {
+    let t = f.trim();
+    if t.is_empty() || t.eq_ignore_ascii_case("na") || t.eq_ignore_ascii_case("nan") || t == "?" {
+        return Ok(Float::NAN);
+    }
+    t.parse::<Float>()
+        .map_err(|e| anyhow::anyhow!("bad number: {e}"))
+}
+
+/// Load a LibSVM-format file (`label idx:val idx:val ...`, 0- or 1-based
+/// indices autodetected) into a sparse [`Dataset`]. Optional
+/// `qid:<group>` tokens populate ranking groups.
+pub fn load_libsvm(path: impl AsRef<Path>) -> Result<Dataset> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    parse_libsvm(BufReader::new(file))
+}
+
+/// LibSVM parser over any reader.
+pub fn parse_libsvm(reader: impl Read) -> Result<Dataset> {
+    let reader = BufReader::new(reader);
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<Float> = Vec::new();
+    let mut labels: Vec<Float> = Vec::new();
+    let mut qids: Vec<i64> = Vec::new();
+    let mut max_col: u32 = 0;
+    let mut min_col: u32 = u32::MAX;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading libsvm line")?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut tokens = line.split_ascii_whitespace();
+        let label: Float = tokens
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        labels.push(label);
+        let mut row: Vec<(u32, Float)> = Vec::new();
+        let mut qid: i64 = -1;
+        for tok in tokens {
+            let colon = tok
+                .find(':')
+                .with_context(|| format!("line {}: token {:?} missing ':'", lineno + 1, tok))?;
+            let (k, v) = tok.split_at(colon);
+            let v = &v[1..];
+            if k == "qid" {
+                qid = v
+                    .parse()
+                    .with_context(|| format!("line {}: bad qid", lineno + 1))?;
+                continue;
+            }
+            let col: u32 = k
+                .parse()
+                .with_context(|| format!("line {}: bad index {:?}", lineno + 1, k))?;
+            let val: Float = v
+                .parse()
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v))?;
+            max_col = max_col.max(col);
+            min_col = min_col.min(col);
+            row.push((col, val));
+        }
+        qids.push(qid);
+        row.sort_unstable_by_key(|&(c, _)| c);
+        for (c, v) in row {
+            indices.push(c);
+            values.push(v);
+        }
+        indptr.push(indices.len());
+    }
+
+    // 1-based index files never use column 0.
+    let one_based = !indices.is_empty() && min_col >= 1;
+    if one_based {
+        for c in indices.iter_mut() {
+            *c -= 1;
+        }
+        max_col -= 1;
+    }
+    let n_rows = labels.len();
+    let n_cols = if indices.is_empty() { 0 } else { max_col as usize + 1 };
+
+    // Build group boundaries from contiguous qid runs, if any were present.
+    let mut groups = Vec::new();
+    if qids.iter().any(|&q| q >= 0) {
+        if qids.iter().any(|&q| q < 0) {
+            bail!("mixed qid / non-qid rows");
+        }
+        groups.push(0);
+        for i in 1..qids.len() {
+            if qids[i] != qids[i - 1] {
+                groups.push(i);
+            }
+        }
+        groups.push(qids.len());
+    }
+
+    let x = DMatrix::csr(indptr, indices, values, n_rows, n_cols);
+    Ok(if groups.is_empty() {
+        Dataset::new(x, labels)
+    } else {
+        Dataset::with_groups(x, labels, groups)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_basic() {
+        let data = "y,f1,f2\n1,0.5,2.0\n0,,3.5\n";
+        let ds = parse_csv(data.as_bytes(), 0, true).unwrap();
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(ds.n_cols(), 2);
+        assert_eq!(ds.y, vec![1.0, 0.0]);
+        assert_eq!(ds.x.get(0, 0), Some(0.5));
+        assert_eq!(ds.x.get(1, 0), None); // empty field -> missing
+        assert_eq!(ds.x.get(1, 1), Some(3.5));
+    }
+
+    #[test]
+    fn csv_label_not_first() {
+        let data = "1.0,2.0,5\n3.0,4.0,6\n";
+        let ds = parse_csv(data.as_bytes(), 2, false).unwrap();
+        assert_eq!(ds.y, vec![5.0, 6.0]);
+        assert_eq!(ds.x.get(1, 1), Some(4.0));
+    }
+
+    #[test]
+    fn csv_na_tokens() {
+        let data = "0,NA,nan,?\n";
+        let ds = parse_csv(data.as_bytes(), 0, false).unwrap();
+        assert_eq!(ds.x.nnz(), 0);
+    }
+
+    #[test]
+    fn csv_ragged_is_error() {
+        let data = "0,1,2\n1,2\n";
+        assert!(parse_csv(data.as_bytes(), 0, false).is_err());
+    }
+
+    #[test]
+    fn csv_missing_label_is_error() {
+        let data = ",1,2\n";
+        assert!(parse_csv(data.as_bytes(), 0, false).is_err());
+    }
+
+    #[test]
+    fn libsvm_basic_one_based() {
+        let data = "1 1:0.5 3:1.5\n0 2:2.5\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(ds.n_cols(), 3);
+        assert_eq!(ds.x.get(0, 0), Some(0.5));
+        assert_eq!(ds.x.get(0, 2), Some(1.5));
+        assert_eq!(ds.x.get(0, 1), None);
+        assert_eq!(ds.x.get(1, 1), Some(2.5));
+    }
+
+    #[test]
+    fn libsvm_zero_based() {
+        let data = "1 0:1.0\n0 4:2.0\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        assert_eq!(ds.n_cols(), 5);
+        assert_eq!(ds.x.get(0, 0), Some(1.0));
+    }
+
+    #[test]
+    fn libsvm_qid_groups() {
+        let data = "2 qid:1 1:1.0\n1 qid:1 1:0.5\n0 qid:2 1:0.1\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        assert_eq!(ds.groups, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn libsvm_comments_and_blank_lines() {
+        let data = "# header\n1 1:2.0 # trailing\n\n0 1:3.0\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        assert_eq!(ds.n_rows(), 2);
+    }
+
+    #[test]
+    fn libsvm_unsorted_indices_ok() {
+        let data = "1 3:3.0 1:1.0 2:2.0\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        let row: Vec<_> = ds.x.iter_row(0).collect();
+        assert_eq!(row, vec![(0, 1.0), (1, 2.0), (2, 3.0)]);
+    }
+
+    #[test]
+    fn libsvm_bad_token_is_error() {
+        assert!(parse_libsvm("1 nocolon\n".as_bytes()).is_err());
+        assert!(parse_libsvm("1 a:1.0\n".as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Training data substrate: dense/sparse matrices, file loaders, and the
+//! synthetic dataset registry that stands in for the paper's six public
+//! datasets (Table 1) in this offline environment.
+
+pub mod dmatrix;
+pub mod loader;
+pub mod synthetic;
+
+pub use dmatrix::{DMatrix, Dataset};
+pub use loader::{load_csv, load_libsvm};

@@ -1,0 +1,644 @@
+//! Synthetic stand-ins for the paper's six public datasets (Table 1).
+//!
+//! The evaluation machine for this reproduction has no network access, so
+//! YearPredictionMSD, sklearn-Synthetic, Higgs, Cover Type, Bosch and
+//! Airline are replaced by deterministic generators matched to each
+//! dataset's *schema* (column count, task type, sparsity, class balance)
+//! and given a learnable-but-noisy signal so accuracy numbers are
+//! non-trivial (see `DESIGN.md` §2). Row counts default to 1/100 of the
+//! paper's scale and are adjustable via [`DatasetSpec`]`.rows` or the bench
+//! harness `--scale` flag.
+
+use crate::data::{DMatrix, Dataset};
+use crate::util::Pcg64;
+use crate::Float;
+
+/// Learning task of a dataset, mirroring Table 1's "Task" column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Regression,
+    Binary,
+    /// Multiclass with `n` classes.
+    Multiclass(usize),
+    /// Learning-to-rank with the given mean group size.
+    Ranking(usize),
+}
+
+impl Task {
+    /// Default objective string for [`crate::gbm::BoosterParams`].
+    pub fn objective(&self) -> &'static str {
+        match self {
+            Task::Regression => "reg:squarederror",
+            Task::Binary => "binary:logistic",
+            Task::Multiclass(_) => "multi:softmax",
+            Task::Ranking(_) => "rank:pairwise",
+        }
+    }
+
+    /// Default evaluation metric, matching what Table 2 reports.
+    pub fn metric(&self) -> &'static str {
+        match self {
+            Task::Regression => "rmse",
+            Task::Binary => "accuracy",
+            Task::Multiclass(_) => "accuracy",
+            Task::Ranking(_) => "ndcg",
+        }
+    }
+
+    pub fn num_class(&self) -> usize {
+        match self {
+            Task::Multiclass(k) => *k,
+            _ => 1,
+        }
+    }
+}
+
+/// Which of the paper's datasets to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// YearPredictionMSD: dense audio features, regression.
+    YearPrediction,
+    /// scikit-learn `make_regression`-style linear problem.
+    Synthetic,
+    /// HIGGS: physics detector features, binary.
+    Higgs,
+    /// Forest Cover Type: mixed continuous + one-hot, 7 classes.
+    CovType,
+    /// Bosch production line: very wide, very sparse, imbalanced binary.
+    Bosch,
+    /// Airline on-time: few mixed-cardinality columns, huge row count.
+    Airline,
+    /// Web search ranking (for the `rank:pairwise` objective; not in
+    /// Table 1 but exercised by the paper's "ranking" claim in §1).
+    Ranking,
+}
+
+/// Specification of a synthetic dataset instance.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub family: Family,
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub task: Task,
+    /// Fraction of rows held out for validation.
+    pub valid_frac: f64,
+}
+
+impl DatasetSpec {
+    pub fn year_prediction_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::YearPrediction,
+            name: "YearPredictionMSD",
+            rows,
+            cols: 90,
+            task: Task::Regression,
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn synthetic_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::Synthetic,
+            name: "Synthetic",
+            rows,
+            cols: 100,
+            task: Task::Regression,
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn higgs_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::Higgs,
+            name: "Higgs",
+            rows,
+            cols: 28,
+            task: Task::Binary,
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn covtype_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::CovType,
+            name: "Cover Type",
+            rows,
+            cols: 54,
+            task: Task::Multiclass(7),
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn bosch_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::Bosch,
+            name: "Bosch",
+            rows,
+            cols: 968,
+            task: Task::Binary,
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn airline_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::Airline,
+            name: "Airline",
+            rows,
+            cols: 13,
+            task: Task::Binary,
+            valid_frac: 0.2,
+        }
+    }
+
+    pub fn ranking_like(rows: usize) -> Self {
+        DatasetSpec {
+            family: Family::Ranking,
+            name: "WebRank",
+            rows,
+            cols: 40,
+            task: Task::Ranking(20),
+            valid_frac: 0.2,
+        }
+    }
+
+    /// The paper's Table 1 datasets at `scale` (1.0 = paper scale; the
+    /// bench harness defaults to 0.01).
+    pub fn table1(scale: f64) -> Vec<DatasetSpec> {
+        let s = |n: usize| ((n as f64 * scale).round() as usize).max(1000);
+        vec![
+            DatasetSpec::year_prediction_like(s(515_000)),
+            DatasetSpec::synthetic_like(s(10_000_000)),
+            DatasetSpec::higgs_like(s(11_000_000)),
+            DatasetSpec::covtype_like(s(581_000)),
+            DatasetSpec::bosch_like(s(1_000_000)),
+            DatasetSpec::airline_like(s(115_000_000)),
+        ]
+    }
+
+    /// Look up a spec by (case-insensitive) name with an explicit row count.
+    pub fn by_name(name: &str, rows: usize) -> Option<DatasetSpec> {
+        let n = name.to_ascii_lowercase();
+        Some(match n.as_str() {
+            "yearprediction" | "yearpredictionmsd" | "year" | "msd" => {
+                DatasetSpec::year_prediction_like(rows)
+            }
+            "synthetic" => DatasetSpec::synthetic_like(rows),
+            "higgs" => DatasetSpec::higgs_like(rows),
+            "covtype" | "cover_type" | "covertype" => DatasetSpec::covtype_like(rows),
+            "bosch" => DatasetSpec::bosch_like(rows),
+            "airline" => DatasetSpec::airline_like(rows),
+            "ranking" | "webrank" => DatasetSpec::ranking_like(rows),
+            _ => return None,
+        })
+    }
+}
+
+/// A generated dataset with train/validation split.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    pub spec: DatasetSpec,
+    pub train: Dataset,
+    pub valid: Dataset,
+}
+
+/// Generate a dataset deterministically from `(spec, seed)`.
+pub fn generate(spec: &DatasetSpec, seed: u64) -> Generated {
+    let full = match spec.family {
+        Family::YearPrediction => gen_year_prediction(spec, seed),
+        Family::Synthetic => gen_synthetic_regression(spec, seed),
+        Family::Higgs => gen_higgs(spec, seed),
+        Family::CovType => gen_covtype(spec, seed),
+        Family::Bosch => gen_bosch(spec, seed),
+        Family::Airline => gen_airline(spec, seed),
+        Family::Ranking => return gen_ranking(spec, seed),
+    };
+    let (train, valid) = full.split(spec.valid_frac, seed ^ 0x5eed);
+    Generated {
+        spec: spec.clone(),
+        train,
+        valid,
+    }
+}
+
+/// YearPredictionMSD-like: 90 correlated "timbre" features; target is a
+/// smooth nonlinear function mapped into the 1922–2011 "year" range plus
+/// noise, so RMSE lands in the high-single-digit band like the paper's.
+fn gen_year_prediction(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(1);
+    let n = spec.rows;
+    let d = spec.cols;
+    // latent factors induce feature correlation like real audio covariances
+    let k = 12;
+    let loadings: Vec<f64> = (0..d * k).map(|_| rng.next_gaussian() * 0.6).collect();
+    let mut values = vec![0.0 as Float; n * d];
+    let mut y = vec![0.0 as Float; n];
+    let mut latent = vec![0.0f64; k];
+    for row in 0..n {
+        for z in latent.iter_mut() {
+            *z = rng.next_gaussian();
+        }
+        let mut signal = 0.0f64;
+        for c in 0..d {
+            let mut v = rng.next_gaussian() * 0.5;
+            for (j, z) in latent.iter().enumerate() {
+                v += loadings[c * k + j] * z;
+            }
+            values[row * d + c] = v as Float;
+        }
+        // target: smooth function of the first few latents
+        signal += 6.0 * (latent[0]).tanh();
+        signal += 3.5 * (latent[1] * latent[2]).tanh();
+        signal += 2.0 * latent[3];
+        signal += 1.5 * (latent[4].abs() - 0.8);
+        let noise = rng.next_gaussian() * 7.0;
+        y[row] = (1998.0 + signal * 2.0 + noise).clamp(1922.0, 2011.0) as Float;
+    }
+    Dataset::new(DMatrix::dense(values, n, d), y)
+}
+
+/// sklearn `make_regression`-like: linear model on a sparse-informative
+/// subset of 100 gaussian features plus gaussian noise.
+fn gen_synthetic_regression(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(2);
+    let n = spec.rows;
+    let d = spec.cols;
+    let informative = 10.min(d);
+    let coefs: Vec<f64> = (0..informative)
+        .map(|_| rng.next_gaussian() * 50.0)
+        .collect();
+    let mut values = vec![0.0 as Float; n * d];
+    let mut y = vec![0.0 as Float; n];
+    for row in 0..n {
+        let mut t = 0.0f64;
+        for c in 0..d {
+            let v = rng.next_gaussian();
+            values[row * d + c] = v as Float;
+            if c < informative {
+                t += coefs[c] * v;
+            }
+        }
+        // scale into the paper's RMSE~13.5 band: noise sigma ~ 13
+        y[row] = (t * 0.1 + rng.next_gaussian() * 13.0) as Float;
+    }
+    Dataset::new(DMatrix::dense(values, n, d), y)
+}
+
+/// HIGGS-like: 21 "low-level" + 7 "high-level" features; the class signal
+/// lives in nonlinear combinations (as in Baldi et al.), tuned so boosted
+/// trees reach ~74–76% accuracy like the paper's Table 2.
+fn gen_higgs(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(3);
+    let n = spec.rows;
+    let d = spec.cols; // 28
+    let mut values = vec![0.0 as Float; n * d];
+    let mut y = vec![0.0 as Float; n];
+    for row in 0..n {
+        let label = rng.next_f64() < 0.53; // signal fraction like HIGGS
+        let shift = if label { 0.5 } else { 0.0 };
+        let mut low = [0.0f64; 21];
+        for (c, l) in low.iter_mut().enumerate() {
+            // signal shifts a few kinematic features; heavy tails via exp
+            let base = rng.next_gaussian();
+            let v = if c % 4 == 0 {
+                (base + shift * 0.6).exp() * 0.5
+            } else if c % 4 == 1 {
+                base + shift * 0.45
+            } else {
+                base
+            };
+            *l = v;
+            values[row * d + c] = v as Float;
+        }
+        // high-level: invariant-mass-like combinations, where most of the
+        // separation lives
+        for c in 21..d {
+            let i = (c - 21) * 3 % 21;
+            let j = ((c - 21) * 5 + 7) % 21;
+            let m = (low[i] * low[i] + low[j] * low[j]).sqrt()
+                + shift * 0.7
+                + rng.next_gaussian() * 0.4;
+            values[row * d + c] = m as Float;
+        }
+        y[row] = if label { 1.0 } else { 0.0 };
+    }
+    Dataset::new(DMatrix::dense(values, n, d), y)
+}
+
+/// Forest-CoverType-like: 10 continuous terrain features + 4 one-hot
+/// wilderness-area + 40 one-hot soil-type columns; 7 classes with skewed
+/// priors, decision structure aligned to terrain thresholds.
+fn gen_covtype(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(4);
+    let n = spec.rows;
+    let d = spec.cols; // 54
+    let mut values = vec![0.0 as Float; n * d];
+    let mut y = vec![0.0 as Float; n];
+    for row in 0..n {
+        let elevation = 1800.0 + rng.next_f64() * 1800.0;
+        let aspect = rng.next_f64() * 360.0;
+        let slope = rng.next_f64() * 50.0;
+        let hydro_d = rng.next_f64() * 1200.0;
+        let road_d = rng.next_f64() * 6000.0;
+        let hillshade = 120.0 + rng.next_f64() * 130.0;
+        let cont = [
+            elevation,
+            aspect,
+            slope,
+            hydro_d,
+            rng.next_f64() * 500.0 - 100.0, // vertical hydro
+            road_d,
+            hillshade,
+            hillshade + rng.next_gaussian() * 15.0,
+            hillshade + rng.next_gaussian() * 25.0,
+            rng.next_f64() * 7000.0, // fire points
+        ];
+        for (c, v) in cont.iter().enumerate() {
+            values[row * d + c] = *v as Float;
+        }
+        let wilderness = rng.gen_range(4);
+        values[row * d + 10 + wilderness] = 1.0;
+        let soil = rng.gen_range(40);
+        values[row * d + 14 + soil] = 1.0;
+        // class from elevation bands + modifiers, plus noise: mirrors the
+        // real dataset where elevation dominates
+        let band = ((elevation - 1800.0) / 1800.0 * 6.99) as usize;
+        let mut class = band.min(6) as i64;
+        if slope > 35.0 {
+            class = (class + 1).min(6);
+        }
+        if wilderness == 3 && class > 0 {
+            class -= 1;
+        }
+        if soil < 8 && class > 1 {
+            class -= 1;
+        }
+        if rng.next_f64() < 0.12 {
+            class = rng.gen_range(7) as i64; // label noise
+        }
+        y[row] = class as Float;
+    }
+    Dataset::new(DMatrix::dense(values, n, d), y)
+}
+
+/// Bosch-like: 968 sensor columns, ~20% present (CSR), heavily imbalanced
+/// binary labels (~0.6% positives in the real data; we use 1.5% so tiny
+/// scaled-down runs still see positives), weak signal spread over many
+/// stations.
+fn gen_bosch(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(5);
+    let n = spec.rows;
+    let d = spec.cols; // 968
+    let p_present = 0.19;
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<Float> = Vec::new();
+    let mut y = vec![0.0 as Float; n];
+    // station-level fault weights
+    let weights: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.35).collect();
+    for row in 0..n {
+        let mut score = -4.3f64; // intercept -> rare positives
+        for c in 0..d {
+            if rng.next_f64() < p_present {
+                let v = rng.next_gaussian();
+                indices.push(c as u32);
+                values.push(v as Float);
+                score += weights[c] * v * 0.35;
+            }
+        }
+        indptr.push(indices.len());
+        let p = 1.0 / (1.0 + (-score).exp());
+        y[row] = if rng.next_f64() < p { 1.0 } else { 0.0 };
+    }
+    Dataset::new(DMatrix::csr(indptr, indices, values, n, d), y)
+}
+
+/// Airline-like: 13 mixed columns (month, day-of-week, carrier id, origin/
+/// dest ids, departure time, distance, ...), binary "delayed" label with
+/// structure on carrier × time-of-day × distance. Integer-coded
+/// categoricals, exactly how the paper's benchmark ingests the real file.
+fn gen_airline(spec: &DatasetSpec, seed: u64) -> Dataset {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(6);
+    let n = spec.rows;
+    let d = spec.cols; // 13
+    let mut values = vec![0.0 as Float; n * d];
+    let mut y = vec![0.0 as Float; n];
+    let n_carriers = 22usize;
+    let n_airports = 300usize;
+    let carrier_bias: Vec<f64> = (0..n_carriers).map(|_| rng.next_gaussian() * 0.5).collect();
+    let airport_bias: Vec<f64> = (0..n_airports).map(|_| rng.next_gaussian() * 0.35).collect();
+    for row in 0..n {
+        let month = rng.gen_range(12) as f64 + 1.0;
+        let day_of_month = rng.gen_range(28) as f64 + 1.0;
+        let day_of_week = rng.gen_range(7) as f64 + 1.0;
+        let dep_time = rng.next_f64() * 24.0; // hours
+        let carrier = rng.gen_range(n_carriers);
+        let origin = rng.gen_range(n_airports);
+        let dest = rng.gen_range(n_airports);
+        let distance = 100.0 + rng.next_f64().powi(2) * 2800.0;
+        let air_time = distance / 7.5 + rng.next_gaussian() * 8.0;
+        let taxi = 5.0 + rng.next_f64() * 25.0;
+        let cols = [
+            month,
+            day_of_month,
+            day_of_week,
+            dep_time,
+            carrier as f64,
+            origin as f64,
+            dest as f64,
+            distance,
+            air_time,
+            taxi,
+            (month * 30.0 + day_of_month), // day-of-year proxy
+            (dep_time * 60.0) % 60.0,      // minute
+            if day_of_week >= 6.0 { 1.0 } else { 0.0 },
+        ];
+        for c in 0..d {
+            values[row * d + c] = cols[c.min(cols.len() - 1)] as Float;
+        }
+        // delay probability: evening flights, winter months, busy airports,
+        // bad carriers
+        let mut score = -1.35f64;
+        score += carrier_bias[carrier];
+        score += airport_bias[origin] * 0.8 + airport_bias[dest] * 0.4;
+        score += if (17.0..22.0).contains(&dep_time) { 0.55 } else { 0.0 };
+        score += if dep_time < 6.0 { -0.5 } else { 0.0 };
+        score += if month == 12.0 || month <= 2.0 { 0.3 } else { 0.0 };
+        score += (distance / 2800.0) * 0.2;
+        score += rng.next_gaussian() * 0.8; // irreducible noise -> ~75% ceiling
+        y[row] = if score > 0.0 { 1.0 } else { 0.0 };
+    }
+    Dataset::new(DMatrix::dense(values, n, d), y)
+}
+
+/// Ranking: query groups with graded relevance 0–4; relevance is a noisy
+/// monotone function of a few features.
+fn gen_ranking(spec: &DatasetSpec, seed: u64) -> Generated {
+    let root = Pcg64::new(seed);
+    let mut rng = root.split(7);
+    let n = spec.rows;
+    let d = spec.cols;
+    let mean_group = match spec.task {
+        Task::Ranking(g) => g,
+        _ => 20,
+    };
+    let mut make = |n_rows: usize, stream: u64| -> Dataset {
+        let mut rng = rng.split(stream);
+        let mut values = vec![0.0 as Float; n_rows * d];
+        let mut y = vec![0.0 as Float; n_rows];
+        let mut groups = vec![0usize];
+        let mut row = 0;
+        while row < n_rows {
+            let g = (mean_group / 2 + rng.gen_range(mean_group)).min(n_rows - row).max(1);
+            for _ in 0..g {
+                let mut score = 0.0f64;
+                for c in 0..d {
+                    let v = rng.next_gaussian();
+                    values[row * d + c] = v as Float;
+                    if c < 5 {
+                        score += v * (5 - c) as f64 * 0.3;
+                    }
+                }
+                score += rng.next_gaussian() * 1.2;
+                y[row] = ((score + 3.0) / 1.7).clamp(0.0, 4.0).floor() as Float;
+                row += 1;
+            }
+            groups.push(row);
+        }
+        Dataset::with_groups(DMatrix::dense(values, n_rows, d), y, groups)
+    };
+    let n_valid = (n as f64 * spec.valid_frac) as usize;
+    let train = make(n - n_valid, 100);
+    let valid = make(n_valid, 200);
+    Generated {
+        spec: spec.clone(),
+        train,
+        valid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = DatasetSpec::higgs_like(500);
+        let a = generate(&spec, 42);
+        let b = generate(&spec, 42);
+        assert_eq!(a.train.y, b.train.y);
+        assert_eq!(a.train.x.get(10, 5), b.train.x.get(10, 5));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = DatasetSpec::higgs_like(500);
+        let a = generate(&spec, 1);
+        let b = generate(&spec, 2);
+        assert_ne!(a.train.y, b.train.y);
+    }
+
+    #[test]
+    fn shapes_match_table1() {
+        for (spec, cols) in [
+            (DatasetSpec::year_prediction_like(100), 90),
+            (DatasetSpec::synthetic_like(100), 100),
+            (DatasetSpec::higgs_like(100), 28),
+            (DatasetSpec::covtype_like(100), 54),
+            (DatasetSpec::bosch_like(100), 968),
+            (DatasetSpec::airline_like(100), 13),
+        ] {
+            let g = generate(&spec, 7);
+            assert_eq!(g.train.n_cols(), cols, "{}", spec.name);
+            assert_eq!(g.train.n_rows() + g.valid.n_rows(), 100, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn binary_labels_are_binary() {
+        for spec in [DatasetSpec::higgs_like(300), DatasetSpec::airline_like(300)] {
+            let g = generate(&spec, 3);
+            assert!(g.train.y.iter().all(|&v| v == 0.0 || v == 1.0));
+            let pos: usize = g.train.y.iter().filter(|&&v| v == 1.0).count();
+            assert!(pos > 0 && pos < g.train.n_rows());
+        }
+    }
+
+    #[test]
+    fn covtype_classes_in_range() {
+        let g = generate(&DatasetSpec::covtype_like(2000), 4);
+        let mut seen = [false; 7];
+        for &v in &g.train.y {
+            let c = v as usize;
+            assert!(c < 7);
+            seen[c] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 5, "class coverage");
+    }
+
+    #[test]
+    fn bosch_is_sparse_and_imbalanced() {
+        let g = generate(&DatasetSpec::bosch_like(2000), 5);
+        let density = g.train.x.density();
+        assert!(density > 0.1 && density < 0.3, "density {density}");
+        let pos_rate = g.train.y.iter().filter(|&&v| v == 1.0).count() as f64
+            / g.train.n_rows() as f64;
+        assert!(pos_rate < 0.12, "pos rate {pos_rate}");
+    }
+
+    #[test]
+    fn year_prediction_label_range() {
+        let g = generate(&DatasetSpec::year_prediction_like(1000), 6);
+        for &v in &g.train.y {
+            assert!((1922.0..=2011.0).contains(&v));
+        }
+        // labels are not all identical
+        let min = g.train.y.iter().cloned().fold(f32::MAX, f32::min);
+        let max = g.train.y.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max - min > 20.0);
+    }
+
+    #[test]
+    fn ranking_groups_cover_rows() {
+        let g = generate(&DatasetSpec::ranking_like(1000), 8);
+        assert!(!g.train.groups.is_empty());
+        assert_eq!(*g.train.groups.last().unwrap(), g.train.n_rows());
+        assert!(g.train.y.iter().all(|&v| (0.0..=4.0).contains(&v)));
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(DatasetSpec::by_name("higgs", 10).is_some());
+        assert!(DatasetSpec::by_name("Airline", 10).is_some());
+        assert!(DatasetSpec::by_name("unknown", 10).is_none());
+        assert_eq!(DatasetSpec::table1(0.01).len(), 6);
+    }
+
+    #[test]
+    fn airline_signal_is_learnable() {
+        // delayed rate should vary with departure-time bucket — the signal
+        // the trees are supposed to find.
+        let g = generate(&DatasetSpec::airline_like(20_000), 11);
+        let (mut evening, mut evening_delayed, mut morning, mut morning_delayed) = (0, 0, 0, 0);
+        for r in 0..g.train.n_rows() {
+            let dep = g.train.x.get(r, 3).unwrap();
+            if (17.0..22.0).contains(&dep) {
+                evening += 1;
+                evening_delayed += (g.train.y[r] == 1.0) as usize;
+            } else if dep < 6.0 {
+                morning += 1;
+                morning_delayed += (g.train.y[r] == 1.0) as usize;
+            }
+        }
+        let ev = evening_delayed as f64 / evening as f64;
+        let mo = morning_delayed as f64 / morning as f64;
+        assert!(ev > mo + 0.1, "evening {ev} vs morning {mo}");
+    }
+}

@@ -1,0 +1,111 @@
+//! K-fold cross-validation driver — the standard companion utility for
+//! hyperparameter selection (`xgboost.cv` analogue).
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::gbm::{Booster, BoosterParams};
+use crate::util::Pcg64;
+
+/// Per-fold and aggregate cross-validation results.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    pub metric: &'static str,
+    /// Final validation metric of each fold.
+    pub fold_scores: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Run `k`-fold cross-validation of `params` on `data`.
+///
+/// Folds are deterministic in `seed`. Returns the per-fold final
+/// validation scores of the objective's default (or configured) metric.
+pub fn cross_validate(
+    params: &BoosterParams,
+    data: &Dataset,
+    k: usize,
+    seed: u64,
+) -> Result<CvResult> {
+    ensure!(k >= 2, "need at least 2 folds");
+    let n = data.n_rows();
+    ensure!(n >= k, "fewer rows than folds");
+    let mut idx: Vec<usize> = (0..n).collect();
+    Pcg64::new(seed).shuffle(&mut idx);
+
+    let mut fold_scores = Vec::with_capacity(k);
+    let mut metric_name = "";
+    for fold in 0..k {
+        let lo = fold * n / k;
+        let hi = (fold + 1) * n / k;
+        let valid_rows = &idx[lo..hi];
+        let train_rows: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+        let take = |rows: &[usize]| {
+            Dataset::new(
+                data.x.take_rows(rows),
+                rows.iter().map(|&r| data.y[r]).collect(),
+            )
+        };
+        let train = take(&train_rows);
+        let valid = take(valid_rows);
+        let booster = Booster::train(params, &train, Some(&valid))?;
+        let rec = booster
+            .eval_history
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("no evaluation recorded"))?;
+        metric_name = rec.metric;
+        fold_scores.push(rec.valid.unwrap_or(f64::NAN));
+    }
+    let mean = fold_scores.iter().sum::<f64>() / k as f64;
+    let var = fold_scores.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / k as f64;
+    Ok(CvResult {
+        metric: metric_name,
+        fold_scores,
+        mean,
+        std: var.sqrt(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+
+    fn params() -> BoosterParams {
+        BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: 8,
+            max_depth: 4,
+            max_bins: 16,
+            eval_metric: "accuracy".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cv_runs_all_folds_and_aggregates() {
+        let g = generate(&DatasetSpec::higgs_like(2500), 61);
+        let r = cross_validate(&params(), &g.train, 4, 7).unwrap();
+        assert_eq!(r.fold_scores.len(), 4);
+        assert_eq!(r.metric, "accuracy");
+        assert!(r.fold_scores.iter().all(|s| *s > 55.0), "{:?}", r.fold_scores);
+        assert!((r.mean - r.fold_scores.iter().sum::<f64>() / 4.0).abs() < 1e-12);
+        assert!(r.std >= 0.0);
+    }
+
+    #[test]
+    fn cv_is_deterministic_in_seed() {
+        let g = generate(&DatasetSpec::higgs_like(1200), 63);
+        let a = cross_validate(&params(), &g.train, 3, 1).unwrap();
+        let b = cross_validate(&params(), &g.train, 3, 1).unwrap();
+        assert_eq!(a.fold_scores, b.fold_scores);
+        let c = cross_validate(&params(), &g.train, 3, 2).unwrap();
+        assert_ne!(a.fold_scores, c.fold_scores);
+    }
+
+    #[test]
+    fn cv_rejects_bad_k() {
+        let g = generate(&DatasetSpec::higgs_like(300), 65);
+        assert!(cross_validate(&params(), &g.train, 1, 0).is_err());
+    }
+}

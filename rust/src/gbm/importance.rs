@@ -1,0 +1,146 @@
+//! Feature importance over a trained ensemble — the three standard
+//! XGBoost flavours: total gain, total cover, and split count (weight).
+
+use std::collections::BTreeMap;
+
+use crate::gbm::Booster;
+use crate::tree::RegTree;
+
+/// Importance flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportanceKind {
+    /// Sum of loss reduction over all splits on the feature.
+    Gain,
+    /// Sum of hessian cover over all splits on the feature.
+    Cover,
+    /// Number of splits on the feature.
+    Weight,
+}
+
+impl std::str::FromStr for ImportanceKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "gain" => Ok(ImportanceKind::Gain),
+            "cover" => Ok(ImportanceKind::Cover),
+            "weight" | "frequency" => Ok(ImportanceKind::Weight),
+            other => Err(format!("unknown importance kind {other:?}")),
+        }
+    }
+}
+
+/// Accumulate importance from a set of trees.
+pub fn tree_importance(trees: &[RegTree], kind: ImportanceKind) -> BTreeMap<u32, f64> {
+    let mut out: BTreeMap<u32, f64> = BTreeMap::new();
+    for tree in trees {
+        for node in &tree.nodes {
+            if !node.is_leaf() {
+                let v = match kind {
+                    ImportanceKind::Gain => node.gain as f64,
+                    ImportanceKind::Cover => node.cover as f64,
+                    ImportanceKind::Weight => 1.0,
+                };
+                *out.entry(node.feature).or_insert(0.0) += v;
+            }
+        }
+    }
+    out
+}
+
+/// Importance over all output groups of a booster, sorted descending.
+pub fn feature_importance(booster: &Booster, kind: ImportanceKind) -> Vec<(u32, f64)> {
+    let mut map: BTreeMap<u32, f64> = BTreeMap::new();
+    for group in &booster.trees {
+        for (f, v) in tree_importance(group, kind) {
+            *map.entry(f).or_insert(0.0) += v;
+        }
+    }
+    let mut v: Vec<(u32, f64)> = map.into_iter().collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::{DMatrix, Dataset};
+    use crate::gbm::{Booster, BoosterParams};
+    use crate::Float;
+
+    #[test]
+    fn counts_and_sums_per_feature() {
+        let mut t = RegTree::new_root(0.0, 10.0);
+        let (l, _r) = t.apply_split(0, 3, 0.5, true, 2.0, 0.0, 5.0, 0.0, 5.0);
+        t.apply_split(l, 1, 0.2, true, 1.0, 0.0, 2.0, 0.0, 3.0);
+        let gain = tree_importance(&[t.clone()], ImportanceKind::Gain);
+        assert_eq!(gain[&3], 2.0);
+        assert_eq!(gain[&1], 1.0);
+        let weight = tree_importance(&[t.clone(), t.clone()], ImportanceKind::Weight);
+        assert_eq!(weight[&3], 2.0);
+        let cover = tree_importance(&[t], ImportanceKind::Cover);
+        assert_eq!(cover[&3], 10.0);
+        assert_eq!(cover[&1], 5.0);
+    }
+
+    #[test]
+    fn informative_feature_ranks_first() {
+        // y depends only on feature 2; importance must rank it top
+        let n = 3000;
+        let mut rng = crate::util::Pcg64::new(5);
+        let mut vals = vec![0.0 as Float; n * 5];
+        let mut y = vec![0.0 as Float; n];
+        for r in 0..n {
+            for c in 0..5 {
+                vals[r * 5 + c] = rng.next_f32();
+            }
+            y[r] = f32::from(vals[r * 5 + 2] > 0.5);
+        }
+        let ds = Dataset::new(DMatrix::dense(vals, n, 5), y);
+        let params = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: 5,
+            max_depth: 3,
+            max_bins: 16,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&params, &ds, None).unwrap();
+        for kind in [ImportanceKind::Gain, ImportanceKind::Cover, ImportanceKind::Weight] {
+            let imp = feature_importance(&b, kind);
+            assert_eq!(imp[0].0, 2, "{kind:?}: {imp:?}");
+        }
+    }
+
+    #[test]
+    fn multiclass_aggregates_groups() {
+        let g = generate(&DatasetSpec::covtype_like(1500), 3);
+        let params = BoosterParams {
+            objective: "multi:softmax".into(),
+            num_class: 7,
+            num_rounds: 2,
+            max_depth: 3,
+            max_bins: 16,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&params, &g.train, None).unwrap();
+        let imp = feature_importance(&b, ImportanceKind::Weight);
+        assert!(!imp.is_empty());
+        let total: f64 = imp.iter().map(|(_, v)| v).sum();
+        let splits: usize = b
+            .trees
+            .iter()
+            .flatten()
+            .map(|t| t.n_nodes() - t.n_leaves())
+            .sum();
+        assert_eq!(total as usize, splits);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!("gain".parse::<ImportanceKind>().unwrap(), ImportanceKind::Gain);
+        assert_eq!("frequency".parse::<ImportanceKind>().unwrap(), ImportanceKind::Weight);
+        assert!("x".parse::<ImportanceKind>().is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Evaluation metrics — the numbers Table 2 reports (RMSE for the
+//! regression datasets, accuracy for the classification ones) plus the
+//! standard companions (logloss, AUC, multiclass error, NDCG for the
+//! ranking objective).
+
+use crate::data::Dataset;
+use crate::Float;
+
+/// An evaluation metric over transformed predictions.
+pub trait Metric: Send {
+    fn name(&self) -> &'static str;
+    /// Lower is better? (drives early-stopping direction)
+    fn minimize(&self) -> bool {
+        true
+    }
+    /// `preds` layout matches `Objective::transform` output (length n, or
+    /// n·k for `multi:softprob`).
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64;
+}
+
+/// Look up a metric by name.
+pub fn metric_by_name(name: &str) -> anyhow::Result<Box<dyn Metric>> {
+    Ok(match name {
+        "rmse" => Box::new(Rmse),
+        "mae" => Box::new(Mae),
+        "logloss" => Box::new(LogLoss),
+        "accuracy" | "acc" => Box::new(Accuracy),
+        "error" => Box::new(ErrorRate),
+        "auc" => Box::new(Auc),
+        "merror" => Box::new(MultiError),
+        "ndcg" => Box::new(Ndcg { k: 10 }),
+        other => anyhow::bail!("unknown metric {other:?}"),
+    })
+}
+
+/// Root mean squared error.
+pub struct Rmse;
+impl Metric for Rmse {
+    fn name(&self) -> &'static str {
+        "rmse"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        let se: f64 = ds
+            .y
+            .iter()
+            .zip(preds.iter())
+            .map(|(&y, &p)| ((p - y) as f64).powi(2))
+            .sum();
+        (se / n as f64).sqrt()
+    }
+}
+
+/// Mean absolute error.
+pub struct Mae;
+impl Metric for Mae {
+    fn name(&self) -> &'static str {
+        "mae"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        ds.y.iter()
+            .zip(preds.iter())
+            .map(|(&y, &p)| ((p - y) as f64).abs())
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Binary cross-entropy over probability predictions.
+pub struct LogLoss;
+impl Metric for LogLoss {
+    fn name(&self) -> &'static str {
+        "logloss"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        ds.y.iter()
+            .zip(preds.iter())
+            .map(|(&y, &p)| {
+                let p = (p as f64).clamp(1e-15, 1.0 - 1e-15);
+                -(y as f64 * p.ln() + (1.0 - y as f64) * (1.0 - p).ln())
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Binary accuracy (%) at threshold 0.5 — Table 2's classification metric.
+pub struct Accuracy;
+impl Metric for Accuracy {
+    fn name(&self) -> &'static str {
+        "accuracy"
+    }
+    fn minimize(&self) -> bool {
+        false
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        let correct = ds
+            .y
+            .iter()
+            .zip(preds.iter())
+            .filter(|(&y, &p)| (p >= 0.5) == (y >= 0.5))
+            .count();
+        100.0 * correct as f64 / n as f64
+    }
+}
+
+/// Binary error rate at threshold 0.5.
+pub struct ErrorRate;
+impl Metric for ErrorRate {
+    fn name(&self) -> &'static str {
+        "error"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        100.0 - Accuracy.eval(ds, preds) / 1.0
+    }
+}
+
+/// Area under the ROC curve over probability/margin predictions.
+pub struct Auc;
+impl Metric for Auc {
+    fn name(&self) -> &'static str {
+        "auc"
+    }
+    fn minimize(&self) -> bool {
+        false
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        // rank-sum (Mann–Whitney) formulation with tie handling
+        let mut idx: Vec<usize> = (0..preds.len()).collect();
+        idx.sort_by(|&a, &b| preds[a].partial_cmp(&preds[b]).unwrap());
+        let n = preds.len();
+        let mut ranks = vec![0.0f64; n];
+        let mut i = 0;
+        while i < n {
+            let mut j = i;
+            while j + 1 < n && preds[idx[j + 1]] == preds[idx[i]] {
+                j += 1;
+            }
+            let avg = (i + j) as f64 / 2.0 + 1.0;
+            for k in i..=j {
+                ranks[idx[k]] = avg;
+            }
+            i = j + 1;
+        }
+        let n_pos = ds.y.iter().filter(|&&y| y >= 0.5).count() as f64;
+        let n_neg = n as f64 - n_pos;
+        if n_pos == 0.0 || n_neg == 0.0 {
+            return 0.5;
+        }
+        let rank_sum_pos: f64 = ds
+            .y
+            .iter()
+            .zip(ranks.iter())
+            .filter(|(&y, _)| y >= 0.5)
+            .map(|(_, &r)| r)
+            .sum();
+        (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+    }
+}
+
+/// Multiclass error (%) over argmax class predictions.
+pub struct MultiError;
+impl Metric for MultiError {
+    fn name(&self) -> &'static str {
+        "merror"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        let wrong = ds
+            .y
+            .iter()
+            .zip(preds.iter())
+            .filter(|(&y, &p)| (y as i64) != (p as i64))
+            .count();
+        100.0 * wrong as f64 / n as f64
+    }
+}
+
+/// NDCG@k over query groups (ranking tasks).
+pub struct Ndcg {
+    pub k: usize,
+}
+impl Metric for Ndcg {
+    fn name(&self) -> &'static str {
+        "ndcg"
+    }
+    fn minimize(&self) -> bool {
+        false
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let groups: Vec<usize> = if ds.groups.is_empty() {
+            vec![0, ds.y.len()]
+        } else {
+            ds.groups.clone()
+        };
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for w in groups.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let mut order: Vec<usize> = (lo..hi).collect();
+            order.sort_by(|&a, &b| preds[b].partial_cmp(&preds[a]).unwrap());
+            let dcg: f64 = order
+                .iter()
+                .take(self.k)
+                .enumerate()
+                .map(|(i, &d)| ((1u64 << ds.y[d] as u32) as f64 - 1.0) / ((i + 2) as f64).log2())
+                .sum();
+            let mut ideal: Vec<Float> = ds.y[lo..hi].to_vec();
+            ideal.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let idcg: f64 = ideal
+                .iter()
+                .take(self.k)
+                .enumerate()
+                .map(|(i, &y)| ((1u64 << y as u32) as f64 - 1.0) / ((i + 2) as f64).log2())
+                .sum();
+            if idcg > 0.0 {
+                total += dcg / idcg;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DMatrix, Dataset};
+
+    fn ds(y: Vec<Float>) -> Dataset {
+        let n = y.len();
+        Dataset::new(DMatrix::dense(vec![0.0; n], n, 1), y)
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let d = ds(vec![0.0, 0.0]);
+        assert!((Rmse.eval(&d, &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_known_value() {
+        let d = ds(vec![0.0, 2.0]);
+        assert!((Mae.eval(&d, &[1.0, 0.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts_threshold() {
+        let d = ds(vec![1.0, 0.0, 1.0, 0.0]);
+        let acc = Accuracy.eval(&d, &[0.9, 0.1, 0.4, 0.6]);
+        assert!((acc - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logloss_perfect_and_bad() {
+        let d = ds(vec![1.0, 0.0]);
+        assert!(LogLoss.eval(&d, &[1.0, 0.0]) < 1e-10);
+        assert!(LogLoss.eval(&d, &[0.0, 1.0]) > 10.0);
+    }
+
+    #[test]
+    fn auc_perfect_random_inverted() {
+        let d = ds(vec![1.0, 1.0, 0.0, 0.0]);
+        assert!((Auc.eval(&d, &[0.9, 0.8, 0.2, 0.1]) - 1.0).abs() < 1e-12);
+        assert!((Auc.eval(&d, &[0.1, 0.2, 0.8, 0.9]) - 0.0).abs() < 1e-12);
+        assert!((Auc.eval(&d, &[0.5, 0.5, 0.5, 0.5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_classes() {
+        let d = ds(vec![1.0, 1.0]);
+        assert_eq!(Auc.eval(&d, &[0.3, 0.7]), 0.5);
+    }
+
+    #[test]
+    fn merror_counts_class_mismatches() {
+        let d = ds(vec![0.0, 1.0, 2.0, 2.0]);
+        let e = MultiError.eval(&d, &[0.0, 1.0, 1.0, 2.0]);
+        assert!((e - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_perfect_is_one() {
+        let x = DMatrix::dense(vec![0.0; 4], 4, 1);
+        let d = Dataset::with_groups(x, vec![3.0, 2.0, 1.0, 0.0], vec![0, 4]);
+        let n = Ndcg { k: 10 };
+        assert!((n.eval(&d, &[4.0, 3.0, 2.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!(n.eval(&d, &[1.0, 2.0, 3.0, 4.0]) < 1.0);
+    }
+
+    #[test]
+    fn registry() {
+        for m in ["rmse", "mae", "logloss", "accuracy", "auc", "merror", "ndcg"] {
+            assert!(metric_by_name(m).is_ok(), "{m}");
+        }
+        assert!(metric_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn minimize_direction() {
+        assert!(Rmse.minimize());
+        assert!(!Accuracy.minimize());
+        assert!(!Auc.minimize());
+        assert!(!Ndcg { k: 5 }.minimize());
+    }
+}

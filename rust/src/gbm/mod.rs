@@ -1,0 +1,18 @@
+//! Gradient boosting framework: objectives (paper §2.5), evaluation
+//! metrics, and the boosting driver that ties quantisation, compression,
+//! multi-device tree construction and prediction into the Figure 1
+//! pipeline.
+
+pub mod booster;
+pub mod cv;
+pub mod importance;
+pub mod metric;
+pub mod objective;
+pub mod serialize;
+
+pub use booster::{Booster, BoosterParams, EvalRecord};
+pub use cv::{cross_validate, CvResult};
+pub use importance::{feature_importance, ImportanceKind};
+pub use metric::{metric_by_name, Metric};
+pub use objective::{objective_by_name, Objective};
+pub use serialize::{load_model, load_model_file, save_model, save_model_file};

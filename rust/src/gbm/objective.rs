@@ -1,0 +1,370 @@
+//! Training objectives: first/second-order gradient computation per
+//! boosting iteration (paper §2.5, equations 1–2).
+//!
+//! The paper computes logistic and linear-regression gradients on device
+//! (each thread one instance) and leaves multiclass/ranking on the CPU;
+//! mirroring that, [`Objective::supports_device`] marks which objectives
+//! the AOT-compiled XLA gradient artifact covers
+//! (`python/compile/model.py::{logistic,squared}_gradients`) — the others
+//! always run in Rust.
+
+use crate::data::Dataset;
+use crate::{Float, GradPair};
+
+/// A training objective.
+pub trait Objective: Send {
+    fn name(&self) -> &'static str;
+
+    /// Number of model outputs per instance (1, or `k` for multiclass).
+    fn n_outputs(&self) -> usize {
+        1
+    }
+
+    /// Initial raw margin (base score) per output.
+    fn base_score(&self, train: &Dataset) -> Vec<Float>;
+
+    /// Compute gradient pairs for all instances and outputs.
+    ///
+    /// * `margins` — `n_outputs` vectors of raw predictions, each length n.
+    /// * returns `n_outputs` gradient vectors, each length n.
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>>;
+
+    /// Transform raw margins into the user-facing prediction
+    /// (probability, class index, value...).
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float>;
+
+    /// Whether the on-device (XLA artifact) gradient kernel covers this
+    /// objective (paper §2.5: logistic + linear on device, others CPU).
+    fn supports_device(&self) -> bool {
+        false
+    }
+}
+
+/// Look up an objective by its XGBoost-style name.
+pub fn objective_by_name(name: &str, num_class: usize) -> anyhow::Result<Box<dyn Objective>> {
+    Ok(match name {
+        "reg:squarederror" | "reg:linear" => Box::new(SquaredError),
+        "binary:logistic" => Box::new(Logistic),
+        "multi:softmax" | "multi:softprob" => {
+            anyhow::ensure!(num_class >= 2, "multi:softmax needs num_class >= 2");
+            Box::new(Softmax {
+                k: num_class,
+                prob_output: name == "multi:softprob",
+            })
+        }
+        "rank:pairwise" => Box::new(PairwiseRank::default()),
+        other => anyhow::bail!("unknown objective {other:?}"),
+    })
+}
+
+#[inline]
+pub fn sigmoid(x: Float) -> Float {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `reg:squarederror` — g = ŷ − y, h = 1 (on-device per the paper).
+pub struct SquaredError;
+
+impl Objective for SquaredError {
+    fn name(&self) -> &'static str {
+        "reg:squarederror"
+    }
+
+    fn base_score(&self, train: &Dataset) -> Vec<Float> {
+        let mean = train.y.iter().sum::<Float>() / train.y.len().max(1) as Float;
+        vec![mean]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        vec![ds
+            .y
+            .iter()
+            .zip(margins[0].iter())
+            .map(|(&y, &m)| GradPair::new(m - y, 1.0))
+            .collect()]
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        margins[0].clone()
+    }
+
+    fn supports_device(&self) -> bool {
+        true
+    }
+}
+
+/// `binary:logistic` — equations (1)–(2) of the paper:
+/// g = sigmoid(ŷ) − y, h = sigmoid(ŷ)(1 − sigmoid(ŷ)).
+pub struct Logistic;
+
+impl Objective for Logistic {
+    fn name(&self) -> &'static str {
+        "binary:logistic"
+    }
+
+    fn base_score(&self, train: &Dataset) -> Vec<Float> {
+        // logit of the positive rate, clamped away from the poles
+        let p = (train.y.iter().sum::<Float>() / train.y.len().max(1) as Float)
+            .clamp(1e-6, 1.0 - 1e-6);
+        vec![(p / (1.0 - p)).ln()]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        vec![ds
+            .y
+            .iter()
+            .zip(margins[0].iter())
+            .map(|(&y, &m)| {
+                let p = sigmoid(m);
+                GradPair::new(p - y, (p * (1.0 - p)).max(1e-16))
+            })
+            .collect()]
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        margins[0].iter().map(|&m| sigmoid(m)).collect()
+    }
+
+    fn supports_device(&self) -> bool {
+        true
+    }
+}
+
+/// `multi:softmax` / `multi:softprob` — k one-vs-rest trees per round with
+/// softmax cross-entropy gradients (CPU-side, as in paper §2.5).
+pub struct Softmax {
+    pub k: usize,
+    /// `multi:softprob` returns the flattened probability matrix instead
+    /// of the argmax class.
+    pub prob_output: bool,
+}
+
+impl Softmax {
+    fn probs(&self, margins: &[Vec<Float>], i: usize) -> Vec<Float> {
+        let mut mx = Float::MIN;
+        for c in 0..self.k {
+            mx = mx.max(margins[c][i]);
+        }
+        let mut e: Vec<Float> = (0..self.k).map(|c| (margins[c][i] - mx).exp()).collect();
+        let s: Float = e.iter().sum();
+        for v in e.iter_mut() {
+            *v /= s;
+        }
+        e
+    }
+}
+
+impl Objective for Softmax {
+    fn name(&self) -> &'static str {
+        "multi:softmax"
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.k
+    }
+
+    fn base_score(&self, _train: &Dataset) -> Vec<Float> {
+        vec![0.0; self.k]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        let n = ds.y.len();
+        let mut out = vec![Vec::with_capacity(n); self.k];
+        for i in 0..n {
+            let p = self.probs(margins, i);
+            let label = ds.y[i] as usize;
+            for c in 0..self.k {
+                let pc = p[c];
+                let g = pc - Float::from(label == c) * 1.0;
+                // XGBoost uses h = 2 p (1-p) for softmax
+                let h = (2.0 * pc * (1.0 - pc)).max(1e-16);
+                out[c].push(GradPair::new(g, h));
+            }
+        }
+        out
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        let n = margins[0].len();
+        if self.prob_output {
+            let mut flat = Vec::with_capacity(n * self.k);
+            for i in 0..n {
+                flat.extend(self.probs(margins, i));
+            }
+            flat
+        } else {
+            (0..n)
+                .map(|i| {
+                    let mut best = 0usize;
+                    for c in 1..self.k {
+                        if margins[c][i] > margins[best][i] {
+                            best = c;
+                        }
+                    }
+                    best as Float
+                })
+                .collect()
+        }
+    }
+}
+
+/// `rank:pairwise` — LambdaMART-style pairwise logistic loss within query
+/// groups (CPU-side, as in paper §2.5). For every in-group pair with
+/// `y_i > y_j`, the cross-entropy on the margin difference contributes
+/// `ρ = sigmoid(-(s_i - s_j))`:  g_i −= ρ, g_j += ρ, h += ρ(1−ρ).
+#[derive(Default)]
+pub struct PairwiseRank;
+
+impl Objective for PairwiseRank {
+    fn name(&self) -> &'static str {
+        "rank:pairwise"
+    }
+
+    fn base_score(&self, _train: &Dataset) -> Vec<Float> {
+        vec![0.0]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        let n = ds.y.len();
+        let m = &margins[0];
+        let mut grads = vec![GradPair::new(0.0, 1e-16); n];
+        let groups: Vec<usize> = if ds.groups.is_empty() {
+            vec![0, n]
+        } else {
+            ds.groups.clone()
+        };
+        for w in groups.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            for i in lo..hi {
+                for j in lo..hi {
+                    if ds.y[i] > ds.y[j] {
+                        let rho = sigmoid(-(m[i] - m[j]));
+                        let h = (rho * (1.0 - rho)).max(1e-16);
+                        grads[i].grad -= rho;
+                        grads[i].hess += h;
+                        grads[j].grad += rho;
+                        grads[j].hess += h;
+                    }
+                }
+            }
+        }
+        vec![grads]
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        margins[0].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DMatrix, Dataset};
+
+    fn tiny_ds(y: Vec<Float>) -> Dataset {
+        let n = y.len();
+        Dataset::new(DMatrix::dense(vec![0.0; n], n, 1), y)
+    }
+
+    #[test]
+    fn squared_error_gradients() {
+        let ds = tiny_ds(vec![1.0, 3.0]);
+        let o = SquaredError;
+        let g = o.gradients(&ds, &[vec![2.0, 2.0]]);
+        assert_eq!(g[0][0], GradPair::new(1.0, 1.0));
+        assert_eq!(g[0][1], GradPair::new(-1.0, 1.0));
+        assert_eq!(o.base_score(&ds), vec![2.0]);
+    }
+
+    #[test]
+    fn logistic_gradients_match_equations() {
+        // paper eq (1)-(2)
+        let ds = tiny_ds(vec![1.0, 0.0]);
+        let o = Logistic;
+        let g = o.gradients(&ds, &[vec![0.0, 0.0]]);
+        assert!((g[0][0].grad - (0.5 - 1.0)).abs() < 1e-6);
+        assert!((g[0][0].hess - 0.25).abs() < 1e-6);
+        assert!((g[0][1].grad - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logistic_transform_is_probability() {
+        let o = Logistic;
+        let p = o.transform(&[vec![0.0, 100.0, -100.0]]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p[1] > 0.999);
+        assert!(p[2] < 0.001);
+    }
+
+    #[test]
+    fn softmax_gradients_sum_to_zero() {
+        let ds = tiny_ds(vec![2.0, 0.0]);
+        let o = Softmax {
+            k: 3,
+            prob_output: false,
+        };
+        let margins = vec![vec![0.1, 0.5], vec![0.2, 0.1], vec![0.3, 0.0]];
+        let g = o.gradients(&ds, &margins);
+        for i in 0..2 {
+            let sum: Float = (0..3).map(|c| g[c][i].grad).sum();
+            assert!(sum.abs() < 1e-6, "gradients over classes must sum to 0");
+        }
+        // true class has negative gradient
+        assert!(g[2][0].grad < 0.0);
+        assert!(g[0][1].grad < 0.0);
+    }
+
+    #[test]
+    fn softmax_transform_argmax_and_probs() {
+        let o = Softmax {
+            k: 3,
+            prob_output: false,
+        };
+        let margins = vec![vec![0.1], vec![2.0], vec![0.3]];
+        assert_eq!(o.transform(&margins), vec![1.0]);
+        let op = Softmax {
+            k: 3,
+            prob_output: true,
+        };
+        let p = op.transform(&margins);
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<Float>() - 1.0).abs() < 1e-5);
+        assert!(p[1] > p[0] && p[1] > p[2]);
+    }
+
+    #[test]
+    fn pairwise_rank_pulls_relevant_up() {
+        let x = DMatrix::dense(vec![0.0; 4], 4, 1);
+        let ds = Dataset::with_groups(x, vec![2.0, 0.0, 1.0, 0.0], vec![0, 2, 4]);
+        let o = PairwiseRank;
+        let g = o.gradients(&ds, &[vec![0.0; 4]]);
+        // higher-relevance docs get negative gradient (pushed up)
+        assert!(g[0][0].grad < 0.0);
+        assert!(g[0][1].grad > 0.0);
+        assert!(g[0][2].grad < 0.0);
+        assert!(g[0][3].grad > 0.0);
+        // pairs confined to groups: doc 0 (rel 2) never compared with doc 3
+        // (rel 0 in other group) — total pull magnitudes within groups match
+        assert!((g[0][0].grad + g[0][1].grad).abs() < 1e-6);
+        assert!((g[0][2].grad + g[0][3].grad).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(objective_by_name("binary:logistic", 1).is_ok());
+        assert!(objective_by_name("reg:squarederror", 1).is_ok());
+        assert!(objective_by_name("multi:softmax", 7).is_ok());
+        assert!(objective_by_name("multi:softmax", 1).is_err());
+        assert!(objective_by_name("rank:pairwise", 1).is_ok());
+        assert!(objective_by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn device_support_flags_match_paper() {
+        // §2.5: logistic + linear on device; multiclass + ranking CPU
+        assert!(Logistic.supports_device());
+        assert!(SquaredError.supports_device());
+        assert!(!Softmax { k: 3, prob_output: false }.supports_device());
+        assert!(!PairwiseRank.supports_device());
+    }
+}

@@ -1,0 +1,278 @@
+//! Model persistence: a line-oriented text dump of a trained booster
+//! (analogous to XGBoost's text model format) and its loader, so trained
+//! models survive process restarts and can be served by a separate
+//! process.
+//!
+//! Format (`xgb-tpu-model v1`):
+//!
+//! ```text
+//! xgb-tpu-model v1
+//! objective = binary:logistic
+//! num_class = 1
+//! eta = 0.3
+//! base_score = 0.5 [0.5 ...]
+//! groups = <k>
+//! group 0 trees = <t>
+//! tree 0 0 nodes = <n>
+//! <nid> split <feature> <threshold> <left> <right> <default L|R> <gain> <cover>
+//! <nid> leaf <value> <cover>
+//! ...
+//! ```
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::gbm::{Booster, BoosterParams};
+use crate::tree::regtree::{Node, NO_CHILD};
+use crate::tree::RegTree;
+use crate::Float;
+
+/// Serialise a booster to the v1 text format.
+pub fn save_model(booster: &Booster, mut w: impl Write) -> Result<()> {
+    writeln!(w, "xgb-tpu-model v1")?;
+    writeln!(w, "objective = {}", booster.params.objective)?;
+    writeln!(w, "num_class = {}", booster.params.num_class)?;
+    writeln!(w, "eta = {}", booster.params.eta)?;
+    let base: Vec<String> = booster.base_score.iter().map(|b| format!("{b}")).collect();
+    writeln!(w, "base_score = {}", base.join(" "))?;
+    writeln!(w, "groups = {}", booster.trees.len())?;
+    for (g, group) in booster.trees.iter().enumerate() {
+        writeln!(w, "group {g} trees = {}", group.len())?;
+        for (t, tree) in group.iter().enumerate() {
+            writeln!(w, "tree {g} {t} nodes = {}", tree.n_nodes())?;
+            for (nid, n) in tree.nodes.iter().enumerate() {
+                if n.is_leaf() {
+                    writeln!(w, "{nid} leaf {} {}", n.leaf_value, n.cover)?;
+                } else {
+                    writeln!(
+                        w,
+                        "{nid} split {} {} {} {} {} {} {}",
+                        n.feature,
+                        n.threshold,
+                        n.left,
+                        n.right,
+                        if n.default_left { "L" } else { "R" },
+                        n.gain,
+                        n.cover
+                    )?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Save to a file path.
+pub fn save_model_file(booster: &Booster, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    save_model(booster, std::io::BufWriter::new(f))
+}
+
+/// Load a booster from the v1 text format.
+pub fn load_model(r: impl Read) -> Result<Booster> {
+    let mut lines = BufReader::new(r).lines();
+    let mut next = || -> Result<String> {
+        loop {
+            match lines.next() {
+                None => bail!("unexpected end of model file"),
+                Some(l) => {
+                    let l = l?;
+                    if !l.trim().is_empty() {
+                        return Ok(l);
+                    }
+                }
+            }
+        }
+    };
+
+    let header = next()?;
+    ensure!(header.trim() == "xgb-tpu-model v1", "bad header {header:?}");
+    let kv = |line: &str, key: &str| -> Result<String> {
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("expected `{key} = ...`, got {line:?}"))?;
+        ensure!(k.trim() == key, "expected key {key}, got {k:?}");
+        Ok(v.trim().to_string())
+    };
+
+    let objective = kv(&next()?, "objective")?;
+    let num_class: usize = kv(&next()?, "num_class")?.parse()?;
+    let eta: f64 = kv(&next()?, "eta")?.parse()?;
+    let base_score: Vec<Float> = kv(&next()?, "base_score")?
+        .split_whitespace()
+        .map(|t| t.parse::<Float>().context("base_score"))
+        .collect::<Result<_>>()?;
+    let n_groups: usize = kv(&next()?, "groups")?.parse()?;
+
+    let mut trees: Vec<Vec<RegTree>> = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let head = next()?;
+        let expected = format!("group {g} trees");
+        let n_trees: usize = kv(&head, &expected)?.parse()?;
+        let mut group = Vec::with_capacity(n_trees);
+        for t in 0..n_trees {
+            let head = next()?;
+            let expected = format!("tree {g} {t} nodes");
+            let n_nodes: usize = kv(&head, &expected)?.parse()?;
+            ensure!(n_nodes >= 1, "empty tree");
+            let mut nodes = Vec::with_capacity(n_nodes);
+            for want_nid in 0..n_nodes {
+                let line = next()?;
+                let toks: Vec<&str> = line.split_whitespace().collect();
+                ensure!(toks.len() >= 2, "bad node line {line:?}");
+                let nid: usize = toks[0].parse()?;
+                ensure!(nid == want_nid, "node ids must be dense, got {nid}");
+                match toks[1] {
+                    "leaf" => {
+                        ensure!(toks.len() == 4, "bad leaf line {line:?}");
+                        let mut n = Node::leaf(toks[2].parse()?, toks[3].parse()?);
+                        n.left = NO_CHILD;
+                        nodes.push(n);
+                    }
+                    "split" => {
+                        ensure!(toks.len() == 9, "bad split line {line:?}");
+                        nodes.push(Node {
+                            feature: toks[2].parse()?,
+                            threshold: toks[3].parse()?,
+                            left: toks[4].parse()?,
+                            right: toks[5].parse()?,
+                            default_left: match toks[6] {
+                                "L" => true,
+                                "R" => false,
+                                other => bail!("bad default {other:?}"),
+                            },
+                            leaf_value: 0.0,
+                            gain: toks[7].parse()?,
+                            cover: toks[8].parse()?,
+                        });
+                    }
+                    other => bail!("unknown node kind {other:?}"),
+                }
+            }
+            // structural validation: children in range, no cycles by
+            // construction (children ids > parent is not guaranteed by the
+            // format, so check reachability instead)
+            let tree = RegTree { nodes };
+            validate_tree(&tree)?;
+            group.push(tree);
+        }
+        trees.push(group);
+    }
+
+    let params = BoosterParams {
+        objective,
+        num_class,
+        eta,
+        num_rounds: trees.first().map(|t| t.len()).unwrap_or(0),
+        ..Default::default()
+    };
+    Booster::from_parts(params, base_score, trees, 0.0)
+}
+
+/// Load from a file path.
+pub fn load_model_file(path: impl AsRef<Path>) -> Result<Booster> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    load_model(f)
+}
+
+fn validate_tree(tree: &RegTree) -> Result<()> {
+    let n = tree.n_nodes();
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    while let Some(nid) = stack.pop() {
+        ensure!(nid < n, "child id {nid} out of range");
+        ensure!(!seen[nid], "node {nid} reachable twice (cycle or DAG)");
+        seen[nid] = true;
+        let node = &tree.nodes[nid];
+        if !node.is_leaf() {
+            ensure!(node.right != NO_CHILD, "half-split node {nid}");
+            stack.push(node.left as usize);
+            stack.push(node.right as usize);
+        }
+    }
+    ensure!(seen.iter().all(|&s| s), "unreachable nodes in tree");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+
+    fn trained(objective: &str, num_class: usize) -> (Booster, crate::data::Dataset) {
+        let spec = if num_class > 1 {
+            DatasetSpec::covtype_like(1500)
+        } else {
+            DatasetSpec::higgs_like(1500)
+        };
+        let g = generate(&spec, 51);
+        let params = BoosterParams {
+            objective: objective.into(),
+            num_class,
+            num_rounds: 4,
+            max_depth: 4,
+            max_bins: 16,
+            eval_every: 0,
+            ..Default::default()
+        };
+        (Booster::train(&params, &g.train, None).unwrap(), g.valid)
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let (b, valid) = trained("binary:logistic", 1);
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.trees, b.trees);
+        assert_eq!(loaded.base_score, b.base_score);
+        assert_eq!(loaded.predict(&valid.x), b.predict(&valid.x));
+    }
+
+    #[test]
+    fn roundtrip_multiclass() {
+        let (b, valid) = trained("multi:softmax", 7);
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.trees.len(), 7);
+        assert_eq!(loaded.predict(&valid.x), b.predict(&valid.x));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (b, _) = trained("reg:squarederror", 1);
+        let path = std::env::temp_dir().join("xgb_tpu_model_test.txt");
+        save_model_file(&b, &path).unwrap();
+        let loaded = load_model_file(&path).unwrap();
+        assert_eq!(loaded.trees, b.trees);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_models() {
+        assert!(load_model("not a model".as_bytes()).is_err());
+        // cycle: node 0 points at itself
+        let bad = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                   eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                   tree 0 0 nodes = 1\n0 split 0 1.0 0 0 L 0 1\n";
+        assert!(load_model(bad.as_bytes()).is_err());
+        // out-of-range child
+        let bad2 = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                    eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                    tree 0 0 nodes = 1\n0 split 0 1.0 5 6 L 0 1\n";
+        assert!(load_model(bad2.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn unreachable_node_rejected() {
+        let bad = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                   eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                   tree 0 0 nodes = 2\n0 leaf 0.5 1\n1 leaf 0.2 1\n";
+        assert!(load_model(bad.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! Gradient histogram construction — the compute hot-spot of the paper
+//! (§2.3: "the tree construction problem [reduces] largely to one gradient
+//! summation into histograms").
+//!
+//! A node's histogram is a flat array over the **global bins** of
+//! [`crate::quantile::HistogramCuts`]: entry `b` holds the (f64-accumulated)
+//! sum of gradient pairs of the node's rows whose feature value falls in
+//! bin `b`. Builders exist for both the uncompressed
+//! [`QuantizedMatrix`](crate::quantile::QuantizedMatrix) and the bit-packed
+//! [`CompressedMatrix`](crate::compress::CompressedMatrix) (§2.2) — the
+//! parity between the two is an integration test and the cost difference is
+//! an ablation bench.
+//!
+//! The **subtraction trick** (`sibling = parent − built_child`) halves the
+//! histogram work per level: only the smaller child of each split is built
+//! from rows; see [`Histogram::subtract_from`].
+//!
+//! On real hardware this phase is the paper's GPU kernel with shared-memory
+//! atomics; the Pallas L1 kernel re-expresses it as a one-hot matmul (see
+//! `python/compile/kernels/histogram.py` and DESIGN.md §1). The Rust
+//! builder here is the per-device reference implementation and the CPU
+//! baseline.
+
+use crate::compress::CompressedMatrix;
+use crate::quantile::QuantizedMatrix;
+use crate::GradPair;
+
+/// Double-precision gradient pair used for histogram accumulation
+/// (XGBoost's `GradientPairPrecise`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GradPairF64 {
+    pub grad: f64,
+    pub hess: f64,
+}
+
+impl GradPairF64 {
+    #[inline]
+    pub fn new(grad: f64, hess: f64) -> Self {
+        Self { grad, hess }
+    }
+
+    #[inline]
+    pub fn from_single(g: GradPair) -> Self {
+        Self {
+            grad: g.grad as f64,
+            hess: g.hess as f64,
+        }
+    }
+}
+
+impl std::ops::Add for GradPairF64 {
+    type Output = GradPairF64;
+    #[inline]
+    fn add(self, r: GradPairF64) -> GradPairF64 {
+        GradPairF64::new(self.grad + r.grad, self.hess + r.hess)
+    }
+}
+
+impl std::ops::AddAssign for GradPairF64 {
+    #[inline]
+    fn add_assign(&mut self, r: GradPairF64) {
+        self.grad += r.grad;
+        self.hess += r.hess;
+    }
+}
+
+impl std::ops::Sub for GradPairF64 {
+    type Output = GradPairF64;
+    #[inline]
+    fn sub(self, r: GradPairF64) -> GradPairF64 {
+        GradPairF64::new(self.grad - r.grad, self.hess - r.hess)
+    }
+}
+
+/// A per-node gradient histogram over all global bins.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    pub bins: Vec<GradPairF64>,
+}
+
+impl Histogram {
+    pub fn zeros(n_bins: usize) -> Self {
+        Histogram {
+            bins: vec![GradPairF64::default(); n_bins],
+        }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Total gradient sum over one feature's bin range.
+    pub fn feature_sum(&self, lo: usize, hi: usize) -> GradPairF64 {
+        let mut s = GradPairF64::default();
+        for b in &self.bins[lo..hi] {
+            s += *b;
+        }
+        s
+    }
+
+    /// `self = other − self` — the subtraction trick, computing this
+    /// (larger) sibling from the parent's histogram and the built smaller
+    /// child currently stored in `self`... inverted: callers hold
+    /// `parent` and `small_child`; see [`subtract`] for the free function.
+    pub fn subtract_from(&mut self, parent: &Histogram) {
+        assert_eq!(self.bins.len(), parent.bins.len());
+        for (s, p) in self.bins.iter_mut().zip(parent.bins.iter()) {
+            *s = *p - *s;
+        }
+    }
+
+    /// Elementwise add (all-reduce combiner).
+    pub fn add(&mut self, other: &Histogram) {
+        assert_eq!(self.bins.len(), other.bins.len());
+        for (s, o) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *s += *o;
+        }
+    }
+
+    /// Flatten to `[g0, h0, g1, h1, ...]` (wire format for the all-reduce
+    /// and the XLA artifact boundary).
+    pub fn to_flat(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.bins.len() * 2);
+        for b in &self.bins {
+            out.push(b.grad);
+            out.push(b.hess);
+        }
+        out
+    }
+
+    pub fn from_flat(flat: &[f64]) -> Self {
+        assert_eq!(flat.len() % 2, 0);
+        Histogram {
+            bins: flat
+                .chunks_exact(2)
+                .map(|c| GradPairF64::new(c[0], c[1]))
+                .collect(),
+        }
+    }
+}
+
+/// `parent − child`, allocating.
+pub fn subtract(parent: &Histogram, child: &Histogram) -> Histogram {
+    let mut out = child.clone();
+    out.subtract_from(parent);
+    out
+}
+
+/// Histogram builder over the uncompressed quantised matrix.
+///
+/// `rows` selects the node's instances (the row partitioner's segment).
+pub fn build_histogram_quantized(
+    qm: &QuantizedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+) {
+    assert_eq!(out.n_bins(), qm.n_bins);
+    let null = qm.null_symbol();
+    let stride = qm.row_stride;
+    let bins = &mut out.bins[..];
+    for &r in rows {
+        let r = r as usize;
+        let g = GradPairF64::from_single(gradients[r]);
+        let row = &qm.bins[r * stride..(r + 1) * stride];
+        for &b in row {
+            // `b < null == n_bins` is the validity test AND the bounds
+            // proof (quantizer guarantees symbols <= null).
+            if b < null {
+                // Safety: b < n_bins == bins.len(), checked above.
+                unsafe { *bins.get_unchecked_mut(b as usize) += g };
+            }
+        }
+    }
+}
+
+/// Histogram builder over the bit-packed compressed matrix — the paper's
+/// §2.2 "values are packed and unpacked at runtime using bitwise
+/// operations" path. Unpacks inline; no scratch decode buffer.
+pub fn build_histogram_compressed(
+    cm: &CompressedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+) {
+    assert_eq!(out.n_bins(), cm.n_bins);
+    let null = cm.null_symbol();
+    let bins = &mut out.bins[..];
+    let n_bins = bins.len() as u32;
+    for &r in rows {
+        let r = r as usize;
+        let g = GradPairF64::from_single(gradients[r]);
+        cm.for_each_symbol_in_row(r, |b| {
+            // the packed mask can exceed n_bins, so `b < n_bins` (== null)
+            // is both the null/padding filter and the bounds proof
+            debug_assert!(b <= null);
+            if b < n_bins {
+                // Safety: b < bins.len(), checked above.
+                unsafe { *bins.get_unchecked_mut(b as usize) += g };
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressedMatrix;
+    use crate::data::DMatrix;
+    use crate::quantile::{HistogramCuts, Quantizer};
+    use crate::util::Pcg64;
+    use crate::Float;
+
+    fn fixture(n: usize, d: usize, seed: u64) -> (QuantizedMatrix, Vec<GradPair>) {
+        let mut rng = Pcg64::new(seed);
+        let vals: Vec<Float> = (0..n * d)
+            .map(|_| {
+                if rng.next_f64() < 0.15 {
+                    Float::NAN
+                } else {
+                    rng.next_f32() * 10.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, d);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts).quantize(&x);
+        let grads: Vec<GradPair> = (0..n)
+            .map(|_| GradPair::new(rng.next_f32() * 2.0 - 1.0, rng.next_f32() + 0.1))
+            .collect();
+        (qm, grads)
+    }
+
+    #[test]
+    fn histogram_sums_match_per_row_totals() {
+        let (qm, grads) = fixture(200, 4, 1);
+        let rows: Vec<u32> = (0..200).collect();
+        let mut h = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut h);
+        // every feature's bin-sum equals the gradient total over rows where
+        // that feature is present
+        let cuts_total: f64 = h.bins.iter().map(|b| b.grad).sum();
+        let mut expect = 0.0f64;
+        for r in 0..200usize {
+            let present = qm.row(r).iter().filter(|&&b| b != qm.null_symbol()).count();
+            expect += grads[r].grad as f64 * present as f64;
+        }
+        assert!((cuts_total - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compressed_matches_quantized() {
+        let (qm, grads) = fixture(300, 6, 2);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let rows: Vec<u32> = (0..300).step_by(3).collect();
+        let mut hq = Histogram::zeros(qm.n_bins);
+        let mut hc = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hq);
+        build_histogram_compressed(&cm, &grads, &rows, &mut hc);
+        assert_eq!(hq, hc);
+    }
+
+    #[test]
+    fn subtraction_trick_is_exact() {
+        let (qm, grads) = fixture(400, 5, 3);
+        let all: Vec<u32> = (0..400).collect();
+        let (left, right): (Vec<u32>, Vec<u32>) = all.iter().partition(|&&r| r % 3 == 0);
+        let mut parent = Histogram::zeros(qm.n_bins);
+        let mut hl = Histogram::zeros(qm.n_bins);
+        let mut hr = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &all, &mut parent);
+        build_histogram_quantized(&qm, &grads, &left, &mut hl);
+        build_histogram_quantized(&qm, &grads, &right, &mut hr);
+        let derived_right = subtract(&parent, &hl);
+        for (a, b) in derived_right.bins.iter().zip(hr.bins.iter()) {
+            assert!((a.grad - b.grad).abs() < 1e-9);
+            assert!((a.hess - b.hess).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_rows_empty_histogram() {
+        let (qm, grads) = fixture(50, 3, 4);
+        let mut h = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &[], &mut h);
+        assert!(h.bins.iter().all(|b| b.grad == 0.0 && b.hess == 0.0));
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let (qm, grads) = fixture(100, 3, 5);
+        let rows: Vec<u32> = (0..100).collect();
+        let mut h = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut h);
+        let flat = h.to_flat();
+        assert_eq!(flat.len(), qm.n_bins * 2);
+        assert_eq!(Histogram::from_flat(&flat), h);
+    }
+
+    #[test]
+    fn add_is_union() {
+        let (qm, grads) = fixture(120, 4, 6);
+        let a_rows: Vec<u32> = (0..60).collect();
+        let b_rows: Vec<u32> = (60..120).collect();
+        let all: Vec<u32> = (0..120).collect();
+        let mut ha = Histogram::zeros(qm.n_bins);
+        let mut hb = Histogram::zeros(qm.n_bins);
+        let mut hall = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &a_rows, &mut ha);
+        build_histogram_quantized(&qm, &grads, &b_rows, &mut hb);
+        build_histogram_quantized(&qm, &grads, &all, &mut hall);
+        ha.add(&hb);
+        for (x, y) in ha.bins.iter().zip(hall.bins.iter()) {
+            assert!((x.grad - y.grad).abs() < 1e-9);
+            assert!((x.hess - y.hess).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn feature_sum_hessian_counts_present_rows() {
+        let (qm, grads) = fixture(80, 2, 7);
+        let rows: Vec<u32> = (0..80).collect();
+        let mut h = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut h);
+        // feature 0 occupies bins 0..k; its hessian sum == sum of hessians
+        // of rows where feature 0 is present
+        let k = qm.n_bins; // need cuts; recompute from layout: slot 0 = feature 0
+        let _ = k;
+        let mut expect = 0.0f64;
+        for r in 0..80usize {
+            if qm.get(r, 0).is_some() {
+                expect += grads[r].hess as f64;
+            }
+        }
+        // feature 0 bins are those observed in slot 0
+        let mut f0_bins: Vec<u32> = (0..80).filter_map(|r| qm.get(r, 0)).collect();
+        f0_bins.sort_unstable();
+        f0_bins.dedup();
+        let got: f64 = f0_bins.iter().map(|&b| h.bins[b as usize].hess).sum();
+        assert!((got - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,94 @@
+//! # xgb-tpu — XGBoost: Scalable GPU Accelerated Learning, re-built for a
+//! Rust + JAX + Pallas three-layer stack.
+//!
+//! This crate is a from-scratch reproduction of the system described in
+//! *"XGBoost: Scalable GPU Accelerated Learning"* (Mitchell, Adinets, Rao,
+//! Frank; 2018): an end-to-end accelerator-resident gradient boosting
+//! pipeline — feature quantile generation, data compression, multi-device
+//! histogram-based decision tree construction (Algorithm 1 of the paper),
+//! prediction and gradient evaluation.
+//!
+//! ## Architecture
+//!
+//! * **Layer 3 (this crate)** — the coordinator: quantile sketch,
+//!   bit-packed compressed matrix, the multi-device tree builder with ring
+//!   all-reduce, growth policies, objectives, metrics, boosting loop, CLI.
+//! * **Layer 2 (JAX, build time)** — gradient / prediction / histogram
+//!   array programs, lowered once to HLO text in `artifacts/`.
+//! * **Layer 1 (Pallas, build time)** — the histogram hot-spot kernel
+//!   (one-hot matmul formulation; see `DESIGN.md` §Hardware-Adaptation).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the training hot path never touches Python.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use xgb_tpu::data::synthetic::{self, DatasetSpec};
+//! use xgb_tpu::gbm::{Booster, BoosterParams};
+//!
+//! let ds = synthetic::generate(&DatasetSpec::higgs_like(10_000), 42);
+//! let mut params = BoosterParams::default();
+//! params.objective = "binary:logistic".into();
+//! params.num_rounds = 20;
+//! let booster = Booster::train(&params, &ds.train, Some(&ds.valid)).unwrap();
+//! let preds = booster.predict(&ds.valid.x);
+//! # let _ = preds;
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod comm;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod gbm;
+pub mod hist;
+pub mod predict;
+pub mod quantile;
+pub mod runtime;
+pub mod tree;
+pub mod util;
+
+/// Scalar type used for feature values and raw gradients.
+pub type Float = f32;
+
+/// A first/second-order gradient pair (paper §2.5). Stored single-precision;
+/// histogram accumulation is double-precision (`hist::GradPairF64`), matching
+/// XGBoost's `GradientPair` / `GradientPairPrecise` split.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GradPair {
+    pub grad: Float,
+    pub hess: Float,
+}
+
+impl GradPair {
+    #[inline]
+    pub fn new(grad: Float, hess: Float) -> Self {
+        Self { grad, hess }
+    }
+}
+
+impl std::ops::Add for GradPair {
+    type Output = GradPair;
+    #[inline]
+    fn add(self, rhs: GradPair) -> GradPair {
+        GradPair::new(self.grad + rhs.grad, self.hess + rhs.hess)
+    }
+}
+
+impl std::ops::AddAssign for GradPair {
+    #[inline]
+    fn add_assign(&mut self, rhs: GradPair) {
+        self.grad += rhs.grad;
+        self.hess += rhs.hess;
+    }
+}
+
+impl std::ops::Sub for GradPair {
+    type Output = GradPair;
+    #[inline]
+    fn sub(self, rhs: GradPair) -> GradPair {
+        GradPair::new(self.grad - rhs.grad, self.hess - rhs.hess)
+    }
+}

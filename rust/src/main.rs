@@ -1,0 +1,315 @@
+//! `xgb-tpu` — command-line launcher for the multi-device gradient
+//! boosting system (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `train`     — train on a synthetic Table-1 dataset or a CSV/LibSVM
+//!                 file; all XGBoost-style parameters available as flags.
+//! * `datasets`  — print the Table 1 dataset registry.
+//! * `info`      — show AOT artifact manifest + PJRT platform.
+//! * `help`      — this text.
+//!
+//! Examples:
+//!
+//! ```text
+//! xgb-tpu train --dataset higgs --rows 100000 --num-rounds 50 \
+//!     --n-devices 8 --grow-policy depthwise --compress true
+//! xgb-tpu train --csv data.csv --label-col 0 --objective reg:squarederror
+//! xgb-tpu train --dataset higgs --rows 20000 --backend xla
+//! ```
+
+use anyhow::{bail, Context, Result};
+use xgb_tpu::bench::Table;
+use xgb_tpu::coordinator::NativeBackend;
+use xgb_tpu::data::synthetic::{self, DatasetSpec};
+use xgb_tpu::data::{load_csv, load_libsvm, Dataset};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::runtime::{Artifacts, XlaHistBackend};
+use xgb_tpu::util::{ArgParser, Config};
+
+fn main() {
+    let args = ArgParser::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "train" => run_train(&args),
+        "predict" => run_predict(&args),
+        "datasets" => run_datasets(),
+        "info" => run_info(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "xgb-tpu — multi-device gradient boosting (XGBoost GPU paper reproduction)\n\n\
+         USAGE: xgb-tpu <train|datasets|info> [--flag value ...]\n\n\
+         train flags:\n\
+           --dataset <name>       synthetic dataset (see `xgb-tpu datasets`)\n\
+           --rows <n>             synthetic row count (default 20000)\n\
+           --csv <path>           train from CSV (--label-col, --header)\n\
+           --libsvm <path>        train from LibSVM file\n\
+           --config <path>        key=value parameter file\n\
+           --objective <name>     reg:squarederror|binary:logistic|multi:softmax|rank:pairwise\n\
+           --num-rounds <n>       boosting rounds (default 50)\n\
+           --eta, --max-depth, --max-leaves, --max-bins, --lambda, --gamma,\n\
+           --alpha, --min-child-weight, --num-class, --eval-metric,\n\
+           --grow-policy depthwise|lossguide, --early-stopping-rounds\n\
+           --n-devices <p>        simulated devices (default 1)\n\
+           --compress <bool>      bit-packed shards (default true)\n\
+           --allreduce ring|serial\n\
+           --backend native|xla   histogram execution engine\n\
+           --valid-frac <f>       holdout fraction when training from files\n\
+           --subsample <f>        row sampling rate per tree\n\
+           --colsample-bytree <f> feature sampling rate per tree\n\
+           --monotone-constraints \"1,0,-1\"  per-feature monotonicity\n\
+           --model-out <path>     save the trained model (text format)\n\
+           --importance [gain|cover|weight]  print feature importance\n\
+           --seed <n>\n\n\
+         predict flags:\n\
+           --model <path>         model saved by train --model-out\n\
+           --csv/--libsvm <path>  rows to score (--label-col ignored labels ok)\n\
+           --out <path>           write one prediction per line (default stdout)\n\
+           --backend native|xla   prediction engine (§2.4)\n"
+    );
+}
+
+fn run_predict(args: &ArgParser) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let booster = xgb_tpu::gbm::load_model_file(model_path)?;
+    let ds = if let Some(path) = args.get("csv") {
+        load_csv(path, args.get_parse("label-col", 0usize), args.flag("header"))?
+    } else if let Some(path) = args.get("libsvm") {
+        load_libsvm(path)?
+    } else {
+        bail!("predict needs --csv or --libsvm");
+    };
+    let backend = args.get_str("backend", "native");
+    let preds: Vec<f32> = match backend.as_str() {
+        "native" => booster.predict(&ds.x),
+        "xla" => {
+            // margins through the AOT predict artifact, then transform
+            let artifacts = std::sync::Arc::new(Artifacts::discover()?);
+            let predictor = xgb_tpu::runtime::XlaPredictor::new(artifacts);
+            anyhow::ensure!(
+                booster.trees.len() == 1,
+                "xla predict path supports single-output models"
+            );
+            let margins =
+                predictor.predict_margins(&booster.trees[0], booster.base_score[0], &ds.x)?;
+            if booster.params.objective == "binary:logistic" {
+                margins.iter().map(|&m| 1.0 / (1.0 + (-m).exp())).collect()
+            } else {
+                margins
+            }
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            let mut out = String::with_capacity(preds.len() * 12);
+            for p in &preds {
+                out.push_str(&format!("{p}\n"));
+            }
+            std::fs::write(path, out)?;
+            eprintln!("wrote {} predictions to {path}", preds.len());
+        }
+        None => {
+            for p in &preds {
+                println!("{p}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn booster_params_from_args(args: &ArgParser) -> Result<BoosterParams> {
+    // config file first, CLI overrides
+    let mut cfg = Config::new();
+    if let Some(path) = args.get("config") {
+        cfg = Config::from_file(path)?;
+    }
+    for (k, v) in args.iter() {
+        // CLI flags use dashes; config keys use underscores
+        cfg.set(k.replace('-', "_"), v);
+    }
+    let mut p = BoosterParams::from_config(&cfg)?;
+    p.verbose = true;
+    Ok(p)
+}
+
+fn load_dataset(args: &ArgParser) -> Result<(Dataset, Option<Dataset>, Option<DatasetSpec>)> {
+    let valid_frac: f64 = args.get_parse("valid-frac", 0.2);
+    let seed: u64 = args.get_parse("seed", 42u64);
+    if let Some(name) = args.get("dataset") {
+        let rows: usize = args.get_parse("rows", 20_000usize);
+        let spec = DatasetSpec::by_name(name, rows)
+            .with_context(|| format!("unknown dataset {name:?}; see `xgb-tpu datasets`"))?;
+        let g = synthetic::generate(&spec, seed);
+        return Ok((g.train, Some(g.valid), Some(spec)));
+    }
+    if let Some(path) = args.get("csv") {
+        let ds = load_csv(
+            path,
+            args.get_parse("label-col", 0usize),
+            args.flag("header"),
+        )?;
+        let (train, valid) = ds.split(valid_frac, seed);
+        return Ok((train, Some(valid), None));
+    }
+    if let Some(path) = args.get("libsvm") {
+        let ds = load_libsvm(path)?;
+        let (train, valid) = ds.split(valid_frac, seed);
+        return Ok((train, Some(valid), None));
+    }
+    bail!("no input: pass --dataset, --csv or --libsvm")
+}
+
+fn run_train(args: &ArgParser) -> Result<()> {
+    let (train, valid, spec) = load_dataset(args)?;
+    let mut params = booster_params_from_args(args)?;
+    if let Some(spec) = &spec {
+        // dataset-aware defaults unless the user overrode them
+        if !args.has("objective") {
+            params.objective = spec.task.objective().into();
+        }
+        if !args.has("num-class") {
+            params.num_class = spec.task.num_class();
+        }
+        if !args.has("eval-metric") {
+            params.eval_metric = spec.task.metric().into();
+        }
+    }
+    eprintln!(
+        "training: {} rows x {} cols, objective={}, devices={}, policy={}, compress={}",
+        train.n_rows(),
+        train.n_cols(),
+        params.objective,
+        params.n_devices,
+        params.grow_policy,
+        params.compress
+    );
+
+    let backend = args.get_str("backend", "native");
+    let booster = match backend.as_str() {
+        "native" => Booster::train(&params, &train, valid.as_ref())?,
+        "xla" => {
+            let artifacts = std::sync::Arc::new(Artifacts::discover()?);
+            eprintln!("xla backend on platform {}", artifacts.platform());
+            Booster::train_with_backend(
+                &params,
+                &train,
+                valid.as_ref(),
+                Box::new(XlaHistBackend::new(artifacts)),
+            )?
+        }
+        other => bail!("unknown backend {other:?} (native|xla)"),
+    };
+    let _ = NativeBackend; // referenced for doc visibility
+
+    let last = booster
+        .eval_history
+        .last()
+        .context("no evaluation recorded")?;
+    println!(
+        "trained {} rounds in {:.2}s (simulated {:.3}s on {} devices)",
+        booster.n_rounds(),
+        booster.train_secs,
+        booster.simulated_secs,
+        params.n_devices
+    );
+    println!(
+        "final: train-{m}={:.5}{}",
+        last.train,
+        last.valid
+            .map(|v| format!(" valid-{m}={v:.5}", m = last.metric))
+            .unwrap_or_default(),
+        m = last.metric,
+    );
+    let s = &booster.build_stats;
+    println!(
+        "phases: hist={:.3}s partition={:.3}s split={:.3}s allreduce(host)={:.3}s \
+         allreduce(simulated)={:.4}s comm={:.1} MB/device, {} hist rounds",
+        s.hist_secs.iter().sum::<f64>(),
+        s.partition_secs.iter().sum::<f64>(),
+        s.split_secs,
+        s.allreduce_host_secs,
+        s.allreduce_sim_secs,
+        s.comm_bytes_per_device as f64 / 1e6,
+        s.hist_rounds
+    );
+
+    // optional: persist the model
+    if let Some(path) = args.get("model-out") {
+        xgb_tpu::gbm::save_model_file(&booster, path)?;
+        println!("model saved to {path}");
+    }
+    // optional: feature importance report
+    if args.has("importance") {
+        let kind: xgb_tpu::gbm::ImportanceKind = args
+            .get_str("importance", "gain")
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+        println!("feature importance ({:?}):", kind);
+        for (f, v) in xgb_tpu::gbm::feature_importance(&booster, kind).iter().take(15) {
+            println!("  f{f:<6} {v:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn run_datasets() -> Result<()> {
+    let mut t = Table::new(&["Name", "Paper rows", "Columns", "Task", "CLI name"]);
+    for (spec, cli) in [
+        (DatasetSpec::year_prediction_like(515_000), "yearprediction"),
+        (DatasetSpec::synthetic_like(10_000_000), "synthetic"),
+        (DatasetSpec::higgs_like(11_000_000), "higgs"),
+        (DatasetSpec::covtype_like(581_000), "covtype"),
+        (DatasetSpec::bosch_like(1_000_000), "bosch"),
+        (DatasetSpec::airline_like(115_000_000), "airline"),
+        (DatasetSpec::ranking_like(100_000), "ranking"),
+    ] {
+        t.add_row(vec![
+            spec.name.to_string(),
+            format!("{}", spec.rows),
+            format!("{}", spec.cols),
+            format!("{:?}", spec.task),
+            cli.to_string(),
+        ]);
+    }
+    println!("Table 1 registry (synthetic stand-ins; see DESIGN.md §2):\n");
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn run_info(args: &ArgParser) -> Result<()> {
+    let dir = xgb_tpu::runtime::find_artifact_dir(args.get("artifacts"))
+        .context("artifacts not found; run `make artifacts`")?;
+    println!("artifact dir: {}", dir.display());
+    let artifacts = Artifacts::load(&dir)?;
+    println!("PJRT platform: {}", artifacts.platform());
+    let m = &artifacts.manifest;
+    println!(
+        "tiles: grad={} hist={}x{}x{} predict={}x{} trees={} nodes={}",
+        m.grad_tile,
+        m.hist_rows,
+        m.hist_slots,
+        m.hist_bins,
+        m.predict_rows,
+        m.predict_features,
+        m.predict_trees,
+        m.predict_nodes
+    );
+    Ok(())
+}

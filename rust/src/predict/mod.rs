@@ -1,0 +1,98 @@
+//! Native tree-ensemble prediction (paper §2.4).
+//!
+//! The paper maps prediction to the device with one thread per instance,
+//! iterating trees sequentially; the AOT-compiled analogue lives in
+//! `python/compile/model.py::predict_ensemble` and is driven by
+//! [`crate::runtime::XlaPredictor`]. This module is the Rust reference
+//! implementation used by the CPU baselines, by incremental validation
+//! scoring inside the booster, and as the parity oracle for the XLA path.
+
+use crate::data::DMatrix;
+use crate::tree::RegTree;
+use crate::Float;
+
+/// Accumulate one tree's predictions into `margins` (length n_rows).
+pub fn accumulate_tree(tree: &RegTree, x: &DMatrix, margins: &mut [Float]) {
+    debug_assert_eq!(margins.len(), x.n_rows());
+    for (row, m) in margins.iter_mut().enumerate() {
+        *m += tree.predict_row(x, row);
+    }
+}
+
+/// Predict raw margins for a forest grouped by output
+/// (`trees[output][round]`), starting from `base_score[output]`.
+pub fn predict_margins(
+    trees: &[Vec<RegTree>],
+    base_score: &[Float],
+    x: &DMatrix,
+) -> Vec<Vec<Float>> {
+    let n = x.n_rows();
+    let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+    for (k, group) in trees.iter().enumerate() {
+        for tree in group {
+            accumulate_tree(tree, x, &mut out[k]);
+        }
+    }
+    out
+}
+
+/// Leaf indices for every row of every tree of one output group — the
+/// `pred_leaf` debugging/feature-engineering output XGBoost exposes.
+pub fn predict_leaf_indices(trees: &[RegTree], x: &DMatrix) -> Vec<Vec<u32>> {
+    trees
+        .iter()
+        .map(|t| {
+            (0..x.n_rows())
+                .map(|r| t.leaf_for_row(x, r) as u32)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+
+    fn stump(threshold: Float, left: Float, right: Float) -> RegTree {
+        let mut t = RegTree::new_root(0.0, 1.0);
+        t.apply_split(0, 0, threshold, true, 1.0, left, 1.0, right, 1.0);
+        t
+    }
+
+    #[test]
+    fn accumulate_sums_trees() {
+        let x = DMatrix::dense(vec![0.0, 10.0], 2, 1);
+        let t1 = stump(5.0, -1.0, 1.0);
+        let t2 = stump(5.0, -2.0, 2.0);
+        let m = predict_margins(&[vec![t1, t2]], &[0.5], &x);
+        assert_eq!(m[0], vec![0.5 - 3.0, 0.5 + 3.0]);
+    }
+
+    #[test]
+    fn multi_output_groups_are_independent() {
+        let x = DMatrix::dense(vec![0.0, 10.0], 2, 1);
+        let m = predict_margins(
+            &[vec![stump(5.0, -1.0, 1.0)], vec![stump(5.0, 7.0, 8.0)]],
+            &[0.0, 100.0],
+            &x,
+        );
+        assert_eq!(m[0], vec![-1.0, 1.0]);
+        assert_eq!(m[1], vec![107.0, 108.0]);
+    }
+
+    #[test]
+    fn empty_forest_returns_base() {
+        let x = DMatrix::dense(vec![1.0, 2.0, 3.0], 3, 1);
+        let m = predict_margins(&[vec![]], &[0.25], &x);
+        assert_eq!(m[0], vec![0.25; 3]);
+    }
+
+    #[test]
+    fn leaf_indices_route_correctly() {
+        let x = DMatrix::dense(vec![0.0, 10.0], 2, 1);
+        let t = stump(5.0, -1.0, 1.0);
+        let li = predict_leaf_indices(&[t], &x);
+        assert_eq!(li[0], vec![1, 2]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Per-feature histogram cut points with global bin indexing, derived from
+//! the per-feature quantile sketches (paper §2.1).
+//!
+//! Layout follows XGBoost's `HistogramCuts`: `ptrs[f]..ptrs[f+1]` indexes
+//! the ascending cut values of feature `f` inside the flat `values` array,
+//! so a (feature, local bin) pair maps to the **global bin**
+//! `ptrs[f] + local_bin`. Histograms are allocated flat over
+//! `total_bins()`, which is what makes the one-hot-matmul histogram kernel
+//! (L1) and the compressed matrix addressing work without per-feature
+//! indirection.
+
+use crate::data::DMatrix;
+use crate::quantile::sketch::SketchBuilder;
+use crate::Float;
+
+/// Quantile cut points for every feature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramCuts {
+    /// `ptrs[f]..ptrs[f+1]` — range of `values` belonging to feature `f`.
+    pub ptrs: Vec<u32>,
+    /// Ascending upper-bound cut values, concatenated over features.
+    /// A value `v` of feature `f` falls in the first local bin whose cut is
+    /// `> v`; the last cut of each feature is an upper sentinel above the
+    /// feature's maximum.
+    pub values: Vec<Float>,
+    /// Per-feature minimum seen value (kept for completeness / debugging,
+    /// as XGBoost does).
+    pub min_vals: Vec<Float>,
+}
+
+impl HistogramCuts {
+    /// Build cuts from a dataset using per-feature quantile sketches with at
+    /// most `max_bins` bins per feature.
+    ///
+    /// `hessians`, when provided, weight the sketch (XGBoost's weighted
+    /// quantile sketch); pass `None` for the unweighted first iteration.
+    pub fn from_dmatrix(x: &DMatrix, max_bins: usize, hessians: Option<&[f64]>) -> Self {
+        assert!(max_bins >= 2, "need at least 2 bins");
+        let n_cols = x.n_cols();
+        let sketch_limit = (max_bins * 8).max(64);
+        let mut builders: Vec<SketchBuilder> =
+            (0..n_cols).map(|_| SketchBuilder::new(sketch_limit)).collect();
+        for col in 0..n_cols {
+            let b = &mut builders[col];
+            x.for_each_in_column(col, |row, v| {
+                let w = hessians.map(|h| h[row]).unwrap_or(1.0);
+                b.push(v, w.max(1e-16));
+            });
+        }
+        let summaries: Vec<_> = builders.into_iter().map(|b| b.finish()).collect();
+        Self::from_summaries(&summaries, max_bins)
+    }
+
+    /// Build cuts from already-reduced per-feature summaries (the
+    /// multi-device path: each device sketches its shard, summaries are
+    /// all-reduced, then this runs on the result).
+    pub fn from_summaries(
+        summaries: &[crate::quantile::WQSummary],
+        max_bins: usize,
+    ) -> Self {
+        let mut ptrs: Vec<u32> = Vec::with_capacity(summaries.len() + 1);
+        let mut values: Vec<Float> = Vec::new();
+        let mut min_vals: Vec<Float> = Vec::with_capacity(summaries.len());
+        ptrs.push(0);
+        for summary in summaries {
+            let total = summary.total_weight();
+            let mut last: Option<Float> = None;
+            if summary.is_empty() {
+                // feature never observed: single sentinel bin
+                min_vals.push(0.0);
+                values.push(Float::MAX);
+                ptrs.push(values.len() as u32);
+                continue;
+            }
+            min_vals.push(summary.entries.first().unwrap().value);
+            let max_val = summary.entries.last().unwrap().value;
+            // interior cuts at ranks k * total / max_bins, k = 1..max_bins-1
+            for k in 1..max_bins {
+                let d = total * k as f64 / max_bins as f64;
+                if let Some(q) = summary.query(d) {
+                    if q < max_val && last != Some(q) {
+                        values.push(q);
+                        last = Some(q);
+                    }
+                }
+            }
+            // final sentinel strictly above the max so every present value
+            // falls in a bin (XGBoost uses max * (1+2e); handle max<=0 too)
+            let sentinel = if max_val > 0.0 {
+                max_val * (1.0 + 1e-5) + 1e-35
+            } else {
+                max_val * (1.0 - 1e-5) + 1e-35
+            };
+            let sentinel = if sentinel <= max_val {
+                // degenerate precision case
+                Float::from_bits(max_val.to_bits() + 1)
+            } else {
+                sentinel
+            };
+            values.push(sentinel);
+            ptrs.push(values.len() as u32);
+        }
+        HistogramCuts {
+            ptrs,
+            values,
+            min_vals,
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.ptrs.len() - 1
+    }
+
+    /// Total number of bins across all features — the width of every flat
+    /// histogram and the symbol alphabet of the compressed matrix.
+    pub fn total_bins(&self) -> usize {
+        *self.ptrs.last().unwrap() as usize
+    }
+
+    /// Number of bins of feature `f`.
+    pub fn feature_bins(&self, f: usize) -> usize {
+        (self.ptrs[f + 1] - self.ptrs[f]) as usize
+    }
+
+    /// Cut values of feature `f`.
+    pub fn feature_cuts(&self, f: usize) -> &[Float] {
+        &self.values[self.ptrs[f] as usize..self.ptrs[f + 1] as usize]
+    }
+
+    /// Map `(feature, value)` to its **global** bin index:
+    /// `ptrs[f] + upper_bound(cuts_f, value)` clamped into the feature's
+    /// range. Values above the sentinel clamp into the last bin.
+    #[inline]
+    pub fn bin_index(&self, f: usize, v: Float) -> u32 {
+        let lo = self.ptrs[f] as usize;
+        let hi = self.ptrs[f + 1] as usize;
+        let cuts = &self.values[lo..hi];
+        // first cut strictly greater than v
+        let local = cuts.partition_point(|&c| c <= v);
+        let local = local.min(cuts.len() - 1);
+        (lo + local) as u32
+    }
+
+    /// Inverse-ish mapping for split thresholds: the representative split
+    /// value of a global bin is its cut (split condition `v < cut` goes
+    /// left).
+    #[inline]
+    pub fn cut_of_bin(&self, global_bin: u32) -> Float {
+        self.values[global_bin as usize]
+    }
+
+    /// Which feature a global bin belongs to (binary search over `ptrs`).
+    pub fn feature_of_bin(&self, global_bin: u32) -> usize {
+        debug_assert!((global_bin as usize) < self.total_bins());
+        self.ptrs.partition_point(|&p| p <= global_bin) - 1
+    }
+
+    /// In-memory size of the cut structure (for the memory-footprint bench).
+    pub fn bytes(&self) -> usize {
+        self.ptrs.len() * 4 + self.values.len() * 4 + self.min_vals.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+
+    fn simple_matrix() -> DMatrix {
+        // 8 rows, 2 features; feature 0 uniform 0..8, feature 1 constant
+        let mut v = Vec::new();
+        for r in 0..8 {
+            v.push(r as Float);
+            v.push(5.0);
+        }
+        DMatrix::dense(v, 8, 2)
+    }
+
+    #[test]
+    fn cuts_cover_all_values() {
+        let x = simple_matrix();
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        assert_eq!(cuts.n_features(), 2);
+        // every present value must land in a valid bin of its feature
+        for r in 0..8 {
+            for (f, v) in x.iter_row(r) {
+                let b = cuts.bin_index(f, v);
+                assert!(b >= cuts.ptrs[f] && b < cuts.ptrs[f + 1]);
+                // value is below its bin's cut
+                assert!(v < cuts.cut_of_bin(b), "v={v} cut={}", cuts.cut_of_bin(b));
+            }
+        }
+    }
+
+    #[test]
+    fn constant_feature_gets_one_bin() {
+        let x = simple_matrix();
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        assert_eq!(cuts.feature_bins(1), 1);
+    }
+
+    #[test]
+    fn bin_count_bounded_by_max_bins() {
+        let mut rng = crate::util::Pcg64::new(1);
+        let vals: Vec<Float> = (0..1000).map(|_| rng.next_f32()).collect();
+        let x = DMatrix::dense(vals, 1000, 1);
+        for max_bins in [2, 4, 16, 64, 256] {
+            let cuts = HistogramCuts::from_dmatrix(&x, max_bins, None);
+            assert!(cuts.feature_bins(0) <= max_bins, "max_bins={max_bins}");
+            assert!(cuts.feature_bins(0) >= max_bins / 2, "too few bins");
+        }
+    }
+
+    #[test]
+    fn bins_are_monotone_in_value() {
+        let mut rng = crate::util::Pcg64::new(2);
+        let vals: Vec<Float> = (0..500).map(|_| rng.next_f32() * 10.0).collect();
+        let x = DMatrix::dense(vals.clone(), 500, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let mut sorted = vals;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = 0u32;
+        for v in sorted {
+            let b = cuts.bin_index(0, v);
+            assert!(b >= prev, "bin must be monotone in value");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn global_indexing_is_contiguous() {
+        let x = simple_matrix();
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        assert_eq!(cuts.ptrs[0], 0);
+        assert_eq!(cuts.total_bins(), cuts.values.len());
+        for f in 0..cuts.n_features() {
+            assert_eq!(cuts.feature_cuts(f).len(), cuts.feature_bins(f));
+            // cut values ascend within a feature
+            let fc = cuts.feature_cuts(f);
+            for w in fc.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn feature_of_bin_roundtrip() {
+        let x = simple_matrix();
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        for f in 0..cuts.n_features() {
+            for b in cuts.ptrs[f]..cuts.ptrs[f + 1] {
+                assert_eq!(cuts.feature_of_bin(b), f);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_cuts_shift_toward_heavy_rows() {
+        // rows 0..100 value i; weight 10 on low half, 1 on high half:
+        // the median cut should land well below 50.
+        let vals: Vec<Float> = (0..100).map(|i| i as Float).collect();
+        let x = DMatrix::dense(vals, 100, 1);
+        let w: Vec<f64> = (0..100).map(|i| if i < 50 { 10.0 } else { 1.0 }).collect();
+        let cuts = HistogramCuts::from_dmatrix(&x, 2, Some(&w));
+        // single interior cut at the weighted median (~27)
+        let c = cuts.feature_cuts(0)[0];
+        assert!(c < 40.0, "weighted median cut {c}");
+    }
+
+    #[test]
+    fn negative_max_sentinel_covers() {
+        let vals: Vec<Float> = vec![-5.0, -4.0, -3.0, -2.0];
+        let x = DMatrix::dense(vals.clone(), 4, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        for v in vals {
+            let b = cuts.bin_index(0, v);
+            assert!(v < cuts.cut_of_bin(b));
+        }
+    }
+}

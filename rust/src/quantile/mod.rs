@@ -1,0 +1,22 @@
+//! Feature quantile generation (paper §2.1).
+//!
+//! The paper quantises the input matrix onto per-feature quantile bins
+//! before tree construction, reducing split finding to histogram
+//! aggregation. This module provides:
+//!
+//! * [`sketch::WQSummary`] — a weighted quantile summary with the
+//!   merge/prune operations of the GK/XGBoost sketch and its ε error
+//!   bound,
+//! * [`cuts::HistogramCuts`] — per-feature cut points derived from the
+//!   sketches (global bin indexing, as in XGBoost's `HistogramCuts`),
+//! * [`quantizer::QuantizedMatrix`] — the input matrix mapped to bin
+//!   indices, the form consumed by histogram construction and by the
+//!   [`crate::compress`] bit-packing stage.
+
+pub mod cuts;
+pub mod quantizer;
+pub mod sketch;
+
+pub use cuts::HistogramCuts;
+pub use quantizer::{QuantizedMatrix, Quantizer};
+pub use sketch::WQSummary;

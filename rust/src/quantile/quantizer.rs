@@ -1,0 +1,222 @@
+//! Quantisation of the input matrix onto histogram bins (paper §2.1),
+//! producing the ELLPACK-layout `QuantizedMatrix` that feeds both the
+//! histogram builder and the bit-packing compressor (§2.2).
+//!
+//! ELLPACK layout: every row occupies exactly `row_stride` symbols
+//! (`row_stride` = max present-values-per-row; == `n_cols` for dense
+//! input). Missing slots hold the **null symbol** `total_bins`. This is
+//! the same trick XGBoost's GPU `EllpackPage` uses: fixed stride makes the
+//! kernel's addressing affine, at the cost of padding sparse rows.
+
+use crate::data::DMatrix;
+use crate::quantile::HistogramCuts;
+
+/// The quantised input matrix in ELLPACK layout.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    /// Global bin indices, `n_rows * row_stride` entries; `null_symbol()`
+    /// marks padding.
+    pub bins: Vec<u32>,
+    pub n_rows: usize,
+    pub n_features: usize,
+    pub row_stride: usize,
+    /// Total bins across features (== cuts.total_bins()).
+    pub n_bins: usize,
+    /// Whether rows are dense (slot i of a row always holds feature i).
+    /// Dense layout lets the histogram kernel skip feature lookups.
+    pub dense: bool,
+}
+
+impl QuantizedMatrix {
+    /// Null / padding symbol: one past the last valid bin.
+    #[inline]
+    pub fn null_symbol(&self) -> u32 {
+        self.n_bins as u32
+    }
+
+    /// Number of symbols in the alphabet (bins + null).
+    #[inline]
+    pub fn n_symbols(&self) -> usize {
+        self.n_bins + 1
+    }
+
+    /// Bin of `(row, slot)`; `None` for padding.
+    #[inline]
+    pub fn get(&self, row: usize, slot: usize) -> Option<u32> {
+        let b = self.bins[row * self.row_stride + slot];
+        if b == self.null_symbol() {
+            None
+        } else {
+            Some(b)
+        }
+    }
+
+    /// Slice of one row's symbols (including padding).
+    #[inline]
+    pub fn row(&self, row: usize) -> &[u32] {
+        &self.bins[row * self.row_stride..(row + 1) * self.row_stride]
+    }
+
+    /// Uncompressed size in bytes (u32 per symbol).
+    pub fn bytes(&self) -> usize {
+        self.bins.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Builds [`QuantizedMatrix`] from raw data and cut points.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub cuts: HistogramCuts,
+}
+
+impl Quantizer {
+    pub fn new(cuts: HistogramCuts) -> Self {
+        Quantizer { cuts }
+    }
+
+    /// Quantise a matrix. Dense inputs keep positional layout (slot ==
+    /// feature); sparse inputs use packed ELLPACK with the true
+    /// `row_stride` = max row nnz.
+    pub fn quantize(&self, x: &DMatrix) -> QuantizedMatrix {
+        let n_rows = x.n_rows();
+        let n_features = x.n_cols();
+        let n_bins = self.cuts.total_bins();
+        let null = n_bins as u32;
+        match x {
+            DMatrix::Dense { .. } => {
+                let row_stride = n_features;
+                let mut bins = vec![null; n_rows * row_stride];
+                for row in 0..n_rows {
+                    for (f, v) in x.iter_row(row) {
+                        bins[row * row_stride + f] = self.cuts.bin_index(f, v);
+                    }
+                }
+                QuantizedMatrix {
+                    bins,
+                    n_rows,
+                    n_features,
+                    row_stride,
+                    n_bins,
+                    dense: true,
+                }
+            }
+            DMatrix::Csr { indptr, .. } => {
+                let row_stride = (0..n_rows)
+                    .map(|r| indptr[r + 1] - indptr[r])
+                    .max()
+                    .unwrap_or(0)
+                    .max(1);
+                let mut bins = vec![null; n_rows * row_stride];
+                for row in 0..n_rows {
+                    let mut slot = 0;
+                    for (f, v) in x.iter_row(row) {
+                        bins[row * row_stride + slot] = self.cuts.bin_index(f, v);
+                        slot += 1;
+                    }
+                }
+                QuantizedMatrix {
+                    bins,
+                    n_rows,
+                    n_features,
+                    row_stride,
+                    n_bins,
+                    dense: false,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+    use crate::Float;
+
+    fn dense_fixture() -> (DMatrix, Quantizer) {
+        let mut v = Vec::new();
+        for r in 0..16 {
+            v.push(r as Float); // feature 0: 0..16
+            v.push(if r % 4 == 0 { Float::NAN } else { (r % 3) as Float });
+        }
+        let x = DMatrix::dense(v, 16, 2);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        (x, Quantizer::new(cuts))
+    }
+
+    #[test]
+    fn dense_layout_positional() {
+        let (x, q) = dense_fixture();
+        let qm = q.quantize(&x);
+        assert!(qm.dense);
+        assert_eq!(qm.row_stride, 2);
+        assert_eq!(qm.n_rows, 16);
+        // missing entries -> null symbol
+        assert_eq!(qm.get(0, 1), None);
+        assert_eq!(qm.get(1, 1).map(|b| q.cuts.feature_of_bin(b)), Some(1));
+    }
+
+    #[test]
+    fn bins_respect_feature_ranges() {
+        let (x, q) = dense_fixture();
+        let qm = q.quantize(&x);
+        for r in 0..16 {
+            for (f, v) in x.iter_row(r) {
+                let b = qm.get(r, f).unwrap();
+                assert_eq!(q.cuts.feature_of_bin(b), f);
+                assert!(v < q.cuts.cut_of_bin(b));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_ellpack_stride() {
+        // rows with nnz 1, 3, 2
+        let x = DMatrix::csr(
+            vec![0, 1, 4, 6],
+            vec![0, 0, 1, 2, 1, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            3,
+            3,
+        );
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qm = Quantizer::new(cuts).quantize(&x);
+        assert!(!qm.dense);
+        assert_eq!(qm.row_stride, 3);
+        // row 0 has 1 real symbol + 2 padding
+        assert!(qm.get(0, 0).is_some());
+        assert_eq!(qm.get(0, 1), None);
+        assert_eq!(qm.get(0, 2), None);
+        // row 1 fully populated
+        assert!(qm.get(1, 0).is_some() && qm.get(1, 1).is_some() && qm.get(1, 2).is_some());
+    }
+
+    #[test]
+    fn histogram_from_quantized_matches_direct_binning() {
+        let (x, q) = dense_fixture();
+        let qm = q.quantize(&x);
+        let mut counts = vec![0usize; qm.n_bins];
+        for r in 0..qm.n_rows {
+            for s in 0..qm.row_stride {
+                if let Some(b) = qm.get(r, s) {
+                    counts[b as usize] += 1;
+                }
+            }
+        }
+        let mut expect = vec![0usize; qm.n_bins];
+        for r in 0..x.n_rows() {
+            for (f, v) in x.iter_row(r) {
+                expect[q.cuts.bin_index(f, v) as usize] += 1;
+            }
+        }
+        assert_eq!(counts, expect);
+    }
+
+    #[test]
+    fn n_symbols_includes_null() {
+        let (x, q) = dense_fixture();
+        let qm = q.quantize(&x);
+        assert_eq!(qm.n_symbols(), qm.n_bins + 1);
+        assert!(qm.bins.iter().all(|&b| b <= qm.null_symbol()));
+    }
+}

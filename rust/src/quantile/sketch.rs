@@ -1,0 +1,453 @@
+//! Weighted quantile summary with merge and prune — the sketch underlying
+//! XGBoost's quantile generation (§2.1 of the paper; Chen & Guestrin 2016,
+//! appendix).
+//!
+//! A summary is a sorted list of [`Entry`]s, each carrying the minimum and
+//! maximum possible rank (`rmin`, `rmax`) of its value in the underlying
+//! weighted multiset and the weight `wmin` of elements equal to the value.
+//! Exact summaries are built from sorted chunks; [`WQSummary::combine`]
+//! merges two summaries; [`WQSummary::prune`] shrinks a summary to a size
+//! budget while growing the rank uncertainty by at most `total_weight /
+//! (maxsize - 1)`. The resulting ε bound is exercised by the property
+//! tests in `rust/tests/prop_quantile.rs`.
+
+use crate::Float;
+
+/// One sketch entry: a value with rank bounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    /// Minimum possible rank (sum of weights strictly before `value`,
+    /// lower bound).
+    pub rmin: f64,
+    /// Maximum possible rank (sum of weights up to and including `value`,
+    /// upper bound).
+    pub rmax: f64,
+    /// Total weight of elements equal to `value` (lower bound).
+    pub wmin: f64,
+    pub value: Float,
+}
+
+impl Entry {
+    #[inline]
+    pub fn new(rmin: f64, rmax: f64, wmin: f64, value: Float) -> Self {
+        Entry {
+            rmin,
+            rmax,
+            wmin,
+            value,
+        }
+    }
+
+    /// Tightest upper bound on the rank of values `< self.value`
+    /// (XGBoost `RMaxPrev`).
+    #[inline]
+    pub fn rmax_prev(&self) -> f64 {
+        self.rmax - self.wmin
+    }
+
+    /// Tightest lower bound on the rank of values `<= self.value`
+    /// (XGBoost `RMinNext`).
+    #[inline]
+    pub fn rmin_next(&self) -> f64 {
+        self.rmin + self.wmin
+    }
+}
+
+/// A weighted quantile summary (sorted by value, strictly increasing).
+#[derive(Debug, Clone, Default)]
+pub struct WQSummary {
+    pub entries: Vec<Entry>,
+}
+
+impl WQSummary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build an exact summary from `(value, weight)` pairs (need not be
+    /// sorted; NaN values must already be filtered out).
+    pub fn from_weighted(mut data: Vec<(Float, f64)>) -> Self {
+        data.retain(|(v, _)| !v.is_nan());
+        data.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut entries: Vec<Entry> = Vec::new();
+        let mut rank = 0.0f64;
+        let mut i = 0;
+        while i < data.len() {
+            let v = data[i].0;
+            let mut w = 0.0;
+            while i < data.len() && data[i].0 == v {
+                w += data[i].1;
+                i += 1;
+            }
+            entries.push(Entry::new(rank, rank + w, w, v));
+            rank += w;
+        }
+        WQSummary { entries }
+    }
+
+    /// Build an exact summary from unweighted values.
+    pub fn from_values(values: &[Float]) -> Self {
+        Self::from_weighted(values.iter().map(|&v| (v, 1.0)).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total weight covered (== rmax of the last entry for exact and merged
+    /// summaries).
+    pub fn total_weight(&self) -> f64 {
+        self.entries.last().map(|e| e.rmax).unwrap_or(0.0)
+    }
+
+    /// Maximum rank uncertainty of any entry: `max(rmax - rmin - wmin)`.
+    /// For an exact summary this is 0.
+    pub fn max_error(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.rmax - e.rmin - e.wmin)
+            .fold(0.0, f64::max)
+    }
+
+    /// Query the value at rank `d` (in `[0, total_weight]`): returns the
+    /// entry value whose rank interval best covers `d` (XGSBoost
+    /// `WQSummary::Query` logic).
+    pub fn query(&self, d: f64) -> Option<Float> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        // binary search for first entry with rmin_next >= d
+        let mut lo = 0usize;
+        let mut hi = self.entries.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.entries[mid].rmin_next() < d {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo >= self.entries.len() {
+            return Some(self.entries.last().unwrap().value);
+        }
+        if lo + 1 < self.entries.len() {
+            let a = &self.entries[lo];
+            let b = &self.entries[lo + 1];
+            // pick whichever side has tighter coverage of d
+            if d >= b.rmax_prev() && (b.rmax_prev() - d).abs() < (d - a.rmin_next()).abs() {
+                return Some(b.value);
+            }
+        }
+        Some(self.entries[lo].value)
+    }
+
+    /// Merge two summaries into one covering both multisets (XGBoost
+    /// `SetCombine`). Rank bounds remain valid: for every element, the
+    /// combined `rmin`/`rmax` are the sums of the constituents' bounds at
+    /// that value.
+    pub fn combine(&self, other: &WQSummary) -> WQSummary {
+        if self.is_empty() {
+            return other.clone();
+        }
+        if other.is_empty() {
+            return self.clone();
+        }
+        let (a, b) = (&self.entries, &other.entries);
+        let mut out: Vec<Entry> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        // running "previous" bounds from the other stream
+        while i < a.len() && j < b.len() {
+            let ea = &a[i];
+            let eb = &b[j];
+            if ea.value == eb.value {
+                out.push(Entry::new(
+                    ea.rmin + eb.rmin,
+                    ea.rmax + eb.rmax,
+                    ea.wmin + eb.wmin,
+                    ea.value,
+                ));
+                i += 1;
+                j += 1;
+            } else if ea.value < eb.value {
+                // b contributes: everything strictly below eb
+                let b_prev = if j == 0 { 0.0 } else { b[j - 1].rmin_next() };
+                let b_upper = eb.rmax_prev();
+                out.push(Entry::new(
+                    ea.rmin + b_prev,
+                    ea.rmax + b_upper,
+                    ea.wmin,
+                    ea.value,
+                ));
+                i += 1;
+            } else {
+                let a_prev = if i == 0 { 0.0 } else { a[i - 1].rmin_next() };
+                let a_upper = ea.rmax_prev();
+                out.push(Entry::new(
+                    eb.rmin + a_prev,
+                    eb.rmax + a_upper,
+                    eb.wmin,
+                    eb.value,
+                ));
+                j += 1;
+            }
+        }
+        let b_total = other.total_weight();
+        while i < a.len() {
+            let ea = &a[i];
+            out.push(Entry::new(
+                ea.rmin + b_total,
+                ea.rmax + b_total,
+                ea.wmin,
+                ea.value,
+            ));
+            i += 1;
+        }
+        let a_total = self.total_weight();
+        while j < b.len() {
+            let eb = &b[j];
+            out.push(Entry::new(
+                eb.rmin + a_total,
+                eb.rmax + a_total,
+                eb.wmin,
+                eb.value,
+            ));
+            j += 1;
+        }
+        WQSummary { entries: out }
+    }
+
+    /// Prune to at most `maxsize` entries (a faithful port of XGBoost's
+    /// `WQSummary::SetPrune`): keeps the extreme values and selects
+    /// interior entries whose doubled rank midpoint `rmin+rmax` brackets
+    /// evenly spaced targets. Adds at most `total_weight / (maxsize - 1)`
+    /// rank error per prune.
+    pub fn prune(&self, maxsize: usize) -> WQSummary {
+        assert!(maxsize >= 2, "prune needs room for both extremes");
+        let src = &self.entries;
+        if src.len() <= maxsize {
+            return self.clone();
+        }
+        let begin = src[0].rmax;
+        let range = src[src.len() - 1].rmin - begin;
+        let n = maxsize - 1;
+        let mut out: Vec<Entry> = Vec::with_capacity(maxsize);
+        out.push(src[0]);
+        let mut i = 1usize;
+        let mut lastidx = 0usize;
+        for k in 1..n {
+            let dx2 = 2.0 * (k as f64 * range / n as f64 + begin);
+            while i < src.len() - 1 && dx2 >= src[i + 1].rmax_prev() + src[i + 1].rmin_next() {
+                i += 1;
+            }
+            if i == src.len() - 1 {
+                break;
+            }
+            if dx2 < src[i].rmin_next() + src[i + 1].rmax_prev() {
+                if i != lastidx {
+                    out.push(src[i]);
+                    lastidx = i;
+                }
+            } else if i + 1 != lastidx {
+                out.push(src[i + 1]);
+                lastidx = i + 1;
+            }
+        }
+        if lastidx != src.len() - 1 {
+            out.push(src[src.len() - 1]);
+        }
+        WQSummary { entries: out }
+    }
+
+    /// Validate structural invariants (sorted values, consistent ranks).
+    /// Used by tests.
+    pub fn check_invariants(&self) {
+        for w in self.entries.windows(2) {
+            assert!(w[0].value < w[1].value, "values must be strictly increasing");
+            assert!(
+                w[0].rmin_next() <= w[1].rmax_prev() + 1e-9,
+                "rank bounds must be consistent between neighbours"
+            );
+        }
+        for e in &self.entries {
+            assert!(e.rmin >= -1e-9);
+            assert!(e.rmax >= e.rmin + e.wmin - 1e-9, "rmax >= rmin + wmin");
+            assert!(e.wmin >= 0.0);
+        }
+    }
+}
+
+/// Streaming sketch builder: accumulates values in chunks, turning each
+/// chunk into an exact summary and merging with prune to bound memory —
+/// the CPU analogue of the paper's GPU multi-pass sketch.
+#[derive(Debug, Clone)]
+pub struct SketchBuilder {
+    /// Size limit for the maintained summary.
+    pub limit: usize,
+    /// Chunk size before folding into the summary.
+    pub chunk: usize,
+    buffer: Vec<(Float, f64)>,
+    summary: WQSummary,
+}
+
+impl SketchBuilder {
+    /// `eps`-style constructor: `limit` entries gives roughly `1/limit`
+    /// relative rank error per prune.
+    pub fn new(limit: usize) -> Self {
+        SketchBuilder {
+            limit: limit.max(4),
+            chunk: (limit.max(4)) * 8,
+            buffer: Vec::new(),
+            summary: WQSummary::new(),
+        }
+    }
+
+    pub fn push(&mut self, value: Float, weight: f64) {
+        if value.is_nan() {
+            return;
+        }
+        self.buffer.push((value, weight));
+        if self.buffer.len() >= self.chunk {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let exact = WQSummary::from_weighted(std::mem::take(&mut self.buffer));
+        self.summary = self.summary.combine(&exact).prune(self.limit);
+    }
+
+    /// Merge another builder's state into this one (used for multi-device
+    /// sketch reduction).
+    pub fn merge(&mut self, mut other: SketchBuilder) {
+        other.flush();
+        self.flush();
+        self.summary = self.summary.combine(&other.summary).prune(self.limit);
+    }
+
+    pub fn finish(mut self) -> WQSummary {
+        self.flush();
+        self.summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_summary_ranks() {
+        let s = WQSummary::from_values(&[3.0, 1.0, 2.0, 2.0]);
+        s.check_invariants();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.entries[0], Entry::new(0.0, 1.0, 1.0, 1.0));
+        assert_eq!(s.entries[1], Entry::new(1.0, 3.0, 2.0, 2.0));
+        assert_eq!(s.entries[2], Entry::new(3.0, 4.0, 1.0, 3.0));
+        assert_eq!(s.total_weight(), 4.0);
+        assert_eq!(s.max_error(), 0.0);
+    }
+
+    #[test]
+    fn nan_filtered() {
+        let s = WQSummary::from_values(&[1.0, f32::NAN, 2.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.total_weight(), 2.0);
+    }
+
+    #[test]
+    fn combine_disjoint() {
+        let a = WQSummary::from_values(&[1.0, 2.0]);
+        let b = WQSummary::from_values(&[3.0, 4.0]);
+        let c = a.combine(&b);
+        c.check_invariants();
+        assert_eq!(c.total_weight(), 4.0);
+        let exact = WQSummary::from_values(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.entries, exact.entries);
+    }
+
+    #[test]
+    fn combine_interleaved_equals_exact() {
+        let a = WQSummary::from_values(&[1.0, 3.0, 5.0, 5.0]);
+        let b = WQSummary::from_values(&[2.0, 3.0, 6.0]);
+        let c = a.combine(&b);
+        c.check_invariants();
+        let exact = WQSummary::from_values(&[1.0, 3.0, 5.0, 5.0, 2.0, 3.0, 6.0]);
+        assert_eq!(c.entries, exact.entries);
+    }
+
+    #[test]
+    fn query_exact_median() {
+        let s = WQSummary::from_values(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.query(2.5), Some(3.0));
+        assert_eq!(s.query(0.0), Some(1.0));
+        assert_eq!(s.query(5.0), Some(5.0));
+    }
+
+    #[test]
+    fn prune_keeps_extremes_and_bounds_error() {
+        let values: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let s = WQSummary::from_values(&values);
+        let p = s.prune(16);
+        p.check_invariants();
+        assert!(p.len() <= 16);
+        assert_eq!(p.entries.first().unwrap().value, 0.0);
+        assert_eq!(p.entries.last().unwrap().value, 999.0);
+        // error bound: total/(maxsize-1) per prune
+        assert!(p.max_error() <= 1000.0 / 15.0 + 1e-6, "err {}", p.max_error());
+    }
+
+    #[test]
+    fn builder_matches_quantiles_of_exact() {
+        let n = 20_000usize;
+        let mut rng = crate::util::Pcg64::new(42);
+        let values: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0).collect();
+        let mut b = SketchBuilder::new(64);
+        for &v in &values {
+            b.push(v, 1.0);
+        }
+        let summary = b.finish();
+        summary.check_invariants();
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // query deciles; sketch answer must be within eps*n ranks
+        let eps = 4.0 / 64.0; // generous: a few prune rounds compound
+        for k in 1..10 {
+            let d = n as f64 * k as f64 / 10.0;
+            let q = summary.query(d).unwrap();
+            let rank = sorted.partition_point(|&v| v < q) as f64;
+            assert!(
+                (rank - d).abs() <= eps * n as f64 + 1.0,
+                "decile {k}: rank {rank} vs target {d}"
+            );
+        }
+    }
+
+    #[test]
+    fn builder_merge_covers_both_streams() {
+        let mut a = SketchBuilder::new(32);
+        let mut b = SketchBuilder::new(32);
+        for i in 0..500 {
+            a.push(i as f32, 1.0);
+            b.push((i + 500) as f32, 1.0);
+        }
+        a.merge(b);
+        let s = a.finish();
+        assert!((s.total_weight() - 1000.0).abs() < 1e-9);
+        assert_eq!(s.entries.first().unwrap().value, 0.0);
+        assert_eq!(s.entries.last().unwrap().value, 999.0);
+    }
+
+    #[test]
+    fn weighted_entries_respected() {
+        let s = WQSummary::from_weighted(vec![(1.0, 10.0), (2.0, 1.0)]);
+        assert_eq!(s.total_weight(), 11.0);
+        // rank 5 lands inside the heavy value
+        assert_eq!(s.query(5.0), Some(1.0));
+    }
+}

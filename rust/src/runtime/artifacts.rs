@@ -1,0 +1,308 @@
+//! Artifact registry: manifest parsing, HLO loading/compilation, and typed
+//! execution wrappers over the PJRT CPU client.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Config;
+use crate::Float;
+
+/// Which gradient artifact to run (paper §2.5: these two objectives are
+/// device-resident; multiclass/ranking stay on the CPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradKind {
+    Logistic,
+    Squared,
+}
+
+/// Tile geometry read from `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub grad_tile: usize,
+    pub hist_rows: usize,
+    pub hist_slots: usize,
+    pub hist_bins: usize,
+    pub predict_rows: usize,
+    pub predict_features: usize,
+    pub predict_trees: usize,
+    pub predict_nodes: usize,
+    pub predict_iters: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let cfg = Config::from_file(dir.join("manifest.txt"))
+            .context("reading artifact manifest")?;
+        Ok(Manifest {
+            grad_tile: cfg.get_parse("grad.tile", 0usize)?,
+            hist_rows: cfg.get_parse("hist.rows", 0usize)?,
+            hist_slots: cfg.get_parse("hist.slots", 0usize)?,
+            hist_bins: cfg.get_parse("hist.bins", 0usize)?,
+            predict_rows: cfg.get_parse("predict.rows", 0usize)?,
+            predict_features: cfg.get_parse("predict.features", 0usize)?,
+            predict_trees: cfg.get_parse("predict.trees", 0usize)?,
+            predict_nodes: cfg.get_parse("predict.nodes", 0usize)?,
+            predict_iters: cfg.get_parse("predict.iters", 0usize)?,
+        })
+    }
+}
+
+/// Loaded + compiled artifact set over one PJRT CPU client.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    grad_logistic: xla::PjRtLoadedExecutable,
+    grad_squared: xla::PjRtLoadedExecutable,
+    histogram: xla::PjRtLoadedExecutable,
+    predict: xla::PjRtLoadedExecutable,
+    /// Executions performed, per artifact (telemetry for EXPERIMENTS.md).
+    pub exec_counts: std::cell::RefCell<[u64; 4]>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+impl Artifacts {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        ensure!(manifest.hist_bins > 0, "manifest missing hist.bins");
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Artifacts {
+            grad_logistic: compile(&client, &dir.join("grad_logistic.hlo.txt"))?,
+            grad_squared: compile(&client, &dir.join("grad_squared.hlo.txt"))?,
+            histogram: compile(&client, &dir.join("histogram.hlo.txt"))?,
+            predict: compile(&client, &dir.join("predict.hlo.txt"))?,
+            manifest,
+            dir,
+            client,
+            exec_counts: std::cell::RefCell::new([0; 4]),
+        })
+    }
+
+    /// Convenience: locate via [`crate::runtime::find_artifact_dir`].
+    pub fn discover() -> Result<Self> {
+        let dir = crate::runtime::find_artifact_dir(None)
+            .context("artifacts/ not found; run `make artifacts`")?;
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// §2.5 on-device gradients: returns `(grad, hess)` for all `n`
+    /// instances, tiling + padding to the artifact's static shape.
+    pub fn gradients(
+        &self,
+        kind: GradKind,
+        margins: &[Float],
+        labels: &[Float],
+    ) -> Result<(Vec<Float>, Vec<Float>)> {
+        ensure!(margins.len() == labels.len(), "margins/labels mismatch");
+        let tile = self.manifest.grad_tile;
+        let exe = match kind {
+            GradKind::Logistic => &self.grad_logistic,
+            GradKind::Squared => &self.grad_squared,
+        };
+        let n = margins.len();
+        let mut grad = Vec::with_capacity(n);
+        let mut hess = Vec::with_capacity(n);
+        let mut m_buf = vec![0.0 as Float; tile];
+        let mut y_buf = vec![0.0 as Float; tile];
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + tile).min(n);
+            let len = hi - lo;
+            m_buf[..len].copy_from_slice(&margins[lo..hi]);
+            y_buf[..len].copy_from_slice(&labels[lo..hi]);
+            m_buf[len..].fill(0.0);
+            y_buf[len..].fill(0.0);
+            let m_lit = xla::Literal::vec1(&m_buf);
+            let y_lit = xla::Literal::vec1(&y_buf);
+            let result = exe
+                .execute::<xla::Literal>(&[m_lit, y_lit])
+                .map_err(|e| anyhow::anyhow!("grad execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("grad fetch: {e:?}"))?;
+            let (g, h) = result
+                .to_tuple2()
+                .map_err(|e| anyhow::anyhow!("grad tuple: {e:?}"))?;
+            let g = g.to_vec::<Float>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let h = h.to_vec::<Float>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            grad.extend_from_slice(&g[..len]);
+            hess.extend_from_slice(&h[..len]);
+            self.exec_counts.borrow_mut()[kind as usize] += 1;
+            lo = hi;
+        }
+        Ok((grad, hess))
+    }
+
+    /// One histogram-tile execution (the §2.3 hot-spot): `bins` is the
+    /// row-major `(hist_rows, hist_slots)` i32 tile (pad with an
+    /// out-of-window symbol), `grads` the `(hist_rows, 2)` gradient pairs
+    /// (pad with zeros), `offset` the bin window start. Returns the
+    /// `(hist_bins, 2)` partial histogram.
+    pub fn histogram_tile(
+        &self,
+        bins: &[i32],
+        grads: &[Float],
+        offset: i32,
+    ) -> Result<Vec<Float>> {
+        let m = &self.manifest;
+        ensure!(bins.len() == m.hist_rows * m.hist_slots, "bins tile shape");
+        ensure!(grads.len() == m.hist_rows * 2, "grads tile shape");
+        let bins_lit = xla::Literal::vec1(bins)
+            .reshape(&[m.hist_rows as i64, m.hist_slots as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let grads_lit = xla::Literal::vec1(grads)
+            .reshape(&[m.hist_rows as i64, 2])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let off_lit = xla::Literal::scalar(offset);
+        let result = self
+            .histogram
+            .execute::<xla::Literal>(&[bins_lit, grads_lit, off_lit])
+            .map_err(|e| anyhow::anyhow!("histogram execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("histogram fetch: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?
+            .to_vec::<Float>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        self.exec_counts.borrow_mut()[2] += 1;
+        Ok(out)
+    }
+
+    /// One prediction-tile execution (§2.4): `x` is `(predict_rows,
+    /// predict_features)` row-major f32 (NaN missing, pad rows with NaN),
+    /// tree arrays are `(predict_trees, predict_nodes)` (pad trees with
+    /// single zero leaves). Returns `(predict_rows,)` margin sums.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_tile(
+        &self,
+        x: &[Float],
+        feature: &[i32],
+        threshold: &[Float],
+        left: &[i32],
+        right: &[i32],
+        default_left: &[i32],
+        leaf_value: &[Float],
+    ) -> Result<Vec<Float>> {
+        let m = &self.manifest;
+        ensure!(x.len() == m.predict_rows * m.predict_features, "x tile shape");
+        let tn = m.predict_trees * m.predict_nodes;
+        ensure!(
+            feature.len() == tn
+                && threshold.len() == tn
+                && left.len() == tn
+                && right.len() == tn
+                && default_left.len() == tn
+                && leaf_value.len() == tn,
+            "tree array shapes"
+        );
+        let r = |e: xla::Error| anyhow::anyhow!("{e:?}");
+        let t2 = [m.predict_trees as i64, m.predict_nodes as i64];
+        let args = [
+            xla::Literal::vec1(x)
+                .reshape(&[m.predict_rows as i64, m.predict_features as i64])
+                .map_err(r)?,
+            xla::Literal::vec1(feature).reshape(&t2).map_err(r)?,
+            xla::Literal::vec1(threshold).reshape(&t2).map_err(r)?,
+            xla::Literal::vec1(left).reshape(&t2).map_err(r)?,
+            xla::Literal::vec1(right).reshape(&t2).map_err(r)?,
+            xla::Literal::vec1(default_left).reshape(&t2).map_err(r)?,
+            xla::Literal::vec1(leaf_value).reshape(&t2).map_err(r)?,
+        ];
+        let result = self
+            .predict
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("predict execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("predict fetch: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(r)?
+            .to_vec::<Float>()
+            .map_err(r)?;
+        self.exec_counts.borrow_mut()[3] += 1;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Artifacts> {
+        // integration-style: requires `make artifacts` to have run
+        crate::runtime::find_artifact_dir(None).and_then(|d| Artifacts::load(d).ok())
+    }
+
+    #[test]
+    fn logistic_gradients_match_native() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let n = 20_000; // forces 2 tiles
+        let mut rng = crate::util::Pcg64::new(5);
+        let margins: Vec<Float> = (0..n).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+        let labels: Vec<Float> = (0..n).map(|_| (rng.next_f32() < 0.5) as u8 as f32).collect();
+        let (g, h) = a.gradients(GradKind::Logistic, &margins, &labels).unwrap();
+        assert_eq!(g.len(), n);
+        for i in (0..n).step_by(997) {
+            let p = 1.0 / (1.0 + (-margins[i]).exp());
+            assert!((g[i] - (p - labels[i])).abs() < 1e-5, "i={i}");
+            assert!((h[i] - p * (1.0 - p)).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn squared_gradients_match_native() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let margins = vec![1.0, 2.0, 3.0];
+        let labels = vec![0.5, 2.0, 10.0];
+        let (g, h) = a.gradients(GradKind::Squared, &margins, &labels).unwrap();
+        assert_eq!(g, vec![0.5, 0.0, -7.0]);
+        assert_eq!(h, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn histogram_tile_sums() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = a.manifest.clone();
+        // every row puts its slots in bin 3 of the window
+        let bins = vec![3i32; m.hist_rows * m.hist_slots];
+        let mut grads = vec![0.0 as Float; m.hist_rows * 2];
+        for r in 0..m.hist_rows {
+            grads[r * 2] = 1.0;
+            grads[r * 2 + 1] = 0.5;
+        }
+        let out = a.histogram_tile(&bins, &grads, 0).unwrap();
+        let expect_g = (m.hist_rows * m.hist_slots) as f32;
+        assert!((out[3 * 2] - expect_g).abs() < 1.0, "{}", out[6]);
+        assert!((out[3 * 2 + 1] - expect_g * 0.5).abs() < 1.0);
+        // out-of-window offset zeroes everything
+        let out2 = a.histogram_tile(&bins, &grads, 1000).unwrap();
+        assert!(out2.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,220 @@
+//! XLA-backed histogram backend: routes the coordinator's per-device
+//! `BuildPartialHistograms` calls (Algorithm 1) through the AOT-compiled
+//! Pallas one-hot-matmul kernel.
+//!
+//! The artifact has a fixed `(rows, slots, bins)` tile; this adapter
+//! chunks a node's row set into row tiles, a shard whose `row_stride`
+//! exceeds `slots` into slot groups, and a cut set wider than `bins` into
+//! bin windows, padding each tile's tail. The padding symbol is
+//! `i32::MAX/2`, which one-hots to nothing in every window.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::device::{DeviceShard, HistBackend, ShardStorage};
+use crate::hist::Histogram;
+use crate::runtime::Artifacts;
+use crate::Float;
+
+/// Symbol guaranteed outside every bin window (after offset subtraction it
+/// stays far out of range — i32 arithmetic cannot wrap it back into a
+/// window since offsets are < 2^24 in practice).
+const PAD_SYMBOL: i32 = i32::MAX / 2;
+
+/// Histogram backend executing on the PJRT client.
+pub struct XlaHistBackend {
+    artifacts: Arc<Artifacts>,
+    // reusable tile buffers
+    bins_buf: Vec<i32>,
+    grads_buf: Vec<Float>,
+    row_scratch: Vec<u32>,
+}
+
+impl XlaHistBackend {
+    pub fn new(artifacts: Arc<Artifacts>) -> Self {
+        let m = &artifacts.manifest;
+        XlaHistBackend {
+            bins_buf: vec![PAD_SYMBOL; m.hist_rows * m.hist_slots],
+            grads_buf: vec![0.0; m.hist_rows * 2],
+            row_scratch: Vec::new(),
+            artifacts,
+        }
+    }
+
+    /// Fill one `(rows, slots)` tile from shard rows
+    /// `rows[row_lo..row_hi]`, slot group starting at `slot_lo`.
+    fn fill_tile(
+        &mut self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        row_lo: usize,
+        row_hi: usize,
+        slot_lo: usize,
+    ) {
+        let m = &self.artifacts.manifest;
+        let stride = shard.storage.row_stride();
+        self.bins_buf.fill(PAD_SYMBOL);
+        self.grads_buf.fill(0.0);
+        self.row_scratch.resize(stride, 0);
+        for (ti, &r) in rows[row_lo..row_hi].iter().enumerate() {
+            let r = r as usize;
+            match &shard.storage {
+                ShardStorage::Quantized(qm) => {
+                    let row = qm.row(r);
+                    let null = qm.null_symbol();
+                    for s in 0..m.hist_slots.min(stride.saturating_sub(slot_lo)) {
+                        let b = row[slot_lo + s];
+                        if b != null {
+                            self.bins_buf[ti * m.hist_slots + s] = b as i32;
+                        }
+                    }
+                }
+                ShardStorage::Compressed(cm) => {
+                    let null = cm.null_symbol();
+                    let base = r * stride;
+                    for s in 0..m.hist_slots.min(stride.saturating_sub(slot_lo)) {
+                        let b = cm.symbol(base + slot_lo + s);
+                        if b != null {
+                            self.bins_buf[ti * m.hist_slots + s] = b as i32;
+                        }
+                    }
+                }
+            }
+            let g = shard.gradients[r];
+            self.grads_buf[ti * 2] = g.grad;
+            self.grads_buf[ti * 2 + 1] = g.hess;
+        }
+    }
+}
+
+impl HistBackend for XlaHistBackend {
+    fn build_histogram(
+        &mut self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        out: &mut Histogram,
+    ) -> Result<()> {
+        let m = self.artifacts.manifest.clone();
+        let n_bins = out.n_bins();
+        let stride = shard.storage.row_stride();
+        let n_windows = n_bins.div_ceil(m.hist_bins);
+        let n_slot_groups = stride.div_ceil(m.hist_slots);
+
+        let mut row_lo = 0usize;
+        while row_lo < rows.len() {
+            let row_hi = (row_lo + m.hist_rows).min(rows.len());
+            for sg in 0..n_slot_groups {
+                self.fill_tile(shard, rows, row_lo, row_hi, sg * m.hist_slots);
+                for w in 0..n_windows {
+                    let offset = (w * m.hist_bins) as i32;
+                    let partial = self.artifacts.histogram_tile(
+                        &self.bins_buf,
+                        &self.grads_buf,
+                        offset,
+                    )?;
+                    let lo = w * m.hist_bins;
+                    let hi = (lo + m.hist_bins).min(n_bins);
+                    for (b, slot) in (lo..hi).enumerate() {
+                        out.bins[slot].grad += partial[b * 2] as f64;
+                        out.bins[slot].hess += partial[b * 2 + 1] as f64;
+                    }
+                }
+            }
+            row_lo = row_hi;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::NativeBackend;
+    use crate::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::GradPair;
+
+    fn artifacts() -> Option<Arc<Artifacts>> {
+        crate::runtime::find_artifact_dir(None)
+            .and_then(|d| Artifacts::load(d).ok())
+            .map(Arc::new)
+    }
+
+    #[test]
+    fn xla_histogram_matches_native_backend() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // covers bin windows > 1 (28 features x 64 bins ~ 1.7k bins)
+        let g = generate(&DatasetSpec::higgs_like(1500), 21);
+        let params = CoordinatorParams {
+            max_bins: 64,
+            compress: true,
+            ..Default::default()
+        };
+        let c = MultiDeviceCoordinator::from_dmatrix(&g.train.x, params).unwrap();
+        let shard = &c.devices[0];
+        let mut shard_owned = DeviceShard::new(0, 0, shard.storage.clone());
+        let mut rng = crate::util::Pcg64::new(3);
+        let grads: Vec<GradPair> = (0..shard_owned.n_rows())
+            .map(|_| GradPair::new(rng.next_f32() - 0.5, rng.next_f32() + 0.1))
+            .collect();
+        shard_owned.begin_tree(&grads);
+
+        let rows: Vec<u32> = (0..shard_owned.n_rows() as u32).collect();
+        let n_bins = c.n_bins();
+        let mut h_native = Histogram::zeros(n_bins);
+        let mut h_xla = Histogram::zeros(n_bins);
+        NativeBackend
+            .build_histogram(&shard_owned, &rows, &mut h_native)
+            .unwrap();
+        XlaHistBackend::new(a)
+            .build_histogram(&shard_owned, &rows, &mut h_xla)
+            .unwrap();
+        for (i, (n, x)) in h_native.bins.iter().zip(h_xla.bins.iter()).enumerate() {
+            assert!(
+                (n.grad - x.grad).abs() < 1e-2 && (n.hess - x.hess).abs() < 1e-2,
+                "bin {i}: native {n:?} vs xla {x:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn xla_backend_handles_wide_sparse_stride() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // bosch-like: sparse CSR, stride > 16 slots
+        let g = generate(&DatasetSpec::bosch_like(400), 23);
+        let params = CoordinatorParams {
+            max_bins: 8,
+            compress: false,
+            ..Default::default()
+        };
+        let c = MultiDeviceCoordinator::from_dmatrix(&g.train.x, params).unwrap();
+        let mut shard = DeviceShard::new(0, 0, c.devices[0].storage.clone());
+        let grads: Vec<GradPair> = (0..shard.n_rows())
+            .map(|i| GradPair::new((i % 5) as f32 - 2.0, 1.0))
+            .collect();
+        shard.begin_tree(&grads);
+        let rows: Vec<u32> = (0..shard.n_rows() as u32).collect();
+        let n_bins = c.n_bins();
+        let mut h_native = Histogram::zeros(n_bins);
+        let mut h_xla = Histogram::zeros(n_bins);
+        NativeBackend.build_histogram(&shard, &rows, &mut h_native).unwrap();
+        XlaHistBackend::new(a).build_histogram(&shard, &rows, &mut h_xla).unwrap();
+        for (i, (n, x)) in h_native.bins.iter().zip(h_xla.bins.iter()).enumerate() {
+            assert!(
+                (n.grad - x.grad).abs() < 1e-2 && (n.hess - x.hess).abs() < 1e-2,
+                "bin {i}: native {n:?} vs xla {x:?}"
+            );
+        }
+    }
+}

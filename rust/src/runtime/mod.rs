@@ -1,0 +1,51 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! and executes them on the hot path — Python never runs at training time.
+//!
+//! The interchange format is HLO **text**: `HloModuleProto::from_text_file`
+//! re-parses and re-numbers instruction ids, sidestepping the 64-bit-id
+//! protos jax ≥ 0.5 emits that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md and `python/compile/aot.py`).
+//!
+//! Three executables, one per device-resident phase of Figure 1:
+//!
+//! * `grad_{logistic,squared}` — paper §2.5 gradient evaluation,
+//! * `histogram` — the §2.3 hot-spot (L1 Pallas one-hot-matmul kernel,
+//!   lowered in interpret mode), driven by [`XlaHistBackend`],
+//! * `predict` — §2.4 batched ensemble traversal, driven by
+//!   [`XlaPredictor`].
+//!
+//! All artifacts have static tile shapes recorded in `manifest.txt`; this
+//! module pads and chunks dynamic workloads onto those tiles.
+
+pub mod artifacts;
+pub mod hist_backend;
+pub mod predictor;
+
+pub use artifacts::{Artifacts, GradKind};
+pub use hist_backend::XlaHistBackend;
+pub use predictor::XlaPredictor;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: explicit arg, `XGB_TPU_ARTIFACTS` env
+/// var, or walk up from the current directory looking for
+/// `artifacts/manifest.txt`.
+pub fn find_artifact_dir(explicit: Option<&str>) -> Option<std::path::PathBuf> {
+    if let Some(p) = explicit {
+        return Some(p.into());
+    }
+    if let Ok(p) = std::env::var("XGB_TPU_ARTIFACTS") {
+        return Some(p.into());
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.txt").is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

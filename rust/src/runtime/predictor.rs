@@ -1,0 +1,165 @@
+//! XLA-backed ensemble prediction (§2.4): drives the AOT-compiled
+//! array-tree traversal artifact over row tiles and tree chunks.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::data::DMatrix;
+use crate::runtime::Artifacts;
+use crate::tree::RegTree;
+use crate::Float;
+
+/// Batched predictor over the `predict` artifact.
+pub struct XlaPredictor {
+    artifacts: Arc<Artifacts>,
+}
+
+impl XlaPredictor {
+    pub fn new(artifacts: Arc<Artifacts>) -> Self {
+        XlaPredictor { artifacts }
+    }
+
+    /// Maximum feature count the artifact supports.
+    pub fn max_features(&self) -> usize {
+        self.artifacts.manifest.predict_features
+    }
+
+    /// Predict margins for one output group of trees, starting from
+    /// `base_score`. `x` may have fewer features than the artifact (the
+    /// rest are padded missing); more is an error.
+    pub fn predict_margins(
+        &self,
+        trees: &[RegTree],
+        base_score: Float,
+        x: &DMatrix,
+    ) -> Result<Vec<Float>> {
+        let m = self.artifacts.manifest.clone();
+        ensure!(
+            x.n_cols() <= m.predict_features,
+            "dataset has {} features; predict artifact supports {} (regenerate \
+             artifacts with a larger PRED_FEATURES)",
+            x.n_cols(),
+            m.predict_features
+        );
+        for t in trees {
+            ensure!(
+                t.n_nodes() <= m.predict_nodes,
+                "tree with {} nodes exceeds artifact capacity {}",
+                t.n_nodes(),
+                m.predict_nodes
+            );
+        }
+        let n = x.n_rows();
+        let mut out = vec![base_score; n];
+
+        // pre-encode tree chunks once (shared across row tiles)
+        let tn = m.predict_trees * m.predict_nodes;
+        let mut chunks: Vec<(Vec<i32>, Vec<Float>, Vec<i32>, Vec<i32>, Vec<i32>, Vec<Float>)> =
+            Vec::new();
+        for chunk in trees.chunks(m.predict_trees) {
+            let mut feature = vec![0i32; tn];
+            let mut threshold = vec![0.0 as Float; tn];
+            let mut left = vec![-1i32; tn];
+            let mut right = vec![-1i32; tn];
+            let mut default_left = vec![1i32; tn];
+            let mut leaf_value = vec![0.0 as Float; tn];
+            for (ti, tree) in chunk.iter().enumerate() {
+                let a = tree.to_arrays(m.predict_nodes);
+                let lo = ti * m.predict_nodes;
+                feature[lo..lo + m.predict_nodes].copy_from_slice(&a.feature);
+                threshold[lo..lo + m.predict_nodes].copy_from_slice(&a.threshold);
+                left[lo..lo + m.predict_nodes].copy_from_slice(&a.left);
+                right[lo..lo + m.predict_nodes].copy_from_slice(&a.right);
+                default_left[lo..lo + m.predict_nodes].copy_from_slice(&a.default_left);
+                leaf_value[lo..lo + m.predict_nodes].copy_from_slice(&a.leaf_value);
+            }
+            chunks.push((feature, threshold, left, right, default_left, leaf_value));
+        }
+
+        let mut x_buf = vec![Float::NAN; m.predict_rows * m.predict_features];
+        let mut row_lo = 0usize;
+        while row_lo < n {
+            let row_hi = (row_lo + m.predict_rows).min(n);
+            x_buf.fill(Float::NAN);
+            for (ti, row) in (row_lo..row_hi).enumerate() {
+                for (c, v) in x.iter_row(row) {
+                    x_buf[ti * m.predict_features + c] = v;
+                }
+            }
+            for (feature, threshold, left, right, default_left, leaf_value) in &chunks {
+                let margins = self.artifacts.predict_tile(
+                    &x_buf,
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                    default_left,
+                    leaf_value,
+                )?;
+                for (ti, row) in (row_lo..row_hi).enumerate() {
+                    out[row] += margins[ti];
+                }
+            }
+            row_lo = row_hi;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::gbm::{Booster, BoosterParams};
+
+    fn artifacts() -> Option<Arc<Artifacts>> {
+        crate::runtime::find_artifact_dir(None)
+            .and_then(|d| Artifacts::load(d).ok())
+            .map(Arc::new)
+    }
+
+    #[test]
+    fn xla_predict_matches_native_predict() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let g = generate(&DatasetSpec::higgs_like(2500), 31);
+        let params = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: 60, // > predict_trees to exercise tree chunking
+            max_depth: 5,
+            max_bins: 32,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = Booster::train(&params, &g.train, None).unwrap();
+        assert!(b.trees[0].len() > a.manifest.predict_trees);
+        let native = b.predict_margins(&g.valid.x);
+        let xla = XlaPredictor::new(a)
+            .predict_margins(&b.trees[0], b.base_score[0], &g.valid.x)
+            .unwrap();
+        let mut max_err = 0.0f32;
+        for (n, x) in native[0].iter().zip(xla.iter()) {
+            max_err = max_err.max((n - x).abs());
+        }
+        assert!(max_err < 1e-3, "max margin error {max_err}");
+    }
+
+    #[test]
+    fn too_many_features_is_clear_error() {
+        let Some(a) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let g = generate(&DatasetSpec::covtype_like(200), 33);
+        let p = XlaPredictor::new(a);
+        if g.train.n_cols() > p.max_features() {
+            let t = RegTree::new_root(0.0, 1.0);
+            let err = p.predict_margins(&[t], 0.0, &g.train.x);
+            assert!(err.is_err());
+            assert!(format!("{:?}", err.unwrap_err()).contains("features"));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Decision tree substrate: the tree structure, split evaluation over
+//! gradient histograms, the reconfigurable growth policy of paper §2.3,
+//! and the row partitioner that sorts instances into leaves.
+
+pub mod partitioner;
+pub mod policy;
+pub mod regtree;
+pub mod split;
+
+pub use partitioner::RowPartitioner;
+pub use policy::{ExpandEntry, GrowthPolicy, PolicyQueue};
+pub use regtree::{Node, RegTree};
+pub use split::{SplitCandidate, SplitEvaluator, TreeParams};

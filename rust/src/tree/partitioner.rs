@@ -1,0 +1,383 @@
+//! Row partitioner: maintains the mapping from tree leaves to the training
+//! rows they contain, and re-sorts rows into child leaves after each split
+//! (Algorithm 1's `RepartitionInstances`).
+//!
+//! Layout mirrors XGBoost's GPU `RowPartitioner`: one flat `row index`
+//! array per device shard, with each in-construction leaf owning a
+//! contiguous segment. A split stably partitions the node's segment in
+//! place (two-cursor pass through a scratch buffer), so child segments
+//! stay contiguous — which is what keeps the histogram builder's row reads
+//! linear.
+
+use crate::compress::CompressedMatrix;
+use crate::quantile::{HistogramCuts, QuantizedMatrix};
+use crate::tree::split::SplitCandidate;
+
+/// Source of quantised bins for routing decisions — the partitioner works
+/// identically over the compressed and uncompressed matrix forms.
+pub enum BinSource<'a> {
+    Quantized(&'a QuantizedMatrix),
+    Compressed(&'a CompressedMatrix),
+}
+
+impl<'a> BinSource<'a> {
+    #[inline]
+    fn row_stride(&self) -> usize {
+        match self {
+            BinSource::Quantized(q) => q.row_stride,
+            BinSource::Compressed(c) => c.row_stride,
+        }
+    }
+
+    #[inline]
+    fn dense(&self) -> bool {
+        match self {
+            BinSource::Quantized(q) => q.dense,
+            BinSource::Compressed(c) => c.dense,
+        }
+    }
+
+    #[inline]
+    fn null_symbol(&self) -> u32 {
+        match self {
+            BinSource::Quantized(q) => q.null_symbol(),
+            BinSource::Compressed(c) => c.null_symbol(),
+        }
+    }
+
+    #[inline]
+    fn symbol(&self, flat: usize) -> u32 {
+        match self {
+            BinSource::Quantized(q) => q.bins[flat],
+            BinSource::Compressed(c) => c.symbol(flat),
+        }
+    }
+
+    /// The bin of `(row, feature)`, or None if missing.
+    /// Dense layout: direct slot lookup. Sparse ELLPACK: scan the row's
+    /// symbols for one inside the feature's global-bin range.
+    #[inline]
+    fn feature_bin(&self, row: usize, feature: usize, cuts: &HistogramCuts) -> Option<u32> {
+        let stride = self.row_stride();
+        let base = row * stride;
+        if self.dense() {
+            let b = self.symbol(base + feature);
+            if b == self.null_symbol() {
+                None
+            } else {
+                Some(b)
+            }
+        } else {
+            let lo = cuts.ptrs[feature];
+            let hi = cuts.ptrs[feature + 1];
+            for s in 0..stride {
+                let b = self.symbol(base + s);
+                if b >= lo && b < hi {
+                    return Some(b);
+                }
+                if b == self.null_symbol() {
+                    break; // padding is trailing
+                }
+            }
+            None
+        }
+    }
+}
+
+/// Contiguous segment of `rows` belonging to one in-construction leaf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub begin: usize,
+    pub end: usize,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+}
+
+/// Per-shard row partitioner.
+#[derive(Debug, Clone)]
+pub struct RowPartitioner {
+    /// Row indices (local to the shard), grouped by leaf segment.
+    rows: Vec<u32>,
+    /// `segments[nid]` — the segment of tree node `nid`, if it is a leaf
+    /// this shard tracks.
+    segments: Vec<Option<Segment>>,
+    scratch: Vec<u32>,
+    scratch_right: Vec<u32>,
+}
+
+impl RowPartitioner {
+    /// All `n_rows` rows start in the root node (nid 0).
+    pub fn new(n_rows: usize) -> Self {
+        Self::from_rows((0..n_rows as u32).collect())
+    }
+
+    /// Start from an explicit row subset (e.g. a GOSS sample): all given
+    /// rows begin in the root node.
+    pub fn from_rows(rows: Vec<u32>) -> Self {
+        let n = rows.len();
+        RowPartitioner {
+            rows,
+            segments: vec![Some(Segment { begin: 0, end: n })],
+            scratch: Vec::new(),
+            scratch_right: Vec::new(),
+        }
+    }
+
+    /// Rows currently in node `nid` (empty slice if untracked).
+    pub fn node_rows(&self, nid: usize) -> &[u32] {
+        match self.segments.get(nid).copied().flatten() {
+            Some(s) => &self.rows[s.begin..s.end],
+            None => &[],
+        }
+    }
+
+    pub fn node_count(&self, nid: usize) -> usize {
+        self.segments
+            .get(nid)
+            .copied()
+            .flatten()
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Total rows managed.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Apply `split` of node `nid`, materialising children `left`/`right`:
+    /// stably partitions the node's segment so left-going rows precede
+    /// right-going rows. Returns `(n_left, n_right)`.
+    pub fn apply_split(
+        &mut self,
+        nid: usize,
+        split: &SplitCandidate,
+        left: usize,
+        right: usize,
+        bins: &BinSource<'_>,
+        cuts: &HistogramCuts,
+    ) -> (usize, usize) {
+        let seg = self.segments[nid].expect("splitting an untracked node");
+        let slice = &self.rows[seg.begin..seg.end];
+        self.scratch.clear();
+        self.scratch_right.clear();
+        self.scratch.reserve(slice.len());
+        // single stable pass: each row's routing decision evaluated once
+        for &r in slice {
+            if Self::goes_left(r, split, bins, cuts) {
+                self.scratch.push(r);
+            } else {
+                self.scratch_right.push(r);
+            }
+        }
+        let n_left = self.scratch.len();
+        self.rows[seg.begin..seg.begin + n_left].copy_from_slice(&self.scratch);
+        self.rows[seg.begin + n_left..seg.end].copy_from_slice(&self.scratch_right);
+        let mid = seg.begin + n_left;
+        if self.segments.len() <= right {
+            self.segments.resize(right + 1, None);
+        }
+        self.segments[nid] = None;
+        self.segments[left] = Some(Segment {
+            begin: seg.begin,
+            end: mid,
+        });
+        self.segments[right] = Some(Segment {
+            begin: mid,
+            end: seg.end,
+        });
+        (n_left, seg.len() - n_left)
+    }
+
+    /// Routing decision on quantised data: row goes left iff its bin for
+    /// the split feature is `<= split_bin`; missing uses the learned
+    /// default direction.
+    #[inline]
+    pub fn goes_left(
+        row: u32,
+        split: &SplitCandidate,
+        bins: &BinSource<'_>,
+        cuts: &HistogramCuts,
+    ) -> bool {
+        match bins.feature_bin(row as usize, split.feature as usize, cuts) {
+            Some(b) => b <= split.split_bin,
+            None => split.default_left,
+        }
+    }
+
+    /// Final leaf assignment of every row: `out[row] = nid`. Used to update
+    /// the training predictions cache without re-traversing trees.
+    pub fn leaf_of_rows(&self) -> Vec<(usize, &[u32])> {
+        self.segments
+            .iter()
+            .enumerate()
+            .filter_map(|(nid, s)| s.map(|seg| (nid, &self.rows[seg.begin..seg.end])))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+    use crate::hist::GradPairF64;
+    use crate::quantile::Quantizer;
+    use crate::Float;
+
+    fn fixture() -> (QuantizedMatrix, HistogramCuts) {
+        // single feature, values 0..16
+        let vals: Vec<Float> = (0..16).map(|i| i as Float).collect();
+        let x = DMatrix::dense(vals, 16, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        (qm, cuts)
+    }
+
+    fn split_at_bin(bin: u32) -> SplitCandidate {
+        SplitCandidate {
+            feature: 0,
+            split_bin: bin,
+            threshold: 0.0,
+            default_left: false,
+            gain: 1.0,
+            left_sum: GradPairF64::default(),
+            right_sum: GradPairF64::default(),
+        }
+    }
+
+    #[test]
+    fn initial_root_owns_all() {
+        let p = RowPartitioner::new(10);
+        assert_eq!(p.node_rows(0).len(), 10);
+        assert_eq!(p.node_count(0), 10);
+    }
+
+    #[test]
+    fn split_partitions_and_preserves_rows() {
+        let (qm, cuts) = fixture();
+        let mut p = RowPartitioner::new(16);
+        let src = BinSource::Quantized(&qm);
+        let (nl, nr) = p.apply_split(0, &split_at_bin(1), 1, 2, &src, &cuts);
+        assert_eq!(nl + nr, 16);
+        assert!(nl > 0 && nr > 0);
+        // all rows preserved as a set
+        let mut all: Vec<u32> = p.node_rows(1).iter().chain(p.node_rows(2)).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<u32>>());
+        // parent no longer tracked
+        assert_eq!(p.node_count(0), 0);
+        // left rows all have bin <= 1
+        for &r in p.node_rows(1) {
+            assert!(qm.get(r as usize, 0).unwrap() <= 1);
+        }
+        for &r in p.node_rows(2) {
+            assert!(qm.get(r as usize, 0).unwrap() > 1);
+        }
+    }
+
+    #[test]
+    fn split_is_stable() {
+        let (qm, cuts) = fixture();
+        let mut p = RowPartitioner::new(16);
+        let src = BinSource::Quantized(&qm);
+        p.apply_split(0, &split_at_bin(1), 1, 2, &src, &cuts);
+        // within each side, original order preserved (rows ascending here)
+        let left = p.node_rows(1).to_vec();
+        let mut sorted = left.clone();
+        sorted.sort_unstable();
+        assert_eq!(left, sorted);
+    }
+
+    #[test]
+    fn nested_splits_stay_contiguous() {
+        let (qm, cuts) = fixture();
+        let mut p = RowPartitioner::new(16);
+        let src = BinSource::Quantized(&qm);
+        p.apply_split(0, &split_at_bin(1), 1, 2, &src, &cuts);
+        let n1 = p.node_count(1);
+        p.apply_split(1, &split_at_bin(0), 3, 4, &src, &cuts);
+        assert_eq!(p.node_count(3) + p.node_count(4), n1);
+        for &r in p.node_rows(3) {
+            assert_eq!(qm.get(r as usize, 0).unwrap(), 0);
+        }
+        // node 2 untouched
+        assert!(p.node_count(2) > 0);
+    }
+
+    #[test]
+    fn missing_rows_follow_default() {
+        let vals = vec![0.0, Float::NAN, 2.0, Float::NAN];
+        let x = DMatrix::dense(vals, 4, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let src = BinSource::Quantized(&qm);
+
+        let mut split = split_at_bin(0);
+        split.default_left = true;
+        let mut p = RowPartitioner::new(4);
+        p.apply_split(0, &split, 1, 2, &src, &cuts);
+        let left: Vec<u32> = p.node_rows(1).to_vec();
+        assert!(left.contains(&1) && left.contains(&3), "{left:?}");
+
+        split.default_left = false;
+        let mut p = RowPartitioner::new(4);
+        p.apply_split(0, &split, 1, 2, &src, &cuts);
+        let right: Vec<u32> = p.node_rows(2).to_vec();
+        assert!(right.contains(&1) && right.contains(&3), "{right:?}");
+    }
+
+    #[test]
+    fn compressed_source_matches_quantized() {
+        let (qm, cuts) = fixture();
+        let cm = crate::compress::CompressedMatrix::from_quantized(&qm);
+        let mut p1 = RowPartitioner::new(16);
+        let mut p2 = RowPartitioner::new(16);
+        p1.apply_split(0, &split_at_bin(2), 1, 2, &BinSource::Quantized(&qm), &cuts);
+        p2.apply_split(0, &split_at_bin(2), 1, 2, &BinSource::Compressed(&cm), &cuts);
+        assert_eq!(p1.node_rows(1), p2.node_rows(1));
+        assert_eq!(p1.node_rows(2), p2.node_rows(2));
+    }
+
+    #[test]
+    fn sparse_feature_lookup() {
+        // CSR with feature 1 present only on some rows
+        let x = DMatrix::csr(
+            vec![0, 1, 3, 4],
+            vec![0, 0, 1, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+            3,
+            2,
+        );
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let src = BinSource::Quantized(&qm);
+        // row 0 missing feature 1; rows 1, 2 have it
+        assert_eq!(src.feature_bin(0, 1, &cuts), None);
+        assert!(src.feature_bin(1, 1, &cuts).is_some());
+        assert!(src.feature_bin(2, 1, &cuts).is_some());
+        // and feature 0: rows 0,1 present, row 2 missing
+        assert!(src.feature_bin(0, 0, &cuts).is_some());
+        assert_eq!(src.feature_bin(2, 0, &cuts), None);
+    }
+
+    #[test]
+    fn leaf_of_rows_covers_everything() {
+        let (qm, cuts) = fixture();
+        let mut p = RowPartitioner::new(16);
+        let src = BinSource::Quantized(&qm);
+        p.apply_split(0, &split_at_bin(1), 1, 2, &src, &cuts);
+        p.apply_split(2, &split_at_bin(2), 3, 4, &src, &cuts);
+        let leaves = p.leaf_of_rows();
+        let total: usize = leaves.iter().map(|(_, rows)| rows.len()).sum();
+        assert_eq!(total, 16);
+        let nids: Vec<usize> = leaves.iter().map(|(n, _)| *n).collect();
+        assert_eq!(nids, vec![1, 3, 4]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Reconfigurable tree growth strategy (paper §2.3: "The tree growth
+//! strategy in this algorithm is reconfigurable to prioritise expanding
+//! nodes with a higher reduction in the objective function or nodes closer
+//! to the root").
+//!
+//! * [`GrowthPolicy::DepthWise`] — expand nodes closest to the root first
+//!   (XGBoost's default; processes a whole level per histogram round),
+//! * [`GrowthPolicy::LossGuide`] — expand the node with the highest split
+//!   gain first (LightGBM-style best-first growth, bounded by
+//!   `max_leaves`).
+//!
+//! Both are expressed through one [`PolicyQueue`] over [`ExpandEntry`]s so
+//! the multi-device coordinator (Algorithm 1's `expand_queue`) is policy-
+//! agnostic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::hist::GradPairF64;
+use crate::tree::split::{NodeBounds, SplitCandidate};
+
+/// Growth strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrowthPolicy {
+    DepthWise,
+    LossGuide,
+}
+
+impl std::str::FromStr for GrowthPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "depthwise" | "depth_wise" | "depth" => Ok(GrowthPolicy::DepthWise),
+            "lossguide" | "loss_guide" | "loss" => Ok(GrowthPolicy::LossGuide),
+            other => Err(format!("unknown grow_policy {other:?}")),
+        }
+    }
+}
+
+/// A node awaiting expansion (Algorithm 1's queue entries).
+#[derive(Debug, Clone)]
+pub struct ExpandEntry {
+    pub nid: usize,
+    pub depth: usize,
+    /// The best split found for this node (None = no feasible split; the
+    /// node stays a leaf and is never queued).
+    pub split: SplitCandidate,
+    /// Node's total gradient sum, carried so children's evaluation doesn't
+    /// re-reduce rows.
+    pub node_sum: GradPairF64,
+    /// Leaf-weight interval this node's subtree must respect (monotone
+    /// constraint propagation; ±inf when unconstrained).
+    pub bounds: NodeBounds,
+    /// Monotone insertion stamp — ties in the heap break FIFO so the
+    /// expansion order is deterministic.
+    pub timestamp: u64,
+}
+
+struct HeapItem {
+    entry: ExpandEntry,
+    policy: GrowthPolicy,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; define "greater" = "expand sooner".
+        let primary = match self.policy {
+            GrowthPolicy::DepthWise => other.entry.depth.cmp(&self.entry.depth),
+            GrowthPolicy::LossGuide => self
+                .entry
+                .split
+                .gain
+                .partial_cmp(&other.entry.split.gain)
+                .unwrap_or(Ordering::Equal),
+        };
+        primary.then_with(|| other.entry.timestamp.cmp(&self.entry.timestamp))
+    }
+}
+
+/// Priority queue over expansion entries, ordered by the chosen policy.
+pub struct PolicyQueue {
+    heap: BinaryHeap<HeapItem>,
+    policy: GrowthPolicy,
+    next_stamp: u64,
+}
+
+impl PolicyQueue {
+    pub fn new(policy: GrowthPolicy) -> Self {
+        PolicyQueue {
+            heap: BinaryHeap::new(),
+            policy,
+            next_stamp: 0,
+        }
+    }
+
+    pub fn policy(&self) -> GrowthPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, mut entry: ExpandEntry) {
+        entry.timestamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.heap.push(HeapItem {
+            entry,
+            policy: self.policy,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<ExpandEntry> {
+        self.heap.pop().map(|i| i.entry)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hist::GradPairF64;
+
+    fn entry(nid: usize, depth: usize, gain: f64) -> ExpandEntry {
+        ExpandEntry {
+            nid,
+            depth,
+            split: SplitCandidate {
+                feature: 0,
+                split_bin: 0,
+                threshold: 0.0,
+                default_left: true,
+                gain,
+                left_sum: GradPairF64::default(),
+                right_sum: GradPairF64::default(),
+            },
+            node_sum: GradPairF64::default(),
+            bounds: NodeBounds::default(),
+            timestamp: 0,
+        }
+    }
+
+    #[test]
+    fn depthwise_expands_shallow_first() {
+        let mut q = PolicyQueue::new(GrowthPolicy::DepthWise);
+        q.push(entry(5, 2, 10.0));
+        q.push(entry(1, 0, 0.1));
+        q.push(entry(3, 1, 5.0));
+        assert_eq!(q.pop().unwrap().nid, 1);
+        assert_eq!(q.pop().unwrap().nid, 3);
+        assert_eq!(q.pop().unwrap().nid, 5);
+    }
+
+    #[test]
+    fn lossguide_expands_best_gain_first() {
+        let mut q = PolicyQueue::new(GrowthPolicy::LossGuide);
+        q.push(entry(1, 0, 0.1));
+        q.push(entry(5, 3, 10.0));
+        q.push(entry(3, 1, 5.0));
+        assert_eq!(q.pop().unwrap().nid, 5);
+        assert_eq!(q.pop().unwrap().nid, 3);
+        assert_eq!(q.pop().unwrap().nid, 1);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = PolicyQueue::new(GrowthPolicy::DepthWise);
+        q.push(entry(10, 1, 1.0));
+        q.push(entry(20, 1, 2.0));
+        q.push(entry(30, 1, 3.0));
+        assert_eq!(q.pop().unwrap().nid, 10);
+        assert_eq!(q.pop().unwrap().nid, 20);
+        assert_eq!(q.pop().unwrap().nid, 30);
+    }
+
+    #[test]
+    fn lossguide_ties_break_fifo() {
+        let mut q = PolicyQueue::new(GrowthPolicy::LossGuide);
+        q.push(entry(10, 0, 1.0));
+        q.push(entry(20, 0, 1.0));
+        assert_eq!(q.pop().unwrap().nid, 10);
+        assert_eq!(q.pop().unwrap().nid, 20);
+    }
+
+    #[test]
+    fn parse_policy() {
+        assert_eq!("depthwise".parse::<GrowthPolicy>().unwrap(), GrowthPolicy::DepthWise);
+        assert_eq!("lossguide".parse::<GrowthPolicy>().unwrap(), GrowthPolicy::LossGuide);
+        assert!("x".parse::<GrowthPolicy>().is_err());
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = PolicyQueue::new(GrowthPolicy::DepthWise);
+        assert!(q.is_empty());
+        q.push(entry(1, 0, 1.0));
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

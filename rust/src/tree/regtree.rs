@@ -1,0 +1,303 @@
+//! Array-encoded regression tree (XGBoost `RegTree`).
+//!
+//! Nodes live in a flat vector; children are indices. The same encoding is
+//! exported to the L2 JAX predictor (`python/compile/model.py`) as four
+//! parallel arrays (feature, threshold, default_left, children/leaf value),
+//! so the Rust structure is the single source of truth for both predictors.
+
+use crate::data::DMatrix;
+use crate::Float;
+
+/// Sentinel for "no child".
+pub const NO_CHILD: i32 = -1;
+
+/// One tree node. Interior nodes split on `feature < threshold`
+/// (missing → `default_left`); leaves carry `leaf_value` (already scaled
+/// by the learning rate at construction time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub feature: u32,
+    pub threshold: Float,
+    pub left: i32,
+    pub right: i32,
+    pub default_left: bool,
+    pub leaf_value: Float,
+    /// Loss reduction achieved by this node's split (interior only).
+    pub gain: Float,
+    /// Sum of hessians of the training rows that reached this node
+    /// ("cover" in XGBoost dumps).
+    pub cover: Float,
+}
+
+impl Node {
+    pub fn leaf(value: Float, cover: Float) -> Self {
+        Node {
+            feature: 0,
+            threshold: 0.0,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            default_left: true,
+            leaf_value: value,
+            gain: 0.0,
+            cover,
+        }
+    }
+
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.left == NO_CHILD
+    }
+}
+
+/// A regression tree.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegTree {
+    pub nodes: Vec<Node>,
+}
+
+impl RegTree {
+    /// A single-leaf tree (the state before any split).
+    pub fn new_root(value: Float, cover: Float) -> Self {
+        RegTree {
+            nodes: vec![Node::leaf(value, cover)],
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut depth = vec![0usize; self.nodes.len()];
+        let mut max = 0;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.is_leaf() {
+                depth[n.left as usize] = depth[i] + 1;
+                depth[n.right as usize] = depth[i] + 1;
+                max = max.max(depth[i] + 1);
+            }
+        }
+        max
+    }
+
+    /// Convert leaf `nid` into an interior node splitting on
+    /// `feature < threshold`; returns the `(left, right)` child ids.
+    /// Children start as leaves with the provided values/covers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_split(
+        &mut self,
+        nid: usize,
+        feature: u32,
+        threshold: Float,
+        default_left: bool,
+        gain: Float,
+        left_value: Float,
+        left_cover: Float,
+        right_value: Float,
+        right_cover: Float,
+    ) -> (usize, usize) {
+        assert!(self.nodes[nid].is_leaf(), "can only split a leaf");
+        let left = self.nodes.len();
+        let right = left + 1;
+        self.nodes.push(Node::leaf(left_value, left_cover));
+        self.nodes.push(Node::leaf(right_value, right_cover));
+        let n = &mut self.nodes[nid];
+        n.feature = feature;
+        n.threshold = threshold;
+        n.default_left = default_left;
+        n.gain = gain;
+        n.leaf_value = 0.0; // interior nodes carry no leaf value
+        n.left = left as i32;
+        n.right = right as i32;
+        (left, right)
+    }
+
+    /// Route one example (by raw feature values) to its leaf; returns the
+    /// node id.
+    #[inline]
+    pub fn leaf_for_row(&self, x: &DMatrix, row: usize) -> usize {
+        let mut nid = 0usize;
+        loop {
+            let n = &self.nodes[nid];
+            if n.is_leaf() {
+                return nid;
+            }
+            let go_left = match x.get(row, n.feature as usize) {
+                None => n.default_left,
+                Some(v) => v < n.threshold,
+            };
+            nid = if go_left { n.left as usize } else { n.right as usize };
+        }
+    }
+
+    /// Predict the tree output for one row.
+    #[inline]
+    pub fn predict_row(&self, x: &DMatrix, row: usize) -> Float {
+        self.nodes[self.leaf_for_row(x, row)].leaf_value
+    }
+
+    /// Dump in an XGBoost-text-like format (docs / debugging).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_node(0, 0, &mut out);
+        out
+    }
+
+    fn dump_node(&self, nid: usize, indent: usize, out: &mut String) {
+        let pad = "  ".repeat(indent);
+        let n = &self.nodes[nid];
+        if n.is_leaf() {
+            out.push_str(&format!("{pad}{nid}:leaf={:.6},cover={:.1}\n", n.leaf_value, n.cover));
+        } else {
+            out.push_str(&format!(
+                "{pad}{nid}:[f{}<{:.6}] yes={},no={},missing={},gain={:.4},cover={:.1}\n",
+                n.feature,
+                n.threshold,
+                n.left,
+                n.right,
+                if n.default_left { n.left } else { n.right },
+                n.gain,
+                n.cover
+            ));
+            self.dump_node(n.left as usize, indent + 1, out);
+            self.dump_node(n.right as usize, indent + 1, out);
+        }
+    }
+
+    /// Export as parallel arrays padded to `max_nodes` (the fixed-shape
+    /// encoding consumed by the AOT-compiled L2 predictor; see
+    /// `python/compile/model.py::predict_ensemble`).
+    pub fn to_arrays(&self, max_nodes: usize) -> TreeArrays {
+        assert!(self.nodes.len() <= max_nodes, "tree exceeds artifact capacity");
+        let mut a = TreeArrays {
+            feature: vec![0; max_nodes],
+            threshold: vec![0.0; max_nodes],
+            left: vec![NO_CHILD; max_nodes],
+            right: vec![NO_CHILD; max_nodes],
+            default_left: vec![1; max_nodes],
+            leaf_value: vec![0.0; max_nodes],
+        };
+        for (i, n) in self.nodes.iter().enumerate() {
+            a.feature[i] = n.feature as i32;
+            a.threshold[i] = n.threshold;
+            a.left[i] = n.left;
+            a.right[i] = n.right;
+            a.default_left[i] = n.default_left as i32;
+            a.leaf_value[i] = n.leaf_value;
+        }
+        a
+    }
+}
+
+/// Fixed-shape parallel-array encoding of a tree (XLA boundary format).
+#[derive(Debug, Clone)]
+pub struct TreeArrays {
+    pub feature: Vec<i32>,
+    pub threshold: Vec<Float>,
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub default_left: Vec<i32>,
+    pub leaf_value: Vec<Float>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+
+    fn split_tree() -> RegTree {
+        // root: f0 < 5 ? left : right; missing -> right
+        let mut t = RegTree::new_root(0.0, 10.0);
+        t.apply_split(0, 0, 5.0, false, 1.5, -1.0, 6.0, 2.0, 4.0);
+        t
+    }
+
+    #[test]
+    fn root_is_single_leaf() {
+        let t = RegTree::new_root(0.5, 3.0);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.max_depth(), 0);
+        assert!(t.nodes[0].is_leaf());
+    }
+
+    #[test]
+    fn apply_split_structure() {
+        let t = split_tree();
+        assert_eq!(t.n_nodes(), 3);
+        assert_eq!(t.n_leaves(), 2);
+        assert_eq!(t.max_depth(), 1);
+        assert!(!t.nodes[0].is_leaf());
+        assert_eq!(t.nodes[0].left, 1);
+        assert_eq!(t.nodes[0].right, 2);
+    }
+
+    #[test]
+    fn routing_with_missing() {
+        let t = split_tree();
+        let x = DMatrix::dense(vec![3.0, 7.0, Float::NAN], 3, 1);
+        assert_eq!(t.predict_row(&x, 0), -1.0); // 3 < 5 -> left
+        assert_eq!(t.predict_row(&x, 1), 2.0); // 7 >= 5 -> right
+        assert_eq!(t.predict_row(&x, 2), 2.0); // missing -> default right
+    }
+
+    #[test]
+    fn deeper_routing() {
+        let mut t = split_tree();
+        // split left child on f1 < 0, missing -> left
+        t.apply_split(1, 1, 0.0, true, 0.7, -2.0, 3.0, -0.5, 3.0);
+        let x = DMatrix::dense(
+            vec![
+                3.0, -1.0, // -> left,left
+                3.0, 1.0, // -> left,right
+                3.0, Float::NAN, // -> left, missing->left
+            ],
+            3,
+            2,
+        );
+        assert_eq!(t.predict_row(&x, 0), -2.0);
+        assert_eq!(t.predict_row(&x, 1), -0.5);
+        assert_eq!(t.predict_row(&x, 2), -2.0);
+        assert_eq!(t.max_depth(), 2);
+        assert_eq!(t.n_leaves(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "can only split a leaf")]
+    fn double_split_panics() {
+        let mut t = split_tree();
+        t.apply_split(0, 0, 1.0, true, 0.0, 0.0, 1.0, 0.0, 1.0);
+    }
+
+    #[test]
+    fn dump_contains_structure() {
+        let t = split_tree();
+        let d = t.dump();
+        assert!(d.contains("[f0<5"));
+        assert!(d.contains("leaf=-1"));
+        assert!(d.contains("leaf=2"));
+    }
+
+    #[test]
+    fn to_arrays_padding() {
+        let t = split_tree();
+        let a = t.to_arrays(8);
+        assert_eq!(a.feature.len(), 8);
+        assert_eq!(a.left[0], 1);
+        assert_eq!(a.left[3], NO_CHILD); // padding
+        assert_eq!(a.leaf_value[1], -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds artifact capacity")]
+    fn to_arrays_overflow_panics() {
+        split_tree().to_arrays(2);
+    }
+}

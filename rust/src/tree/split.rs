@@ -1,0 +1,550 @@
+//! Split evaluation over gradient histograms (paper §2.3: "The split gain
+//! may then be calculated for each feature and each quantile by performing
+//! a scan over the gradient histogram").
+//!
+//! Implements the XGBoost regularised gain
+//!
+//! ```text
+//! gain = 1/2 [ GL²/(HL+λ) + GR²/(HR+λ) − G²/(H+λ) ] − γ
+//! ```
+//!
+//! with both missing-value default directions evaluated (missing rows'
+//! gradient mass = node total − feature-present total), L1 (`alpha`)
+//! thresholding on leaf weights, and `min_child_weight` feasibility.
+
+use crate::hist::{GradPairF64, Histogram};
+use crate::quantile::HistogramCuts;
+use crate::Float;
+
+/// Tree-regularisation hyperparameters (a subset of XGBoost's, the ones
+/// the paper's benchmark sweeps touch).
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    /// L2 regularisation on leaf weights (`lambda`).
+    pub lambda: f64,
+    /// Minimum loss reduction to make a split (`gamma` /
+    /// `min_split_loss`).
+    pub gamma: f64,
+    /// L1 regularisation on leaf weights (`alpha`).
+    pub alpha: f64,
+    /// Minimum hessian sum in each child.
+    pub min_child_weight: f64,
+    /// Maximum tree depth (0 = unlimited, only sensible with loss-guided
+    /// growth).
+    pub max_depth: usize,
+    /// Maximum number of leaves (0 = unlimited); the binding constraint
+    /// under loss-guided growth, as in LightGBM.
+    pub max_leaves: usize,
+    /// Per-feature monotonicity: `1` = prediction non-decreasing in the
+    /// feature, `-1` = non-increasing, `0` = unconstrained. Empty =
+    /// no constraints. Enforced via leaf-weight bound propagation
+    /// (XGBoost's `monotone_constraints`).
+    pub monotone_constraints: Vec<i8>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            lambda: 1.0,
+            gamma: 0.0,
+            alpha: 0.0,
+            min_child_weight: 1.0,
+            max_depth: 6,
+            max_leaves: 0,
+            monotone_constraints: Vec::new(),
+        }
+    }
+}
+
+/// Leaf-weight interval a node's subtree must respect (monotone
+/// constraint propagation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeBounds {
+    pub lower: f64,
+    pub upper: f64,
+}
+
+impl Default for NodeBounds {
+    fn default() -> Self {
+        NodeBounds {
+            lower: f64::NEG_INFINITY,
+            upper: f64::INFINITY,
+        }
+    }
+}
+
+/// A candidate split produced by [`SplitEvaluator::evaluate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitCandidate {
+    pub feature: u32,
+    /// Global bin index; rows with `bin <= split_bin` for this feature go
+    /// left. `threshold` is the corresponding raw-value cut.
+    pub split_bin: u32,
+    pub threshold: Float,
+    pub default_left: bool,
+    pub gain: f64,
+    pub left_sum: GradPairF64,
+    pub right_sum: GradPairF64,
+}
+
+/// Stateless gain calculator.
+#[derive(Debug, Clone)]
+pub struct SplitEvaluator {
+    pub params: TreeParams,
+}
+
+impl SplitEvaluator {
+    pub fn new(params: TreeParams) -> Self {
+        SplitEvaluator { params }
+    }
+
+    /// Optimal leaf weight `w* = -G̃/(H+λ)` with L1 soft-thresholding of G.
+    #[inline]
+    pub fn leaf_weight(&self, sum: GradPairF64) -> f64 {
+        let g = threshold_l1(sum.grad, self.params.alpha);
+        -g / (sum.hess + self.params.lambda)
+    }
+
+    /// Loss contribution `G̃²/(H+λ)` of a node.
+    #[inline]
+    pub fn gain_term(&self, sum: GradPairF64) -> f64 {
+        let g = threshold_l1(sum.grad, self.params.alpha);
+        g * g / (sum.hess + self.params.lambda)
+    }
+
+    /// Split gain for a (left, right) partition of `parent`.
+    #[inline]
+    pub fn split_gain(&self, parent: GradPairF64, left: GradPairF64, right: GradPairF64) -> f64 {
+        0.5 * (self.gain_term(left) + self.gain_term(right) - self.gain_term(parent))
+            - self.params.gamma
+    }
+
+    #[inline]
+    fn feasible(&self, sum: GradPairF64) -> bool {
+        sum.hess >= self.params.min_child_weight
+    }
+
+    /// Scan a node's histogram and return the best split across all
+    /// features, or `None` if no feasible split has positive gain.
+    ///
+    /// `node_sum` is the node's total gradient pair (known exactly by the
+    /// caller from the parent split; includes rows missing in every
+    /// feature). For each feature, rows *missing that feature* contribute
+    /// `node_sum − Σ feature bins`; both directions for that mass are
+    /// evaluated (XGBoost's default-direction learning, §1 "fully supports
+    /// sparse input data").
+    pub fn evaluate(
+        &self,
+        hist: &Histogram,
+        cuts: &HistogramCuts,
+        node_sum: GradPairF64,
+    ) -> Option<SplitCandidate> {
+        self.evaluate_masked(hist, cuts, node_sum, None)
+    }
+
+    /// [`Self::evaluate`] restricted to features where `mask[f]` is true
+    /// (column sampling — `colsample_bytree`). `None` = all features.
+    pub fn evaluate_masked(
+        &self,
+        hist: &Histogram,
+        cuts: &HistogramCuts,
+        node_sum: GradPairF64,
+        mask: Option<&[bool]>,
+    ) -> Option<SplitCandidate> {
+        self.evaluate_bounded(hist, cuts, node_sum, mask, NodeBounds::default())
+    }
+
+    /// Full evaluation: feature mask + monotone leaf-weight bounds.
+    pub fn evaluate_bounded(
+        &self,
+        hist: &Histogram,
+        cuts: &HistogramCuts,
+        node_sum: GradPairF64,
+        mask: Option<&[bool]>,
+        bounds: NodeBounds,
+    ) -> Option<SplitCandidate> {
+        let mut best: Option<SplitCandidate> = None;
+        let constrained = !self.params.monotone_constraints.is_empty();
+        // the parent term is identical for every candidate (left + right
+        // always equals node_sum) — hoist it out of the scan
+        let parent_gain = if constrained {
+            let wp = self.weight_clamped(node_sum, bounds);
+            self.gain_given_weight(node_sum, wp) + 2.0 * self.params.gamma
+        } else {
+            self.gain_term(node_sum) + 2.0 * self.params.gamma
+        };
+        for f in 0..cuts.n_features() {
+            if let Some(m) = mask {
+                if !m[f] {
+                    continue;
+                }
+            }
+            let constraint = self.constraint_of(f);
+            let lo = cuts.ptrs[f] as usize;
+            let hi = cuts.ptrs[f + 1] as usize;
+            if hi - lo < 2 {
+                continue; // single-bin feature cannot split
+            }
+            let present = hist.feature_sum(lo, hi);
+            let missing = node_sum - present;
+            // forward scan: accumulate present-left; try missing on each
+            // side. The final bin is included: "all present left, missing
+            // right" is the is-present split, meaningful on sparse data.
+            let mut left_present = GradPairF64::default();
+            for b in lo..hi {
+                left_present += hist.bins[b];
+                // candidate A: missing goes right
+                let left = left_present;
+                let right = node_sum - left;
+                self.consider(
+                    &mut best, f, b, cuts, false, left, right, parent_gain, constraint, bounds,
+                );
+                // candidate B: missing goes left
+                let left_m = left_present + missing;
+                let right_m = node_sum - left_m;
+                self.consider(
+                    &mut best, f, b, cuts, true, left_m, right_m, parent_gain, constraint,
+                    bounds,
+                );
+            }
+        }
+        best
+    }
+
+    /// Monotone constraint of feature `f` (0 when unconfigured).
+    #[inline]
+    pub fn constraint_of(&self, f: usize) -> i8 {
+        self.params
+            .monotone_constraints
+            .get(f)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Optimal leaf weight clamped into the node's bound interval.
+    #[inline]
+    pub fn weight_clamped(&self, sum: GradPairF64, bounds: NodeBounds) -> f64 {
+        self.leaf_weight(sum).clamp(bounds.lower, bounds.upper)
+    }
+
+    /// Loss-reduction term for a node forced to weight `w`
+    /// (`-(2 G̃ w + (H+λ) w²)`; equals `gain_term` at the unclamped
+    /// optimum).
+    #[inline]
+    pub fn gain_given_weight(&self, sum: GradPairF64, w: f64) -> f64 {
+        let g = threshold_l1(sum.grad, self.params.alpha);
+        -(2.0 * g * w + (sum.hess + self.params.lambda) * w * w)
+    }
+
+    /// Child bound intervals after applying `split` under `bounds`
+    /// (monotone propagation: both subtrees must stay on their side of
+    /// the split's weight midpoint).
+    pub fn child_bounds(
+        &self,
+        split: &SplitCandidate,
+        bounds: NodeBounds,
+    ) -> (NodeBounds, NodeBounds) {
+        let c = self.constraint_of(split.feature as usize);
+        if c == 0 {
+            return (bounds, bounds);
+        }
+        let wl = self.weight_clamped(split.left_sum, bounds);
+        let wr = self.weight_clamped(split.right_sum, bounds);
+        let mid = 0.5 * (wl + wr);
+        if c > 0 {
+            (
+                NodeBounds { lower: bounds.lower, upper: mid },
+                NodeBounds { lower: mid, upper: bounds.upper },
+            )
+        } else {
+            (
+                NodeBounds { lower: mid, upper: bounds.upper },
+                NodeBounds { lower: bounds.lower, upper: mid },
+            )
+        }
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn consider(
+        &self,
+        best: &mut Option<SplitCandidate>,
+        feature: usize,
+        bin: usize,
+        cuts: &HistogramCuts,
+        default_left: bool,
+        left: GradPairF64,
+        right: GradPairF64,
+        parent_gain: f64,
+        constraint: i8,
+        bounds: NodeBounds,
+    ) {
+        if !self.feasible(left) || !self.feasible(right) {
+            return;
+        }
+        let constrained = !self.params.monotone_constraints.is_empty();
+        let gain = if constrained {
+            let wl = self.weight_clamped(left, bounds);
+            let wr = self.weight_clamped(right, bounds);
+            // reject direction violations on the constrained feature
+            if (constraint > 0 && wl > wr) || (constraint < 0 && wl < wr) {
+                return;
+            }
+            0.5 * (self.gain_given_weight(left, wl) + self.gain_given_weight(right, wr))
+                - 0.5 * parent_gain
+        } else {
+            // == split_gain(node_sum, left, right); parent term precomputed
+            0.5 * (self.gain_term(left) + self.gain_term(right)) - 0.5 * parent_gain
+        };
+        if gain <= 0.0 {
+            return;
+        }
+        let better = match best {
+            None => true,
+            // ties broken toward lower feature id then lower bin for
+            // determinism across device counts
+            Some(b) => {
+                gain > b.gain + 1e-12
+                    || ((gain - b.gain).abs() <= 1e-12
+                        && (feature as u32, bin as u32) < (b.feature, b.split_bin))
+            }
+        };
+        if better {
+            *best = Some(SplitCandidate {
+                feature: feature as u32,
+                split_bin: bin as u32,
+                threshold: cuts.cut_of_bin(bin as u32),
+                default_left,
+                gain,
+                left_sum: left,
+                right_sum: right,
+            });
+        }
+    }
+}
+
+/// L1 soft-thresholding of the gradient sum.
+#[inline]
+fn threshold_l1(g: f64, alpha: f64) -> f64 {
+    if alpha == 0.0 {
+        g
+    } else if g > alpha {
+        g - alpha
+    } else if g < -alpha {
+        g + alpha
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+    use crate::hist::build_histogram_quantized;
+    use crate::quantile::{HistogramCuts, Quantizer};
+    use crate::GradPair;
+
+    /// Brute-force best split over raw values for cross-checking.
+    fn brute_force_best_gain(
+        x: &DMatrix,
+        grads: &[GradPair],
+        cuts: &HistogramCuts,
+        ev: &SplitEvaluator,
+    ) -> f64 {
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let mut best = 0.0f64;
+        for f in 0..x.n_cols() {
+            for cut in cuts.feature_cuts(f) {
+                for missing_left in [false, true] {
+                    let mut left = GradPairF64::default();
+                    for r in 0..x.n_rows() {
+                        let goes_left = match x.get(r, f) {
+                            Some(v) => v < *cut,
+                            None => missing_left,
+                        };
+                        if goes_left {
+                            left += GradPairF64::from_single(grads[r]);
+                        }
+                    }
+                    let right = node_sum - left;
+                    if left.hess >= ev.params.min_child_weight
+                        && right.hess >= ev.params.min_child_weight
+                    {
+                        best = best.max(ev.split_gain(node_sum, left, right));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn fixture(seed: u64, n: usize, d: usize, p_nan: f64) -> (DMatrix, Vec<GradPair>) {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let vals: Vec<Float> = (0..n * d)
+            .map(|_| {
+                if rng.next_f64() < p_nan {
+                    Float::NAN
+                } else {
+                    rng.next_f32() * 4.0 - 2.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, d);
+        let grads: Vec<GradPair> = (0..n)
+            .map(|_| GradPair::new(rng.next_f32() * 2.0 - 1.0, rng.next_f32() * 0.9 + 0.1))
+            .collect();
+        (x, grads)
+    }
+
+    #[test]
+    fn histogram_split_matches_brute_force() {
+        for seed in 0..5u64 {
+            let (x, grads) = fixture(seed, 150, 3, 0.1);
+            let cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+            let qm = Quantizer::new(cuts.clone()).quantize(&x);
+            let rows: Vec<u32> = (0..x.n_rows() as u32).collect();
+            let mut hist = Histogram::zeros(qm.n_bins);
+            build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+            let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+                a + GradPairF64::from_single(*g)
+            });
+            let ev = SplitEvaluator::new(TreeParams {
+                min_child_weight: 0.0,
+                ..Default::default()
+            });
+            let got = ev.evaluate(&hist, &cuts, node_sum).map(|s| s.gain).unwrap_or(0.0);
+            let want = brute_force_best_gain(&x, &grads, &cuts, &ev);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "seed {seed}: hist gain {got} vs brute force {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn leaf_weight_formula() {
+        let ev = SplitEvaluator::new(TreeParams {
+            lambda: 1.0,
+            ..Default::default()
+        });
+        let w = ev.leaf_weight(GradPairF64::new(4.0, 3.0));
+        assert!((w - (-1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_shrinks_leaf_weight() {
+        let ev = SplitEvaluator::new(TreeParams {
+            lambda: 0.0,
+            alpha: 1.0,
+            ..Default::default()
+        });
+        assert!((ev.leaf_weight(GradPairF64::new(3.0, 2.0)) - (-1.0)).abs() < 1e-12);
+        assert_eq!(ev.leaf_weight(GradPairF64::new(0.5, 2.0)), 0.0);
+    }
+
+    #[test]
+    fn gamma_suppresses_weak_splits() {
+        let (x, grads) = fixture(1, 100, 2, 0.0);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..100).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let weak = SplitEvaluator::new(TreeParams::default())
+            .evaluate(&hist, &cuts, node_sum);
+        let strong_gamma = SplitEvaluator::new(TreeParams {
+            gamma: 1e9,
+            ..Default::default()
+        })
+        .evaluate(&hist, &cuts, node_sum);
+        assert!(weak.is_some());
+        assert!(strong_gamma.is_none());
+    }
+
+    #[test]
+    fn min_child_weight_blocks_tiny_children() {
+        // perfectly separable single feature; huge min_child_weight blocks
+        let x = DMatrix::dense(vec![0.0, 1.0, 2.0, 3.0], 4, 1);
+        let grads = vec![
+            GradPair::new(-1.0, 1.0),
+            GradPair::new(-1.0, 1.0),
+            GradPair::new(1.0, 1.0),
+            GradPair::new(1.0, 1.0),
+        ];
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &[0, 1, 2, 3], &mut hist);
+        let node_sum = GradPairF64::new(0.0, 4.0);
+        let ok = SplitEvaluator::new(TreeParams {
+            min_child_weight: 2.0,
+            ..Default::default()
+        })
+        .evaluate(&hist, &cuts, node_sum);
+        assert!(ok.is_some());
+        assert_eq!(ok.unwrap().left_sum.hess, 2.0);
+        let blocked = SplitEvaluator::new(TreeParams {
+            min_child_weight: 3.0,
+            ..Default::default()
+        })
+        .evaluate(&hist, &cuts, node_sum);
+        assert!(blocked.is_none());
+    }
+
+    #[test]
+    fn missing_direction_is_learned() {
+        // feature present on half the rows; missing rows all have positive
+        // gradient, present-low rows negative -> best split should send
+        // missing right with the positives
+        let mut vals = Vec::new();
+        let mut grads = Vec::new();
+        for i in 0..40 {
+            if i % 2 == 0 {
+                vals.push((i % 10) as Float);
+                grads.push(GradPair::new(if i % 10 < 5 { -1.0 } else { 1.0 }, 1.0));
+            } else {
+                vals.push(Float::NAN);
+                grads.push(GradPair::new(1.0, 1.0));
+            }
+        }
+        let x = DMatrix::dense(vals, 40, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..40).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let ev = SplitEvaluator::new(TreeParams {
+            min_child_weight: 0.0,
+            ..Default::default()
+        });
+        let s = ev.evaluate(&hist, &cuts, node_sum).unwrap();
+        assert!(!s.default_left, "missing mass should go right: {s:?}");
+    }
+
+    #[test]
+    fn split_sums_partition_node_sum() {
+        let (x, grads) = fixture(3, 200, 4, 0.2);
+        let cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..200).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let ev = SplitEvaluator::new(TreeParams::default());
+        let s = ev.evaluate(&hist, &cuts, node_sum).unwrap();
+        let total = s.left_sum + s.right_sum;
+        assert!((total.grad - node_sum.grad).abs() < 1e-9);
+        assert!((total.hess - node_sum.hess).abs() < 1e-9);
+    }
+}

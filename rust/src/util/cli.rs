@@ -1,0 +1,173 @@
+//! Minimal GNU-style argument parser (the offline mirror has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean flags, repeated keys and
+//! positional arguments. Used by the `xgb-tpu` binary, the examples and the
+//! bench harness.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct ArgParser {
+    named: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+    program: String,
+}
+
+impl ArgParser {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        Self::parse(&args)
+    }
+
+    /// Parse from an explicit argv (index 0 is the program name).
+    pub fn parse(argv: &[String]) -> Self {
+        let mut p = ArgParser {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    p.named
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v[1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    p.named
+                        .entry(stripped.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // boolean flag
+                    p.named
+                        .entry(stripped.to_string())
+                        .or_default()
+                        .push("true".to_string());
+                }
+            } else {
+                p.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        p
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Last value given for `key`, if any.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values given for `key`.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.named.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.named.contains_key(key)
+    }
+
+    /// Boolean flag: present without value, or `--key true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        match self.get(key) {
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    /// Typed getter with default. Panics with a readable message on a
+    /// malformed value — appropriate for CLI boundary code.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}: cannot parse {v:?}: {e}")),
+        }
+    }
+
+    /// String getter with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Iterate over all `--key value` pairs in insertion-agnostic (sorted)
+    /// order; used to forward unknown keys into a [`crate::util::Config`].
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.named
+            .iter()
+            .flat_map(|(k, vs)| vs.iter().map(move |v| (k.as_str(), v.as_str())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog")
+            .chain(s.iter().copied())
+            .map(String::from)
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let p = ArgParser::parse(&argv(&["--rows", "100", "--name=airline"]));
+        assert_eq!(p.get("rows"), Some("100"));
+        assert_eq!(p.get("name"), Some("airline"));
+    }
+
+    #[test]
+    fn parses_flags() {
+        let p = ArgParser::parse(&argv(&["--verbose", "--compress", "false"]));
+        assert!(p.flag("verbose"));
+        assert!(!p.flag("compress"));
+        assert!(!p.flag("absent"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let p = ArgParser::parse(&argv(&["train", "--n", "5", "data.csv"]));
+        assert_eq!(p.positional(), &["train".to_string(), "data.csv".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let p = ArgParser::parse(&argv(&["--eta", "0.3", "--depth", "6"]));
+        assert_eq!(p.get_parse::<f64>("eta", 0.1), 0.3);
+        assert_eq!(p.get_parse::<usize>("depth", 8), 6);
+        assert_eq!(p.get_parse::<usize>("missing", 8), 8);
+    }
+
+    #[test]
+    fn repeated_keys_keep_all_values() {
+        let p = ArgParser::parse(&argv(&["--dataset", "higgs", "--dataset", "bosch"]));
+        assert_eq!(p.get_all("dataset"), &["higgs".to_string(), "bosch".to_string()]);
+        assert_eq!(p.get("dataset"), Some("bosch"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_value_panics() {
+        let p = ArgParser::parse(&argv(&["--eta", "abc"]));
+        let _ = p.get_parse::<f64>("eta", 0.1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Key–value configuration system (the offline mirror has no `serde`).
+//!
+//! Mirrors XGBoost's flat string-parameter interface: every trainer
+//! parameter is addressable as `key=value`. Sources compose in priority
+//! order: defaults < config file < CLI overrides. Config files use a simple
+//! `key = value` line format with `#` comments (a TOML subset).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Flat, typed-on-read configuration store.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `key = value` file (TOML-subset; `#` comments, blank lines,
+    /// optional quotes around the value, `[section]` headers flattened to
+    /// `section.key`).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_str_contents(&text)
+    }
+
+    /// Parse config from a string (same format as [`Config::from_file`]).
+    pub fn from_str_contents(text: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("config line {}: missing '=': {raw:?}", lineno + 1))?;
+            let key = line[..eq].trim();
+            let mut value = line[eq + 1..].trim();
+            if value.len() >= 2
+                && ((value.starts_with('"') && value.ends_with('"'))
+                    || (value.starts_with('\'') && value.ends_with('\'')))
+            {
+                value = &value[1..value.len() - 1];
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full_key, value.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) -> &mut Self {
+        self.values.insert(key.into(), value.into());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    /// Typed read with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("config key {key}: cannot parse {v:?} as {}",
+                    std::any::type_name::<T>())
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merge(&mut self, other: &Config) -> &mut Self {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.values {
+            writeln!(f, "{k} = {v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let cfg = Config::from_str_contents(
+            "# comment\nmax_depth = 6\neta = 0.3  # inline\nname = \"airline\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("max_depth"), Some("6"));
+        assert_eq!(cfg.get_parse("eta", 0.0).unwrap(), 0.3);
+        assert_eq!(cfg.get("name"), Some("airline"));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let cfg = Config::from_str_contents("[tree]\nmax_depth = 8\n[booster]\neta = 0.1\n")
+            .unwrap();
+        assert_eq!(cfg.get("tree.max_depth"), Some("8"));
+        assert_eq!(cfg.get("booster.eta"), Some("0.1"));
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::from_str_contents("x = 1\ny = 2\n").unwrap();
+        let b = Config::from_str_contents("y = 3\nz = 4\n").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.get("y"), Some("3"));
+        assert_eq!(a.get("z"), Some("4"));
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let cfg = Config::from_str_contents("a = true\nb = 0\nc = yes\n").unwrap();
+        assert!(cfg.get_bool("a", false));
+        assert!(!cfg.get_bool("b", true));
+        assert!(cfg.get_bool("c", false));
+        assert!(cfg.get_bool("absent", true));
+    }
+
+    #[test]
+    fn missing_equals_is_error() {
+        assert!(Config::from_str_contents("novalue\n").is_err());
+    }
+
+    #[test]
+    fn bad_typed_read_is_error() {
+        let cfg = Config::from_str_contents("eta = abc\n").unwrap();
+        assert!(cfg.get_parse::<f64>("eta", 0.1).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Utility substrates: deterministic RNG, CLI parsing, config system,
+//! timing, and a hand-rolled property-testing harness.
+//!
+//! The offline crate mirror for this environment does not carry `rand`,
+//! `clap`, `serde`, or `proptest`, so these are implemented from scratch
+//! (see `DESIGN.md` §2).
+
+pub mod cli;
+pub mod config;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use cli::ArgParser;
+pub use config::Config;
+pub use rng::Pcg64;
+pub use timer::{ScopedTimer, Stopwatch};

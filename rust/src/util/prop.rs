@@ -1,0 +1,191 @@
+//! Hand-rolled property-based testing harness (the offline mirror has no
+//! `proptest`/`quickcheck`).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! shape-generation helpers). [`check`] runs it for `N` cases with distinct
+//! derived seeds and reports the failing seed on panic, so failures are
+//! reproducible with [`check_seeded`].
+//!
+//! Used by `rust/tests/prop_*.rs` for the coordinator, quantile, compression
+//! and tree invariants called out in `DESIGN.md` §6.
+
+use crate::util::rng::Pcg64;
+
+/// Random generator handed to properties, with convenience constructors for
+/// the shapes this codebase cares about.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Case index (0..cases); useful for size-ramping.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]`.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    /// Vector of uniform f32 values, possibly containing NaNs (missing
+    /// values) with probability `p_nan`.
+    pub fn feature_column(&mut self, n: usize, p_nan: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if self.rng.next_f64() < p_nan {
+                    f32::NAN
+                } else {
+                    self.rng.next_f32() * 20.0 - 10.0
+                }
+            })
+            .collect()
+    }
+
+    /// Vector of gradient pairs with positive hessians.
+    pub fn grad_pairs(&mut self, n: usize) -> Vec<crate::GradPair> {
+        (0..n)
+            .map(|_| {
+                crate::GradPair::new(
+                    self.rng.next_f32() * 2.0 - 1.0,
+                    self.rng.next_f32() * 0.9 + 0.1,
+                )
+            })
+            .collect()
+    }
+
+    /// Random u32 bin values below `n_bins`.
+    pub fn bins(&mut self, n: usize, n_bins: u32) -> Vec<u32> {
+        (0..n).map(|_| self.rng.gen_range(n_bins as usize) as u32).collect()
+    }
+}
+
+/// Run `prop` for `cases` random cases under the root `seed`.
+/// Panics (propagating the property's panic) after printing the failing
+/// case's reproduction seed.
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = crate::util::rng::splitmix64(seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Pcg64::new(case_seed),
+                case,
+            };
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases}; reproduce with \
+                 check_seeded({case_seed:#x}, ..)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by its printed seed.
+pub fn check_seeded<F: FnMut(&mut Gen)>(case_seed: u64, mut prop: F) {
+    let mut g = Gen {
+        rng: Pcg64::new(case_seed),
+        case: 0,
+    };
+    prop(&mut g);
+}
+
+/// Assert two f64 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], atol: f64, rtol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose_f32(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check(1, 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn cases_get_distinct_randomness() {
+        let mut values = Vec::new();
+        check(2, 10, |g| values.push(g.rng.next_u64()));
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), values.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check(3, 10, |g| {
+            let v = g.int(0, 100);
+            assert!(v < 1000); // passes
+            assert!(g.case < 5, "fail at case >= 5");
+        });
+    }
+
+    #[test]
+    fn feature_column_nan_rate() {
+        let mut g = Gen {
+            rng: Pcg64::new(4),
+            case: 0,
+        };
+        let col = g.feature_column(10_000, 0.2);
+        let nans = col.iter().filter(|v| v.is_nan()).count();
+        assert!((nans as f64 / 10_000.0 - 0.2).abs() < 0.03);
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-9, 2.0], 1e-6, 0.0);
+        let r = std::panic::catch_unwind(|| assert_allclose(&[1.0], &[1.1], 1e-6, 0.0));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn grad_pairs_have_positive_hessians() {
+        let mut g = Gen {
+            rng: Pcg64::new(5),
+            case: 0,
+        };
+        for gp in g.grad_pairs(1000) {
+            assert!(gp.hess > 0.0);
+        }
+    }
+}

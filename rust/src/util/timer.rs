@@ -1,0 +1,188 @@
+//! Timing utilities used by the coordinator's per-phase accounting and by
+//! the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A restartable accumulating stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Option<Instant>,
+    accumulated: Duration,
+    laps: usize,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: None,
+            accumulated: Duration::ZERO,
+            laps: 0,
+        }
+    }
+
+    pub fn start(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.start.take() {
+            self.accumulated += s.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.accumulated
+            + self
+                .start
+                .map(|s| s.elapsed())
+                .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+
+    pub fn reset(&mut self) {
+        *self = Stopwatch::new();
+    }
+}
+
+/// Named per-phase timing registry (e.g. "hist", "partition", "allreduce").
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimers {
+    timers: BTreeMap<String, Stopwatch>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under phase `name`, accumulating across calls.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let sw = self.timers.entry(name.to_string()).or_default();
+        sw.start();
+        let out = f();
+        // re-borrow: closure may have inserted phases if it had access; here
+        // it cannot, so the entry still exists.
+        self.timers.get_mut(name).unwrap().stop();
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let sw = self.timers.entry(name.to_string()).or_default();
+        sw.accumulated += d;
+        sw.laps += 1;
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.timers.get(name).map(|t| t.elapsed_secs()).unwrap_or(0.0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.timers.iter().map(|(k, v)| (k.as_str(), v.elapsed_secs()))
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.iter() {
+            out.push_str(&format!("{k:>16}: {v:9.4}s\n"));
+        }
+        out
+    }
+}
+
+/// RAII timer that prints on drop when verbose mode is on; used in examples.
+pub struct ScopedTimer {
+    label: String,
+    start: Instant,
+    verbose: bool,
+}
+
+impl ScopedTimer {
+    pub fn new(label: impl Into<String>) -> Self {
+        ScopedTimer {
+            label: label.into(),
+            start: Instant::now(),
+            verbose: true,
+        }
+    }
+
+    pub fn quiet(label: impl Into<String>) -> Self {
+        ScopedTimer {
+            label: label.into(),
+            start: Instant::now(),
+            verbose: false,
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        if self.verbose {
+            eprintln!("[time] {}: {:.4}s", self.label, self.elapsed_secs());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let first = sw.elapsed();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > first);
+        assert_eq!(sw.laps(), 2);
+    }
+
+    #[test]
+    fn stopwatch_running_elapsed() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed() > Duration::ZERO);
+    }
+
+    #[test]
+    fn phase_timers_accumulate_by_name() {
+        let mut pt = PhaseTimers::new();
+        pt.time("hist", || std::thread::sleep(Duration::from_millis(2)));
+        pt.time("hist", || std::thread::sleep(Duration::from_millis(2)));
+        pt.time("split", || ());
+        assert!(pt.secs("hist") >= 0.004);
+        assert!(pt.secs("split") >= 0.0);
+        assert_eq!(pt.iter().count(), 2);
+        assert!(pt.report().contains("hist"));
+    }
+
+    #[test]
+    fn phase_timers_add_duration() {
+        let mut pt = PhaseTimers::new();
+        pt.add("comm", Duration::from_millis(250));
+        assert!((pt.secs("comm") - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,167 @@
+//! Full-pipeline integration over the AOT artifacts: the Figure-1
+//! phases executed through PJRT must agree with the native stack.
+//! These tests require `make artifacts`; they self-skip (with a stderr
+//! note) when the artifacts are missing so `cargo test` stays runnable
+//! before the first build.
+
+use std::sync::Arc;
+
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::runtime::{Artifacts, GradKind, XlaHistBackend, XlaPredictor};
+
+fn artifacts() -> Option<Arc<Artifacts>> {
+    match xgb_tpu::runtime::find_artifact_dir(None).map(Artifacts::load) {
+        Some(Ok(a)) => Some(Arc::new(a)),
+        _ => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// §2.5: the gradient artifact reproduces equations (1)-(2) across tile
+/// boundaries and for the squared-error objective.
+#[test]
+fn gradient_artifact_parity() {
+    let Some(a) = artifacts() else { return };
+    let n = a.manifest.grad_tile + 1234; // forces padding of the tail tile
+    let mut rng = xgb_tpu::util::Pcg64::new(99);
+    let margins: Vec<f32> = (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+    let labels: Vec<f32> = (0..n).map(|_| f32::from(rng.next_f32() < 0.4)).collect();
+
+    let (g, h) = a.gradients(GradKind::Logistic, &margins, &labels).unwrap();
+    assert_eq!(g.len(), n);
+    for i in (0..n).step_by(317) {
+        let p = 1.0 / (1.0 + (-margins[i]).exp());
+        assert!((g[i] - (p - labels[i])).abs() < 1e-5);
+        assert!((h[i] - p * (1.0 - p)).abs() < 1e-5);
+    }
+
+    let (g, h) = a.gradients(GradKind::Squared, &margins, &labels).unwrap();
+    for i in (0..n).step_by(317) {
+        assert!((g[i] - (margins[i] - labels[i])).abs() < 1e-6);
+        assert_eq!(h[i], 1.0);
+    }
+}
+
+/// §2.3 + §2.2: training through the Pallas histogram artifact over
+/// *compressed* shards reproduces the native model exactly (same splits).
+#[test]
+fn xla_training_reproduces_native_model() {
+    let Some(a) = artifacts() else { return };
+    let g = generate(&DatasetSpec::airline_like(2500), 3);
+    let params = BoosterParams {
+        objective: "binary:logistic".into(),
+        num_rounds: 2,
+        max_depth: 4,
+        max_bins: 32,
+        compress: true,
+        n_devices: 2,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let native = Booster::train(&params, &g.train, None).unwrap();
+    let xla = Booster::train_with_backend(
+        &params,
+        &g.train,
+        None,
+        Box::new(XlaHistBackend::new(a)),
+    )
+    .unwrap();
+    // identical structure; leaf values equal to f32-accumulation tolerance
+    for (tn, tx) in native.trees[0].iter().zip(xla.trees[0].iter()) {
+        assert_eq!(tn.n_nodes(), tx.n_nodes());
+        for (a, b) in tn.nodes.iter().zip(tx.nodes.iter()) {
+            assert_eq!(a.feature, b.feature);
+            assert_eq!(a.left, b.left);
+            assert!((a.leaf_value - b.leaf_value).abs() < 1e-4);
+        }
+    }
+}
+
+/// §2.4: the prediction artifact agrees with native traversal on sparse
+/// input with missing values and >1 tree chunk.
+#[test]
+fn predict_artifact_parity_sparse() {
+    let Some(a) = artifacts() else { return };
+    // 28-feature higgs fits the 32-feature artifact
+    let g = generate(&DatasetSpec::higgs_like(3000), 13);
+    let params = BoosterParams {
+        objective: "binary:logistic".into(),
+        num_rounds: a.manifest.predict_trees + 7, // force chunking
+        max_depth: 4,
+        max_bins: 32,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let b = Booster::train(&params, &g.train, None).unwrap();
+    let native = b.predict_margins(&g.valid.x).remove(0);
+    let xla = XlaPredictor::new(a)
+        .predict_margins(&b.trees[0], b.base_score[0], &g.valid.x)
+        .unwrap();
+    for (i, (n, x)) in native.iter().zip(xla.iter()).enumerate() {
+        assert!((n - x).abs() < 1e-3, "row {i}: {n} vs {x}");
+    }
+}
+
+/// The full Figure-1 loop with every artifact engaged: XLA gradients
+/// feeding the XLA histogram backend, scored by the XLA predictor,
+/// must produce a learning model.
+#[test]
+fn full_xla_pipeline_learns() {
+    let Some(a) = artifacts() else { return };
+    let g = generate(&DatasetSpec::higgs_like(1500), 21);
+    let n = g.train.n_rows();
+
+    // manual 2-round boosting loop through artifacts only
+    let mut coordinator = xgb_tpu::coordinator::MultiDeviceCoordinator::with_backend(
+        &g.train.x,
+        xgb_tpu::coordinator::CoordinatorParams {
+            max_bins: 32,
+            tree: xgb_tpu::tree::TreeParams {
+                max_depth: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        Box::new(XlaHistBackend::new(a.clone())),
+    )
+    .unwrap();
+
+    let mut margins = vec![0.0f32; n];
+    let mut trees = Vec::new();
+    for _round in 0..2 {
+        // §2.5 gradients on "device"
+        let (grad, hess) = a
+            .gradients(GradKind::Logistic, &margins, &g.train.y)
+            .unwrap();
+        let gp: Vec<xgb_tpu::GradPair> = grad
+            .iter()
+            .zip(hess.iter())
+            .map(|(&g, &h)| xgb_tpu::GradPair::new(g, h.max(1e-16)))
+            .collect();
+        // §2.3 tree construction through the Pallas kernel
+        let r = coordinator.build_tree(&gp).unwrap();
+        for (m, d) in margins.iter_mut().zip(r.deltas.iter()) {
+            *m += *d;
+        }
+        trees.push(r.tree);
+    }
+    // §2.4 evaluation through the predict artifact
+    let preds = XlaPredictor::new(a)
+        .predict_margins(&trees, 0.0, &g.valid.x)
+        .unwrap();
+    let acc = preds
+        .iter()
+        .zip(g.valid.y.iter())
+        .filter(|(&p, &y)| (p > 0.0) == (y == 1.0))
+        .count() as f64
+        / preds.len() as f64;
+    let majority = {
+        let pos = g.valid.y.iter().filter(|&&y| y == 1.0).count() as f64 / preds.len() as f64;
+        pos.max(1.0 - pos)
+    };
+    eprintln!("full-xla accuracy {acc:.3} vs majority {majority:.3}");
+    assert!(acc > majority - 0.02, "pipeline must at least track majority");
+}

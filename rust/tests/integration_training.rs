@@ -1,0 +1,218 @@
+//! Cross-module integration tests: end-to-end training behaviour on every
+//! Table 1 task family, multi-device determinism, compression parity, and
+//! failure injection (DESIGN.md §6).
+
+use xgb_tpu::baselines::{train_catboost_like, train_lightgbm_like, CatBoostParams, LightGbmParams};
+use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator, NativeBackend};
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::gbm::{Booster, BoosterParams};
+
+fn quick(objective: &str, rounds: usize) -> BoosterParams {
+    BoosterParams {
+        objective: objective.into(),
+        num_rounds: rounds,
+        max_bins: 32,
+        max_depth: 4,
+        ..Default::default()
+    }
+}
+
+/// Every Table 1 family trains and improves over its trivial baseline.
+#[test]
+fn all_dataset_families_learn() {
+    for (spec, better_than_trivial) in [
+        (DatasetSpec::year_prediction_like(2500), true),
+        (DatasetSpec::synthetic_like(2500), true),
+        (DatasetSpec::higgs_like(2500), true),
+        (DatasetSpec::covtype_like(2500), true),
+        (DatasetSpec::bosch_like(1500), false), // heavily imbalanced: check runs, not acc
+        (DatasetSpec::airline_like(2500), true),
+    ] {
+        let g = generate(&spec, 123);
+        let mut p = quick(spec.task.objective(), 10);
+        p.num_class = spec.task.num_class();
+        p.eval_metric = spec.task.metric().into();
+        let b = Booster::train(&p, &g.train, Some(&g.valid))
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let h = &b.eval_history;
+        assert!(!h.is_empty(), "{}", spec.name);
+        if better_than_trivial {
+            let (first, last) = (h.first().unwrap(), h.last().unwrap());
+            let improving = if spec.task.metric() == "rmse" {
+                last.train <= first.train
+            } else {
+                last.train >= first.train
+            };
+            assert!(improving, "{}: train metric should improve", spec.name);
+        }
+    }
+}
+
+/// Compression is lossless end-to-end: for any device count, packed and
+/// unpacked shards build identical ensembles (§2.2). Across device counts
+/// the *quantisation* differs slightly (the distributed sketch merges in
+/// p-dependent order, as in real distributed XGBoost), so cross-p
+/// equivalence is checked at the prediction-quality level; exact cross-p
+/// tree equality under shared cuts is covered by the coordinator unit
+/// test `multi_device_equals_single_device`.
+#[test]
+fn device_count_and_compression_invariance() {
+    let g = generate(&DatasetSpec::airline_like(4000), 9);
+    let make = |devices: usize, compress: bool| {
+        let params = BoosterParams {
+            n_devices: devices,
+            compress,
+            eval_metric: "accuracy".into(),
+            eval_every: 0,
+            ..quick("binary:logistic", 5)
+        };
+        Booster::train(&params, &g.train, Some(&g.valid)).unwrap()
+    };
+    // exact parity: packed vs unpacked at fixed p
+    for p in [1usize, 3, 8] {
+        let a = make(p, false);
+        let b = make(p, true);
+        assert_eq!(a.trees[0], b.trees[0], "p={p}: compression must be lossless");
+    }
+    // statistical parity: accuracy stable across device counts
+    let accs: Vec<f64> = [1usize, 3, 8]
+        .iter()
+        .map(|&p| make(p, true).eval_history.last().unwrap().valid.unwrap())
+        .collect();
+    let spread = accs.iter().cloned().fold(f64::MIN, f64::max)
+        - accs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 2.0, "accuracy spread across p too wide: {accs:?}");
+}
+
+/// Ring and serial all-reduce give identical models.
+#[test]
+fn allreduce_algo_invariance() {
+    let g = generate(&DatasetSpec::higgs_like(3000), 31);
+    let make = |algo: &str| {
+        let params = BoosterParams {
+            allreduce: algo.into(),
+            n_devices: 4,
+            eval_every: 0,
+            ..quick("binary:logistic", 4)
+        };
+        Booster::train(&params, &g.train, None).unwrap()
+    };
+    let a = make("ring");
+    let b = make("serial");
+    assert_eq!(a.trees[0], b.trees[0]);
+}
+
+/// Sparse (CSR) input trains correctly through the whole stack.
+#[test]
+fn sparse_end_to_end() {
+    let g = generate(&DatasetSpec::bosch_like(2000), 77);
+    let p = BoosterParams {
+        eval_metric: "auc".into(),
+        ..quick("binary:logistic", 8)
+    };
+    let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+    let auc = b.eval_history.last().unwrap().valid.unwrap();
+    assert!(auc > 0.5, "auc {auc} must beat random on sparse data");
+}
+
+/// The three trainers (xgb, lightgbm-like, catboost-like) rank roughly as
+/// the paper's accuracy columns do on a binary task: xgb ≈ lgb > cat.
+#[test]
+fn accuracy_ordering_matches_table2_shape() {
+    let g = generate(&DatasetSpec::higgs_like(6000), 55);
+    let xgb = Booster::train(
+        &BoosterParams {
+            eta: 0.1,
+            ..quick("binary:logistic", 25)
+        },
+        &g.train,
+        None,
+    )
+    .unwrap();
+    let (lgb, _) = train_lightgbm_like(
+        &LightGbmParams {
+            num_rounds: 25,
+            max_bins: 32,
+            ..Default::default()
+        },
+        &g.train,
+    )
+    .unwrap();
+    let (cat, _) = train_catboost_like(
+        &CatBoostParams {
+            num_rounds: 25,
+            depth: 4,
+            max_bins: 32,
+            ..Default::default()
+        },
+        &g.train,
+    )
+    .unwrap();
+    let acc = |b: &Booster| b.evaluate(&g.valid, "accuracy").unwrap();
+    let (xa, la, ca) = (acc(&xgb), acc(&lgb), acc(&cat));
+    eprintln!("accuracies: xgb={xa:.2} lgb={la:.2} cat={ca:.2}");
+    // loose shape bound: at this tiny scale/round budget the orderings are
+    // noisy; the paper-scale ordering is checked by `cargo bench table2`
+    assert!(xa >= ca - 2.5, "xgb {xa} should not trail cat {ca} badly");
+    assert!(la >= ca - 2.5, "lgb {la} should not trail cat {ca} badly");
+    assert!(xa > 60.0 && la > 60.0 && ca > 60.0, "all must beat chance");
+}
+
+/// Failure injection: invalid configurations surface as errors, not
+/// panics or silent misbehaviour.
+#[test]
+fn invalid_configs_error_cleanly() {
+    let g = generate(&DatasetSpec::higgs_like(200), 1);
+    // unknown objective
+    assert!(Booster::train(&quick("no:such", 1), &g.train, None).is_err());
+    // multiclass without num_class
+    assert!(Booster::train(&quick("multi:softmax", 1), &g.train, None).is_err());
+    // more devices than rows
+    let p = BoosterParams {
+        n_devices: 1000,
+        ..quick("binary:logistic", 1)
+    };
+    let tiny = generate(&DatasetSpec::higgs_like(100), 1);
+    // 100 rows -> 80 train rows < 1000 devices
+    assert!(Booster::train(&p, &tiny.train, None).is_err());
+    // bad grow policy / allreduce strings
+    let p = BoosterParams {
+        grow_policy: "sideways".into(),
+        ..quick("binary:logistic", 1)
+    };
+    assert!(Booster::train(&p, &g.train, None).is_err());
+    let p = BoosterParams {
+        allreduce: "carrier-pigeon".into(),
+        ..quick("binary:logistic", 1)
+    };
+    assert!(Booster::train(&p, &g.train, None).is_err());
+}
+
+/// Coordinator handles degenerate gradients (all-zero => no splits, tree
+/// stays a stump) without dividing by zero.
+#[test]
+fn degenerate_gradients_yield_stump() {
+    let g = generate(&DatasetSpec::higgs_like(500), 3);
+    let mut c = MultiDeviceCoordinator::with_backend(
+        &g.train.x,
+        CoordinatorParams::default(),
+        Box::new(NativeBackend),
+    )
+    .unwrap();
+    let grads = vec![xgb_tpu::GradPair::new(0.0, 1e-16); g.train.n_rows()];
+    let r = c.build_tree(&grads).unwrap();
+    assert_eq!(r.tree.n_leaves(), 1, "no gain anywhere -> root stays leaf");
+}
+
+/// Training continues deterministically across repeated runs.
+#[test]
+fn training_is_deterministic() {
+    let g = generate(&DatasetSpec::synthetic_like(2000), 13);
+    let p = quick("reg:squarederror", 6);
+    let a = Booster::train(&p, &g.train, None).unwrap();
+    let b = Booster::train(&p, &g.train, None).unwrap();
+    assert_eq!(a.trees[0], b.trees[0]);
+    let pa = a.predict(&g.valid.x);
+    let pb = b.predict(&g.valid.x);
+    assert_eq!(pa, pb);
+}

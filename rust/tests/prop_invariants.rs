@@ -1,0 +1,251 @@
+//! Property-based tests over the core invariants (DESIGN.md §6), using the
+//! hand-rolled harness in `xgb_tpu::util::prop`.
+
+use xgb_tpu::comm::{ring_allreduce, serial_allreduce};
+use xgb_tpu::compress::CompressedMatrix;
+use xgb_tpu::data::DMatrix;
+use xgb_tpu::hist::{build_histogram_quantized, GradPairF64, Histogram};
+use xgb_tpu::quantile::{HistogramCuts, Quantizer, WQSummary};
+use xgb_tpu::tree::partitioner::BinSource;
+use xgb_tpu::tree::{RowPartitioner, SplitEvaluator, TreeParams};
+use xgb_tpu::util::prop::{check, Gen};
+use xgb_tpu::{Float, GradPair};
+
+/// Sketch error bound: a pruned summary's rank uncertainty stays within
+/// the theoretical budget, and queried quantiles land within eps·n ranks.
+#[test]
+fn prop_sketch_error_bound() {
+    check(0x5e7c4, 40, |g: &mut Gen| {
+        let n = g.int(100, 5000);
+        let limit = g.int(16, 128);
+        let values: Vec<Float> = (0..n).map(|_| g.f32(-100.0, 100.0)).collect();
+        let mut b = xgb_tpu::quantile::sketch::SketchBuilder::new(limit);
+        for &v in &values {
+            b.push(v, 1.0);
+        }
+        let s = b.finish();
+        s.check_invariants();
+        assert!((s.total_weight() - n as f64).abs() < 1e-6);
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // generous eps: merge-prune rounds compound; bound with factor 6
+        let eps = 6.0 / limit as f64;
+        for k in 1..10 {
+            let d = n as f64 * k as f64 / 10.0;
+            let q = s.query(d).unwrap();
+            let rank = sorted.partition_point(|&v| v < q) as f64;
+            assert!(
+                (rank - d).abs() <= eps * n as f64 + 2.0,
+                "n={n} limit={limit} decile {k}: rank {rank} target {d}"
+            );
+        }
+    });
+}
+
+/// Merging two exact summaries equals the exact summary of the union.
+#[test]
+fn prop_sketch_combine_exact() {
+    check(0xc0b1e5, 50, |g: &mut Gen| {
+        let n1 = g.int(1, 200);
+        let n2 = g.int(1, 200);
+        let a: Vec<Float> = (0..n1).map(|_| g.f32(-10.0, 10.0)).collect();
+        let b: Vec<Float> = (0..n2).map(|_| g.f32(-10.0, 10.0)).collect();
+        let sa = WQSummary::from_values(&a);
+        let sb = WQSummary::from_values(&b);
+        let combined = sa.combine(&sb);
+        combined.check_invariants();
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let exact = WQSummary::from_values(&all);
+        assert_eq!(combined.entries.len(), exact.entries.len());
+        for (x, y) in combined.entries.iter().zip(exact.entries.iter()) {
+            assert_eq!(x.value, y.value);
+            assert!((x.rmin - y.rmin).abs() < 1e-9);
+            assert!((x.rmax - y.rmax).abs() < 1e-9);
+        }
+    });
+}
+
+/// Bit-pack/unpack round-trips exactly for arbitrary shapes & alphabets.
+#[test]
+fn prop_compression_roundtrip() {
+    check(0xc0de, 60, |g: &mut Gen| {
+        let n_rows = g.int(1, 300);
+        let stride = g.int(1, 24);
+        let bits = g.int(1, 18);
+        let n_bins = g.int(1, 1 << bits);
+        let bins: Vec<u32> = (0..n_rows * stride)
+            .map(|_| g.int(0, n_bins) as u32) // includes null == n_bins
+            .collect();
+        let qm = xgb_tpu::quantile::QuantizedMatrix {
+            bins: bins.clone(),
+            n_rows,
+            n_features: stride,
+            row_stride: stride,
+            n_bins,
+            dense: true,
+        };
+        let cm = CompressedMatrix::from_quantized(&qm);
+        assert_eq!(cm.decode().bins, bins);
+    });
+}
+
+/// Ring all-reduce equals the serial sum for arbitrary p and n.
+#[test]
+fn prop_ring_allreduce_equals_serial() {
+    check(0xa11d, 60, |g: &mut Gen| {
+        let p = g.int(1, 12);
+        let n = g.int(1, 500);
+        let bufs: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..n).map(|_| g.f64(-5.0, 5.0)).collect())
+            .collect();
+        let mut ring = bufs.clone();
+        let mut serial = bufs;
+        ring_allreduce(&mut ring);
+        serial_allreduce(&mut serial);
+        for (rb, sb) in ring.iter().zip(serial.iter()) {
+            for (r, s) in rb.iter().zip(sb.iter()) {
+                assert!((r - s).abs() < 1e-9, "p={p} n={n}");
+            }
+        }
+    });
+}
+
+/// Partitioning preserves the row multiset and routes by bin threshold.
+#[test]
+fn prop_partition_preserves_rows() {
+    check(0x9a47, 40, |g: &mut Gen| {
+        let n = g.int(10, 400);
+        let cols = g.int(1, 5);
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| {
+                if g.bool(0.1) {
+                    Float::NAN
+                } else {
+                    g.f32(-5.0, 5.0)
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let feature = g.int(0, cols - 1);
+        let lo = cuts.ptrs[feature];
+        let hi = cuts.ptrs[feature + 1];
+        if hi - lo < 2 {
+            return;
+        }
+        let split_bin = lo + g.int(0, (hi - lo - 1) as usize) as u32;
+        let split = xgb_tpu::tree::SplitCandidate {
+            feature: feature as u32,
+            split_bin,
+            threshold: cuts.cut_of_bin(split_bin),
+            default_left: g.bool(0.5),
+            gain: 1.0,
+            left_sum: GradPairF64::default(),
+            right_sum: GradPairF64::default(),
+        };
+        let mut part = RowPartitioner::new(n);
+        let src = BinSource::Quantized(&qm);
+        let (nl, nr) = part.apply_split(0, &split, 1, 2, &src, &cuts);
+        assert_eq!(nl + nr, n);
+        let mut all: Vec<u32> = part.node_rows(1).iter().chain(part.node_rows(2)).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+        // routing agrees with raw values
+        for &r in part.node_rows(1) {
+            match x.get(r as usize, feature) {
+                Some(v) => assert!(v < split.threshold, "left row must be below cut"),
+                None => assert!(split.default_left),
+            }
+        }
+    });
+}
+
+/// Histogram-based best split gain matches brute force over raw values.
+#[test]
+fn prop_split_matches_brute_force() {
+    check(0x59117, 25, |g: &mut Gen| {
+        let n = g.int(20, 150);
+        let cols = g.int(1, 3);
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| {
+                if g.bool(0.15) {
+                    Float::NAN
+                } else {
+                    g.f32(-3.0, 3.0)
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let grads: Vec<GradPair> = g.grad_pairs(n);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, gp| {
+            a + GradPairF64::from_single(*gp)
+        });
+        let ev = SplitEvaluator::new(TreeParams {
+            min_child_weight: 0.0,
+            ..Default::default()
+        });
+        let hist_gain = ev.evaluate(&hist, &cuts, node_sum).map(|s| s.gain).unwrap_or(0.0);
+
+        // brute force over the same candidate cuts
+        let mut brute = 0.0f64;
+        for f in 0..cols {
+            for cut in cuts.feature_cuts(f) {
+                for missing_left in [false, true] {
+                    let mut left = GradPairF64::default();
+                    for r in 0..n {
+                        let goes_left = match x.get(r, f) {
+                            Some(v) => v < *cut,
+                            None => missing_left,
+                        };
+                        if goes_left {
+                            left += GradPairF64::from_single(grads[r]);
+                        }
+                    }
+                    let right = node_sum - left;
+                    brute = brute.max(ev.split_gain(node_sum, left, right));
+                }
+            }
+        }
+        assert!(
+            (hist_gain - brute).abs() < 1e-9,
+            "hist {hist_gain} vs brute {brute}"
+        );
+    });
+}
+
+/// Quantised histogram totals equal direct gradient sums per feature.
+#[test]
+fn prop_histogram_mass_conservation() {
+    check(0xb157, 40, |g: &mut Gen| {
+        let n = g.int(10, 300);
+        let cols = g.int(1, 4);
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| if g.bool(0.2) { Float::NAN } else { g.f32(0.0, 1.0) })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let grads = g.grad_pairs(n);
+        let cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        for f in 0..cols {
+            let lo = cuts.ptrs[f] as usize;
+            let hi = cuts.ptrs[f + 1] as usize;
+            let feat_sum = hist.feature_sum(lo, hi);
+            let mut expect = GradPairF64::default();
+            x.for_each_in_column(f, |r, _| {
+                expect += GradPairF64::from_single(grads[r]);
+            });
+            assert!((feat_sum.grad - expect.grad).abs() < 1e-6, "feature {f}");
+            assert!((feat_sum.hess - expect.hess).abs() < 1e-6, "feature {f}");
+        }
+    });
+}

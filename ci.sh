@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: formatting, lints, build, tests.
+#
+#   ./ci.sh          # run everything
+#   ./ci.sh --fast   # skip fmt/clippy (build + test only)
+#
+# The build is fully offline (anyhow is vendored under rust/vendor/; the
+# PJRT runtime is feature-gated), so no network or crates.io mirror is
+# required.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+if [[ "$FAST" -eq 0 ]]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI OK"

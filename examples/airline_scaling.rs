@@ -12,7 +12,7 @@
 
 use xgb_tpu::bench::Table;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, ObjectiveKind};
 use xgb_tpu::util::ArgParser;
 
 fn main() -> anyhow::Result<()> {
@@ -35,17 +35,16 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut t1 = 0.0f64;
     for p in 1..=max_p {
-        let params = BoosterParams {
-            objective: "binary:logistic".into(),
-            num_rounds: rounds,
-            max_bins: 256,
-            max_depth: 6,
-            n_devices: p,
-            compress: true,
-            eval_every: 0,
-            ..Default::default()
-        };
-        let booster = Booster::train(&params, &data.train, None)?;
+        let mut learner = Learner::builder()
+            .objective(ObjectiveKind::BinaryLogistic)
+            .num_rounds(rounds)
+            .max_bins(256)
+            .max_depth(6)
+            .n_devices(p)
+            .compress(true)
+            .eval_every(0)
+            .build()?;
+        let booster = learner.train(&data.train, None)?;
         let sim = booster.simulated_secs;
         if p == 1 {
             t1 = sim;

@@ -7,7 +7,7 @@
 //! ```
 
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, MetricKind, ObjectiveKind};
 use xgb_tpu::util::ArgParser;
 
 fn main() -> anyhow::Result<()> {
@@ -22,19 +22,18 @@ fn main() -> anyhow::Result<()> {
         data.train.n_cols()
     );
 
-    let params = BoosterParams {
-        objective: "multi:softmax".into(),
-        num_class: 7,
-        num_rounds: rounds,
-        eta: 0.3,
-        max_depth: 6,
-        max_bins: 64,
-        n_devices: 2,
-        eval_metric: "accuracy".into(),
-        eval_every: 2,
-        ..Default::default()
-    };
-    let booster = Booster::train(&params, &data.train, Some(&data.valid))?;
+    let mut learner = Learner::builder()
+        .objective(ObjectiveKind::MultiSoftmax)
+        .num_class(7)
+        .num_rounds(rounds)
+        .eta(0.3)
+        .max_depth(6)
+        .max_bins(64)
+        .n_devices(2)
+        .eval_metric(MetricKind::Accuracy)
+        .eval_every(2)
+        .build()?;
+    let booster = learner.train(&data.train, Some(&data.valid))?;
 
     println!("\nround  train-acc  valid-acc");
     for rec in &booster.eval_history {

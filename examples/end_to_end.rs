@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, MetricKind, ObjectiveKind};
 use xgb_tpu::runtime::{Artifacts, GradKind, XlaHistBackend, XlaPredictor};
 use xgb_tpu::util::ArgParser;
 
@@ -40,19 +40,18 @@ fn main() -> anyhow::Result<()> {
         data.valid.n_rows(),
         data.train.n_cols()
     );
-    let params = BoosterParams {
-        objective: "binary:logistic".into(),
-        num_rounds: rounds,
-        eta: 0.1,
-        max_depth: 6,
-        max_bins: 256,
-        n_devices: 8,
-        compress: true,
-        eval_metric: "logloss".into(),
-        eval_every: 10,
-        ..Default::default()
-    };
-    let booster = Booster::train(&params, &data.train, Some(&data.valid))?;
+    let mut learner = Learner::builder()
+        .objective(ObjectiveKind::BinaryLogistic)
+        .num_rounds(rounds)
+        .eta(0.1)
+        .max_depth(6)
+        .max_bins(256)
+        .n_devices(8)
+        .compress(true)
+        .eval_metric(MetricKind::LogLoss)
+        .eval_every(10)
+        .build()?;
+    let booster = learner.train(&data.train, Some(&data.valid))?;
     println!("\nround  train-logloss  valid-logloss");
     for rec in &booster.eval_history {
         println!(
@@ -120,17 +119,17 @@ fn main() -> anyhow::Result<()> {
          (interpret-mode Pallas; slow but bit-faithful)..."
     );
     let small = generate(&DatasetSpec::higgs_like(xla_rows), 11);
-    let small_params = BoosterParams {
-        objective: "binary:logistic".into(),
-        num_rounds: xla_rounds,
-        max_bins: 64,
-        max_depth: 5,
-        eval_metric: "logloss".into(),
-        ..Default::default()
+    let small_learner = || -> anyhow::Result<Learner> {
+        Ok(Learner::builder()
+            .objective(ObjectiveKind::BinaryLogistic)
+            .num_rounds(xla_rounds)
+            .max_bins(64)
+            .max_depth(5)
+            .eval_metric(MetricKind::LogLoss)
+            .build()?)
     };
-    let b_native = Booster::train(&small_params, &small.train, Some(&small.valid))?;
-    let b_xla = Booster::train_with_backend(
-        &small_params,
+    let b_native = small_learner()?.train(&small.train, Some(&small.valid))?;
+    let b_xla = small_learner()?.train_with_backend(
         &small.train,
         Some(&small.valid),
         Box::new(XlaHistBackend::new(artifacts.clone())),

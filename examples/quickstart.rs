@@ -1,12 +1,13 @@
-//! Quickstart: train a binary classifier on a Higgs-like dataset with the
-//! multi-device coordinator and print the evaluation curve.
+//! Quickstart: train a binary classifier on a Higgs-like dataset through
+//! the typed `Learner` API — builder-validated parameters, a training
+//! callback, and registry-resolved metrics.
 //!
 //! ```text
 //! cargo run --release --example quickstart [-- --rows 50000 --rounds 50 --devices 4]
 //! ```
 
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{EarlyStopping, Learner, MetricKind, ObjectiveKind};
 use xgb_tpu::util::ArgParser;
 
 fn main() -> anyhow::Result<()> {
@@ -25,22 +26,25 @@ fn main() -> anyhow::Result<()> {
         data.train.n_cols()
     );
 
-    // 2. configure the booster — same parameter names as XGBoost
-    let params = BoosterParams {
-        objective: "binary:logistic".into(),
-        num_rounds: rounds,
-        eta: 0.3,
-        max_depth: 6,
-        max_bins: 256,
-        n_devices: devices,  // simulated GPUs (Algorithm 1)
-        compress: true,      // §2.2 bit-packed shards
-        eval_metric: "accuracy".into(),
-        eval_every: 5,
-        ..Default::default()
-    };
+    // 2. configure the learner — typed enums instead of strings, and
+    //    `build()` validates the whole cross-field matrix up front,
+    //    reporting every problem at once
+    let mut learner = Learner::builder()
+        .objective(ObjectiveKind::BinaryLogistic)
+        .eval_metric(MetricKind::Accuracy)
+        .num_rounds(rounds)
+        .eta(0.3)
+        .max_depth(6)
+        .max_bins(256)
+        .n_devices(devices) // simulated GPUs (Algorithm 1)
+        .compress(true) // §2.2 bit-packed shards
+        .eval_every(5)
+        // stop when validation accuracy stalls for 4 evaluations
+        .callback(Box::new(EarlyStopping::new(4)))
+        .build()?;
 
     // 3. train
-    let booster = Booster::train(&params, &data.train, Some(&data.valid))?;
+    let booster = learner.train(&data.train, Some(&data.valid))?;
 
     // 4. inspect
     println!("\nround  train-acc  valid-acc");
@@ -59,10 +63,7 @@ fn main() -> anyhow::Result<()> {
         booster.simulated_secs,
         devices
     );
-    println!(
-        "auc = {:.4}",
-        booster.evaluate(&data.valid, "auc")?
-    );
+    println!("auc = {:.4}", booster.evaluate(&data.valid, "auc")?);
 
     // 5. predict on fresh rows
     let preds = booster.predict(&data.valid.x);

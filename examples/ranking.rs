@@ -8,7 +8,7 @@
 //! ```
 
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, MetricKind, ObjectiveKind};
 use xgb_tpu::util::ArgParser;
 
 fn main() -> anyhow::Result<()> {
@@ -25,17 +25,16 @@ fn main() -> anyhow::Result<()> {
         data.valid.groups.len().saturating_sub(1),
     );
 
-    let params = BoosterParams {
-        objective: "rank:pairwise".into(),
-        num_rounds: rounds,
-        eta: 0.1,
-        max_depth: 6,
-        max_bins: 64,
-        eval_metric: "ndcg".into(),
-        eval_every: 3,
-        ..Default::default()
-    };
-    let booster = Booster::train(&params, &data.train, Some(&data.valid))?;
+    let mut learner = Learner::builder()
+        .objective(ObjectiveKind::RankPairwise)
+        .num_rounds(rounds)
+        .eta(0.1)
+        .max_depth(6)
+        .max_bins(64)
+        .eval_metric(MetricKind::Ndcg)
+        .eval_every(3)
+        .build()?;
+    let booster = learner.train(&data.train, Some(&data.valid))?;
 
     println!("\nround  train-ndcg  valid-ndcg");
     for rec in &booster.eval_history {

@@ -6,7 +6,7 @@
 use xgb_tpu::bench::{Runner, Table};
 use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams, MetricKind, ObjectiveKind};
 use xgb_tpu::GradPair;
 
 fn env_usize(k: &str, d: usize) -> usize {
@@ -45,16 +45,16 @@ fn main() -> anyhow::Result<()> {
             c.build_tree(&grads).unwrap()
         });
         // full training
-        let bp = BoosterParams {
-            objective: "binary:logistic".into(),
+        let bp = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
             num_rounds: rounds,
             max_bins: 256,
             compress,
-            eval_metric: "accuracy".into(),
+            eval_metric: Some(MetricKind::Accuracy),
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&bp, &data.train, Some(&data.valid))?;
+        let b = Learner::from_params(bp)?.train(&data.train, Some(&data.valid))?;
         let acc = b.eval_history.last().and_then(|r| r.valid).unwrap_or(f64::NAN);
         let stats = c.build_tree(&grads)?.stats;
         let cells_per_sec =

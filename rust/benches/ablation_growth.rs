@@ -4,7 +4,7 @@
 
 use xgb_tpu::bench::Table;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams, MetricKind, ObjectiveKind};
 
 fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -27,18 +27,18 @@ fn main() -> anyhow::Result<()> {
         ("depthwise", 4, 0, "max_depth=4"),
         ("lossguide", 0, 16, "max_leaves=16"),
     ] {
-        let params = BoosterParams {
-            objective: "binary:logistic".into(),
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
             num_rounds: rounds,
             max_bins: 64,
             max_depth,
             max_leaves,
-            grow_policy: policy.into(),
-            eval_metric: "accuracy".into(),
+            grow_policy: policy.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            eval_metric: Some(MetricKind::Accuracy),
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&params, &data.train, Some(&data.valid))?;
+        let b = Learner::from_params(params)?.train(&data.train, Some(&data.valid))?;
         let acc = b.eval_history.last().and_then(|r| r.valid).unwrap_or(f64::NAN);
         let trees = &b.trees[0];
         let leaves: f64 =

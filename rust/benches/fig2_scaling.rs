@@ -7,7 +7,7 @@ use xgb_tpu::bench::Table;
 use xgb_tpu::comm::CostModel;
 use xgb_tpu::coordinator::builder::project_scaling;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams, ObjectiveKind};
 
 fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -30,8 +30,8 @@ fn main() -> anyhow::Result<()> {
     let mut hist_elems = 0usize;
     let mut hist_rounds = 0usize;
     for p in [1usize, 2, 3, 4, 5, 6, 7, 8] {
-        let params = BoosterParams {
-            objective: "binary:logistic".into(),
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
             num_rounds: rounds,
             max_bins: 256,
             max_depth: 6,
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&params, &data.train, None)?;
+        let b = Learner::from_params(params)?.train(&data.train, None)?;
         let s = &b.build_stats;
         if p == 1 {
             t1 = b.simulated_secs;

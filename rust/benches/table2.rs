@@ -32,7 +32,7 @@ use xgb_tpu::baselines::{
 };
 use xgb_tpu::bench::Table;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec, Task};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams};
 
 fn env_f64(k: &str, d: f64) -> f64 {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -96,29 +96,29 @@ fn main() -> anyhow::Result<()> {
         let mut rows: Vec<Row> = Vec::new();
 
         // ---- xgb-cpu-hist
-        let params_cpu = BoosterParams {
-            objective: objective.clone(),
+        let params_cpu = LearnerParams {
+            objective: objective.parse().expect("infallible"),
             num_class,
             num_rounds: rounds,
             max_bins,
             eval_every: 0,
-            eval_metric: metric.into(),
+            eval_metric: Some(metric.parse().expect("infallible")),
             n_devices: 1,
             compress: false,
             ..Default::default()
         };
-        let b = Booster::train(&params_cpu, &data.train, Some(&data.valid))?;
+        let b = Learner::from_params(params_cpu.clone())?.train(&data.train, Some(&data.valid))?;
         let score = b.eval_history.last().and_then(|r| r.valid);
         rows.push(Row { system: "xgb-cpu-hist", time: Some(b.train_secs), score });
         eprintln!("  xgb-cpu-hist: {:.2}s {metric}={:?}", b.train_secs, score);
 
         // ---- xgb-gpu-hist (8 simulated devices, compressed)
-        let params_gpu = BoosterParams {
+        let params_gpu = LearnerParams {
             n_devices: 8,
             compress: true,
             ..params_cpu.clone()
         };
-        let b = Booster::train(&params_gpu, &data.train, Some(&data.valid))?;
+        let b = Learner::from_params(params_gpu)?.train(&data.train, Some(&data.valid))?;
         let score = b.eval_history.last().and_then(|r| r.valid);
         rows.push(Row { system: "xgb-gpu-hist", time: Some(b.simulated_secs), score });
         eprintln!("  xgb-gpu-hist: {:.2}s (simulated) {metric}={:?}", b.simulated_secs, score);

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::gbm::objective::objective_by_name;
-use crate::gbm::{Booster, BoosterParams};
+use crate::gbm::{Booster, LearnerParams};
 use crate::hist::{GradPairF64, Histogram};
 use crate::predict;
 use crate::quantile::{HistogramCuts, Quantizer};
@@ -98,8 +98,8 @@ pub fn train_catboost_like(
 
     let train_secs = t0.elapsed().as_secs_f64();
     stats.other_secs = (train_secs - stats.hist_secs - stats.partition_secs).max(0.0);
-    let bp = BoosterParams {
-        objective: params.objective.clone(),
+    let bp = LearnerParams {
+        objective: params.objective.parse().expect("infallible"),
         num_class: params.num_class,
         num_rounds: params.num_rounds,
         eta: params.learning_rate,
@@ -396,15 +396,18 @@ mod tests {
         };
         let (cat_booster, _) = train_catboost_like(&cat, &g.train).unwrap();
         let cat_acc = cat_booster.evaluate(&g.valid, "accuracy").unwrap();
-        let xgb = crate::gbm::BoosterParams {
-            objective: "binary:logistic".into(),
+        let xgb = LearnerParams {
+            objective: crate::gbm::ObjectiveKind::BinaryLogistic,
             num_rounds: 10,
             max_depth: 4,
             max_bins: 32,
             eta: 0.1,
             ..Default::default()
         };
-        let xgb_booster = crate::gbm::Booster::train(&xgb, &g.train, None).unwrap();
+        let xgb_booster = crate::gbm::Learner::from_params(xgb)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
         let xgb_acc = xgb_booster.evaluate(&g.valid, "accuracy").unwrap();
         // xgb should be at least as good (allow small noise margin)
         assert!(

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::gbm::objective::objective_by_name;
-use crate::gbm::{Booster, BoosterParams};
+use crate::gbm::{Booster, LearnerParams};
 use crate::hist::{build_histogram_quantized, subtract, GradPairF64, Histogram};
 use crate::predict;
 use crate::quantile::{HistogramCuts, Quantizer};
@@ -160,14 +160,14 @@ pub fn train_lightgbm_like(
 
     let train_secs = t0.elapsed().as_secs_f64();
     stats.other_secs = (train_secs - stats.hist_secs - stats.partition_secs).max(0.0);
-    let bp = BoosterParams {
-        objective: params.objective.clone(),
+    let bp = LearnerParams {
+        objective: params.objective.parse().expect("infallible"),
         num_class: params.num_class,
         num_rounds: params.num_rounds,
         eta: params.learning_rate,
         max_leaves: params.num_leaves,
         max_bins: params.max_bins,
-        grow_policy: "lossguide".into(),
+        grow_policy: crate::gbm::GrowPolicy::LossGuide,
         ..Default::default()
     };
     Ok((Booster::from_parts(bp, base_score, trees, train_secs)?, stats))

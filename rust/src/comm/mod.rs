@@ -31,8 +31,20 @@ impl std::str::FromStr for AllReduceAlgo {
         match s {
             "ring" => Ok(AllReduceAlgo::Ring),
             "serial" | "naive" => Ok(AllReduceAlgo::Serial),
-            other => Err(format!("unknown allreduce algo {other:?}")),
+            other => Err(format!(
+                "unknown allreduce algo {other:?}; valid algorithms: ring, serial"
+            )),
         }
+    }
+}
+
+impl std::fmt::Display for AllReduceAlgo {
+    /// Canonical config-file spelling; round-trips through [`FromStr`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AllReduceAlgo::Ring => "ring",
+            AllReduceAlgo::Serial => "serial",
+        })
     }
 }
 

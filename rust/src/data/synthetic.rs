@@ -25,7 +25,8 @@ pub enum Task {
 }
 
 impl Task {
-    /// Default objective string for [`crate::gbm::BoosterParams`].
+    /// Default objective name (parses into
+    /// [`crate::gbm::ObjectiveKind`] losslessly).
     pub fn objective(&self) -> &'static str {
         match self {
             Task::Regression => "reg:squarederror",

@@ -1,26 +1,34 @@
-//! The boosting driver: the full Figure 1 pipeline.
+//! The trained ensemble ([`Booster`]) and the legacy stringly-typed
+//! parameter surface ([`BoosterParams`]).
 //!
-//! Per iteration: predict (margins are maintained incrementally from each
-//! new tree's leaf assignments — no ensemble re-traversal of the training
-//! set), evaluate gradients (objective), build one tree per output via the
-//! multi-device coordinator (Algorithm 1), and score the validation set.
-
-use std::time::Instant;
+//! The Figure-1 training loop lives in [`crate::gbm::learner`] behind the
+//! typed [`Learner`](crate::gbm::learner::Learner) façade;
+//! [`Booster::train`] remains as a deprecated shim that parses the old
+//! string fields into [`LearnerParams`] and delegates.
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{
-    BuildStats, CoordinatorParams, HistBackend, MultiDeviceCoordinator, NativeBackend,
-};
+use crate::coordinator::{BuildStats, CoordinatorParams, HistBackend, NativeBackend};
 use crate::data::Dataset;
-use crate::gbm::metric::{metric_by_name, Metric};
-use crate::gbm::objective::{objective_by_name, Objective};
+use crate::gbm::learner::Learner;
+use crate::gbm::metric::metric_by_name;
+use crate::gbm::objective::Objective;
+use crate::gbm::params::LearnerParams;
+use crate::gbm::registry::ObjectiveRegistry;
 use crate::predict;
 use crate::tree::RegTree;
 use crate::util::Config;
 use crate::Float;
 
-/// Booster hyperparameters (XGBoost-style names).
+/// Legacy stringly-typed booster hyperparameters (XGBoost-style names).
+///
+/// Superseded by the typed [`LearnerParams`]: the `objective`,
+/// `grow_policy`, `allreduce`, `eval_metric` and `monotone_constraints`
+/// strings here are parsed (and can fail) only when training starts,
+/// whereas [`Learner::builder`](crate::gbm::learner::Learner::builder)
+/// validates everything up front. Kept so existing call sites and config
+/// pipelines continue to work; convert with
+/// [`BoosterParams::to_learner_params`].
 #[derive(Debug, Clone)]
 pub struct BoosterParams {
     pub objective: String,
@@ -49,9 +57,7 @@ pub struct BoosterParams {
     /// Stop if the validation metric hasn't improved in this many
     /// evaluations (0 = never).
     pub early_stopping_rounds: usize,
-    /// Row subsampling rate per tree (1.0 = off). Implemented by zeroing
-    /// the gradient pairs of unsampled rows, which excludes them from
-    /// histograms and node sums while keeping margin updates global.
+    /// Row subsampling rate per tree (1.0 = off).
     pub subsample: f64,
     /// Column sampling rate per tree (1.0 = off).
     pub colsample_bytree: f64,
@@ -66,113 +72,125 @@ pub struct BoosterParams {
 
 impl Default for BoosterParams {
     fn default() -> Self {
+        let d = LearnerParams::default();
         BoosterParams {
-            objective: "reg:squarederror".into(),
-            num_class: 1,
-            num_rounds: 50,
-            eta: 0.3,
-            max_depth: 6,
-            max_leaves: 0,
-            max_bins: 256,
-            lambda: 1.0,
-            gamma: 0.0,
-            alpha: 0.0,
-            min_child_weight: 1.0,
-            grow_policy: "depthwise".into(),
-            n_devices: 1,
-            compress: true,
-            allreduce: "ring".into(),
+            objective: d.objective.to_string(),
+            num_class: d.num_class,
+            num_rounds: d.num_rounds,
+            eta: d.eta,
+            max_depth: d.max_depth,
+            max_leaves: d.max_leaves,
+            max_bins: d.max_bins,
+            lambda: d.lambda,
+            gamma: d.gamma,
+            alpha: d.alpha,
+            min_child_weight: d.min_child_weight,
+            grow_policy: d.grow_policy.to_string(),
+            n_devices: d.n_devices,
+            compress: d.compress,
+            allreduce: d.allreduce.to_string(),
             eval_metric: String::new(),
-            eval_every: 1,
-            early_stopping_rounds: 0,
-            subsample: 1.0,
-            colsample_bytree: 1.0,
+            eval_every: d.eval_every,
+            early_stopping_rounds: d.early_stopping_rounds,
+            subsample: d.subsample,
+            colsample_bytree: d.colsample_bytree,
             monotone_constraints: String::new(),
-            seed: 0,
-            verbose: false,
+            seed: d.seed,
+            verbose: d.verbose,
         }
     }
-}
-
-/// Parse `"1,0,-1"` / `"(1,0,-1)"` into a constraint vector.
-fn parse_monotone(s: &str) -> Result<Vec<i8>> {
-    let t = s.trim().trim_start_matches('(').trim_end_matches(')');
-    if t.is_empty() {
-        return Ok(Vec::new());
-    }
-    t.split(',')
-        .map(|tok| {
-            let v: i32 = tok.trim().parse().context("monotone_constraints")?;
-            anyhow::ensure!((-1..=1).contains(&v), "constraint must be -1, 0 or 1");
-            Ok(v as i8)
-        })
-        .collect()
 }
 
 impl BoosterParams {
     /// Read parameters from a [`Config`] (defaults for absent keys).
     pub fn from_config(cfg: &Config) -> Result<Self> {
-        let d = BoosterParams::default();
-        Ok(BoosterParams {
-            objective: cfg.get("objective").unwrap_or(&d.objective).to_string(),
-            num_class: cfg.get_parse("num_class", d.num_class)?,
-            num_rounds: cfg.get_parse("num_rounds", d.num_rounds)?,
-            eta: cfg.get_parse("eta", d.eta)?,
-            max_depth: cfg.get_parse("max_depth", d.max_depth)?,
-            max_leaves: cfg.get_parse("max_leaves", d.max_leaves)?,
-            max_bins: cfg.get_parse("max_bins", d.max_bins)?,
-            lambda: cfg.get_parse("lambda", d.lambda)?,
-            gamma: cfg.get_parse("gamma", d.gamma)?,
-            alpha: cfg.get_parse("alpha", d.alpha)?,
-            min_child_weight: cfg.get_parse("min_child_weight", d.min_child_weight)?,
-            grow_policy: cfg.get("grow_policy").unwrap_or(&d.grow_policy).to_string(),
-            n_devices: cfg.get_parse("n_devices", d.n_devices)?,
-            compress: cfg.get_bool("compress", d.compress),
-            allreduce: cfg.get("allreduce").unwrap_or(&d.allreduce).to_string(),
-            eval_metric: cfg.get("eval_metric").unwrap_or("").to_string(),
-            eval_every: cfg.get_parse("eval_every", d.eval_every)?,
-            early_stopping_rounds: cfg
-                .get_parse("early_stopping_rounds", d.early_stopping_rounds)?,
-            subsample: cfg.get_parse("subsample", d.subsample)?,
-            colsample_bytree: cfg.get_parse("colsample_bytree", d.colsample_bytree)?,
-            monotone_constraints: cfg
-                .get("monotone_constraints")
-                .unwrap_or("")
-                .to_string(),
-            seed: cfg.get_parse("seed", d.seed)?,
-            verbose: cfg.get_bool("verbose", d.verbose),
-        })
+        let typed = LearnerParams::from_config(cfg)?;
+        Ok(Self::from_learner_params(&typed))
     }
 
-    /// Derive the coordinator configuration.
-    pub fn coordinator_params(&self) -> Result<CoordinatorParams> {
-        Ok(CoordinatorParams {
-            n_devices: self.n_devices,
-            compress: self.compress,
-            tree: crate::tree::TreeParams {
-                lambda: self.lambda,
-                gamma: self.gamma,
-                alpha: self.alpha,
-                min_child_weight: self.min_child_weight,
-                max_depth: self.max_depth,
-                max_leaves: self.max_leaves,
-                monotone_constraints: parse_monotone(&self.monotone_constraints)?,
-            },
-            policy: self
+    /// Render typed params back to the legacy string form.
+    pub fn from_learner_params(p: &LearnerParams) -> Self {
+        BoosterParams {
+            objective: p.objective.to_string(),
+            num_class: p.num_class,
+            num_rounds: p.num_rounds,
+            eta: p.eta,
+            max_depth: p.max_depth,
+            max_leaves: p.max_leaves,
+            max_bins: p.max_bins,
+            lambda: p.lambda,
+            gamma: p.gamma,
+            alpha: p.alpha,
+            min_child_weight: p.min_child_weight,
+            grow_policy: p.grow_policy.to_string(),
+            n_devices: p.n_devices,
+            compress: p.compress,
+            allreduce: p.allreduce.to_string(),
+            eval_metric: p
+                .eval_metric
+                .as_ref()
+                .map(|m| m.to_string())
+                .unwrap_or_default(),
+            eval_every: p.eval_every,
+            early_stopping_rounds: p.early_stopping_rounds,
+            subsample: p.subsample,
+            colsample_bytree: p.colsample_bytree,
+            monotone_constraints: p.monotone_constraints.to_string(),
+            seed: p.seed,
+            verbose: p.verbose,
+        }
+    }
+
+    /// Parse the five string fields into the typed [`LearnerParams`].
+    /// Fails on malformed text (`grow_policy = "sideways"`, monotone signs
+    /// outside −1..=1, ...); name-level resolution of the objective/metric
+    /// happens in [`LearnerParams::validate`].
+    pub fn to_learner_params(&self) -> Result<LearnerParams> {
+        Ok(LearnerParams {
+            objective: self.objective.parse().expect("infallible"),
+            num_class: self.num_class,
+            num_rounds: self.num_rounds,
+            eta: self.eta,
+            max_depth: self.max_depth,
+            max_leaves: self.max_leaves,
+            max_bins: self.max_bins,
+            lambda: self.lambda,
+            gamma: self.gamma,
+            alpha: self.alpha,
+            min_child_weight: self.min_child_weight,
+            grow_policy: self
                 .grow_policy
                 .parse()
                 .map_err(|e: String| anyhow::anyhow!(e))?,
+            n_devices: self.n_devices,
+            compress: self.compress,
             allreduce: self
                 .allreduce
                 .parse()
                 .map_err(|e: String| anyhow::anyhow!(e))?,
-            cost: Default::default(),
-            eta: self.eta,
-            max_bins: self.max_bins,
-            subtraction: true,
+            eval_metric: if self.eval_metric.is_empty() {
+                None
+            } else {
+                Some(self.eval_metric.parse().expect("infallible"))
+            },
+            eval_every: self.eval_every,
+            early_stopping_rounds: self.early_stopping_rounds,
+            subsample: self.subsample,
             colsample_bytree: self.colsample_bytree,
+            monotone_constraints: self
+                .monotone_constraints
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))
+                .context("monotone_constraints")?,
             seed: self.seed,
+            verbose: self.verbose,
         })
+    }
+
+    /// Derive the coordinator configuration (legacy path; parses the
+    /// string fields first).
+    pub fn coordinator_params(&self) -> Result<CoordinatorParams> {
+        Ok(self.to_learner_params()?.coordinator_params())
     }
 }
 
@@ -188,8 +206,9 @@ pub struct EvalRecord {
 
 /// A trained gradient-boosted ensemble.
 pub struct Booster {
-    pub params: BoosterParams,
-    objective: Box<dyn Objective>,
+    /// The (typed) configuration the ensemble was trained with.
+    pub params: LearnerParams,
+    pub(crate) objective: Box<dyn Objective>,
     pub base_score: Vec<Float>,
     /// `trees[output][round]`.
     pub trees: Vec<Vec<RegTree>>,
@@ -204,15 +223,15 @@ pub struct Booster {
 
 impl Booster {
     /// Assemble a booster from pre-built trees (used by the baseline
-    /// trainers in [`crate::baselines`] so prediction/metric code is
-    /// shared).
+    /// trainers in [`crate::baselines`] and the model loader so
+    /// prediction/metric code is shared).
     pub fn from_parts(
-        params: BoosterParams,
+        params: LearnerParams,
         base_score: Vec<Float>,
         trees: Vec<Vec<RegTree>>,
         train_secs: f64,
     ) -> Result<Booster> {
-        let objective = objective_by_name(&params.objective, params.num_class)?;
+        let objective = ObjectiveRegistry::create(params.objective.name(), params.num_class)?;
         anyhow::ensure!(trees.len() == objective.n_outputs(), "tree groups != outputs");
         Ok(Booster {
             params,
@@ -227,145 +246,34 @@ impl Booster {
     }
 
     /// Train with the native histogram backend.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `gbm::Learner::builder()` / `Learner::train` — typed params, \
+                up-front validation, pluggable objectives and callbacks"
+    )]
     pub fn train(
         params: &BoosterParams,
         train: &Dataset,
         valid: Option<&Dataset>,
     ) -> Result<Booster> {
+        #[allow(deprecated)]
         Self::train_with_backend(params, train, valid, Box::new(NativeBackend))
     }
 
     /// Train with an explicit histogram backend (e.g. the XLA runtime).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `gbm::Learner::builder()` / `Learner::train_with_backend`"
+    )]
     pub fn train_with_backend(
         params: &BoosterParams,
         train: &Dataset,
         valid: Option<&Dataset>,
         backend: Box<dyn HistBackend>,
     ) -> Result<Booster> {
-        let t0 = Instant::now();
-        let objective = objective_by_name(&params.objective, params.num_class)
-            .context("resolving objective")?;
-        let k = objective.n_outputs();
-        let metric: Box<dyn Metric> = if params.eval_metric.is_empty() {
-            default_metric(objective.as_ref())?
-        } else {
-            metric_by_name(&params.eval_metric)?
-        };
-
-        let mut coordinator = MultiDeviceCoordinator::with_backend(
-            &train.x,
-            params.coordinator_params()?,
-            backend,
-        )?;
-
-        let base_score = objective.base_score(train);
-        let n = train.n_rows();
-        let mut margins: Vec<Vec<Float>> =
-            base_score.iter().map(|&b| vec![b; n]).collect();
-        let mut valid_margins: Option<Vec<Vec<Float>>> = valid.map(|v| {
-            base_score
-                .iter()
-                .map(|&b| vec![b; v.n_rows()])
-                .collect()
-        });
-
-        let mut trees: Vec<Vec<RegTree>> = vec![Vec::new(); k];
-        let mut eval_history = Vec::new();
-        let mut build_stats = BuildStats::default();
-        let mut best_metric: Option<f64> = None;
-        let mut stale_evals = 0usize;
-
-        let mut sub_rng = crate::util::Pcg64::new(params.seed ^ 0x5b5a);
-        for round in 0..params.num_rounds {
-            let mut grads = objective.gradients(train, &margins);
-            if params.subsample < 1.0 {
-                // exclude unsampled rows from this round's trees by zeroing
-                // their gradient mass (same rows for all k outputs)
-                for i in 0..n {
-                    if sub_rng.next_f64() >= params.subsample {
-                        for class_grads in grads.iter_mut() {
-                            class_grads[i] = crate::GradPair::default();
-                        }
-                    }
-                }
-            }
-            for (c, class_grads) in grads.iter().enumerate().take(k) {
-                let result = coordinator.build_tree(class_grads)?;
-                for (m, d) in margins[c].iter_mut().zip(result.deltas.iter()) {
-                    *m += *d;
-                }
-                if let (Some(vm), Some(v)) = (valid_margins.as_mut(), valid) {
-                    predict::accumulate_tree(&result.tree, &v.x, &mut vm[c]);
-                }
-                build_stats.accumulate(&result.stats);
-                trees[c].push(result.tree);
-            }
-
-            let do_eval = params.eval_every > 0 && (round + 1) % params.eval_every == 0;
-            if do_eval || round + 1 == params.num_rounds {
-                let train_score = metric.eval(train, &objective.transform(&margins));
-                let valid_score = valid_margins
-                    .as_ref()
-                    .zip(valid)
-                    .map(|(vm, v)| metric.eval(v, &objective.transform(vm)));
-                let rec = EvalRecord {
-                    round: round + 1,
-                    metric: metric.name(),
-                    train: train_score,
-                    valid: valid_score,
-                    elapsed_secs: t0.elapsed().as_secs_f64(),
-                };
-                if params.verbose {
-                    eprintln!(
-                        "[{}] train-{}:{:.5}{}",
-                        rec.round,
-                        rec.metric,
-                        rec.train,
-                        rec.valid
-                            .map(|v| format!(" valid-{}:{v:.5}", rec.metric))
-                            .unwrap_or_default()
-                    );
-                }
-                eval_history.push(rec);
-
-                // early stopping on the validation score
-                if params.early_stopping_rounds > 0 {
-                    if let Some(score) = valid_score {
-                        let improved = match best_metric {
-                            None => true,
-                            Some(best) => {
-                                if metric.minimize() {
-                                    score < best
-                                } else {
-                                    score > best
-                                }
-                            }
-                        };
-                        if improved {
-                            best_metric = Some(score);
-                            stale_evals = 0;
-                        } else {
-                            stale_evals += 1;
-                            if stale_evals >= params.early_stopping_rounds {
-                                break;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        let simulated_secs = build_stats.simulated_secs;
-        Ok(Booster {
-            params: params.clone(),
-            objective,
-            base_score,
-            trees,
-            eval_history,
-            build_stats,
-            train_secs: t0.elapsed().as_secs_f64(),
-            simulated_secs,
-        })
+        let typed = params.to_learner_params()?;
+        let mut learner = Learner::from_params(typed)?;
+        learner.train_with_backend(train, valid, backend)
     }
 
     /// Number of boosting rounds actually performed.
@@ -383,32 +291,23 @@ impl Booster {
         self.objective.transform(&self.predict_margins(x))
     }
 
-    /// Evaluate a named metric on a dataset.
+    /// Evaluate a named metric on a dataset (registry-resolved, so custom
+    /// metrics work here too).
     pub fn evaluate(&self, ds: &Dataset, metric_name: &str) -> Result<f64> {
         let metric = metric_by_name(metric_name)?;
         Ok(metric.eval(ds, &self.predict(&ds.x)))
     }
 }
 
-/// Objective-appropriate default metric (what Table 2 reports per task).
-fn default_metric(objective: &dyn Objective) -> Result<Box<dyn Metric>> {
-    metric_by_name(match objective.name() {
-        "reg:squarederror" => "rmse",
-        "binary:logistic" => "accuracy",
-        "multi:softmax" => "accuracy",
-        "rank:pairwise" => "ndcg",
-        _ => "rmse",
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::gbm::params::{GrowPolicy, MetricKind, ObjectiveKind};
 
-    fn quick_params(objective: &str, rounds: usize) -> BoosterParams {
-        BoosterParams {
-            objective: objective.into(),
+    fn quick_params(objective: ObjectiveKind, rounds: usize) -> LearnerParams {
+        LearnerParams {
+            objective,
             num_rounds: rounds,
             max_bins: 32,
             max_depth: 4,
@@ -416,11 +315,21 @@ mod tests {
         }
     }
 
+    fn train(params: LearnerParams, train: &Dataset, valid: Option<&Dataset>) -> Booster {
+        Learner::from_params(params)
+            .unwrap()
+            .train(train, valid)
+            .unwrap()
+    }
+
     #[test]
     fn regression_loss_decreases() {
         let g = generate(&DatasetSpec::year_prediction_like(3000), 1);
-        let b = Booster::train(&quick_params("reg:squarederror", 15), &g.train, Some(&g.valid))
-            .unwrap();
+        let b = train(
+            quick_params(ObjectiveKind::SquaredError, 15),
+            &g.train,
+            Some(&g.valid),
+        );
         let hist = &b.eval_history;
         assert!(hist.len() >= 10);
         let first = hist.first().unwrap().train;
@@ -443,9 +352,11 @@ mod tests {
     #[test]
     fn binary_classification_beats_majority() {
         let g = generate(&DatasetSpec::higgs_like(4000), 2);
-        let b =
-            Booster::train(&quick_params("binary:logistic", 20), &g.train, Some(&g.valid))
-                .unwrap();
+        let b = train(
+            quick_params(ObjectiveKind::BinaryLogistic, 20),
+            &g.train,
+            Some(&g.valid),
+        );
         let acc = b.eval_history.last().unwrap().valid.unwrap();
         let majority = {
             let pos: f64 =
@@ -458,9 +369,9 @@ mod tests {
     #[test]
     fn multiclass_trains_k_trees_per_round() {
         let g = generate(&DatasetSpec::covtype_like(3000), 3);
-        let mut p = quick_params("multi:softmax", 5);
+        let mut p = quick_params(ObjectiveKind::MultiSoftmax, 5);
         p.num_class = 7;
-        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        let b = train(p, &g.train, Some(&g.valid));
         assert_eq!(b.trees.len(), 7);
         assert!(b.trees.iter().all(|t| t.len() == 5));
         let acc = b.eval_history.last().unwrap().valid.unwrap();
@@ -473,8 +384,11 @@ mod tests {
     #[test]
     fn ranking_improves_ndcg() {
         let g = generate(&DatasetSpec::ranking_like(2000), 4);
-        let p = quick_params("rank:pairwise", 10);
-        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        let b = train(
+            quick_params(ObjectiveKind::RankPairwise, 10),
+            &g.train,
+            Some(&g.valid),
+        );
         let first = b.eval_history.first().unwrap().train;
         let last = b.eval_history.last().unwrap().train;
         assert!(last > first, "train ndcg should rise: {first} -> {last}");
@@ -483,7 +397,7 @@ mod tests {
     #[test]
     fn predict_matches_training_margins() {
         let g = generate(&DatasetSpec::higgs_like(2000), 5);
-        let b = Booster::train(&quick_params("binary:logistic", 8), &g.train, None).unwrap();
+        let b = train(quick_params(ObjectiveKind::BinaryLogistic, 8), &g.train, None);
         // re-predicting the training set via raw traversal must agree with
         // the last recorded train metric
         let acc = b.evaluate(&g.train, "accuracy").unwrap();
@@ -494,22 +408,22 @@ mod tests {
     #[test]
     fn early_stopping_stops() {
         let g = generate(&DatasetSpec::higgs_like(1500), 6);
-        let mut p = quick_params("binary:logistic", 200);
+        let mut p = quick_params(ObjectiveKind::BinaryLogistic, 200);
         p.early_stopping_rounds = 2;
         p.eta = 1.0; // aggressive -> quick overfit -> early stop
-        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        let b = train(p, &g.train, Some(&g.valid));
         assert!(b.n_rounds() < 200, "should stop early, ran {}", b.n_rounds());
     }
 
     #[test]
     fn multi_device_training_matches_quality() {
         let g = generate(&DatasetSpec::higgs_like(3000), 7);
-        let mut p1 = quick_params("binary:logistic", 10);
-        let mut p4 = quick_params("binary:logistic", 10);
+        let mut p1 = quick_params(ObjectiveKind::BinaryLogistic, 10);
+        let mut p4 = quick_params(ObjectiveKind::BinaryLogistic, 10);
         p1.n_devices = 1;
         p4.n_devices = 4;
-        let b1 = Booster::train(&p1, &g.train, Some(&g.valid)).unwrap();
-        let b4 = Booster::train(&p4, &g.train, Some(&g.valid)).unwrap();
+        let b1 = train(p1, &g.train, Some(&g.valid));
+        let b4 = train(p4, &g.train, Some(&g.valid));
         let a1 = b1.eval_history.last().unwrap().valid.unwrap();
         let a4 = b4.eval_history.last().unwrap().valid.unwrap();
         assert!((a1 - a4).abs() < 2.0, "p=1 acc {a1} vs p=4 acc {a4}");
@@ -518,7 +432,7 @@ mod tests {
     }
 
     #[test]
-    fn params_from_config() {
+    fn params_from_config_legacy_surface() {
         let cfg = Config::from_str_contents(
             "objective = binary:logistic\nnum_rounds = 7\neta = 0.1\ncompress = false\n",
         )
@@ -528,16 +442,36 @@ mod tests {
         assert_eq!(p.num_rounds, 7);
         assert_eq!(p.eta, 0.1);
         assert!(!p.compress);
+        // and the typed conversion round-trips the strings
+        let typed = p.to_learner_params().unwrap();
+        assert_eq!(typed.objective, ObjectiveKind::BinaryLogistic);
+        assert_eq!(BoosterParams::from_learner_params(&typed).objective, p.objective);
+    }
+
+    #[test]
+    fn deprecated_shim_still_trains() {
+        let g = generate(&DatasetSpec::higgs_like(1200), 17);
+        let p = BoosterParams {
+            objective: "binary:logistic".into(),
+            num_rounds: 4,
+            max_bins: 16,
+            max_depth: 3,
+            ..Default::default()
+        };
+        #[allow(deprecated)]
+        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        assert_eq!(b.n_rounds(), 4);
+        assert_eq!(b.params.objective, ObjectiveKind::BinaryLogistic);
     }
 
     #[test]
     fn subsample_trains_and_differs() {
         let g = generate(&DatasetSpec::higgs_like(3000), 10);
-        let full = quick_params("binary:logistic", 8);
-        let mut sub = quick_params("binary:logistic", 8);
+        let full = quick_params(ObjectiveKind::BinaryLogistic, 8);
+        let mut sub = quick_params(ObjectiveKind::BinaryLogistic, 8);
         sub.subsample = 0.5;
-        let bf = Booster::train(&full, &g.train, Some(&g.valid)).unwrap();
-        let bs = Booster::train(&sub, &g.train, Some(&g.valid)).unwrap();
+        let bf = train(full, &g.train, Some(&g.valid));
+        let bs = train(sub, &g.train, Some(&g.valid));
         assert_ne!(bf.trees[0], bs.trees[0], "subsample must change trees");
         let af = bf.eval_history.last().unwrap().valid.unwrap();
         let asub = bs.eval_history.last().unwrap().valid.unwrap();
@@ -563,10 +497,10 @@ mod tests {
             y[r] = x0 + 2.0 * (x0 * 2.0).sin() + x1 + (rng.next_f32() - 0.5);
         }
         let ds = Dataset::new(DMatrix::dense(vals, n, 3), y);
-        let mut p = quick_params("reg:squarederror", 20);
-        p.monotone_constraints = "1,0,0".into();
+        let mut p = quick_params(ObjectiveKind::SquaredError, 20);
+        p.monotone_constraints = "1,0,0".parse().unwrap();
         p.eta = 0.3;
-        let b = Booster::train(&p, &ds, None).unwrap();
+        let b = train(p, &ds, None);
 
         // probe: prediction must be non-decreasing along f0 for any fixed
         // (f1, f2)
@@ -589,8 +523,8 @@ mod tests {
         }
 
         // unconstrained control: the sin dips should break monotonicity
-        let pu = quick_params("reg:squarederror", 20);
-        let bu = Booster::train(&pu, &ds, None).unwrap();
+        let pu = quick_params(ObjectiveKind::SquaredError, 20);
+        let bu = train(pu, &ds, None);
         let grid: Vec<Float> = (0..100).flat_map(|i| [i as f32 * 0.1, 0.5, 0.5]).collect();
         let preds = bu.predict(&DMatrix::dense(grid, 100, 3));
         assert!(
@@ -601,8 +535,10 @@ mod tests {
 
     #[test]
     fn monotone_parse_errors() {
-        let mut p = quick_params("reg:squarederror", 1);
-        p.monotone_constraints = "2,0".into();
+        let mut p = BoosterParams {
+            monotone_constraints: "2,0".into(),
+            ..Default::default()
+        };
         assert!(p.coordinator_params().is_err());
         p.monotone_constraints = "abc".into();
         assert!(p.coordinator_params().is_err());
@@ -613,9 +549,9 @@ mod tests {
     #[test]
     fn colsample_restricts_features_used() {
         let g = generate(&DatasetSpec::higgs_like(3000), 12);
-        let mut p = quick_params("binary:logistic", 6);
+        let mut p = quick_params(ObjectiveKind::BinaryLogistic, 6);
         p.colsample_bytree = 0.25;
-        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        let b = train(p, &g.train, Some(&g.valid));
         // each individual tree touches at most ceil(0.25 * 28) = 7 features
         for t in &b.trees[0] {
             let mut feats: Vec<u32> = t
@@ -655,13 +591,22 @@ mod tests {
     #[test]
     fn lossguide_policy_trains() {
         let g = generate(&DatasetSpec::higgs_like(2000), 8);
-        let mut p = quick_params("binary:logistic", 8);
-        p.grow_policy = "lossguide".into();
+        let mut p = quick_params(ObjectiveKind::BinaryLogistic, 8);
+        p.grow_policy = GrowPolicy::LossGuide;
         p.max_depth = 0;
         p.max_leaves = 16;
-        let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+        let b = train(p, &g.train, Some(&g.valid));
         assert!(b.trees[0].iter().all(|t| t.n_leaves() <= 16));
         let acc = b.eval_history.last().unwrap().valid.unwrap();
         assert!(acc > 55.0);
+    }
+
+    #[test]
+    fn explicit_eval_metric_is_used() {
+        let g = generate(&DatasetSpec::higgs_like(1200), 19);
+        let mut p = quick_params(ObjectiveKind::BinaryLogistic, 4);
+        p.eval_metric = Some(MetricKind::Auc);
+        let b = train(p, &g.train, Some(&g.valid));
+        assert_eq!(b.eval_history.last().unwrap().metric, "auc");
     }
 }

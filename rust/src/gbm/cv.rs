@@ -4,7 +4,7 @@
 use anyhow::{ensure, Result};
 
 use crate::data::Dataset;
-use crate::gbm::{Booster, BoosterParams};
+use crate::gbm::{Learner, LearnerParams};
 use crate::util::Pcg64;
 
 /// Per-fold and aggregate cross-validation results.
@@ -22,7 +22,7 @@ pub struct CvResult {
 /// Folds are deterministic in `seed`. Returns the per-fold final
 /// validation scores of the objective's default (or configured) metric.
 pub fn cross_validate(
-    params: &BoosterParams,
+    params: &LearnerParams,
     data: &Dataset,
     k: usize,
     seed: u64,
@@ -30,6 +30,8 @@ pub fn cross_validate(
     ensure!(k >= 2, "need at least 2 folds");
     let n = data.n_rows();
     ensure!(n >= k, "fewer rows than folds");
+    // validate once up front rather than once per fold
+    let mut learner = Learner::from_params(params.clone())?;
     let mut idx: Vec<usize> = (0..n).collect();
     Pcg64::new(seed).shuffle(&mut idx);
 
@@ -48,7 +50,7 @@ pub fn cross_validate(
         };
         let train = take(&train_rows);
         let valid = take(valid_rows);
-        let booster = Booster::train(params, &train, Some(&valid))?;
+        let booster = learner.train(&train, Some(&valid))?;
         let rec = booster
             .eval_history
             .last()
@@ -71,13 +73,13 @@ mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetSpec};
 
-    fn params() -> BoosterParams {
-        BoosterParams {
-            objective: "binary:logistic".into(),
+    fn params() -> LearnerParams {
+        LearnerParams {
+            objective: crate::gbm::ObjectiveKind::BinaryLogistic,
             num_rounds: 8,
             max_depth: 4,
             max_bins: 16,
-            eval_metric: "accuracy".into(),
+            eval_metric: Some(crate::gbm::MetricKind::Accuracy),
             ..Default::default()
         }
     }

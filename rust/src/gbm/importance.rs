@@ -65,7 +65,7 @@ mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetSpec};
     use crate::data::{DMatrix, Dataset};
-    use crate::gbm::{Booster, BoosterParams};
+    use crate::gbm::{Learner, LearnerParams, ObjectiveKind};
     use crate::Float;
 
     #[test]
@@ -97,15 +97,15 @@ mod tests {
             y[r] = f32::from(vals[r * 5 + 2] > 0.5);
         }
         let ds = Dataset::new(DMatrix::dense(vals, n, 5), y);
-        let params = BoosterParams {
-            objective: "binary:logistic".into(),
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
             num_rounds: 5,
             max_depth: 3,
             max_bins: 16,
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&params, &ds, None).unwrap();
+        let b = Learner::from_params(params).unwrap().train(&ds, None).unwrap();
         for kind in [ImportanceKind::Gain, ImportanceKind::Cover, ImportanceKind::Weight] {
             let imp = feature_importance(&b, kind);
             assert_eq!(imp[0].0, 2, "{kind:?}: {imp:?}");
@@ -115,8 +115,8 @@ mod tests {
     #[test]
     fn multiclass_aggregates_groups() {
         let g = generate(&DatasetSpec::covtype_like(1500), 3);
-        let params = BoosterParams {
-            objective: "multi:softmax".into(),
+        let params = LearnerParams {
+            objective: ObjectiveKind::MultiSoftmax,
             num_class: 7,
             num_rounds: 2,
             max_depth: 3,
@@ -124,7 +124,10 @@ mod tests {
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&params, &g.train, None).unwrap();
+        let b = Learner::from_params(params)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
         let imp = feature_importance(&b, ImportanceKind::Weight);
         assert!(!imp.is_empty());
         let total: f64 = imp.iter().map(|(_, v)| v).sum();

@@ -1,0 +1,673 @@
+//! The typed training façade: [`LearnerBuilder`] → [`Learner`] →
+//! [`Booster`].
+//!
+//! This module owns the Figure-1 boosting loop (predict → gradient →
+//! quantised multi-device tree construction → evaluation). The legacy
+//! `Booster::train(&BoosterParams, ..)` entry point is now a thin
+//! deprecated shim over it.
+//!
+//! * [`LearnerBuilder`] — fluent, string-or-typed configuration whose
+//!   [`build`](LearnerBuilder::build) runs the full cross-field validation
+//!   matrix up front and reports **every** violation at once.
+//! * [`Callback`] — round/eval/train-end hooks. The early-stopping and
+//!   verbose-logging behaviour that used to be hardcoded in the training
+//!   loop now ships as the [`EarlyStopping`] and [`EvalLogger`] callbacks
+//!   (plus [`TimeBudget`] for wall-clock-capped runs); params-driven
+//!   configurations get them implicitly, so behaviour is unchanged.
+//!
+//! ```no_run
+//! use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+//! use xgb_tpu::gbm::{Learner, MetricKind, ObjectiveKind};
+//!
+//! let ds = generate(&DatasetSpec::higgs_like(10_000), 42);
+//! let mut learner = Learner::builder()
+//!     .objective(ObjectiveKind::BinaryLogistic)
+//!     .eval_metric(MetricKind::Auc)
+//!     .num_rounds(20)
+//!     .build()
+//!     .unwrap();
+//! let booster = learner.train(&ds.train, Some(&ds.valid)).unwrap();
+//! let preds = booster.predict(&ds.valid.x);
+//! # let _ = preds;
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::{BuildStats, HistBackend, MultiDeviceCoordinator, NativeBackend};
+use crate::data::Dataset;
+use crate::gbm::booster::{Booster, EvalRecord};
+use crate::gbm::metric::Metric;
+use crate::gbm::params::{
+    AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints, ObjectiveKind,
+    ValidationErrors,
+};
+use crate::gbm::registry::{MetricRegistry, ObjectiveRegistry};
+use crate::predict;
+use crate::tree::RegTree;
+use crate::util::Config;
+use crate::Float;
+
+/// What a callback asks the training loop to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallbackAction {
+    Continue,
+    /// Finish the current round's bookkeeping, then stop training.
+    Stop,
+}
+
+/// Read-only view of training state handed to callbacks.
+pub struct RoundContext<'a> {
+    /// 1-based index of the round that just completed.
+    pub round: usize,
+    /// Configured round budget.
+    pub num_rounds: usize,
+    /// Wall-clock seconds since training started.
+    pub elapsed_secs: f64,
+    /// Evaluation history so far (most recent last).
+    pub history: &'a [EvalRecord],
+    /// Direction of the active metric (`true` = lower is better).
+    pub minimize: bool,
+}
+
+/// Training lifecycle hooks.
+///
+/// All methods have no-op defaults; implement the ones you need. Hooks
+/// returning [`CallbackAction::Stop`] end training after the current
+/// round (the round's trees are kept, mirroring the legacy early-stop
+/// semantics).
+pub trait Callback: Send {
+    /// Called once before the first round. Reset any per-run state here —
+    /// the same callback instance is reused across `train` calls.
+    fn on_train_begin(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called after every round (whether or not an evaluation ran).
+    fn on_round_end(&mut self, _ctx: &RoundContext) -> Result<CallbackAction> {
+        Ok(CallbackAction::Continue)
+    }
+
+    /// Called after each evaluation with the fresh record
+    /// (`ctx.history.last()` is the same record).
+    fn on_eval(&mut self, _ctx: &RoundContext, _record: &EvalRecord) -> Result<CallbackAction> {
+        Ok(CallbackAction::Continue)
+    }
+
+    /// Called once when training finishes (normally or via `Stop`).
+    fn on_train_end(&mut self, _history: &[EvalRecord]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Stop when the validation metric hasn't improved in `rounds`
+/// consecutive evaluations — the callback form of the legacy
+/// `early_stopping_rounds` behaviour.
+pub struct EarlyStopping {
+    rounds: usize,
+    best: Option<f64>,
+    stale: usize,
+    /// Round of the best validation score seen (1-based), if any.
+    pub best_round: Option<usize>,
+}
+
+impl EarlyStopping {
+    pub fn new(rounds: usize) -> Self {
+        EarlyStopping {
+            rounds,
+            best: None,
+            stale: 0,
+            best_round: None,
+        }
+    }
+}
+
+impl Callback for EarlyStopping {
+    fn on_train_begin(&mut self) -> Result<()> {
+        self.best = None;
+        self.stale = 0;
+        self.best_round = None;
+        Ok(())
+    }
+
+    fn on_eval(&mut self, ctx: &RoundContext, record: &EvalRecord) -> Result<CallbackAction> {
+        let Some(score) = record.valid else {
+            return Ok(CallbackAction::Continue);
+        };
+        let improved = match self.best {
+            None => true,
+            Some(best) => {
+                if ctx.minimize {
+                    score < best
+                } else {
+                    score > best
+                }
+            }
+        };
+        if improved {
+            self.best = Some(score);
+            self.best_round = Some(record.round);
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.rounds {
+                return Ok(CallbackAction::Stop);
+            }
+        }
+        Ok(CallbackAction::Continue)
+    }
+}
+
+/// Print one `[round] train-metric:… valid-metric:…` line per evaluation
+/// to stderr — the callback form of the legacy `verbose` flag.
+pub struct EvalLogger;
+
+impl Callback for EvalLogger {
+    fn on_eval(&mut self, _ctx: &RoundContext, record: &EvalRecord) -> Result<CallbackAction> {
+        eprintln!(
+            "[{}] train-{}:{:.5}{}",
+            record.round,
+            record.metric,
+            record.train,
+            record
+                .valid
+                .map(|v| format!(" valid-{}:{v:.5}", record.metric))
+                .unwrap_or_default()
+        );
+        Ok(CallbackAction::Continue)
+    }
+}
+
+/// Stop training once the wall clock exceeds a budget. The round in
+/// flight completes, so the produced ensemble is always usable.
+pub struct TimeBudget {
+    budget_secs: f64,
+}
+
+impl TimeBudget {
+    pub fn new(budget_secs: f64) -> Self {
+        TimeBudget { budget_secs }
+    }
+}
+
+impl Callback for TimeBudget {
+    fn on_round_end(&mut self, ctx: &RoundContext) -> Result<CallbackAction> {
+        if ctx.elapsed_secs >= self.budget_secs {
+            Ok(CallbackAction::Stop)
+        } else {
+            Ok(CallbackAction::Continue)
+        }
+    }
+}
+
+/// A validated training configuration plus its callbacks — the typed
+/// front door to the Figure-1 pipeline.
+pub struct Learner {
+    params: LearnerParams,
+    callbacks: Vec<Box<dyn Callback>>,
+}
+
+impl Learner {
+    /// Start a fluent configuration.
+    pub fn builder() -> LearnerBuilder {
+        LearnerBuilder::new()
+    }
+
+    /// Wrap already-typed params, running the full validation matrix.
+    pub fn from_params(params: LearnerParams) -> Result<Self, ValidationErrors> {
+        params.validate()?;
+        Ok(Learner {
+            params,
+            callbacks: Vec::new(),
+        })
+    }
+
+    pub fn params(&self) -> &LearnerParams {
+        &self.params
+    }
+
+    /// Attach a callback (chaining form).
+    pub fn with_callback(mut self, callback: Box<dyn Callback>) -> Self {
+        self.callbacks.push(callback);
+        self
+    }
+
+    /// Attach a callback.
+    pub fn add_callback(&mut self, callback: Box<dyn Callback>) -> &mut Self {
+        self.callbacks.push(callback);
+        self
+    }
+
+    /// Train with the native histogram backend.
+    pub fn train(&mut self, train: &Dataset, valid: Option<&Dataset>) -> Result<Booster> {
+        self.train_with_backend(train, valid, Box::new(NativeBackend))
+    }
+
+    /// Train with an explicit histogram backend (e.g. the XLA runtime).
+    pub fn train_with_backend(
+        &mut self,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<Booster> {
+        let t0 = Instant::now();
+        let params = self.params.clone();
+
+        // dataset-dependent validation that build() could not see
+        params
+            .monotone_constraints
+            .check_n_features(train.x.n_cols())
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+
+        let objective = ObjectiveRegistry::create(params.objective.name(), params.num_class)
+            .context("resolving objective")?;
+        let k = objective.n_outputs();
+        let metric: Box<dyn Metric> = match &params.eval_metric {
+            Some(kind) => MetricRegistry::create(kind.name()).context("resolving eval_metric")?,
+            None => MetricRegistry::create(objective.default_metric())
+                .context("resolving the objective's default metric")?,
+        };
+        let minimize = metric.minimize();
+
+        // params-driven implicit callbacks keep legacy behaviour intact
+        let mut implicit: Vec<Box<dyn Callback>> = Vec::new();
+        if params.verbose {
+            implicit.push(Box::new(EvalLogger));
+        }
+        if params.early_stopping_rounds > 0 {
+            implicit.push(Box::new(EarlyStopping::new(params.early_stopping_rounds)));
+        }
+
+        let mut coordinator = MultiDeviceCoordinator::with_backend(
+            &train.x,
+            params.coordinator_params(),
+            backend,
+        )?;
+
+        let base_score = objective.base_score(train);
+        let n = train.n_rows();
+        let mut margins: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+        let mut valid_margins: Option<Vec<Vec<Float>>> =
+            valid.map(|v| base_score.iter().map(|&b| vec![b; v.n_rows()]).collect());
+
+        let mut trees: Vec<Vec<RegTree>> = vec![Vec::new(); k];
+        let mut eval_history: Vec<EvalRecord> = Vec::new();
+        let mut build_stats = BuildStats::default();
+
+        for cb in self.callbacks.iter_mut().chain(implicit.iter_mut()) {
+            cb.on_train_begin()?;
+        }
+
+        let mut sub_rng = crate::util::Pcg64::new(params.seed ^ 0x5b5a);
+        for round in 0..params.num_rounds {
+            let mut grads = objective.gradients(train, &margins);
+            if params.subsample < 1.0 {
+                // exclude unsampled rows from this round's trees by zeroing
+                // their gradient mass (same rows for all k outputs)
+                for i in 0..n {
+                    if sub_rng.next_f64() >= params.subsample {
+                        for class_grads in grads.iter_mut() {
+                            class_grads[i] = crate::GradPair::default();
+                        }
+                    }
+                }
+            }
+            for (c, class_grads) in grads.iter().enumerate().take(k) {
+                let result = coordinator.build_tree(class_grads)?;
+                for (m, d) in margins[c].iter_mut().zip(result.deltas.iter()) {
+                    *m += *d;
+                }
+                if let (Some(vm), Some(v)) = (valid_margins.as_mut(), valid) {
+                    predict::accumulate_tree(&result.tree, &v.x, &mut vm[c]);
+                }
+                build_stats.accumulate(&result.stats);
+                trees[c].push(result.tree);
+            }
+
+            let mut stop = false;
+            let do_eval = params.eval_every > 0 && (round + 1) % params.eval_every == 0;
+            if do_eval || round + 1 == params.num_rounds {
+                let train_score = metric.eval(train, &objective.transform(&margins));
+                let valid_score = valid_margins
+                    .as_ref()
+                    .zip(valid)
+                    .map(|(vm, v)| metric.eval(v, &objective.transform(vm)));
+                eval_history.push(EvalRecord {
+                    round: round + 1,
+                    metric: metric.name(),
+                    train: train_score,
+                    valid: valid_score,
+                    elapsed_secs: t0.elapsed().as_secs_f64(),
+                });
+                let record = eval_history.last().unwrap().clone();
+                let ctx = RoundContext {
+                    round: round + 1,
+                    num_rounds: params.num_rounds,
+                    elapsed_secs: t0.elapsed().as_secs_f64(),
+                    history: &eval_history,
+                    minimize,
+                };
+                for cb in self.callbacks.iter_mut().chain(implicit.iter_mut()) {
+                    if cb.on_eval(&ctx, &record)? == CallbackAction::Stop {
+                        stop = true;
+                    }
+                }
+            }
+
+            let ctx = RoundContext {
+                round: round + 1,
+                num_rounds: params.num_rounds,
+                elapsed_secs: t0.elapsed().as_secs_f64(),
+                history: &eval_history,
+                minimize,
+            };
+            for cb in self.callbacks.iter_mut().chain(implicit.iter_mut()) {
+                if cb.on_round_end(&ctx)? == CallbackAction::Stop {
+                    stop = true;
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+
+        for cb in self.callbacks.iter_mut().chain(implicit.iter_mut()) {
+            cb.on_train_end(&eval_history)?;
+        }
+
+        let simulated_secs = build_stats.simulated_secs;
+        Ok(Booster {
+            params,
+            objective,
+            base_score,
+            trees,
+            eval_history,
+            build_stats,
+            train_secs: t0.elapsed().as_secs_f64(),
+            simulated_secs,
+        })
+    }
+}
+
+/// Fluent, validating constructor for [`Learner`].
+///
+/// Setters are typed; [`LearnerBuilder::set`] additionally accepts
+/// `key`/`value` strings (the CLI/config surface) and records parse
+/// failures. [`build`](LearnerBuilder::build) then reports **all**
+/// problems — parse failures and cross-field violations — in one
+/// [`ValidationErrors`].
+#[derive(Default)]
+pub struct LearnerBuilder {
+    params: LearnerParams,
+    callbacks: Vec<Box<dyn Callback>>,
+    n_features: Option<usize>,
+    parse_errors: Vec<String>,
+}
+
+macro_rules! setter {
+    ($(#[$doc:meta])* $name:ident: $ty:ty) => {
+        $(#[$doc])*
+        pub fn $name(mut self, value: $ty) -> Self {
+            self.params.$name = value;
+            self
+        }
+    };
+}
+
+impl LearnerBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    setter!(objective: ObjectiveKind);
+    setter!(num_class: usize);
+    setter!(num_rounds: usize);
+    setter!(eta: f64);
+    setter!(max_depth: usize);
+    setter!(max_leaves: usize);
+    setter!(max_bins: usize);
+    setter!(lambda: f64);
+    setter!(gamma: f64);
+    setter!(alpha: f64);
+    setter!(min_child_weight: f64);
+    setter!(grow_policy: GrowPolicy);
+    setter!(n_devices: usize);
+    setter!(compress: bool);
+    setter!(allreduce: AllReduce);
+    setter!(eval_every: usize);
+    setter!(early_stopping_rounds: usize);
+    setter!(subsample: f64);
+    setter!(colsample_bytree: f64);
+    setter!(monotone_constraints: MonotoneConstraints);
+    setter!(seed: u64);
+    setter!(verbose: bool);
+
+    /// Evaluation metric (`None`/unset = the objective's default).
+    pub fn eval_metric(mut self, metric: MetricKind) -> Self {
+        self.params.eval_metric = Some(metric);
+        self
+    }
+
+    /// Declare the feature count so constraints can be checked at
+    /// `build()` instead of first touching data at train time.
+    pub fn n_features(mut self, n: usize) -> Self {
+        self.n_features = Some(n);
+        self
+    }
+
+    /// Attach a training callback.
+    pub fn callback(mut self, callback: Box<dyn Callback>) -> Self {
+        self.callbacks.push(callback);
+        self
+    }
+
+    /// String-typed setter for the CLI/config surface. Unknown keys and
+    /// unparsable values are recorded and reported by `build()`.
+    pub fn set(mut self, key: &str, value: &str) -> Self {
+        let mut err = |msg: String| self.parse_errors.push(msg);
+        macro_rules! parse_into {
+            ($field:ident) => {
+                match value.parse() {
+                    Ok(v) => self.params.$field = v,
+                    Err(_) => err(format!(
+                        "{key}: cannot parse {value:?} as {}",
+                        stringify!($field)
+                    )),
+                }
+            };
+        }
+        match key {
+            "objective" => self.params.objective = value.parse().expect("infallible"),
+            "eval_metric" => {
+                self.params.eval_metric = if value.is_empty() {
+                    None
+                } else {
+                    Some(value.parse().expect("infallible"))
+                }
+            }
+            "grow_policy" => match value.parse() {
+                Ok(v) => self.params.grow_policy = v,
+                Err(e) => err(e),
+            },
+            "allreduce" => match value.parse() {
+                Ok(v) => self.params.allreduce = v,
+                Err(e) => err(e),
+            },
+            "monotone_constraints" => match value.parse() {
+                Ok(v) => self.params.monotone_constraints = v,
+                Err(e) => err(e),
+            },
+            "num_class" => parse_into!(num_class),
+            "num_rounds" => parse_into!(num_rounds),
+            "eta" => parse_into!(eta),
+            "max_depth" => parse_into!(max_depth),
+            "max_leaves" => parse_into!(max_leaves),
+            "max_bins" => parse_into!(max_bins),
+            "lambda" => parse_into!(lambda),
+            "gamma" => parse_into!(gamma),
+            "alpha" => parse_into!(alpha),
+            "min_child_weight" => parse_into!(min_child_weight),
+            "n_devices" => parse_into!(n_devices),
+            "compress" => parse_into!(compress),
+            "eval_every" => parse_into!(eval_every),
+            "early_stopping_rounds" => parse_into!(early_stopping_rounds),
+            "subsample" => parse_into!(subsample),
+            "colsample_bytree" => parse_into!(colsample_bytree),
+            "seed" => parse_into!(seed),
+            "verbose" => parse_into!(verbose),
+            other => err(format!("unknown parameter {other:?}")),
+        }
+        self
+    }
+
+    /// Replace the parameters with the ones read from a [`Config`]
+    /// (defaults for absent keys; unrelated keys ignored, matching the
+    /// merged CLI flow). Call *before* typed setters — this overwrites
+    /// every field.
+    pub fn apply_config(mut self, cfg: &Config) -> Self {
+        match LearnerParams::from_config(cfg) {
+            Ok(params) => self.params = params,
+            Err(e) => self.parse_errors.push(format!("{e:#}")),
+        }
+        self
+    }
+
+    /// Validate everything and produce a [`Learner`]. Returns **all**
+    /// accumulated problems, not just the first.
+    pub fn build(self) -> Result<Learner, ValidationErrors> {
+        let mut errs = self.parse_errors;
+        errs.extend(self.params.validation_errors(self.n_features));
+        if errs.is_empty() {
+            Ok(Learner {
+                params: self.params,
+                callbacks: self.callbacks,
+            })
+        } else {
+            Err(ValidationErrors(errs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+
+    fn quick(objective: ObjectiveKind, rounds: usize) -> LearnerParams {
+        LearnerParams {
+            objective,
+            num_rounds: rounds,
+            max_bins: 32,
+            max_depth: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_trains_binary_classifier() {
+        let g = generate(&DatasetSpec::higgs_like(3000), 2);
+        let mut learner = Learner::builder()
+            .objective(ObjectiveKind::BinaryLogistic)
+            .num_rounds(10)
+            .max_bins(32)
+            .max_depth(4)
+            .build()
+            .unwrap();
+        let b = learner.train(&g.train, Some(&g.valid)).unwrap();
+        let acc = b.eval_history.last().unwrap().valid.unwrap();
+        assert!(acc > 60.0, "accuracy {acc}");
+    }
+
+    #[test]
+    fn builder_collects_all_errors() {
+        let err = Learner::builder()
+            .objective(ObjectiveKind::MultiSoftmax) // missing num_class
+            .eta(-1.0)
+            .set("max_depth", "banana")
+            .build()
+            .unwrap_err();
+        assert!(err.0.len() >= 3, "{err}");
+    }
+
+    #[test]
+    fn set_accepts_string_surface() {
+        let learner = Learner::builder()
+            .set("objective", "binary:logistic")
+            .set("num_rounds", "5")
+            .set("eval_metric", "auc")
+            .build()
+            .unwrap();
+        assert_eq!(learner.params().objective, ObjectiveKind::BinaryLogistic);
+        assert_eq!(learner.params().num_rounds, 5);
+        assert_eq!(learner.params().eval_metric, Some(MetricKind::Auc));
+    }
+
+    #[test]
+    fn early_stopping_callback_stops() {
+        let g = generate(&DatasetSpec::higgs_like(1500), 6);
+        let mut p = quick(ObjectiveKind::BinaryLogistic, 200);
+        p.eta = 1.0; // aggressive -> quick overfit -> early stop
+        let mut learner = Learner::from_params(p)
+            .unwrap()
+            .with_callback(Box::new(EarlyStopping::new(2)));
+        let b = learner.train(&g.train, Some(&g.valid)).unwrap();
+        assert!(b.n_rounds() < 200, "should stop early, ran {}", b.n_rounds());
+    }
+
+    #[test]
+    fn time_budget_zero_stops_after_first_round() {
+        let g = generate(&DatasetSpec::higgs_like(1000), 7);
+        let mut learner = Learner::from_params(quick(ObjectiveKind::BinaryLogistic, 50))
+            .unwrap()
+            .with_callback(Box::new(TimeBudget::new(0.0)));
+        let b = learner.train(&g.train, None).unwrap();
+        assert_eq!(b.n_rounds(), 1);
+    }
+
+    #[test]
+    fn monotone_longer_than_features_rejected_at_train() {
+        let g = generate(&DatasetSpec::higgs_like(500), 8);
+        let mut p = quick(ObjectiveKind::SquaredError, 2);
+        p.monotone_constraints = "1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0,-1,1,0"
+            .parse()
+            .unwrap();
+        assert_eq!(p.monotone_constraints.len(), 29); // higgs has 28 features
+        let mut learner = Learner::from_params(p).unwrap();
+        assert!(learner.train(&g.train, None).is_err());
+    }
+
+    #[test]
+    fn builder_n_features_hint_checks_constraints() {
+        let err = Learner::builder()
+            .monotone_constraints("1,1,1".parse().unwrap())
+            .n_features(2)
+            .build()
+            .unwrap_err();
+        assert!(err.0[0].contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn round_context_reports_history() {
+        struct HistoryProbe {
+            evals_seen: usize,
+        }
+        impl Callback for HistoryProbe {
+            fn on_eval(
+                &mut self,
+                ctx: &RoundContext,
+                record: &EvalRecord,
+            ) -> Result<CallbackAction> {
+                self.evals_seen += 1;
+                assert_eq!(ctx.history.len(), self.evals_seen);
+                assert_eq!(ctx.history.last().unwrap().round, record.round);
+                Ok(CallbackAction::Continue)
+            }
+        }
+        let g = generate(&DatasetSpec::higgs_like(800), 9);
+        let mut learner = Learner::from_params(quick(ObjectiveKind::BinaryLogistic, 4))
+            .unwrap()
+            .with_callback(Box::new(HistoryProbe { evals_seen: 0 }));
+        learner.train(&g.train, Some(&g.valid)).unwrap();
+    }
+}

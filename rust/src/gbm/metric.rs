@@ -18,19 +18,11 @@ pub trait Metric: Send {
     fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64;
 }
 
-/// Look up a metric by name.
+/// Look up a metric by name — built-in or registered through
+/// [`crate::gbm::MetricRegistry`]. Unknown names error with the full
+/// valid-name list.
 pub fn metric_by_name(name: &str) -> anyhow::Result<Box<dyn Metric>> {
-    Ok(match name {
-        "rmse" => Box::new(Rmse),
-        "mae" => Box::new(Mae),
-        "logloss" => Box::new(LogLoss),
-        "accuracy" | "acc" => Box::new(Accuracy),
-        "error" => Box::new(ErrorRate),
-        "auc" => Box::new(Auc),
-        "merror" => Box::new(MultiError),
-        "ndcg" => Box::new(Ndcg { k: 10 }),
-        other => anyhow::bail!("unknown metric {other:?}"),
-    })
+    crate::gbm::registry::MetricRegistry::create(name)
 }
 
 /// Root mean squared error.
@@ -300,7 +292,9 @@ mod tests {
         for m in ["rmse", "mae", "logloss", "accuracy", "auc", "merror", "ndcg"] {
             assert!(metric_by_name(m).is_ok(), "{m}");
         }
-        assert!(metric_by_name("nope").is_err());
+        let err = metric_by_name("nope").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rmse") && msg.contains("auc"), "{msg}");
     }
 
     #[test]

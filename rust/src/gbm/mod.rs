@@ -1,18 +1,32 @@
-//! Gradient boosting framework: objectives (paper §2.5), evaluation
-//! metrics, and the boosting driver that ties quantisation, compression,
+//! Gradient boosting framework: the typed [`Learner`] front door
+//! (builder-validated params, pluggable objective/metric registries,
+//! training callbacks), objectives (paper §2.5), evaluation metrics, and
+//! the trained [`Booster`] that ties quantisation, compression,
 //! multi-device tree construction and prediction into the Figure 1
 //! pipeline.
 
 pub mod booster;
 pub mod cv;
 pub mod importance;
+pub mod learner;
 pub mod metric;
 pub mod objective;
+pub mod params;
+pub mod registry;
 pub mod serialize;
 
 pub use booster::{Booster, BoosterParams, EvalRecord};
 pub use cv::{cross_validate, CvResult};
 pub use importance::{feature_importance, ImportanceKind};
+pub use learner::{
+    Callback, CallbackAction, EarlyStopping, EvalLogger, Learner, LearnerBuilder, RoundContext,
+    TimeBudget,
+};
 pub use metric::{metric_by_name, Metric};
 pub use objective::{objective_by_name, Objective};
+pub use params::{
+    AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints, ObjectiveKind,
+    ValidationErrors,
+};
+pub use registry::{MetricRegistry, ObjectiveRegistry};
 pub use serialize::{load_model, load_model_file, save_model, save_model_file};

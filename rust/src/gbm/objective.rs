@@ -38,23 +38,19 @@ pub trait Objective: Send {
     fn supports_device(&self) -> bool {
         false
     }
+
+    /// Name of the metric evaluated when `eval_metric` is unset (what
+    /// Table 2 reports per task). Custom objectives may override.
+    fn default_metric(&self) -> &'static str {
+        "rmse"
+    }
 }
 
-/// Look up an objective by its XGBoost-style name.
+/// Look up an objective by its XGBoost-style name — built-in or
+/// registered through [`crate::gbm::ObjectiveRegistry`]. Unknown names
+/// error with the full valid-name list.
 pub fn objective_by_name(name: &str, num_class: usize) -> anyhow::Result<Box<dyn Objective>> {
-    Ok(match name {
-        "reg:squarederror" | "reg:linear" => Box::new(SquaredError),
-        "binary:logistic" => Box::new(Logistic),
-        "multi:softmax" | "multi:softprob" => {
-            anyhow::ensure!(num_class >= 2, "multi:softmax needs num_class >= 2");
-            Box::new(Softmax {
-                k: num_class,
-                prob_output: name == "multi:softprob",
-            })
-        }
-        "rank:pairwise" => Box::new(PairwiseRank::default()),
-        other => anyhow::bail!("unknown objective {other:?}"),
-    })
+    crate::gbm::registry::ObjectiveRegistry::create(name, num_class)
 }
 
 #[inline]
@@ -127,6 +123,10 @@ impl Objective for Logistic {
 
     fn supports_device(&self) -> bool {
         true
+    }
+
+    fn default_metric(&self) -> &'static str {
+        "accuracy"
     }
 }
 
@@ -206,6 +206,10 @@ impl Objective for Softmax {
                 .collect()
         }
     }
+
+    fn default_metric(&self) -> &'static str {
+        "accuracy"
+    }
 }
 
 /// `rank:pairwise` — LambdaMART-style pairwise logistic loss within query
@@ -253,6 +257,10 @@ impl Objective for PairwiseRank {
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
         margins[0].clone()
+    }
+
+    fn default_metric(&self) -> &'static str {
+        "ndcg"
     }
 }
 
@@ -357,6 +365,21 @@ mod tests {
         assert!(objective_by_name("multi:softmax", 1).is_err());
         assert!(objective_by_name("rank:pairwise", 1).is_ok());
         assert!(objective_by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn default_metrics_match_table2() {
+        assert_eq!(SquaredError.default_metric(), "rmse");
+        assert_eq!(Logistic.default_metric(), "accuracy");
+        assert_eq!(Softmax { k: 3, prob_output: false }.default_metric(), "accuracy");
+        assert_eq!(PairwiseRank.default_metric(), "ndcg");
+    }
+
+    #[test]
+    fn unknown_objective_error_names_the_valid_set() {
+        let err = objective_by_name("nope", 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("binary:logistic"), "{msg}");
     }
 
     #[test]

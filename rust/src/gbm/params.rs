@@ -1,0 +1,683 @@
+//! Typed, validated training parameters — the data half of the [`Learner`]
+//! façade (`crate::gbm::learner`).
+//!
+//! The five formerly stringly-typed booster fields are real enums here —
+//! [`ObjectiveKind`], [`MetricKind`], [`GrowPolicy`], [`AllReduce`],
+//! [`MonotoneConstraints`] — each implementing `FromStr`/`Display` so CLI
+//! and config text round-trips losslessly, and [`LearnerParams::validate`]
+//! performs the full cross-field check up front (returning *every*
+//! violation, not just the first) so invalid configurations can no longer
+//! fail mid-training.
+//!
+//! [`Learner`]: crate::gbm::learner::Learner
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::CoordinatorParams;
+use crate::gbm::registry::{MetricRegistry, ObjectiveRegistry};
+use crate::util::Config;
+
+// The growth-policy and all-reduce selectors already exist as enums deeper
+// in the stack; the learner API re-exports them under their XGBoost-facing
+// names so the whole typed parameter surface lives in one module.
+pub use crate::comm::AllReduceAlgo as AllReduce;
+pub use crate::tree::GrowthPolicy as GrowPolicy;
+
+/// Training objective selector (XGBoost-style names).
+///
+/// Unknown names parse into [`ObjectiveKind::Custom`]; whether such a name
+/// actually resolves is checked by [`LearnerParams::validate`] against the
+/// [`ObjectiveRegistry`], so user-registered objectives are first-class in
+/// config files and on the CLI.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// `reg:squarederror` (alias `reg:linear` accepted on parse).
+    #[default]
+    SquaredError,
+    /// `binary:logistic`.
+    BinaryLogistic,
+    /// `multi:softmax` — argmax class output; requires `num_class >= 2`.
+    MultiSoftmax,
+    /// `multi:softprob` — flattened probability matrix output.
+    MultiSoftprob,
+    /// `rank:pairwise`.
+    RankPairwise,
+    /// A name resolved through the [`ObjectiveRegistry`] at build time.
+    Custom(String),
+}
+
+impl ObjectiveKind {
+    /// Canonical names of the built-in objectives.
+    pub const BUILTIN_NAMES: [&'static str; 5] = [
+        "reg:squarederror",
+        "binary:logistic",
+        "multi:softmax",
+        "multi:softprob",
+        "rank:pairwise",
+    ];
+
+    /// The canonical name (what `Display` prints and model files store).
+    pub fn name(&self) -> &str {
+        match self {
+            ObjectiveKind::SquaredError => "reg:squarederror",
+            ObjectiveKind::BinaryLogistic => "binary:logistic",
+            ObjectiveKind::MultiSoftmax => "multi:softmax",
+            ObjectiveKind::MultiSoftprob => "multi:softprob",
+            ObjectiveKind::RankPairwise => "rank:pairwise",
+            ObjectiveKind::Custom(name) => name,
+        }
+    }
+
+    /// Does this objective train `num_class` tree groups per round?
+    pub fn is_multiclass(&self) -> bool {
+        matches!(self, ObjectiveKind::MultiSoftmax | ObjectiveKind::MultiSoftprob)
+    }
+}
+
+impl fmt::Display for ObjectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ObjectiveKind {
+    type Err = std::convert::Infallible;
+
+    /// Never fails: unknown names become [`ObjectiveKind::Custom`] and are
+    /// rejected (with the valid-name list) by [`LearnerParams::validate`].
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "reg:squarederror" | "reg:linear" => ObjectiveKind::SquaredError,
+            "binary:logistic" => ObjectiveKind::BinaryLogistic,
+            "multi:softmax" => ObjectiveKind::MultiSoftmax,
+            "multi:softprob" => ObjectiveKind::MultiSoftprob,
+            "rank:pairwise" => ObjectiveKind::RankPairwise,
+            other => ObjectiveKind::Custom(other.to_string()),
+        })
+    }
+}
+
+/// Evaluation metric selector.
+///
+/// Like [`ObjectiveKind`], unknown names parse into [`MetricKind::Custom`]
+/// and are validated against the [`MetricRegistry`] at build time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricKind {
+    Rmse,
+    Mae,
+    LogLoss,
+    /// `accuracy` (alias `acc` accepted on parse).
+    Accuracy,
+    Error,
+    Auc,
+    MError,
+    Ndcg,
+    /// A name resolved through the [`MetricRegistry`] at build time.
+    Custom(String),
+}
+
+impl MetricKind {
+    /// Canonical names of the built-in metrics.
+    pub const BUILTIN_NAMES: [&'static str; 8] =
+        ["rmse", "mae", "logloss", "accuracy", "error", "auc", "merror", "ndcg"];
+
+    /// The canonical name (what `Display` prints).
+    pub fn name(&self) -> &str {
+        match self {
+            MetricKind::Rmse => "rmse",
+            MetricKind::Mae => "mae",
+            MetricKind::LogLoss => "logloss",
+            MetricKind::Accuracy => "accuracy",
+            MetricKind::Error => "error",
+            MetricKind::Auc => "auc",
+            MetricKind::MError => "merror",
+            MetricKind::Ndcg => "ndcg",
+            MetricKind::Custom(name) => name,
+        }
+    }
+}
+
+impl fmt::Display for MetricKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for MetricKind {
+    type Err = std::convert::Infallible;
+
+    /// Never fails: unknown names become [`MetricKind::Custom`] and are
+    /// rejected (with the valid-name list) by [`LearnerParams::validate`].
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "rmse" => MetricKind::Rmse,
+            "mae" => MetricKind::Mae,
+            "logloss" => MetricKind::LogLoss,
+            "accuracy" | "acc" => MetricKind::Accuracy,
+            "error" => MetricKind::Error,
+            "auc" => MetricKind::Auc,
+            "merror" => MetricKind::MError,
+            "ndcg" => MetricKind::Ndcg,
+            other => MetricKind::Custom(other.to_string()),
+        })
+    }
+}
+
+/// Per-feature monotonicity constraints (+1 increasing, 0 free, −1
+/// decreasing). A list shorter than the feature count implies 0 for the
+/// remaining features; a *longer* list is rejected at build/train time.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MonotoneConstraints(Vec<i8>);
+
+impl MonotoneConstraints {
+    /// No constraints (the default).
+    pub fn none() -> Self {
+        MonotoneConstraints(Vec::new())
+    }
+
+    /// Build from explicit per-feature signs, validating each is −1/0/+1.
+    pub fn new(signs: Vec<i8>) -> Result<Self, String> {
+        if let Some(bad) = signs.iter().find(|s| !(-1..=1).contains(*s)) {
+            return Err(format!("monotone constraint must be -1, 0 or 1, got {bad}"));
+        }
+        Ok(MonotoneConstraints(signs))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn as_slice(&self) -> &[i8] {
+        &self.0
+    }
+
+    /// Error message if the list is longer than the dataset is wide.
+    pub fn check_n_features(&self, n_features: usize) -> Result<(), String> {
+        if self.0.len() > n_features {
+            Err(format!(
+                "monotone_constraints has {} entries but the data has only {} features",
+                self.0.len(),
+                n_features
+            ))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl FromStr for MonotoneConstraints {
+    type Err = String;
+
+    /// Parse `"1,0,-1"` or `"(1,0,-1)"`; empty means unconstrained.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim().trim_start_matches('(').trim_end_matches(')');
+        if t.is_empty() {
+            return Ok(MonotoneConstraints::none());
+        }
+        let signs = t
+            .split(',')
+            .map(|tok| {
+                let v = tok
+                    .trim()
+                    .parse::<i32>()
+                    .map_err(|_| format!("monotone_constraints: cannot parse {tok:?} as integer"))?;
+                // validate before narrowing so e.g. 256 can't wrap into range
+                if !(-1..=1).contains(&v) {
+                    return Err(format!("monotone constraint must be -1, 0 or 1, got {v}"));
+                }
+                Ok(v as i8)
+            })
+            .collect::<Result<Vec<i8>, String>>()?;
+        Ok(MonotoneConstraints(signs))
+    }
+}
+
+impl fmt::Display for MonotoneConstraints {
+    /// Canonical form `"(1,0,-1)"`; empty constraints print as `""`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0.is_empty() {
+            return Ok(());
+        }
+        let body: Vec<String> = self.0.iter().map(|s| s.to_string()).collect();
+        write!(f, "({})", body.join(","))
+    }
+}
+
+/// All invalid-configuration findings from [`LearnerParams::validate`],
+/// reported together so a config can be fixed in one pass.
+#[derive(Debug, Clone)]
+pub struct ValidationErrors(pub Vec<String>);
+
+impl fmt::Display for ValidationErrors {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid learner configuration ({} problems)", self.0.len())?;
+        for e in &self.0 {
+            write!(f, "\n  - {e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ValidationErrors {}
+
+/// Typed booster hyperparameters (XGBoost-style names).
+///
+/// Construct via [`LearnerBuilder`](crate::gbm::learner::LearnerBuilder)
+/// (which validates), [`LearnerParams::from_config`], or directly as a
+/// struct literal when you know the configuration is sound — training
+/// still runs [`LearnerParams::validate`] before touching data.
+#[derive(Debug, Clone)]
+pub struct LearnerParams {
+    pub objective: ObjectiveKind,
+    pub num_class: usize,
+    pub num_rounds: usize,
+    pub eta: f64,
+    pub max_depth: usize,
+    pub max_leaves: usize,
+    pub max_bins: usize,
+    pub lambda: f64,
+    pub gamma: f64,
+    pub alpha: f64,
+    pub min_child_weight: f64,
+    /// Growth strategy (§2.3).
+    pub grow_policy: GrowPolicy,
+    /// Simulated device count (the paper's GPUs).
+    pub n_devices: usize,
+    /// Bit-packed shard storage (§2.2).
+    pub compress: bool,
+    /// Histogram all-reduce algorithm.
+    pub allreduce: AllReduce,
+    /// Evaluation metric; `None` = the objective's default.
+    pub eval_metric: Option<MetricKind>,
+    /// Evaluate every k rounds (0 = only at the end).
+    pub eval_every: usize,
+    /// Stop if the validation metric hasn't improved in this many
+    /// evaluations (0 = never).
+    pub early_stopping_rounds: usize,
+    /// Row subsampling rate per tree (1.0 = off).
+    pub subsample: f64,
+    /// Column sampling rate per tree (1.0 = off).
+    pub colsample_bytree: f64,
+    /// Per-feature monotone constraints; empty = none.
+    pub monotone_constraints: MonotoneConstraints,
+    /// Seed for subsampling / column sampling.
+    pub seed: u64,
+    /// Print eval lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for LearnerParams {
+    fn default() -> Self {
+        LearnerParams {
+            objective: ObjectiveKind::SquaredError,
+            num_class: 1,
+            num_rounds: 50,
+            eta: 0.3,
+            max_depth: 6,
+            max_leaves: 0,
+            max_bins: 256,
+            lambda: 1.0,
+            gamma: 0.0,
+            alpha: 0.0,
+            min_child_weight: 1.0,
+            grow_policy: GrowPolicy::DepthWise,
+            n_devices: 1,
+            compress: true,
+            allreduce: AllReduce::Ring,
+            eval_metric: None,
+            eval_every: 1,
+            early_stopping_rounds: 0,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            monotone_constraints: MonotoneConstraints::none(),
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl LearnerParams {
+    /// Read parameters from a [`Config`] (defaults for absent keys;
+    /// unrelated keys are ignored, matching the CLI's merged config flow).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = LearnerParams::default();
+        let objective: ObjectiveKind = match cfg.get("objective") {
+            Some(s) => s.parse().expect("infallible"),
+            None => d.objective,
+        };
+        let grow_policy: GrowPolicy = match cfg.get("grow_policy") {
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            None => d.grow_policy,
+        };
+        let allreduce: AllReduce = match cfg.get("allreduce") {
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            None => d.allreduce,
+        };
+        let eval_metric: Option<MetricKind> = match cfg.get("eval_metric") {
+            None => None,
+            Some("") => None,
+            Some(s) => Some(s.parse().expect("infallible")),
+        };
+        let monotone_constraints: MonotoneConstraints = match cfg.get("monotone_constraints") {
+            Some(s) => s
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))
+                .context("monotone_constraints")?,
+            None => MonotoneConstraints::none(),
+        };
+        Ok(LearnerParams {
+            objective,
+            num_class: cfg.get_parse("num_class", d.num_class)?,
+            num_rounds: cfg.get_parse("num_rounds", d.num_rounds)?,
+            eta: cfg.get_parse("eta", d.eta)?,
+            max_depth: cfg.get_parse("max_depth", d.max_depth)?,
+            max_leaves: cfg.get_parse("max_leaves", d.max_leaves)?,
+            max_bins: cfg.get_parse("max_bins", d.max_bins)?,
+            lambda: cfg.get_parse("lambda", d.lambda)?,
+            gamma: cfg.get_parse("gamma", d.gamma)?,
+            alpha: cfg.get_parse("alpha", d.alpha)?,
+            min_child_weight: cfg.get_parse("min_child_weight", d.min_child_weight)?,
+            grow_policy,
+            n_devices: cfg.get_parse("n_devices", d.n_devices)?,
+            compress: cfg.get_bool("compress", d.compress),
+            allreduce,
+            eval_metric,
+            eval_every: cfg.get_parse("eval_every", d.eval_every)?,
+            early_stopping_rounds: cfg
+                .get_parse("early_stopping_rounds", d.early_stopping_rounds)?,
+            subsample: cfg.get_parse("subsample", d.subsample)?,
+            colsample_bytree: cfg.get_parse("colsample_bytree", d.colsample_bytree)?,
+            monotone_constraints,
+            seed: cfg.get_parse("seed", d.seed)?,
+            verbose: cfg.get_bool("verbose", d.verbose),
+        })
+    }
+
+    /// Derive the coordinator configuration. Infallible now that every
+    /// field is typed (the stringly-typed predecessor parsed here).
+    pub fn coordinator_params(&self) -> CoordinatorParams {
+        CoordinatorParams {
+            n_devices: self.n_devices,
+            compress: self.compress,
+            tree: crate::tree::TreeParams {
+                lambda: self.lambda,
+                gamma: self.gamma,
+                alpha: self.alpha,
+                min_child_weight: self.min_child_weight,
+                max_depth: self.max_depth,
+                max_leaves: self.max_leaves,
+                monotone_constraints: self.monotone_constraints.as_slice().to_vec(),
+            },
+            policy: self.grow_policy,
+            allreduce: self.allreduce,
+            cost: Default::default(),
+            eta: self.eta,
+            max_bins: self.max_bins,
+            subtraction: true,
+            colsample_bytree: self.colsample_bytree,
+            seed: self.seed,
+        }
+    }
+
+    /// Every cross-field violation in this configuration, optionally
+    /// checked against a known feature count. Empty means valid.
+    pub fn validation_errors(&self, n_features: Option<usize>) -> Vec<String> {
+        let mut errs = Vec::new();
+
+        // objective / metric resolvability (registry-aware)
+        if let ObjectiveKind::Custom(name) = &self.objective {
+            if !ObjectiveRegistry::is_registered(name) {
+                errs.push(format!(
+                    "unknown objective {name:?}; valid objectives: {}",
+                    ObjectiveRegistry::names().join(", ")
+                ));
+            }
+        }
+        if let Some(MetricKind::Custom(name)) = &self.eval_metric {
+            if !MetricRegistry::is_registered(name) {
+                errs.push(format!(
+                    "unknown eval_metric {name:?}; valid metrics: {}",
+                    MetricRegistry::names().join(", ")
+                ));
+            }
+        }
+
+        // multiclass cross-field rules
+        if self.objective.is_multiclass() && self.num_class < 2 {
+            errs.push(format!(
+                "{} requires num_class >= 2, got {}",
+                self.objective, self.num_class
+            ));
+        }
+        if !self.objective.is_multiclass()
+            && !matches!(self.objective, ObjectiveKind::Custom(_))
+            && self.num_class > 1
+        {
+            errs.push(format!(
+                "num_class = {} is only meaningful for multi:* objectives (objective is {})",
+                self.num_class, self.objective
+            ));
+        }
+
+        // growth-policy cross-field rules
+        if self.grow_policy == GrowPolicy::DepthWise && self.max_depth == 0 {
+            errs.push("grow_policy = depthwise requires max_depth >= 1".to_string());
+        }
+        if self.grow_policy == GrowPolicy::LossGuide && self.max_leaves < 2 {
+            errs.push(format!(
+                "grow_policy = lossguide requires max_leaves >= 2, got {}",
+                self.max_leaves
+            ));
+        }
+        if self.max_leaves == 1 {
+            errs.push("max_leaves = 1 cannot admit any split".to_string());
+        }
+
+        // scalar ranges
+        if self.num_rounds == 0 {
+            errs.push("num_rounds must be >= 1".to_string());
+        }
+        let in_unit = |v: f64| v > 0.0 && v <= 1.0; // NaN fails both arms
+        if !in_unit(self.eta) {
+            errs.push(format!("eta must be in (0, 1], got {}", self.eta));
+        }
+        if self.max_bins < 2 {
+            errs.push(format!("max_bins must be >= 2, got {}", self.max_bins));
+        }
+        if self.n_devices == 0 {
+            errs.push("n_devices must be >= 1".to_string());
+        }
+        if !in_unit(self.subsample) {
+            errs.push(format!("subsample must be in (0, 1], got {}", self.subsample));
+        }
+        if !in_unit(self.colsample_bytree) {
+            errs.push(format!(
+                "colsample_bytree must be in (0, 1], got {}",
+                self.colsample_bytree
+            ));
+        }
+        for (name, v) in [
+            ("lambda", self.lambda),
+            ("gamma", self.gamma),
+            ("alpha", self.alpha),
+            ("min_child_weight", self.min_child_weight),
+        ] {
+            if v < 0.0 || v.is_nan() {
+                errs.push(format!("{name} must be >= 0, got {v}"));
+            }
+        }
+
+        // evaluation cadence
+        if self.early_stopping_rounds > 0 && self.eval_every == 0 {
+            errs.push(
+                "early_stopping_rounds > 0 requires eval_every >= 1 (eval_every = 0 \
+                 evaluates only after the final round)"
+                    .to_string(),
+            );
+        }
+
+        // constraints vs feature count (when known this early)
+        if let Some(n) = n_features {
+            if let Err(e) = self.monotone_constraints.check_n_features(n) {
+                errs.push(e);
+            }
+        }
+
+        errs
+    }
+
+    /// Validate the full cross-field matrix, returning **all** violations.
+    pub fn validate(&self) -> Result<(), ValidationErrors> {
+        let errs = self.validation_errors(None);
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(ValidationErrors(errs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_display_fromstr_round_trip() {
+        for name in ObjectiveKind::BUILTIN_NAMES {
+            let k: ObjectiveKind = name.parse().unwrap();
+            assert_eq!(k.to_string(), name, "canonical name must round-trip");
+            let again: ObjectiveKind = k.to_string().parse().unwrap();
+            assert_eq!(again, k);
+        }
+        // alias canonicalises
+        let k: ObjectiveKind = "reg:linear".parse().unwrap();
+        assert_eq!(k, ObjectiveKind::SquaredError);
+        // unknown name survives as Custom and round-trips
+        let k: ObjectiveKind = "my:loss".parse().unwrap();
+        assert_eq!(k, ObjectiveKind::Custom("my:loss".into()));
+        assert_eq!(k.to_string(), "my:loss");
+    }
+
+    #[test]
+    fn metric_display_fromstr_round_trip() {
+        for name in MetricKind::BUILTIN_NAMES {
+            let k: MetricKind = name.parse().unwrap();
+            assert_eq!(k.to_string(), name);
+        }
+        let k: MetricKind = "acc".parse().unwrap();
+        assert_eq!(k, MetricKind::Accuracy);
+    }
+
+    #[test]
+    fn monotone_parse_and_display() {
+        let m: MonotoneConstraints = "1,0,-1".parse().unwrap();
+        assert_eq!(m.as_slice(), &[1, 0, -1]);
+        assert_eq!(m.to_string(), "(1,0,-1)");
+        let again: MonotoneConstraints = m.to_string().parse().unwrap();
+        assert_eq!(again, m);
+        let empty: MonotoneConstraints = "".parse().unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty.to_string(), "");
+        assert!("2,0".parse::<MonotoneConstraints>().is_err());
+        assert!("abc".parse::<MonotoneConstraints>().is_err());
+        let parenthesised: MonotoneConstraints = "(1, -1, 0)".parse().unwrap();
+        assert_eq!(parenthesised.as_slice(), &[1, -1, 0]);
+    }
+
+    #[test]
+    fn monotone_rejects_overlong_lists() {
+        let m: MonotoneConstraints = "1,0,-1,1".parse().unwrap();
+        assert!(m.check_n_features(3).is_err());
+        assert!(m.check_n_features(4).is_ok());
+        let p = LearnerParams {
+            monotone_constraints: m,
+            ..Default::default()
+        };
+        assert!(!p.validation_errors(Some(3)).is_empty());
+        assert!(p.validation_errors(Some(10)).is_empty());
+    }
+
+    #[test]
+    fn default_params_validate_clean() {
+        assert!(LearnerParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_reports_every_violation_at_once() {
+        let p = LearnerParams {
+            objective: ObjectiveKind::MultiSoftmax,
+            num_class: 1,                  // violation 1: multi needs >= 2
+            eta: 0.0,                      // violation 2
+            subsample: 1.5,                // violation 3
+            grow_policy: GrowPolicy::LossGuide,
+            max_leaves: 0,                 // violation 4
+            ..Default::default()
+        };
+        let errs = p.validation_errors(None);
+        assert!(errs.len() >= 4, "want all violations, got {errs:?}");
+        let joined = errs.join("\n");
+        assert!(joined.contains("num_class"), "{joined}");
+        assert!(joined.contains("eta"), "{joined}");
+        assert!(joined.contains("subsample"), "{joined}");
+        assert!(joined.contains("max_leaves"), "{joined}");
+    }
+
+    #[test]
+    fn unknown_objective_lists_valid_names() {
+        let p = LearnerParams {
+            objective: ObjectiveKind::Custom("no:such".into()),
+            ..Default::default()
+        };
+        let errs = p.validation_errors(None);
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("reg:squarederror"), "{}", errs[0]);
+        assert!(errs[0].contains("rank:pairwise"), "{}", errs[0]);
+    }
+
+    #[test]
+    fn early_stopping_requires_eval_cadence() {
+        let p = LearnerParams {
+            early_stopping_rounds: 3,
+            eval_every: 0,
+            ..Default::default()
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn from_config_reads_typed_fields() {
+        let cfg = Config::from_str_contents(
+            "objective = binary:logistic\nnum_rounds = 7\neta = 0.1\ncompress = false\n\
+             grow_policy = lossguide\nallreduce = serial\neval_metric = auc\n\
+             monotone_constraints = \"(1,0,-1)\"\nmax_leaves = 8\n",
+        )
+        .unwrap();
+        let p = LearnerParams::from_config(&cfg).unwrap();
+        assert_eq!(p.objective, ObjectiveKind::BinaryLogistic);
+        assert_eq!(p.num_rounds, 7);
+        assert_eq!(p.eta, 0.1);
+        assert!(!p.compress);
+        assert_eq!(p.grow_policy, GrowPolicy::LossGuide);
+        assert_eq!(p.allreduce, AllReduce::Serial);
+        assert_eq!(p.eval_metric, Some(MetricKind::Auc));
+        assert_eq!(p.monotone_constraints.as_slice(), &[1, 0, -1]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn from_config_rejects_bad_enum_text() {
+        let cfg = Config::from_str_contents("grow_policy = sideways\n").unwrap();
+        assert!(LearnerParams::from_config(&cfg).is_err());
+        let cfg = Config::from_str_contents("allreduce = carrier-pigeon\n").unwrap();
+        assert!(LearnerParams::from_config(&cfg).is_err());
+        let cfg = Config::from_str_contents("monotone_constraints = 9,9\n").unwrap();
+        assert!(LearnerParams::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! Pluggable objective / metric registries.
+//!
+//! The built-in objectives and metrics used to live behind closed `match`
+//! statements (`objective_by_name` / `metric_by_name`), so a user-defined
+//! loss — a headline XGBoost capability — could not be plugged in without
+//! editing the crate. The registries keep the built-ins as fast static
+//! matches and add a process-wide table where `Box<dyn Objective>` /
+//! `Box<dyn Metric>` factories register by name; lookups fall back to that
+//! table, and unknown-name errors list every valid name (built-in and
+//! registered alike).
+//!
+//! Registration is global (a `OnceLock<Mutex<..>>`), mirroring how XGBoost
+//! custom objectives are installed once per process. Registering the same
+//! custom name twice replaces the factory (last wins); shadowing a
+//! built-in name is rejected.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::gbm::metric::{Accuracy, Auc, ErrorRate, LogLoss, Mae, Metric, MultiError, Ndcg, Rmse};
+use crate::gbm::objective::{Logistic, Objective, PairwiseRank, Softmax, SquaredError};
+use crate::gbm::params::{MetricKind, ObjectiveKind};
+
+// Factories are Arc'd so lookups can clone them out and release the
+// registry lock before invoking — a factory may itself consult the
+// registry (delegation, diagnostics) without deadlocking.
+type ObjectiveFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Objective>> + Send + Sync>;
+type MetricFactory = Arc<dyn Fn() -> Box<dyn Metric> + Send + Sync>;
+
+fn custom_objectives() -> MutexGuard<'static, BTreeMap<String, ObjectiveFactory>> {
+    static MAP: OnceLock<Mutex<BTreeMap<String, ObjectiveFactory>>> = OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .expect("objective registry poisoned")
+}
+
+fn custom_metrics() -> MutexGuard<'static, BTreeMap<String, MetricFactory>> {
+    static MAP: OnceLock<Mutex<BTreeMap<String, MetricFactory>>> = OnceLock::new();
+    MAP.get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .expect("metric registry poisoned")
+}
+
+/// Process-wide objective registry: built-ins plus user factories.
+pub struct ObjectiveRegistry;
+
+impl ObjectiveRegistry {
+    /// Register a user objective factory under `name`. The factory
+    /// receives `num_class` (1 for single-output objectives). Re-using a
+    /// custom name replaces the previous factory; built-in names are
+    /// rejected.
+    pub fn register<F>(name: impl Into<String>, factory: F) -> Result<()>
+    where
+        F: Fn(usize) -> Result<Box<dyn Objective>> + Send + Sync + 'static,
+    {
+        let name = name.into();
+        ensure!(
+            !Self::is_builtin(&name) && name != "reg:linear",
+            "cannot shadow built-in objective {name:?}"
+        );
+        ensure!(!name.is_empty(), "objective name must be non-empty");
+        custom_objectives().insert(name, Arc::new(factory));
+        Ok(())
+    }
+
+    /// Is `name` one of the compiled-in objectives?
+    pub fn is_builtin(name: &str) -> bool {
+        ObjectiveKind::BUILTIN_NAMES.iter().any(|&b| b == name)
+    }
+
+    /// Is `name` resolvable right now (built-in or registered)?
+    pub fn is_registered(name: &str) -> bool {
+        Self::is_builtin(name) || name == "reg:linear" || custom_objectives().contains_key(name)
+    }
+
+    /// Every currently valid objective name (built-ins first, then
+    /// registered customs in sorted order) — used by error messages.
+    pub fn names() -> Vec<String> {
+        let mut names: Vec<String> = ObjectiveKind::BUILTIN_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        names.extend(custom_objectives().keys().cloned());
+        names
+    }
+
+    /// Instantiate an objective by name. Unknown names error with the full
+    /// valid-name list.
+    pub fn create(name: &str, num_class: usize) -> Result<Box<dyn Objective>> {
+        Ok(match name {
+            "reg:squarederror" | "reg:linear" => Box::new(SquaredError),
+            "binary:logistic" => Box::new(Logistic),
+            "multi:softmax" | "multi:softprob" => {
+                ensure!(
+                    num_class >= 2,
+                    "{name} requires num_class >= 2, got {num_class}"
+                );
+                Box::new(Softmax {
+                    k: num_class,
+                    prob_output: name == "multi:softprob",
+                })
+            }
+            "rank:pairwise" => Box::new(PairwiseRank::default()),
+            other => {
+                // clone the factory out and drop the lock before calling:
+                // both the factory and the error path may re-enter the
+                // registry (delegation, names()) without deadlocking
+                let factory = custom_objectives().get(other).cloned();
+                match factory {
+                    Some(factory) => return factory(num_class),
+                    None => bail!(
+                        "unknown objective {other:?}; valid objectives: {}",
+                        Self::names().join(", ")
+                    ),
+                }
+            }
+        })
+    }
+}
+
+/// Process-wide metric registry: built-ins plus user factories.
+pub struct MetricRegistry;
+
+impl MetricRegistry {
+    /// Register a user metric factory under `name`. Re-using a custom name
+    /// replaces the previous factory; built-in names are rejected.
+    pub fn register<F>(name: impl Into<String>, factory: F) -> Result<()>
+    where
+        F: Fn() -> Box<dyn Metric> + Send + Sync + 'static,
+    {
+        let name = name.into();
+        ensure!(
+            !Self::is_builtin(&name) && name != "acc",
+            "cannot shadow built-in metric {name:?}"
+        );
+        ensure!(!name.is_empty(), "metric name must be non-empty");
+        custom_metrics().insert(name, Arc::new(factory));
+        Ok(())
+    }
+
+    /// Is `name` one of the compiled-in metrics?
+    pub fn is_builtin(name: &str) -> bool {
+        MetricKind::BUILTIN_NAMES.iter().any(|&b| b == name)
+    }
+
+    /// Is `name` resolvable right now (built-in or registered)?
+    pub fn is_registered(name: &str) -> bool {
+        Self::is_builtin(name) || name == "acc" || custom_metrics().contains_key(name)
+    }
+
+    /// Every currently valid metric name (built-ins first, then registered
+    /// customs in sorted order) — used by error messages.
+    pub fn names() -> Vec<String> {
+        let mut names: Vec<String> =
+            MetricKind::BUILTIN_NAMES.iter().map(|s| s.to_string()).collect();
+        names.extend(custom_metrics().keys().cloned());
+        names
+    }
+
+    /// Instantiate a metric by name. Unknown names error with the full
+    /// valid-name list.
+    pub fn create(name: &str) -> Result<Box<dyn Metric>> {
+        Ok(match name {
+            "rmse" => Box::new(Rmse),
+            "mae" => Box::new(Mae),
+            "logloss" => Box::new(LogLoss),
+            "accuracy" | "acc" => Box::new(Accuracy),
+            "error" => Box::new(ErrorRate),
+            "auc" => Box::new(Auc),
+            "merror" => Box::new(MultiError),
+            "ndcg" => Box::new(Ndcg { k: 10 }),
+            other => {
+                // clone the factory out and drop the lock before calling
+                // (factories may re-enter the registry)
+                let factory = custom_metrics().get(other).cloned();
+                match factory {
+                    Some(factory) => return Ok(factory()),
+                    None => bail!(
+                        "unknown metric {other:?}; valid metrics: {}",
+                        Self::names().join(", ")
+                    ),
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::{Float, GradPair};
+
+    struct ConstantObjective;
+
+    impl Objective for ConstantObjective {
+        fn name(&self) -> &'static str {
+            "test:constant"
+        }
+        fn base_score(&self, _train: &Dataset) -> Vec<Float> {
+            vec![0.0]
+        }
+        fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+            vec![ds
+                .y
+                .iter()
+                .zip(margins[0].iter())
+                .map(|(&y, &m)| GradPair::new(m - y, 1.0))
+                .collect()]
+        }
+        fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+            margins[0].clone()
+        }
+    }
+
+    #[test]
+    fn builtin_objectives_resolve() {
+        for name in ObjectiveKind::BUILTIN_NAMES {
+            assert!(ObjectiveRegistry::create(name, 3).is_ok(), "{name}");
+        }
+        assert!(ObjectiveRegistry::create("multi:softmax", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_objective_error_lists_names() {
+        let err = ObjectiveRegistry::create("definitely:not", 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reg:squarederror"), "{msg}");
+        assert!(msg.contains("binary:logistic"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_metric_error_lists_names() {
+        let err = MetricRegistry::create("definitely:not").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rmse"), "{msg}");
+        assert!(msg.contains("ndcg"), "{msg}");
+    }
+
+    #[test]
+    fn custom_objective_registers_and_resolves() {
+        ObjectiveRegistry::register("test:constant-registry", |_k| {
+            Ok(Box::new(ConstantObjective))
+        })
+        .unwrap();
+        assert!(ObjectiveRegistry::is_registered("test:constant-registry"));
+        let o = ObjectiveRegistry::create("test:constant-registry", 1).unwrap();
+        assert_eq!(o.n_outputs(), 1);
+        assert!(ObjectiveRegistry::names()
+            .iter()
+            .any(|n| n == "test:constant-registry"));
+    }
+
+    #[test]
+    fn builtin_names_cannot_be_shadowed() {
+        assert!(
+            ObjectiveRegistry::register("binary:logistic", |_| Ok(Box::new(ConstantObjective)))
+                .is_err()
+        );
+        assert!(ObjectiveRegistry::register("reg:linear", |_| {
+            Ok(Box::new(ConstantObjective))
+        })
+        .is_err());
+        assert!(MetricRegistry::register("rmse", || Box::new(Rmse)).is_err());
+        assert!(MetricRegistry::register("acc", || Box::new(Accuracy)).is_err());
+    }
+}

@@ -24,7 +24,8 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::gbm::{Booster, BoosterParams};
+use crate::gbm::params::{LearnerParams, ObjectiveKind};
+use crate::gbm::Booster;
 use crate::tree::regtree::{Node, NO_CHILD};
 use crate::tree::RegTree;
 use crate::Float;
@@ -162,7 +163,11 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
         trees.push(group);
     }
 
-    let params = BoosterParams {
+    // typed round-trip: the stored name parses back into ObjectiveKind
+    // (user-registered names resolve through the ObjectiveRegistry when
+    // the booster is assembled below)
+    let objective: ObjectiveKind = objective.parse().expect("infallible");
+    let params = LearnerParams {
         objective,
         num_class,
         eta,
@@ -210,8 +215,8 @@ mod tests {
             DatasetSpec::higgs_like(1500)
         };
         let g = generate(&spec, 51);
-        let params = BoosterParams {
-            objective: objective.into(),
+        let params = LearnerParams {
+            objective: objective.parse().expect("infallible"),
             num_class,
             num_rounds: 4,
             max_depth: 4,
@@ -219,7 +224,11 @@ mod tests {
             eval_every: 0,
             ..Default::default()
         };
-        (Booster::train(&params, &g.train, None).unwrap(), g.valid)
+        let booster = crate::gbm::Learner::from_params(params)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
+        (booster, g.valid)
     }
 
     #[test]
@@ -241,6 +250,17 @@ mod tests {
         let loaded = load_model(buf.as_slice()).unwrap();
         assert_eq!(loaded.trees.len(), 7);
         assert_eq!(loaded.predict(&valid.x), b.predict(&valid.x));
+    }
+
+    #[test]
+    fn typed_params_survive_round_trip() {
+        let (b, _) = trained("binary:logistic", 1);
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.params.objective, ObjectiveKind::BinaryLogistic);
+        assert_eq!(loaded.params.num_class, 1);
+        assert_eq!(loaded.params.eta, b.params.eta);
     }
 
     #[test]

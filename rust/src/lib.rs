@@ -23,18 +23,34 @@
 //!
 //! ## Quickstart
 //!
+//! Training goes through the typed [`gbm::Learner`] façade: pick an
+//! [`gbm::ObjectiveKind`], configure the fluent builder, and `build()`
+//! validates the whole configuration up front (reporting *every*
+//! cross-field problem, not just the first) before any data is touched.
+//!
 //! ```no_run
 //! use xgb_tpu::data::synthetic::{self, DatasetSpec};
-//! use xgb_tpu::gbm::{Booster, BoosterParams};
+//! use xgb_tpu::gbm::{EarlyStopping, Learner, MetricKind, ObjectiveKind};
 //!
 //! let ds = synthetic::generate(&DatasetSpec::higgs_like(10_000), 42);
-//! let mut params = BoosterParams::default();
-//! params.objective = "binary:logistic".into();
-//! params.num_rounds = 20;
-//! let booster = Booster::train(&params, &ds.train, Some(&ds.valid)).unwrap();
+//! let mut learner = Learner::builder()
+//!     .objective(ObjectiveKind::BinaryLogistic)
+//!     .eval_metric(MetricKind::Auc)
+//!     .num_rounds(20)
+//!     .callback(Box::new(EarlyStopping::new(3)))
+//!     .build()
+//!     .expect("configuration is valid");
+//! let booster = learner.train(&ds.train, Some(&ds.valid)).unwrap();
 //! let preds = booster.predict(&ds.valid.x);
 //! # let _ = preds;
 //! ```
+//!
+//! User-defined losses and metrics register by name alongside the
+//! built-ins (`gbm::ObjectiveRegistry` / `gbm::MetricRegistry`) and then
+//! work everywhere a name does: the builder, config files, the CLI, and
+//! model-file round-trips. Training behaviour is extensible through the
+//! `gbm::Callback` trait (`EarlyStopping`, `EvalLogger`, `TimeBudget`
+//! ship in-crate).
 
 pub mod baselines;
 pub mod bench;

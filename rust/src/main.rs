@@ -23,7 +23,7 @@ use xgb_tpu::bench::Table;
 use xgb_tpu::coordinator::NativeBackend;
 use xgb_tpu::data::synthetic::{self, DatasetSpec};
 use xgb_tpu::data::{load_csv, load_libsvm, Dataset};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams, ObjectiveKind};
 use xgb_tpu::runtime::{Artifacts, XlaHistBackend};
 use xgb_tpu::util::{ArgParser, Config};
 
@@ -108,7 +108,7 @@ fn run_predict(args: &ArgParser) -> Result<()> {
             );
             let margins =
                 predictor.predict_margins(&booster.trees[0], booster.base_score[0], &ds.x)?;
-            if booster.params.objective == "binary:logistic" {
+            if booster.params.objective == ObjectiveKind::BinaryLogistic {
                 margins.iter().map(|&m| 1.0 / (1.0 + (-m).exp())).collect()
             } else {
                 margins
@@ -134,7 +134,7 @@ fn run_predict(args: &ArgParser) -> Result<()> {
     Ok(())
 }
 
-fn booster_params_from_args(args: &ArgParser) -> Result<BoosterParams> {
+fn learner_params_from_args(args: &ArgParser) -> Result<LearnerParams> {
     // config file first, CLI overrides
     let mut cfg = Config::new();
     if let Some(path) = args.get("config") {
@@ -144,7 +144,7 @@ fn booster_params_from_args(args: &ArgParser) -> Result<BoosterParams> {
         // CLI flags use dashes; config keys use underscores
         cfg.set(k.replace('-', "_"), v);
     }
-    let mut p = BoosterParams::from_config(&cfg)?;
+    let mut p = LearnerParams::from_config(&cfg)?;
     p.verbose = true;
     Ok(p)
 }
@@ -178,17 +178,17 @@ fn load_dataset(args: &ArgParser) -> Result<(Dataset, Option<Dataset>, Option<Da
 
 fn run_train(args: &ArgParser) -> Result<()> {
     let (train, valid, spec) = load_dataset(args)?;
-    let mut params = booster_params_from_args(args)?;
+    let mut params = learner_params_from_args(args)?;
     if let Some(spec) = &spec {
         // dataset-aware defaults unless the user overrode them
         if !args.has("objective") {
-            params.objective = spec.task.objective().into();
+            params.objective = spec.task.objective().parse().expect("infallible");
         }
         if !args.has("num-class") {
             params.num_class = spec.task.num_class();
         }
         if !args.has("eval-metric") {
-            params.eval_metric = spec.task.metric().into();
+            params.eval_metric = Some(spec.task.metric().parse().expect("infallible"));
         }
     }
     eprintln!(
@@ -201,14 +201,16 @@ fn run_train(args: &ArgParser) -> Result<()> {
         params.compress
     );
 
+    // full cross-field validation before any work starts; every problem
+    // in the flag/config set is reported at once
+    let mut learner = Learner::from_params(params.clone())?;
     let backend = args.get_str("backend", "native");
     let booster = match backend.as_str() {
-        "native" => Booster::train(&params, &train, valid.as_ref())?,
+        "native" => learner.train(&train, valid.as_ref())?,
         "xla" => {
             let artifacts = std::sync::Arc::new(Artifacts::discover()?);
             eprintln!("xla backend on platform {}", artifacts.platform());
-            Booster::train_with_backend(
-                &params,
+            learner.train_with_backend(
                 &train,
                 valid.as_ref(),
                 Box::new(XlaHistBackend::new(artifacts)),

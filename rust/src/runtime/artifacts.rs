@@ -3,6 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
+// `ensure` is only exercised by the xla-gated execution paths.
+#[cfg_attr(not(feature = "xla"), allow(unused_imports))]
 use anyhow::{ensure, Context, Result};
 
 use crate::util::Config;
@@ -48,19 +50,38 @@ impl Manifest {
     }
 }
 
-/// Loaded + compiled artifact set over one PJRT CPU client.
-pub struct Artifacts {
-    pub manifest: Manifest,
-    pub dir: PathBuf,
+/// Compiled PJRT executables — only present when the crate is built with
+/// the `xla` feature (the bindings are not vendored; see Cargo.toml).
+#[cfg(feature = "xla")]
+struct Execs {
     client: xla::PjRtClient,
     grad_logistic: xla::PjRtLoadedExecutable,
     grad_squared: xla::PjRtLoadedExecutable,
     histogram: xla::PjRtLoadedExecutable,
     predict: xla::PjRtLoadedExecutable,
+}
+
+/// Loaded + compiled artifact set over one PJRT CPU client.
+#[cfg(feature = "xla")]
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    execs: Execs,
     /// Executions performed, per artifact (telemetry for EXPERIMENTS.md).
     pub exec_counts: std::cell::RefCell<[u64; 4]>,
 }
 
+/// Stub when built without the `xla` feature: [`Artifacts::load`] always
+/// fails, so this is never instantiated (see Cargo.toml).
+#[cfg(not(feature = "xla"))]
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    /// Executions performed, per artifact (telemetry for EXPERIMENTS.md).
+    pub exec_counts: std::cell::RefCell<[u64; 4]>,
+}
+
+#[cfg(feature = "xla")]
 fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
         path.to_str().context("non-utf8 artifact path")?,
@@ -73,6 +94,16 @@ fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecu
 }
 
 impl Artifacts {
+    /// Convenience: locate via [`crate::runtime::find_artifact_dir`].
+    pub fn discover() -> Result<Self> {
+        let dir = crate::runtime::find_artifact_dir(None)
+            .context("artifacts/ not found; run `make artifacts`")?;
+        Self::load(dir)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Artifacts {
     /// Load and compile every artifact in `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
@@ -81,26 +112,21 @@ impl Artifacts {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Artifacts {
-            grad_logistic: compile(&client, &dir.join("grad_logistic.hlo.txt"))?,
-            grad_squared: compile(&client, &dir.join("grad_squared.hlo.txt"))?,
-            histogram: compile(&client, &dir.join("histogram.hlo.txt"))?,
-            predict: compile(&client, &dir.join("predict.hlo.txt"))?,
+            execs: Execs {
+                grad_logistic: compile(&client, &dir.join("grad_logistic.hlo.txt"))?,
+                grad_squared: compile(&client, &dir.join("grad_squared.hlo.txt"))?,
+                histogram: compile(&client, &dir.join("histogram.hlo.txt"))?,
+                predict: compile(&client, &dir.join("predict.hlo.txt"))?,
+                client,
+            },
             manifest,
             dir,
-            client,
             exec_counts: std::cell::RefCell::new([0; 4]),
         })
     }
 
-    /// Convenience: locate via [`crate::runtime::find_artifact_dir`].
-    pub fn discover() -> Result<Self> {
-        let dir = crate::runtime::find_artifact_dir(None)
-            .context("artifacts/ not found; run `make artifacts`")?;
-        Self::load(dir)
-    }
-
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.execs.client.platform_name()
     }
 
     /// §2.5 on-device gradients: returns `(grad, hess)` for all `n`
@@ -114,8 +140,8 @@ impl Artifacts {
         ensure!(margins.len() == labels.len(), "margins/labels mismatch");
         let tile = self.manifest.grad_tile;
         let exe = match kind {
-            GradKind::Logistic => &self.grad_logistic,
-            GradKind::Squared => &self.grad_squared,
+            GradKind::Logistic => &self.execs.grad_logistic,
+            GradKind::Squared => &self.execs.grad_squared,
         };
         let n = margins.len();
         let mut grad = Vec::with_capacity(n);
@@ -172,6 +198,7 @@ impl Artifacts {
             .map_err(|e| anyhow::anyhow!("{e:?}"))?;
         let off_lit = xla::Literal::scalar(offset);
         let result = self
+            .execs
             .histogram
             .execute::<xla::Literal>(&[bins_lit, grads_lit, off_lit])
             .map_err(|e| anyhow::anyhow!("histogram execute: {e:?}"))?[0][0]
@@ -227,6 +254,7 @@ impl Artifacts {
             xla::Literal::vec1(leaf_value).reshape(&t2).map_err(r)?,
         ];
         let result = self
+            .execs
             .predict
             .execute::<xla::Literal>(&args)
             .map_err(|e| anyhow::anyhow!("predict execute: {e:?}"))?[0][0]
@@ -239,6 +267,57 @@ impl Artifacts {
             .map_err(r)?;
         self.exec_counts.borrow_mut()[3] += 1;
         Ok(out)
+    }
+}
+
+/// Stubs when the `xla` bindings are unavailable: the API surface is
+/// identical, but [`Artifacts::load`] fails up front with a clear message
+/// so callers (CLI `--backend xla`, the integration tests' self-skip
+/// probes) degrade gracefully to the native stack.
+#[cfg(not(feature = "xla"))]
+impl Artifacts {
+    const UNAVAILABLE: &'static str =
+        "xgb_tpu was built without the `xla` feature; the PJRT artifact \
+         runtime is unavailable (rebuild with `--features xla` and the xla \
+         bindings crate, see Cargo.toml)";
+
+    /// Always fails: the PJRT runtime is compiled out.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        anyhow::bail!(Self::UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `xla` feature)".to_string()
+    }
+
+    /// Unreachable in practice ([`Artifacts::load`] never succeeds).
+    pub fn gradients(
+        &self,
+        _kind: GradKind,
+        _margins: &[Float],
+        _labels: &[Float],
+    ) -> Result<(Vec<Float>, Vec<Float>)> {
+        anyhow::bail!(Self::UNAVAILABLE)
+    }
+
+    /// Unreachable in practice ([`Artifacts::load`] never succeeds).
+    pub fn histogram_tile(&self, _bins: &[i32], _grads: &[Float], _offset: i32) -> Result<Vec<Float>> {
+        anyhow::bail!(Self::UNAVAILABLE)
+    }
+
+    /// Unreachable in practice ([`Artifacts::load`] never succeeds).
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_tile(
+        &self,
+        _x: &[Float],
+        _feature: &[i32],
+        _threshold: &[Float],
+        _left: &[i32],
+        _right: &[i32],
+        _default_left: &[i32],
+        _leaf_value: &[Float],
+    ) -> Result<Vec<Float>> {
+        anyhow::bail!(Self::UNAVAILABLE)
     }
 }
 

@@ -111,7 +111,7 @@ impl XlaPredictor {
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetSpec};
-    use crate::gbm::{Booster, BoosterParams};
+    use crate::gbm::{Learner, LearnerParams, ObjectiveKind};
 
     fn artifacts() -> Option<Arc<Artifacts>> {
         crate::runtime::find_artifact_dir(None)
@@ -126,15 +126,18 @@ mod tests {
             return;
         };
         let g = generate(&DatasetSpec::higgs_like(2500), 31);
-        let params = BoosterParams {
-            objective: "binary:logistic".into(),
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
             num_rounds: 60, // > predict_trees to exercise tree chunking
             max_depth: 5,
             max_bins: 32,
             eval_every: 0,
             ..Default::default()
         };
-        let b = Booster::train(&params, &g.train, None).unwrap();
+        let b = Learner::from_params(params)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
         assert!(b.trees[0].len() > a.manifest.predict_trees);
         let native = b.predict_margins(&g.valid.x);
         let xla = XlaPredictor::new(a)

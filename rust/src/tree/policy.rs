@@ -32,8 +32,20 @@ impl std::str::FromStr for GrowthPolicy {
         match s {
             "depthwise" | "depth_wise" | "depth" => Ok(GrowthPolicy::DepthWise),
             "lossguide" | "loss_guide" | "loss" => Ok(GrowthPolicy::LossGuide),
-            other => Err(format!("unknown grow_policy {other:?}")),
+            other => Err(format!(
+                "unknown grow_policy {other:?}; valid policies: depthwise, lossguide"
+            )),
         }
+    }
+}
+
+impl std::fmt::Display for GrowthPolicy {
+    /// Canonical config-file spelling; round-trips through [`FromStr`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            GrowthPolicy::DepthWise => "depthwise",
+            GrowthPolicy::LossGuide => "lossguide",
+        })
     }
 }
 

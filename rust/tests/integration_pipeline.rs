@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::gbm::{Learner, LearnerParams, ObjectiveKind};
 use xgb_tpu::runtime::{Artifacts, GradKind, XlaHistBackend, XlaPredictor};
 
 fn artifacts() -> Option<Arc<Artifacts>> {
@@ -51,8 +51,8 @@ fn gradient_artifact_parity() {
 fn xla_training_reproduces_native_model() {
     let Some(a) = artifacts() else { return };
     let g = generate(&DatasetSpec::airline_like(2500), 3);
-    let params = BoosterParams {
-        objective: "binary:logistic".into(),
+    let params = LearnerParams {
+        objective: ObjectiveKind::BinaryLogistic,
         num_rounds: 2,
         max_depth: 4,
         max_bins: 32,
@@ -61,14 +61,14 @@ fn xla_training_reproduces_native_model() {
         eval_every: 0,
         ..Default::default()
     };
-    let native = Booster::train(&params, &g.train, None).unwrap();
-    let xla = Booster::train_with_backend(
-        &params,
-        &g.train,
-        None,
-        Box::new(XlaHistBackend::new(a)),
-    )
-    .unwrap();
+    let native = Learner::from_params(params.clone())
+        .unwrap()
+        .train(&g.train, None)
+        .unwrap();
+    let xla = Learner::from_params(params)
+        .unwrap()
+        .train_with_backend(&g.train, None, Box::new(XlaHistBackend::new(a)))
+        .unwrap();
     // identical structure; leaf values equal to f32-accumulation tolerance
     for (tn, tx) in native.trees[0].iter().zip(xla.trees[0].iter()) {
         assert_eq!(tn.n_nodes(), tx.n_nodes());
@@ -87,15 +87,18 @@ fn predict_artifact_parity_sparse() {
     let Some(a) = artifacts() else { return };
     // 28-feature higgs fits the 32-feature artifact
     let g = generate(&DatasetSpec::higgs_like(3000), 13);
-    let params = BoosterParams {
-        objective: "binary:logistic".into(),
+    let params = LearnerParams {
+        objective: ObjectiveKind::BinaryLogistic,
         num_rounds: a.manifest.predict_trees + 7, // force chunking
         max_depth: 4,
         max_bins: 32,
         eval_every: 0,
         ..Default::default()
     };
-    let b = Booster::train(&params, &g.train, None).unwrap();
+    let b = Learner::from_params(params)
+        .unwrap()
+        .train(&g.train, None)
+        .unwrap();
     let native = b.predict_margins(&g.valid.x).remove(0);
     let xla = XlaPredictor::new(a)
         .predict_margins(&b.trees[0], b.base_score[0], &g.valid.x)

@@ -1,20 +1,29 @@
 //! Cross-module integration tests: end-to-end training behaviour on every
 //! Table 1 task family, multi-device determinism, compression parity, and
-//! failure injection (DESIGN.md §6).
+//! failure injection (DESIGN.md §6) — all through the typed [`Learner`]
+//! API.
 
 use xgb_tpu::baselines::{train_catboost_like, train_lightgbm_like, CatBoostParams, LightGbmParams};
 use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator, NativeBackend};
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::gbm::{Booster, BoosterParams};
+use xgb_tpu::data::Dataset;
+use xgb_tpu::gbm::{
+    AllReduce, Booster, Learner, LearnerParams, MetricKind, ObjectiveKind,
+};
 
-fn quick(objective: &str, rounds: usize) -> BoosterParams {
-    BoosterParams {
-        objective: objective.into(),
+fn quick(objective: ObjectiveKind, rounds: usize) -> LearnerParams {
+    LearnerParams {
+        objective,
         num_rounds: rounds,
         max_bins: 32,
         max_depth: 4,
         ..Default::default()
     }
+}
+
+fn fit(params: LearnerParams, train: &Dataset, valid: Option<&Dataset>) -> anyhow::Result<Booster> {
+    let mut learner = Learner::from_params(params)?;
+    learner.train(train, valid)
 }
 
 /// Every Table 1 family trains and improves over its trivial baseline.
@@ -29,10 +38,10 @@ fn all_dataset_families_learn() {
         (DatasetSpec::airline_like(2500), true),
     ] {
         let g = generate(&spec, 123);
-        let mut p = quick(spec.task.objective(), 10);
+        let mut p = quick(spec.task.objective().parse().expect("infallible"), 10);
         p.num_class = spec.task.num_class();
-        p.eval_metric = spec.task.metric().into();
-        let b = Booster::train(&p, &g.train, Some(&g.valid))
+        p.eval_metric = Some(spec.task.metric().parse().expect("infallible"));
+        let b = fit(p, &g.train, Some(&g.valid))
             .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
         let h = &b.eval_history;
         assert!(!h.is_empty(), "{}", spec.name);
@@ -59,14 +68,14 @@ fn all_dataset_families_learn() {
 fn device_count_and_compression_invariance() {
     let g = generate(&DatasetSpec::airline_like(4000), 9);
     let make = |devices: usize, compress: bool| {
-        let params = BoosterParams {
+        let params = LearnerParams {
             n_devices: devices,
             compress,
-            eval_metric: "accuracy".into(),
+            eval_metric: Some(MetricKind::Accuracy),
             eval_every: 0,
-            ..quick("binary:logistic", 5)
+            ..quick(ObjectiveKind::BinaryLogistic, 5)
         };
-        Booster::train(&params, &g.train, Some(&g.valid)).unwrap()
+        fit(params, &g.train, Some(&g.valid)).unwrap()
     };
     // exact parity: packed vs unpacked at fixed p
     for p in [1usize, 3, 8] {
@@ -88,17 +97,17 @@ fn device_count_and_compression_invariance() {
 #[test]
 fn allreduce_algo_invariance() {
     let g = generate(&DatasetSpec::higgs_like(3000), 31);
-    let make = |algo: &str| {
-        let params = BoosterParams {
-            allreduce: algo.into(),
+    let make = |algo: AllReduce| {
+        let params = LearnerParams {
+            allreduce: algo,
             n_devices: 4,
             eval_every: 0,
-            ..quick("binary:logistic", 4)
+            ..quick(ObjectiveKind::BinaryLogistic, 4)
         };
-        Booster::train(&params, &g.train, None).unwrap()
+        fit(params, &g.train, None).unwrap()
     };
-    let a = make("ring");
-    let b = make("serial");
+    let a = make(AllReduce::Ring);
+    let b = make(AllReduce::Serial);
     assert_eq!(a.trees[0], b.trees[0]);
 }
 
@@ -106,11 +115,11 @@ fn allreduce_algo_invariance() {
 #[test]
 fn sparse_end_to_end() {
     let g = generate(&DatasetSpec::bosch_like(2000), 77);
-    let p = BoosterParams {
-        eval_metric: "auc".into(),
-        ..quick("binary:logistic", 8)
+    let p = LearnerParams {
+        eval_metric: Some(MetricKind::Auc),
+        ..quick(ObjectiveKind::BinaryLogistic, 8)
     };
-    let b = Booster::train(&p, &g.train, Some(&g.valid)).unwrap();
+    let b = fit(p, &g.train, Some(&g.valid)).unwrap();
     let auc = b.eval_history.last().unwrap().valid.unwrap();
     assert!(auc > 0.5, "auc {auc} must beat random on sparse data");
 }
@@ -120,10 +129,10 @@ fn sparse_end_to_end() {
 #[test]
 fn accuracy_ordering_matches_table2_shape() {
     let g = generate(&DatasetSpec::higgs_like(6000), 55);
-    let xgb = Booster::train(
-        &BoosterParams {
+    let xgb = fit(
+        LearnerParams {
             eta: 0.1,
-            ..quick("binary:logistic", 25)
+            ..quick(ObjectiveKind::BinaryLogistic, 25)
         },
         &g.train,
         None,
@@ -158,34 +167,41 @@ fn accuracy_ordering_matches_table2_shape() {
     assert!(xa > 60.0 && la > 60.0 && ca > 60.0, "all must beat chance");
 }
 
-/// Failure injection: invalid configurations surface as errors, not
-/// panics or silent misbehaviour.
+/// Failure injection: invalid configurations surface as errors — now
+/// *before* training starts for everything the validator can see.
 #[test]
 fn invalid_configs_error_cleanly() {
     let g = generate(&DatasetSpec::higgs_like(200), 1);
-    // unknown objective
-    assert!(Booster::train(&quick("no:such", 1), &g.train, None).is_err());
+    // unknown objective: rejected at build with the valid-name list
+    let err = Learner::from_params(quick("no:such".parse().expect("infallible"), 1))
+        .err()
+        .expect("unknown objective must not validate");
+    assert!(err.to_string().contains("reg:squarederror"), "{err}");
     // multiclass without num_class
-    assert!(Booster::train(&quick("multi:softmax", 1), &g.train, None).is_err());
-    // more devices than rows
-    let p = BoosterParams {
+    assert!(Learner::from_params(quick(ObjectiveKind::MultiSoftmax, 1)).is_err());
+    // bad grow policy / allreduce strings die in the string-typed surface
+    assert!(Learner::builder().set("grow_policy", "sideways").build().is_err());
+    assert!(Learner::builder()
+        .set("allreduce", "carrier-pigeon")
+        .build()
+        .is_err());
+    // ... and through the deprecated legacy shim too
+    #[allow(deprecated)]
+    {
+        let p = xgb_tpu::gbm::BoosterParams {
+            grow_policy: "sideways".into(),
+            ..Default::default()
+        };
+        assert!(xgb_tpu::gbm::Booster::train(&p, &g.train, None).is_err());
+    }
+    // more devices than rows is only detectable at train time
+    let p = LearnerParams {
         n_devices: 1000,
-        ..quick("binary:logistic", 1)
+        ..quick(ObjectiveKind::BinaryLogistic, 1)
     };
     let tiny = generate(&DatasetSpec::higgs_like(100), 1);
     // 100 rows -> 80 train rows < 1000 devices
-    assert!(Booster::train(&p, &tiny.train, None).is_err());
-    // bad grow policy / allreduce strings
-    let p = BoosterParams {
-        grow_policy: "sideways".into(),
-        ..quick("binary:logistic", 1)
-    };
-    assert!(Booster::train(&p, &g.train, None).is_err());
-    let p = BoosterParams {
-        allreduce: "carrier-pigeon".into(),
-        ..quick("binary:logistic", 1)
-    };
-    assert!(Booster::train(&p, &g.train, None).is_err());
+    assert!(fit(p, &tiny.train, None).is_err());
 }
 
 /// Coordinator handles degenerate gradients (all-zero => no splits, tree
@@ -208,9 +224,9 @@ fn degenerate_gradients_yield_stump() {
 #[test]
 fn training_is_deterministic() {
     let g = generate(&DatasetSpec::synthetic_like(2000), 13);
-    let p = quick("reg:squarederror", 6);
-    let a = Booster::train(&p, &g.train, None).unwrap();
-    let b = Booster::train(&p, &g.train, None).unwrap();
+    let p = quick(ObjectiveKind::SquaredError, 6);
+    let a = fit(p.clone(), &g.train, None).unwrap();
+    let b = fit(p, &g.train, None).unwrap();
     assert_eq!(a.trees[0], b.trees[0]);
     let pa = a.predict(&g.valid.x);
     let pb = b.predict(&g.valid.x);

@@ -1,0 +1,210 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io mirror, so the workspace vendors
+//! the slice of `anyhow` this codebase actually uses:
+//!
+//! * [`Error`] — a context-chained error value (no backtraces, no
+//!   downcasting),
+//! * [`Result`] — `Result<T, Error>` alias with an overridable error type,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Semantics follow the real crate where they matter here: `Display` shows
+//! the outermost message, `{:#}` joins the whole chain with `": "`, and
+//! `Debug` shows the outermost message followed by a `Caused by:` list.
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what allows the blanket
+//! `From<E: Error + Send + Sync + 'static>` conversion powering `?`.
+
+use std::fmt;
+
+/// Context-chained error value. Outermost context first.
+pub struct Error {
+    /// `chain[0]` is the outermost message, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, outermost first
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_fail() -> Result<i32> {
+        let n: i32 = "nope".parse().context("parsing the count")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = parse_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "parsing the count");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing the count: "), "{full}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e = anyhow!("value {} bad", 8);
+        assert_eq!(e.to_string(), "value 8 bad");
+        let s = String::from("owned message");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "owned message");
+
+        fn guard(n: i32) -> Result<i32> {
+            ensure!(n > 0, "n must be positive, got {n}");
+            if n > 100 {
+                bail!("n too big");
+            }
+            Ok(n)
+        }
+        assert!(guard(5).is_ok());
+        assert!(guard(-1).unwrap_err().to_string().contains("positive"));
+        assert!(guard(101).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+    }
+}

@@ -25,7 +25,20 @@ fi
 echo "==> cargo build --release"
 cargo build --release
 
-echo "==> cargo test -q"
+echo "==> cargo test -q (debug)"
 cargo test -q
+
+echo "==> cargo test -q --release"
+cargo test -q --release
+
+# Thread-sweep smoke: exercise the real parallel engine end-to-end from
+# the CLI at several budgets (results must agree; these runs just have to
+# succeed — the bit-identity contract is enforced by the test suite).
+echo "==> threads-sweep smoke (CLI)"
+for t in 1 2 4; do
+    echo "--- xgb-tpu train --threads $t"
+    ./target/release/xgb-tpu train --dataset higgs --rows 4000 \
+        --num-rounds 3 --max-bins 32 --n-devices 2 --threads "$t"
+done
 
 echo "CI OK"

@@ -36,6 +36,9 @@ fn main() -> anyhow::Result<()> {
             n_devices: 1,
             compress,
             max_bins: 256,
+            // serial engine: cells/sec must measure the storage format,
+            // not thread-count-dependent contention
+            threads: 1,
             ..Default::default()
         };
         let mut c = MultiDeviceCoordinator::from_dmatrix(&data.train.x, params)?;
@@ -52,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             compress,
             eval_metric: Some(MetricKind::Accuracy),
             eval_every: 0,
+            threads: 1,
             ..Default::default()
         };
         let b = Learner::from_params(bp)?.train(&data.train, Some(&data.valid))?;

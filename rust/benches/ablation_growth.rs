@@ -36,6 +36,8 @@ fn main() -> anyhow::Result<()> {
             grow_policy: policy.parse().map_err(|e: String| anyhow::anyhow!(e))?,
             eval_metric: Some(MetricKind::Accuracy),
             eval_every: 0,
+            // serial engine keeps the policy comparison's timings stable
+            threads: 1,
             ..Default::default()
         };
         let b = Learner::from_params(params)?.train(&data.train, Some(&data.valid))?;

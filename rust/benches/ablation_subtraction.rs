@@ -36,6 +36,9 @@ fn main() -> anyhow::Result<()> {
             n_devices: 1,
             compress: false,
             subtraction,
+            // serial engine: the ablation compares histogram work, so the
+            // simulated clock must be contention-free
+            threads: 1,
             max_bins: 64,
             tree: TreeParams {
                 max_depth: 6,

@@ -2,6 +2,11 @@
 //! devices. Prints the measured-compute + modeled-communication series
 //! (DESIGN.md §5) and the closed-form analytic projection, plus the
 //! paper-shape check (monotone decrease, diminishing returns).
+//!
+//! Also sweeps the **real parallel engine** (`--threads`-style knob) at a
+//! fixed device count and emits `BENCH_scaling.json` (override the path
+//! with `XGB_BENCH_OUT`): measured histogram+partition wall-clock,
+//! rows/sec and speedup vs 1 thread — the perf baseline for future PRs.
 
 use xgb_tpu::bench::Table;
 use xgb_tpu::comm::CostModel;
@@ -38,6 +43,9 @@ fn main() -> anyhow::Result<()> {
             n_devices: p,
             compress: true,
             eval_every: 0,
+            // pin the engine serial so per-device compute (the simulated
+            // clock's input) is measured single-threaded, as in the paper
+            threads: 1,
             ..Default::default()
         };
         let b = Learner::from_params(params)?.train(&data.train, None)?;
@@ -91,5 +99,94 @@ fn main() -> anyhow::Result<()> {
         t1 / mid,
         t1 / t8
     );
+
+    // === real parallel engine: thread sweep at a fixed device count ===
+    let devices = 4usize;
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut sweep: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+    let mut thread_table = Table::new(&[
+        "threads",
+        "hist wall (s)",
+        "partition wall (s)",
+        "device wall (s)",
+        "rows/sec",
+        "speedup",
+    ]);
+    for &t in &thread_counts {
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
+            num_rounds: rounds,
+            max_bins: 256,
+            max_depth: 6,
+            n_devices: devices,
+            compress: true,
+            eval_every: 0,
+            threads: t,
+            ..Default::default()
+        };
+        let b = Learner::from_params(params)?.train(&data.train, None)?;
+        let s = &b.build_stats;
+        let wall = s.device_wall_secs();
+        let rows_per_sec = (data.train.n_rows() * b.n_rounds()) as f64 / wall.max(1e-9);
+        let w1 = sweep.first().map(|e| e.3).unwrap_or(wall);
+        let speedup = w1 / wall.max(1e-9);
+        thread_table.add_row(vec![
+            format!("{t}"),
+            format!("{:.3}", s.hist_wall_secs),
+            format!("{:.3}", s.partition_wall_secs),
+            format!("{wall:.3}"),
+            format!("{rows_per_sec:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        sweep.push((t, s.hist_wall_secs, s.partition_wall_secs, wall, rows_per_sec));
+        eprintln!("  threads={t}: device wall {wall:.3}s ({rows_per_sec:.0} rows/sec)");
+    }
+
+    println!(
+        "\n=== Real engine: hist+partition wall-clock vs threads ({devices} devices) ===\n"
+    );
+    print!("{}", thread_table.render());
+    let w1 = sweep[0].3;
+    let w4 = sweep.iter().find(|e| e.0 == 4).map(|e| e.3).unwrap_or(w1);
+    println!(
+        "\n  [{}] acceptance: threads=4 wall {:.3}s vs threads=1 {:.3}s ({:.2}x, target >= 2x)",
+        if w1 / w4.max(1e-9) >= 2.0 { "ok" } else { "DIFF" },
+        w4,
+        w1,
+        w1 / w4.max(1e-9)
+    );
+
+    // machine-readable trajectory for future PRs
+    let out_path =
+        std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_scaling.json".to_string());
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fig2_scaling\",\n");
+    json.push_str(&format!("  \"rows\": {rows},\n"));
+    json.push_str(&format!("  \"rounds\": {rounds},\n"));
+    json.push_str(&format!("  \"devices\": {devices},\n"));
+    json.push_str("  \"simulated_secs_by_device\": [");
+    for (i, (p, secs)) in results.iter().enumerate() {
+        if i > 0 {
+            json.push_str(", ");
+        }
+        json.push_str(&format!("{{\"devices\": {p}, \"simulated_secs\": {secs:.6}}}"));
+    }
+    json.push_str("],\n");
+    json.push_str("  \"thread_sweep\": [");
+    for (i, (t, hist, part, wall, rps)) in sweep.iter().enumerate() {
+        if i > 0 {
+            json.push_str(", ");
+        }
+        json.push_str(&format!(
+            "{{\"threads\": {t}, \"hist_wall_secs\": {hist:.6}, \
+             \"partition_wall_secs\": {part:.6}, \"device_wall_secs\": {wall:.6}, \
+             \"rows_per_sec\": {rps:.1}, \"speedup_vs_1\": {:.4}}}",
+            w1 / wall.max(1e-9)
+        ));
+    }
+    json.push_str("]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path}");
     Ok(())
 }

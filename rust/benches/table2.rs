@@ -105,6 +105,9 @@ fn main() -> anyhow::Result<()> {
             eval_metric: Some(metric.parse().expect("infallible")),
             n_devices: 1,
             compress: false,
+            // pin the engine serial so per-device compute (the simulated
+            // clock's input) is contention-free and host-independent
+            threads: 1,
             ..Default::default()
         };
         let b = Learner::from_params(params_cpu.clone())?.train(&data.train, Some(&data.valid))?;

@@ -6,6 +6,7 @@
 use anyhow::Result;
 
 use crate::compress::CompressedMatrix;
+use crate::exec::ExecContext;
 use crate::hist::{self, Histogram};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::partitioner::BinSource;
@@ -13,30 +14,78 @@ use crate::tree::{RowPartitioner, SplitCandidate};
 use crate::GradPair;
 
 /// Pluggable executor for the histogram hot-spot. The native backend runs
-/// the Rust loop of [`crate::hist`]; the XLA backend
+/// the chunk-parallel Rust loop of [`crate::hist`]; the XLA backend
 /// (`crate::runtime::XlaHistBackend`) feeds row tiles through the
 /// AOT-compiled Pallas one-hot-matmul kernel.
 ///
-/// Deliberately not `Send`: the PJRT client handle in the `xla` crate is
-/// `Rc`-based, and the coordinator executes device shards serially (the
-/// multi-device clock is simulated — DESIGN.md §5).
+/// The trait itself is deliberately **not** `Send`: the PJRT client
+/// handle in the `xla` crate is `Rc`-based, so an XLA backend must stay
+/// pinned to the one executor thread that owns it — the coordinator runs
+/// its device loop serially on that thread. Backends that *can* execute
+/// shards concurrently expose a `Send + Sync` view through
+/// [`HistBackend::as_parallel`], which the coordinator uses to fan device
+/// shards out across the [`ExecContext`] pool.
 pub trait HistBackend {
     /// Accumulate the gradient histogram of `rows` into `out`
-    /// (`out.n_bins()` == total bins).
+    /// (`out.n_bins()` == total bins). `exec` is the thread budget for
+    /// chunk-level parallelism *within* this call; backends may ignore it.
     fn build_histogram(
         &mut self,
         shard: &DeviceShard,
         rows: &[u32],
         out: &mut Histogram,
+        exec: &ExecContext,
     ) -> Result<()>;
 
     /// Human-readable name for logs / EXPERIMENTS.md.
     fn name(&self) -> &'static str;
+
+    /// A thread-safe view of this backend for concurrent shard execution,
+    /// or `None` if shards must run serially on the owning thread (the
+    /// Rc-based XLA runtime). Default: `None`.
+    fn as_parallel(&self) -> Option<&dyn ParallelHistBackend> {
+        None
+    }
+}
+
+/// The `Send + Sync` half of the [`HistBackend`] split: backends whose
+/// shard builds may run concurrently on pool workers. Implementations
+/// must be stateless or internally synchronised.
+pub trait ParallelHistBackend: Send + Sync {
+    /// Same contract as [`HistBackend::build_histogram`], but callable
+    /// from any worker thread through a shared reference.
+    fn build_histogram_shard(
+        &self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        out: &mut Histogram,
+        exec: &ExecContext,
+    ) -> Result<()>;
 }
 
 /// Pure-Rust histogram backend (also the `xgb-cpu-hist` baseline's engine).
 #[derive(Debug, Default, Clone)]
 pub struct NativeBackend;
+
+impl ParallelHistBackend for NativeBackend {
+    fn build_histogram_shard(
+        &self,
+        shard: &DeviceShard,
+        rows: &[u32],
+        out: &mut Histogram,
+        exec: &ExecContext,
+    ) -> Result<()> {
+        match &shard.storage {
+            ShardStorage::Quantized(qm) => {
+                hist::build_histogram_quantized_par(qm, &shard.gradients, rows, out, exec)
+            }
+            ShardStorage::Compressed(cm) => {
+                hist::build_histogram_compressed_par(cm, &shard.gradients, rows, out, exec)
+            }
+        }
+        Ok(())
+    }
+}
 
 impl HistBackend for NativeBackend {
     fn build_histogram(
@@ -44,20 +93,17 @@ impl HistBackend for NativeBackend {
         shard: &DeviceShard,
         rows: &[u32],
         out: &mut Histogram,
+        exec: &ExecContext,
     ) -> Result<()> {
-        match &shard.storage {
-            ShardStorage::Quantized(qm) => {
-                hist::build_histogram_quantized(qm, &shard.gradients, rows, out)
-            }
-            ShardStorage::Compressed(cm) => {
-                hist::build_histogram_compressed(cm, &shard.gradients, rows, out)
-            }
-        }
-        Ok(())
+        self.build_histogram_shard(shard, rows, out, exec)
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn as_parallel(&self) -> Option<&dyn ParallelHistBackend> {
+        Some(self)
     }
 }
 
@@ -157,7 +203,8 @@ impl DeviceShard {
     }
 
     /// `RepartitionInstances` for one applied split; returns local
-    /// `(n_left, n_right)`.
+    /// `(n_left, n_right)`. `exec` bounds chunk-level parallelism within
+    /// this shard's repartition.
     pub fn repartition(
         &mut self,
         nid: usize,
@@ -165,9 +212,11 @@ impl DeviceShard {
         left: usize,
         right: usize,
         cuts: &HistogramCuts,
+        exec: &ExecContext,
     ) -> (usize, usize) {
         let src = self.storage.bin_source();
-        self.partitioner.apply_split(nid, split, left, right, &src, cuts)
+        self.partitioner
+            .apply_split_par(nid, split, left, right, &src, cuts, exec)
     }
 }
 
@@ -213,8 +262,9 @@ mod tests {
         let mut h1 = Histogram::zeros(s1.storage.n_bins());
         let mut h2 = Histogram::zeros(s2.storage.n_bins());
         let mut be = NativeBackend;
-        be.build_histogram(&s1, &rows, &mut h1).unwrap();
-        be.build_histogram(&s2, &rows, &mut h2).unwrap();
+        let exec = ExecContext::serial();
+        be.build_histogram(&s1, &rows, &mut h1, &exec).unwrap();
+        be.build_histogram(&s2, &rows, &mut h2, &exec).unwrap();
         assert_eq!(h1, h2);
     }
 
@@ -230,7 +280,7 @@ mod tests {
             left_sum: Default::default(),
             right_sum: Default::default(),
         };
-        s.repartition(0, &split, 1, 2, &cuts);
+        s.repartition(0, &split, 1, 2, &cuts, &ExecContext::serial());
         assert!(s.partitioner.node_count(1) > 0);
         let grads = s.gradients.clone();
         s.begin_tree(&grads);

@@ -17,16 +17,21 @@
 //!    (§2.3 "reconfigurable growth strategy").
 //!
 //! Device compute is *executed* (natively or through the AOT-compiled XLA
-//! kernel via [`crate::runtime`]); multi-device wall-clock is reported as
-//! `max(per-device compute) + collective cost` per round (DESIGN.md §5),
-//! which is exact for data-parallel identical devices up to the comm
-//! model.
+//! kernel via [`crate::runtime`]). With the native backend the shards run
+//! **concurrently on OS threads** (the [`crate::exec`] engine, budgeted by
+//! [`CoordinatorParams::threads`]); the Rc-based XLA backend stays pinned
+//! to the coordinator's executor thread. Two clocks are reported per
+//! round: the *measured* wall-clock of the concurrent execution
+//! ([`BuildStats::hist_wall_secs`] / [`BuildStats::partition_wall_secs`])
+//! and the *simulated* multi-device clock `max(per-device compute) +
+//! collective cost` (DESIGN.md §5), which is exact for data-parallel
+//! identical devices up to the comm model.
 
 pub mod builder;
 pub mod device;
 
 pub use builder::{BuildStats, MultiDeviceCoordinator, TreeBuildResult};
-pub use device::{DeviceShard, HistBackend, NativeBackend};
+pub use device::{DeviceShard, HistBackend, NativeBackend, ParallelHistBackend};
 
 use crate::comm::{AllReduceAlgo, CostModel};
 use crate::tree::{GrowthPolicy, TreeParams};
@@ -58,6 +63,11 @@ pub struct CoordinatorParams {
     pub colsample_bytree: f64,
     /// Seed for the per-tree column sample.
     pub seed: u64,
+    /// Worker-thread budget for the real parallel engine
+    /// ([`crate::exec`]): device shards run concurrently and the per-shard
+    /// hot loops are chunk-parallel. `0` = all cores, `1` = serial.
+    /// Results are bit-identical for every value (see [`crate::exec`]).
+    pub threads: usize,
 }
 
 impl Default for CoordinatorParams {
@@ -74,6 +84,7 @@ impl Default for CoordinatorParams {
             subtraction: true,
             colsample_bytree: 1.0,
             seed: 0,
+            threads: 0,
         }
     }
 }

@@ -1,0 +1,323 @@
+//! Execution engine: a vendored, dependency-free scoped thread pool with
+//! `parallel_map` / `parallel_for` primitives and a **deterministic
+//! fixed-chunk reduction order**.
+//!
+//! # Real threads vs the simulated multi-GPU clock
+//!
+//! The coordinator models the paper's multi-GPU system two ways at once:
+//!
+//! * the **simulated clock** (`BuildStats::simulated_secs`) prices each
+//!   round as `max_d(compute_d) + comm(round)` under the ring cost model —
+//!   the analytic Figure-2 quantity, independent of host hardware;
+//! * the **real engine** (this module) actually executes device shards on
+//!   OS threads and chunk-parallelises the per-shard hot loops, so
+//!   measured wall-clock (`BuildStats::hist_wall_secs` /
+//!   `partition_wall_secs`) genuinely improves with
+//!   [`ExecContext::threads`].
+//!
+//! # Determinism contract
+//!
+//! Floating-point addition is not associative, so naive work-stealing
+//! reductions produce thread-count-dependent results. Every reduction in
+//! this crate therefore follows one rule: **work is split into fixed-size
+//! chunks whose boundaries depend only on the input size, and partial
+//! results are merged in ascending chunk index** — never in completion
+//! order. Workers may *compute* chunks in any order (claims go through an
+//! atomic counter for load balance) but the merge is a fixed left-to-right
+//! fold, so `threads = 1` and `threads = 64` produce bit-identical
+//! histograms, trees, predictions and metrics. The regression test
+//! `rust/tests/parallel_exec.rs` pins this contract.
+//!
+//! The pool is scoped (`std::thread::scope`): workers borrow the caller's
+//! stack data directly, no `'static` bounds, no channels, and a panicking
+//! worker propagates at the join as usual. Threads are spawned per call;
+//! for the millisecond-scale phases this engine serves, spawn cost is
+//! noise, and small inputs skip spawning entirely via the serial fast
+//! path.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default rows-per-chunk for row-wise phases (histograms, partitioning,
+/// gradients, prediction). Chunk boundaries are a pure function of the
+/// input length — **never** of the thread count — which is what keeps the
+/// reduction order fixed (see module docs).
+pub const ROW_CHUNK: usize = 8192;
+
+/// A thread budget for the parallel primitives. Cheap to clone/copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecContext {
+    threads: usize,
+}
+
+impl Default for ExecContext {
+    /// Defaults to all available cores (same as `ExecContext::new(0)`).
+    fn default() -> Self {
+        ExecContext::new(0)
+    }
+}
+
+impl ExecContext {
+    /// `threads = 0` resolves to the machine's available parallelism;
+    /// `threads = 1` is the serial engine (no threads are ever spawned).
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        ExecContext { threads }
+    }
+
+    /// The serial engine: every primitive runs inline on the caller.
+    pub fn serial() -> Self {
+        ExecContext { threads: 1 }
+    }
+
+    /// Resolved worker count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split this budget across `ways` concurrent consumers (e.g. give
+    /// each of `p` device shards `threads / p` workers for its own
+    /// chunk-level parallelism). Never returns a zero budget.
+    pub fn fork(&self, ways: usize) -> ExecContext {
+        ExecContext {
+            threads: (self.threads / ways.max(1)).max(1),
+        }
+    }
+
+    /// Core primitive: run `f(0), f(1), …, f(n_tasks - 1)` and return the
+    /// results **in task-index order**, regardless of which worker ran
+    /// which task. Tasks are claimed from an atomic counter so long tasks
+    /// don't serialise behind short ones.
+    pub fn run_indexed<R, F>(&self, n_tasks: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads <= 1 || n_tasks <= 1 {
+            return (0..n_tasks).map(f).collect();
+        }
+        let n_workers = self.threads.min(n_tasks);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    let r = f(i);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// Parallel map over a shared slice; results in item order.
+    pub fn parallel_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.run_indexed(items.len(), |i| f(i, &items[i]))
+    }
+
+    /// Parallel map with exclusive access to each item (one task per
+    /// item — the device-shard shape); results in item order.
+    pub fn parallel_map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        // Hand each worker a distinct &mut T through a per-item Mutex;
+        // indices are claimed exactly once so each lock is uncontended.
+        let cells: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
+        self.run_indexed(cells.len(), |i| {
+            let mut guard = cells[i].lock().unwrap();
+            f(i, &mut **guard)
+        })
+    }
+
+    /// Map over fixed chunks of `0..n` (chunk boundaries depend only on
+    /// `n` and `chunk`); results in ascending chunk-index order. This is
+    /// the primitive behind every deterministic reduction in the crate.
+    pub fn map_chunks<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        self.run_indexed(n_chunks, |ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(n);
+            f(ci, lo..hi)
+        })
+    }
+
+    /// Parallel for over fixed chunks of `0..n`, no results collected.
+    pub fn for_each_chunk<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        self.map_chunks(n, chunk, |ci, r| f(ci, r));
+    }
+
+    /// Parallel for over disjoint mutable chunks of a slice. `f` receives
+    /// `(chunk_index, start_offset, chunk)`; chunks are the usual fixed
+    /// partition of the slice so writes are trivially race-free.
+    pub fn for_each_slice_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let chunk = chunk.max(1);
+        if self.threads <= 1 || data.len() <= chunk {
+            // same chunk layout as the parallel path, run inline
+            for (ci, c) in data.chunks_mut(chunk).enumerate() {
+                f(ci, ci * chunk, c);
+            }
+            return;
+        }
+        let cells: Vec<Mutex<(usize, &mut [T])>> = data
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, c)| Mutex::new((ci * chunk, c)))
+            .collect();
+        self.run_indexed(cells.len(), |i| {
+            let mut guard = cells[i].lock().unwrap();
+            let start = guard.0;
+            f(i, start, &mut *guard.1);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_preserves_order() {
+        let exec = ExecContext::new(4);
+        // vary task duration so completion order scrambles
+        let out = exec.run_indexed(64, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            i * 2
+        });
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial = ExecContext::serial().parallel_map(&items, |i, &x| x * x + i as u64);
+        for t in [2usize, 3, 8] {
+            let par = ExecContext::new(t).parallel_map(&items, |i, &x| x * x + i as u64);
+            assert_eq!(par, serial, "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn map_chunks_boundaries_are_fixed() {
+        let n = 10_000usize;
+        let collect = |t: usize| {
+            ExecContext::new(t).map_chunks(n, 512, |ci, r| (ci, r.start, r.end))
+        };
+        let serial = collect(1);
+        assert_eq!(serial.len(), n.div_ceil(512));
+        assert_eq!(serial[0], (0, 0, 512));
+        assert_eq!(serial.last().copied().unwrap(), (19, 19 * 512, n));
+        for t in [2usize, 5, 16] {
+            assert_eq!(collect(t), serial, "chunk layout must not depend on threads");
+        }
+    }
+
+    #[test]
+    fn parallel_map_mut_gives_exclusive_access() {
+        let mut items: Vec<Vec<u32>> = (0..8).map(|i| vec![i]).collect();
+        let lens = ExecContext::new(4).parallel_map_mut(&mut items, |i, v| {
+            v.push(i as u32 * 10);
+            v.len()
+        });
+        assert_eq!(lens, vec![2; 8]);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(v, &vec![i as u32, i as u32 * 10]);
+        }
+    }
+
+    #[test]
+    fn for_each_slice_mut_covers_every_element() {
+        let mut data = vec![0u32; 5000];
+        ExecContext::new(4).for_each_slice_mut(&mut data, 700, |_, start, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (start + k) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn fork_splits_budget() {
+        let exec = ExecContext::new(8);
+        assert_eq!(exec.fork(2).threads(), 4);
+        assert_eq!(exec.fork(3).threads(), 2);
+        assert_eq!(exec.fork(100).threads(), 1);
+        assert_eq!(ExecContext::serial().fork(0).threads(), 1);
+    }
+
+    #[test]
+    fn zero_resolves_to_available_parallelism() {
+        assert!(ExecContext::new(0).threads() >= 1);
+        assert_eq!(ExecContext::default().threads(), ExecContext::new(0).threads());
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let exec = ExecContext::new(4);
+        let out: Vec<u32> = exec.run_indexed(0, |_| unreachable!());
+        assert!(out.is_empty());
+        let out: Vec<(usize, usize)> = exec.map_chunks(0, 64, |_, r| (r.start, r.end));
+        assert!(out.is_empty());
+        let mut nothing: Vec<u8> = Vec::new();
+        exec.for_each_slice_mut(&mut nothing, 4, |_, _, _| unreachable!());
+    }
+
+    #[test]
+    fn deterministic_float_reduction_across_thread_counts() {
+        // the exact pattern the histogram builder uses: per-chunk partial
+        // sums merged in chunk order must be bit-identical for any T
+        let vals: Vec<f64> = (0..50_000)
+            .map(|i| ((i as f64) * 0.731).sin() * 1e-3 + 1.0)
+            .collect();
+        let sum_with = |t: usize| -> f64 {
+            ExecContext::new(t)
+                .map_chunks(vals.len(), ROW_CHUNK, |_, r| {
+                    vals[r].iter().fold(0.0f64, |a, &b| a + b)
+                })
+                .into_iter()
+                .fold(0.0f64, |a, b| a + b)
+        };
+        let s1 = sum_with(1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(s1.to_bits(), sum_with(t).to_bits(), "threads = {t}");
+        }
+    }
+}

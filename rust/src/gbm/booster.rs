@@ -68,6 +68,9 @@ pub struct BoosterParams {
     pub seed: u64,
     /// Print eval lines to stderr.
     pub verbose: bool,
+    /// Worker threads (`0` = all cores, `1` = serial); wall-clock only,
+    /// results are bit-identical.
+    pub threads: usize,
 }
 
 impl Default for BoosterParams {
@@ -97,6 +100,7 @@ impl Default for BoosterParams {
             monotone_constraints: String::new(),
             seed: d.seed,
             verbose: d.verbose,
+            threads: d.threads,
         }
     }
 }
@@ -138,6 +142,7 @@ impl BoosterParams {
             monotone_constraints: p.monotone_constraints.to_string(),
             seed: p.seed,
             verbose: p.verbose,
+            threads: p.threads,
         }
     }
 
@@ -184,6 +189,7 @@ impl BoosterParams {
                 .context("monotone_constraints")?,
             seed: self.seed,
             verbose: self.verbose,
+            threads: self.threads,
         })
     }
 
@@ -281,9 +287,11 @@ impl Booster {
         self.trees.first().map(|t| t.len()).unwrap_or(0)
     }
 
-    /// Raw margins for a feature matrix.
+    /// Raw margins for a feature matrix (batch prediction runs
+    /// chunk-parallel under the model's `threads` budget; see §2.4).
     pub fn predict_margins(&self, x: &crate::data::DMatrix) -> Vec<Vec<Float>> {
-        predict::predict_margins(&self.trees, &self.base_score, x)
+        let exec = crate::exec::ExecContext::new(self.params.threads);
+        predict::predict_margins_par(&self.trees, &self.base_score, x, &exec)
     }
 
     /// Transformed predictions (probability / class / value).

@@ -37,6 +37,7 @@ use anyhow::{Context as _, Result};
 
 use crate::coordinator::{BuildStats, HistBackend, MultiDeviceCoordinator, NativeBackend};
 use crate::data::Dataset;
+use crate::exec::ExecContext;
 use crate::gbm::booster::{Booster, EvalRecord};
 use crate::gbm::metric::Metric;
 use crate::gbm::params::{
@@ -279,6 +280,10 @@ impl Learner {
             implicit.push(Box::new(EarlyStopping::new(params.early_stopping_rounds)));
         }
 
+        // one thread budget for every phase of the round: gradient
+        // computation, tree construction and incremental validation
+        // scoring (results are thread-count-invariant — see crate::exec)
+        let exec = ExecContext::new(params.threads);
         let mut coordinator = MultiDeviceCoordinator::with_backend(
             &train.x,
             params.coordinator_params(),
@@ -301,7 +306,7 @@ impl Learner {
 
         let mut sub_rng = crate::util::Pcg64::new(params.seed ^ 0x5b5a);
         for round in 0..params.num_rounds {
-            let mut grads = objective.gradients(train, &margins);
+            let mut grads = objective.gradients_par(train, &margins, &exec);
             if params.subsample < 1.0 {
                 // exclude unsampled rows from this round's trees by zeroing
                 // their gradient mass (same rows for all k outputs)
@@ -319,7 +324,7 @@ impl Learner {
                     *m += *d;
                 }
                 if let (Some(vm), Some(v)) = (valid_margins.as_mut(), valid) {
-                    predict::accumulate_tree(&result.tree, &v.x, &mut vm[c]);
+                    predict::accumulate_tree_par(&result.tree, &v.x, &mut vm[c], &exec);
                 }
                 build_stats.accumulate(&result.stats);
                 trees[c].push(result.tree);
@@ -442,6 +447,11 @@ impl LearnerBuilder {
     setter!(monotone_constraints: MonotoneConstraints);
     setter!(seed: u64);
     setter!(verbose: bool);
+    setter!(
+        /// Worker threads for the parallel engine (`0` = all cores, `1` =
+        /// serial). Changes wall-clock only; results are bit-identical.
+        threads: usize
+    );
 
     /// Evaluation metric (`None`/unset = the objective's default).
     pub fn eval_metric(mut self, metric: MetricKind) -> Self {
@@ -516,6 +526,7 @@ impl LearnerBuilder {
             "colsample_bytree" => parse_into!(colsample_bytree),
             "seed" => parse_into!(seed),
             "verbose" => parse_into!(verbose),
+            "threads" => parse_into!(threads),
             other => err(format!("unknown parameter {other:?}")),
         }
         self

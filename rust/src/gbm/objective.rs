@@ -9,7 +9,24 @@
 //! always run in Rust.
 
 use crate::data::Dataset;
+use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::{Float, GradPair};
+
+/// Chunk a single-output row-wise gradient map across the pool. Each
+/// row's pair is computed independently and chunks concatenate in index
+/// order, so the result is bit-identical to the serial map.
+fn rowwise_par<F>(n: usize, exec: &ExecContext, f: F) -> Vec<GradPair>
+where
+    F: Fn(usize) -> GradPair + Sync,
+{
+    let mut out = vec![GradPair::default(); n];
+    exec.for_each_slice_mut(&mut out, ROW_CHUNK, |_, start, chunk| {
+        for (i, g) in chunk.iter_mut().enumerate() {
+            *g = f(start + i);
+        }
+    });
+    out
+}
 
 /// A training objective.
 pub trait Objective: Send {
@@ -28,6 +45,21 @@ pub trait Objective: Send {
     /// * `margins` — `n_outputs` vectors of raw predictions, each length n.
     /// * returns `n_outputs` gradient vectors, each length n.
     fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>>;
+
+    /// Chunk-parallel [`gradients`](Self::gradients) — must return the
+    /// same values bit for bit at every thread count. The default falls
+    /// back to the serial path; the row-wise objectives (squared error,
+    /// logistic) override with a pool-parallel map. Mirrors the paper's
+    /// §2.5 split: those two run on device, the rest stay host-serial.
+    fn gradients_par(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+    ) -> Vec<Vec<GradPair>> {
+        let _ = exec;
+        self.gradients(ds, margins)
+    }
 
     /// Transform raw margins into the user-facing prediction
     /// (probability, class index, value...).
@@ -80,6 +112,16 @@ impl Objective for SquaredError {
             .collect()]
     }
 
+    fn gradients_par(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+    ) -> Vec<Vec<GradPair>> {
+        let (y, m) = (&ds.y, &margins[0]);
+        vec![rowwise_par(y.len(), exec, |i| GradPair::new(m[i] - y[i], 1.0))]
+    }
+
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
         margins[0].clone()
     }
@@ -115,6 +157,19 @@ impl Objective for Logistic {
                 GradPair::new(p - y, (p * (1.0 - p)).max(1e-16))
             })
             .collect()]
+    }
+
+    fn gradients_par(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+    ) -> Vec<Vec<GradPair>> {
+        let (y, m) = (&ds.y, &margins[0]);
+        vec![rowwise_par(y.len(), exec, |i| {
+            let p = sigmoid(m[i]);
+            GradPair::new(p - y[i], (p * (1.0 - p)).max(1e-16))
+        })]
     }
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
@@ -389,5 +444,22 @@ mod tests {
         assert!(SquaredError.supports_device());
         assert!(!Softmax { k: 3, prob_output: false }.supports_device());
         assert!(!PairwiseRank.supports_device());
+    }
+
+    #[test]
+    fn parallel_gradients_bit_identical() {
+        use crate::data::DMatrix;
+        let n = 30_000usize; // > ROW_CHUNK so chunking engages
+        let mut rng = crate::util::Pcg64::new(5);
+        let y: Vec<Float> = (0..n).map(|_| (rng.next_f64() < 0.5) as u32 as Float).collect();
+        let margins = vec![(0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect::<Vec<Float>>()];
+        let ds = Dataset::new(DMatrix::dense(vec![0.0; n], n, 1), y);
+        for obj in [&SquaredError as &dyn Objective, &Logistic] {
+            let serial = obj.gradients(&ds, &margins);
+            for t in [2usize, 8] {
+                let par = obj.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
+                assert_eq!(par, serial, "{} threads = {t}", obj.name());
+            }
+        }
     }
 }

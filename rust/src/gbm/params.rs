@@ -311,6 +311,13 @@ pub struct LearnerParams {
     pub seed: u64,
     /// Print eval lines to stderr.
     pub verbose: bool,
+    /// Worker threads for the real parallel engine (`crate::exec`):
+    /// device shards run concurrently and the hot loops (histograms,
+    /// repartitioning, sketching, gradients, prediction) are
+    /// chunk-parallel. `0` = all cores, `1` = serial. Trees, predictions
+    /// and metrics are **bit-identical** for every value — the knob only
+    /// changes wall-clock.
+    pub threads: usize,
 }
 
 impl Default for LearnerParams {
@@ -339,6 +346,7 @@ impl Default for LearnerParams {
             monotone_constraints: MonotoneConstraints::none(),
             seed: 0,
             verbose: false,
+            threads: 0,
         }
     }
 }
@@ -397,6 +405,7 @@ impl LearnerParams {
             monotone_constraints,
             seed: cfg.get_parse("seed", d.seed)?,
             verbose: cfg.get_bool("verbose", d.verbose),
+            threads: cfg.get_parse("threads", d.threads)?,
         })
     }
 
@@ -423,6 +432,7 @@ impl LearnerParams {
             subtraction: true,
             colsample_bytree: self.colsample_bytree,
             seed: self.seed,
+            threads: self.threads,
         }
     }
 

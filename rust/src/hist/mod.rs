@@ -20,8 +20,21 @@
 //! `python/compile/kernels/histogram.py` and DESIGN.md §1). The Rust
 //! builder here is the per-device reference implementation and the CPU
 //! baseline.
+//!
+//! ## Canonical accumulation order
+//!
+//! All builders — serial and parallel — accumulate through the same
+//! **fixed-chunk** structure: the row set is split into
+//! [`crate::exec::ROW_CHUNK`]-sized chunks (boundaries depend only on the
+//! row count), each chunk is summed into a fresh partial histogram in row
+//! order, and partials are folded into `out` in ascending chunk order.
+//! Because the bracketing of every f64 sum is a pure function of the
+//! input, `build_histogram_*` and `build_histogram_*_par` agree **bit
+//! for bit** at every thread count; the parallel variants only change
+//! which OS thread computes each chunk.
 
 use crate::compress::CompressedMatrix;
+use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::quantile::QuantizedMatrix;
 use crate::GradPair;
 
@@ -89,6 +102,11 @@ impl Histogram {
         self.bins.len()
     }
 
+    /// Zero every bin (scratch reuse in the chunked builders).
+    pub fn reset(&mut self) {
+        self.bins.fill(GradPairF64::default());
+    }
+
     /// Total gradient sum over one feature's bin range.
     pub fn feature_sum(&self, lo: usize, hi: usize) -> GradPairF64 {
         let mut s = GradPairF64::default();
@@ -146,16 +164,14 @@ pub fn subtract(parent: &Histogram, child: &Histogram) -> Histogram {
     out
 }
 
-/// Histogram builder over the uncompressed quantised matrix.
-///
-/// `rows` selects the node's instances (the row partitioner's segment).
-pub fn build_histogram_quantized(
+/// Inner kernel over the uncompressed quantised matrix: sum one chunk of
+/// rows into `out` in row order.
+fn accumulate_quantized(
     qm: &QuantizedMatrix,
     gradients: &[GradPair],
     rows: &[u32],
     out: &mut Histogram,
 ) {
-    assert_eq!(out.n_bins(), qm.n_bins);
     let null = qm.null_symbol();
     let stride = qm.row_stride;
     let bins = &mut out.bins[..];
@@ -174,16 +190,15 @@ pub fn build_histogram_quantized(
     }
 }
 
-/// Histogram builder over the bit-packed compressed matrix — the paper's
-/// §2.2 "values are packed and unpacked at runtime using bitwise
-/// operations" path. Unpacks inline; no scratch decode buffer.
-pub fn build_histogram_compressed(
+/// Inner kernel over the bit-packed compressed matrix — the paper's §2.2
+/// "values are packed and unpacked at runtime using bitwise operations"
+/// path. Unpacks inline; no scratch decode buffer.
+fn accumulate_compressed(
     cm: &CompressedMatrix,
     gradients: &[GradPair],
     rows: &[u32],
     out: &mut Histogram,
 ) {
-    assert_eq!(out.n_bins(), cm.n_bins);
     let null = cm.null_symbol();
     let bins = &mut out.bins[..];
     let n_bins = bins.len() as u32;
@@ -200,6 +215,94 @@ pub fn build_histogram_compressed(
             }
         });
     }
+}
+
+/// The canonical fixed-chunk accumulation shared by every builder (see
+/// module docs): identical bracketing whether chunks run inline or on the
+/// pool, so results are bit-identical at every thread count.
+fn chunked_build<F>(rows: &[u32], out: &mut Histogram, exec: &ExecContext, accumulate: F)
+where
+    F: Fn(&[u32], &mut Histogram) + Sync,
+{
+    if rows.len() <= ROW_CHUNK {
+        // single chunk: summing into the zeroed `out` is the same
+        // bracketing as partial-then-add
+        accumulate(rows, out);
+        return;
+    }
+    if exec.threads() <= 1 {
+        let mut partial = Histogram::zeros(out.n_bins());
+        for chunk in rows.chunks(ROW_CHUNK) {
+            partial.reset();
+            accumulate(chunk, &mut partial);
+            out.add(&partial);
+        }
+    } else {
+        let n_bins = out.n_bins();
+        let partials = exec.map_chunks(rows.len(), ROW_CHUNK, |_, r| {
+            let mut h = Histogram::zeros(n_bins);
+            accumulate(&rows[r], &mut h);
+            h
+        });
+        // merge in ascending chunk index — the determinism contract
+        for p in &partials {
+            out.add(p);
+        }
+    }
+}
+
+/// Histogram builder over the uncompressed quantised matrix.
+///
+/// `rows` selects the node's instances (the row partitioner's segment).
+pub fn build_histogram_quantized(
+    qm: &QuantizedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+) {
+    build_histogram_quantized_par(qm, gradients, rows, out, &ExecContext::serial());
+}
+
+/// Chunk-parallel histogram builder over the uncompressed quantised
+/// matrix — bit-identical to [`build_histogram_quantized`] at every
+/// thread count.
+pub fn build_histogram_quantized_par(
+    qm: &QuantizedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+) {
+    assert_eq!(out.n_bins(), qm.n_bins);
+    chunked_build(rows, out, exec, |chunk, h| {
+        accumulate_quantized(qm, gradients, chunk, h)
+    });
+}
+
+/// Histogram builder over the bit-packed compressed matrix (§2.2).
+pub fn build_histogram_compressed(
+    cm: &CompressedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+) {
+    build_histogram_compressed_par(cm, gradients, rows, out, &ExecContext::serial());
+}
+
+/// Chunk-parallel histogram builder over the bit-packed compressed
+/// matrix — bit-identical to [`build_histogram_compressed`] at every
+/// thread count.
+pub fn build_histogram_compressed_par(
+    cm: &CompressedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+) {
+    assert_eq!(out.n_bins(), cm.n_bins);
+    chunked_build(rows, out, exec, |chunk, h| {
+        accumulate_compressed(cm, gradients, chunk, h)
+    });
 }
 
 #[cfg(test)]
@@ -313,6 +416,28 @@ mod tests {
         for (x, y) in ha.bins.iter().zip(hall.bins.iter()) {
             assert!((x.grad - y.grad).abs() < 1e-9);
             assert!((x.hess - y.hess).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parallel_builder_bit_identical_across_threads() {
+        // > 2 chunks so the merge order actually matters
+        let (qm, grads) = fixture(20_000, 5, 9);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let rows: Vec<u32> = (0..20_000).collect();
+        let mut serial = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut serial);
+        for t in [2usize, 4, 8] {
+            let exec = crate::exec::ExecContext::new(t);
+            let mut hq = Histogram::zeros(qm.n_bins);
+            let mut hc = Histogram::zeros(qm.n_bins);
+            build_histogram_quantized_par(&qm, &grads, &rows, &mut hq, &exec);
+            build_histogram_compressed_par(&cm, &grads, &rows, &mut hc, &exec);
+            for (a, b) in serial.bins.iter().zip(hq.bins.iter()) {
+                assert_eq!(a.grad.to_bits(), b.grad.to_bits(), "threads = {t}");
+                assert_eq!(a.hess.to_bits(), b.hess.to_bits(), "threads = {t}");
+            }
+            assert_eq!(hq, hc, "compressed parity at threads = {t}");
         }
     }
 

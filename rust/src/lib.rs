@@ -51,6 +51,29 @@
 //! model-file round-trips. Training behaviour is extensible through the
 //! `gbm::Callback` trait (`EarlyStopping`, `EvalLogger`, `TimeBudget`
 //! ship in-crate).
+//!
+//! ## Execution model
+//!
+//! Two clocks coexist (see [`exec`] for the full story):
+//!
+//! * **Simulated multi-GPU clock** — the coordinator prices each
+//!   histogram round as `max(per-device compute) + ring-collective cost`
+//!   (DESIGN.md §5). This is the Figure-2 analytic quantity and is
+//!   independent of the host machine.
+//! * **Real parallel engine** — device shards actually run concurrently
+//!   on OS threads, and the per-shard hot loops (histogram build, row
+//!   repartitioning, quantile sketching, gradient computation, batch
+//!   prediction) are chunk-parallel on the same pool. The thread budget
+//!   is the `threads` knob on [`gbm::LearnerParams`] /
+//!   [`gbm::LearnerBuilder`] and the CLI (`--threads`; `0` = all cores,
+//!   `1` = serial). Measured per-phase wall-clock is reported in
+//!   `coordinator::BuildStats` alongside the simulated clock.
+//!
+//! Results are **bit-identical for every thread count**: all
+//! floating-point reductions split work into fixed-size chunks and merge
+//! partials in ascending chunk order (never completion order), so
+//! parallelism changes wall-clock only — trees, predictions and metrics
+//! do not move. `rust/tests/parallel_exec.rs` pins this contract.
 
 pub mod baselines;
 pub mod bench;
@@ -58,6 +81,7 @@ pub mod comm;
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod gbm;
 pub mod hist;
 pub mod predict;

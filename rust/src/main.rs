@@ -67,6 +67,9 @@ fn print_help() {
            --alpha, --min-child-weight, --num-class, --eval-metric,\n\
            --grow-policy depthwise|lossguide, --early-stopping-rounds\n\
            --n-devices <p>        simulated devices (default 1)\n\
+           --threads <n>          worker threads for the parallel engine\n\
+                                  (0 = all cores, 1 = serial; results are\n\
+                                  bit-identical for every value)\n\
            --compress <bool>      bit-packed shards (default true)\n\
            --allreduce ring|serial\n\
            --backend native|xla   histogram execution engine\n\
@@ -192,11 +195,12 @@ fn run_train(args: &ArgParser) -> Result<()> {
         }
     }
     eprintln!(
-        "training: {} rows x {} cols, objective={}, devices={}, policy={}, compress={}",
+        "training: {} rows x {} cols, objective={}, devices={}, threads={}, policy={}, compress={}",
         train.n_rows(),
         train.n_cols(),
         params.objective,
         params.n_devices,
+        xgb_tpu::exec::ExecContext::new(params.threads).threads(),
         params.grow_policy,
         params.compress
     );
@@ -250,6 +254,14 @@ fn run_train(args: &ArgParser) -> Result<()> {
         s.allreduce_sim_secs,
         s.comm_bytes_per_device as f64 / 1e6,
         s.hist_rounds
+    );
+    println!(
+        "wall-clock (parallel engine): hist={:.3}s partition={:.3}s \
+         (device compute total {:.3}s across {} devices)",
+        s.hist_wall_secs,
+        s.partition_wall_secs,
+        s.total_compute_secs(),
+        params.n_devices
     );
 
     // optional: persist the model

@@ -8,15 +8,30 @@
 //! scoring inside the booster, and as the parity oracle for the XLA path.
 
 use crate::data::DMatrix;
+use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::tree::RegTree;
 use crate::Float;
 
 /// Accumulate one tree's predictions into `margins` (length n_rows).
 pub fn accumulate_tree(tree: &RegTree, x: &DMatrix, margins: &mut [Float]) {
+    accumulate_tree_par(tree, x, margins, &ExecContext::serial());
+}
+
+/// Chunk-parallel [`accumulate_tree`] — one worker per row chunk (the
+/// paper's one-thread-per-instance mapping, batched). Per-row traversal
+/// is independent, so results are bit-identical at every thread count.
+pub fn accumulate_tree_par(
+    tree: &RegTree,
+    x: &DMatrix,
+    margins: &mut [Float],
+    exec: &ExecContext,
+) {
     debug_assert_eq!(margins.len(), x.n_rows());
-    for (row, m) in margins.iter_mut().enumerate() {
-        *m += tree.predict_row(x, row);
-    }
+    exec.for_each_slice_mut(margins, ROW_CHUNK, |_, start, chunk| {
+        for (k, m) in chunk.iter_mut().enumerate() {
+            *m += tree.predict_row(x, start + k);
+        }
+    });
 }
 
 /// Predict raw margins for a forest grouped by output
@@ -26,12 +41,30 @@ pub fn predict_margins(
     base_score: &[Float],
     x: &DMatrix,
 ) -> Vec<Vec<Float>> {
+    predict_margins_par(trees, base_score, x, &ExecContext::serial())
+}
+
+/// Chunk-parallel [`predict_margins`]; bit-identical to the serial path.
+/// Rows are chunked once per output group and each worker iterates the
+/// whole forest for its rows (per-row tree order unchanged), rather than
+/// paying a pool dispatch per tree.
+pub fn predict_margins_par(
+    trees: &[Vec<RegTree>],
+    base_score: &[Float],
+    x: &DMatrix,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>> {
     let n = x.n_rows();
     let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
     for (k, group) in trees.iter().enumerate() {
-        for tree in group {
-            accumulate_tree(tree, x, &mut out[k]);
-        }
+        exec.for_each_slice_mut(&mut out[k], ROW_CHUNK, |_, start, chunk| {
+            for (i, m) in chunk.iter_mut().enumerate() {
+                let row = start + i;
+                for tree in group {
+                    *m += tree.predict_row(x, row);
+                }
+            }
+        });
     }
     out
 }

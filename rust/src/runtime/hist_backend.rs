@@ -13,6 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::device::{DeviceShard, HistBackend, ShardStorage};
+use crate::exec::ExecContext;
 use crate::hist::Histogram;
 use crate::runtime::Artifacts;
 use crate::Float;
@@ -89,11 +90,15 @@ impl XlaHistBackend {
 }
 
 impl HistBackend for XlaHistBackend {
+    // `exec` is ignored: the PJRT client is Rc-based, so this backend is
+    // pinned to the coordinator's executor thread (`as_parallel` stays at
+    // the default `None` and the device loop runs serially).
     fn build_histogram(
         &mut self,
         shard: &DeviceShard,
         rows: &[u32],
         out: &mut Histogram,
+        _exec: &ExecContext,
     ) -> Result<()> {
         let m = self.artifacts.manifest.clone();
         let n_bins = out.n_bins();
@@ -171,11 +176,12 @@ mod tests {
         let n_bins = c.n_bins();
         let mut h_native = Histogram::zeros(n_bins);
         let mut h_xla = Histogram::zeros(n_bins);
+        let exec = ExecContext::serial();
         NativeBackend
-            .build_histogram(&shard_owned, &rows, &mut h_native)
+            .build_histogram(&shard_owned, &rows, &mut h_native, &exec)
             .unwrap();
         XlaHistBackend::new(a)
-            .build_histogram(&shard_owned, &rows, &mut h_xla)
+            .build_histogram(&shard_owned, &rows, &mut h_xla, &exec)
             .unwrap();
         for (i, (n, x)) in h_native.bins.iter().zip(h_xla.bins.iter()).enumerate() {
             assert!(
@@ -208,8 +214,13 @@ mod tests {
         let n_bins = c.n_bins();
         let mut h_native = Histogram::zeros(n_bins);
         let mut h_xla = Histogram::zeros(n_bins);
-        NativeBackend.build_histogram(&shard, &rows, &mut h_native).unwrap();
-        XlaHistBackend::new(a).build_histogram(&shard, &rows, &mut h_xla).unwrap();
+        let exec = ExecContext::serial();
+        NativeBackend
+            .build_histogram(&shard, &rows, &mut h_native, &exec)
+            .unwrap();
+        XlaHistBackend::new(a)
+            .build_histogram(&shard, &rows, &mut h_xla, &exec)
+            .unwrap();
         for (i, (n, x)) in h_native.bins.iter().zip(h_xla.bins.iter()).enumerate() {
             assert!(
                 (n.grad - x.grad).abs() < 1e-2 && (n.hess - x.hess).abs() < 1e-2,

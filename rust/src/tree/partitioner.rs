@@ -10,6 +10,7 @@
 //! linear.
 
 use crate::compress::CompressedMatrix;
+use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::split::SplitCandidate;
 
@@ -164,17 +165,58 @@ impl RowPartitioner {
         bins: &BinSource<'_>,
         cuts: &HistogramCuts,
     ) -> (usize, usize) {
+        self.apply_split_par(nid, split, left, right, bins, cuts, &ExecContext::serial())
+    }
+
+    /// Chunk-parallel [`apply_split`](Self::apply_split): the node's
+    /// segment is cut into fixed chunks, each chunk stably partitioned on
+    /// a worker, and the per-chunk left/right runs concatenated in chunk
+    /// order — exactly the serial stable partition, so the resulting row
+    /// layout is identical at every thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_split_par(
+        &mut self,
+        nid: usize,
+        split: &SplitCandidate,
+        left: usize,
+        right: usize,
+        bins: &BinSource<'_>,
+        cuts: &HistogramCuts,
+        exec: &ExecContext,
+    ) -> (usize, usize) {
         let seg = self.segments[nid].expect("splitting an untracked node");
-        let slice = &self.rows[seg.begin..seg.end];
+        let n = seg.len();
         self.scratch.clear();
         self.scratch_right.clear();
-        self.scratch.reserve(slice.len());
-        // single stable pass: each row's routing decision evaluated once
-        for &r in slice {
-            if Self::goes_left(r, split, bins, cuts) {
-                self.scratch.push(r);
-            } else {
-                self.scratch_right.push(r);
+        self.scratch.reserve(n);
+        let slice = &self.rows[seg.begin..seg.end];
+        if exec.threads() <= 1 || n <= ROW_CHUNK {
+            // single stable pass: each row's routing decision evaluated once
+            for &r in slice {
+                if Self::goes_left(r, split, bins, cuts) {
+                    self.scratch.push(r);
+                } else {
+                    self.scratch_right.push(r);
+                }
+            }
+        } else {
+            let parts: Vec<(Vec<u32>, Vec<u32>)> = exec.map_chunks(n, ROW_CHUNK, |_, range| {
+                let mut l = Vec::with_capacity(range.len());
+                let mut r = Vec::new();
+                for &row in &slice[range] {
+                    if Self::goes_left(row, split, bins, cuts) {
+                        l.push(row);
+                    } else {
+                        r.push(row);
+                    }
+                }
+                (l, r)
+            });
+            for (l, _) in &parts {
+                self.scratch.extend_from_slice(l);
+            }
+            for (_, r) in &parts {
+                self.scratch_right.extend_from_slice(r);
             }
         }
         let n_left = self.scratch.len();
@@ -365,6 +407,29 @@ mod tests {
         // and feature 0: rows 0,1 present, row 2 missing
         assert!(src.feature_bin(0, 0, &cuts).is_some());
         assert_eq!(src.feature_bin(2, 0, &cuts), None);
+    }
+
+    #[test]
+    fn parallel_split_identical_to_serial() {
+        // big enough for several chunks; interleaved values so both sides
+        // of the split are populated in every chunk
+        let n = 40_000usize;
+        let vals: Vec<Float> = (0..n).map(|i| (i % 64) as Float).collect();
+        let x = DMatrix::dense(vals, n, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let src = BinSource::Quantized(&qm);
+        let split = split_at_bin(5);
+        let mut serial = RowPartitioner::new(n);
+        let (sl, sr) = serial.apply_split(0, &split, 1, 2, &src, &cuts);
+        for t in [2usize, 4, 8] {
+            let exec = ExecContext::new(t);
+            let mut par = RowPartitioner::new(n);
+            let (pl, pr) = par.apply_split_par(0, &split, 1, 2, &src, &cuts, &exec);
+            assert_eq!((pl, pr), (sl, sr), "threads = {t}");
+            assert_eq!(par.node_rows(1), serial.node_rows(1), "threads = {t}");
+            assert_eq!(par.node_rows(2), serial.node_rows(2), "threads = {t}");
+        }
     }
 
     #[test]

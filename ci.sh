@@ -41,4 +41,29 @@ for t in 1 2 4; do
         --num-rounds 3 --max-bins 32 --n-devices 2 --threads "$t"
 done
 
+# Streaming-ingest smoke: train from a generated LibSVM file through the
+# out-of-core pipeline (--stream --batch-rows 32) and require the exact
+# same final eval metric as the in-memory run over the same file
+# (--valid-frac 0 keeps the file's row order, so the two are comparable
+# bit-for-bit).
+echo "==> streaming-ingest smoke (CLI)"
+SMOKE_DIR=$(mktemp -d)
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+./target/release/xgb-tpu export --dataset higgs --rows 3000 \
+    --format libsvm --out "$SMOKE_DIR/higgs.libsvm"
+SMOKE_FLAGS=(--libsvm "$SMOKE_DIR/higgs.libsvm" --objective binary:logistic
+             --num-rounds 3 --max-bins 32 --n-devices 2 --valid-frac 0)
+# `|| true`: a crashed run (no `final:` line) must reach the explicit
+# mismatch check below instead of silently aborting via set -e/pipefail
+MEM_FINAL=$(./target/release/xgb-tpu train "${SMOKE_FLAGS[@]}" 2>/dev/null \
+    | grep '^final:' || true)
+STREAM_FINAL=$(./target/release/xgb-tpu train "${SMOKE_FLAGS[@]}" \
+    --stream --batch-rows 32 2>/dev/null | grep '^final:' || true)
+echo "in-memory: $MEM_FINAL"
+echo "streaming: $STREAM_FINAL"
+if [[ -z "$MEM_FINAL" || "$MEM_FINAL" != "$STREAM_FINAL" ]]; then
+    echo "FAIL: streaming eval metric does not match the in-memory run"
+    exit 1
+fi
+
 echo "CI OK"

@@ -1,10 +1,17 @@
-//! Memory-footprint reproduction (M1 + A1 in DESIGN.md §4):
+//! Memory-footprint reproduction (M1 + A1 in DESIGN.md §4) plus the
+//! streaming-ingestion transient-memory trajectory:
 //!
 //! * §2.2's "compression ... typically reduces GPU memory consumption by
 //!   four times or more over the standard floating point representation",
 //! * §3's "After compression and distributing training rows between 8
 //!   GPUs, we only require 600MB per GPU to store the entire [airline]
-//!   matrix".
+//!   matrix",
+//! * the out-of-core contract: streaming ingestion's peak transient
+//!   (non-packed) bytes are bounded by the batch size, not the dataset
+//!   size — compared per dataset against the in-memory path's transient
+//!   footprint (full float matrix + full u32 bin matrix) and emitted as
+//!   the tracked trajectory artifact `BENCH_memory.json` (override the
+//!   path with `XGB_BENCH_OUT`; batch rows with `XGB_BENCH_BATCH_ROWS`).
 //!
 //! Measures the packed bytes of each dataset's ELLPACK matrix at bench
 //! scale and projects the airline number analytically to the paper's full
@@ -14,9 +21,14 @@ use xgb_tpu::bench::Table;
 use xgb_tpu::compress::CompressedMatrix;
 use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::DMatrixSource;
 use xgb_tpu::quantile::{HistogramCuts, Quantizer};
 
 fn env_f64(k: &str, d: f64) -> f64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
 }
 
@@ -63,6 +75,71 @@ fn main() -> anyhow::Result<()> {
          representation\n(8-byte CSR (index,value) entries — Mitchell & Frank 2017) at \
          {max_bins} bins/feature;\nratio = 64 / ceil(log2(total_bins+1))."
     );
+
+    // Streaming vs in-memory transient footprint: the in-memory path once
+    // materialized the full float matrix plus the full u32 bin matrix
+    // before the first packed word existed; the streaming pipeline holds
+    // only one batch of floats + symbols at a time.
+    let batch_rows = env_usize("XGB_BENCH_BATCH_ROWS", 8192);
+    println!(
+        "\n=== M2: ingestion peak transient (non-packed) bytes — in-memory vs \
+         streaming (batch_rows={batch_rows}) ===\n"
+    );
+    let mut t2 = Table::new(&[
+        "Dataset", "Rows", "inmem transient MB", "stream transient MB", "reduction",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for spec in DatasetSpec::table1(scale) {
+        let g = generate(&spec, 42);
+        let params = CoordinatorParams {
+            n_devices: 1,
+            compress: true,
+            max_bins,
+            ..Default::default()
+        };
+        let mut src = DMatrixSource::from_dataset(&g.train, batch_rows);
+        let (coord, meta) = MultiDeviceCoordinator::from_source(&mut src, params)?;
+        let packed: usize = coord.device_bytes().iter().sum();
+        // in-memory transient: the whole float matrix + the whole u32 bin
+        // matrix (rows × stride × 4) existed simultaneously pre-refactor
+        let stride = coord.devices[0].storage.row_stride();
+        let inmem_transient = g.train.x.float_bytes() + g.train.n_rows() * stride * 4;
+        let stream_transient = meta.peak_transient_bytes;
+        let reduction = inmem_transient as f64 / stream_transient.max(1) as f64;
+        t2.add_row(vec![
+            spec.name.into(),
+            format!("{}", g.train.n_rows()),
+            format!("{:.2}", inmem_transient as f64 / 1e6),
+            format!("{:.2}", stream_transient as f64 / 1e6),
+            format!("{reduction:.1}x"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"name\": \"{}\", \"rows\": {}, \"batch_rows\": {}, \
+             \"packed_bytes\": {}, \"inmem_transient_bytes\": {}, \
+             \"stream_transient_bytes\": {}, \"reduction\": {:.3}}}",
+            spec.name,
+            g.train.n_rows(),
+            batch_rows,
+            packed,
+            inmem_transient,
+            stream_transient,
+            reduction
+        ));
+    }
+    print!("{}", t2.render());
+    let out_path =
+        std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"memory_footprint\",\n");
+    json.push_str(&format!("  \"scale\": {scale},\n"));
+    json.push_str(&format!("  \"max_bins\": {max_bins},\n"));
+    json.push_str(&format!("  \"batch_rows\": {batch_rows},\n"));
+    json.push_str("  \"datasets\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    eprintln!("wrote {out_path}");
 
     // M1: airline per-device bytes, measured at bench scale + projection
     println!("\n=== M1: airline per-device footprint (paper: ~600 MB/GPU at 115M rows) ===\n");

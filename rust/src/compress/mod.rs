@@ -181,6 +181,116 @@ impl CompressedMatrix {
     }
 }
 
+/// Incremental row-by-row packer — the append API of the out-of-core
+/// ingestion pipeline (pass 2 bit-packs each streamed batch **directly**
+/// into the owning device shard's pages; no `QuantizedMatrix` is ever
+/// materialized).
+///
+/// The word layout is identical to [`CompressedMatrix::from_quantized`]:
+/// the packed buffer is preallocated to `ceil(n_rows·row_stride·bits/64)`
+/// words plus the branch-free pad word, and symbols are OR-ed at the same
+/// bit offsets — so a streamed shard is bit-for-bit equal to packing the
+/// materialized matrix (pinned by `streamed_builder_matches_bulk_pack`).
+#[derive(Debug, Clone)]
+pub struct CompressedMatrixBuilder {
+    words: Vec<u64>,
+    symbol_bits: u32,
+    n_rows: usize,
+    n_features: usize,
+    row_stride: usize,
+    n_bins: usize,
+    dense: bool,
+    /// Symbols written so far.
+    cursor: usize,
+}
+
+impl CompressedMatrixBuilder {
+    /// Start a packer for a shard of known shape. The alphabet is
+    /// `n_bins` real symbols plus the null/padding symbol, exactly as in
+    /// [`CompressedMatrix::from_quantized`].
+    pub fn new(
+        n_rows: usize,
+        n_features: usize,
+        row_stride: usize,
+        n_bins: usize,
+        dense: bool,
+    ) -> Self {
+        let symbol_bits = bits_for_symbols(n_bins + 1);
+        let total_bits = (n_rows * row_stride) as u64 * symbol_bits as u64;
+        let n_words = total_bits.div_ceil(64) as usize;
+        CompressedMatrixBuilder {
+            words: vec![0u64; n_words + 1], // +1 pad word for branch-free reads
+            symbol_bits,
+            n_rows,
+            n_features,
+            row_stride,
+            n_bins,
+            dense,
+            cursor: 0,
+        }
+    }
+
+    #[inline]
+    fn push_symbol(&mut self, sym: u32) {
+        debug_assert!((sym as usize) <= self.n_bins, "symbol out of alphabet");
+        let bit = self.cursor as u64 * self.symbol_bits as u64;
+        let word = (bit / 64) as usize;
+        let off = (bit % 64) as u32;
+        self.words[word] |= (sym as u64) << off;
+        if off + self.symbol_bits > 64 {
+            self.words[word + 1] |= (sym as u64) >> (64 - off);
+        }
+        self.cursor += 1;
+    }
+
+    /// Append one row. Rows shorter than the stride (sparse ELLPACK) are
+    /// padded with the null symbol; dense rows must fill the stride.
+    pub fn push_row(&mut self, symbols: &[u32]) {
+        assert!(
+            symbols.len() <= self.row_stride,
+            "row has {} symbols but stride is {}",
+            symbols.len(),
+            self.row_stride
+        );
+        for &s in symbols {
+            self.push_symbol(s);
+        }
+        let null = self.n_bins as u32;
+        for _ in symbols.len()..self.row_stride {
+            self.push_symbol(null);
+        }
+    }
+
+    /// Rows appended so far.
+    pub fn rows_filled(&self) -> usize {
+        if self.row_stride == 0 {
+            0
+        } else {
+            self.cursor / self.row_stride
+        }
+    }
+
+    /// Finish packing; panics if fewer rows were appended than declared.
+    pub fn finish(self) -> CompressedMatrix {
+        assert_eq!(
+            self.cursor,
+            self.n_rows * self.row_stride,
+            "builder finished with {} of {} symbols",
+            self.cursor,
+            self.n_rows * self.row_stride
+        );
+        CompressedMatrix {
+            words: self.words,
+            symbol_bits: self.symbol_bits,
+            n_rows: self.n_rows,
+            n_features: self.n_features,
+            row_stride: self.row_stride,
+            n_bins: self.n_bins,
+            dense: self.dense,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +439,48 @@ mod tests {
         let cm = CompressedMatrix::from_quantized(&qm);
         assert_eq!(cm.symbol_bits, 1);
         assert_eq!(cm.decode().bins, qm.bins);
+    }
+
+    #[test]
+    fn streamed_builder_matches_bulk_pack() {
+        // the streaming append path must produce the exact words that
+        // packing a materialized QuantizedMatrix does — the shard-level
+        // half of the streaming-ingestion bit-identity contract
+        for (n_rows, n_cols, max_bins, seed) in
+            [(100usize, 7usize, 16usize, 1u64), (400, 40, 256, 2), (33, 3, 4, 3)]
+        {
+            let qm = random_quantized(n_rows, n_cols, max_bins, seed);
+            let bulk = CompressedMatrix::from_quantized(&qm);
+            let mut b = CompressedMatrixBuilder::new(
+                qm.n_rows,
+                qm.n_features,
+                qm.row_stride,
+                qm.n_bins,
+                qm.dense,
+            );
+            for r in 0..qm.n_rows {
+                b.push_row(qm.row(r));
+            }
+            assert_eq!(b.rows_filled(), qm.n_rows);
+            let streamed = b.finish();
+            assert_eq!(streamed.words, bulk.words, "packed words must be identical");
+            assert_eq!(streamed.symbol_bits, bulk.symbol_bits);
+            assert_eq!(streamed.decode().bins, qm.bins);
+        }
+    }
+
+    #[test]
+    fn builder_pads_short_rows_with_null() {
+        // sparse ELLPACK append: a 2-symbol row into a stride-4 shard
+        let mut b = CompressedMatrixBuilder::new(2, 5, 4, 9, false);
+        b.push_row(&[3, 7]);
+        b.push_row(&[0, 1, 2, 8]);
+        let cm = b.finish();
+        assert_eq!(cm.get(0, 0), Some(3));
+        assert_eq!(cm.get(0, 1), Some(7));
+        assert_eq!(cm.get(0, 2), None, "padding decodes as null");
+        assert_eq!(cm.get(0, 3), None);
+        assert_eq!(cm.get(1, 3), Some(8));
     }
 
     #[test]

@@ -10,12 +10,12 @@ use anyhow::{ensure, Result};
 use crate::comm::{allreduce, CostModel};
 use crate::coordinator::device::{DeviceShard, HistBackend, NativeBackend, ShardStorage};
 use crate::coordinator::CoordinatorParams;
-use crate::compress::CompressedMatrix;
+use crate::compress::CompressedMatrixBuilder;
+use crate::data::source::{scan_source, BatchSource, DMatrixSource, IngestMeta, DEFAULT_BATCH_ROWS};
 use crate::data::DMatrix;
-use crate::exec::ExecContext;
+use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::hist::{subtract, GradPairF64, Histogram};
-use crate::quantile::{HistogramCuts, Quantizer, WQSummary};
-use crate::quantile::sketch::SketchBuilder;
+use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::{ExpandEntry, GrowthPolicy, PolicyQueue, RegTree, SplitEvaluator};
 use crate::{Float, GradPair};
 
@@ -131,9 +131,11 @@ pub struct MultiDeviceCoordinator {
 }
 
 impl MultiDeviceCoordinator {
-    /// Shard `x` over `params.n_devices` devices, run the distributed
-    /// quantile sketch (per-device sketch + merge — the multi-GPU §2.1
-    /// pipeline), quantise and optionally compress every shard.
+    /// Shard `x` over `params.n_devices` devices through the streaming
+    /// ingestion pipeline: sketch, quantise and optionally compress —
+    /// an adapter over [`MultiDeviceCoordinator::from_source`] with an
+    /// in-memory [`DMatrixSource`], so every construction path shares one
+    /// implementation.
     pub fn from_dmatrix(x: &DMatrix, params: CoordinatorParams) -> Result<Self> {
         Self::with_backend(x, params, Box::new(NativeBackend))
     }
@@ -148,46 +150,87 @@ impl MultiDeviceCoordinator {
         Self::with_cuts(x, params, cuts, backend)
     }
 
-    /// Distributed quantile generation (§2.1 multi-GPU pipeline): each
-    /// device sketches its shard's columns — one pool task per column, the
-    /// per-worker `WQSummary`s folded back with the existing sketch merge
-    /// op — then per-device sketches are merged in fixed device order (the
-    /// same reduction a real deployment would all-reduce). The task
-    /// boundaries and merge order depend only on the data layout, so cuts
-    /// are identical at every thread count.
+    /// **Streaming construction** (the out-of-core path): two passes over
+    /// `src`. Pass 1 ([`scan_source`]) folds every batch into the
+    /// per-column quantile sketch and collects labels/groups/row widths;
+    /// pass 2 re-streams the source, quantises each batch against the
+    /// frozen cuts and bit-packs it **directly into the owning device
+    /// shard's pages** — the raw float matrix never materializes. The
+    /// returned [`IngestMeta`] carries the labels (feature-less training
+    /// substrate) and the measured peak transient bytes.
+    ///
+    /// Models built this way are bit-identical to the in-memory
+    /// [`from_dmatrix`](Self::from_dmatrix) construction for every batch
+    /// size and thread count (`rust/tests/streaming_ingest.rs`).
+    pub fn from_source(
+        src: &mut dyn BatchSource,
+        params: CoordinatorParams,
+    ) -> Result<(Self, IngestMeta)> {
+        Self::from_source_with_backend(src, params, Box::new(NativeBackend))
+    }
+
+    /// [`from_source`](Self::from_source) with an explicit histogram
+    /// backend.
+    pub fn from_source_with_backend(
+        src: &mut dyn BatchSource,
+        params: CoordinatorParams,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<(Self, IngestMeta)> {
+        let p = params.n_devices;
+        ensure!(p >= 1, "need at least one device");
+        let exec = ExecContext::new(params.threads);
+
+        // pass 1: incremental sketch + O(n) metadata
+        let (cuts, mut meta) = scan_source(src, params.max_bins, &exec)?;
+        let n = meta.n_rows;
+        ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
+
+        // pass 2: re-stream, quantise, pack straight into shard pages
+        src.reset()?;
+        let bounds: Vec<usize> = (0..=p).map(|d| d * n / p).collect();
+        let strides = if meta.dense {
+            vec![meta.n_cols; p]
+        } else {
+            shard_strides(&meta.row_nnz, &bounds)
+        };
+        let (devices, pass2_peak) = assemble_shards(
+            src,
+            &cuts,
+            meta.col_shift,
+            meta.n_cols,
+            &bounds,
+            &strides,
+            meta.dense,
+            params.compress,
+            &exec,
+        )?;
+        meta.peak_transient_bytes = meta.peak_batch_float_bytes.max(pass2_peak);
+        Ok((Self::assembled(params, cuts, devices, n, backend, exec), meta))
+    }
+
+    /// Quantile cut generation over the streaming fold: one incremental
+    /// per-column sketch fed in global row order
+    /// ([`crate::quantile::StreamingSketch`]), chunk-parallel over
+    /// columns. The push sequence per column depends only on the data —
+    /// never on the batch size, device count or thread count — so the
+    /// same dataset always quantises identically, whether it arrives from
+    /// a file stream or an in-memory matrix.
     pub fn distributed_cuts(x: &DMatrix, params: &CoordinatorParams) -> Result<HistogramCuts> {
         let p = params.n_devices;
         ensure!(p >= 1, "need at least one device");
         let n = x.n_rows();
         ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
         let exec = ExecContext::new(params.threads);
-        let bounds: Vec<usize> = (0..=p).map(|d| d * n / p).collect();
-        let limit = (params.max_bins * 8).max(64);
-        let mut merged: Vec<SketchBuilder> =
-            (0..x.n_cols()).map(|_| SketchBuilder::new(limit)).collect();
-        for d in 0..p {
-            let lo = bounds[d];
-            let hi = bounds[d + 1];
-            let local: Vec<SketchBuilder> = exec.run_indexed(x.n_cols(), |col| {
-                let mut b = SketchBuilder::new(limit);
-                x.for_each_in_column(col, |row, v| {
-                    if row >= lo && row < hi {
-                        b.push(v, 1.0);
-                    }
-                });
-                b
-            });
-            for (m, l) in merged.iter_mut().zip(local.into_iter()) {
-                m.merge(l);
-            }
-        }
-        let summaries: Vec<WQSummary> = merged.into_iter().map(|b| b.finish()).collect();
-        Ok(HistogramCuts::from_summaries(&summaries, params.max_bins))
+        let mut src = DMatrixSource::new(x, DEFAULT_BATCH_ROWS);
+        let (cuts, _meta) = scan_source(&mut src, params.max_bins, &exec)?;
+        Ok(cuts)
     }
 
     /// Construct with externally supplied cuts (shared across coordinators
     /// for cross-device-count determinism tests, or reused across boosting
-    /// iterations).
+    /// iterations). An adapter over the streaming pass-2 assembler with an
+    /// in-memory source: shards are quantised and packed batch-wise, never
+    /// materializing the full u32 bin matrix.
     pub fn with_cuts(
         x: &DMatrix,
         params: CoordinatorParams,
@@ -200,34 +243,49 @@ impl MultiDeviceCoordinator {
         ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
         let exec = ExecContext::new(params.threads);
         let bounds: Vec<usize> = (0..=p).map(|d| d * n / p).collect();
-        let quantizer = Quantizer::new(cuts.clone());
+        let (dense, strides) = match x {
+            DMatrix::Dense { .. } => (true, vec![x.n_cols(); p]),
+            DMatrix::Csr { indptr, .. } => {
+                let nnz: Vec<u32> = (0..n).map(|r| (indptr[r + 1] - indptr[r]) as u32).collect();
+                (false, shard_strides(&nnz, &bounds))
+            }
+        };
+        let mut src = DMatrixSource::new(x, DEFAULT_BATCH_ROWS);
+        let (devices, _peak) = assemble_shards(
+            &mut src,
+            &cuts,
+            0,
+            x.n_cols(),
+            &bounds,
+            &strides,
+            dense,
+            params.compress,
+            &exec,
+        )?;
+        Ok(Self::assembled(params, cuts, devices, n, backend, exec))
+    }
 
-        // quantise + compress every shard concurrently (one task per
-        // device, each shard's content independent of the others)
-        let devices: Vec<DeviceShard> = exec.run_indexed(p, |d| {
-            let rows: Vec<usize> = (bounds[d]..bounds[d + 1]).collect();
-            let shard_x = x.take_rows(&rows);
-            let qm = quantizer.quantize(&shard_x);
-            let storage = if params.compress {
-                ShardStorage::Compressed(CompressedMatrix::from_quantized(&qm))
-            } else {
-                ShardStorage::Quantized(qm)
-            };
-            DeviceShard::new(d, bounds[d], storage)
-        });
-
+    /// Final assembly shared by every construction path.
+    fn assembled(
+        params: CoordinatorParams,
+        cuts: HistogramCuts,
+        devices: Vec<DeviceShard>,
+        n_rows: usize,
+        backend: Box<dyn HistBackend>,
+        exec: ExecContext,
+    ) -> Self {
         let evaluator = SplitEvaluator::new(params.tree.clone());
         let col_rng = crate::util::Pcg64::new(params.seed ^ 0xc01_5a3f);
-        Ok(MultiDeviceCoordinator {
+        MultiDeviceCoordinator {
             params,
             cuts,
             devices,
             backend,
             evaluator,
-            n_rows: n,
+            n_rows,
             col_rng,
             exec,
-        })
+        }
     }
 
     /// Draw the per-tree feature mask (`None` when colsample is off).
@@ -549,6 +607,211 @@ impl MultiDeviceCoordinator {
     }
 }
 
+/// Per-shard ELLPACK strides for a sparse stream: the maximum present
+/// count of any row inside each shard's contiguous range (min 1, matching
+/// the quantizer's degenerate-row rule).
+fn shard_strides(row_nnz: &[u32], bounds: &[usize]) -> Vec<usize> {
+    bounds
+        .windows(2)
+        .map(|w| {
+            row_nnz[w[0]..w[1]]
+                .iter()
+                .copied()
+                .max()
+                .unwrap_or(0)
+                .max(1) as usize
+        })
+        .collect()
+}
+
+/// Incremental shard storage: rows append in global order, padded to the
+/// shard's ELLPACK stride, either as raw u32 bins or bit-packed pages.
+enum ShardBuilder {
+    Quantized {
+        bins: Vec<u32>,
+        n_rows: usize,
+        n_features: usize,
+        row_stride: usize,
+        n_bins: usize,
+        dense: bool,
+    },
+    Compressed(CompressedMatrixBuilder),
+}
+
+impl ShardBuilder {
+    fn new(
+        n_rows: usize,
+        n_features: usize,
+        row_stride: usize,
+        n_bins: usize,
+        dense: bool,
+        compress: bool,
+    ) -> Self {
+        if compress {
+            ShardBuilder::Compressed(CompressedMatrixBuilder::new(
+                n_rows, n_features, row_stride, n_bins, dense,
+            ))
+        } else {
+            ShardBuilder::Quantized {
+                bins: Vec::with_capacity(n_rows * row_stride),
+                n_rows,
+                n_features,
+                row_stride,
+                n_bins,
+                dense,
+            }
+        }
+    }
+
+    fn push_row(&mut self, symbols: &[u32]) {
+        match self {
+            ShardBuilder::Quantized {
+                bins,
+                row_stride,
+                n_bins,
+                ..
+            } => {
+                // hard check: a pass-2 row wider than the pass-1 stride
+                // (replay-contract violation) must fail loudly, not wrap
+                // the resize length and silently corrupt the shard
+                assert!(
+                    symbols.len() <= *row_stride,
+                    "row has {} symbols but stride is {}",
+                    symbols.len(),
+                    *row_stride
+                );
+                bins.extend_from_slice(symbols);
+                bins.resize(bins.len() + (*row_stride - symbols.len()), *n_bins as u32);
+            }
+            ShardBuilder::Compressed(b) => b.push_row(symbols),
+        }
+    }
+
+    fn finish(self) -> ShardStorage {
+        match self {
+            ShardBuilder::Quantized {
+                bins,
+                n_rows,
+                n_features,
+                row_stride,
+                n_bins,
+                dense,
+            } => {
+                debug_assert_eq!(bins.len(), n_rows * row_stride);
+                ShardStorage::Quantized(QuantizedMatrix {
+                    bins,
+                    n_rows,
+                    n_features,
+                    row_stride,
+                    n_bins,
+                    dense,
+                })
+            }
+            ShardBuilder::Compressed(b) => ShardStorage::Compressed(b.finish()),
+        }
+    }
+}
+
+/// **Pass 2** of the streaming pipeline: re-stream the source, quantise
+/// each batch against the frozen cuts (chunk-parallel; chunk boundaries
+/// depend only on the batch size, so results are thread-count-invariant)
+/// and append every row to its owning device shard. Returns the shards
+/// plus the peak transient bytes of this pass (batch floats + symbol
+/// scratch — the quantities the O(`batch_rows × n_cols`) contract bounds).
+#[allow(clippy::too_many_arguments)]
+fn assemble_shards(
+    src: &mut dyn BatchSource,
+    cuts: &HistogramCuts,
+    col_shift: u32,
+    n_cols: usize,
+    bounds: &[usize],
+    strides: &[usize],
+    dense: bool,
+    compress: bool,
+    exec: &ExecContext,
+) -> Result<(Vec<DeviceShard>, usize)> {
+    let p = strides.len();
+    let n_bins = cuts.total_bins();
+    let null = n_bins as u32;
+    let shift = col_shift as usize;
+    let total = *bounds.last().unwrap();
+    let mut builders: Vec<ShardBuilder> = (0..p)
+        .map(|d| {
+            ShardBuilder::new(
+                bounds[d + 1] - bounds[d],
+                n_cols,
+                strides[d],
+                n_bins,
+                dense,
+                compress,
+            )
+        })
+        .collect();
+
+    let mut next_row = 0usize;
+    let mut dev = 0usize;
+    let mut peak = 0usize;
+    while let Some(batch) = src.next_batch()? {
+        let b_rows = batch.n_rows();
+        ensure!(
+            next_row + b_rows <= total,
+            "pass 2 replay yielded more rows than pass 1 saw"
+        );
+        // quantise the batch into one flat symbol buffer + per-row counts
+        // per chunk (dense rows carry the full positional stride incl.
+        // nulls; sparse rows are packed and padded by the shard builder).
+        // A flat buffer, not a Vec per row: pass 2 is the out-of-core
+        // ingest hot loop and must not heap-allocate per dataset row.
+        let sym_chunks: Vec<(Vec<u32>, Vec<u32>)> =
+            exec.map_chunks(b_rows, ROW_CHUNK, |_, range| {
+                let mut flat: Vec<u32> = Vec::with_capacity(range.len() * n_cols.max(4));
+                let mut lens: Vec<u32> = Vec::with_capacity(range.len());
+                for i in range {
+                    let start = flat.len();
+                    if dense {
+                        flat.resize(start + n_cols, null);
+                        for (f, v) in batch.x.iter_row(i) {
+                            flat[start + f] = cuts.bin_index(f, v);
+                        }
+                    } else {
+                        for (c, v) in batch.x.iter_row(i) {
+                            flat.push(cuts.bin_index(c - shift, v));
+                        }
+                    }
+                    lens.push((flat.len() - start) as u32);
+                }
+                (flat, lens)
+            });
+        let sym_bytes: usize = sym_chunks
+            .iter()
+            .map(|(flat, lens)| (flat.len() + lens.len()) * std::mem::size_of::<u32>())
+            .sum();
+        peak = peak.max(batch.x.float_bytes() + sym_bytes);
+        for (flat, lens) in &sym_chunks {
+            let mut off = 0usize;
+            for &len in lens {
+                let row_syms = &flat[off..off + len as usize];
+                off += len as usize;
+                while next_row >= bounds[dev + 1] {
+                    dev += 1;
+                }
+                builders[dev].push_row(row_syms);
+                next_row += 1;
+            }
+        }
+    }
+    ensure!(
+        next_row == total,
+        "pass 2 replay yielded {next_row} rows, pass 1 saw {total}"
+    );
+    let devices: Vec<DeviceShard> = builders
+        .into_iter()
+        .enumerate()
+        .map(|(d, b)| DeviceShard::new(d, bounds[d], b.finish()))
+        .collect();
+    Ok((devices, peak))
+}
+
 /// Convenience: cost-model-only scaling projection. Given measured
 /// single-device per-round compute and histogram size, project the
 /// simulated wall-clock for `p` devices (used by the Figure 2 bench for
@@ -616,8 +879,10 @@ mod tests {
         let g = generate(&DatasetSpec::higgs_like(3000), 7);
         let grads = logistic_grads(&g.train, &vec![0.0; g.train.n_rows()]);
         // shared cuts isolate the invariant: same quantisation => identical
-        // tree regardless of device count (the sketch itself merges in a
-        // p-dependent order and so differs slightly across p).
+        // tree regardless of device count. (Since the streaming-ingestion
+        // refactor the cuts themselves are device-count-invariant too —
+        // the sketch folds in global row order — so sharing is belt and
+        // braces here.)
         let cuts = MultiDeviceCoordinator::distributed_cuts(&g.train.x, &simple_params(1))
             .unwrap();
         let mut trees = Vec::new();
@@ -749,6 +1014,62 @@ mod tests {
                 Some((t, d)) => {
                     assert_eq!(&r.tree, t, "threads = {threads}");
                     assert_eq!(&r.deltas, d, "threads = {threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cuts_are_device_count_invariant() {
+        // the streaming sketch folds in global row order, so the device
+        // count no longer perturbs quantisation
+        let g = generate(&DatasetSpec::higgs_like(1000), 21);
+        let reference =
+            MultiDeviceCoordinator::distributed_cuts(&g.train.x, &simple_params(1)).unwrap();
+        for p in [2usize, 3, 8] {
+            let cuts =
+                MultiDeviceCoordinator::distributed_cuts(&g.train.x, &simple_params(p)).unwrap();
+            assert_eq!(cuts, reference, "p={p}");
+        }
+    }
+
+    #[test]
+    fn from_source_matches_from_dmatrix() {
+        use crate::data::source::DMatrixSource;
+        // streamed shards must be byte-identical to in-memory construction
+        // for every batch size, on dense and sparse data, packed or not
+        for (spec, seed) in [
+            (DatasetSpec::higgs_like(600), 23),
+            (DatasetSpec::bosch_like(400), 29),
+        ] {
+            let g = generate(&spec, seed);
+            for compress in [false, true] {
+                let mut params = simple_params(2);
+                params.compress = compress;
+                let reference =
+                    MultiDeviceCoordinator::from_dmatrix(&g.train.x, params.clone()).unwrap();
+                for batch in [7usize, 64, g.train.n_rows()] {
+                    let mut src = DMatrixSource::from_dataset(&g.train, batch);
+                    let (c, meta) =
+                        MultiDeviceCoordinator::from_source(&mut src, params.clone()).unwrap();
+                    assert_eq!(c.cuts, reference.cuts, "batch={batch}");
+                    assert_eq!(meta.n_rows, g.train.n_rows());
+                    assert_eq!(meta.labels, g.train.y);
+                    for (a, b) in c.devices.iter().zip(reference.devices.iter()) {
+                        assert_eq!(a.row_offset, b.row_offset);
+                        match (&a.storage, &b.storage) {
+                            (ShardStorage::Quantized(x), ShardStorage::Quantized(y)) => {
+                                assert_eq!(x.bins, y.bins, "batch={batch}");
+                                assert_eq!(x.row_stride, y.row_stride);
+                                assert_eq!(x.dense, y.dense);
+                            }
+                            (ShardStorage::Compressed(x), ShardStorage::Compressed(y)) => {
+                                assert_eq!(x.decode().bins, y.decode().bins, "batch={batch}");
+                                assert_eq!(x.bytes(), y.bytes());
+                            }
+                            _ => panic!("storage kind mismatch"),
+                        }
+                    }
                 }
             }
         }

@@ -1,9 +1,32 @@
 //! Multi-device decision tree construction — Algorithm 1 of the paper, the
 //! system's coordination contribution.
 //!
+//! # Ingestion: the two-pass streaming pipeline
+//!
 //! Each simulated device owns a contiguous shard of training rows in
-//! quantised (optionally bit-packed, §2.2) form. Per expanded node the
-//! coordinator:
+//! quantised (optionally bit-packed, §2.2) form. Shards are built by
+//! streaming the input through a [`crate::data::BatchSource`] twice
+//! ([`MultiDeviceCoordinator::from_source`]):
+//!
+//! * **pass 1** folds every bounded batch into the per-column incremental
+//!   quantile sketch ([`crate::data::scan_source`]) and collects labels,
+//!   qid groups and per-row widths — freezing the
+//!   [`crate::quantile::HistogramCuts`];
+//! * **pass 2** re-streams the source, quantises each batch against the
+//!   frozen cuts and appends each row's symbols straight into its shard's
+//!   bit-packed pages ([`crate::compress::CompressedMatrixBuilder`]).
+//!
+//! The raw float matrix never materializes: peak transient float bytes
+//! are O(`batch_rows × n_cols`). The legacy constructors
+//! ([`MultiDeviceCoordinator::from_dmatrix`] /
+//! [`MultiDeviceCoordinator::with_cuts`]) are thin adapters that wrap the
+//! in-memory matrix in a [`crate::data::DMatrixSource`] and ride the same
+//! pipeline, so streamed and in-memory construction are bit-identical by
+//! construction — for every batch size, device count and thread count.
+//!
+//! # Tree construction
+//!
+//! Per expanded node the coordinator:
 //!
 //! 1. `RepartitionInstances` — every device re-sorts its shard's rows into
 //!    the new leaves ([`crate::tree::RowPartitioner`]),

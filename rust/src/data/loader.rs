@@ -1,5 +1,11 @@
-//! File loaders: CSV (dense) and LibSVM (sparse), the two formats the
-//! paper's benchmark repository uses for its public datasets.
+//! File loaders and writers: CSV (dense) and LibSVM (sparse), the two
+//! formats the paper's benchmark repository uses for its public datasets.
+//!
+//! The per-line parsers ([`CsvLineParser`], [`parse_libsvm_line`]) are
+//! shared with the streaming [`crate::data::source`] readers, so the
+//! in-memory and out-of-core ingestion paths see byte-for-byte identical
+//! values — the precondition for the bit-identity contract between
+//! `Learner::train` and `Learner::train_from_source`.
 
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
@@ -22,50 +28,94 @@ pub fn load_csv(path: impl AsRef<Path>, label_col: usize, has_header: bool) -> R
     parse_csv(BufReader::new(file), label_col, has_header)
 }
 
-/// CSV parser over any reader (unit-testable without files).
-pub fn parse_csv(reader: impl Read, label_col: usize, has_header: bool) -> Result<Dataset> {
-    let reader = BufReader::new(reader);
-    let mut values: Vec<Float> = Vec::new();
-    let mut labels: Vec<Float> = Vec::new();
-    let mut n_cols_file: Option<usize> = None;
+/// Stateful CSV line parser: tracks the field count of the first data line
+/// and rejects ragged rows. One instance per file pass (the streaming
+/// reader keeps it across batches).
+#[derive(Debug, Clone)]
+pub(crate) struct CsvLineParser {
+    pub label_col: usize,
+    /// Fields per line, fixed by the first data line.
+    pub n_fields: Option<usize>,
+}
 
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line.context("reading csv line")?;
-        if lineno == 0 && has_header {
-            continue;
+impl CsvLineParser {
+    pub fn new(label_col: usize) -> Self {
+        CsvLineParser {
+            label_col,
+            n_fields: None,
         }
+    }
+
+    /// Feature count (known after the first data line).
+    pub fn n_cols(&self) -> Option<usize> {
+        self.n_fields.map(|n| n - 1)
+    }
+
+    /// Parse one data line, pushing its feature values (NaN = missing)
+    /// onto `features` and returning the label. Blank lines return
+    /// `Ok(None)` and push nothing. `lineno` is 0-based.
+    pub fn parse_line(
+        &mut self,
+        line: &str,
+        lineno: usize,
+        features: &mut Vec<Float>,
+    ) -> Result<Option<Float>> {
         let line = line.trim();
         if line.is_empty() {
-            continue;
+            return Ok(None);
         }
         let fields: Vec<&str> = line.split(',').collect();
-        match n_cols_file {
+        match self.n_fields {
             None => {
-                if label_col >= fields.len() {
-                    bail!("label column {label_col} out of range ({} fields)", fields.len());
+                if self.label_col >= fields.len() {
+                    bail!(
+                        "label column {} out of range ({} fields)",
+                        self.label_col,
+                        fields.len()
+                    );
                 }
-                n_cols_file = Some(fields.len());
+                self.n_fields = Some(fields.len());
             }
             Some(n) if n != fields.len() => {
                 bail!("line {}: expected {} fields, got {}", lineno + 1, n, fields.len())
             }
             _ => {}
         }
+        let mut label = 0.0;
         for (i, f) in fields.iter().enumerate() {
             let v = parse_field(f)
                 .with_context(|| format!("line {} field {}: {:?}", lineno + 1, i, f))?;
-            if i == label_col {
+            if i == self.label_col {
                 if v.is_nan() {
                     bail!("line {}: missing label", lineno + 1);
                 }
-                labels.push(v);
+                label = v;
             } else {
-                values.push(v);
+                features.push(v);
             }
+        }
+        Ok(Some(label))
+    }
+}
+
+/// CSV parser over any reader (unit-testable without files).
+pub fn parse_csv(reader: impl Read, label_col: usize, has_header: bool) -> Result<Dataset> {
+    let reader = BufReader::new(reader);
+    let mut parser = CsvLineParser::new(label_col);
+    let mut values: Vec<Float> = Vec::new();
+    let mut labels: Vec<Float> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading csv line")?;
+        if lineno == 0 && has_header {
+            continue;
+        }
+        if let Some(label) = parser.parse_line(&line, lineno, &mut values)? {
+            labels.push(label);
         }
     }
     let n_rows = labels.len();
-    let n_cols = n_cols_file.map(|n| n - 1).unwrap_or(0);
+    let n_cols = parser.n_cols().unwrap_or(0);
     Ok(Dataset::new(DMatrix::dense(values, n_rows, n_cols), labels))
 }
 
@@ -76,6 +126,93 @@ fn parse_field(f: &str) -> Result<Float> {
     }
     t.parse::<Float>()
         .map_err(|e| anyhow::anyhow!("bad number: {e}"))
+}
+
+/// One parsed LibSVM row: label, optional qid (−1 = absent), and the
+/// `(column, value)` pairs sorted ascending by column. Column indices are
+/// **raw** (as written in the file); 0- vs 1-based resolution needs the
+/// whole file and is done by the caller.
+pub(crate) struct LibsvmRow {
+    pub label: Float,
+    pub qid: i64,
+    pub pairs: Vec<(u32, Float)>,
+}
+
+/// Parse one LibSVM line (`label [qid:g] idx:val ...`). Comments (`#`)
+/// are stripped; blank lines return `Ok(None)`.
+///
+/// Duplicate feature indices within a row keep the **last** occurrence
+/// (XGBoost convention) — without the dedup they would survive the sort
+/// and produce an invalid CSR row.
+pub(crate) fn parse_libsvm_line(line: &str, lineno: usize) -> Result<Option<LibsvmRow>> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut tokens = line.split_ascii_whitespace();
+    let label: Float = tokens
+        .next()
+        .unwrap()
+        .parse()
+        .with_context(|| format!("line {}: bad label", lineno + 1))?;
+    let mut pairs: Vec<(u32, Float)> = Vec::new();
+    let mut qid: i64 = -1;
+    for tok in tokens {
+        let colon = tok
+            .find(':')
+            .with_context(|| format!("line {}: token {:?} missing ':'", lineno + 1, tok))?;
+        let (k, v) = tok.split_at(colon);
+        let v = &v[1..];
+        if k == "qid" {
+            qid = v
+                .parse()
+                .with_context(|| format!("line {}: bad qid", lineno + 1))?;
+            continue;
+        }
+        let col: u32 = k
+            .parse()
+            .with_context(|| format!("line {}: bad index {:?}", lineno + 1, k))?;
+        let val: Float = v
+            .parse()
+            .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v))?;
+        pairs.push((col, val));
+    }
+    // stable sort, then collapse duplicate columns keeping the last-written
+    // value: within an equal-key run the stable sort preserves file order,
+    // so the run's final element is the last occurrence.
+    pairs.sort_by_key(|&(c, _)| c);
+    let mut w = 0usize;
+    for i in 0..pairs.len() {
+        if w > 0 && pairs[w - 1].0 == pairs[i].0 {
+            pairs[w - 1] = pairs[i];
+        } else {
+            pairs[w] = pairs[i];
+            w += 1;
+        }
+    }
+    pairs.truncate(w);
+    Ok(Some(LibsvmRow { label, qid, pairs }))
+}
+
+/// Build query-group boundaries from per-row qids (−1 = absent). Groups
+/// are contiguous qid runs, exactly as the in-memory loader defines them;
+/// mixing qid and non-qid rows is an error. Returns an empty vector when
+/// no row carried a qid.
+pub(crate) fn groups_from_qids(qids: &[i64]) -> Result<Vec<usize>> {
+    let mut groups = Vec::new();
+    if qids.iter().any(|&q| q >= 0) {
+        if qids.iter().any(|&q| q < 0) {
+            bail!("mixed qid / non-qid rows");
+        }
+        groups.push(0);
+        for i in 1..qids.len() {
+            if qids[i] != qids[i - 1] {
+                groups.push(i);
+            }
+        }
+        groups.push(qids.len());
+    }
+    Ok(groups)
 }
 
 /// Load a LibSVM-format file (`label idx:val idx:val ...`, 0- or 1-based
@@ -100,44 +237,14 @@ pub fn parse_libsvm(reader: impl Read) -> Result<Dataset> {
 
     for (lineno, line) in reader.lines().enumerate() {
         let line = line.context("reading libsvm line")?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let Some(row) = parse_libsvm_line(&line, lineno)? else {
             continue;
-        }
-        let mut tokens = line.split_ascii_whitespace();
-        let label: Float = tokens
-            .next()
-            .unwrap()
-            .parse()
-            .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        labels.push(label);
-        let mut row: Vec<(u32, Float)> = Vec::new();
-        let mut qid: i64 = -1;
-        for tok in tokens {
-            let colon = tok
-                .find(':')
-                .with_context(|| format!("line {}: token {:?} missing ':'", lineno + 1, tok))?;
-            let (k, v) = tok.split_at(colon);
-            let v = &v[1..];
-            if k == "qid" {
-                qid = v
-                    .parse()
-                    .with_context(|| format!("line {}: bad qid", lineno + 1))?;
-                continue;
-            }
-            let col: u32 = k
-                .parse()
-                .with_context(|| format!("line {}: bad index {:?}", lineno + 1, k))?;
-            let val: Float = v
-                .parse()
-                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v))?;
-            max_col = max_col.max(col);
-            min_col = min_col.min(col);
-            row.push((col, val));
-        }
-        qids.push(qid);
-        row.sort_unstable_by_key(|&(c, _)| c);
-        for (c, v) in row {
+        };
+        labels.push(row.label);
+        qids.push(row.qid);
+        for (c, v) in row.pairs {
+            max_col = max_col.max(c);
+            min_col = min_col.min(c);
             indices.push(c);
             values.push(v);
         }
@@ -155,27 +262,70 @@ pub fn parse_libsvm(reader: impl Read) -> Result<Dataset> {
     let n_rows = labels.len();
     let n_cols = if indices.is_empty() { 0 } else { max_col as usize + 1 };
 
-    // Build group boundaries from contiguous qid runs, if any were present.
-    let mut groups = Vec::new();
-    if qids.iter().any(|&q| q >= 0) {
-        if qids.iter().any(|&q| q < 0) {
-            bail!("mixed qid / non-qid rows");
-        }
-        groups.push(0);
-        for i in 1..qids.len() {
-            if qids[i] != qids[i - 1] {
-                groups.push(i);
-            }
-        }
-        groups.push(qids.len());
-    }
-
+    let groups = groups_from_qids(&qids)?;
     let x = DMatrix::csr(indptr, indices, values, n_rows, n_cols);
     Ok(if groups.is_empty() {
         Dataset::new(x, labels)
     } else {
         Dataset::with_groups(x, labels, groups)
     })
+}
+
+/// Write a dataset as CSV with the label in column 0 and missing values as
+/// empty fields — the inverse of [`load_csv`] with `label_col = 0`,
+/// `has_header = false`. Values print in Rust's shortest round-trip form,
+/// so `load_csv(save_csv(ds))` reproduces every float bit-for-bit.
+pub fn save_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    use std::io::Write as _;
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    let n_cols = ds.n_cols();
+    for r in 0..ds.n_rows() {
+        let mut line = String::with_capacity(n_cols * 8 + 8);
+        line.push_str(&format!("{}", ds.y[r]));
+        let mut row = vec![Float::NAN; n_cols];
+        for (c, v) in ds.x.iter_row(r) {
+            row[c] = v;
+        }
+        for v in row {
+            line.push(',');
+            if !v.is_nan() {
+                line.push_str(&format!("{v}"));
+            }
+        }
+        line.push('\n');
+        out.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write a dataset in LibSVM format with 1-based column indices (absent
+/// entries are omitted). Ranking groups, when present, are emitted as
+/// `qid:<group-index>` tokens. `load_libsvm(save_libsvm(ds))` reproduces
+/// values and groups exactly.
+pub fn save_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    use std::io::Write as _;
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    let mut group = 0usize;
+    for r in 0..ds.n_rows() {
+        let mut line = String::with_capacity(32);
+        line.push_str(&format!("{}", ds.y[r]));
+        if !ds.groups.is_empty() {
+            while r >= ds.groups[group + 1] {
+                group += 1;
+            }
+            line.push_str(&format!(" qid:{group}"));
+        }
+        for (c, v) in ds.x.iter_row(r) {
+            line.push_str(&format!(" {}:{}", c + 1, v));
+        }
+        line.push('\n');
+        out.write_all(line.as_bytes())?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -264,8 +414,55 @@ mod tests {
     }
 
     #[test]
+    fn libsvm_duplicate_indices_keep_last() {
+        // regression: duplicates used to survive the sort, producing a CSR
+        // row with repeated column indices (invalid — `get`'s binary
+        // search and the quantizer both assume strictly ascending columns)
+        let data = "1 2:9.0 1:1.0 2:5.0 2:7.0\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        let row: Vec<_> = ds.x.iter_row(0).collect();
+        assert_eq!(row, vec![(0, 1.0), (1, 7.0)], "last occurrence wins");
+        assert_eq!(ds.x.get(0, 1), Some(7.0));
+        assert_eq!(ds.x.nnz(), 2);
+    }
+
+    #[test]
     fn libsvm_bad_token_is_error() {
         assert!(parse_libsvm("1 nocolon\n".as_bytes()).is_err());
         assert!(parse_libsvm("1 a:1.0\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn csv_save_load_round_trip() {
+        let data = "1,0.5,,2.25\n0,-3.5,0.125,\n";
+        let ds = parse_csv(data.as_bytes(), 0, false).unwrap();
+        let path = std::env::temp_dir().join("xgb_tpu_loader_csv_rt.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path, 0, false).unwrap();
+        assert_eq!(back.y, ds.y);
+        for r in 0..ds.n_rows() {
+            for c in 0..ds.n_cols() {
+                assert_eq!(back.x.get(r, c), ds.x.get(r, c), "({r},{c})");
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn libsvm_save_load_round_trip_with_groups() {
+        let data = "2 qid:7 1:1.5 3:-0.25\n1 qid:7 2:0.75\n0 qid:9 1:0.1\n";
+        let ds = parse_libsvm(data.as_bytes()).unwrap();
+        let path = std::env::temp_dir().join("xgb_tpu_loader_libsvm_rt.libsvm");
+        save_libsvm(&ds, &path).unwrap();
+        let back = load_libsvm(&path).unwrap();
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.groups, ds.groups);
+        assert_eq!(back.n_cols(), ds.n_cols());
+        for r in 0..ds.n_rows() {
+            let a: Vec<_> = ds.x.iter_row(r).collect();
+            let b: Vec<_> = back.x.iter_row(r).collect();
+            assert_eq!(a, b, "row {r}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

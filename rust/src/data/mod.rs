@@ -1,10 +1,16 @@
-//! Training data substrate: dense/sparse matrices, file loaders, and the
-//! synthetic dataset registry that stands in for the paper's six public
-//! datasets (Table 1) in this offline environment.
+//! Training data substrate: dense/sparse matrices, file loaders and
+//! writers, the streaming [`source::BatchSource`] ingestion front end, and
+//! the synthetic dataset registry that stands in for the paper's six
+//! public datasets (Table 1) in this offline environment.
 
 pub mod dmatrix;
 pub mod loader;
+pub mod source;
 pub mod synthetic;
 
 pub use dmatrix::{DMatrix, Dataset};
-pub use loader::{load_csv, load_libsvm};
+pub use loader::{load_csv, load_libsvm, save_csv, save_libsvm};
+pub use source::{
+    scan_source, BatchSource, CsvSource, DMatrixSource, IngestMeta, LibsvmSource, RowBatch,
+    SyntheticSource, DEFAULT_BATCH_ROWS,
+};

@@ -1,0 +1,677 @@
+//! Out-of-core ingestion: pull-based [`BatchSource`] streams of bounded
+//! row batches — the front door of the two-pass pipeline that sketches,
+//! quantises and compresses training data **without ever materializing
+//! the full float matrix** (paper §2.1–2.2; Ou, *Out-of-Core GPU Gradient
+//! Boosting*, arXiv 2005.09148).
+//!
+//! # The two passes
+//!
+//! 1. **Sketch** ([`scan_source`]) — every batch is folded into the
+//!    per-column [`StreamingSketch`](crate::quantile::StreamingSketch)
+//!    (merge/prune per chunk), while O(`n_rows`) metadata accumulates:
+//!    labels, qid-derived ranking groups, per-row present-value counts
+//!    (the sparse ELLPACK strides of pass 2). The result is the frozen
+//!    [`HistogramCuts`] plus an [`IngestMeta`].
+//! 2. **Quantise + pack** — the source is [`reset`](BatchSource::reset)
+//!    and re-streamed; each batch is quantised against the frozen cuts and
+//!    bit-packed directly into the owning device shard's
+//!    [`CompressedMatrixBuilder`](crate::compress::CompressedMatrixBuilder)
+//!    pages (`MultiDeviceCoordinator::from_source`).
+//!
+//! # Peak-memory contract
+//!
+//! A `BatchSource` implementation must bound each batch by its configured
+//! `batch_rows`, and the pipeline guarantees that the only full-size
+//! (O(`n_rows`)) allocations are the **packed shard words themselves**
+//! plus O(`n_rows`) scalar metadata (labels, per-row nnz). Peak transient
+//! float-buffer bytes are O(`batch_rows × n_cols`), independent of the
+//! dataset's row count — measured per ingest in
+//! [`IngestMeta::peak_transient_bytes`] and tracked by
+//! `benches/memory_footprint.rs` (`BENCH_memory.json`).
+//!
+//! # Determinism contract
+//!
+//! Re-streaming must reproduce the exact same rows in the same order
+//! (pass 2 revisits what pass 1 sketched), and every value must be parsed
+//! identically to the in-memory loaders — the file sources share the
+//! per-line parsers of [`crate::data::loader`], which is what makes
+//! `Learner::train_from_source` **bit-identical** to the in-memory
+//! `Learner::train` for every batch size and thread count
+//! (`rust/tests/streaming_ingest.rs`).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::loader::{groups_from_qids, parse_libsvm_line, CsvLineParser};
+use crate::data::synthetic::{self, DatasetSpec};
+use crate::data::{DMatrix, Dataset};
+use crate::exec::ExecContext;
+use crate::quantile::{HistogramCuts, StreamingSketch};
+use crate::Float;
+
+/// Default batch size of the streaming readers (rows per batch). At the
+/// paper's widest dense dataset (100 columns) this keeps the transient
+/// float buffer around 26 MB.
+pub const DEFAULT_BATCH_ROWS: usize = 65_536;
+
+/// One bounded batch of rows pulled from a [`BatchSource`].
+#[derive(Debug, Clone)]
+pub struct RowBatch {
+    /// Feature values of the batch's rows (dense or CSR, matching the
+    /// source's layout). File sources with raw column indices
+    /// ([`BatchSource::columns_are_raw`]) report them unshifted.
+    pub x: DMatrix,
+    /// Labels, one per row.
+    pub y: Vec<Float>,
+    /// Per-row query id (−1 = none). Empty when the source carries no
+    /// ranking groups.
+    pub qid: Vec<i64>,
+}
+
+impl RowBatch {
+    pub fn n_rows(&self) -> usize {
+        self.x.n_rows()
+    }
+}
+
+/// A resettable, pull-based iterator of bounded row batches — the
+/// abstraction every ingestion path (streaming CSV, streaming LibSVM, the
+/// synthetic generators, in-memory matrices) plugs into. See the module
+/// docs for the peak-memory and determinism contracts.
+pub trait BatchSource {
+    /// Rewind to the first row. Called between pass 1 and pass 2; the
+    /// replayed stream must be identical to the first pass.
+    fn reset(&mut self) -> Result<()>;
+
+    /// Pull the next batch (at most the configured `batch_rows` rows), or
+    /// `None` at end of stream.
+    fn next_batch(&mut self) -> Result<Option<RowBatch>>;
+
+    /// Whether column indices are raw file indices whose 0- vs 1-based
+    /// convention is unresolved (LibSVM). When `true`, [`scan_source`]
+    /// autodetects the base over the whole stream — exactly as the
+    /// in-memory loader does — and reports it as
+    /// [`IngestMeta::col_shift`].
+    fn columns_are_raw(&self) -> bool {
+        false
+    }
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &str {
+        "source"
+    }
+}
+
+/// Shared cursor for the in-memory adapters: walks a `(x, y, groups)`
+/// triple in contiguous row windows, deriving per-row qids from group
+/// membership so streamed group reconstruction is exact.
+#[derive(Debug, Clone)]
+struct MemCursor {
+    batch_rows: usize,
+    pos: usize,
+    group_pos: usize,
+}
+
+impl MemCursor {
+    fn new(batch_rows: usize) -> Self {
+        MemCursor {
+            batch_rows: batch_rows.max(1),
+            pos: 0,
+            group_pos: 0,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+        self.group_pos = 0;
+    }
+
+    fn next_batch(
+        &mut self,
+        x: &DMatrix,
+        y: &[Float],
+        groups: &[usize],
+    ) -> Option<RowBatch> {
+        let n = x.n_rows();
+        if self.pos >= n {
+            return None;
+        }
+        let hi = (self.pos + self.batch_rows).min(n);
+        let rows: Vec<usize> = (self.pos..hi).collect();
+        let batch_x = x.take_rows(&rows);
+        // unlabeled adapters (coordinator-internal) stream zero labels
+        let batch_y = if y.is_empty() {
+            vec![0.0; hi - self.pos]
+        } else {
+            y[self.pos..hi].to_vec()
+        };
+        let qid = if groups.is_empty() {
+            Vec::new()
+        } else {
+            let mut q = Vec::with_capacity(hi - self.pos);
+            for r in self.pos..hi {
+                while r >= groups[self.group_pos + 1] {
+                    self.group_pos += 1;
+                }
+                q.push(self.group_pos as i64);
+            }
+            q
+        };
+        self.pos = hi;
+        Some(RowBatch {
+            x: batch_x,
+            y: batch_y,
+            qid,
+        })
+    }
+}
+
+/// In-memory adapter: streams a borrowed [`DMatrix`] (optionally with
+/// labels and groups) in contiguous windows. This is how the legacy
+/// `from_dmatrix` / `with_cuts` construction paths ride the streaming
+/// pipeline — one code path for everything.
+pub struct DMatrixSource<'a> {
+    x: &'a DMatrix,
+    y: Option<&'a [Float]>,
+    groups: &'a [usize],
+    cursor: MemCursor,
+}
+
+impl<'a> DMatrixSource<'a> {
+    /// Unlabeled stream (coordinator-internal adapters; labels are zero).
+    pub fn new(x: &'a DMatrix, batch_rows: usize) -> Self {
+        DMatrixSource {
+            x,
+            y: None,
+            groups: &[],
+            cursor: MemCursor::new(batch_rows),
+        }
+    }
+
+    /// Stream a full labelled dataset.
+    pub fn from_dataset(ds: &'a Dataset, batch_rows: usize) -> Self {
+        DMatrixSource {
+            x: &ds.x,
+            y: Some(&ds.y),
+            groups: &ds.groups,
+            cursor: MemCursor::new(batch_rows),
+        }
+    }
+}
+
+impl BatchSource for DMatrixSource<'_> {
+    fn reset(&mut self) -> Result<()> {
+        self.cursor.reset();
+        Ok(())
+    }
+
+    fn next_batch(&mut self) -> Result<Option<RowBatch>> {
+        let y: &[Float] = self.y.unwrap_or(&[]);
+        debug_assert!(y.is_empty() || y.len() == self.x.n_rows());
+        Ok(self.cursor.next_batch(self.x, y, self.groups))
+    }
+
+    fn name(&self) -> &str {
+        "in-memory"
+    }
+}
+
+/// Adapter for the synthetic Table-1 generators: generates the dataset
+/// once (the generators are in-memory by construction) and streams its
+/// training split in bounded batches.
+pub struct SyntheticSource {
+    ds: Dataset,
+    spec_name: &'static str,
+    cursor: MemCursor,
+}
+
+impl SyntheticSource {
+    /// Generate `(spec, seed)` and stream the training split.
+    pub fn new(spec: &DatasetSpec, seed: u64, batch_rows: usize) -> Self {
+        let g = synthetic::generate(spec, seed);
+        SyntheticSource {
+            ds: g.train,
+            spec_name: spec.name,
+            cursor: MemCursor::new(batch_rows),
+        }
+    }
+
+    /// Stream an owned dataset (tests; pre-split data).
+    pub fn from_dataset(ds: Dataset, batch_rows: usize) -> Self {
+        SyntheticSource {
+            ds,
+            spec_name: "dataset",
+            cursor: MemCursor::new(batch_rows),
+        }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+}
+
+impl BatchSource for SyntheticSource {
+    fn reset(&mut self) -> Result<()> {
+        self.cursor.reset();
+        Ok(())
+    }
+
+    fn next_batch(&mut self) -> Result<Option<RowBatch>> {
+        Ok(self.cursor.next_batch(&self.ds.x, &self.ds.y, &self.ds.groups))
+    }
+
+    fn name(&self) -> &str {
+        self.spec_name
+    }
+}
+
+/// Streaming CSV reader: resumable batches of dense rows, sharing the
+/// per-line parser (and therefore every parse quirk) with
+/// [`crate::data::load_csv`]. The field count learned from the first data
+/// line persists across [`reset`](BatchSource::reset), so a file that
+/// changes between passes fails loudly instead of silently skewing.
+pub struct CsvSource {
+    path: PathBuf,
+    has_header: bool,
+    batch_rows: usize,
+    parser: CsvLineParser,
+    lines: Option<Lines<BufReader<File>>>,
+    lineno: usize,
+}
+
+impl CsvSource {
+    pub fn open(
+        path: impl AsRef<Path>,
+        label_col: usize,
+        has_header: bool,
+        batch_rows: usize,
+    ) -> Result<Self> {
+        let mut s = CsvSource {
+            path: path.as_ref().to_path_buf(),
+            has_header,
+            batch_rows: batch_rows.max(1),
+            parser: CsvLineParser::new(label_col),
+            lines: None,
+            lineno: 0,
+        };
+        s.reset()?;
+        Ok(s)
+    }
+}
+
+impl BatchSource for CsvSource {
+    fn reset(&mut self) -> Result<()> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        self.lines = Some(BufReader::new(file).lines());
+        self.lineno = 0;
+        Ok(())
+    }
+
+    fn next_batch(&mut self) -> Result<Option<RowBatch>> {
+        let lines = self.lines.as_mut().context("source not reset")?;
+        let mut values: Vec<Float> = Vec::new();
+        let mut labels: Vec<Float> = Vec::new();
+        while labels.len() < self.batch_rows {
+            let Some(line) = lines.next() else { break };
+            let line = line.context("reading csv line")?;
+            let lineno = self.lineno;
+            self.lineno += 1;
+            if lineno == 0 && self.has_header {
+                continue;
+            }
+            if let Some(label) = self.parser.parse_line(&line, lineno, &mut values)? {
+                labels.push(label);
+            }
+        }
+        if labels.is_empty() {
+            return Ok(None);
+        }
+        let n_cols = self.parser.n_cols().unwrap_or(0);
+        Ok(Some(RowBatch {
+            x: DMatrix::dense(values, labels.len(), n_cols),
+            y: labels,
+            qid: Vec::new(),
+        }))
+    }
+
+    fn name(&self) -> &str {
+        "csv"
+    }
+}
+
+/// Streaming LibSVM reader: resumable batches of sparse (CSR) rows with
+/// optional `qid:` tokens, sharing the per-line parser with
+/// [`crate::data::load_libsvm`] (including the duplicate-index keep-last
+/// rule). Column indices are emitted **raw**; the 0-/1-based autodetect
+/// needs the whole stream and is performed by [`scan_source`]
+/// ([`IngestMeta::col_shift`]).
+pub struct LibsvmSource {
+    path: PathBuf,
+    batch_rows: usize,
+    lines: Option<Lines<BufReader<File>>>,
+    lineno: usize,
+    /// Highest raw column index seen so far (persists across resets so
+    /// pass-2 batches report a stable width).
+    max_col: Option<u32>,
+}
+
+impl LibsvmSource {
+    pub fn open(path: impl AsRef<Path>, batch_rows: usize) -> Result<Self> {
+        let mut s = LibsvmSource {
+            path: path.as_ref().to_path_buf(),
+            batch_rows: batch_rows.max(1),
+            lines: None,
+            lineno: 0,
+            max_col: None,
+        };
+        s.reset()?;
+        Ok(s)
+    }
+}
+
+impl BatchSource for LibsvmSource {
+    fn reset(&mut self) -> Result<()> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        self.lines = Some(BufReader::new(file).lines());
+        self.lineno = 0;
+        Ok(())
+    }
+
+    fn next_batch(&mut self) -> Result<Option<RowBatch>> {
+        let lines = self.lines.as_mut().context("source not reset")?;
+        let mut indptr = vec![0usize];
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<Float> = Vec::new();
+        let mut labels: Vec<Float> = Vec::new();
+        let mut qids: Vec<i64> = Vec::new();
+        while labels.len() < self.batch_rows {
+            let Some(line) = lines.next() else { break };
+            let line = line.context("reading libsvm line")?;
+            let lineno = self.lineno;
+            self.lineno += 1;
+            let Some(row) = parse_libsvm_line(&line, lineno)? else {
+                continue;
+            };
+            labels.push(row.label);
+            qids.push(row.qid);
+            for (c, v) in row.pairs {
+                self.max_col = Some(self.max_col.map_or(c, |m| m.max(c)));
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        if labels.is_empty() {
+            return Ok(None);
+        }
+        let n_cols = self.max_col.map_or(0, |m| m as usize + 1);
+        let n_rows = labels.len();
+        Ok(Some(RowBatch {
+            x: DMatrix::csr(indptr, indices, values, n_rows, n_cols),
+            y: labels,
+            qid: qids,
+        }))
+    }
+
+    fn columns_are_raw(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        "libsvm"
+    }
+}
+
+/// Pass-1 output: everything training needs to know about the stream
+/// short of the feature values themselves. All fields are O(`n_rows`)
+/// scalars or smaller — no float matrix.
+#[derive(Debug, Clone, Default)]
+pub struct IngestMeta {
+    pub n_rows: usize,
+    /// Feature count after column-base resolution.
+    pub n_cols: usize,
+    /// Subtracted from raw column indices in pass 2 (1 for 1-based LibSVM
+    /// streams, 0 otherwise).
+    pub col_shift: u32,
+    /// Whether batches are dense (positional ELLPACK layout) or sparse.
+    pub dense: bool,
+    pub labels: Vec<Float>,
+    /// Ranking group boundaries reconstructed from qids (empty = none).
+    pub groups: Vec<usize>,
+    /// Per-row present-value count (sparse streams only; empty for
+    /// dense) — pass 2 derives each shard's ELLPACK stride from it.
+    pub row_nnz: Vec<u32>,
+    pub n_batches: usize,
+    /// Largest single-batch float-buffer footprint seen in pass 1.
+    pub peak_batch_float_bytes: usize,
+    /// Peak transient (non-packed) bytes across both passes: batch floats
+    /// plus the pass-2 symbol scratch. Filled by
+    /// `MultiDeviceCoordinator::from_source`; the quantity the
+    /// peak-memory contract bounds by O(`batch_rows × n_cols`).
+    pub peak_transient_bytes: usize,
+}
+
+impl IngestMeta {
+    /// Move the labels (and groups) out into a feature-less [`Dataset`] —
+    /// the gradient/metric substrate for streamed training. The `x` is an
+    /// empty CSR of the right shape: objectives and metrics only touch
+    /// `y`/`groups`, and the coordinator already owns the quantised rows.
+    pub fn take_label_dataset(&mut self) -> Dataset {
+        let n = self.n_rows;
+        let x = DMatrix::csr(vec![0usize; n + 1], Vec::new(), Vec::new(), n, self.n_cols);
+        let y = std::mem::take(&mut self.labels);
+        let groups = std::mem::take(&mut self.groups);
+        if groups.is_empty() {
+            Dataset::new(x, y)
+        } else {
+            Dataset::with_groups(x, y, groups)
+        }
+    }
+}
+
+/// **Pass 1**: stream the whole source once, folding every batch into the
+/// per-column quantile sketch and accumulating [`IngestMeta`]. Returns the
+/// frozen [`HistogramCuts`] the second pass quantises against.
+///
+/// The sketch fold is chunk-parallel over columns on `exec`; cuts are
+/// bit-identical for every batch size and thread count (see
+/// [`StreamingSketch`]).
+pub fn scan_source(
+    src: &mut dyn BatchSource,
+    max_bins: usize,
+    exec: &ExecContext,
+) -> Result<(HistogramCuts, IngestMeta)> {
+    let raw_cols = src.columns_are_raw();
+    let mut sketch = StreamingSketch::new(max_bins);
+    let mut meta = IngestMeta::default();
+    let mut qids: Vec<i64> = Vec::new();
+    let mut dense: Option<bool> = None;
+    let mut min_col: u32 = u32::MAX;
+
+    while let Some(batch) = src.next_batch()? {
+        let b_rows = batch.n_rows();
+        ensure!(b_rows > 0, "source yielded an empty batch");
+        let batch_dense = matches!(batch.x, DMatrix::Dense { .. });
+        match dense {
+            None => dense = Some(batch_dense),
+            Some(d) => ensure!(
+                d == batch_dense,
+                "source switched between dense and sparse batches"
+            ),
+        }
+        ensure!(batch.y.len() == b_rows, "batch labels/rows mismatch");
+        meta.labels.extend_from_slice(&batch.y);
+        if batch.qid.is_empty() {
+            qids.resize(qids.len() + b_rows, -1);
+        } else {
+            ensure!(batch.qid.len() == b_rows, "batch qids/rows mismatch");
+            qids.extend_from_slice(&batch.qid);
+        }
+        if let DMatrix::Csr {
+            indptr, indices, ..
+        } = &batch.x
+        {
+            for r in 0..b_rows {
+                meta.row_nnz.push((indptr[r + 1] - indptr[r]) as u32);
+            }
+            if raw_cols {
+                for &c in indices {
+                    min_col = min_col.min(c);
+                }
+            }
+        }
+        sketch.fold(&batch.x, exec);
+        meta.peak_batch_float_bytes = meta.peak_batch_float_bytes.max(batch.x.float_bytes());
+        meta.n_batches += 1;
+        meta.n_rows += b_rows;
+    }
+
+    meta.dense = dense.unwrap_or(true);
+    // 1-based index files never use column 0 (same rule as the loader).
+    meta.col_shift = u32::from(raw_cols && sketch.n_cols() > 0 && min_col >= 1);
+    let summaries = sketch.finish();
+    let shift = meta.col_shift as usize;
+    let feature_summaries = &summaries[shift.min(summaries.len())..];
+    meta.n_cols = feature_summaries.len();
+    meta.groups = groups_from_qids(&qids)?;
+    let cuts = HistogramCuts::from_summaries(feature_summaries, max_bins);
+    Ok((cuts, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader::{save_csv, save_libsvm};
+    use crate::data::synthetic::generate;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("xgb_tpu_source_{name}"))
+    }
+
+    fn collect(src: &mut dyn BatchSource) -> (Vec<Float>, usize, usize) {
+        let mut y = Vec::new();
+        let mut rows = 0;
+        let mut batches = 0;
+        while let Some(b) = src.next_batch().unwrap() {
+            rows += b.n_rows();
+            batches += 1;
+            y.extend(b.y);
+        }
+        (y, rows, batches)
+    }
+
+    #[test]
+    fn dmatrix_source_streams_all_rows_in_order() {
+        let g = generate(&DatasetSpec::higgs_like(250), 3);
+        let mut src = DMatrixSource::from_dataset(&g.train, 32);
+        let (y, rows, batches) = collect(&mut src);
+        assert_eq!(rows, g.train.n_rows());
+        assert_eq!(batches, g.train.n_rows().div_ceil(32));
+        assert_eq!(y, g.train.y);
+        // reset replays identically
+        src.reset().unwrap();
+        let (y2, rows2, _) = collect(&mut src);
+        assert_eq!(rows2, rows);
+        assert_eq!(y2, y);
+    }
+
+    #[test]
+    fn mem_cursor_derives_qids_from_groups() {
+        let g = generate(&DatasetSpec::ranking_like(200), 5);
+        let mut src = DMatrixSource::from_dataset(&g.train, 17);
+        let mut qids = Vec::new();
+        while let Some(b) = src.next_batch().unwrap() {
+            assert_eq!(b.qid.len(), b.n_rows());
+            qids.extend(b.qid);
+        }
+        let rebuilt = groups_from_qids(&qids).unwrap();
+        assert_eq!(rebuilt, g.train.groups);
+    }
+
+    #[test]
+    fn csv_source_matches_in_memory_loader() {
+        let g = generate(&DatasetSpec::airline_like(300), 7);
+        let path = tmp("csv_match.csv");
+        save_csv(&g.train, &path).unwrap();
+        let mem = crate::data::load_csv(&path, 0, false).unwrap();
+        let mut src = CsvSource::open(&path, 0, false, 41).unwrap();
+        let mut row = 0usize;
+        while let Some(b) = src.next_batch().unwrap() {
+            for i in 0..b.n_rows() {
+                assert_eq!(b.y[i], mem.y[row]);
+                let a: Vec<_> = b.x.iter_row(i).collect();
+                let e: Vec<_> = mem.x.iter_row(row).collect();
+                assert_eq!(a, e, "row {row}");
+                row += 1;
+            }
+        }
+        assert_eq!(row, mem.n_rows());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn libsvm_source_scan_matches_in_memory_loader() {
+        // sparse + qid + 1-based indices (save_libsvm writes 1-based)
+        let g = generate(&DatasetSpec::ranking_like(240), 11);
+        let path = tmp("libsvm_match.libsvm");
+        save_libsvm(&g.train, &path).unwrap();
+        let mem = crate::data::load_libsvm(&path).unwrap();
+
+        let exec = ExecContext::serial();
+        let mut src = LibsvmSource::open(&path, 23).unwrap();
+        let (cuts, meta) = scan_source(&mut src, 16, &exec).unwrap();
+        assert_eq!(meta.n_rows, mem.n_rows());
+        assert_eq!(meta.n_cols, mem.n_cols());
+        assert_eq!(meta.col_shift, 1, "save_libsvm writes 1-based indices");
+        assert_eq!(meta.labels, mem.y);
+        assert_eq!(meta.groups, mem.groups);
+        assert!(!meta.dense);
+        assert_eq!(meta.row_nnz.len(), mem.n_rows());
+
+        // cuts equal the in-memory streaming fold over the loaded matrix
+        let mut mem_src = DMatrixSource::new(&mem.x, 1000);
+        let (mem_cuts, _) = scan_source(&mut mem_src, 16, &exec).unwrap();
+        assert_eq!(cuts, mem_cuts);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_cuts_invariant_to_batch_size() {
+        let g = generate(&DatasetSpec::higgs_like(400), 13);
+        let exec = ExecContext::serial();
+        let reference = {
+            let mut src = DMatrixSource::from_dataset(&g.train, g.train.n_rows());
+            scan_source(&mut src, 16, &exec).unwrap().0
+        };
+        for batch in [7usize, 64, 301] {
+            let mut src = DMatrixSource::from_dataset(&g.train, batch);
+            let (cuts, meta) = scan_source(&mut src, 16, &exec).unwrap();
+            assert_eq!(cuts, reference, "batch={batch}");
+            assert_eq!(meta.n_batches, g.train.n_rows().div_ceil(batch));
+            // transient floats bounded by the batch, not the dataset
+            assert!(
+                meta.peak_batch_float_bytes <= batch * g.train.n_cols() * 4,
+                "batch={batch}: {} bytes",
+                meta.peak_batch_float_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn label_dataset_carries_groups() {
+        let g = generate(&DatasetSpec::ranking_like(150), 19);
+        let exec = ExecContext::serial();
+        let mut src = DMatrixSource::from_dataset(&g.train, 16);
+        let (_, mut meta) = scan_source(&mut src, 8, &exec).unwrap();
+        let ds = meta.take_label_dataset();
+        assert_eq!(ds.n_rows(), g.train.n_rows());
+        assert_eq!(ds.y, g.train.y);
+        assert_eq!(ds.groups, g.train.groups);
+        assert_eq!(ds.x.nnz(), 0, "label dataset holds no feature values");
+    }
+}

@@ -71,6 +71,9 @@ pub struct BoosterParams {
     /// Worker threads (`0` = all cores, `1` = serial); wall-clock only,
     /// results are bit-identical.
     pub threads: usize,
+    /// Rows per batch for streaming ingestion (peak-memory knob; results
+    /// are bit-identical for every value).
+    pub batch_rows: usize,
 }
 
 impl Default for BoosterParams {
@@ -101,6 +104,7 @@ impl Default for BoosterParams {
             seed: d.seed,
             verbose: d.verbose,
             threads: d.threads,
+            batch_rows: d.batch_rows,
         }
     }
 }
@@ -143,6 +147,7 @@ impl BoosterParams {
             seed: p.seed,
             verbose: p.verbose,
             threads: p.threads,
+            batch_rows: p.batch_rows,
         }
     }
 
@@ -190,6 +195,7 @@ impl BoosterParams {
             seed: self.seed,
             verbose: self.verbose,
             threads: self.threads,
+            batch_rows: self.batch_rows,
         })
     }
 

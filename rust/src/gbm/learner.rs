@@ -36,6 +36,7 @@ use std::time::Instant;
 use anyhow::{Context as _, Result};
 
 use crate::coordinator::{BuildStats, HistBackend, MultiDeviceCoordinator, NativeBackend};
+use crate::data::source::BatchSource;
 use crate::data::Dataset;
 use crate::exec::ExecContext;
 use crate::gbm::booster::{Booster, EvalRecord};
@@ -261,6 +262,68 @@ impl Learner {
             .check_n_features(train.x.n_cols())
             .map_err(|e: String| anyhow::anyhow!(e))?;
 
+        let coordinator = MultiDeviceCoordinator::with_backend(
+            &train.x,
+            params.coordinator_params(),
+            backend,
+        )?;
+        self.boost(params, coordinator, train, valid, t0)
+    }
+
+    /// **Out-of-core training**: ingest a [`BatchSource`] through the
+    /// two-pass streaming pipeline (sketch → quantise+pack per batch; see
+    /// [`crate::data::source`]) and run the boosting loop against the
+    /// shards it built — the full float matrix never materializes.
+    ///
+    /// The trained model, its predictions and every recorded metric are
+    /// **bit-identical** to [`train`](Self::train) on the equivalent
+    /// in-memory dataset, for every batch size and thread count
+    /// (`rust/tests/streaming_ingest.rs`). There is no shuffled holdout in
+    /// this mode — pass an explicit `valid` dataset for evaluation.
+    pub fn train_from_source(
+        &mut self,
+        src: &mut dyn BatchSource,
+        valid: Option<&Dataset>,
+    ) -> Result<Booster> {
+        self.train_from_source_with_backend(src, valid, Box::new(NativeBackend))
+    }
+
+    /// [`train_from_source`](Self::train_from_source) with an explicit
+    /// histogram backend.
+    pub fn train_from_source_with_backend(
+        &mut self,
+        src: &mut dyn BatchSource,
+        valid: Option<&Dataset>,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<Booster> {
+        let t0 = Instant::now();
+        let params = self.params.clone();
+        let (coordinator, mut meta) = MultiDeviceCoordinator::from_source_with_backend(
+            src,
+            params.coordinator_params(),
+            backend,
+        )?;
+        // feature count is only known after pass 1 on a true stream
+        params
+            .monotone_constraints
+            .check_n_features(meta.n_cols)
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+        let train = meta.take_label_dataset();
+        self.boost(params, coordinator, &train, valid, t0)
+    }
+
+    /// The Figure-1 boosting loop over an already-constructed coordinator.
+    /// `train` supplies labels/groups for gradients and metrics; its
+    /// feature matrix is only touched by validation-free paths (the
+    /// streamed label dataset carries none).
+    fn boost(
+        &mut self,
+        params: LearnerParams,
+        mut coordinator: MultiDeviceCoordinator,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        t0: Instant,
+    ) -> Result<Booster> {
         let objective = ObjectiveRegistry::create(params.objective.name(), params.num_class)
             .context("resolving objective")?;
         let k = objective.n_outputs();
@@ -284,11 +347,6 @@ impl Learner {
         // computation, tree construction and incremental validation
         // scoring (results are thread-count-invariant — see crate::exec)
         let exec = ExecContext::new(params.threads);
-        let mut coordinator = MultiDeviceCoordinator::with_backend(
-            &train.x,
-            params.coordinator_params(),
-            backend,
-        )?;
 
         let base_score = objective.base_score(train);
         let n = train.n_rows();
@@ -452,6 +510,12 @@ impl LearnerBuilder {
         /// serial). Changes wall-clock only; results are bit-identical.
         threads: usize
     );
+    setter!(
+        /// Rows per batch for streaming ingestion
+        /// ([`Learner::train_from_source`]). Bounds peak transient memory;
+        /// results are bit-identical for every value.
+        batch_rows: usize
+    );
 
     /// Evaluation metric (`None`/unset = the objective's default).
     pub fn eval_metric(mut self, metric: MetricKind) -> Self {
@@ -527,6 +591,7 @@ impl LearnerBuilder {
             "seed" => parse_into!(seed),
             "verbose" => parse_into!(verbose),
             "threads" => parse_into!(threads),
+            "batch_rows" => parse_into!(batch_rows),
             other => err(format!("unknown parameter {other:?}")),
         }
         self
@@ -656,6 +721,33 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.0[0].contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn train_from_source_matches_in_memory() {
+        // the full matrix covers batch sizes/threads; this is the smoke
+        let g = generate(&DatasetSpec::higgs_like(800), 31);
+        let p = quick(ObjectiveKind::BinaryLogistic, 4);
+        let b_mem = Learner::from_params(p.clone())
+            .unwrap()
+            .train(&g.train, Some(&g.valid))
+            .unwrap();
+        let mut src = crate::data::source::DMatrixSource::from_dataset(&g.train, 64);
+        let b_str = Learner::from_params(p)
+            .unwrap()
+            .train_from_source(&mut src, Some(&g.valid))
+            .unwrap();
+        assert_eq!(b_mem.trees, b_str.trees, "streamed trees must be bit-identical");
+        assert_eq!(b_mem.base_score, b_str.base_score);
+        for (a, b) in b_mem.eval_history.iter().zip(b_str.eval_history.iter()) {
+            assert_eq!(a.train.to_bits(), b.train.to_bits(), "round {}", a.round);
+            assert_eq!(
+                a.valid.map(f64::to_bits),
+                b.valid.map(f64::to_bits),
+                "round {}",
+                a.round
+            );
+        }
     }
 
     #[test]

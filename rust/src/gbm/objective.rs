@@ -207,6 +207,15 @@ impl Softmax {
         }
         e
     }
+
+    /// Gradient pair of class `c` for one instance: `p_c − 1[label == c]`
+    /// with XGBoost's `h = 2 p (1 − p)` softmax hessian.
+    #[inline]
+    fn pair(pc: Float, is_label: bool) -> GradPair {
+        let g = pc - Float::from(is_label) * 1.0;
+        let h = (2.0 * pc * (1.0 - pc)).max(1e-16);
+        GradPair::new(g, h)
+    }
 }
 
 impl Objective for Softmax {
@@ -229,11 +238,40 @@ impl Objective for Softmax {
             let p = self.probs(margins, i);
             let label = ds.y[i] as usize;
             for c in 0..self.k {
-                let pc = p[c];
-                let g = pc - Float::from(label == c) * 1.0;
-                // XGBoost uses h = 2 p (1-p) for softmax
-                let h = (2.0 * pc * (1.0 - pc)).max(1e-16);
-                out[c].push(GradPair::new(g, h));
+                out[c].push(Self::pair(p[c], label == c));
+            }
+        }
+        out
+    }
+
+    /// Rows are independent (each instance's softmax touches only its own
+    /// k margins), so multiclass chunks exactly like the row-wise
+    /// objectives: per-chunk k-way partials concatenate in ascending chunk
+    /// order, making the result bit-identical to the serial path at every
+    /// thread count.
+    fn gradients_par(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+    ) -> Vec<Vec<GradPair>> {
+        let n = ds.y.len();
+        let chunks: Vec<Vec<Vec<GradPair>>> = exec.map_chunks(n, ROW_CHUNK, |_, range| {
+            let mut part: Vec<Vec<GradPair>> =
+                (0..self.k).map(|_| Vec::with_capacity(range.len())).collect();
+            for i in range {
+                let p = self.probs(margins, i);
+                let label = ds.y[i] as usize;
+                for c in 0..self.k {
+                    part[c].push(Self::pair(p[c], label == c));
+                }
+            }
+            part
+        });
+        let mut out: Vec<Vec<GradPair>> = (0..self.k).map(|_| Vec::with_capacity(n)).collect();
+        for part in chunks {
+            for (c, v) in part.into_iter().enumerate() {
+                out[c].extend(v);
             }
         }
         out
@@ -460,6 +498,28 @@ mod tests {
                 let par = obj.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
                 assert_eq!(par, serial, "{} threads = {t}", obj.name());
             }
+        }
+    }
+
+    #[test]
+    fn softmax_parallel_gradients_bit_identical() {
+        use crate::data::DMatrix;
+        let k = 5usize;
+        let n = 20_000usize; // > ROW_CHUNK so chunking engages
+        let mut rng = crate::util::Pcg64::new(7);
+        let y: Vec<Float> = (0..n).map(|_| rng.gen_range(k) as Float).collect();
+        let margins: Vec<Vec<Float>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+            .collect();
+        let ds = Dataset::new(DMatrix::dense(vec![0.0; n], n, 1), y);
+        let o = Softmax {
+            k,
+            prob_output: false,
+        };
+        let serial = o.gradients(&ds, &margins);
+        for t in [1usize, 2, 8] {
+            let par = o.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
+            assert_eq!(par, serial, "threads = {t}");
         }
     }
 }

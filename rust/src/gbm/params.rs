@@ -318,6 +318,12 @@ pub struct LearnerParams {
     /// and metrics are **bit-identical** for every value — the knob only
     /// changes wall-clock.
     pub threads: usize,
+    /// Rows per batch for the streaming ingestion pipeline
+    /// (`Learner::train_from_source`; CLI `--stream`): bounds the
+    /// transient float-buffer footprint at O(`batch_rows × n_cols`).
+    /// Models are **bit-identical** for every value — the knob only
+    /// trades peak memory against per-batch overhead.
+    pub batch_rows: usize,
 }
 
 impl Default for LearnerParams {
@@ -347,6 +353,7 @@ impl Default for LearnerParams {
             seed: 0,
             verbose: false,
             threads: 0,
+            batch_rows: crate::data::source::DEFAULT_BATCH_ROWS,
         }
     }
 }
@@ -406,6 +413,7 @@ impl LearnerParams {
             seed: cfg.get_parse("seed", d.seed)?,
             verbose: cfg.get_bool("verbose", d.verbose),
             threads: cfg.get_parse("threads", d.threads)?,
+            batch_rows: cfg.get_parse("batch_rows", d.batch_rows)?,
         })
     }
 
@@ -522,6 +530,10 @@ impl LearnerParams {
             if v < 0.0 || v.is_nan() {
                 errs.push(format!("{name} must be >= 0, got {v}"));
             }
+        }
+
+        if self.batch_rows == 0 {
+            errs.push("batch_rows must be >= 1".to_string());
         }
 
         // evaluation cadence

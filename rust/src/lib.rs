@@ -21,6 +21,35 @@
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
 //! (`xla` crate) so the training hot path never touches Python.
 //!
+//! ## Data flow: streaming two-pass ingestion
+//!
+//! The paper's scale story (115M rows, §3) rests on never holding the
+//! data in its expensive form: features are quantised (§2.1) and
+//! bit-packed to `⌈log2(symbols)⌉` bits (§2.2) so only the compressed
+//! ELLPACK representation persists. Ingestion honours that end to end —
+//! every construction path (files, synthetic generators, in-memory
+//! matrices) rides one pull-based [`data::BatchSource`] pipeline:
+//!
+//! 1. **Pass 1 — sketch** ([`data::scan_source`]): each bounded row batch
+//!    folds into the per-column incremental quantile sketch
+//!    ([`quantile::StreamingSketch`], merge/prune per chunk) while
+//!    O(`n_rows`) metadata accumulates (labels, ranking groups, row
+//!    widths). Output: frozen [`quantile::HistogramCuts`].
+//! 2. **Pass 2 — quantise + pack**: the source is reset and re-streamed;
+//!    each batch is quantised against the frozen cuts and bit-packed
+//!    **directly into the owning device shard's pages**
+//!    ([`compress::CompressedMatrixBuilder`]) — the raw float matrix and
+//!    the u32 bin matrix never materialize. Peak transient float-buffer
+//!    bytes are O(`batch_rows × n_cols`), not O(`n_rows × n_cols`)
+//!    (measured by `benches/memory_footprint.rs` → `BENCH_memory.json`).
+//!
+//! Streamed and in-memory training are **bit-identical** for every batch
+//! size and thread count: the sketch is a pure function of each column's
+//! value sequence, batches quantise row-locally, and rows append to
+//! shards in global order (`rust/tests/streaming_ingest.rs`). Train
+//! out-of-core with [`gbm::Learner::train_from_source`] (CLI: `--stream
+//! --batch-rows N`).
+//!
 //! ## Quickstart
 //!
 //! Training goes through the typed [`gbm::Learner`] façade: pick an

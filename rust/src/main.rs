@@ -5,6 +5,11 @@
 //!
 //! * `train`     — train on a synthetic Table-1 dataset or a CSV/LibSVM
 //!                 file; all XGBoost-style parameters available as flags.
+//!                 With `--stream`, files are ingested through the
+//!                 out-of-core two-pass pipeline (`--batch-rows` bounds
+//!                 peak transient memory; the model is bit-identical).
+//! * `export`    — write a synthetic dataset to CSV/LibSVM (streaming
+//!                 smoke-test fodder).
 //! * `datasets`  — print the Table 1 dataset registry.
 //! * `info`      — show AOT artifact manifest + PJRT platform.
 //! * `help`      — this text.
@@ -15,7 +20,9 @@
 //! xgb-tpu train --dataset higgs --rows 100000 --num-rounds 50 \
 //!     --n-devices 8 --grow-policy depthwise --compress true
 //! xgb-tpu train --csv data.csv --label-col 0 --objective reg:squarederror
+//! xgb-tpu train --libsvm data.libsvm --stream --batch-rows 65536
 //! xgb-tpu train --dataset higgs --rows 20000 --backend xla
+//! xgb-tpu export --dataset bosch --rows 10000 --format libsvm --out b.libsvm
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -33,6 +40,7 @@ fn main() {
     let code = match cmd {
         "train" => run_train(&args),
         "predict" => run_predict(&args),
+        "export" => run_export(&args),
         "datasets" => run_datasets(),
         "info" => run_info(&args),
         "help" | "--help" | "-h" => {
@@ -73,7 +81,15 @@ fn print_help() {
            --compress <bool>      bit-packed shards (default true)\n\
            --allreduce ring|serial\n\
            --backend native|xla   histogram execution engine\n\
+           --stream               out-of-core ingestion: stream the input\n\
+                                  through the two-pass sketch/quantise/pack\n\
+                                  pipeline instead of materializing it (no\n\
+                                  shuffled holdout; model is bit-identical\n\
+                                  to the in-memory run on the same rows)\n\
+           --batch-rows <n>       rows per streamed batch (default 65536);\n\
+                                  bounds peak transient memory only\n\
            --valid-frac <f>       holdout fraction when training from files\n\
+                                  (0 = train on all rows in file order)\n\
            --subsample <f>        row sampling rate per tree\n\
            --colsample-bytree <f> feature sampling rate per tree\n\
            --monotone-constraints \"1,0,-1\"  per-feature monotonicity\n\
@@ -84,7 +100,13 @@ fn print_help() {
            --model <path>         model saved by train --model-out\n\
            --csv/--libsvm <path>  rows to score (--label-col ignored labels ok)\n\
            --out <path>           write one prediction per line (default stdout)\n\
-           --backend native|xla   prediction engine (§2.4)\n"
+           --backend native|xla   prediction engine (§2.4)\n\n\
+         export flags:\n\
+           --dataset <name>       synthetic dataset to write\n\
+           --rows <n>             row count (default 20000)\n\
+           --format csv|libsvm    output format (default libsvm)\n\
+           --out <path>           destination file\n\
+           --seed <n>\n"
     );
 }
 
@@ -168,31 +190,54 @@ fn load_dataset(args: &ArgParser) -> Result<(Dataset, Option<Dataset>, Option<Da
             args.get_parse("label-col", 0usize),
             args.flag("header"),
         )?;
-        let (train, valid) = ds.split(valid_frac, seed);
-        return Ok((train, Some(valid), None));
+        return Ok(split_or_whole(ds, valid_frac, seed));
     }
     if let Some(path) = args.get("libsvm") {
         let ds = load_libsvm(path)?;
-        let (train, valid) = ds.split(valid_frac, seed);
-        return Ok((train, Some(valid), None));
+        return Ok(split_or_whole(ds, valid_frac, seed));
     }
     bail!("no input: pass --dataset, --csv or --libsvm")
 }
 
+/// `valid_frac = 0` keeps the file's row order intact (no shuffle), which
+/// is what makes the in-memory run comparable bit-for-bit with
+/// `--stream` on the same file.
+fn split_or_whole(
+    ds: Dataset,
+    valid_frac: f64,
+    seed: u64,
+) -> (Dataset, Option<Dataset>, Option<DatasetSpec>) {
+    if valid_frac <= 0.0 {
+        (ds, None, None)
+    } else {
+        let (train, valid) = ds.split(valid_frac, seed);
+        (train, Some(valid), None)
+    }
+}
+
+/// Dataset-aware defaults (objective/num_class/eval_metric from the
+/// synthetic spec's task) unless the user overrode them — shared by the
+/// in-memory and streaming train paths so they cannot drift.
+fn apply_spec_defaults(params: &mut LearnerParams, spec: &DatasetSpec, args: &ArgParser) {
+    if !args.has("objective") {
+        params.objective = spec.task.objective().parse().expect("infallible");
+    }
+    if !args.has("num-class") {
+        params.num_class = spec.task.num_class();
+    }
+    if !args.has("eval-metric") {
+        params.eval_metric = Some(spec.task.metric().parse().expect("infallible"));
+    }
+}
+
 fn run_train(args: &ArgParser) -> Result<()> {
+    if args.flag("stream") {
+        return run_train_streaming(args);
+    }
     let (train, valid, spec) = load_dataset(args)?;
     let mut params = learner_params_from_args(args)?;
     if let Some(spec) = &spec {
-        // dataset-aware defaults unless the user overrode them
-        if !args.has("objective") {
-            params.objective = spec.task.objective().parse().expect("infallible");
-        }
-        if !args.has("num-class") {
-            params.num_class = spec.task.num_class();
-        }
-        if !args.has("eval-metric") {
-            params.eval_metric = Some(spec.task.metric().parse().expect("infallible"));
-        }
+        apply_spec_defaults(&mut params, spec, args);
     }
     eprintln!(
         "training: {} rows x {} cols, objective={}, devices={}, threads={}, policy={}, compress={}",
@@ -224,6 +269,68 @@ fn run_train(args: &ArgParser) -> Result<()> {
     };
     let _ = NativeBackend; // referenced for doc visibility
 
+    report_booster(args, &booster, &params)
+}
+
+/// Out-of-core training: stream the input through the two-pass ingestion
+/// pipeline instead of materializing it. The produced model is
+/// bit-identical to the in-memory run over the same rows in the same
+/// order (`--valid-frac 0`); there is no shuffled holdout in this mode.
+fn run_train_streaming(args: &ArgParser) -> Result<()> {
+    use xgb_tpu::data::{BatchSource, CsvSource, LibsvmSource, SyntheticSource};
+
+    let mut params = learner_params_from_args(args)?;
+    let seed: u64 = args.get_parse("seed", 42u64);
+    let mut source: Box<dyn BatchSource> = if let Some(path) = args.get("csv") {
+        Box::new(CsvSource::open(
+            path,
+            args.get_parse("label-col", 0usize),
+            args.flag("header"),
+            params.batch_rows,
+        )?)
+    } else if let Some(path) = args.get("libsvm") {
+        Box::new(LibsvmSource::open(path, params.batch_rows)?)
+    } else if let Some(name) = args.get("dataset") {
+        let rows: usize = args.get_parse("rows", 20_000usize);
+        let spec = DatasetSpec::by_name(name, rows)
+            .with_context(|| format!("unknown dataset {name:?}; see `xgb-tpu datasets`"))?;
+        apply_spec_defaults(&mut params, &spec, args);
+        Box::new(SyntheticSource::new(&spec, seed, params.batch_rows))
+    } else {
+        bail!("streaming train needs --csv, --libsvm or --dataset")
+    };
+
+    eprintln!(
+        "streaming training: source={}, batch_rows={}, objective={}, devices={}, threads={}",
+        source.name(),
+        params.batch_rows,
+        params.objective,
+        params.n_devices,
+        xgb_tpu::exec::ExecContext::new(params.threads).threads(),
+    );
+    let mut learner = Learner::from_params(params.clone())?;
+    let backend = args.get_str("backend", "native");
+    let booster = match backend.as_str() {
+        "native" => learner.train_from_source(source.as_mut(), None)?,
+        "xla" => {
+            let artifacts = std::sync::Arc::new(Artifacts::discover()?);
+            eprintln!("xla backend on platform {}", artifacts.platform());
+            learner.train_from_source_with_backend(
+                source.as_mut(),
+                None,
+                Box::new(XlaHistBackend::new(artifacts)),
+            )?
+        }
+        other => bail!("unknown backend {other:?} (native|xla)"),
+    };
+    report_booster(args, &booster, &params)
+}
+
+fn report_booster(
+    args: &ArgParser,
+    booster: &xgb_tpu::gbm::Booster,
+    params: &LearnerParams,
+) -> Result<()> {
     let last = booster
         .eval_history
         .last()
@@ -266,7 +373,7 @@ fn run_train(args: &ArgParser) -> Result<()> {
 
     // optional: persist the model
     if let Some(path) = args.get("model-out") {
-        xgb_tpu::gbm::save_model_file(&booster, path)?;
+        xgb_tpu::gbm::save_model_file(booster, path)?;
         println!("model saved to {path}");
     }
     // optional: feature importance report
@@ -276,10 +383,34 @@ fn run_train(args: &ArgParser) -> Result<()> {
             .parse()
             .map_err(|e: String| anyhow::anyhow!(e))?;
         println!("feature importance ({:?}):", kind);
-        for (f, v) in xgb_tpu::gbm::feature_importance(&booster, kind).iter().take(15) {
+        for (f, v) in xgb_tpu::gbm::feature_importance(booster, kind).iter().take(15) {
             println!("  f{f:<6} {v:.4}");
         }
     }
+    Ok(())
+}
+
+/// Write a synthetic dataset's training split to CSV or LibSVM — the
+/// fixture generator for the streaming-ingestion CI smoke.
+fn run_export(args: &ArgParser) -> Result<()> {
+    let name = args.get("dataset").context("--dataset required")?;
+    let rows: usize = args.get_parse("rows", 20_000usize);
+    let seed: u64 = args.get_parse("seed", 42u64);
+    let out = args.get("out").context("--out required")?;
+    let spec = DatasetSpec::by_name(name, rows)
+        .with_context(|| format!("unknown dataset {name:?}; see `xgb-tpu datasets`"))?;
+    let g = synthetic::generate(&spec, seed);
+    match args.get_str("format", "libsvm").as_str() {
+        "csv" => xgb_tpu::data::save_csv(&g.train, out)?,
+        "libsvm" => xgb_tpu::data::save_libsvm(&g.train, out)?,
+        other => bail!("unknown format {other:?} (csv|libsvm)"),
+    }
+    eprintln!(
+        "wrote {} rows x {} cols of {} to {out}",
+        g.train.n_rows(),
+        g.train.n_cols(),
+        spec.name
+    );
     Ok(())
 }
 

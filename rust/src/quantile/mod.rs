@@ -7,6 +7,9 @@
 //! * [`sketch::WQSummary`] — a weighted quantile summary with the
 //!   merge/prune operations of the GK/XGBoost sketch and its ε error
 //!   bound,
+//! * [`sketch::StreamingSketch`] — the incremental per-column fold of
+//!   streamed row batches (pass 1 of the out-of-core ingestion pipeline);
+//!   batch-size- and thread-count-invariant by construction,
 //! * [`cuts::HistogramCuts`] — per-feature cut points derived from the
 //!   sketches (global bin indexing, as in XGBoost's `HistogramCuts`),
 //! * [`quantizer::QuantizedMatrix`] — the input matrix mapped to bin
@@ -19,4 +22,4 @@ pub mod sketch;
 
 pub use cuts::HistogramCuts;
 pub use quantizer::{QuantizedMatrix, Quantizer};
-pub use sketch::WQSummary;
+pub use sketch::{StreamingSketch, WQSummary};

@@ -337,6 +337,64 @@ impl SketchBuilder {
     }
 }
 
+/// Incremental per-column quantile sketch over streamed row batches —
+/// pass 1 of the out-of-core ingestion pipeline (`crate::data::source`).
+///
+/// One [`SketchBuilder`] per column; [`StreamingSketch::fold`] pushes each
+/// batch's column values in row order, and the builder merges/prunes
+/// internally at fixed chunk boundaries. Because a builder's state is a
+/// pure function of its push *sequence* (flushes trigger on buffer length,
+/// never on wall-clock or batching), the finished summaries — and hence
+/// the histogram cuts — are **bit-identical for every batch size**, and
+/// identical to sketching the fully materialized matrix. Column tasks run
+/// on the [`ExecContext`](crate::exec::ExecContext) pool; columns are
+/// independent, so the result is thread-count-invariant too.
+#[derive(Debug, Clone)]
+pub struct StreamingSketch {
+    limit: usize,
+    builders: Vec<SketchBuilder>,
+}
+
+impl StreamingSketch {
+    /// `max_bins` sizes the per-column summaries exactly as the histogram
+    /// cut generation does (`(max_bins * 8).max(64)` entries).
+    pub fn new(max_bins: usize) -> Self {
+        StreamingSketch {
+            limit: (max_bins * 8).max(64),
+            builders: Vec::new(),
+        }
+    }
+
+    /// Columns seen so far (grows monotonically across batches; a LibSVM
+    /// stream discovers its width as it goes).
+    pub fn n_cols(&self) -> usize {
+        self.builders.len()
+    }
+
+    /// Grow the column set to at least `n` (new columns start empty and
+    /// finish as single-sentinel-bin features if never observed).
+    pub fn ensure_cols(&mut self, n: usize) {
+        while self.builders.len() < n {
+            self.builders.push(SketchBuilder::new(self.limit));
+        }
+    }
+
+    /// Fold one batch: every present value of column `c` is pushed (in row
+    /// order, unit weight) into that column's builder. Chunk-parallel over
+    /// columns on `exec`.
+    pub fn fold(&mut self, x: &crate::data::DMatrix, exec: &crate::exec::ExecContext) {
+        self.ensure_cols(x.n_cols());
+        exec.parallel_map_mut(&mut self.builders, |col, b| {
+            x.for_each_in_column(col, |_, v| b.push(v, 1.0));
+        });
+    }
+
+    /// Finish every column's summary (consumes the sketch).
+    pub fn finish(self) -> Vec<WQSummary> {
+        self.builders.into_iter().map(|b| b.finish()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,6 +499,35 @@ mod tests {
         assert!((s.total_weight() - 1000.0).abs() < 1e-9);
         assert_eq!(s.entries.first().unwrap().value, 0.0);
         assert_eq!(s.entries.last().unwrap().value, 999.0);
+    }
+
+    #[test]
+    fn streaming_sketch_invariant_to_batch_size_and_threads() {
+        use crate::data::DMatrix;
+        let n = 5000usize;
+        let mut rng = crate::util::Pcg64::new(17);
+        let vals: Vec<f32> = (0..n * 3)
+            .map(|_| if rng.next_f64() < 0.05 { f32::NAN } else { rng.next_f32() * 10.0 })
+            .collect();
+        let x = DMatrix::dense(vals, n, 3);
+        let run = |batch: usize, threads: usize| -> Vec<Vec<Entry>> {
+            let exec = crate::exec::ExecContext::new(threads);
+            let mut s = StreamingSketch::new(16);
+            let mut row = 0usize;
+            while row < n {
+                let hi = (row + batch).min(n);
+                let rows: Vec<usize> = (row..hi).collect();
+                s.fold(&x.take_rows(&rows), &exec);
+                row = hi;
+            }
+            s.finish().into_iter().map(|w| w.entries).collect()
+        };
+        let reference = run(n, 1); // one batch == fully materialized
+        for batch in [1usize, 7, 64, 999] {
+            for threads in [1usize, 4] {
+                assert_eq!(run(batch, threads), reference, "batch={batch} threads={threads}");
+            }
+        }
     }
 
     #[test]

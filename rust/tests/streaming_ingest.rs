@@ -1,0 +1,244 @@
+//! Streaming-ingestion equivalence suite: `Learner::train_from_source`
+//! must produce **bit-identical** trees, predictions and metrics to the
+//! in-memory `Learner::train` path, for every batch size and thread
+//! count, on dense CSV streams, sparse LibSVM streams (with qid groups)
+//! and the synthetic sources — the acceptance contract of the out-of-core
+//! pipeline (`rust/src/data/source.rs`).
+
+use std::path::PathBuf;
+
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::{
+    load_csv, load_libsvm, save_csv, save_libsvm, BatchSource, CsvSource, DMatrixSource,
+    Dataset, LibsvmSource, SyntheticSource,
+};
+use xgb_tpu::gbm::{Booster, Learner, LearnerParams, MetricKind, ObjectiveKind};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("xgb_tpu_streaming_{name}"))
+}
+
+fn base_params(objective: ObjectiveKind, threads: usize) -> LearnerParams {
+    LearnerParams {
+        objective,
+        num_rounds: 5,
+        max_depth: 3,
+        max_bins: 16,
+        n_devices: 2,
+        threads,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+fn train_mem(params: LearnerParams, train: &Dataset, valid: Option<&Dataset>) -> Booster {
+    Learner::from_params(params)
+        .unwrap()
+        .train(train, valid)
+        .unwrap()
+}
+
+fn train_stream(
+    params: LearnerParams,
+    src: &mut dyn BatchSource,
+    valid: Option<&Dataset>,
+) -> Booster {
+    Learner::from_params(params)
+        .unwrap()
+        .train_from_source(src, valid)
+        .unwrap()
+}
+
+/// Trees, base score and the full eval history (train and valid metric
+/// values, compared at the bit level) must match.
+fn assert_identical(reference: &Booster, streamed: &Booster, ctx: &str) {
+    assert_eq!(reference.trees, streamed.trees, "{ctx}: trees differ");
+    assert_eq!(reference.base_score, streamed.base_score, "{ctx}: base score");
+    assert_eq!(
+        reference.eval_history.len(),
+        streamed.eval_history.len(),
+        "{ctx}: eval history length"
+    );
+    for (a, b) in reference.eval_history.iter().zip(streamed.eval_history.iter()) {
+        assert_eq!(a.metric, b.metric, "{ctx}: metric name");
+        assert_eq!(
+            a.train.to_bits(),
+            b.train.to_bits(),
+            "{ctx} round {}: train metric {} vs {}",
+            a.round,
+            a.train,
+            b.train
+        );
+        assert_eq!(
+            a.valid.map(f64::to_bits),
+            b.valid.map(f64::to_bits),
+            "{ctx} round {}: valid metric",
+            a.round
+        );
+    }
+}
+
+/// Batch sizes from the issue contract: tiny (forces many partial
+/// batches), medium, and the whole dataset in one batch.
+fn batch_sizes(n: usize) -> [usize; 3] {
+    [7, 64, n]
+}
+
+#[test]
+fn dense_csv_stream_is_bit_identical() {
+    let g = generate(&DatasetSpec::airline_like(700), 41);
+    let path = tmp("dense.csv");
+    save_csv(&g.train, &path).unwrap();
+    // the in-memory reference reads the same file through the same text
+    // round-trip, so both paths see identical floats
+    let mem = load_csv(&path, 0, false).unwrap();
+    assert_eq!(mem.n_rows(), g.train.n_rows());
+
+    for threads in [1usize, 4] {
+        let params = base_params(ObjectiveKind::BinaryLogistic, threads);
+        let reference = train_mem(params.clone(), &mem, Some(&g.valid));
+        for batch in batch_sizes(mem.n_rows()) {
+            let mut src = CsvSource::open(&path, 0, false, batch).unwrap();
+            let streamed = train_stream(params.clone(), &mut src, Some(&g.valid));
+            assert_identical(
+                &reference,
+                &streamed,
+                &format!("csv batch={batch} threads={threads}"),
+            );
+            // prediction parity on held-out rows (same trees => must hold;
+            // cheap belt-and-braces through the booster surface)
+            assert_eq!(
+                reference.predict(&g.valid.x),
+                streamed.predict(&g.valid.x),
+                "csv batch={batch} threads={threads}: predictions"
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sparse_libsvm_stream_with_qid_is_bit_identical() {
+    // ranking data: sparse-format file + qid groups + rank:pairwise
+    let g = generate(&DatasetSpec::ranking_like(600), 43);
+    let path = tmp("ranking.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let mem = load_libsvm(&path).unwrap();
+    assert_eq!(mem.groups, g.train.groups, "groups survive the text round-trip");
+
+    for threads in [1usize, 4] {
+        let mut params = base_params(ObjectiveKind::RankPairwise, threads);
+        params.eval_metric = Some(MetricKind::Ndcg);
+        let reference = train_mem(params.clone(), &mem, Some(&g.valid));
+        for batch in batch_sizes(mem.n_rows()) {
+            let mut src = LibsvmSource::open(&path, batch).unwrap();
+            let streamed = train_stream(params.clone(), &mut src, Some(&g.valid));
+            assert_identical(
+                &reference,
+                &streamed,
+                &format!("libsvm batch={batch} threads={threads}"),
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn truly_sparse_libsvm_stream_is_bit_identical() {
+    // bosch-like CSR data exercises per-shard ELLPACK strides and the
+    // 1-based column autodetect of the streaming reader
+    let g = generate(&DatasetSpec::bosch_like(500), 47);
+    let path = tmp("bosch.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let mem = load_libsvm(&path).unwrap();
+
+    let params = base_params(ObjectiveKind::BinaryLogistic, 2);
+    let reference = train_mem(params.clone(), &mem, None);
+    for batch in [23usize, mem.n_rows()] {
+        let mut src = LibsvmSource::open(&path, batch).unwrap();
+        let streamed = train_stream(params.clone(), &mut src, None);
+        assert_identical(&reference, &streamed, &format!("bosch batch={batch}"));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn synthetic_source_is_bit_identical_including_multiclass() {
+    // covtype + multi:softmax also exercises the chunk-parallel softmax
+    // gradients through the streamed label dataset
+    let g = generate(&DatasetSpec::covtype_like(700), 53);
+    for threads in [1usize, 4] {
+        let mut params = base_params(ObjectiveKind::MultiSoftmax, threads);
+        params.num_class = 7;
+        params.num_rounds = 3;
+        let reference = train_mem(params.clone(), &g.train, Some(&g.valid));
+        for batch in batch_sizes(g.train.n_rows()) {
+            let mut src = DMatrixSource::from_dataset(&g.train, batch);
+            let streamed = train_stream(params.clone(), &mut src, Some(&g.valid));
+            assert_identical(
+                &reference,
+                &streamed,
+                &format!("synthetic batch={batch} threads={threads}"),
+            );
+        }
+    }
+    // and the owned SyntheticSource adapter streams the same train split
+    let params = base_params(ObjectiveKind::MultiSoftmax, 1);
+    let mut p = params.clone();
+    p.num_class = 7;
+    p.num_rounds = 3;
+    let reference = train_mem(p.clone(), &g.train, None);
+    let mut src = SyntheticSource::new(&DatasetSpec::covtype_like(700), 53, 64);
+    assert_eq!(src.dataset().y, g.train.y, "adapter streams the train split");
+    let streamed = train_stream(p, &mut src, None);
+    assert_identical(&reference, &streamed, "SyntheticSource");
+}
+
+#[test]
+fn compressed_and_uncompressed_streams_agree() {
+    let g = generate(&DatasetSpec::higgs_like(600), 59);
+    for compress in [true, false] {
+        let mut params = base_params(ObjectiveKind::BinaryLogistic, 2);
+        params.compress = compress;
+        let reference = train_mem(params.clone(), &g.train, None);
+        let mut src = DMatrixSource::from_dataset(&g.train, 37);
+        let streamed = train_stream(params, &mut src, None);
+        assert_identical(&reference, &streamed, &format!("compress={compress}"));
+    }
+}
+
+#[test]
+fn streaming_peak_transient_is_bounded_by_batch_not_dataset() {
+    use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
+
+    let g = generate(&DatasetSpec::higgs_like(8000), 61);
+    let full_float_bytes = g.train.x.float_bytes();
+    let params = CoordinatorParams {
+        n_devices: 2,
+        max_bins: 16,
+        ..Default::default()
+    };
+    let mut peaks = Vec::new();
+    for batch in [64usize, 512] {
+        let mut src = DMatrixSource::from_dataset(&g.train, batch);
+        let (_, meta) = MultiDeviceCoordinator::from_source(&mut src, params.clone()).unwrap();
+        // contract: transient floats scale with the batch, not the dataset
+        assert!(
+            meta.peak_transient_bytes < full_float_bytes / 4,
+            "batch={batch}: peak {} vs full {}",
+            meta.peak_transient_bytes,
+            full_float_bytes
+        );
+        // float part of the peak is exactly one batch's worth
+        assert!(
+            meta.peak_batch_float_bytes <= batch * g.train.n_cols() * 4,
+            "batch={batch}: float peak {}",
+            meta.peak_batch_float_bytes
+        );
+        peaks.push(meta.peak_transient_bytes);
+    }
+    assert!(
+        peaks[0] < peaks[1],
+        "smaller batches must mean smaller transient peaks: {peaks:?}"
+    );
+}

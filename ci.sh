@@ -66,4 +66,26 @@ if [[ -z "$MEM_FINAL" || "$MEM_FINAL" != "$STREAM_FINAL" ]]; then
     exit 1
 fi
 
+# External-memory smoke: the same file trained fully resident vs with a
+# 2-page residency budget (pages spilled to disk, prefetched back per
+# histogram round) must produce the exact same final metric. TMPDIR is
+# pointed inside SMOKE_DIR so any spill files a crashed run leaves behind
+# are swept by the trap above (normal runs delete them on drop).
+echo "==> external-memory smoke (CLI)"
+PAGED_TMP="$SMOKE_DIR/spill"
+mkdir -p "$PAGED_TMP"
+PAGED_FINAL=$(TMPDIR="$PAGED_TMP" ./target/release/xgb-tpu train "${SMOKE_FLAGS[@]}" \
+    --max-resident-pages 2 --page-rows 256 2>/dev/null | grep '^final:' || true)
+echo "resident:  $MEM_FINAL"
+echo "paged:     $PAGED_FINAL"
+if [[ -z "$PAGED_FINAL" || "$MEM_FINAL" != "$PAGED_FINAL" ]]; then
+    echo "FAIL: paged eval metric does not match the fully resident run"
+    exit 1
+fi
+LEFTOVER=$(find "$PAGED_TMP" -name '*.pages' | wc -l)
+if [[ "$LEFTOVER" -ne 0 ]]; then
+    echo "FAIL: $LEFTOVER spill page file(s) left behind after training"
+    exit 1
+fi
+
 echo "CI OK"

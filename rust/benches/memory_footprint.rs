@@ -11,7 +11,13 @@
 //!   size — compared per dataset against the in-memory path's transient
 //!   footprint (full float matrix + full u32 bin matrix) and emitted as
 //!   the tracked trajectory artifact `BENCH_memory.json` (override the
-//!   path with `XGB_BENCH_OUT`; batch rows with `XGB_BENCH_BATCH_ROWS`).
+//!   path with `XGB_BENCH_OUT`; batch rows with `XGB_BENCH_BATCH_ROWS`),
+//! * the external-memory contract (M3): with packed pages spilled to
+//!   disk (`max_resident_pages`, `XGB_BENCH_RESIDENT_PAGES`; page size
+//!   `XGB_BENCH_PAGE_ROWS`), measured peak resident compressed bytes per
+//!   tree stay within `max_resident_pages × page_bytes` while the full
+//!   matrix lives on disk — resident vs spilled bytes per dataset also
+//!   land in `BENCH_memory.json`.
 //!
 //! Measures the packed bytes of each dataset's ELLPACK matrix at bench
 //! scale and projects the airline number analytically to the paper's full
@@ -127,6 +133,84 @@ fn main() -> anyhow::Result<()> {
         ));
     }
     print!("{}", t2.render());
+
+    // M3: external-memory footprint — spill the packed pages to disk and
+    // train one tree per dataset under a small residency budget; the
+    // resident share (measured peak) must be a small, budget-bounded
+    // fraction of the spilled (on-disk) matrix.
+    let page_rows = env_usize("XGB_BENCH_PAGE_ROWS", 8192);
+    let budget = env_usize("XGB_BENCH_RESIDENT_PAGES", 4);
+    println!(
+        "\n=== M3: external-memory resident vs spilled bytes \
+         (max_resident_pages={budget}, page_rows={page_rows}) ===\n"
+    );
+    let mut t3 = Table::new(&[
+        "Dataset", "Rows", "spilled MB", "peak resident MB", "bound MB", "pages loaded",
+        "prefetch-hidden s",
+    ]);
+    let mut json_m3: Vec<String> = Vec::new();
+    for spec in DatasetSpec::table1(scale) {
+        let g = generate(&spec, 42);
+        let params = CoordinatorParams {
+            n_devices: 1,
+            compress: true,
+            max_bins,
+            max_resident_pages: budget,
+            page_rows,
+            ..Default::default()
+        };
+        let mut src = DMatrixSource::from_dataset(&g.train, batch_rows);
+        let (mut coord, _meta) = MultiDeviceCoordinator::from_source(&mut src, params)?;
+        let mean: f32 = g.train.y.iter().sum::<f32>() / g.train.y.len().max(1) as f32;
+        let grads: Vec<xgb_tpu::GradPair> = g
+            .train
+            .y
+            .iter()
+            .map(|&y| xgb_tpu::GradPair::new(mean - y, 1.0))
+            .collect();
+        let r = coord.build_tree(&grads)?;
+        let spilled: usize = coord.device_bytes().iter().sum();
+        let max_page: usize = coord
+            .devices
+            .iter()
+            .map(|d| match &d.storage {
+                xgb_tpu::coordinator::device::ShardStorage::Paged(ps) => ps.max_page_bytes(),
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        let bound = budget * max_page;
+        let peak = r.stats.peak_resident_page_bytes;
+        assert!(peak <= bound, "{}: peak {peak} exceeds bound {bound}", spec.name);
+        t3.add_row(vec![
+            spec.name.into(),
+            format!("{}", g.train.n_rows()),
+            format!("{:.2}", spilled as f64 / 1e6),
+            format!("{:.2}", peak as f64 / 1e6),
+            format!("{:.2}", bound as f64 / 1e6),
+            format!("{}", r.stats.pages_loaded),
+            format!("{:.3}", r.stats.prefetch_hidden_secs()),
+        ]);
+        json_m3.push(format!(
+            "    {{\"name\": \"{}\", \"rows\": {}, \"page_rows\": {}, \
+             \"max_resident_pages\": {}, \"spilled_bytes\": {}, \
+             \"peak_resident_bytes\": {}, \"resident_bound_bytes\": {}, \
+             \"pages_loaded\": {}, \"page_load_secs\": {:.6}, \
+             \"page_wait_secs\": {:.6}}}",
+            spec.name,
+            g.train.n_rows(),
+            page_rows,
+            budget,
+            spilled,
+            peak,
+            bound,
+            r.stats.pages_loaded,
+            r.stats.page_load_secs,
+            r.stats.page_wait_secs,
+        ));
+    }
+    print!("{}", t3.render());
+
     let out_path =
         std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
     let mut json = String::new();
@@ -137,6 +221,9 @@ fn main() -> anyhow::Result<()> {
     json.push_str(&format!("  \"batch_rows\": {batch_rows},\n"));
     json.push_str("  \"datasets\": [\n");
     json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str("  \"external_memory\": [\n");
+    json.push_str(&json_m3.join(",\n"));
     json.push_str("\n  ]\n}\n");
     std::fs::write(&out_path, &json)?;
     eprintln!("wrote {out_path}");

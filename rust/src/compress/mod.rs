@@ -15,6 +15,8 @@
 
 use crate::quantile::QuantizedMatrix;
 
+pub mod page;
+
 /// Bit-packed ELLPACK matrix.
 #[derive(Debug, Clone)]
 pub struct CompressedMatrix {
@@ -63,6 +65,43 @@ impl CompressedMatrix {
             n_bins: qm.n_bins,
             dense: qm.dense,
         }
+    }
+
+    /// Reassemble from raw packed words (the external-memory page loader;
+    /// `words` must carry the trailing pad word and use the exact layout
+    /// of [`CompressedMatrix::from_quantized`]).
+    pub fn from_words(
+        words: Vec<u64>,
+        symbol_bits: u32,
+        n_rows: usize,
+        n_features: usize,
+        row_stride: usize,
+        n_bins: usize,
+        dense: bool,
+    ) -> Self {
+        let total_bits = (n_rows * row_stride) as u64 * symbol_bits as u64;
+        assert!(
+            words.len() == total_bits.div_ceil(64) as usize + 1,
+            "word count {} does not match shape ({} rows x {} stride x {} bits)",
+            words.len(),
+            n_rows,
+            row_stride,
+            symbol_bits
+        );
+        CompressedMatrix {
+            words,
+            symbol_bits,
+            n_rows,
+            n_features,
+            row_stride,
+            n_bins,
+            dense,
+        }
+    }
+
+    /// The packed little-endian word stream (incl. the trailing pad word).
+    pub fn words(&self) -> &[u64] {
+        &self.words
     }
 
     #[inline]
@@ -268,6 +307,11 @@ impl CompressedMatrixBuilder {
         } else {
             self.cursor / self.row_stride
         }
+    }
+
+    /// Rows this builder was declared for.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
     }
 
     /// Finish packing; panics if fewer rows were appended than declared.

@@ -1,0 +1,781 @@
+//! External-memory page store: spill sealed bit-packed pages to a
+//! per-shard on-disk file and fetch them back per histogram round (Ou,
+//! *Out-of-Core GPU Gradient Boosting*, arXiv 2005.09148 — the missing
+//! piece of the paper's §2.2 story once the dataset's *packed* form no
+//! longer fits in host RAM).
+//!
+//! # Page format
+//!
+//! A shard's page file is a fixed-stride sequence of self-describing
+//! pages. Every page holds `page_rows` consecutive shard rows (the last
+//! page may be shorter), bit-packed **independently** from bit 0 with the
+//! shard's symbol width — so each page's words are exactly what
+//! [`CompressedMatrix::from_quantized`] produces for that row slice
+//! (pinned by the page-format property test). On disk a page is
+//!
+//! ```text
+//! [magic u64][rows u64][bit-width u64][word count u64][checksum u64]
+//! [words ... little-endian u64 ...]
+//! ```
+//!
+//! with the checksum an FNV-1a 64 over the words' bytes; a flipped bit
+//! anywhere in the payload fails the load with a corruption error.
+//!
+//! # Residency contract
+//!
+//! [`PageStore::load_page`] is the only way page words enter memory, and
+//! every loaded page is accounted against the store's resident-byte
+//! counters until the last [`PageHandle`] drops. The training paths keep
+//! at most `max_resident_pages` handles alive per shard (the paged
+//! histogram builder's double-buffered prefetch counts its queue, the
+//! in-flight load and the page being accumulated against the same
+//! budget), so peak resident compressed bytes are bounded by
+//! `max_resident_pages × page_bytes` — measured, not assumed:
+//! [`PageStore::take_round_stats`] reports the observed peak, surfaced as
+//! `BuildStats::peak_resident_page_bytes`.
+//!
+//! The page file is deleted when the store drops (spill files are
+//! per-process temporaries, never a persistence format).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::{bits_for_symbols, CompressedMatrix, CompressedMatrixBuilder};
+
+/// Magic prefix of every on-disk page.
+pub const PAGE_MAGIC: u64 = 0x5847_4250_4147_4531; // "XGBPAGE1"
+
+/// Default rows per sealed page. At 28 dense features × 9 bits/symbol
+/// this is ~2 MB of packed words per page — large enough that sequential
+/// reads dominate seek cost, small enough that a handful of resident
+/// pages stays far below any realistic host budget.
+pub const DEFAULT_PAGE_ROWS: usize = 65_536;
+
+/// FNV-1a 64 over the packed words' bytes — the page payload checksum.
+pub fn checksum64(words: &[u64]) -> u64 {
+    const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV64_PRIME);
+        }
+    }
+    h
+}
+
+/// In-memory index entry for one on-disk page.
+#[derive(Debug, Clone, Copy)]
+pub struct PageMeta {
+    /// Byte offset of the page header in the file.
+    pub offset: u64,
+    /// Rows packed in this page.
+    pub rows: usize,
+    /// Packed words written (including the branch-free pad word).
+    pub words: usize,
+    /// FNV-1a 64 over the words' bytes.
+    pub checksum: u64,
+}
+
+/// Shape shared by every page of a shard (the ELLPACK geometry).
+#[derive(Debug, Clone, Copy)]
+pub struct PageShape {
+    pub n_rows: usize,
+    pub n_features: usize,
+    pub row_stride: usize,
+    pub n_bins: usize,
+    pub dense: bool,
+    pub symbol_bits: u32,
+}
+
+/// One page fetched from disk: a self-contained [`CompressedMatrix`] over
+/// the page's rows plus its position in the shard. Resident bytes are
+/// released (and the store's counter decremented) when the last clone of
+/// the owning [`PageHandle`] drops.
+pub struct LoadedPage {
+    /// Packed rows of this page; `matrix.n_rows == meta.rows`, row 0 of
+    /// the matrix is shard row `first_row`.
+    pub matrix: CompressedMatrix,
+    /// Shard-local index of the page's first row.
+    pub first_row: usize,
+    /// Page index within the shard's file.
+    pub index: usize,
+    bytes: usize,
+    counters: Arc<ResidentCounters>,
+}
+
+impl Drop for LoadedPage {
+    fn drop(&mut self) {
+        self.counters.resident.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// Shared, cheaply clonable reference to a resident page.
+pub type PageHandle = Arc<LoadedPage>;
+
+#[derive(Default)]
+struct ResidentCounters {
+    /// Sum of bytes of all currently resident pages.
+    resident: AtomicUsize,
+    /// High-water mark of `resident` since the last stats drain.
+    peak: AtomicUsize,
+}
+
+#[derive(Default)]
+struct LoadCounters {
+    pages_loaded: AtomicU64,
+    load_nanos: AtomicU64,
+    wait_nanos: AtomicU64,
+}
+
+/// Per-round paging statistics drained by the coordinator after each
+/// tree ([`PageStore::take_round_stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PageRoundStats {
+    pub pages_loaded: u64,
+    /// Total seconds spent reading + verifying pages (I/O worker time).
+    pub load_secs: f64,
+    /// Seconds the accumulator actually blocked waiting for a page; the
+    /// difference `load_secs − wait_secs` is the I/O latency hidden by
+    /// prefetch.
+    pub wait_secs: f64,
+    pub peak_resident_bytes: usize,
+}
+
+/// A sealed, spilled shard: the page index plus an open handle on the
+/// page file. All reads go through [`PageStore::load_page`]; the file is
+/// removed on drop.
+pub struct PageStore {
+    path: PathBuf,
+    file: Mutex<File>,
+    metas: Vec<PageMeta>,
+    pub shape: PageShape,
+    /// Fixed row count of every page except possibly the last.
+    pub page_rows: usize,
+    /// Resident-page budget this store was built under (≥ 1).
+    pub max_resident_pages: usize,
+    resident: Arc<ResidentCounters>,
+    loads: LoadCounters,
+    /// One-slot row cursor for random-access readers (the partitioner's
+    /// [`BinSource`](crate::tree::partitioner::BinSource) path): rows are
+    /// visited in ascending order there, so a single cached handle turns
+    /// per-row access into one load per page. The old page is dropped
+    /// *before* the next loads, keeping this path at one resident page.
+    row_cache: Mutex<Option<PageHandle>>,
+}
+
+impl std::fmt::Debug for PageStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PageStore")
+            .field("path", &self.path)
+            .field("pages", &self.metas.len())
+            .field("page_rows", &self.page_rows)
+            .field("shape", &self.shape)
+            .finish()
+    }
+}
+
+/// Delete a spill page file and, when its parent is a coordinator-owned
+/// spill dir (never an arbitrary caller directory like `$TMPDIR`
+/// itself), the dir too once the last sibling's file is gone
+/// (`remove_dir` fails while non-empty — that's fine).
+fn cleanup_spill_file(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    if let Some(dir) = path.parent() {
+        let owned = dir
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with(SPILL_DIR_PREFIX));
+        if owned {
+            let _ = std::fs::remove_dir(dir);
+        }
+    }
+}
+
+/// Name prefix of per-coordinator spill directories — the marker
+/// [`cleanup_spill_file`] uses to tell dirs this module owns apart from
+/// caller-provided locations.
+pub const SPILL_DIR_PREFIX: &str = "xgb_tpu_spill_";
+
+impl Drop for PageStore {
+    fn drop(&mut self) {
+        cleanup_spill_file(&self.path);
+    }
+}
+
+impl PageStore {
+    pub fn n_pages(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.shape.n_rows
+    }
+
+    /// Page index holding shard row `row`.
+    #[inline]
+    pub fn page_of_row(&self, row: usize) -> usize {
+        row / self.page_rows
+    }
+
+    /// Total packed bytes across all pages — the *spilled* size (what a
+    /// fully resident `CompressedMatrix` of this shard would occupy,
+    /// modulo per-page pad words).
+    pub fn spilled_bytes(&self) -> usize {
+        self.metas.iter().map(|m| m.words * 8).sum()
+    }
+
+    /// Largest single page's packed bytes — the `page_bytes` factor of
+    /// the peak-memory bound `max_resident_pages × page_bytes`.
+    pub fn max_page_bytes(&self) -> usize {
+        self.metas.iter().map(|m| m.words * 8).max().unwrap_or(0)
+    }
+
+    /// Currently resident packed bytes (live [`PageHandle`]s).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.resident.load(Ordering::Relaxed)
+    }
+
+    /// Read, verify and account one page. The returned handle keeps the
+    /// page's bytes resident until dropped.
+    pub fn load_page(&self, index: usize) -> Result<PageHandle> {
+        let t = Instant::now();
+        let meta = *self
+            .metas
+            .get(index)
+            .with_context(|| format!("page {index} out of range ({})", self.metas.len()))?;
+        // decode straight into the word vector through a small staging
+        // buffer: during a load only ~1x page_bytes of packed data exist
+        // (plus 8 KB scratch), keeping the measured residency honest
+        // against the `max_resident_pages × page_bytes` bound
+        let mut header_buf = [0u8; 40];
+        let mut words = vec![0u64; meta.words];
+        {
+            let mut file = self.file.lock().unwrap();
+            file.seek(SeekFrom::Start(meta.offset))
+                .with_context(|| format!("seeking page {index} in {}", self.path.display()))?;
+            file.read_exact(&mut header_buf)
+                .with_context(|| format!("reading page {index} from {}", self.path.display()))?;
+            let mut staged = [0u8; 8192];
+            let mut filled = 0usize;
+            while filled < meta.words {
+                let take = (meta.words - filled).min(staged.len() / 8);
+                let bytes = &mut staged[..take * 8];
+                file.read_exact(bytes).with_context(|| {
+                    format!("reading page {index} payload from {}", self.path.display())
+                })?;
+                for (k, c) in bytes.chunks_exact(8).enumerate() {
+                    words[filled + k] = u64::from_le_bytes(c.try_into().unwrap());
+                }
+                filled += take;
+            }
+        }
+        let header: Vec<u64> = header_buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        ensure!(
+            header[0] == PAGE_MAGIC,
+            "page {index} of {}: bad magic {:#x}",
+            self.path.display(),
+            header[0]
+        );
+        ensure!(
+            header[1] as usize == meta.rows
+                && header[2] == self.shape.symbol_bits as u64
+                && header[3] as usize == meta.words,
+            "page {index} of {}: header disagrees with the page table",
+            self.path.display()
+        );
+        let sum = checksum64(&words);
+        if sum != meta.checksum || sum != header[4] {
+            bail!(
+                "page {index} of {} is corrupted: checksum {sum:#x} != recorded {:#x}",
+                self.path.display(),
+                meta.checksum
+            );
+        }
+        let bytes = words.len() * 8;
+        let resident = self.resident.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.resident.peak.fetch_max(resident, Ordering::Relaxed);
+        let page = Arc::new(LoadedPage {
+            matrix: CompressedMatrix::from_words(
+                words,
+                self.shape.symbol_bits,
+                meta.rows,
+                self.shape.n_features,
+                self.shape.row_stride,
+                self.shape.n_bins,
+                self.shape.dense,
+            ),
+            first_row: index * self.page_rows,
+            index,
+            bytes,
+            counters: Arc::clone(&self.resident),
+        });
+        self.loads.pages_loaded.fetch_add(1, Ordering::Relaxed);
+        self.loads
+            .load_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(page)
+    }
+
+    /// Record seconds a consumer spent blocked waiting for a page (the
+    /// paged histogram builder calls this around its prefetch receives).
+    pub fn note_wait(&self, secs: f64) {
+        self.loads
+            .wait_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Random-access row read through the one-slot cursor cache — the
+    /// repartition path. Drops the previously cached page before loading
+    /// the next, so this path never holds more than one page resident.
+    pub fn page_for_row(&self, row: usize) -> Result<PageHandle> {
+        let index = self.page_of_row(row);
+        let mut cache = self.row_cache.lock().unwrap();
+        if let Some(h) = cache.as_ref() {
+            if h.index == index {
+                return Ok(Arc::clone(h));
+            }
+        }
+        *cache = None; // release before loading: ≤ 1 resident on this path
+        let h = self.load_page(index)?;
+        *cache = Some(Arc::clone(&h));
+        Ok(h)
+    }
+
+    /// Drop the row cursor's cached page (called before a histogram round
+    /// so the round's prefetch queue owns the whole residency budget).
+    pub fn clear_row_cache(&self) {
+        *self.row_cache.lock().unwrap() = None;
+    }
+
+    /// Drain the per-round counters (the peak resets to the *current*
+    /// residency so per-tree maxima accumulate correctly).
+    pub fn take_round_stats(&self) -> PageRoundStats {
+        let stats = PageRoundStats {
+            pages_loaded: self.loads.pages_loaded.swap(0, Ordering::Relaxed),
+            load_secs: self.loads.load_nanos.swap(0, Ordering::Relaxed) as f64 / 1e9,
+            wait_secs: self.loads.wait_nanos.swap(0, Ordering::Relaxed) as f64 / 1e9,
+            peak_resident_bytes: self.resident.peak.load(Ordering::Relaxed),
+        };
+        self.resident
+            .peak
+            .store(self.resident.resident.load(Ordering::Relaxed), Ordering::Relaxed);
+        stats
+    }
+}
+
+/// Streaming page-file writer: appends sealed pages, accumulating the
+/// in-memory page table [`PageFileWriter::finish`] hands to the store.
+/// A writer dropped **without** `finish` (an ingestion error path)
+/// deletes its partially written file, so failed runs leave no spill
+/// litter behind; after `finish` the [`PageStore`] owns the cleanup.
+pub struct PageFileWriter {
+    /// `None` after `finish` hands ownership (and cleanup) to the store.
+    path: Option<PathBuf>,
+    out: Option<BufWriter<File>>,
+    metas: Vec<PageMeta>,
+    offset: u64,
+    symbol_bits: u32,
+}
+
+impl Drop for PageFileWriter {
+    fn drop(&mut self) {
+        if let Some(path) = self.path.take() {
+            drop(self.out.take()); // close before unlinking
+            cleanup_spill_file(&path);
+        }
+    }
+}
+
+impl PageFileWriter {
+    pub fn create(path: impl AsRef<Path>, symbol_bits: u32) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .create(true)
+            .truncate(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("creating page file {}", path.display()))?;
+        Ok(PageFileWriter {
+            path: Some(path),
+            out: Some(BufWriter::new(file)),
+            metas: Vec::new(),
+            offset: 0,
+            symbol_bits,
+        })
+    }
+
+    /// Spill one sealed page (a [`CompressedMatrix`] over the page's rows,
+    /// packed from bit 0 — what [`CompressedMatrixBuilder::finish`]
+    /// produces for the row slice).
+    pub fn write_page(&mut self, page: &CompressedMatrix) -> Result<()> {
+        ensure!(
+            page.symbol_bits == self.symbol_bits,
+            "page symbol width {} != shard width {}",
+            page.symbol_bits,
+            self.symbol_bits
+        );
+        let words = page.words();
+        let checksum = checksum64(words);
+        let header = [
+            PAGE_MAGIC,
+            page.n_rows as u64,
+            self.symbol_bits as u64,
+            words.len() as u64,
+            checksum,
+        ];
+        let out = self.out.as_mut().expect("writer already finished");
+        for h in header {
+            out.write_all(&h.to_le_bytes())?;
+        }
+        for w in words {
+            out.write_all(&w.to_le_bytes())?;
+        }
+        self.metas.push(PageMeta {
+            offset: self.offset,
+            rows: page.n_rows,
+            words: words.len(),
+            checksum,
+        });
+        self.offset += 40 + words.len() as u64 * 8;
+        Ok(())
+    }
+
+    /// Flush and seal the file into a readable [`PageStore`] (which takes
+    /// over deleting it on drop).
+    pub fn finish(
+        mut self,
+        shape: PageShape,
+        page_rows: usize,
+        max_resident_pages: usize,
+    ) -> Result<PageStore> {
+        ensure!(page_rows >= 1, "page_rows must be >= 1");
+        ensure!(max_resident_pages >= 1, "max_resident_pages must be >= 1");
+        let mut out = self.out.take().expect("writer already finished");
+        out.flush()?;
+        let file = out
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing page file: {e}"))?;
+        Ok(PageStore {
+            // taking the path disarms this writer's Drop cleanup
+            path: self.path.take().expect("writer already finished"),
+            file: Mutex::new(file),
+            metas: std::mem::take(&mut self.metas),
+            shape,
+            page_rows,
+            max_resident_pages,
+            resident: Arc::new(ResidentCounters::default()),
+            loads: LoadCounters::default(),
+            row_cache: Mutex::new(None),
+        })
+    }
+}
+
+/// Row-append packer that seals fixed-row-count pages straight into a
+/// spill file — the external-memory twin of [`CompressedMatrixBuilder`]
+/// (pass 2 of the streaming pipeline pushes rows here when a
+/// `max_resident_pages` budget is set, so the full packed shard never
+/// materializes in RAM either).
+pub struct PagedMatrixBuilder {
+    writer: PageFileWriter,
+    current: CompressedMatrixBuilder,
+    shape: PageShape,
+    page_rows: usize,
+    max_resident_pages: usize,
+    rows_pushed: usize,
+}
+
+impl PagedMatrixBuilder {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        path: impl AsRef<Path>,
+        n_rows: usize,
+        n_features: usize,
+        row_stride: usize,
+        n_bins: usize,
+        dense: bool,
+        page_rows: usize,
+        max_resident_pages: usize,
+    ) -> Result<Self> {
+        ensure!(page_rows >= 1, "page_rows must be >= 1");
+        ensure!(max_resident_pages >= 1, "max_resident_pages must be >= 1");
+        let symbol_bits = bits_for_symbols(n_bins + 1);
+        let shape = PageShape {
+            n_rows,
+            n_features,
+            row_stride,
+            n_bins,
+            dense,
+            symbol_bits,
+        };
+        Ok(PagedMatrixBuilder {
+            writer: PageFileWriter::create(path, symbol_bits)?,
+            current: CompressedMatrixBuilder::new(
+                page_rows.min(n_rows.max(1)),
+                n_features,
+                row_stride,
+                n_bins,
+                dense,
+            ),
+            shape,
+            page_rows,
+            max_resident_pages,
+            rows_pushed: 0,
+        })
+    }
+
+    /// Append one row (padded to the stride exactly as the in-memory
+    /// builder pads); seals and spills the page when it fills.
+    pub fn push_row(&mut self, symbols: &[u32]) -> Result<()> {
+        ensure!(
+            self.rows_pushed < self.shape.n_rows,
+            "paged builder received more rows than declared ({})",
+            self.shape.n_rows
+        );
+        self.current.push_row(symbols);
+        self.rows_pushed += 1;
+        if self.current.rows_filled() == self.current.n_rows() {
+            self.seal_page()?;
+        }
+        Ok(())
+    }
+
+    fn seal_page(&mut self) -> Result<()> {
+        let remaining = self.shape.n_rows - self.rows_pushed;
+        let next = CompressedMatrixBuilder::new(
+            self.page_rows.min(remaining.max(1)),
+            self.shape.n_features,
+            self.shape.row_stride,
+            self.shape.n_bins,
+            self.shape.dense,
+        );
+        let sealed = std::mem::replace(&mut self.current, next).finish();
+        self.writer.write_page(&sealed)
+    }
+
+    pub fn rows_filled(&self) -> usize {
+        self.rows_pushed
+    }
+
+    /// Seal any trailing partial page and open the store for reading.
+    pub fn finish(mut self) -> Result<PageStore> {
+        ensure!(
+            self.rows_pushed == self.shape.n_rows,
+            "paged builder finished with {} of {} rows",
+            self.rows_pushed,
+            self.shape.n_rows
+        );
+        if self.current.rows_filled() > 0 {
+            let sealed = self.current.finish();
+            self.writer.write_page(&sealed)?;
+        }
+        self.writer
+            .finish(self.shape, self.page_rows, self.max_resident_pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantile::QuantizedMatrix;
+    use crate::util::prop::{check, Gen};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("xgb_tpu_page_{name}_{}", std::process::id()))
+    }
+
+    fn random_qm(g: &mut Gen, n_rows: usize, n_cols: usize, n_bins: usize) -> QuantizedMatrix {
+        // dense alphabet of n_bins real symbols + the null symbol; rows
+        // carry arbitrary symbols incl. null so padding round-trips too
+        let bins: Vec<u32> = (0..n_rows * n_cols)
+            .map(|_| g.int(0, n_bins) as u32)
+            .collect();
+        QuantizedMatrix {
+            bins,
+            n_rows,
+            n_features: n_cols,
+            row_stride: n_cols,
+            n_bins,
+            dense: true,
+        }
+    }
+
+    fn spill(qm: &QuantizedMatrix, page_rows: usize, path: &Path) -> PageStore {
+        let mut b = PagedMatrixBuilder::new(
+            path,
+            qm.n_rows,
+            qm.n_features,
+            qm.row_stride,
+            qm.n_bins,
+            qm.dense,
+            page_rows,
+            2,
+        )
+        .unwrap();
+        for r in 0..qm.n_rows {
+            b.push_row(qm.row(r)).unwrap();
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn page_words_bit_exact_vs_from_quantized() {
+        // property: for random (rows, cols, bit-width, page size), every
+        // spilled page's words equal from_quantized over the row slice
+        check(0x9a6e, 40, |g| {
+            let n_rows = g.int(1, 200);
+            let n_cols = g.int(1, 12);
+            // bit-width via the bin count: 1..=4097 symbols -> 1..13 bits
+            let n_bins = g.int(1, 1 << g.int(0, 12));
+            let page_rows = g.int(1, n_rows + 3);
+            let qm = random_qm(g, n_rows, n_cols, n_bins);
+            let path = tmp(&format!("prop_{}", g.case));
+            let store = spill(&qm, page_rows, &path);
+            assert_eq!(store.n_pages(), n_rows.div_ceil(page_rows));
+            for p in 0..store.n_pages() {
+                let lo = p * page_rows;
+                let hi = (lo + page_rows).min(n_rows);
+                let slice = QuantizedMatrix {
+                    bins: qm.bins[lo * qm.row_stride..hi * qm.row_stride].to_vec(),
+                    n_rows: hi - lo,
+                    n_features: qm.n_features,
+                    row_stride: qm.row_stride,
+                    n_bins: qm.n_bins,
+                    dense: qm.dense,
+                };
+                let reference = CompressedMatrix::from_quantized(&slice);
+                let loaded = store.load_page(p).unwrap();
+                assert_eq!(
+                    loaded.matrix.words(),
+                    reference.words(),
+                    "page {p}: spilled words must be bit-exact vs from_quantized"
+                );
+                assert_eq!(loaded.matrix.symbol_bits, reference.symbol_bits);
+                assert_eq!(loaded.first_row, lo);
+                assert_eq!(loaded.matrix.decode().bins, slice.bins);
+            }
+        });
+    }
+
+    #[test]
+    fn corrupted_checksum_rejected() {
+        let mut g = Gen {
+            rng: crate::util::Pcg64::new(77),
+            case: 0,
+        };
+        let qm = random_qm(&mut g, 64, 5, 15);
+        let path = tmp("corrupt");
+        let store = spill(&qm, 16, &path);
+        assert!(store.load_page(1).is_ok());
+        // flip one byte inside page 1's payload
+        let meta = store.metas[1];
+        {
+            let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+            f.seek(SeekFrom::Start(meta.offset + 40 + 3)).unwrap();
+            let mut b = [0u8; 1];
+            f.read_exact(&mut b).unwrap();
+            f.seek(SeekFrom::Start(meta.offset + 40 + 3)).unwrap();
+            f.write_all(&[b[0] ^ 0xff]).unwrap();
+        }
+        let err = store.load_page(1).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        // untouched pages still load
+        assert!(store.load_page(0).is_ok());
+    }
+
+    #[test]
+    fn residency_is_accounted_and_released() {
+        let mut g = Gen {
+            rng: crate::util::Pcg64::new(78),
+            case: 0,
+        };
+        let qm = random_qm(&mut g, 100, 4, 7);
+        let path = tmp("resident");
+        let store = spill(&qm, 32, &path);
+        assert_eq!(store.resident_bytes(), 0);
+        let a = store.load_page(0).unwrap();
+        let b = store.load_page(1).unwrap();
+        assert_eq!(store.resident_bytes(), a.bytes + b.bytes);
+        drop(a);
+        assert_eq!(store.resident_bytes(), b.bytes);
+        drop(b);
+        assert_eq!(store.resident_bytes(), 0);
+        let stats = store.take_round_stats();
+        assert_eq!(stats.pages_loaded, 2);
+        assert!(stats.peak_resident_bytes > 0);
+        assert!(stats.peak_resident_bytes <= 2 * store.max_page_bytes());
+    }
+
+    #[test]
+    fn row_cursor_holds_one_page() {
+        let mut g = Gen {
+            rng: crate::util::Pcg64::new(79),
+            case: 0,
+        };
+        let qm = random_qm(&mut g, 90, 3, 5);
+        let path = tmp("cursor");
+        let store = spill(&qm, 16, &path);
+        for row in 0..qm.n_rows {
+            let h = store.page_for_row(row).unwrap();
+            let local = row - h.first_row;
+            for s in 0..qm.row_stride {
+                assert_eq!(
+                    h.matrix.symbol(local * qm.row_stride + s),
+                    qm.bins[row * qm.row_stride + s],
+                    "row {row} slot {s}"
+                );
+            }
+            drop(h);
+            // cursor cache + nothing else => at most one page resident
+            assert!(store.resident_bytes() <= store.max_page_bytes());
+        }
+        store.clear_row_cache();
+        assert_eq!(store.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn abandoned_writer_removes_partial_file() {
+        // ingestion error path: a builder dropped without finish() must
+        // not leave spill litter behind
+        let mut g = Gen {
+            rng: crate::util::Pcg64::new(81),
+            case: 0,
+        };
+        let qm = random_qm(&mut g, 40, 3, 5);
+        let path = tmp("abandoned");
+        let mut b = PagedMatrixBuilder::new(
+            &path, qm.n_rows, qm.n_features, qm.row_stride, qm.n_bins, qm.dense, 8, 2,
+        )
+        .unwrap();
+        for r in 0..qm.n_rows / 2 {
+            b.push_row(qm.row(r)).unwrap();
+        }
+        assert!(path.exists());
+        drop(b); // no finish(): simulated pass-2 failure
+        assert!(!path.exists(), "partial spill file must be deleted");
+    }
+
+    #[test]
+    fn spill_file_removed_on_drop() {
+        let mut g = Gen {
+            rng: crate::util::Pcg64::new(80),
+            case: 0,
+        };
+        let qm = random_qm(&mut g, 20, 2, 3);
+        let path = tmp("cleanup");
+        let store = spill(&qm, 8, &path);
+        assert!(path.exists());
+        drop(store);
+        assert!(!path.exists(), "page file must be deleted with the store");
+    }
+}

@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context as _, Result};
 
 use crate::comm::{allreduce, CostModel};
 use crate::coordinator::device::{DeviceShard, HistBackend, NativeBackend, ShardStorage};
@@ -67,6 +67,17 @@ pub struct BuildStats {
     pub hist_wall_secs: f64,
     /// **Measured** wall-clock of the repartition device phase.
     pub partition_wall_secs: f64,
+    /// External-memory pages read back from spill files (all shards).
+    pub pages_loaded: u64,
+    /// Seconds spent reading + checksum-verifying pages (I/O work,
+    /// largely hidden by prefetch — compare with `page_wait_secs`).
+    pub page_load_secs: f64,
+    /// Seconds the accumulators actually blocked waiting for a page.
+    pub page_wait_secs: f64,
+    /// Measured high-water mark of resident packed page bytes on any
+    /// shard — the quantity the `max_resident_pages × page_bytes`
+    /// contract bounds. Zero while fully resident.
+    pub peak_resident_page_bytes: usize,
 }
 
 impl BuildStats {
@@ -99,6 +110,19 @@ impl BuildStats {
         self.simulated_secs += other.simulated_secs;
         self.hist_wall_secs += other.hist_wall_secs;
         self.partition_wall_secs += other.partition_wall_secs;
+        self.pages_loaded += other.pages_loaded;
+        self.page_load_secs += other.page_load_secs;
+        self.page_wait_secs += other.page_wait_secs;
+        self.peak_resident_page_bytes = self
+            .peak_resident_page_bytes
+            .max(other.peak_resident_page_bytes);
+    }
+
+    /// Page-I/O seconds hidden by the async prefetch: the load work that
+    /// ran while accumulation proceeded (total load time minus time the
+    /// accumulator was actually blocked).
+    pub fn prefetch_hidden_secs(&self) -> f64 {
+        (self.page_load_secs - self.page_wait_secs).max(0.0)
     }
 
     /// Total measured device compute (sum over all devices — the work, not
@@ -193,6 +217,7 @@ impl MultiDeviceCoordinator {
         } else {
             shard_strides(&meta.row_nnz, &bounds)
         };
+        let paging = PagingSpec::from_params(&params)?;
         let (devices, pass2_peak) = assemble_shards(
             src,
             &cuts,
@@ -202,6 +227,7 @@ impl MultiDeviceCoordinator {
             &strides,
             meta.dense,
             params.compress,
+            paging.as_ref(),
             &exec,
         )?;
         meta.peak_transient_bytes = meta.peak_batch_float_bytes.max(pass2_peak);
@@ -250,6 +276,7 @@ impl MultiDeviceCoordinator {
                 (false, shard_strides(&nnz, &bounds))
             }
         };
+        let paging = PagingSpec::from_params(&params)?;
         let mut src = DMatrixSource::new(x, DEFAULT_BATCH_ROWS);
         let (devices, _peak) = assemble_shards(
             &mut src,
@@ -260,6 +287,7 @@ impl MultiDeviceCoordinator {
             &strides,
             dense,
             params.compress,
+            paging.as_ref(),
             &exec,
         )?;
         Ok(Self::assembled(params, cuts, devices, n, backend, exec))
@@ -312,9 +340,21 @@ impl MultiDeviceCoordinator {
         self.cuts.total_bins()
     }
 
-    /// Resident feature-matrix bytes per device (paper's "600 MB/GPU").
+    /// Feature-matrix bytes per device (paper's "600 MB/GPU"). For paged
+    /// shards this is the spilled (on-disk) size — see
+    /// [`device_resident_bytes`](Self::device_resident_bytes).
     pub fn device_bytes(&self) -> Vec<usize> {
         self.devices.iter().map(|d| d.storage.bytes()).collect()
+    }
+
+    /// Feature-matrix bytes currently held in host memory per device
+    /// (equals [`device_bytes`](Self::device_bytes) while fully
+    /// resident; live page handles only when spilled).
+    pub fn device_resident_bytes(&self) -> Vec<usize> {
+        self.devices
+            .iter()
+            .map(|d| d.storage.resident_bytes())
+            .collect()
     }
 
     /// All-reduce a set of per-device f64 buffers; returns (merged copy,
@@ -532,6 +572,18 @@ impl MultiDeviceCoordinator {
             }
         }
 
+        // drain this tree's paging counters from every spilled shard
+        for dev in &self.devices {
+            if let ShardStorage::Paged(ps) = &dev.storage {
+                let s = ps.take_round_stats();
+                stats.pages_loaded += s.pages_loaded;
+                stats.page_load_secs += s.load_secs;
+                stats.page_wait_secs += s.wait_secs;
+                stats.peak_resident_page_bytes =
+                    stats.peak_resident_page_bytes.max(s.peak_resident_bytes);
+            }
+        }
+
         Ok(TreeBuildResult {
             tree,
             deltas,
@@ -624,8 +676,60 @@ fn shard_strides(row_nnz: &[u32], bounds: &[usize]) -> Vec<usize> {
         .collect()
 }
 
+/// How pass 2 should spill packed pages to disk (None = fully resident).
+#[derive(Debug)]
+pub(crate) struct PagingSpec {
+    pub page_rows: usize,
+    pub max_resident_pages: usize,
+    /// Per-coordinator temp dir holding one page file per shard; removed
+    /// with the last shard's `PageStore`.
+    pub dir: std::path::PathBuf,
+}
+
+impl Drop for PagingSpec {
+    /// Sweep the spill dir if construction failed before any shard's
+    /// page file landed in it (an occupied dir makes `remove_dir` fail,
+    /// which is the success case — the page stores own cleanup then).
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir(&self.dir);
+    }
+}
+
+impl PagingSpec {
+    /// Build the spill spec for these params, creating the temp dir
+    /// (`None` while fully resident). Paging packs pages by definition,
+    /// so it requires the compressed storage form.
+    fn from_params(params: &CoordinatorParams) -> Result<Option<Self>> {
+        if params.max_resident_pages == 0 {
+            return Ok(None);
+        }
+        ensure!(
+            params.compress,
+            "max_resident_pages > 0 requires compress = true (pages are bit-packed)"
+        );
+        ensure!(params.page_rows >= 1, "page_rows must be >= 1");
+        static SPILL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        // the prefix marks the dir as spill-owned, so the page stores may
+        // remove it once the last shard's file is gone
+        let dir = std::env::temp_dir().join(format!(
+            "{}{}_{}",
+            crate::compress::page::SPILL_DIR_PREFIX,
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        Ok(Some(PagingSpec {
+            page_rows: params.page_rows,
+            max_resident_pages: params.max_resident_pages,
+            dir,
+        }))
+    }
+}
+
 /// Incremental shard storage: rows append in global order, padded to the
-/// shard's ELLPACK stride, either as raw u32 bins or bit-packed pages.
+/// shard's ELLPACK stride — raw u32 bins, bit-packed words, or bit-packed
+/// pages spilled straight to the shard's on-disk page file.
 enum ShardBuilder {
     Quantized {
         bins: Vec<u32>,
@@ -636,18 +740,36 @@ enum ShardBuilder {
         dense: bool,
     },
     Compressed(CompressedMatrixBuilder),
+    Paged(crate::compress::page::PagedMatrixBuilder),
 }
 
 impl ShardBuilder {
+    #[allow(clippy::too_many_arguments)]
     fn new(
+        shard_id: usize,
         n_rows: usize,
         n_features: usize,
         row_stride: usize,
         n_bins: usize,
         dense: bool,
         compress: bool,
-    ) -> Self {
-        if compress {
+        paging: Option<&PagingSpec>,
+    ) -> Result<Self> {
+        if let Some(p) = paging {
+            return Ok(ShardBuilder::Paged(
+                crate::compress::page::PagedMatrixBuilder::new(
+                    p.dir.join(format!("shard{shard_id}.pages")),
+                    n_rows,
+                    n_features,
+                    row_stride,
+                    n_bins,
+                    dense,
+                    p.page_rows,
+                    p.max_resident_pages,
+                )?,
+            ));
+        }
+        Ok(if compress {
             ShardBuilder::Compressed(CompressedMatrixBuilder::new(
                 n_rows, n_features, row_stride, n_bins, dense,
             ))
@@ -660,10 +782,10 @@ impl ShardBuilder {
                 n_bins,
                 dense,
             }
-        }
+        })
     }
 
-    fn push_row(&mut self, symbols: &[u32]) {
+    fn push_row(&mut self, symbols: &[u32]) -> Result<()> {
         match self {
             ShardBuilder::Quantized {
                 bins,
@@ -682,13 +804,18 @@ impl ShardBuilder {
                 );
                 bins.extend_from_slice(symbols);
                 bins.resize(bins.len() + (*row_stride - symbols.len()), *n_bins as u32);
+                Ok(())
             }
-            ShardBuilder::Compressed(b) => b.push_row(symbols),
+            ShardBuilder::Compressed(b) => {
+                b.push_row(symbols);
+                Ok(())
+            }
+            ShardBuilder::Paged(b) => b.push_row(symbols),
         }
     }
 
-    fn finish(self) -> ShardStorage {
-        match self {
+    fn finish(self) -> Result<ShardStorage> {
+        Ok(match self {
             ShardBuilder::Quantized {
                 bins,
                 n_rows,
@@ -708,16 +835,20 @@ impl ShardBuilder {
                 })
             }
             ShardBuilder::Compressed(b) => ShardStorage::Compressed(b.finish()),
-        }
+            ShardBuilder::Paged(b) => ShardStorage::Paged(b.finish()?),
+        })
     }
 }
 
 /// **Pass 2** of the streaming pipeline: re-stream the source, quantise
 /// each batch against the frozen cuts (chunk-parallel; chunk boundaries
 /// depend only on the batch size, so results are thread-count-invariant)
-/// and append every row to its owning device shard. Returns the shards
-/// plus the peak transient bytes of this pass (batch floats + symbol
-/// scratch — the quantities the O(`batch_rows × n_cols`) contract bounds).
+/// and append every row to its owning device shard — into RAM, or, with
+/// a `paging` spec, straight into the shard's on-disk spill writer so
+/// the packed pages never fully materialize in memory either. Returns
+/// the shards plus the peak transient bytes of this pass (batch floats +
+/// symbol scratch — the quantities the O(`batch_rows × n_cols`) contract
+/// bounds).
 #[allow(clippy::too_many_arguments)]
 fn assemble_shards(
     src: &mut dyn BatchSource,
@@ -728,6 +859,7 @@ fn assemble_shards(
     strides: &[usize],
     dense: bool,
     compress: bool,
+    paging: Option<&PagingSpec>,
     exec: &ExecContext,
 ) -> Result<(Vec<DeviceShard>, usize)> {
     let p = strides.len();
@@ -738,15 +870,17 @@ fn assemble_shards(
     let mut builders: Vec<ShardBuilder> = (0..p)
         .map(|d| {
             ShardBuilder::new(
+                d,
                 bounds[d + 1] - bounds[d],
                 n_cols,
                 strides[d],
                 n_bins,
                 dense,
                 compress,
+                paging,
             )
         })
-        .collect();
+        .collect::<Result<_>>()?;
 
     let mut next_row = 0usize;
     let mut dev = 0usize;
@@ -795,7 +929,7 @@ fn assemble_shards(
                 while next_row >= bounds[dev + 1] {
                     dev += 1;
                 }
-                builders[dev].push_row(row_syms);
+                builders[dev].push_row(row_syms)?;
                 next_row += 1;
             }
         }
@@ -807,8 +941,8 @@ fn assemble_shards(
     let devices: Vec<DeviceShard> = builders
         .into_iter()
         .enumerate()
-        .map(|(d, b)| DeviceShard::new(d, bounds[d], b.finish()))
-        .collect();
+        .map(|(d, b)| Ok(DeviceShard::new(d, bounds[d], b.finish()?)))
+        .collect::<Result<_>>()?;
     Ok((devices, peak))
 }
 

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::compress::page::PageStore;
 use crate::compress::CompressedMatrix;
 use crate::exec::ExecContext;
 use crate::hist::{self, Histogram};
@@ -77,13 +78,17 @@ impl ParallelHistBackend for NativeBackend {
     ) -> Result<()> {
         match &shard.storage {
             ShardStorage::Quantized(qm) => {
-                hist::build_histogram_quantized_par(qm, &shard.gradients, rows, out, exec)
+                hist::build_histogram_quantized_par(qm, &shard.gradients, rows, out, exec);
+                Ok(())
             }
             ShardStorage::Compressed(cm) => {
-                hist::build_histogram_compressed_par(cm, &shard.gradients, rows, out, exec)
+                hist::build_histogram_compressed_par(cm, &shard.gradients, rows, out, exec);
+                Ok(())
+            }
+            ShardStorage::Paged(ps) => {
+                hist::build_histogram_paged(ps, &shard.gradients, rows, out, exec)
             }
         }
-        Ok(())
     }
 }
 
@@ -107,11 +112,14 @@ impl HistBackend for NativeBackend {
     }
 }
 
-/// Shard storage: raw u32 bins or bit-packed (§2.2).
-#[derive(Debug, Clone)]
+/// Shard storage: raw u32 bins, bit-packed (§2.2), or bit-packed pages
+/// spilled to a per-shard on-disk file and fetched per histogram round
+/// (external memory; [`crate::compress::page`]).
+#[derive(Debug)]
 pub enum ShardStorage {
     Quantized(QuantizedMatrix),
     Compressed(CompressedMatrix),
+    Paged(PageStore),
 }
 
 impl ShardStorage {
@@ -119,6 +127,7 @@ impl ShardStorage {
         match self {
             ShardStorage::Quantized(q) => q.n_rows,
             ShardStorage::Compressed(c) => c.n_rows,
+            ShardStorage::Paged(p) => p.n_rows(),
         }
     }
 
@@ -126,6 +135,7 @@ impl ShardStorage {
         match self {
             ShardStorage::Quantized(q) => q.n_bins,
             ShardStorage::Compressed(c) => c.n_bins,
+            ShardStorage::Paged(p) => p.shape.n_bins,
         }
     }
 
@@ -133,15 +143,29 @@ impl ShardStorage {
         match self {
             ShardStorage::Quantized(q) => q.row_stride,
             ShardStorage::Compressed(c) => c.row_stride,
+            ShardStorage::Paged(p) => p.shape.row_stride,
         }
     }
 
-    /// Resident bytes of the feature matrix on this device — the quantity
-    /// behind the paper's "600 MB per GPU" claim.
+    /// Total bytes of the feature matrix on this device — the quantity
+    /// behind the paper's "600 MB per GPU" claim. For a paged shard this
+    /// is the *spilled* (on-disk) size; the resident share is bounded by
+    /// the page budget and reported by [`ShardStorage::resident_bytes`].
     pub fn bytes(&self) -> usize {
         match self {
             ShardStorage::Quantized(q) => q.bytes(),
             ShardStorage::Compressed(c) => c.bytes(),
+            ShardStorage::Paged(p) => p.spilled_bytes(),
+        }
+    }
+
+    /// Bytes of the feature matrix currently held in host memory. Equals
+    /// [`bytes`](Self::bytes) for resident storage; for a paged shard,
+    /// the live page handles only (≤ `max_resident_pages × page_bytes`).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            ShardStorage::Paged(p) => p.resident_bytes(),
+            other => other.bytes(),
         }
     }
 
@@ -149,6 +173,17 @@ impl ShardStorage {
         match self {
             ShardStorage::Quantized(q) => BinSource::Quantized(q),
             ShardStorage::Compressed(c) => BinSource::Compressed(c),
+            ShardStorage::Paged(p) => BinSource::Paged(p),
+        }
+    }
+
+    /// Clone resident storage (test fixtures). Paged shards are not
+    /// clonable: the spill file is uniquely owned by its store.
+    pub fn clone_in_memory(&self) -> ShardStorage {
+        match self {
+            ShardStorage::Quantized(q) => ShardStorage::Quantized(q.clone()),
+            ShardStorage::Compressed(c) => ShardStorage::Compressed(c.clone()),
+            ShardStorage::Paged(_) => panic!("paged shard storage cannot be cloned"),
         }
     }
 }

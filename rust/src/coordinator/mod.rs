@@ -24,6 +24,35 @@
 //! pipeline, so streamed and in-memory construction are bit-identical by
 //! construction — for every batch size, device count and thread count.
 //!
+//! # External memory: the resident-vs-spilled page lifecycle
+//!
+//! With [`CoordinatorParams::max_resident_pages`] `> 0` the packed pages
+//! themselves stop being a full-size allocation. Pass 2 pushes each row
+//! into a [`crate::compress::page::PagedMatrixBuilder`], which seals a
+//! page every [`CoordinatorParams::page_rows`] rows and **spills** it to
+//! the shard's temp page file (header: rows, bit-width, word count,
+//! checksum). Training then cycles every page through
+//!
+//! 1. **spilled** — on disk, owned by the shard's
+//!    [`crate::compress::page::PageStore`];
+//! 2. **resident** — loaded (and checksum-verified) into a ref-counted
+//!    page handle, either by the histogram round's double-buffered
+//!    prefetch worker or by the repartition cursor;
+//! 3. **released** — the handle drops as the row walk leaves the page,
+//!    and the bytes come off the store's resident counter.
+//!
+//! The peak-memory contract follows directly: per shard, resident packed
+//! bytes never exceed `max_resident_pages × page_bytes` (histogram
+//! prefetch accounts its queue + in-flight load + accumulating page
+//! against the budget; repartition holds a single page). The measured
+//! peak is reported per tree in [`BuildStats::peak_resident_page_bytes`],
+//! alongside [`BuildStats::pages_loaded`] and the prefetch-hidden I/O
+//! time. Everything else — cuts, trees, predictions, metrics — is
+//! **bit-identical** to the fully resident run at every page size,
+//! budget, thread count and device count, because the histogram
+//! accumulation bracketing is a pure function of the row list (never the
+//! page geometry); `rust/tests/external_memory.rs` pins this.
+//!
 //! # Tree construction
 //!
 //! Per expanded node the coordinator:
@@ -91,6 +120,19 @@ pub struct CoordinatorParams {
     /// hot loops are chunk-parallel. `0` = all cores, `1` = serial.
     /// Results are bit-identical for every value (see [`crate::exec`]).
     pub threads: usize,
+    /// External-memory budget: maximum bit-packed pages each device shard
+    /// may hold resident at once. `0` (the default) keeps shards fully
+    /// resident; any positive value makes pass 2 of ingestion spill
+    /// sealed pages to a per-shard temp file ([`crate::compress::page`])
+    /// and histogram rounds stream them back page-at-a-time with async
+    /// prefetch. Requires [`compress`](Self::compress). Trees,
+    /// predictions and metrics are **bit-identical** to the fully
+    /// resident run for every budget and page size
+    /// (`rust/tests/external_memory.rs`).
+    pub max_resident_pages: usize,
+    /// Rows per sealed page when spilling (the page-size knob of the
+    /// external-memory path). Ignored while fully resident.
+    pub page_rows: usize,
 }
 
 impl Default for CoordinatorParams {
@@ -108,6 +150,8 @@ impl Default for CoordinatorParams {
             colsample_bytree: 1.0,
             seed: 0,
             threads: 0,
+            max_resident_pages: 0,
+            page_rows: crate::compress::page::DEFAULT_PAGE_ROWS,
         }
     }
 }

@@ -16,7 +16,11 @@
 //!    and re-streamed; each batch is quantised against the frozen cuts and
 //!    bit-packed directly into the owning device shard's
 //!    [`CompressedMatrixBuilder`](crate::compress::CompressedMatrixBuilder)
-//!    pages (`MultiDeviceCoordinator::from_source`).
+//!    pages (`MultiDeviceCoordinator::from_source`). With an
+//!    external-memory budget (`max_resident_pages > 0`) the rows go to
+//!    the shard's on-disk spill writer
+//!    ([`PagedMatrixBuilder`](crate::compress::page::PagedMatrixBuilder))
+//!    instead, so not even the packed words are a full-size allocation.
 //!
 //! # Peak-memory contract
 //!

@@ -177,6 +177,28 @@ impl ExecContext {
         self.map_chunks(n, chunk, |ci, r| f(ci, r));
     }
 
+    /// Run `main` on the caller while `worker` runs concurrently on a
+    /// scoped thread spawned for this call — the producer/consumer shape
+    /// of the paged histogram build (the worker prefetches the next page
+    /// from disk while the caller accumulates the current one). The
+    /// worker thread is **in addition to** the configured `threads()`
+    /// budget (it spends its life blocked on I/O or a channel, not
+    /// computing, so it is not counted against the compute budget) and
+    /// always runs; callers that want a serial fallback (e.g.
+    /// `threads() <= 1`) should skip this call and inline both sides. A
+    /// panicking worker propagates at the scope join as usual.
+    pub fn run_with_worker<R, W, F>(&self, worker: W, main: F) -> R
+    where
+        R: Send,
+        W: FnOnce() + Send,
+        F: FnOnce() -> R + Send,
+    {
+        std::thread::scope(|scope| {
+            scope.spawn(worker);
+            main()
+        })
+    }
+
     /// Parallel for over disjoint mutable chunks of a slice. `f` receives
     /// `(chunk_index, start_offset, chunk)`; chunks are the usual fixed
     /// partition of the slice so writes are trivially race-free.
@@ -298,6 +320,24 @@ mod tests {
         assert!(out.is_empty());
         let mut nothing: Vec<u8> = Vec::new();
         exec.for_each_slice_mut(&mut nothing, 4, |_, _, _| unreachable!());
+    }
+
+    #[test]
+    fn run_with_worker_overlaps_producer_and_consumer() {
+        // a rendezvous channel deadlocks unless both sides actually run
+        // concurrently — which is exactly the prefetch contract
+        let (tx, rx) = std::sync::mpsc::sync_channel::<usize>(0);
+        let got = ExecContext::new(2).run_with_worker(
+            move || {
+                for i in 0..16 {
+                    if tx.send(i).is_err() {
+                        break;
+                    }
+                }
+            },
+            || rx.iter().sum::<usize>(),
+        );
+        assert_eq!(got, (0..16).sum());
     }
 
     #[test]

@@ -74,6 +74,11 @@ pub struct BoosterParams {
     /// Rows per batch for streaming ingestion (peak-memory knob; results
     /// are bit-identical for every value).
     pub batch_rows: usize,
+    /// External-memory budget: resident packed pages per shard (0 = fully
+    /// resident). Results are bit-identical for every value.
+    pub max_resident_pages: usize,
+    /// Rows per spilled page (external-memory page size).
+    pub page_rows: usize,
 }
 
 impl Default for BoosterParams {
@@ -105,6 +110,8 @@ impl Default for BoosterParams {
             verbose: d.verbose,
             threads: d.threads,
             batch_rows: d.batch_rows,
+            max_resident_pages: d.max_resident_pages,
+            page_rows: d.page_rows,
         }
     }
 }
@@ -148,6 +155,8 @@ impl BoosterParams {
             verbose: p.verbose,
             threads: p.threads,
             batch_rows: p.batch_rows,
+            max_resident_pages: p.max_resident_pages,
+            page_rows: p.page_rows,
         }
     }
 
@@ -196,6 +205,8 @@ impl BoosterParams {
             verbose: self.verbose,
             threads: self.threads,
             batch_rows: self.batch_rows,
+            max_resident_pages: self.max_resident_pages,
+            page_rows: self.page_rows,
         })
     }
 

@@ -516,6 +516,19 @@ impl LearnerBuilder {
         /// results are bit-identical for every value.
         batch_rows: usize
     );
+    setter!(
+        /// External-memory budget: packed pages each device shard keeps
+        /// resident (`0` = fully resident). With a budget, shards spill
+        /// sealed pages to disk and histogram rounds stream them back
+        /// with async prefetch. Requires `compress`; results are
+        /// bit-identical for every budget and page size.
+        max_resident_pages: usize
+    );
+    setter!(
+        /// Rows per sealed page when spilling (external-memory page
+        /// size). Results are bit-identical for every value.
+        page_rows: usize
+    );
 
     /// Evaluation metric (`None`/unset = the objective's default).
     pub fn eval_metric(mut self, metric: MetricKind) -> Self {
@@ -592,6 +605,8 @@ impl LearnerBuilder {
             "verbose" => parse_into!(verbose),
             "threads" => parse_into!(threads),
             "batch_rows" => parse_into!(batch_rows),
+            "max_resident_pages" => parse_into!(max_resident_pages),
+            "page_rows" => parse_into!(page_rows),
             other => err(format!("unknown parameter {other:?}")),
         }
         self

@@ -324,26 +324,68 @@ impl Objective for PairwiseRank {
     fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
         let n = ds.y.len();
         let m = &margins[0];
-        let mut grads = vec![GradPair::new(0.0, 1e-16); n];
         let groups: Vec<usize> = if ds.groups.is_empty() {
             vec![0, n]
         } else {
             ds.groups.clone()
         };
+        let mut grads = vec![GradPair::new(0.0, 1e-16); n];
         for w in groups.windows(2) {
-            let (lo, hi) = (w[0], w[1]);
-            for i in lo..hi {
-                for j in lo..hi {
-                    if ds.y[i] > ds.y[j] {
-                        let rho = sigmoid(-(m[i] - m[j]));
-                        let h = (rho * (1.0 - rho)).max(1e-16);
-                        grads[i].grad -= rho;
-                        grads[i].hess += h;
-                        grads[j].grad += rho;
-                        grads[j].hess += h;
-                    }
-                }
+            Self::group_gradients(&ds.y, m, w[0], w[1], &mut grads[w[0]..w[1]]);
+        }
+        vec![grads]
+    }
+
+    /// Chunk-parallel pairwise gradients. Groups are independent (every
+    /// pair lives inside one group and writes only to that group's
+    /// contiguous row range), so chunks of **whole groups** — boundaries
+    /// a pure function of the group structure, never the thread count —
+    /// concatenate to exactly the serial result: within a group the
+    /// accumulation order is untouched, and across groups the rows are
+    /// disjoint. Bit-identical at every thread count
+    /// (`pairwise_parallel_gradients_bit_identical`).
+    fn gradients_par(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+    ) -> Vec<Vec<GradPair>> {
+        let n = ds.y.len();
+        let m = &margins[0];
+        let groups: Vec<usize> = if ds.groups.is_empty() {
+            vec![0, n]
+        } else {
+            ds.groups.clone()
+        };
+        // fixed group-chunk boundaries: accumulate whole groups until a
+        // chunk covers >= ROW_CHUNK rows (depends only on `groups`)
+        let mut chunk_bounds: Vec<usize> = vec![0]; // indices into `groups`
+        let mut rows_in_chunk = 0usize;
+        for gi in 0..groups.len() - 1 {
+            rows_in_chunk += groups[gi + 1] - groups[gi];
+            if rows_in_chunk >= ROW_CHUNK {
+                chunk_bounds.push(gi + 1);
+                rows_in_chunk = 0;
             }
+        }
+        if *chunk_bounds.last().unwrap() != groups.len() - 1 {
+            chunk_bounds.push(groups.len() - 1);
+        }
+        let parts: Vec<Vec<GradPair>> = exec.run_indexed(chunk_bounds.len() - 1, |ci| {
+            let g_lo = chunk_bounds[ci];
+            let g_hi = chunk_bounds[ci + 1];
+            let row_lo = groups[g_lo];
+            let row_hi = groups[g_hi];
+            let mut part = vec![GradPair::new(0.0, 1e-16); row_hi - row_lo];
+            for gi in g_lo..g_hi {
+                let (lo, hi) = (groups[gi], groups[gi + 1]);
+                Self::group_gradients(&ds.y, m, lo, hi, &mut part[lo - row_lo..hi - row_lo]);
+            }
+            part
+        });
+        let mut grads = Vec::with_capacity(n);
+        for part in parts {
+            grads.extend(part);
         }
         vec![grads]
     }
@@ -354,6 +396,26 @@ impl Objective for PairwiseRank {
 
     fn default_metric(&self) -> &'static str {
         "ndcg"
+    }
+}
+
+impl PairwiseRank {
+    /// Accumulate one query group's pairwise gradients into `out`
+    /// (`out[k]` is row `lo + k`). Shared by the serial and chunked
+    /// paths so the per-group accumulation order is identical.
+    fn group_gradients(y: &[Float], m: &[Float], lo: usize, hi: usize, out: &mut [GradPair]) {
+        for i in lo..hi {
+            for j in lo..hi {
+                if y[i] > y[j] {
+                    let rho = sigmoid(-(m[i] - m[j]));
+                    let h = (rho * (1.0 - rho)).max(1e-16);
+                    out[i - lo].grad -= rho;
+                    out[i - lo].hess += h;
+                    out[j - lo].grad += rho;
+                    out[j - lo].hess += h;
+                }
+            }
+        }
     }
 }
 
@@ -498,6 +560,46 @@ mod tests {
                 let par = obj.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
                 assert_eq!(par, serial, "{} threads = {t}", obj.name());
             }
+        }
+    }
+
+    #[test]
+    fn pairwise_parallel_gradients_bit_identical() {
+        use crate::data::DMatrix;
+        // many small groups + a few large ones, > ROW_CHUNK total rows so
+        // several group chunks engage; also a group straddling the
+        // nominal chunk budget
+        let mut rng = crate::util::Pcg64::new(11);
+        let mut groups = vec![0usize];
+        let mut n = 0usize;
+        while n < 25_000 {
+            let size = if rng.next_f64() < 0.05 {
+                500 + rng.gen_range(400)
+            } else {
+                2 + rng.gen_range(30)
+            };
+            n += size;
+            groups.push(n);
+        }
+        let y: Vec<Float> = (0..n).map(|_| rng.gen_range(4) as Float).collect();
+        let margins = vec![(0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect::<Vec<Float>>()];
+        let ds = Dataset::with_groups(DMatrix::dense(vec![0.0; n], n, 1), y, groups);
+        let o = PairwiseRank;
+        let serial = o.gradients(&ds, &margins);
+        for t in [1usize, 2, 8] {
+            let par = o.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
+            assert_eq!(par, serial, "threads = {t}");
+        }
+        // the no-groups fallback (single implicit group) stays identical
+        let ds1 = Dataset::new(DMatrix::dense(vec![0.0; 300], 300, 1), ds.y[..300].to_vec());
+        let m1 = vec![margins[0][..300].to_vec()];
+        let s1 = o.gradients(&ds1, &m1);
+        for t in [2usize, 8] {
+            assert_eq!(
+                o.gradients_par(&ds1, &m1, &crate::exec::ExecContext::new(t)),
+                s1,
+                "no-groups threads = {t}"
+            );
         }
     }
 

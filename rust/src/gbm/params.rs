@@ -324,6 +324,17 @@ pub struct LearnerParams {
     /// Models are **bit-identical** for every value — the knob only
     /// trades peak memory against per-batch overhead.
     pub batch_rows: usize,
+    /// External-memory budget (CLI `--max-resident-pages`): maximum
+    /// bit-packed pages each device shard keeps resident. `0` (default)
+    /// = fully resident; `> 0` spills sealed pages to a per-shard temp
+    /// file and runs histogram rounds page-at-a-time with async
+    /// prefetch, bounding peak resident compressed bytes per shard by
+    /// `max_resident_pages × page_bytes`. Requires `compress`. Models
+    /// are **bit-identical** for every budget and page size.
+    pub max_resident_pages: usize,
+    /// Rows per sealed page when spilling (CLI `--page-rows`); ignored
+    /// while fully resident. Bit-identity holds for every value.
+    pub page_rows: usize,
 }
 
 impl Default for LearnerParams {
@@ -354,6 +365,8 @@ impl Default for LearnerParams {
             verbose: false,
             threads: 0,
             batch_rows: crate::data::source::DEFAULT_BATCH_ROWS,
+            max_resident_pages: 0,
+            page_rows: crate::compress::page::DEFAULT_PAGE_ROWS,
         }
     }
 }
@@ -414,6 +427,8 @@ impl LearnerParams {
             verbose: cfg.get_bool("verbose", d.verbose),
             threads: cfg.get_parse("threads", d.threads)?,
             batch_rows: cfg.get_parse("batch_rows", d.batch_rows)?,
+            max_resident_pages: cfg.get_parse("max_resident_pages", d.max_resident_pages)?,
+            page_rows: cfg.get_parse("page_rows", d.page_rows)?,
         })
     }
 
@@ -441,6 +456,8 @@ impl LearnerParams {
             colsample_bytree: self.colsample_bytree,
             seed: self.seed,
             threads: self.threads,
+            max_resident_pages: self.max_resident_pages,
+            page_rows: self.page_rows,
         }
     }
 
@@ -534,6 +551,18 @@ impl LearnerParams {
 
         if self.batch_rows == 0 {
             errs.push("batch_rows must be >= 1".to_string());
+        }
+
+        // external-memory cross-field rules
+        if self.max_resident_pages > 0 && !self.compress {
+            errs.push(
+                "max_resident_pages > 0 requires compress = true (spilled pages are \
+                 bit-packed)"
+                    .to_string(),
+            );
+        }
+        if self.page_rows == 0 {
+            errs.push("page_rows must be >= 1".to_string());
         }
 
         // evaluation cadence
@@ -661,6 +690,29 @@ mod tests {
         assert_eq!(errs.len(), 1);
         assert!(errs[0].contains("reg:squarederror"), "{}", errs[0]);
         assert!(errs[0].contains("rank:pairwise"), "{}", errs[0]);
+    }
+
+    #[test]
+    fn paging_requires_compress() {
+        let p = LearnerParams {
+            max_resident_pages: 2,
+            compress: false,
+            ..Default::default()
+        };
+        let errs = p.validation_errors(None);
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("compress"), "{}", errs[0]);
+        let ok = LearnerParams {
+            max_resident_pages: 2,
+            compress: true,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        let bad_page = LearnerParams {
+            page_rows: 0,
+            ..Default::default()
+        };
+        assert!(!bad_page.validation_errors(None).is_empty());
     }
 
     #[test]

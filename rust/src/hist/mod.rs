@@ -33,6 +33,9 @@
 //! for bit** at every thread count; the parallel variants only change
 //! which OS thread computes each chunk.
 
+use anyhow::{anyhow, ensure, Result};
+
+use crate::compress::page::{PageHandle, PageStore};
 use crate::compress::CompressedMatrix;
 use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::quantile::QuantizedMatrix;
@@ -305,6 +308,158 @@ pub fn build_histogram_compressed_par(
     });
 }
 
+/// Accumulate one fixed chunk of `rows` from spilled pages, fetching
+/// pages through `fetch` as the walk crosses page boundaries. The
+/// per-row arithmetic is identical to [`accumulate_compressed`] (each
+/// page *is* a `CompressedMatrix` over its row slice), so only the source
+/// of the packed words differs from the in-memory path. The previous
+/// page is dropped **before** the next is fetched, which is what keeps
+/// the prefetch pipeline inside the `max_resident_pages` budget.
+fn accumulate_paged_chunk<F>(
+    store: &PageStore,
+    gradients: &[GradPair],
+    chunk: &[u32],
+    out: &mut Histogram,
+    current: &mut Option<PageHandle>,
+    fetch: &mut F,
+) -> Result<()>
+where
+    F: FnMut(usize) -> Result<PageHandle>,
+{
+    let bins = &mut out.bins[..];
+    let n_bins = bins.len() as u32;
+    for &r in chunk {
+        let r = r as usize;
+        let want = store.page_of_row(r);
+        if current.as_ref().map(|p| p.index) != Some(want) {
+            *current = None; // release before fetching: stay inside budget
+            *current = Some(fetch(want)?);
+        }
+        let page = current.as_ref().expect("page fetched above");
+        let local = r - page.first_row;
+        let g = GradPairF64::from_single(gradients[r]);
+        page.matrix.for_each_symbol_in_row(local, |b| {
+            // `b < n_bins` (== null symbol) is the padding filter and the
+            // bounds proof, exactly as in `accumulate_compressed`
+            if b < n_bins {
+                // Safety: b < bins.len(), checked above.
+                unsafe { *bins.get_unchecked_mut(b as usize) += g };
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Drive the canonical fixed-chunk bracketing over spilled pages: chunk
+/// boundaries are `ROW_CHUNK` positions in the `rows` list (the same pure
+/// function of the row count the in-memory builders use — **never** a
+/// function of the page size), partials merge in ascending chunk index,
+/// and pages are fetched in first-use order as the walk advances.
+fn paged_chunked_build<F>(
+    store: &PageStore,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    fetch: &mut F,
+) -> Result<()>
+where
+    F: FnMut(usize) -> Result<PageHandle>,
+{
+    let mut current: Option<PageHandle> = None;
+    if rows.len() <= ROW_CHUNK {
+        return accumulate_paged_chunk(store, gradients, rows, out, &mut current, fetch);
+    }
+    let mut partial = Histogram::zeros(out.n_bins());
+    for chunk in rows.chunks(ROW_CHUNK) {
+        partial.reset();
+        accumulate_paged_chunk(store, gradients, chunk, &mut partial, &mut current, fetch)?;
+        out.add(&partial);
+    }
+    Ok(())
+}
+
+/// Histogram builder over an external-memory [`PageStore`] — page-at-a-
+/// time with double-buffered async prefetch.
+///
+/// **Bit-identity.** The accumulation bracketing is the in-memory
+/// builders' fixed `ROW_CHUNK` chunking of the node's row list, so the
+/// merged histogram equals [`build_histogram_compressed`] on the fully
+/// resident shard **bit for bit** for every page size, thread count and
+/// residency budget (`rust/tests/external_memory.rs`). Paging only
+/// changes *where* the packed words come from.
+///
+/// **Prefetch.** With `exec.threads() > 1` and a budget of at least two
+/// pages, an I/O worker (spawned through
+/// [`ExecContext::run_with_worker`]) loads page *k+1* while page *k*
+/// accumulates, handing pages over a bounded channel whose capacity is
+/// `max_resident_pages − 2` (queue + the load in flight + the page being
+/// accumulated = the budget). Serial engines, or a budget of one page,
+/// load synchronously. Load and blocked-wait seconds are recorded on the
+/// store and surface as `BuildStats::{page_load_secs, page_wait_secs}`.
+pub fn build_histogram_paged(
+    store: &PageStore,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+) -> Result<()> {
+    assert_eq!(out.n_bins(), store.shape.n_bins);
+    // the repartition cursor's cached page would count against this
+    // round's budget — release it so prefetch owns the whole allowance
+    store.clear_row_cache();
+    if rows.is_empty() {
+        return Ok(());
+    }
+    // first-use page sequence (consecutive dedup) — the prefetch schedule
+    let mut seq: Vec<usize> = Vec::new();
+    for &r in rows {
+        let p = store.page_of_row(r as usize);
+        if seq.last() != Some(&p) {
+            seq.push(p);
+        }
+    }
+    let budget = store.max_resident_pages;
+    if exec.threads() > 1 && budget >= 2 && seq.len() > 1 {
+        let cap = budget - 2;
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PageHandle>>(cap);
+        let seq = &seq;
+        exec.run_with_worker(
+            move || {
+                for &p in seq {
+                    if tx.send(store.load_page(p)).is_err() {
+                        break; // consumer bailed (error path); stop loading
+                    }
+                }
+            },
+            move || {
+                let mut fetch = |want: usize| -> Result<PageHandle> {
+                    let t = std::time::Instant::now();
+                    let page = rx
+                        .recv()
+                        .map_err(|_| anyhow!("page prefetch worker exited early"))??;
+                    store.note_wait(t.elapsed().as_secs_f64());
+                    ensure!(
+                        page.index == want,
+                        "prefetch schedule diverged: got page {}, want {want}",
+                        page.index
+                    );
+                    Ok(page)
+                };
+                paged_chunked_build(store, gradients, rows, out, &mut fetch)
+            },
+        )
+    } else {
+        // synchronous loads: at most one page resident at a time
+        let mut fetch = |want: usize| -> Result<PageHandle> {
+            let t = std::time::Instant::now();
+            let page = store.load_page(want)?;
+            store.note_wait(t.elapsed().as_secs_f64());
+            Ok(page)
+        };
+        paged_chunked_build(store, gradients, rows, out, &mut fetch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,6 +593,95 @@ mod tests {
                 assert_eq!(a.hess.to_bits(), b.hess.to_bits(), "threads = {t}");
             }
             assert_eq!(hq, hc, "compressed parity at threads = {t}");
+        }
+    }
+
+    #[test]
+    fn paged_builder_bit_identical_to_resident() {
+        use crate::compress::page::PagedMatrixBuilder;
+        // > 2 row chunks and page sizes that do NOT divide ROW_CHUNK, so
+        // chunk boundaries straddle pages every which way
+        let (qm, grads) = fixture(20_000, 5, 11);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let rows: Vec<u32> = (0..20_000).collect();
+        let mut resident = Histogram::zeros(qm.n_bins);
+        build_histogram_compressed(&cm, &grads, &rows, &mut resident);
+        for page_rows in [100usize, 777, 8192, 50_000] {
+            for (threads, budget) in [(1usize, 1usize), (1, 3), (4, 1), (4, 2), (4, 4)] {
+                let path = std::env::temp_dir().join(format!(
+                    "xgb_tpu_hist_paged_{}_{page_rows}_{threads}_{budget}",
+                    std::process::id()
+                ));
+                let mut b = PagedMatrixBuilder::new(
+                    &path,
+                    qm.n_rows,
+                    qm.n_features,
+                    qm.row_stride,
+                    qm.n_bins,
+                    qm.dense,
+                    page_rows,
+                    budget,
+                )
+                .unwrap();
+                for r in 0..qm.n_rows {
+                    b.push_row(qm.row(r)).unwrap();
+                }
+                let store = b.finish().unwrap();
+                let exec = crate::exec::ExecContext::new(threads);
+                let mut paged = Histogram::zeros(qm.n_bins);
+                build_histogram_paged(&store, &grads, &rows, &mut paged, &exec).unwrap();
+                for (a, b) in resident.bins.iter().zip(paged.bins.iter()) {
+                    assert_eq!(
+                        a.grad.to_bits(),
+                        b.grad.to_bits(),
+                        "page_rows={page_rows} threads={threads} budget={budget}"
+                    );
+                    assert_eq!(a.hess.to_bits(), b.hess.to_bits());
+                }
+                // nothing left resident after the build
+                assert_eq!(store.resident_bytes(), 0);
+                let stats = store.take_round_stats();
+                assert!(stats.pages_loaded as usize >= qm.n_rows.div_ceil(page_rows));
+                assert!(
+                    stats.peak_resident_bytes <= budget * store.max_page_bytes(),
+                    "peak {} > {budget} x {}",
+                    stats.peak_resident_bytes,
+                    store.max_page_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paged_builder_on_node_subsets() {
+        use crate::compress::page::PagedMatrixBuilder;
+        // non-contiguous row subset (every third row) — the post-split shape
+        let (qm, grads) = fixture(9_000, 4, 13);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let rows: Vec<u32> = (0..9_000u32).filter(|r| r % 3 == 0).collect();
+        let mut resident = Histogram::zeros(qm.n_bins);
+        build_histogram_compressed(&cm, &grads, &rows, &mut resident);
+        let path = std::env::temp_dir()
+            .join(format!("xgb_tpu_hist_paged_subset_{}", std::process::id()));
+        let mut b = PagedMatrixBuilder::new(
+            &path, qm.n_rows, qm.n_features, qm.row_stride, qm.n_bins, qm.dense, 512, 2,
+        )
+        .unwrap();
+        for r in 0..qm.n_rows {
+            b.push_row(qm.row(r)).unwrap();
+        }
+        let store = b.finish().unwrap();
+        for threads in [1usize, 4] {
+            let mut paged = Histogram::zeros(qm.n_bins);
+            build_histogram_paged(
+                &store,
+                &grads,
+                &rows,
+                &mut paged,
+                &crate::exec::ExecContext::new(threads),
+            )
+            .unwrap();
+            assert_eq!(paged, resident, "threads = {threads}");
         }
     }
 

@@ -50,6 +50,29 @@
 //! out-of-core with [`gbm::Learner::train_from_source`] (CLI: `--stream
 //! --batch-rows N`).
 //!
+//! ## Memory hierarchy: resident vs spilled pages
+//!
+//! Streaming ingestion bounds the *transient* buffers, but the packed
+//! shards themselves were still an O(`n_rows`) allocation — the ceiling
+//! was host RAM. With `max_resident_pages > 0`
+//! ([`gbm::LearnerParams::max_resident_pages`]; CLI
+//! `--max-resident-pages N`, page size `--page-rows`), pass 2 spills each
+//! sealed fixed-row-count page to a per-shard temp file
+//! ([`compress::page`]) and every page lives in exactly one of three
+//! states: **spilled** (on disk), **resident** (checksum-verified into a
+//! ref-counted handle by the histogram round's double-buffered prefetch
+//! worker or the repartition cursor), or **released** (handle dropped as
+//! the row walk leaves the page). The peak-memory contract is now stated
+//! per shard in pages: resident compressed bytes ≤ `max_resident_pages ×
+//! page_bytes`, measured per tree in
+//! [`coordinator::BuildStats::peak_resident_page_bytes`] (with
+//! `pages_loaded` and the prefetch-hidden I/O seconds alongside) and
+//! tracked by `benches/memory_footprint.rs` (M3). The training ceiling
+//! moves from host RAM to disk; trees, predictions and metrics stay
+//! **bit-identical** to the fully resident run at every page size,
+//! budget, thread count and device count
+//! (`rust/tests/external_memory.rs`).
+//!
 //! ## Quickstart
 //!
 //! Training goes through the typed [`gbm::Learner`] façade: pick an

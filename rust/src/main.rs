@@ -88,6 +88,14 @@ fn print_help() {
                                   to the in-memory run on the same rows)\n\
            --batch-rows <n>       rows per streamed batch (default 65536);\n\
                                   bounds peak transient memory only\n\
+           --max-resident-pages <n>  external-memory budget: packed pages\n\
+                                  each device shard keeps resident (0 =\n\
+                                  fully resident, the default). With a\n\
+                                  budget, shards spill sealed pages to a\n\
+                                  temp file and histogram rounds stream\n\
+                                  them back with async prefetch; the\n\
+                                  model is bit-identical either way\n\
+           --page-rows <n>        rows per spilled page (default 65536)\n\
            --valid-frac <f>       holdout fraction when training from files\n\
                                   (0 = train on all rows in file order)\n\
            --subsample <f>        row sampling rate per tree\n\
@@ -370,6 +378,20 @@ fn report_booster(
         s.total_compute_secs(),
         params.n_devices
     );
+    if s.pages_loaded > 0 {
+        println!(
+            "external memory: {} pages loaded, {:.3}s I/O ({:.3}s hidden by prefetch, \
+             {:.3}s blocked), peak resident {:.2} MB/shard \
+             (budget {} pages x {} rows/page)",
+            s.pages_loaded,
+            s.page_load_secs,
+            s.prefetch_hidden_secs(),
+            s.page_wait_secs,
+            s.peak_resident_page_bytes as f64 / 1e6,
+            params.max_resident_pages,
+            params.page_rows
+        );
+    }
 
     // optional: persist the model
     if let Some(path) = args.get("model-out") {

@@ -81,6 +81,21 @@ impl XlaHistBackend {
                         }
                     }
                 }
+                ShardStorage::Paged(ps) => {
+                    // tile rows are visited in ascending order, so the
+                    // store's one-slot row cursor gives one load per page
+                    let page = ps
+                        .page_for_row(r)
+                        .expect("loading spilled page for XLA tile");
+                    let null = page.matrix.null_symbol();
+                    let base = (r - page.first_row) * stride;
+                    for s in 0..m.hist_slots.min(stride.saturating_sub(slot_lo)) {
+                        let b = page.matrix.symbol(base + slot_lo + s);
+                        if b != null {
+                            self.bins_buf[ti * m.hist_slots + s] = b as i32;
+                        }
+                    }
+                }
             }
             let g = shard.gradients[r];
             self.grads_buf[ti * 2] = g.grad;
@@ -165,7 +180,7 @@ mod tests {
         };
         let c = MultiDeviceCoordinator::from_dmatrix(&g.train.x, params).unwrap();
         let shard = &c.devices[0];
-        let mut shard_owned = DeviceShard::new(0, 0, shard.storage.clone());
+        let mut shard_owned = DeviceShard::new(0, 0, shard.storage.clone_in_memory());
         let mut rng = crate::util::Pcg64::new(3);
         let grads: Vec<GradPair> = (0..shard_owned.n_rows())
             .map(|_| GradPair::new(rng.next_f32() - 0.5, rng.next_f32() + 0.1))
@@ -205,7 +220,7 @@ mod tests {
             ..Default::default()
         };
         let c = MultiDeviceCoordinator::from_dmatrix(&g.train.x, params).unwrap();
-        let mut shard = DeviceShard::new(0, 0, c.devices[0].storage.clone());
+        let mut shard = DeviceShard::new(0, 0, c.devices[0].storage.clone_in_memory());
         let grads: Vec<GradPair> = (0..shard.n_rows())
             .map(|i| GradPair::new((i % 5) as f32 - 2.0, 1.0))
             .collect();

@@ -9,16 +9,24 @@
 //! stay contiguous — which is what keeps the histogram builder's row reads
 //! linear.
 
+use crate::compress::page::PageStore;
 use crate::compress::CompressedMatrix;
 use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::split::SplitCandidate;
 
 /// Source of quantised bins for routing decisions — the partitioner works
-/// identically over the compressed and uncompressed matrix forms.
+/// identically over the compressed, uncompressed and externally-paged
+/// matrix forms.
 pub enum BinSource<'a> {
     Quantized(&'a QuantizedMatrix),
     Compressed(&'a CompressedMatrix),
+    /// Spilled pages ([`crate::compress::page`]). Reads go through the
+    /// store's one-slot row cursor, so a repartition pass over ascending
+    /// rows loads each page once and holds **one** page resident; the
+    /// chunk-parallel split path is bypassed for this variant (see
+    /// [`RowPartitioner::apply_split_par`]) to preserve that bound.
+    Paged(&'a PageStore),
 }
 
 impl<'a> BinSource<'a> {
@@ -27,6 +35,7 @@ impl<'a> BinSource<'a> {
         match self {
             BinSource::Quantized(q) => q.row_stride,
             BinSource::Compressed(c) => c.row_stride,
+            BinSource::Paged(p) => p.shape.row_stride,
         }
     }
 
@@ -35,6 +44,7 @@ impl<'a> BinSource<'a> {
         match self {
             BinSource::Quantized(q) => q.dense,
             BinSource::Compressed(c) => c.dense,
+            BinSource::Paged(p) => p.shape.dense,
         }
     }
 
@@ -43,6 +53,7 @@ impl<'a> BinSource<'a> {
         match self {
             BinSource::Quantized(q) => q.null_symbol(),
             BinSource::Compressed(c) => c.null_symbol(),
+            BinSource::Paged(p) => p.shape.n_bins as u32,
         }
     }
 
@@ -51,6 +62,7 @@ impl<'a> BinSource<'a> {
         match self {
             BinSource::Quantized(q) => q.bins[flat],
             BinSource::Compressed(c) => c.symbol(flat),
+            BinSource::Paged(_) => unreachable!("paged reads resolve a page first"),
         }
     }
 
@@ -59,11 +71,54 @@ impl<'a> BinSource<'a> {
     /// symbols for one inside the feature's global-bin range.
     #[inline]
     fn feature_bin(&self, row: usize, feature: usize, cuts: &HistogramCuts) -> Option<u32> {
-        let stride = self.row_stride();
+        if let BinSource::Paged(store) = self {
+            // resolve the row's page once, then read symbols from it.
+            // Deliberate panic on I/O failure: the routing API is
+            // infallible by design (every in-memory source is), a
+            // mid-partition read failure is unrecoverable for the tree
+            // anyway, and the expect payload Debug-prints the full
+            // anyhow chain (path, page index, checksum detail).
+            let page = store
+                .page_for_row(row)
+                .expect("loading spilled page during repartition");
+            let local = row - page.first_row;
+            return Self::feature_bin_at(
+                |flat| page.matrix.symbol(flat),
+                local,
+                feature,
+                cuts,
+                self.row_stride(),
+                self.dense(),
+                self.null_symbol(),
+            );
+        }
+        Self::feature_bin_at(
+            |flat| self.symbol(flat),
+            row,
+            feature,
+            cuts,
+            self.row_stride(),
+            self.dense(),
+            self.null_symbol(),
+        )
+    }
+
+    /// Shared routing lookup over any symbol reader (in-memory matrices
+    /// read at the shard-flat index; pages at the page-local index).
+    #[inline]
+    fn feature_bin_at(
+        symbol: impl Fn(usize) -> u32,
+        row: usize,
+        feature: usize,
+        cuts: &HistogramCuts,
+        stride: usize,
+        dense: bool,
+        null: u32,
+    ) -> Option<u32> {
         let base = row * stride;
-        if self.dense() {
-            let b = self.symbol(base + feature);
-            if b == self.null_symbol() {
+        if dense {
+            let b = symbol(base + feature);
+            if b == null {
                 None
             } else {
                 Some(b)
@@ -72,11 +127,11 @@ impl<'a> BinSource<'a> {
             let lo = cuts.ptrs[feature];
             let hi = cuts.ptrs[feature + 1];
             for s in 0..stride {
-                let b = self.symbol(base + s);
+                let b = symbol(base + s);
                 if b >= lo && b < hi {
                     return Some(b);
                 }
-                if b == self.null_symbol() {
+                if b == null {
                     break; // padding is trailing
                 }
             }
@@ -190,7 +245,13 @@ impl RowPartitioner {
         self.scratch_right.clear();
         self.scratch.reserve(n);
         let slice = &self.rows[seg.begin..seg.end];
-        if exec.threads() <= 1 || n <= ROW_CHUNK {
+        // Paged sources route through the store's one-page row cursor;
+        // concurrent chunks would thrash it and hold several pages
+        // resident at once. The serial pass produces the identical stable
+        // layout (pinned by `parallel_split_identical_to_serial`), so
+        // paged repartition always runs serially within the shard.
+        let paged = matches!(bins, BinSource::Paged(_));
+        if exec.threads() <= 1 || n <= ROW_CHUNK || paged {
             // single stable pass: each row's routing decision evaluated once
             for &r in slice {
                 if Self::goes_left(r, split, bins, cuts) {

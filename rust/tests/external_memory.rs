@@ -1,0 +1,280 @@
+//! External-memory determinism suite: training off spilled page files
+//! (`max_resident_pages > 0`) must produce **bit-identical** trees,
+//! predictions and metrics to the fully resident path — for every page
+//! size, residency budget, thread count and device count, on dense CSV
+//! and sparse LibSVM data — while peak resident compressed bytes stay
+//! bounded by `max_resident_pages × page_bytes` (the acceptance contract
+//! of `rust/src/compress/page.rs`).
+
+use std::path::PathBuf;
+
+use xgb_tpu::coordinator::{CoordinatorParams, MultiDeviceCoordinator};
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::{load_csv, load_libsvm, save_csv, save_libsvm, Dataset, LibsvmSource};
+use xgb_tpu::gbm::{Booster, Learner, LearnerParams, ObjectiveKind};
+use xgb_tpu::GradPair;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("xgb_tpu_extmem_{name}_{}", std::process::id()))
+}
+
+fn base_params(objective: ObjectiveKind, threads: usize, devices: usize) -> LearnerParams {
+    LearnerParams {
+        objective,
+        num_rounds: 4,
+        max_depth: 3,
+        max_bins: 16,
+        n_devices: devices,
+        threads,
+        compress: true,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+/// Trees, base score and the whole eval history compared at the bit
+/// level — the same contract the streaming-ingest suite pins.
+fn assert_identical(reference: &Booster, paged: &Booster, ctx: &str) {
+    assert_eq!(reference.trees, paged.trees, "{ctx}: trees differ");
+    assert_eq!(reference.base_score, paged.base_score, "{ctx}: base score");
+    assert_eq!(
+        reference.eval_history.len(),
+        paged.eval_history.len(),
+        "{ctx}: eval history length"
+    );
+    for (a, b) in reference.eval_history.iter().zip(paged.eval_history.iter()) {
+        assert_eq!(
+            a.train.to_bits(),
+            b.train.to_bits(),
+            "{ctx} round {}: train metric {} vs {}",
+            a.round,
+            a.train,
+            b.train
+        );
+        assert_eq!(
+            a.valid.map(f64::to_bits),
+            b.valid.map(f64::to_bits),
+            "{ctx} round {}: valid metric",
+            a.round
+        );
+    }
+}
+
+/// Page-size sweep per shard size: one page holds everything, ~3 pages,
+/// and many tiny pages (64 rows).
+fn page_sizes(shard_rows: usize) -> [usize; 3] {
+    [shard_rows + 1, shard_rows.div_ceil(3).max(1), 64]
+}
+
+#[test]
+fn dense_csv_paged_training_is_bit_identical() {
+    let g = generate(&DatasetSpec::airline_like(700), 41);
+    let path = tmp("dense.csv");
+    save_csv(&g.train, &path).unwrap();
+    // both runs read the same text round-trip so they see identical floats
+    let mem = load_csv(&path, 0, false).unwrap();
+
+    for devices in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let params = base_params(ObjectiveKind::BinaryLogistic, threads, devices);
+            let reference = Learner::from_params(params.clone())
+                .unwrap()
+                .train(&mem, Some(&g.valid))
+                .unwrap();
+            assert_eq!(reference.build_stats.pages_loaded, 0, "resident run spills nothing");
+            let shard_rows = mem.n_rows().div_ceil(devices);
+            for page_rows in page_sizes(shard_rows) {
+                for budget in [1usize, 3] {
+                    let mut p = params.clone();
+                    p.max_resident_pages = budget;
+                    p.page_rows = page_rows;
+                    let paged = Learner::from_params(p)
+                        .unwrap()
+                        .train(&mem, Some(&g.valid))
+                        .unwrap();
+                    let ctx = format!(
+                        "dense devices={devices} threads={threads} \
+                         page_rows={page_rows} budget={budget}"
+                    );
+                    assert_identical(&reference, &paged, &ctx);
+                    assert_eq!(
+                        reference.predict(&g.valid.x),
+                        paged.predict(&g.valid.x),
+                        "{ctx}: predictions"
+                    );
+                    assert!(
+                        paged.build_stats.pages_loaded > 0,
+                        "{ctx}: paged run must actually hit the spill file"
+                    );
+                    assert!(
+                        paged.build_stats.peak_resident_page_bytes > 0,
+                        "{ctx}: peak resident bytes must be measured"
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sparse_libsvm_paged_streaming_is_bit_identical() {
+    // sparse CSR + qid groups through the full out-of-core stack: stream
+    // ingestion (two-pass) packing straight into the spill writer
+    let g = generate(&DatasetSpec::ranking_like(600), 43);
+    let path = tmp("sparse.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let mem = load_libsvm(&path).unwrap();
+
+    for devices in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let params = base_params(ObjectiveKind::RankPairwise, threads, devices);
+            let reference = Learner::from_params(params.clone())
+                .unwrap()
+                .train(&mem, None)
+                .unwrap();
+            let shard_rows = mem.n_rows().div_ceil(devices);
+            for page_rows in page_sizes(shard_rows) {
+                for budget in [1usize, 3] {
+                    let mut p = params.clone();
+                    p.max_resident_pages = budget;
+                    p.page_rows = page_rows;
+                    p.batch_rows = 97; // streamed batches ⊥ page boundaries
+                    let mut src = LibsvmSource::open(&path, p.batch_rows).unwrap();
+                    let paged = Learner::from_params(p)
+                        .unwrap()
+                        .train_from_source(&mut src, None)
+                        .unwrap();
+                    let ctx = format!(
+                        "sparse devices={devices} threads={threads} \
+                         page_rows={page_rows} budget={budget}"
+                    );
+                    assert_identical(&reference, &paged, &ctx);
+                    assert!(paged.build_stats.pages_loaded > 0, "{ctx}: no pages loaded");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+fn logistic_grads(ds: &Dataset) -> Vec<GradPair> {
+    ds.y
+        .iter()
+        .map(|&y| GradPair::new(0.5 - y, 0.25))
+        .collect()
+}
+
+#[test]
+fn peak_resident_bytes_bounded_by_budget() {
+    let g = generate(&DatasetSpec::higgs_like(4_000), 7);
+    for (threads, budget) in [(1usize, 1usize), (1, 3), (4, 1), (4, 2), (4, 5)] {
+        let params = CoordinatorParams {
+            n_devices: 2,
+            compress: true,
+            max_bins: 16,
+            max_resident_pages: budget,
+            page_rows: 128,
+            threads,
+            ..Default::default()
+        };
+        let mut c = MultiDeviceCoordinator::from_dmatrix(&g.train.x, params).unwrap();
+        let grads = logistic_grads(&g.train);
+        let r = c.build_tree(&grads).unwrap();
+        // the bound: budget × the largest page of any shard
+        let max_page_bytes = c
+            .devices
+            .iter()
+            .map(|d| match &d.storage {
+                xgb_tpu::coordinator::device::ShardStorage::Paged(ps) => ps.max_page_bytes(),
+                _ => panic!("expected paged storage"),
+            })
+            .max()
+            .unwrap();
+        assert!(r.stats.pages_loaded > 0, "budget={budget}");
+        assert!(
+            r.stats.peak_resident_page_bytes <= budget * max_page_bytes,
+            "threads={threads} budget={budget}: peak {} > {} ({} x {})",
+            r.stats.peak_resident_page_bytes,
+            budget * max_page_bytes,
+            budget,
+            max_page_bytes
+        );
+        // spilled far exceeds the resident budget on this shape
+        let spilled: usize = c.device_bytes().iter().sum();
+        assert!(
+            spilled > budget * max_page_bytes,
+            "fixture too small to exercise paging: spilled {spilled}"
+        );
+        // after the tree, only the repartition cursors may hold a page
+        for d in &c.devices {
+            assert!(d.storage.resident_bytes() <= max_page_bytes);
+        }
+    }
+}
+
+#[test]
+fn paged_and_resident_share_spill_invariant_cuts() {
+    // paging must not perturb quantisation: cuts come from pass 1, pages
+    // from pass 2 — identical cuts either way
+    let g = generate(&DatasetSpec::higgs_like(900), 11);
+    let resident = MultiDeviceCoordinator::from_dmatrix(
+        &g.train.x,
+        CoordinatorParams {
+            n_devices: 2,
+            compress: true,
+            max_bins: 16,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let paged = MultiDeviceCoordinator::from_dmatrix(
+        &g.train.x,
+        CoordinatorParams {
+            n_devices: 2,
+            compress: true,
+            max_bins: 16,
+            max_resident_pages: 2,
+            page_rows: 100,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(resident.cuts, paged.cuts);
+    // decoded shard content matches the resident packed shards exactly
+    for (r, p) in resident.devices.iter().zip(paged.devices.iter()) {
+        let xgb_tpu::coordinator::device::ShardStorage::Compressed(cm) = &r.storage else {
+            panic!("resident shard should be compressed");
+        };
+        let xgb_tpu::coordinator::device::ShardStorage::Paged(ps) = &p.storage else {
+            panic!("paged shard should be paged");
+        };
+        let mut decoded: Vec<u32> = Vec::new();
+        for page in 0..ps.n_pages() {
+            decoded.extend(ps.load_page(page).unwrap().matrix.decode().bins);
+        }
+        assert_eq!(decoded, cm.decode().bins, "shard {}", r.id);
+    }
+}
+
+#[test]
+fn paging_rejects_uncompressed_storage() {
+    let g = generate(&DatasetSpec::higgs_like(300), 13);
+    let err = MultiDeviceCoordinator::from_dmatrix(
+        &g.train.x,
+        CoordinatorParams {
+            compress: false,
+            max_resident_pages: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("compress"), "{err:#}");
+    // and the typed params surface reports it at validation time
+    let p = LearnerParams {
+        compress: false,
+        max_resident_pages: 2,
+        ..Default::default()
+    };
+    assert!(p.validate().is_err());
+}

@@ -88,4 +88,47 @@ if [[ "$LEFTOVER" -ne 0 ]]; then
     exit 1
 fi
 
+# Compressed-prediction smoke: train once, then score the same file
+# through the float path, the streaming-quantised path (--stream) and
+# the external-memory path (--max-resident-pages 2). Every path prints a
+# `predictions: n=... checksum=...` fingerprint over the raw prediction
+# bits — all three must be byte-identical. The eval subcommand must
+# agree between the float and streamed paths too.
+echo "==> compressed-prediction smoke (CLI)"
+MODEL="$SMOKE_DIR/model.txt"
+./target/release/xgb-tpu train "${SMOKE_FLAGS[@]}" --model-out "$MODEL" >/dev/null 2>&1
+PRED_ARGS=(predict --model "$MODEL" --libsvm "$SMOKE_DIR/higgs.libsvm" --out /dev/null)
+# `|| true`: a crashed run (no checksum line) must reach the explicit
+# mismatch check below instead of aborting via set -e/pipefail
+SUM_FLOAT=$(./target/release/xgb-tpu "${PRED_ARGS[@]}" 2>&1 >/dev/null \
+    | grep '^predictions:' || true)
+SUM_STREAM=$(./target/release/xgb-tpu "${PRED_ARGS[@]}" --stream --batch-rows 64 2>&1 >/dev/null \
+    | grep '^predictions:' || true)
+SUM_PAGED=$(TMPDIR="$PAGED_TMP" ./target/release/xgb-tpu "${PRED_ARGS[@]}" \
+    --max-resident-pages 2 --page-rows 256 2>&1 >/dev/null \
+    | grep '^predictions:' || true)
+echo "float:  $SUM_FLOAT"
+echo "stream: $SUM_STREAM"
+echo "paged:  $SUM_PAGED"
+if [[ -z "$SUM_FLOAT" || "$SUM_FLOAT" != "$SUM_STREAM" || "$SUM_FLOAT" != "$SUM_PAGED" ]]; then
+    echo "FAIL: prediction checksums differ across the float/stream/paged paths"
+    exit 1
+fi
+LEFTOVER=$(find "$PAGED_TMP" -name '*.pages' | wc -l)
+if [[ "$LEFTOVER" -ne 0 ]]; then
+    echo "FAIL: $LEFTOVER spill page file(s) left behind after paged prediction"
+    exit 1
+fi
+EVAL_FLOAT=$(./target/release/xgb-tpu eval --model "$MODEL" \
+    --libsvm "$SMOKE_DIR/higgs.libsvm" 2>/dev/null | grep '^eval' || true)
+EVAL_STREAM=$(./target/release/xgb-tpu eval --model "$MODEL" \
+    --libsvm "$SMOKE_DIR/higgs.libsvm" --stream --batch-rows 64 2>/dev/null \
+    | grep '^eval' || true)
+echo "eval float:  $EVAL_FLOAT"
+echo "eval stream: $EVAL_STREAM"
+if [[ -z "$EVAL_FLOAT" || "$EVAL_FLOAT" != "$EVAL_STREAM" ]]; then
+    echo "FAIL: eval metric differs between the float and streamed paths"
+    exit 1
+fi
+
 echo "CI OK"

@@ -211,6 +211,64 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t3.render());
 
+    // M4: prediction peak transient bytes — the float path materializes
+    // the whole input matrix before the first prediction exists; the
+    // streaming quantised path holds one batch of floats + one batch of
+    // unclamped bins at a time (predictions are bit-identical — pinned
+    // by rust/tests/compressed_predict.rs, asserted per dataset here).
+    println!(
+        "\n=== M4: prediction peak transient bytes — float matrix vs streaming \
+         quantised (batch_rows={batch_rows}) ===\n"
+    );
+    let mut t4 = Table::new(&[
+        "Dataset", "Rows", "float matrix MB", "stream peak MB", "reduction", "batches",
+    ]);
+    let mut json_m4: Vec<String> = Vec::new();
+    for spec in DatasetSpec::table1(scale) {
+        let g = generate(&spec, 42);
+        let params = xgb_tpu::gbm::LearnerParams {
+            objective: spec.task.objective().parse().expect("infallible"),
+            num_class: spec.task.num_class(),
+            num_rounds: 2,
+            max_depth: 3,
+            max_bins,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let booster = xgb_tpu::gbm::Learner::from_params(params)?
+            .train(&g.train, None)?;
+        let float_bytes = g.train.x.float_bytes();
+        let mut src = DMatrixSource::from_dataset(&g.train, batch_rows);
+        let (preds, sm) = booster.predict_stream(&mut src)?;
+        assert_eq!(
+            preds,
+            booster.predict(&g.train.x),
+            "{}: streamed predictions must be bit-identical",
+            spec.name
+        );
+        let reduction = float_bytes as f64 / sm.peak_transient_bytes.max(1) as f64;
+        t4.add_row(vec![
+            spec.name.into(),
+            format!("{}", g.train.n_rows()),
+            format!("{:.2}", float_bytes as f64 / 1e6),
+            format!("{:.2}", sm.peak_transient_bytes as f64 / 1e6),
+            format!("{reduction:.1}x"),
+            format!("{}", sm.n_batches),
+        ]);
+        json_m4.push(format!(
+            "    {{\"name\": \"{}\", \"rows\": {}, \"batch_rows\": {}, \
+             \"float_matrix_bytes\": {}, \"stream_peak_transient_bytes\": {}, \
+             \"reduction\": {:.3}}}",
+            spec.name,
+            g.train.n_rows(),
+            batch_rows,
+            float_bytes,
+            sm.peak_transient_bytes,
+            reduction
+        ));
+    }
+    print!("{}", t4.render());
+
     let out_path =
         std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
     let mut json = String::new();
@@ -224,6 +282,9 @@ fn main() -> anyhow::Result<()> {
     json.push_str("\n  ],\n");
     json.push_str("  \"external_memory\": [\n");
     json.push_str(&json_m3.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str("  \"prediction\": [\n");
+    json.push_str(&json_m4.join(",\n"));
     json.push_str("\n  ]\n}\n");
     std::fs::write(&out_path, &json)?;
     eprintln!("wrote {out_path}");

@@ -57,17 +57,23 @@ pub const PAGE_MAGIC: u64 = 0x5847_4250_4147_4531; // "XGBPAGE1"
 /// pages stays far below any realistic host budget.
 pub const DEFAULT_PAGE_ROWS: usize = 65_536;
 
-/// FNV-1a 64 over the packed words' bytes — the page payload checksum.
-pub fn checksum64(words: &[u64]) -> u64 {
+/// FNV-1a 64 core over a byte stream — shared by the page payload
+/// checksum and the CLI's prediction fingerprint
+/// ([`crate::predict::prediction_checksum`]), so the hash constants
+/// live in exactly one place.
+pub fn fnv1a64(bytes: impl IntoIterator<Item = u8>) -> u64 {
     const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for w in words {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(FNV64_PRIME);
-        }
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
     }
     h
+}
+
+/// FNV-1a 64 over the packed words' bytes — the page payload checksum.
+pub fn checksum64(words: &[u64]) -> u64 {
+    fnv1a64(words.iter().flat_map(|w| w.to_le_bytes()))
 }
 
 /// In-memory index entry for one on-disk page.
@@ -478,6 +484,66 @@ impl PageFileWriter {
             loads: LoadCounters::default(),
             row_cache: Mutex::new(None),
         })
+    }
+}
+
+/// Run `consume` with an **in-order page fetcher** backed by the
+/// double-buffered prefetch pipeline every paged phase shares (the paged
+/// histogram build and paged prediction): with `exec.threads() > 1` and
+/// a budget of at least two pages, an I/O worker loads the pages of
+/// `seq` ahead of the consumer over a bounded channel of capacity
+/// `max_resident_pages − 2` — queue + the load in flight + the page
+/// being consumed = the budget. Serial engines, a budget of one page, or
+/// a single-page schedule load synchronously (one page resident at a
+/// time). The fetcher must be called with exactly the pages of `seq` in
+/// order (it verifies and errors on divergence); load and blocked-wait
+/// seconds land on the store's round counters either way. The
+/// repartition cursor's cached page is released first so the schedule
+/// owns the whole residency allowance.
+pub fn with_prefetched_pages<R: Send>(
+    store: &PageStore,
+    exec: &crate::exec::ExecContext,
+    seq: Vec<usize>,
+    consume: impl FnOnce(&mut dyn FnMut(usize) -> Result<PageHandle>) -> Result<R> + Send,
+) -> Result<R> {
+    store.clear_row_cache();
+    let budget = store.max_resident_pages;
+    if exec.threads() > 1 && budget >= 2 && seq.len() > 1 {
+        let cap = budget - 2;
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PageHandle>>(cap);
+        exec.run_with_worker(
+            move || {
+                for p in seq {
+                    if tx.send(store.load_page(p)).is_err() {
+                        break; // consumer bailed (error path); stop loading
+                    }
+                }
+            },
+            move || {
+                let mut fetch = |want: usize| -> Result<PageHandle> {
+                    let t = Instant::now();
+                    let page = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("page prefetch worker exited early"))??;
+                    store.note_wait(t.elapsed().as_secs_f64());
+                    ensure!(
+                        page.index == want,
+                        "prefetch schedule diverged: got page {}, want {want}",
+                        page.index
+                    );
+                    Ok(page)
+                };
+                consume(&mut fetch)
+            },
+        )
+    } else {
+        let mut fetch = |want: usize| -> Result<PageHandle> {
+            let t = Instant::now();
+            let page = store.load_page(want)?;
+            store.note_wait(t.elapsed().as_secs_f64());
+            Ok(page)
+        };
+        consume(&mut fetch)
     }
 }
 

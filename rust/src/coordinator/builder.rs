@@ -78,6 +78,14 @@ pub struct BuildStats {
     /// shard — the quantity the `max_resident_pages × page_bytes`
     /// contract bounds. Zero while fully resident.
     pub peak_resident_page_bytes: usize,
+    /// **Measured** wall-clock of quantised prediction passes: the
+    /// training loop's per-round validation scoring
+    /// ([`crate::predict::quantised::accumulate_bin_tree_par`]) and
+    /// [`MultiDeviceCoordinator::predict_margins`] /
+    /// [`MultiDeviceCoordinator::predict_leaf_indices`] calls. Pages
+    /// loaded *during prediction* land in [`pages_loaded`](Self::pages_loaded)
+    /// via the same per-store round counters as training.
+    pub predict_wall_secs: f64,
 }
 
 impl BuildStats {
@@ -116,6 +124,7 @@ impl BuildStats {
         self.peak_resident_page_bytes = self
             .peak_resident_page_bytes
             .max(other.peak_resident_page_bytes);
+        self.predict_wall_secs += other.predict_wall_secs;
     }
 
     /// Page-I/O seconds hidden by the async prefetch: the load work that
@@ -573,16 +582,7 @@ impl MultiDeviceCoordinator {
         }
 
         // drain this tree's paging counters from every spilled shard
-        for dev in &self.devices {
-            if let ShardStorage::Paged(ps) = &dev.storage {
-                let s = ps.take_round_stats();
-                stats.pages_loaded += s.pages_loaded;
-                stats.page_load_secs += s.load_secs;
-                stats.page_wait_secs += s.wait_secs;
-                stats.peak_resident_page_bytes =
-                    stats.peak_resident_page_bytes.max(s.peak_resident_bytes);
-            }
-        }
+        self.drain_page_stats(&mut stats);
 
         Ok(TreeBuildResult {
             tree,
@@ -656,6 +656,123 @@ impl MultiDeviceCoordinator {
         stats.comm_bytes_per_device += bytes;
         stats.hist_rounds += 1;
         Ok((Histogram::from_flat(&merged), max_build + sim))
+    }
+
+    /// **Compressed end-to-end prediction** (§2.4 from the §2.2
+    /// representation): raw margins for a forest grouped by output,
+    /// computed straight from the quantised shard storage — the float
+    /// matrix is never touched. Trees are translated once into
+    /// bin-threshold form against this coordinator's cuts
+    /// ([`crate::predict::quantised::BinForest`]); shards score
+    /// concurrently on the exec pool (chunk-parallel within each
+    /// resident shard under a forked budget), and a
+    /// [`ShardStorage::Paged`] shard streams its pages back through the
+    /// same prefetch pipeline and `max_resident_pages` budget as a
+    /// histogram round. Results are **bit-identical** to
+    /// [`crate::predict::predict_margins_par`] on the raw values at
+    /// every page size, budget, thread count and device count
+    /// (`rust/tests/compressed_predict.rs`).
+    ///
+    /// Returns the margins plus a [`BuildStats`] carrying
+    /// `predict_wall_secs` and any pages loaded during the pass.
+    pub fn predict_margins(
+        &self,
+        trees: &[Vec<RegTree>],
+        base_score: &[Float],
+    ) -> Result<(Vec<Vec<Float>>, BuildStats)> {
+        ensure!(
+            trees.len() == base_score.len(),
+            "tree groups ({}) != base scores ({})",
+            trees.len(),
+            base_score.len()
+        );
+        let p = self.devices.len();
+        let mut stats = BuildStats::new(p);
+        let wall = Instant::now();
+        let forest = crate::predict::quantised::BinForest::from_trees(trees, &self.cuts);
+        let dev_exec = self.exec.fork(p);
+        let shard_margins: Vec<Result<Vec<Vec<Float>>>> =
+            self.exec.parallel_map(&self.devices, |_, dev| {
+                use crate::predict::quantised as q;
+                match &dev.storage {
+                    ShardStorage::Quantized(qm) => Ok(q::predict_margins_quantized(
+                        &forest, base_score, qm, &self.cuts, &dev_exec,
+                    )),
+                    ShardStorage::Compressed(cm) => Ok(q::predict_margins_compressed(
+                        &forest, base_score, cm, &self.cuts, &dev_exec,
+                    )),
+                    ShardStorage::Paged(ps) => {
+                        q::predict_margins_paged(&forest, base_score, ps, &self.cuts, &dev_exec)
+                    }
+                }
+            });
+        let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; self.n_rows]).collect();
+        for (dev, sm) in self.devices.iter().zip(shard_margins) {
+            let sm = sm?;
+            for (k, m) in sm.into_iter().enumerate() {
+                out[k][dev.row_offset..dev.row_offset + dev.n_rows()].copy_from_slice(&m);
+            }
+        }
+        stats.predict_wall_secs = wall.elapsed().as_secs_f64();
+        self.drain_page_stats(&mut stats);
+        Ok((out, stats))
+    }
+
+    /// Leaf indices for one output group's trees, straight from the
+    /// quantised shard storage — bit-identical to
+    /// [`crate::predict::predict_leaf_indices_par`] on the raw values.
+    pub fn predict_leaf_indices(
+        &self,
+        trees: &[RegTree],
+    ) -> Result<(Vec<Vec<u32>>, BuildStats)> {
+        let p = self.devices.len();
+        let mut stats = BuildStats::new(p);
+        let wall = Instant::now();
+        let bin_trees: Vec<crate::predict::quantised::BinTree> = trees
+            .iter()
+            .map(|t| crate::predict::quantised::BinTree::from_tree(t, &self.cuts))
+            .collect();
+        let dev_exec = self.exec.fork(p);
+        let shard_leaves: Vec<Result<Vec<Vec<u32>>>> =
+            self.exec.parallel_map(&self.devices, |_, dev| {
+                use crate::predict::quantised as q;
+                match &dev.storage {
+                    ShardStorage::Quantized(qm) => {
+                        Ok(q::leaf_indices_quantized(&bin_trees, qm, &self.cuts, &dev_exec))
+                    }
+                    ShardStorage::Compressed(cm) => {
+                        Ok(q::leaf_indices_compressed(&bin_trees, cm, &self.cuts, &dev_exec))
+                    }
+                    ShardStorage::Paged(ps) => {
+                        q::leaf_indices_paged(&bin_trees, ps, &self.cuts, &dev_exec)
+                    }
+                }
+            });
+        let mut out: Vec<Vec<u32>> = trees.iter().map(|_| vec![0u32; self.n_rows]).collect();
+        for (dev, sl) in self.devices.iter().zip(shard_leaves) {
+            let sl = sl?;
+            for (t, leaves) in sl.into_iter().enumerate() {
+                out[t][dev.row_offset..dev.row_offset + dev.n_rows()].copy_from_slice(&leaves);
+            }
+        }
+        stats.predict_wall_secs = wall.elapsed().as_secs_f64();
+        self.drain_page_stats(&mut stats);
+        Ok((out, stats))
+    }
+
+    /// Fold every paged shard's round counters (pages loaded, I/O and
+    /// wait seconds, measured residency peak) into `stats`.
+    fn drain_page_stats(&self, stats: &mut BuildStats) {
+        for dev in &self.devices {
+            if let ShardStorage::Paged(ps) = &dev.storage {
+                let s = ps.take_round_stats();
+                stats.pages_loaded += s.pages_loaded;
+                stats.page_load_secs += s.load_secs;
+                stats.page_wait_secs += s.wait_secs;
+                stats.peak_resident_page_bytes =
+                    stats.peak_resident_page_bytes.max(s.peak_resident_bytes);
+            }
+        }
     }
 }
 

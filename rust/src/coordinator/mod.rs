@@ -53,6 +53,27 @@
 //! accumulation bracketing is a pure function of the row list (never the
 //! page geometry); `rust/tests/external_memory.rs` pins this.
 //!
+//! # Prediction from the compressed representation
+//!
+//! Trained trees never need the float matrix again. The frozen
+//! [`crate::quantile::HistogramCuts`] turn each tree's float thresholds
+//! into bin thresholds
+//! ([`crate::predict::quantised::threshold_to_bin`]; exact because
+//! splits are chosen *at* cut values — the comparison `bin <
+//! threshold_to_bin(t)` is precisely `v < t` for every representable
+//! row), and [`MultiDeviceCoordinator::predict_margins`] /
+//! [`MultiDeviceCoordinator::predict_leaf_indices`] traverse the shard
+//! storage directly: resident packed words unpack inline, and a
+//! [`ShardStorage::Paged`] shard streams its pages back through the same
+//! prefetch worker and `max_resident_pages` budget as a histogram round
+//! (pages cycle spilled → resident → released exactly as in training).
+//! The per-round validation scoring inside the boosting loop uses the
+//! same translation over a once-quantised valid set. All of it is
+//! **bit-identical** to the float traversal at every page size, budget,
+//! thread count and device count (`rust/tests/compressed_predict.rs`);
+//! measured time lands in [`BuildStats::predict_wall_secs`], pages read
+//! during prediction in [`BuildStats::pages_loaded`].
+//!
 //! # Tree construction
 //!
 //! Per expanded node the coordinator:

@@ -103,6 +103,29 @@ pub trait BatchSource {
         false
     }
 
+    /// Minimum raw column index over the whole stream (`None` = no
+    /// present values) — the evidence behind the 0-/1-based column-base
+    /// autodetect. The streaming prediction paths call this up front
+    /// (ingestion folds the same minimum into pass 1 for free), so file
+    /// sources should override it with the cheapest scan they can —
+    /// [`LibsvmSource`] reads index tokens only, skipping label/value
+    /// parsing and the per-row sort/dedup. The default replays the
+    /// stream through [`next_batch`](Self::next_batch), which is correct
+    /// for any source, and leaves the source reset.
+    fn min_raw_col(&mut self) -> Result<Option<u32>> {
+        self.reset()?;
+        let mut min: Option<u32> = None;
+        while let Some(b) = self.next_batch()? {
+            if let DMatrix::Csr { indices, .. } = &b.x {
+                for &c in indices {
+                    min = Some(min.map_or(c, |m| m.min(c)));
+                }
+            }
+        }
+        self.reset()?;
+        Ok(min)
+    }
+
     /// Human-readable name for logs.
     fn name(&self) -> &str {
         "source"
@@ -426,6 +449,36 @@ impl BatchSource for LibsvmSource {
         true
     }
 
+    /// Index-token-only scan: strips comments and splits tokens exactly
+    /// like [`parse_libsvm_line`] but never parses labels or float
+    /// values and never sorts — malformed tokens are *skipped* here
+    /// (the real parse raises the error when the stream is actually
+    /// consumed). Roughly halves the cost of streaming prediction over
+    /// LibSVM files versus replaying full batches for the column base.
+    fn min_raw_col(&mut self) -> Result<Option<u32>> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        let mut min: Option<u32> = None;
+        for line in BufReader::new(file).lines() {
+            let line = line.context("reading libsvm line")?;
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            for tok in line.split_ascii_whitespace().skip(1) {
+                let Some(colon) = tok.find(':') else { continue };
+                let (k, _) = tok.split_at(colon);
+                if k == "qid" {
+                    continue;
+                }
+                if let Ok(c) = k.parse::<u32>() {
+                    min = Some(min.map_or(c, |m| m.min(c)));
+                }
+            }
+        }
+        Ok(min)
+    }
+
     fn name(&self) -> &str {
         "libsvm"
     }
@@ -641,6 +694,35 @@ mod tests {
         let mut mem_src = DMatrixSource::new(&mem.x, 1000);
         let (mem_cuts, _) = scan_source(&mut mem_src, 16, &exec).unwrap();
         assert_eq!(cuts, mem_cuts);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn libsvm_min_raw_col_matches_full_parse() {
+        let g = generate(&DatasetSpec::ranking_like(120), 21);
+        let path = tmp("mincol.libsvm");
+        save_libsvm(&g.train, &path).unwrap();
+        // a comment line and a blank line must not count as indices
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "# 0:99 comment indices must be ignored").unwrap();
+            writeln!(f).unwrap();
+        }
+        let mut src = LibsvmSource::open(&path, 16).unwrap();
+        let fast = src.min_raw_col().unwrap();
+        // reference: the trait's default full-replay detection
+        src.reset().unwrap();
+        let mut slow: Option<u32> = None;
+        while let Some(b) = src.next_batch().unwrap() {
+            if let DMatrix::Csr { indices, .. } = &b.x {
+                for &c in indices {
+                    slow = Some(slow.map_or(c, |m| m.min(c)));
+                }
+            }
+        }
+        assert_eq!(fast, slow);
+        assert_eq!(fast, Some(1), "save_libsvm writes 1-based indices");
         let _ = std::fs::remove_file(&path);
     }
 

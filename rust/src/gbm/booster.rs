@@ -235,6 +235,15 @@ pub struct Booster {
     pub base_score: Vec<Float>,
     /// `trees[output][round]`.
     pub trees: Vec<Vec<RegTree>>,
+    /// The frozen quantisation cuts the model was trained against.
+    /// Present on every `Learner`-trained booster (and on models saved
+    /// by this version and reloaded); required by the compressed
+    /// prediction paths ([`predict_from_source`](Self::predict_from_source)
+    /// and the CLI's `--stream` / `--max-resident-pages` inference).
+    /// `None` only for hand-assembled ensembles
+    /// ([`from_parts`](Self::from_parts)) and models saved before cuts
+    /// were persisted — those predict through the float path only.
+    pub cuts: Option<crate::quantile::HistogramCuts>,
     pub eval_history: Vec<EvalRecord>,
     /// Accumulated coordinator statistics over all trees.
     pub build_stats: BuildStats,
@@ -261,6 +270,7 @@ impl Booster {
             objective,
             base_score,
             trees,
+            cuts: None,
             eval_history: Vec::new(),
             build_stats: BuildStats::default(),
             train_secs,
@@ -321,6 +331,148 @@ impl Booster {
     pub fn evaluate(&self, ds: &Dataset, metric_name: &str) -> Result<f64> {
         let metric = metric_by_name(metric_name)?;
         Ok(metric.eval(ds, &self.predict(&ds.x)))
+    }
+
+    /// Name of the objective's default evaluation metric (what `evaluate`
+    /// should use when the caller doesn't pick one — the CLI `eval`
+    /// subcommand's default).
+    pub fn default_metric(&self) -> &'static str {
+        self.objective.default_metric()
+    }
+
+    /// Leaf indices of every row for every tree, group-major (the
+    /// `pred_leaf` output), chunk-parallel under the model's `threads`
+    /// budget — bit-identical at every thread count.
+    pub fn predict_leaf_indices(&self, x: &crate::data::DMatrix) -> Vec<Vec<u32>> {
+        let exec = crate::exec::ExecContext::new(self.params.threads);
+        let mut out = Vec::new();
+        for group in &self.trees {
+            out.extend(predict::predict_leaf_indices_par(group, x, &exec));
+        }
+        out
+    }
+
+    /// Feature-less evaluation substrate for the compressed eval paths:
+    /// labels (and optional ranking groups) over an empty CSR matrix —
+    /// metrics only read `y`/`groups`.
+    fn labels_dataset(n_cols: usize, labels: Vec<Float>, groups: Vec<usize>) -> Dataset {
+        let n = labels.len();
+        let x = crate::data::DMatrix::csr(vec![0usize; n + 1], Vec::new(), Vec::new(), n, n_cols);
+        if groups.is_empty() {
+            Dataset::new(x, labels)
+        } else {
+            Dataset::with_groups(x, labels, groups)
+        }
+    }
+
+    /// The frozen cuts, or an error explaining why compressed prediction
+    /// is unavailable for this model.
+    fn cuts_for_prediction(&self) -> Result<&crate::quantile::HistogramCuts> {
+        self.cuts.as_ref().context(
+            "model carries no quantisation cuts (hand-assembled ensemble or a model \
+             saved before cuts were persisted) — compressed prediction needs them; \
+             retrain through gbm::Learner or predict from a float matrix instead",
+        )
+    }
+
+    /// **Streaming quantised prediction**: one pass over a
+    /// [`BatchSource`], quantising each batch against the model's frozen
+    /// cuts and scoring it batch-at-a-time from the bin-translated trees
+    /// — O(`batch_rows × n_cols`) transient bytes, never the full
+    /// matrix. Returns the transformed predictions plus the
+    /// [`StreamedMargins`](crate::predict::quantised::StreamedMargins)
+    /// carrying labels/groups and the measured transient peak.
+    /// Predictions are **bit-identical** to [`predict`](Self::predict)
+    /// over the equivalent in-memory matrix for every batch size and
+    /// thread count (`rust/tests/compressed_predict.rs`).
+    pub fn predict_stream(
+        &self,
+        src: &mut dyn crate::data::BatchSource,
+    ) -> Result<(Vec<Float>, crate::predict::quantised::StreamedMargins)> {
+        let cuts = self.cuts_for_prediction()?;
+        let exec = crate::exec::ExecContext::new(self.params.threads);
+        let sm = crate::predict::quantised::stream_margins(
+            &self.trees,
+            &self.base_score,
+            cuts,
+            src,
+            &exec,
+        )?;
+        let preds = self.objective.transform(&sm.margins);
+        Ok((preds, sm))
+    }
+
+    /// Transformed predictions straight from a streaming source (see
+    /// [`predict_stream`](Self::predict_stream)).
+    pub fn predict_from_source(
+        &self,
+        src: &mut dyn crate::data::BatchSource,
+    ) -> Result<Vec<Float>> {
+        Ok(self.predict_stream(src)?.0)
+    }
+
+    /// **External-memory prediction**: quantise + bit-pack the streamed
+    /// source against the model's frozen cuts straight into a spilled
+    /// page file, then traverse the pages under the
+    /// `max_resident_pages` budget (same prefetch pipeline as paged
+    /// training). Peak memory is O(`batch_rows × n_cols`) transient plus
+    /// `max_resident_pages × page_bytes` resident — inference is no
+    /// longer capped by host RAM. Returns the transformed predictions
+    /// and the packed input (labels/groups + the page store, whose
+    /// round stats report pages loaded and the measured residency peak;
+    /// its spill file is deleted on drop).
+    pub fn predict_paged(
+        &self,
+        src: &mut dyn crate::data::BatchSource,
+        page_rows: usize,
+        max_resident_pages: usize,
+    ) -> Result<(Vec<Float>, crate::predict::quantised::PackedPrediction)> {
+        use crate::predict::quantised as q;
+        let cuts = self.cuts_for_prediction()?;
+        let packed = q::pack_source(src, cuts, page_rows, max_resident_pages)?;
+        let exec = crate::exec::ExecContext::new(self.params.threads);
+        let forest = q::BinForest::from_trees(&self.trees, cuts);
+        let margins =
+            q::predict_margins_paged(&forest, &self.base_score, &packed.store, cuts, &exec)?;
+        Ok((self.objective.transform(&margins), packed))
+    }
+
+    /// Evaluate a named metric through the external-memory prediction
+    /// path (see [`predict_paged`](Self::predict_paged)). Returns
+    /// `(metric value, clamped sparse values)` — a non-zero second
+    /// element means out-of-range/NaN sparse values clamped during
+    /// packing and the value may differ from the float evaluation
+    /// (callers should surface it; the CLI warns).
+    pub fn evaluate_paged(
+        &self,
+        src: &mut dyn crate::data::BatchSource,
+        metric_name: &str,
+        page_rows: usize,
+        max_resident_pages: usize,
+    ) -> Result<(f64, u64)> {
+        let n_cols = self.cuts_for_prediction()?.n_features();
+        let (preds, packed) = self.predict_paged(src, page_rows, max_resident_pages)?;
+        let metric = metric_by_name(metric_name)?;
+        let clamped = packed.clamped_values;
+        let ds = Self::labels_dataset(n_cols, packed.labels, packed.groups);
+        Ok((metric.eval(&ds, &preds), clamped))
+    }
+
+    /// Evaluate a named metric over a streaming source in the same single
+    /// pass that predicts it: labels (and qid-derived ranking groups)
+    /// ride the stream, so no float matrix — and no second pass — is
+    /// ever needed. Bit-identical to [`evaluate`](Self::evaluate) on the
+    /// equivalent in-memory dataset.
+    pub fn evaluate_from_source(
+        &self,
+        src: &mut dyn crate::data::BatchSource,
+        metric_name: &str,
+    ) -> Result<f64> {
+        let n_cols = self.cuts_for_prediction()?.n_features();
+        let (preds, sm) = self.predict_stream(src)?;
+        let metric = metric_by_name(metric_name)?;
+        let ds = Self::labels_dataset(n_cols, sm.labels, sm.groups);
+        Ok(metric.eval(&ds, &preds))
     }
 }
 

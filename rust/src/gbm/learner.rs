@@ -46,7 +46,7 @@ use crate::gbm::params::{
     ValidationErrors,
 };
 use crate::gbm::registry::{MetricRegistry, ObjectiveRegistry};
-use crate::predict;
+use crate::predict::quantised::{self, QuantisedBatch};
 use crate::tree::RegTree;
 use crate::util::Config;
 use crate::Float;
@@ -353,6 +353,22 @@ impl Learner {
         let mut margins: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
         let mut valid_margins: Option<Vec<Vec<Float>>> =
             valid.map(|v| base_score.iter().map(|&b| vec![b; v.n_rows()]).collect());
+        // in-training eval runs on the compressed path: the validation
+        // set is quantised ONCE against the frozen training cuts
+        // (unclamped transient form, so even values outside the training
+        // range route exactly as the float traversal would — see
+        // crate::predict::quantised) and every new tree is translated to
+        // bin-threshold form and accumulated over it. Bit-identical to
+        // the old float-matrix scoring; the float valid matrix is no
+        // longer touched after this point. Deliberate trade-off: the u32
+        // form is an extra O(valid_rows × n_cols) held for the run (the
+        // caller's float matrix stays alive regardless) — exactness over
+        // memory; a bit-packed valid form would clamp out-of-range
+        // values and break parity with float scoring.
+        let quantised_valid: Option<QuantisedBatch> = match valid {
+            Some(v) => Some(QuantisedBatch::from_dmatrix(&v.x, &coordinator.cuts, 0)?),
+            None => None,
+        };
 
         let mut trees: Vec<Vec<RegTree>> = vec![Vec::new(); k];
         let mut eval_history: Vec<EvalRecord> = Vec::new();
@@ -381,8 +397,11 @@ impl Learner {
                 for (m, d) in margins[c].iter_mut().zip(result.deltas.iter()) {
                     *m += *d;
                 }
-                if let (Some(vm), Some(v)) = (valid_margins.as_mut(), valid) {
-                    predict::accumulate_tree_par(&result.tree, &v.x, &mut vm[c], &exec);
+                if let (Some(vm), Some(qv)) = (valid_margins.as_mut(), quantised_valid.as_ref()) {
+                    let t = Instant::now();
+                    let bt = quantised::BinTree::from_tree(&result.tree, &coordinator.cuts);
+                    quantised::accumulate_bin_tree_par(&bt, qv, &mut vm[c], &exec);
+                    build_stats.predict_wall_secs += t.elapsed().as_secs_f64();
                 }
                 build_stats.accumulate(&result.stats);
                 trees[c].push(result.tree);
@@ -445,6 +464,10 @@ impl Learner {
             objective,
             base_score,
             trees,
+            // the frozen quantisation cuts travel with the model so
+            // prediction/eval can run from the compressed representation
+            // (streaming or paged) without re-sketching
+            cuts: Some(coordinator.cuts.clone()),
             eval_history,
             build_stats,
             train_secs: t0.elapsed().as_secs_f64(),

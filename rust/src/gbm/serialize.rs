@@ -17,7 +17,19 @@
 //! <nid> split <feature> <threshold> <left> <right> <default L|R> <gain> <cover>
 //! <nid> leaf <value> <cover>
 //! ...
+//! cuts features = <f>          (optional trailing section)
+//! cuts ptrs = <p0> <p1> ...
+//! cuts values = <v0> <v1> ...
+//! cuts minvals = <m0> <m1> ...
 //! ```
+//!
+//! The trailing `cuts` section persists the frozen quantisation cuts the
+//! model was trained against, so a reloaded model can predict straight
+//! from the compressed representation (CLI `predict --stream` /
+//! `--max-resident-pages`). It is optional: files written before it
+//! existed load fine (with `Booster::cuts = None`, float prediction
+//! only). Float values round-trip exactly — Rust's shortest `Display`
+//! form re-parses to the identical bits.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
@@ -62,6 +74,15 @@ pub fn save_model(booster: &Booster, mut w: impl Write) -> Result<()> {
             }
         }
     }
+    if let Some(cuts) = &booster.cuts {
+        writeln!(w, "cuts features = {}", cuts.n_features())?;
+        let ptrs: Vec<String> = cuts.ptrs.iter().map(|p| format!("{p}")).collect();
+        writeln!(w, "cuts ptrs = {}", ptrs.join(" "))?;
+        let values: Vec<String> = cuts.values.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "cuts values = {}", values.join(" "))?;
+        let mins: Vec<String> = cuts.min_vals.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "cuts minvals = {}", mins.join(" "))?;
+    }
     Ok(())
 }
 
@@ -72,20 +93,26 @@ pub fn save_model_file(booster: &Booster, path: impl AsRef<Path>) -> Result<()> 
     save_model(booster, std::io::BufWriter::new(f))
 }
 
+/// Next non-empty line, or `None` at end of input (the trailing `cuts`
+/// section is optional, so EOF is only an error where a line is
+/// required).
+fn next_nonempty<B: std::io::BufRead>(lines: &mut std::io::Lines<B>) -> Result<Option<String>> {
+    for l in lines.by_ref() {
+        let l = l?;
+        if !l.trim().is_empty() {
+            return Ok(Some(l));
+        }
+    }
+    Ok(None)
+}
+
 /// Load a booster from the v1 text format.
 pub fn load_model(r: impl Read) -> Result<Booster> {
     let mut lines = BufReader::new(r).lines();
     let mut next = || -> Result<String> {
-        loop {
-            match lines.next() {
-                None => bail!("unexpected end of model file"),
-                Some(l) => {
-                    let l = l?;
-                    if !l.trim().is_empty() {
-                        return Ok(l);
-                    }
-                }
-            }
+        match next_nonempty(&mut lines)? {
+            Some(l) => Ok(l),
+            None => bail!("unexpected end of model file"),
         }
     };
 
@@ -163,6 +190,85 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
         trees.push(group);
     }
 
+    // optional trailing section: the frozen quantisation cuts (absent in
+    // files written before compressed prediction existed)
+    let cuts = match next_nonempty(&mut lines)? {
+        None => None,
+        Some(head) => {
+            let n_features: usize = kv(&head, "cuts features")?.parse()?;
+            let ptrs: Vec<u32> = kv(
+                &next_nonempty(&mut lines)?.context("cuts ptrs line missing")?,
+                "cuts ptrs",
+            )?
+            .split_whitespace()
+            .map(|t| t.parse::<u32>().context("cuts ptrs"))
+            .collect::<Result<_>>()?;
+            ensure!(ptrs.len() == n_features + 1, "cuts ptrs length");
+            ensure!(ptrs[0] == 0, "cuts ptrs must start at 0");
+            // strictly: every feature carries at least one cut (even a
+            // never-observed feature gets its sentinel), and an empty
+            // range would make bin_index a silent no-op at predict time
+            ensure!(
+                ptrs.windows(2).all(|w| w[0] < w[1]),
+                "cuts ptrs must strictly ascend (every feature has >= 1 cut)"
+            );
+            let values: Vec<Float> = kv(
+                &next_nonempty(&mut lines)?.context("cuts values line missing")?,
+                "cuts values",
+            )?
+            .split_whitespace()
+            .map(|t| t.parse::<Float>().context("cuts values"))
+            .collect::<Result<_>>()?;
+            ensure!(
+                values.len() == *ptrs.last().unwrap() as usize,
+                "cuts values length {} != total bins {}",
+                values.len(),
+                ptrs.last().unwrap()
+            );
+            let min_vals: Vec<Float> = kv(
+                &next_nonempty(&mut lines)?.context("cuts minvals line missing")?,
+                "cuts minvals",
+            )?
+            .split_whitespace()
+            .map(|t| t.parse::<Float>().context("cuts minvals"))
+            .collect::<Result<_>>()?;
+            ensure!(min_vals.len() == n_features, "cuts minvals length");
+            // fail-fast like the rest of the format (page checksums,
+            // dense node ids): unsorted cuts would make partition_point
+            // — and so every quantised prediction — silently wrong
+            for f in 0..n_features {
+                let fc = &values[ptrs[f] as usize..ptrs[f + 1] as usize];
+                ensure!(
+                    fc.windows(2).all(|w| w[0] < w[1]),
+                    "cuts values must strictly ascend within feature {f}"
+                );
+            }
+            Some(crate::quantile::HistogramCuts {
+                ptrs,
+                values,
+                min_vals,
+            })
+        }
+    };
+    if let Some(c) = &cuts {
+        // every split feature must exist in the cut grid, or the first
+        // quantised prediction would panic instead of erroring at load
+        for group in &trees {
+            for tree in group {
+                for node in &tree.nodes {
+                    if !node.is_leaf() {
+                        ensure!(
+                            (node.feature as usize) < c.n_features(),
+                            "tree splits on feature {} but cuts cover {}",
+                            node.feature,
+                            c.n_features()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
     // typed round-trip: the stored name parses back into ObjectiveKind
     // (user-registered names resolve through the ObjectiveRegistry when
     // the booster is assembled below)
@@ -174,7 +280,9 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
         num_rounds: trees.first().map(|t| t.len()).unwrap_or(0),
         ..Default::default()
     };
-    Booster::from_parts(params, base_score, trees, 0.0)
+    let mut booster = Booster::from_parts(params, base_score, trees, 0.0)?;
+    booster.cuts = cuts;
+    Ok(booster)
 }
 
 /// Load from a file path.
@@ -274,6 +382,39 @@ mod tests {
     }
 
     #[test]
+    fn cuts_round_trip_and_enable_stream_prediction() {
+        let (b, valid) = trained("binary:logistic", 1);
+        assert!(b.cuts.is_some(), "Learner-trained models carry cuts");
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.cuts, b.cuts, "cuts must round-trip bit-exactly");
+        // the reloaded model predicts from the compressed path,
+        // bit-identical to its float path
+        let float = loaded.predict(&valid.x);
+        let mut src = crate::data::source::DMatrixSource::from_dataset(&valid, 37);
+        let streamed = loaded.predict_from_source(&mut src).unwrap();
+        assert_eq!(float, streamed);
+    }
+
+    #[test]
+    fn model_without_cuts_section_still_loads() {
+        let ok = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                  eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                  tree 0 0 nodes = 1\n0 leaf 0.5 1\n";
+        let b = load_model(ok.as_bytes()).unwrap();
+        assert!(b.cuts.is_none());
+        // compressed prediction is unavailable, with a useful error
+        let ds = crate::data::Dataset::new(
+            crate::data::DMatrix::dense(vec![1.0], 1, 1),
+            vec![0.0],
+        );
+        let mut src = crate::data::source::DMatrixSource::from_dataset(&ds, 8);
+        let err = b.predict_from_source(&mut src).unwrap_err();
+        assert!(format!("{err:#}").contains("cuts"), "{err:#}");
+    }
+
+    #[test]
     fn rejects_corrupt_models() {
         assert!(load_model("not a model".as_bytes()).is_err());
         // cycle: node 0 points at itself
@@ -286,6 +427,25 @@ mod tests {
                     eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
                     tree 0 0 nodes = 1\n0 split 0 1.0 5 6 L 0 1\n";
         assert!(load_model(bad2.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn corrupt_cuts_section_rejected() {
+        // descending cut values within a feature must fail at load, not
+        // produce silently wrong partition_point results at predict
+        let bad = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                   eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                   tree 0 0 nodes = 1\n0 leaf 0.5 1\n\
+                   cuts features = 1\ncuts ptrs = 0 2\ncuts values = 2 1\ncuts minvals = 0\n";
+        let err = load_model(bad.as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("ascend"), "{err:#}");
+        // a split on a feature the cuts don't cover fails at load too
+        let bad2 = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                    eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                    tree 0 0 nodes = 3\n0 split 5 1.0 1 2 L 0 1\n1 leaf 0.1 1\n2 leaf 0.2 1\n\
+                    cuts features = 1\ncuts ptrs = 0 1\ncuts values = 9\ncuts minvals = 0\n";
+        let err2 = load_model(bad2.as_bytes()).unwrap_err();
+        assert!(format!("{err2:#}").contains("feature 5"), "{err2:#}");
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! for bit** at every thread count; the parallel variants only change
 //! which OS thread computes each chunk.
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::Result;
 
 use crate::compress::page::{PageHandle, PageStore};
 use crate::compress::CompressedMatrix;
@@ -388,14 +388,14 @@ where
 /// residency budget (`rust/tests/external_memory.rs`). Paging only
 /// changes *where* the packed words come from.
 ///
-/// **Prefetch.** With `exec.threads() > 1` and a budget of at least two
-/// pages, an I/O worker (spawned through
-/// [`ExecContext::run_with_worker`]) loads page *k+1* while page *k*
-/// accumulates, handing pages over a bounded channel whose capacity is
-/// `max_resident_pages − 2` (queue + the load in flight + the page being
-/// accumulated = the budget). Serial engines, or a budget of one page,
-/// load synchronously. Load and blocked-wait seconds are recorded on the
-/// store and surface as `BuildStats::{page_load_secs, page_wait_secs}`.
+/// **Prefetch.** Runs on the shared in-order pipeline
+/// [`crate::compress::page::with_prefetched_pages`]: with
+/// `exec.threads() > 1` and a budget of at least two pages an I/O worker
+/// loads page *k+1* while page *k* accumulates, with queue + in-flight
+/// load + the accumulating page bounded by `max_resident_pages`. Serial
+/// engines, or a budget of one page, load synchronously. Load and
+/// blocked-wait seconds are recorded on the store and surface as
+/// `BuildStats::{page_load_secs, page_wait_secs}`.
 pub fn build_histogram_paged(
     store: &PageStore,
     gradients: &[GradPair],
@@ -404,12 +404,6 @@ pub fn build_histogram_paged(
     exec: &ExecContext,
 ) -> Result<()> {
     assert_eq!(out.n_bins(), store.shape.n_bins);
-    // the repartition cursor's cached page would count against this
-    // round's budget — release it so prefetch owns the whole allowance
-    store.clear_row_cache();
-    if rows.is_empty() {
-        return Ok(());
-    }
     // first-use page sequence (consecutive dedup) — the prefetch schedule
     let mut seq: Vec<usize> = Vec::new();
     for &r in rows {
@@ -418,46 +412,9 @@ pub fn build_histogram_paged(
             seq.push(p);
         }
     }
-    let budget = store.max_resident_pages;
-    if exec.threads() > 1 && budget >= 2 && seq.len() > 1 {
-        let cap = budget - 2;
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PageHandle>>(cap);
-        let seq = &seq;
-        exec.run_with_worker(
-            move || {
-                for &p in seq {
-                    if tx.send(store.load_page(p)).is_err() {
-                        break; // consumer bailed (error path); stop loading
-                    }
-                }
-            },
-            move || {
-                let mut fetch = |want: usize| -> Result<PageHandle> {
-                    let t = std::time::Instant::now();
-                    let page = rx
-                        .recv()
-                        .map_err(|_| anyhow!("page prefetch worker exited early"))??;
-                    store.note_wait(t.elapsed().as_secs_f64());
-                    ensure!(
-                        page.index == want,
-                        "prefetch schedule diverged: got page {}, want {want}",
-                        page.index
-                    );
-                    Ok(page)
-                };
-                paged_chunked_build(store, gradients, rows, out, &mut fetch)
-            },
-        )
-    } else {
-        // synchronous loads: at most one page resident at a time
-        let mut fetch = |want: usize| -> Result<PageHandle> {
-            let t = std::time::Instant::now();
-            let page = store.load_page(want)?;
-            store.note_wait(t.elapsed().as_secs_f64());
-            Ok(page)
-        };
-        paged_chunked_build(store, gradients, rows, out, &mut fetch)
-    }
+    crate::compress::page::with_prefetched_pages(store, exec, seq, |fetch| {
+        paged_chunked_build(store, gradients, rows, out, &mut |p| fetch(p))
+    })
 }
 
 #[cfg(test)]

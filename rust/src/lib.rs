@@ -73,6 +73,38 @@
 //! budget, thread count and device count
 //! (`rust/tests/external_memory.rs`).
 //!
+//! ### Prediction lifecycle: frozen cuts → bin trees → paged traversal
+//!
+//! Inference rides the same hierarchy ([`predict::quantised`]). The
+//! frozen [`quantile::HistogramCuts`] travel with the trained model
+//! (`Booster::cuts`, persisted in the model file), and each trained
+//! tree's float thresholds are translated **once** into per-feature bin
+//! thresholds (`threshold_to_bin`). Because every split threshold *is* a
+//! cut value, the bin comparison `bin < threshold_to_bin(t)` is exactly
+//! the float comparison `v < t` — so prediction walks the packed ELLPACK
+//! symbols directly (resident [`compress::CompressedMatrix`] words, or
+//! spilled pages streamed back through the same prefetch worker and
+//! `max_resident_pages` budget as training) and is **bit-identical** to
+//! the float path. Three inference shapes, one result:
+//!
+//! * **shard prediction** — `MultiDeviceCoordinator::predict_margins` /
+//!   `predict_leaf_indices` score the training shards in place, paged or
+//!   resident, concurrently on the exec pool;
+//! * **streaming prediction** — `Booster::predict_from_source` /
+//!   `evaluate_from_source` quantise each [`data::BatchSource`] batch
+//!   against the frozen cuts (unclamped transient form, exact even for
+//!   values outside the training range) and score batch-at-a-time:
+//!   O(`batch_rows × n_cols`) transient bytes, no second pass;
+//! * **external-memory prediction** — `Booster::predict_paged` packs the
+//!   stream into spilled pages and traverses them under the budget (CLI
+//!   `predict --stream` / `--max-resident-pages`, ditto `eval`).
+//!
+//! In-training validation scoring uses the same translation (the valid
+//! set is quantised once against the training cuts), closing the last
+//! float-matrix dependency of the boosting loop: ingest → train →
+//! predict/eval all run from the compressed representation, pinned by
+//! `rust/tests/compressed_predict.rs`.
+//!
 //! ## Quickstart
 //!
 //! Training goes through the typed [`gbm::Learner`] façade: pick an

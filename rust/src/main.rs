@@ -8,6 +8,17 @@
 //!                 With `--stream`, files are ingested through the
 //!                 out-of-core two-pass pipeline (`--batch-rows` bounds
 //!                 peak transient memory; the model is bit-identical).
+//! * `predict`   — score rows with a saved model. `--stream` quantises
+//!                 each batch against the model's frozen cuts and scores
+//!                 it from the compressed representation (O(batch)
+//!                 memory); `--max-resident-pages N` packs the input
+//!                 into spilled ELLPACK pages and traverses them under
+//!                 the budget. All paths print a bit-exact prediction
+//!                 checksum and agree (one warned exception: sparse
+//!                 inputs with values above the training range clamp on
+//!                 the paged path).
+//! * `eval`      — evaluate a metric over a labelled file through the
+//!                 same three paths.
 //! * `export`    — write a synthetic dataset to CSV/LibSVM (streaming
 //!                 smoke-test fodder).
 //! * `datasets`  — print the Table 1 dataset registry.
@@ -40,6 +51,7 @@ fn main() {
     let code = match cmd {
         "train" => run_train(&args),
         "predict" => run_predict(&args),
+        "eval" => run_eval(&args),
         "export" => run_export(&args),
         "datasets" => run_datasets(),
         "info" => run_info(&args),
@@ -62,7 +74,7 @@ fn main() {
 fn print_help() {
     println!(
         "xgb-tpu — multi-device gradient boosting (XGBoost GPU paper reproduction)\n\n\
-         USAGE: xgb-tpu <train|datasets|info> [--flag value ...]\n\n\
+         USAGE: xgb-tpu <train|predict|eval|export|datasets|info> [--flag value ...]\n\n\
          train flags:\n\
            --dataset <name>       synthetic dataset (see `xgb-tpu datasets`)\n\
            --rows <n>             synthetic row count (default 20000)\n\
@@ -108,7 +120,27 @@ fn print_help() {
            --model <path>         model saved by train --model-out\n\
            --csv/--libsvm <path>  rows to score (--label-col ignored labels ok)\n\
            --out <path>           write one prediction per line (default stdout)\n\
-           --backend native|xla   prediction engine (§2.4)\n\n\
+           --backend native|xla   prediction engine (§2.4)\n\
+           --stream               quantised streaming prediction: score each\n\
+                                  batch straight from the model's frozen cuts\n\
+                                  (O(batch x cols) transient memory; predictions\n\
+                                  bit-identical to the float path)\n\
+           --max-resident-pages <n>  external-memory prediction: quantise+pack\n\
+                                  the input into spilled pages, then traverse\n\
+                                  under the n-page residency budget\n\
+           --page-rows <n>        rows per spilled page for the paged path\n\
+           --batch-rows <n>       rows per streamed batch\n\
+           --threads <n>          worker threads (0 = all cores)\n\
+           (every path prints `predictions: n=... checksum=...` to stderr —\n\
+            float, --stream and --max-resident-pages agree bit for bit; the\n\
+            one exception is warned: sparse inputs with values above the\n\
+            training range clamp on the paged path)\n\n\
+         eval flags:\n\
+           --model <path>         model saved by train --model-out\n\
+           --csv/--libsvm <path>  labelled rows to evaluate\n\
+           --metric <name>        metric (default: the objective's default)\n\
+           --stream / --max-resident-pages / --page-rows / --batch-rows /\n\
+           --threads              same compressed paths as predict\n\n\
          export flags:\n\
            --dataset <name>       synthetic dataset to write\n\
            --rows <n>             row count (default 20000)\n\
@@ -118,37 +150,129 @@ fn print_help() {
     );
 }
 
-fn run_predict(args: &ArgParser) -> Result<()> {
+/// Load the model named by `--model`, applying the `--threads` override.
+fn load_predict_model(args: &ArgParser) -> Result<xgb_tpu::gbm::Booster> {
     let model_path = args.get("model").context("--model required")?;
-    let booster = xgb_tpu::gbm::load_model_file(model_path)?;
-    let ds = if let Some(path) = args.get("csv") {
-        load_csv(path, args.get_parse("label-col", 0usize), args.flag("header"))?
+    let mut booster = xgb_tpu::gbm::load_model_file(model_path)?;
+    if args.has("threads") {
+        booster.params.threads = args.get_parse("threads", 0usize);
+    }
+    Ok(booster)
+}
+
+/// Load the `--csv`/`--libsvm` input fully in memory (the float
+/// prediction/eval path).
+fn load_predict_dataset(args: &ArgParser) -> Result<Dataset> {
+    if let Some(path) = args.get("csv") {
+        load_csv(path, args.get_parse("label-col", 0usize), args.flag("header"))
     } else if let Some(path) = args.get("libsvm") {
-        load_libsvm(path)?
+        load_libsvm(path)
     } else {
-        bail!("predict needs --csv or --libsvm");
-    };
+        bail!("needs --csv or --libsvm")
+    }
+}
+
+/// Open the `--csv`/`--libsvm` input as a streaming [`BatchSource`] (the
+/// compressed prediction paths never materialize the float matrix).
+fn open_predict_source(
+    args: &ArgParser,
+    batch_rows: usize,
+) -> Result<Box<dyn xgb_tpu::data::BatchSource>> {
+    use xgb_tpu::data::{CsvSource, LibsvmSource};
+    if let Some(path) = args.get("csv") {
+        Ok(Box::new(CsvSource::open(
+            path,
+            args.get_parse("label-col", 0usize),
+            args.flag("header"),
+            batch_rows,
+        )?))
+    } else if let Some(path) = args.get("libsvm") {
+        Ok(Box::new(LibsvmSource::open(path, batch_rows)?))
+    } else {
+        bail!("needs --csv or --libsvm")
+    }
+}
+
+fn run_predict(args: &ArgParser) -> Result<()> {
+    let booster = load_predict_model(args)?;
     let backend = args.get_str("backend", "native");
-    let preds: Vec<f32> = match backend.as_str() {
-        "native" => booster.predict(&ds.x),
-        "xla" => {
-            // margins through the AOT predict artifact, then transform
-            let artifacts = std::sync::Arc::new(Artifacts::discover()?);
-            let predictor = xgb_tpu::runtime::XlaPredictor::new(artifacts);
-            anyhow::ensure!(
-                booster.trees.len() == 1,
-                "xla predict path supports single-output models"
+    let budget: usize = args.get_parse("max-resident-pages", 0usize);
+    let batch_rows: usize = args.get_parse("batch-rows", booster.params.batch_rows);
+    anyhow::ensure!(
+        !(args.flag("stream") && budget > 0),
+        "--stream and --max-resident-pages select different prediction paths; pass one"
+    );
+
+    let preds: Vec<f32> = if args.flag("stream") {
+        // streaming quantised prediction: one pass, O(batch x cols)
+        // transient bytes, bit-identical to the float path
+        anyhow::ensure!(backend == "native", "--stream uses the native engine");
+        let mut src = open_predict_source(args, batch_rows)?;
+        let (preds, sm) = booster.predict_stream(src.as_mut())?;
+        eprintln!(
+            "streamed {} rows in {} batches; peak transient {:.2} MB",
+            sm.n_rows,
+            sm.n_batches,
+            sm.peak_transient_bytes as f64 / 1e6
+        );
+        preds
+    } else if budget > 0 {
+        // external-memory prediction: pack to spilled pages, traverse
+        // under the residency budget
+        anyhow::ensure!(backend == "native", "--max-resident-pages uses the native engine");
+        let page_rows: usize = args.get_parse("page-rows", booster.params.page_rows);
+        let mut src = open_predict_source(args, batch_rows)?;
+        let (preds, packed) = booster.predict_paged(src.as_mut(), page_rows, budget)?;
+        if packed.clamped_values > 0 {
+            eprintln!(
+                "warning: {} sparse value(s) at/above the training range clamped into \
+                 their feature's last bin; rows containing them may route differently \
+                 from the float path (dense inputs never clamp)",
+                packed.clamped_values
             );
-            let margins =
-                predictor.predict_margins(&booster.trees[0], booster.base_score[0], &ds.x)?;
-            if booster.params.objective == ObjectiveKind::BinaryLogistic {
-                margins.iter().map(|&m| 1.0 / (1.0 + (-m).exp())).collect()
-            } else {
-                margins
-            }
         }
-        other => bail!("unknown backend {other:?}"),
+        let stats = packed.store.take_round_stats();
+        eprintln!(
+            "paged prediction: {} pages loaded ({:.3}s I/O, {:.3}s blocked), \
+             peak resident {:.2} MB (budget {budget} pages x {page_rows} rows)",
+            stats.pages_loaded,
+            stats.load_secs,
+            stats.wait_secs,
+            stats.peak_resident_bytes as f64 / 1e6
+        );
+        preds
+    } else {
+        let ds = load_predict_dataset(args)?;
+        match backend.as_str() {
+            "native" => booster.predict(&ds.x),
+            "xla" => {
+                // margins through the AOT predict artifact, then transform
+                let artifacts = std::sync::Arc::new(Artifacts::discover()?);
+                let predictor = xgb_tpu::runtime::XlaPredictor::new(artifacts);
+                anyhow::ensure!(
+                    booster.trees.len() == 1,
+                    "xla predict path supports single-output models"
+                );
+                let margins =
+                    predictor.predict_margins(&booster.trees[0], booster.base_score[0], &ds.x)?;
+                if booster.params.objective == ObjectiveKind::BinaryLogistic {
+                    margins.iter().map(|&m| 1.0 / (1.0 + (-m).exp())).collect()
+                } else {
+                    margins
+                }
+            }
+            other => bail!("unknown backend {other:?}"),
+        }
     };
+
+    // cross-path parity fingerprint: float, --stream and
+    // --max-resident-pages runs over the same input must print the same
+    // line (ci.sh enforces it)
+    eprintln!(
+        "predictions: n={} checksum={:#018x}",
+        preds.len(),
+        xgb_tpu::predict::prediction_checksum(&preds)
+    );
     match args.get("out") {
         Some(path) => {
             let mut out = String::with_capacity(preds.len() * 12);
@@ -164,6 +288,44 @@ fn run_predict(args: &ArgParser) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `eval` — score a labelled file against a saved model and print one
+/// metric line, through any of the three prediction paths (float,
+/// streaming-quantised, paged-quantised). The metric value is printed
+/// with full precision so paths can be compared exactly.
+fn run_eval(args: &ArgParser) -> Result<()> {
+    let booster = load_predict_model(args)?;
+    let metric = match args.get("metric") {
+        Some(m) => m.to_string(),
+        None => booster.default_metric().to_string(),
+    };
+    let budget: usize = args.get_parse("max-resident-pages", 0usize);
+    let batch_rows: usize = args.get_parse("batch-rows", booster.params.batch_rows);
+    anyhow::ensure!(
+        !(args.flag("stream") && budget > 0),
+        "--stream and --max-resident-pages select different eval paths; pass one"
+    );
+    let value = if args.flag("stream") {
+        let mut src = open_predict_source(args, batch_rows)?;
+        booster.evaluate_from_source(src.as_mut(), &metric)?
+    } else if budget > 0 {
+        let page_rows: usize = args.get_parse("page-rows", booster.params.page_rows);
+        let mut src = open_predict_source(args, batch_rows)?;
+        let (value, clamped) = booster.evaluate_paged(src.as_mut(), &metric, page_rows, budget)?;
+        if clamped > 0 {
+            eprintln!(
+                "warning: {clamped} sparse value(s) at/above the training range clamped \
+                 into their feature's last bin; the metric may differ from the float path"
+            );
+        }
+        value
+    } else {
+        let ds = load_predict_dataset(args)?;
+        booster.evaluate(&ds, &metric)?
+    };
+    println!("eval {metric}={value}");
     Ok(())
 }
 
@@ -371,10 +533,11 @@ fn report_booster(
         s.hist_rounds
     );
     println!(
-        "wall-clock (parallel engine): hist={:.3}s partition={:.3}s \
+        "wall-clock (parallel engine): hist={:.3}s partition={:.3}s predict={:.3}s \
          (device compute total {:.3}s across {} devices)",
         s.hist_wall_secs,
         s.partition_wall_secs,
+        s.predict_wall_secs,
         s.total_compute_secs(),
         params.n_devices
     );

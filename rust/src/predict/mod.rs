@@ -12,6 +12,8 @@ use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::tree::RegTree;
 use crate::Float;
 
+pub mod quantised;
+
 /// Accumulate one tree's predictions into `margins` (length n_rows).
 pub fn accumulate_tree(tree: &RegTree, x: &DMatrix, margins: &mut [Float]) {
     accumulate_tree_par(tree, x, margins, &ExecContext::serial());
@@ -72,14 +74,37 @@ pub fn predict_margins_par(
 /// Leaf indices for every row of every tree of one output group — the
 /// `pred_leaf` debugging/feature-engineering output XGBoost exposes.
 pub fn predict_leaf_indices(trees: &[RegTree], x: &DMatrix) -> Vec<Vec<u32>> {
+    predict_leaf_indices_par(trees, x, &ExecContext::serial())
+}
+
+/// Chunk-parallel [`predict_leaf_indices`] on the exec engine — per-row
+/// traversal is independent, so results are bit-identical at every
+/// thread count (the `threads` knob finally applies to this path too).
+pub fn predict_leaf_indices_par(
+    trees: &[RegTree],
+    x: &DMatrix,
+    exec: &ExecContext,
+) -> Vec<Vec<u32>> {
     trees
         .iter()
         .map(|t| {
-            (0..x.n_rows())
-                .map(|r| t.leaf_for_row(x, r) as u32)
-                .collect()
+            let mut out = vec![0u32; x.n_rows()];
+            exec.for_each_slice_mut(&mut out, ROW_CHUNK, |_, start, chunk| {
+                for (k, o) in chunk.iter_mut().enumerate() {
+                    *o = t.leaf_for_row(x, start + k) as u32;
+                }
+            });
+            out
         })
         .collect()
+}
+
+/// FNV-1a 64 over the predictions' bit patterns — the cross-path parity
+/// fingerprint the CLI prints (`predict`/`eval`) so CI can require the
+/// float, streaming-quantised and paged-quantised paths to agree to the
+/// last bit without diffing whole prediction files.
+pub fn prediction_checksum(preds: &[Float]) -> u64 {
+    crate::compress::page::fnv1a64(preds.iter().flat_map(|p| p.to_bits().to_le_bytes()))
 }
 
 #[cfg(test)]
@@ -127,5 +152,30 @@ mod tests {
         let t = stump(5.0, -1.0, 1.0);
         let li = predict_leaf_indices(&[t], &x);
         assert_eq!(li[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn leaf_indices_bit_identical_across_threads() {
+        // enough rows for several ROW_CHUNK chunks so the parallel path
+        // actually engages; values interleave both sides of the splits
+        let n = 20_000usize;
+        let vals: Vec<Float> = (0..n).map(|i| (i % 17) as Float).collect();
+        let x = DMatrix::dense(vals, n, 1);
+        let trees = vec![stump(5.0, -1.0, 1.0), stump(11.0, 0.5, -0.5)];
+        let serial = predict_leaf_indices(&trees, &x);
+        for t in [1usize, 2, 8] {
+            let par = predict_leaf_indices_par(&trees, &x, &ExecContext::new(t));
+            assert_eq!(par, serial, "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn checksum_is_bit_sensitive() {
+        let a = prediction_checksum(&[1.0, 2.0, 3.0]);
+        let b = prediction_checksum(&[1.0, 2.0, 3.0000001]);
+        assert_ne!(a, b);
+        assert_eq!(a, prediction_checksum(&[1.0, 2.0, 3.0]));
+        // 0.0 and -0.0 compare equal but are different predictions bytes
+        assert_ne!(prediction_checksum(&[0.0]), prediction_checksum(&[-0.0]));
     }
 }

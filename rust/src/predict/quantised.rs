@@ -1,0 +1,1175 @@
+//! Quantised (compressed-representation) prediction — the last phase of
+//! the paper's "prediction, gradient calculation, feature quantisation,
+//! decision tree construction and evaluation phases all computed on
+//! device" claim (§1, §2.2) to come off the float matrix.
+//!
+//! After out-of-core ingestion (PR 3) and external-memory training
+//! (PR 4), the packed ELLPACK shards are the only full-size
+//! representation of the data — but the float prediction path
+//! ([`crate::predict::predict_margins_par`]) still walks a raw
+//! [`DMatrix`], capping inference at host RAM. This module removes that
+//! dependency: trained trees are translated once into **bin-threshold
+//! form** and traversed directly over the quantised symbols, whether they
+//! live in a [`QuantizedMatrix`], a bit-packed [`CompressedMatrix`], a
+//! spilled [`PageStore`] (streamed back with the same double-buffered
+//! prefetch and `max_resident_pages` budget as training), or a transient
+//! [`QuantisedBatch`] quantised on the fly from a streaming
+//! [`BatchSource`].
+//!
+//! # The bin-vs-float equivalence argument
+//!
+//! Splits are chosen *at cut values*: `SplitCandidate::threshold` is
+//! always `cuts.cut_of_bin(split_bin)` (see `tree/split.rs`), so a float
+//! comparison `v < t` can be translated exactly into bin space. Let
+//! `cuts_f` be feature `f`'s ascending cut values and define
+//!
+//! ```text
+//! threshold_to_bin(f, t) = ptrs[f] + |{c in cuts_f : c <= t}|
+//! bin(v)                 = ptrs[f] + |{c in cuts_f : c <= v}|   (unclamped)
+//! ```
+//!
+//! Then for `t = cuts_f[j]` (every trained threshold):
+//! `v < t  ⇔  every cut ≤ v is one of cuts_f[0..j]  ⇔  bin(v) < ptrs[f]+j+1
+//! = threshold_to_bin(f, t)` — for **every** real `v`, including values
+//! beyond the training range. Missing values carry no bin and take the
+//! learned default direction in both representations. So routing a row by
+//! `bin < threshold_to_bin(t)` visits exactly the nodes the float
+//! traversal visits, and the two predictions are **bit-identical**
+//! (`rust/tests/compressed_predict.rs`; the translation round-trip is a
+//! property test in `prop_invariants.rs`).
+//!
+//! The packed storages use the *clamped* bin index (the alphabet has no
+//! overflow symbol), which is the same function as `bin(v)` for every
+//! value below the feature's sentinel cut — true of all data the cuts
+//! were built from, i.e. of every training shard. Transient prediction
+//! batches ([`QuantisedBatch`]) are never packed, so they keep the
+//! unclamped index and stay exact even for out-of-range inputs.
+//!
+//! Note the routing rule `bin <= split_bin` used by the training
+//! repartitioner ([`crate::tree::RowPartitioner::goes_left`]) is the same
+//! predicate: `threshold_to_bin(cut_of_bin(split_bin)) = split_bin + 1`.
+//!
+//! # Memory contracts
+//!
+//! * **Resident packed shards** — prediction reads the packed words in
+//!   place; no decode buffer beyond one node lookup at a time.
+//! * **Paged shards** — pages stream back in index order through the same
+//!   prefetch-worker/bounded-channel pipeline as the paged histogram
+//!   build; resident packed bytes never exceed
+//!   `max_resident_pages × page_bytes` and the load/wait seconds land in
+//!   the store's round counters.
+//! * **Streaming prediction** ([`stream_margins`]) — one pull over the
+//!   source; each batch is quantised against the frozen cuts into a
+//!   transient [`QuantisedBatch`] and scored batch-at-a-time, so peak
+//!   transient bytes are O(`batch_rows × n_cols`) (measured:
+//!   [`StreamedMargins::peak_transient_bytes`]).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compress::page::{PageHandle, PagedMatrixBuilder, PageStore, SPILL_DIR_PREFIX};
+use crate::compress::CompressedMatrix;
+use crate::data::loader::groups_from_qids;
+use crate::data::source::BatchSource;
+use crate::data::DMatrix;
+use crate::exec::{ExecContext, ROW_CHUNK};
+use crate::quantile::{HistogramCuts, QuantizedMatrix};
+use crate::tree::partitioner::BinSource;
+use crate::tree::regtree::NO_CHILD;
+use crate::tree::RegTree;
+use crate::Float;
+
+/// Translate a float split threshold into its **exclusive upper global
+/// bin**: a present row goes left iff its (unclamped) global bin is
+/// `< threshold_to_bin(cuts, f, t)`. See the module docs for the
+/// exactness argument; for trained trees (`t == cut_of_bin(split_bin)`)
+/// this returns `split_bin + 1`, i.e. the repartitioner's
+/// `bin <= split_bin` rule. Thresholds below the feature's first cut
+/// return `ptrs[f]` (nothing present goes left); thresholds above the
+/// sentinel return `ptrs[f + 1]` (everything present goes left).
+#[inline]
+pub fn threshold_to_bin(cuts: &HistogramCuts, feature: usize, threshold: Float) -> u32 {
+    // deliberately the SAME function that quantises prediction values
+    // (`|{cuts ≤ x}|` in the feature's range): the whole equivalence
+    // proof rests on threshold and value passing through one mapping
+    cuts.bin_index_unclamped(feature, threshold)
+}
+
+/// One node of a bin-translated tree. Interior nodes route on
+/// `feature`'s global bin: present rows go left iff `bin < split`
+/// (missing → `default_left`); leaves carry `leaf_value` unchanged from
+/// the source [`RegTree`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinNode {
+    pub feature: u32,
+    /// Exclusive upper global bin of the left subtree
+    /// ([`threshold_to_bin`] of the float threshold).
+    pub split: u32,
+    pub left: i32,
+    pub right: i32,
+    pub default_left: bool,
+    pub leaf_value: Float,
+}
+
+impl BinNode {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.left == NO_CHILD
+    }
+}
+
+/// A [`RegTree`] with every float threshold translated to bin space
+/// against a fixed set of cuts — same node ids, same shape, bit-identical
+/// routing (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinTree {
+    pub nodes: Vec<BinNode>,
+}
+
+impl BinTree {
+    /// Translate `tree` against `cuts`. O(n_nodes); done once per tree,
+    /// amortised over every row scored.
+    pub fn from_tree(tree: &RegTree, cuts: &HistogramCuts) -> Self {
+        BinTree {
+            nodes: tree
+                .nodes
+                .iter()
+                .map(|n| BinNode {
+                    feature: n.feature,
+                    split: if n.is_leaf() {
+                        0
+                    } else {
+                        threshold_to_bin(cuts, n.feature as usize, n.threshold)
+                    },
+                    left: n.left,
+                    right: n.right,
+                    default_left: n.default_left,
+                    leaf_value: n.leaf_value,
+                })
+                .collect(),
+        }
+    }
+
+    /// Route one row to its leaf; `lookup(feature)` returns the row's
+    /// global bin for that feature (`None` = missing). Returns the node
+    /// id — identical to [`RegTree::leaf_for_row`] on the raw values.
+    #[inline]
+    pub fn leaf_for(&self, mut lookup: impl FnMut(usize) -> Option<u32>) -> usize {
+        let mut nid = 0usize;
+        loop {
+            let n = &self.nodes[nid];
+            if n.is_leaf() {
+                return nid;
+            }
+            let go_left = match lookup(n.feature as usize) {
+                Some(b) => b < n.split,
+                None => n.default_left,
+            };
+            nid = if go_left { n.left as usize } else { n.right as usize };
+        }
+    }
+
+    /// Leaf value for one row (see [`leaf_for`](Self::leaf_for)).
+    #[inline]
+    pub fn leaf_value_for(&self, lookup: impl FnMut(usize) -> Option<u32>) -> Float {
+        self.nodes[self.leaf_for(lookup)].leaf_value
+    }
+}
+
+/// A whole ensemble translated to bin space, grouped by output exactly
+/// like `Booster::trees` (`groups[output][round]`).
+#[derive(Debug, Clone)]
+pub struct BinForest {
+    pub groups: Vec<Vec<BinTree>>,
+}
+
+impl BinForest {
+    pub fn from_trees(trees: &[Vec<RegTree>], cuts: &HistogramCuts) -> Self {
+        BinForest {
+            groups: trees
+                .iter()
+                .map(|g| g.iter().map(|t| BinTree::from_tree(t, cuts)).collect())
+                .collect(),
+        }
+    }
+}
+
+/// Chunk-parallel margin accumulation over any per-row bin lookup — the
+/// quantised twin of [`crate::predict::predict_margins_par`]: rows are
+/// chunked once per output group, each worker iterates the whole forest
+/// for its rows in tree order, so the floating-point accumulation
+/// bracketing (and therefore every bit of the result) is identical to
+/// the float path at every thread count.
+fn margins_with_lookup<L>(
+    forest: &BinForest,
+    base_score: &[Float],
+    n_rows: usize,
+    lookup: &L,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>>
+where
+    L: Fn(usize, usize) -> Option<u32> + Sync,
+{
+    let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n_rows]).collect();
+    for (k, group) in forest.groups.iter().enumerate() {
+        exec.for_each_slice_mut(&mut out[k], ROW_CHUNK, |_, start, chunk| {
+            for (i, m) in chunk.iter_mut().enumerate() {
+                let row = start + i;
+                for tree in group {
+                    *m += tree.leaf_value_for(|f| lookup(row, f));
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Leaf indices (one vec per tree) over any per-row bin lookup — the
+/// quantised twin of [`crate::predict::predict_leaf_indices_par`].
+fn leaf_indices_with_lookup<L>(
+    trees: &[BinTree],
+    n_rows: usize,
+    lookup: &L,
+    exec: &ExecContext,
+) -> Vec<Vec<u32>>
+where
+    L: Fn(usize, usize) -> Option<u32> + Sync,
+{
+    trees
+        .iter()
+        .map(|t| {
+            let mut out = vec![0u32; n_rows];
+            exec.for_each_slice_mut(&mut out, ROW_CHUNK, |_, start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let row = start + i;
+                    *o = t.leaf_for(|f| lookup(row, f)) as u32;
+                }
+            });
+            out
+        })
+        .collect()
+}
+
+/// Margins straight from an uncompressed quantised shard.
+pub fn predict_margins_quantized(
+    forest: &BinForest,
+    base_score: &[Float],
+    qm: &QuantizedMatrix,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>> {
+    let src = BinSource::Quantized(qm);
+    margins_with_lookup(
+        forest,
+        base_score,
+        qm.n_rows,
+        &|row, f| src.feature_bin(row, f, cuts),
+        exec,
+    )
+}
+
+/// Margins straight from a bit-packed shard (§2.2): symbols unpack
+/// inline during traversal; the float matrix never exists.
+pub fn predict_margins_compressed(
+    forest: &BinForest,
+    base_score: &[Float],
+    cm: &CompressedMatrix,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>> {
+    let src = BinSource::Compressed(cm);
+    margins_with_lookup(
+        forest,
+        base_score,
+        cm.n_rows,
+        &|row, f| src.feature_bin(row, f, cuts),
+        exec,
+    )
+}
+
+/// Leaf indices from an uncompressed quantised shard.
+pub fn leaf_indices_quantized(
+    trees: &[BinTree],
+    qm: &QuantizedMatrix,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Vec<Vec<u32>> {
+    let src = BinSource::Quantized(qm);
+    leaf_indices_with_lookup(trees, qm.n_rows, &|row, f| src.feature_bin(row, f, cuts), exec)
+}
+
+/// Leaf indices from a bit-packed shard.
+pub fn leaf_indices_compressed(
+    trees: &[BinTree],
+    cm: &CompressedMatrix,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Vec<Vec<u32>> {
+    let src = BinSource::Compressed(cm);
+    leaf_indices_with_lookup(trees, cm.n_rows, &|row, f| src.feature_bin(row, f, cuts), exec)
+}
+
+/// Walk every page of a spilled shard in index order, feeding each
+/// resident page to `visit` — prediction's use of the shared prefetch
+/// pipeline [`crate::compress::page::with_prefetched_pages`] (the same
+/// worker/bounded-channel scheme and `max_resident_pages` accounting as
+/// the paged histogram build; load and blocked-wait seconds land on the
+/// store's round counters).
+fn walk_pages<F>(store: &PageStore, exec: &ExecContext, mut visit: F) -> Result<()>
+where
+    F: FnMut(&PageHandle) -> Result<()> + Send,
+{
+    let n = store.n_pages();
+    crate::compress::page::with_prefetched_pages(store, exec, (0..n).collect(), move |fetch| {
+        for want in 0..n {
+            let page = fetch(want)?;
+            visit(&page)?;
+        }
+        Ok(())
+    })
+}
+
+/// Margins from an external-memory shard: pages stream back in order
+/// under the residency budget; per-row traversal (and so every result
+/// bit) is identical to the resident compressed path — paging only
+/// changes where the packed words come from.
+pub fn predict_margins_paged(
+    forest: &BinForest,
+    base_score: &[Float],
+    store: &PageStore,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Result<Vec<Vec<Float>>> {
+    let n = store.n_rows();
+    let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+    let (stride, dense, null) = (
+        store.shape.row_stride,
+        store.shape.dense,
+        store.shape.n_bins as u32,
+    );
+    walk_pages(store, exec, |page| {
+        let m = &page.matrix;
+        for local in 0..m.n_rows {
+            let row = page.first_row + local;
+            for (k, group) in forest.groups.iter().enumerate() {
+                let slot = &mut out[k][row];
+                for tree in group {
+                    *slot += tree.leaf_value_for(|f| {
+                        BinSource::feature_bin_at(
+                            |flat| m.symbol(flat),
+                            local,
+                            f,
+                            cuts,
+                            stride,
+                            dense,
+                            null,
+                        )
+                    });
+                }
+            }
+        }
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Leaf indices from an external-memory shard (same page walk as
+/// [`predict_margins_paged`]).
+pub fn leaf_indices_paged(
+    trees: &[BinTree],
+    store: &PageStore,
+    cuts: &HistogramCuts,
+    exec: &ExecContext,
+) -> Result<Vec<Vec<u32>>> {
+    let n = store.n_rows();
+    let mut out: Vec<Vec<u32>> = trees.iter().map(|_| vec![0u32; n]).collect();
+    let (stride, dense, null) = (
+        store.shape.row_stride,
+        store.shape.dense,
+        store.shape.n_bins as u32,
+    );
+    walk_pages(store, exec, |page| {
+        let m = &page.matrix;
+        for local in 0..m.n_rows {
+            let row = page.first_row + local;
+            for (t, tree) in trees.iter().enumerate() {
+                out[t][row] = tree.leaf_for(|f| {
+                    BinSource::feature_bin_at(
+                        |flat| m.symbol(flat),
+                        local,
+                        f,
+                        cuts,
+                        stride,
+                        dense,
+                        null,
+                    )
+                }) as u32;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Missing marker of the transient dense quantised layout (never packed,
+/// so the marker need not fit the packed alphabet).
+const MISSING: u32 = u32::MAX;
+
+/// A transient, **unclamped** quantised batch for prediction: global bin
+/// per present value (`bin_index_unclamped`, so out-of-range values keep
+/// the information the clamped packed form drops — module docs), with
+/// dense rows as one bin per slot and sparse rows as explicit
+/// `(col, bin)` pairs. O(`n_rows × n_cols`) u32s; lives only as long as
+/// one streamed batch.
+pub enum QuantisedBatch {
+    Dense {
+        /// `bins[row * n_cols + f]`; `u32::MAX` marks absent values.
+        bins: Vec<u32>,
+        n_rows: usize,
+        n_cols: usize,
+    },
+    Sparse {
+        indptr: Vec<usize>,
+        /// Column index per present value (ascending within a row).
+        cols: Vec<u32>,
+        /// Unclamped global bin per present value.
+        bins: Vec<u32>,
+        n_rows: usize,
+    },
+}
+
+impl QuantisedBatch {
+    /// Quantise a float matrix against frozen cuts. `col_shift` is
+    /// subtracted from raw column indices (1 for 1-based LibSVM streams,
+    /// 0 otherwise — the same convention as ingestion's
+    /// [`crate::data::IngestMeta::col_shift`]).
+    pub fn from_dmatrix(x: &DMatrix, cuts: &HistogramCuts, col_shift: u32) -> Result<Self> {
+        let n_features = cuts.n_features();
+        let shift = col_shift as usize;
+        match x {
+            DMatrix::Dense { .. } => {
+                let n_cols = x.n_cols();
+                ensure!(
+                    n_cols == n_features,
+                    "prediction rows have {n_cols} features but the model was trained on {n_features}"
+                );
+                let n_rows = x.n_rows();
+                let mut bins = vec![MISSING; n_rows * n_cols];
+                for row in 0..n_rows {
+                    for (f, v) in x.iter_row(row) {
+                        bins[row * n_cols + f] = cuts.bin_index_unclamped(f, v);
+                    }
+                }
+                Ok(QuantisedBatch::Dense {
+                    bins,
+                    n_rows,
+                    n_cols,
+                })
+            }
+            DMatrix::Csr { .. } => {
+                let n_rows = x.n_rows();
+                let mut indptr = Vec::with_capacity(n_rows + 1);
+                let mut cols: Vec<u32> = Vec::new();
+                let mut bins: Vec<u32> = Vec::new();
+                indptr.push(0usize);
+                for row in 0..n_rows {
+                    for (c, v) in x.iter_row(row) {
+                        ensure!(
+                            c >= shift,
+                            "column index {c} below the stream's column base {shift}"
+                        );
+                        let f = c - shift;
+                        ensure!(
+                            f < n_features,
+                            "prediction rows use feature {f} but the model was trained on {n_features}"
+                        );
+                        cols.push(f as u32);
+                        // a STORED NaN (sparse files can carry explicit
+                        // `nan` values): the float traversal evaluates
+                        // `NaN < t` = false at every split — "present,
+                        // always right" — which u32::MAX represents
+                        // exactly (above every translated threshold).
+                        // Dense NaN never reaches here: RowIter skips it,
+                        // matching DMatrix::get's missing semantics.
+                        bins.push(if v.is_nan() {
+                            u32::MAX
+                        } else {
+                            cuts.bin_index_unclamped(f, v)
+                        });
+                    }
+                    indptr.push(cols.len());
+                }
+                Ok(QuantisedBatch::Sparse {
+                    indptr,
+                    cols,
+                    bins,
+                    n_rows,
+                })
+            }
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        match self {
+            QuantisedBatch::Dense { n_rows, .. } | QuantisedBatch::Sparse { n_rows, .. } => *n_rows,
+        }
+    }
+
+    /// Transient bytes of this batch (the quantity the streaming
+    /// prediction peak-memory contract bounds).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantisedBatch::Dense { bins, .. } => bins.len() * 4,
+            QuantisedBatch::Sparse {
+                indptr, cols, bins, ..
+            } => indptr.len() * 8 + (cols.len() + bins.len()) * 4,
+        }
+    }
+
+    /// The row's unclamped global bin for `feature`, `None` if missing.
+    #[inline]
+    pub fn feature_bin(&self, row: usize, feature: usize) -> Option<u32> {
+        match self {
+            QuantisedBatch::Dense { bins, n_cols, .. } => {
+                let b = bins[row * n_cols + feature];
+                if b == MISSING {
+                    None
+                } else {
+                    Some(b)
+                }
+            }
+            QuantisedBatch::Sparse {
+                indptr, cols, bins, ..
+            } => {
+                let (lo, hi) = (indptr[row], indptr[row + 1]);
+                cols[lo..hi]
+                    .binary_search(&(feature as u32))
+                    .ok()
+                    .map(|i| bins[lo + i])
+            }
+        }
+    }
+}
+
+/// Accumulate one bin-translated tree into `margins` — the quantised
+/// twin of [`crate::predict::accumulate_tree_par`], bit-identical to it
+/// on the raw values at every thread count (module docs). This is what
+/// the training loop's per-round validation scoring runs on.
+pub fn accumulate_bin_tree_par(
+    tree: &BinTree,
+    batch: &QuantisedBatch,
+    margins: &mut [Float],
+    exec: &ExecContext,
+) {
+    debug_assert_eq!(margins.len(), batch.n_rows());
+    exec.for_each_slice_mut(margins, ROW_CHUNK, |_, start, chunk| {
+        for (i, m) in chunk.iter_mut().enumerate() {
+            *m += tree.leaf_value_for(|f| batch.feature_bin(start + i, f));
+        }
+    });
+}
+
+/// Margins for a whole transient batch (streaming prediction's
+/// per-batch kernel).
+pub fn predict_margins_batch(
+    forest: &BinForest,
+    base_score: &[Float],
+    batch: &QuantisedBatch,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>> {
+    margins_with_lookup(
+        forest,
+        base_score,
+        batch.n_rows(),
+        &|row, f| batch.feature_bin(row, f),
+        exec,
+    )
+}
+
+/// Result of one streaming prediction pass over a [`BatchSource`].
+#[derive(Debug, Clone)]
+pub struct StreamedMargins {
+    /// Raw margins per output group, in stream row order — bit-identical
+    /// to `predict_margins_par` over the equivalent in-memory matrix.
+    pub margins: Vec<Vec<Float>>,
+    /// Labels collected from the stream (evaluation substrate).
+    pub labels: Vec<Float>,
+    /// Ranking group boundaries reconstructed from qids (empty = none).
+    pub groups: Vec<usize>,
+    pub n_rows: usize,
+    pub n_batches: usize,
+    /// Measured peak transient bytes: one batch of floats plus its
+    /// quantised form — O(`batch_rows × n_cols`), never O(`n_rows`).
+    pub peak_transient_bytes: usize,
+    /// Column base subtracted from raw stream indices (LibSVM).
+    pub col_shift: u32,
+}
+
+/// The column-base rule every prediction path shares (and ingestion's
+/// pass-1 autodetect encodes the same way): shift by 1 iff the stream
+/// has present values and every raw index is ≥ 1 — 1-based files never
+/// use column 0. `min` is the minimum raw index over the whole stream
+/// (`None` for resolved-column or value-free streams ⇒ shift 0).
+#[inline]
+fn shift_from_min_col(min: Option<u32>) -> u32 {
+    u32::from(matches!(min, Some(m) if m >= 1))
+}
+
+/// Detect the column base of a raw-indexed stream via
+/// [`BatchSource::min_raw_col`] — file sources answer with an
+/// index-token-only scan, so no second full parse of the stream
+/// happens. Leaves the source reset. Returns 0 for sources with
+/// resolved columns.
+pub fn detect_col_shift(src: &mut dyn BatchSource) -> Result<u32> {
+    if !src.columns_are_raw() {
+        return Ok(0);
+    }
+    let min = src.min_raw_col()?;
+    src.reset()?;
+    Ok(shift_from_min_col(min))
+}
+
+/// **Streaming prediction**: one pass over `src`, quantising each batch
+/// against the frozen `cuts` and scoring it batch-at-a-time (two-pass
+/// free — the cuts are already known, unlike ingestion's sketch pass;
+/// raw-indexed sources pay one extra indices-only scan for the column
+/// base). Margins are bit-identical to the in-memory float path for any
+/// batch size and thread count.
+pub fn stream_margins(
+    trees: &[Vec<RegTree>],
+    base_score: &[Float],
+    cuts: &HistogramCuts,
+    src: &mut dyn BatchSource,
+    exec: &ExecContext,
+) -> Result<StreamedMargins> {
+    src.reset()?;
+    let col_shift = detect_col_shift(src)?;
+    let forest = BinForest::from_trees(trees, cuts);
+    let mut margins: Vec<Vec<Float>> = base_score.iter().map(|_| Vec::new()).collect();
+    let mut labels: Vec<Float> = Vec::new();
+    let mut qids: Vec<i64> = Vec::new();
+    let mut n_batches = 0usize;
+    let mut peak = 0usize;
+    while let Some(batch) = src.next_batch()? {
+        let qb = QuantisedBatch::from_dmatrix(&batch.x, cuts, col_shift)
+            .with_context(|| format!("quantising prediction batch {n_batches}"))?;
+        peak = peak.max(batch.x.float_bytes() + qb.bytes());
+        let bm = predict_margins_batch(&forest, base_score, &qb, exec);
+        for (k, m) in bm.into_iter().enumerate() {
+            margins[k].extend_from_slice(&m);
+        }
+        labels.extend_from_slice(&batch.y);
+        if batch.qid.is_empty() {
+            qids.resize(qids.len() + batch.n_rows(), -1);
+        } else {
+            qids.extend_from_slice(&batch.qid);
+        }
+        n_batches += 1;
+    }
+    let n_rows = labels.len();
+    let groups = groups_from_qids(&qids)?;
+    Ok(StreamedMargins {
+        margins,
+        labels,
+        groups,
+        n_rows,
+        n_batches,
+        peak_transient_bytes: peak,
+        col_shift,
+    })
+}
+
+/// A prediction input packed into spilled ELLPACK pages: the
+/// external-memory inference substrate (quantise → pack → spill, then
+/// traverse under the residency budget).
+pub struct PackedPrediction {
+    pub store: PageStore,
+    pub labels: Vec<Float>,
+    /// Ranking group boundaries (empty = none).
+    pub groups: Vec<usize>,
+    /// Sparse values that fell at or above their feature's sentinel cut
+    /// (or were stored NaN) and were clamped into the last bin (dense
+    /// inputs never clamp — see [`pack_source`]). Non-zero means rows
+    /// containing them may route differently from the float path at
+    /// is-present splits; the CLI warns when this is non-zero.
+    pub clamped_values: u64,
+}
+
+/// Quantise a streamed source against frozen `cuts` and spill it into a
+/// page file (two light passes: count/labels, then quantise+pack —
+/// O(`batch_rows × n_cols`) transient bytes, `budget × page_bytes`
+/// resident afterwards).
+///
+/// **Dense inputs pack exactly**: the page alphabet is widened by one
+/// symbol so the unclamped bin index survives packing — a value at or
+/// above feature `f`'s sentinel stores `ptrs[f+1]` (slot position keeps
+/// the feature identity; the widened null cannot collide), and paged
+/// prediction is bit-identical to the float path for **every** input,
+/// in or out of the training range.
+///
+/// **Sparse (ELLPACK) inputs clamp**: symbols carry the feature identity
+/// through their bin range, so there is no per-feature overflow encoding
+/// — out-of-range values fold into the feature's last bin exactly like
+/// training-time quantisation. [`PackedPrediction::clamped_values`]
+/// counts them (zero for anything inside the training range, where the
+/// paths are bit-identical).
+pub fn pack_source(
+    src: &mut dyn BatchSource,
+    cuts: &HistogramCuts,
+    page_rows: usize,
+    max_resident_pages: usize,
+) -> Result<PackedPrediction> {
+    ensure!(page_rows >= 1, "page_rows must be >= 1");
+    ensure!(max_resident_pages >= 1, "max_resident_pages must be >= 1");
+    let n_features = cuts.n_features();
+    let raw = src.columns_are_raw();
+
+    // pass A: labels, qids, per-row widths, column base
+    src.reset()?;
+    let mut labels: Vec<Float> = Vec::new();
+    let mut qids: Vec<i64> = Vec::new();
+    let mut row_nnz: Vec<u32> = Vec::new();
+    let mut dense: Option<bool> = None;
+    let mut min_col: Option<u32> = None;
+    while let Some(batch) = src.next_batch()? {
+        let b_rows = batch.n_rows();
+        ensure!(b_rows > 0, "source yielded an empty batch");
+        let batch_dense = matches!(batch.x, DMatrix::Dense { .. });
+        match dense {
+            None => dense = Some(batch_dense),
+            Some(d) => ensure!(d == batch_dense, "source switched dense/sparse"),
+        }
+        if batch_dense {
+            ensure!(
+                batch.x.n_cols() == n_features,
+                "prediction rows have {} features but the model was trained on {n_features}",
+                batch.x.n_cols()
+            );
+        } else if let DMatrix::Csr {
+            indptr, indices, ..
+        } = &batch.x
+        {
+            for r in 0..b_rows {
+                row_nnz.push((indptr[r + 1] - indptr[r]) as u32);
+            }
+            if raw {
+                for &c in indices {
+                    min_col = Some(min_col.map_or(c, |m| m.min(c)));
+                }
+            }
+        }
+        labels.extend_from_slice(&batch.y);
+        if batch.qid.is_empty() {
+            qids.resize(qids.len() + b_rows, -1);
+        } else {
+            qids.extend_from_slice(&batch.qid);
+        }
+    }
+    let n_rows = labels.len();
+    ensure!(n_rows >= 1, "prediction source yielded no rows");
+    let dense = dense.unwrap_or(true);
+    // the SAME min→shift decision detect_col_shift applies to the
+    // streaming path (the min scan itself stays fused into this pass)
+    let shift = shift_from_min_col(min_col) as usize;
+    let stride = if dense {
+        n_features
+    } else {
+        row_nnz.iter().copied().max().unwrap_or(0).max(1) as usize
+    };
+
+    // pass B: quantise (clamped) and pack straight into the spill writer
+    src.reset()?;
+    static PACK_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "{}{}_predict{}",
+        SPILL_DIR_PREFIX,
+        std::process::id(),
+        PACK_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating prediction spill dir {}", dir.display()))?;
+    let n_bins = cuts.total_bins();
+    // dense pages widen the alphabet by one symbol so the last feature's
+    // overflow bin (== total_bins) stays distinct from the null/padding
+    // symbol; sparse pages keep the training alphabet (and clamp)
+    let page_bins = if dense { n_bins + 1 } else { n_bins };
+    let null = page_bins as u32;
+    let mut clamped = 0u64;
+    let mut builder = PagedMatrixBuilder::new(
+        dir.join("predict.pages"),
+        n_rows,
+        n_features,
+        stride,
+        page_bins,
+        dense,
+        page_rows,
+        max_resident_pages,
+    )?;
+    let mut rowbuf: Vec<u32> = Vec::with_capacity(stride);
+    while let Some(batch) = src.next_batch()? {
+        for r in 0..batch.n_rows() {
+            rowbuf.clear();
+            if dense {
+                rowbuf.resize(n_features, null);
+                for (f, v) in batch.x.iter_row(r) {
+                    // unclamped: overflow of feature f stores ptrs[f+1];
+                    // the slot keeps the feature identity, so routing is
+                    // exact even beyond the training range
+                    rowbuf[f] = cuts.bin_index_unclamped(f, v);
+                }
+            } else {
+                for (c, v) in batch.x.iter_row(r) {
+                    ensure!(c >= shift, "column index {c} below column base {shift}");
+                    let f = c - shift;
+                    ensure!(
+                        f < n_features,
+                        "prediction rows use feature {f} but the model was trained on {n_features}"
+                    );
+                    let hi = cuts.ptrs[f + 1];
+                    // stored NaN routes "always right" on the float path
+                    // (`NaN < t` is false); the packed alphabet cannot
+                    // express that, so it clamps (and is counted) with
+                    // the overflow values
+                    let b = if v.is_nan() {
+                        hi
+                    } else {
+                        cuts.bin_index_unclamped(f, v)
+                    };
+                    if b >= hi {
+                        // ELLPACK symbols carry the feature through their
+                        // bin range — no overflow encoding; clamp (and
+                        // count) exactly like training-time quantisation
+                        clamped += 1;
+                        rowbuf.push(hi - 1);
+                    } else {
+                        rowbuf.push(b);
+                    }
+                }
+            }
+            builder.push_row(&rowbuf)?;
+        }
+    }
+    ensure!(
+        builder.rows_filled() == n_rows,
+        "pass B replay yielded {} rows, pass A saw {n_rows}",
+        builder.rows_filled()
+    );
+    let store = builder.finish()?;
+    let groups = groups_from_qids(&qids)?;
+    Ok(PackedPrediction {
+        store,
+        labels,
+        groups,
+        clamped_values: clamped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::DMatrixSource;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::data::Dataset;
+    use crate::predict;
+    use crate::quantile::Quantizer;
+    use crate::util::Pcg64;
+
+    /// Random dense matrix with missing values + cuts fit on it.
+    fn fixture(n: usize, d: usize, seed: u64) -> (DMatrix, HistogramCuts) {
+        let mut rng = Pcg64::new(seed);
+        let vals: Vec<Float> = (0..n * d)
+            .map(|_| {
+                if rng.next_f64() < 0.15 {
+                    Float::NAN
+                } else {
+                    rng.next_f32() * 10.0 - 5.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, d);
+        let cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        (x, cuts)
+    }
+
+    /// Random tree over `d` features whose thresholds are cut values —
+    /// the trained-tree invariant.
+    fn random_tree(cuts: &HistogramCuts, depth: usize, rng: &mut Pcg64) -> RegTree {
+        let mut t = RegTree::new_root(rng.next_f32() - 0.5, 1.0);
+        let mut frontier = vec![(0usize, 0usize)];
+        while let Some((nid, lvl)) = frontier.pop() {
+            if lvl >= depth || rng.next_f64() < 0.25 {
+                continue;
+            }
+            let f = rng.gen_range(cuts.n_features());
+            let fc = cuts.feature_cuts(f);
+            let threshold = fc[rng.gen_range(fc.len())];
+            let (l, r) = t.apply_split(
+                nid,
+                f as u32,
+                threshold,
+                rng.next_f64() < 0.5,
+                1.0,
+                rng.next_f32() - 0.5,
+                1.0,
+                rng.next_f32() - 0.5,
+                1.0,
+            );
+            frontier.push((l, lvl + 1));
+            frontier.push((r, lvl + 1));
+        }
+        t
+    }
+
+    #[test]
+    fn threshold_to_bin_round_trips_split_bins() {
+        let (x, cuts) = fixture(200, 4, 1);
+        let _ = x;
+        for f in 0..cuts.n_features() {
+            let lo = cuts.ptrs[f];
+            for b in lo..cuts.ptrs[f + 1] {
+                let t = cuts.cut_of_bin(b);
+                assert_eq!(
+                    threshold_to_bin(&cuts, f, t),
+                    b + 1,
+                    "feature {f} bin {b}: translation must be split_bin + 1"
+                );
+            }
+            // below the first cut / above the sentinel
+            let first = cuts.feature_cuts(f)[0];
+            let last = *cuts.feature_cuts(f).last().unwrap();
+            assert_eq!(threshold_to_bin(&cuts, f, first - 1.0), lo);
+            assert_eq!(
+                threshold_to_bin(&cuts, f, last + last.abs() + 1.0),
+                cuts.ptrs[f + 1]
+            );
+        }
+    }
+
+    #[test]
+    fn bin_traversal_matches_float_on_all_storages() {
+        let (x, cuts) = fixture(500, 5, 2);
+        let mut rng = Pcg64::new(7);
+        let trees: Vec<RegTree> = (0..6).map(|_| random_tree(&cuts, 4, &mut rng)).collect();
+        let forest = BinForest::from_trees(&[trees.clone()], &cuts);
+        let base = [0.25f32];
+        let float = predict::predict_margins(&[trees.clone()], &base, &x);
+
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let exec = ExecContext::serial();
+        let mq = predict_margins_quantized(&forest, &base, &qm, &cuts, &exec);
+        let mc = predict_margins_compressed(&forest, &base, &cm, &cuts, &exec);
+        for (a, b) in float[0].iter().zip(mq[0].iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "quantized");
+        }
+        for (a, b) in float[0].iter().zip(mc[0].iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "compressed");
+        }
+
+        // transient unclamped batch (the streaming representation)
+        let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+        let mb = predict_margins_batch(&forest, &base, &qb, &exec);
+        assert_eq!(mb[0], float[0], "batch");
+
+        // leaf indices agree too
+        let fl = predict::predict_leaf_indices(&trees, &x);
+        let bl = leaf_indices_compressed(&forest.groups[0], &cm, &cuts, &exec);
+        assert_eq!(fl, bl);
+    }
+
+    #[test]
+    fn unclamped_batch_is_exact_beyond_training_range() {
+        // cuts fit on narrow data; prediction rows exceed the sentinel —
+        // the transient representation must still match float traversal,
+        // including on a split at a feature's last bin (is-present split)
+        let vals: Vec<Float> = (0..64).map(|i| (i % 8) as Float).collect();
+        let x = DMatrix::dense(vals, 64, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let hi = cuts.ptrs[1] - 1; // the feature's last (sentinel) bin
+        let mut t = RegTree::new_root(0.0, 1.0);
+        t.apply_split(0, 0, cuts.cut_of_bin(hi), false, 1.0, -1.0, 1.0, 2.0, 1.0);
+        let probe = DMatrix::dense(vec![0.0, 7.0, 1e9, Float::NAN], 4, 1);
+        let float: Vec<Float> = (0..4).map(|r| t.predict_row(&probe, r)).collect();
+        let qb = QuantisedBatch::from_dmatrix(&probe, &cuts, 0).unwrap();
+        let bt = BinTree::from_tree(&t, &cuts);
+        let quant: Vec<Float> = (0..4)
+            .map(|r| bt.leaf_value_for(|f| qb.feature_bin(r, f)))
+            .collect();
+        assert_eq!(float, quant, "out-of-range values must route identically");
+        assert_eq!(quant[2], 2.0, "1e9 exceeds the sentinel -> right");
+        assert_eq!(quant[3], 2.0, "missing follows default right");
+    }
+
+    #[test]
+    fn paged_margins_match_resident_under_every_budget() {
+        let (x, cuts) = fixture(800, 4, 3);
+        let mut rng = Pcg64::new(11);
+        let trees: Vec<RegTree> = (0..4).map(|_| random_tree(&cuts, 3, &mut rng)).collect();
+        let forest = BinForest::from_trees(&[trees.clone()], &cuts);
+        let base = [0.0f32];
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let resident =
+            predict_margins_compressed(&forest, &base, &cm, &cuts, &ExecContext::serial());
+        for (page_rows, budget, threads) in
+            [(64usize, 1usize, 1usize), (64, 3, 4), (900, 1, 4), (123, 2, 2)]
+        {
+            let path = std::env::temp_dir().join(format!(
+                "xgb_tpu_qpred_{page_rows}_{budget}_{threads}_{}",
+                std::process::id()
+            ));
+            let mut b = PagedMatrixBuilder::new(
+                &path, qm.n_rows, qm.n_features, qm.row_stride, qm.n_bins, qm.dense, page_rows,
+                budget,
+            )
+            .unwrap();
+            for r in 0..qm.n_rows {
+                b.push_row(qm.row(r)).unwrap();
+            }
+            let store = b.finish().unwrap();
+            let exec = ExecContext::new(threads);
+            let paged = predict_margins_paged(&forest, &base, &store, &cuts, &exec).unwrap();
+            for (a, b) in resident[0].iter().zip(paged[0].iter()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "page_rows={page_rows} budget={budget} threads={threads}"
+                );
+            }
+            assert_eq!(store.resident_bytes(), 0, "nothing left resident");
+            let stats = store.take_round_stats();
+            assert!(
+                stats.peak_resident_bytes <= budget * store.max_page_bytes(),
+                "peak {} > {budget} x {}",
+                stats.peak_resident_bytes,
+                store.max_page_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn stream_margins_match_in_memory_and_stay_bounded() {
+        let g = generate(&DatasetSpec::higgs_like(600), 17);
+        let cuts = HistogramCuts::from_dmatrix(&g.train.x, 16, None);
+        let mut rng = Pcg64::new(23);
+        let trees: Vec<RegTree> = (0..5).map(|_| random_tree(&cuts, 4, &mut rng)).collect();
+        let base = [0.5f32];
+        let float = predict::predict_margins(&[trees.clone()], &base, &g.train.x);
+        for batch_rows in [7usize, 64, g.train.n_rows()] {
+            let mut src = DMatrixSource::from_dataset(&g.train, batch_rows);
+            let sm = stream_margins(
+                &[trees.clone()],
+                &base,
+                &cuts,
+                &mut src,
+                &ExecContext::serial(),
+            )
+            .unwrap();
+            assert_eq!(sm.margins[0], float[0], "batch_rows={batch_rows}");
+            assert_eq!(sm.labels, g.train.y);
+            assert_eq!(sm.n_batches, g.train.n_rows().div_ceil(batch_rows));
+            // transient bytes scale with the batch, not the dataset
+            let bound = batch_rows * g.train.n_cols() * 8 + (batch_rows + 1) * 8;
+            assert!(
+                sm.peak_transient_bytes <= bound,
+                "batch_rows={batch_rows}: {} > {bound}",
+                sm.peak_transient_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn pack_source_spills_and_predicts_identically() {
+        let g = generate(&DatasetSpec::higgs_like(400), 29);
+        let cuts = HistogramCuts::from_dmatrix(&g.train.x, 16, None);
+        let mut rng = Pcg64::new(31);
+        let trees: Vec<RegTree> = (0..4).map(|_| random_tree(&cuts, 3, &mut rng)).collect();
+        let forest = BinForest::from_trees(&[trees.clone()], &cuts);
+        let base = [0.0f32];
+        let float = predict::predict_margins(&[trees.clone()], &base, &g.train.x);
+        let mut src = DMatrixSource::from_dataset(&g.train, 53);
+        let packed = pack_source(&mut src, &cuts, 64, 2).unwrap();
+        assert_eq!(packed.labels, g.train.y);
+        assert_eq!(packed.clamped_values, 0, "training data is in-range");
+        let paged = predict_margins_paged(
+            &forest,
+            &base,
+            &packed.store,
+            &cuts,
+            &ExecContext::new(2),
+        )
+        .unwrap();
+        assert_eq!(paged[0], float[0]);
+    }
+
+    #[test]
+    fn dense_packed_prediction_exact_beyond_training_range() {
+        // the widened-alphabet encoding: a dense prediction input with
+        // values above the sentinel must predict bit-identically to the
+        // float path through pack_source + paged traversal, even across
+        // an is-present split at a feature's last bin
+        let vals: Vec<Float> = (0..64).map(|i| (i % 8) as Float).collect();
+        let x = DMatrix::dense(vals, 64, 1);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let hi = cuts.ptrs[1] - 1; // the feature's last (sentinel) bin
+        let mut t = RegTree::new_root(0.0, 1.0);
+        t.apply_split(0, 0, cuts.cut_of_bin(hi), false, 1.0, -1.0, 1.0, 2.0, 1.0);
+        let probe = Dataset::new(
+            DMatrix::dense(vec![0.0, 7.0, 1e9, Float::NAN], 4, 1),
+            vec![0.0; 4],
+        );
+        let float: Vec<Float> = (0..4).map(|r| t.predict_row(&probe.x, r)).collect();
+        let forest = BinForest::from_trees(&[vec![t]], &cuts);
+        let mut src = DMatrixSource::from_dataset(&probe, 2);
+        let packed = pack_source(&mut src, &cuts, 2, 1).unwrap();
+        assert_eq!(packed.clamped_values, 0, "dense inputs never clamp");
+        let paged =
+            predict_margins_paged(&forest, &[0.0], &packed.store, &cuts, &ExecContext::serial())
+                .unwrap();
+        assert_eq!(paged[0], float, "1e9 must route right, NaN by default");
+    }
+
+    #[test]
+    fn stored_csr_nan_routes_like_float() {
+        // sparse files can carry explicit nan values; the float path
+        // treats them as present-and-always-right (`NaN < t` is false),
+        // unlike a truly absent value which takes the default direction
+        let train = DMatrix::csr(vec![0, 1, 2], vec![0, 0], vec![1.0, 5.0], 2, 1);
+        let cuts = HistogramCuts::from_dmatrix(&train, 4, None);
+        let mut t = RegTree::new_root(0.0, 1.0);
+        // default LEFT, so "missing" and "stored NaN" diverge observably
+        t.apply_split(0, 0, cuts.feature_cuts(0)[0], true, 1.0, -1.0, 1.0, 2.0, 1.0);
+        let probe = DMatrix::csr(vec![0, 1, 1], vec![0], vec![Float::NAN], 2, 1);
+        let float: Vec<Float> = (0..2).map(|r| t.predict_row(&probe, r)).collect();
+        assert_eq!(float, vec![2.0, -1.0], "stored NaN right, absent default-left");
+        let qb = QuantisedBatch::from_dmatrix(&probe, &cuts, 0).unwrap();
+        let bt = BinTree::from_tree(&t, &cuts);
+        let quant: Vec<Float> = (0..2)
+            .map(|r| bt.leaf_value_for(|f| qb.feature_bin(r, f)))
+            .collect();
+        assert_eq!(float, quant);
+    }
+
+    #[test]
+    fn sparse_packed_prediction_counts_clamped_values() {
+        // sparse ELLPACK symbols cannot encode per-feature overflow: an
+        // out-of-range value clamps into the last bin and is counted
+        let x = DMatrix::csr(
+            vec![0, 1, 2],
+            vec![0, 0],
+            vec![3.0, 4.0],
+            2,
+            1,
+        );
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let probe = Dataset::new(
+            DMatrix::csr(vec![0, 1, 2], vec![0, 0], vec![3.0, 1e9], 2, 1),
+            vec![0.0; 2],
+        );
+        let mut src = DMatrixSource::from_dataset(&probe, 8);
+        let packed = pack_source(&mut src, &cuts, 8, 1).unwrap();
+        assert_eq!(packed.clamped_values, 1, "the 1e9 value clamps");
+        // the clamped symbol still lands in the feature's last bin
+        let page = packed.store.load_page(0).unwrap();
+        assert_eq!(page.matrix.get(1, 0), Some(cuts.ptrs[1] - 1));
+    }
+}

@@ -141,6 +141,24 @@ impl HistogramCuts {
         (lo + local) as u32
     }
 
+    /// [`bin_index`](Self::bin_index) **without** the into-range clamp:
+    /// values at or above the feature's sentinel cut map to
+    /// `ptrs[f + 1]` (one past the feature's last bin) instead of being
+    /// folded into it. The quantised prediction path uses this for
+    /// transient (unpacked) batches so that the bin comparison
+    /// `bin < threshold_to_bin(t)` reproduces the float comparison
+    /// `v < t` exactly even for values outside the training range — the
+    /// packed alphabet cannot represent the overflow symbol, so packed
+    /// storages keep the clamped form (where every value is in range by
+    /// construction of the cuts).
+    #[inline]
+    pub fn bin_index_unclamped(&self, f: usize, v: Float) -> u32 {
+        let lo = self.ptrs[f] as usize;
+        let hi = self.ptrs[f + 1] as usize;
+        let cuts = &self.values[lo..hi];
+        (lo + cuts.partition_point(|&c| c <= v)) as u32
+    }
+
     /// Inverse-ish mapping for split thresholds: the representative split
     /// value of a global bin is its cut (split condition `v < cut` goes
     /// left).

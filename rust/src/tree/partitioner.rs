@@ -69,8 +69,10 @@ impl<'a> BinSource<'a> {
     /// The bin of `(row, feature)`, or None if missing.
     /// Dense layout: direct slot lookup. Sparse ELLPACK: scan the row's
     /// symbols for one inside the feature's global-bin range.
+    /// `pub(crate)`: quantised prediction routes through this exact
+    /// lookup too ([`crate::predict::quantised`]).
     #[inline]
-    fn feature_bin(&self, row: usize, feature: usize, cuts: &HistogramCuts) -> Option<u32> {
+    pub(crate) fn feature_bin(&self, row: usize, feature: usize, cuts: &HistogramCuts) -> Option<u32> {
         if let BinSource::Paged(store) = self {
             // resolve the row's page once, then read symbols from it.
             // Deliberate panic on I/O failure: the routing API is
@@ -105,8 +107,11 @@ impl<'a> BinSource<'a> {
 
     /// Shared routing lookup over any symbol reader (in-memory matrices
     /// read at the shard-flat index; pages at the page-local index).
+    /// `pub(crate)`: the quantised prediction path
+    /// ([`crate::predict::quantised`]) routes with exactly this lookup so
+    /// prediction and training repartition can never disagree.
     #[inline]
-    fn feature_bin_at(
+    pub(crate) fn feature_bin_at(
         symbol: impl Fn(usize) -> u32,
         row: usize,
         feature: usize,

@@ -1,0 +1,362 @@
+//! Compressed end-to-end prediction parity suite: predictions, leaf
+//! indices and eval metrics computed straight from the packed ELLPACK
+//! representation (resident shards, spilled pages, streamed batches)
+//! must be **bit-identical** to the float traversal — across
+//! {dense CSV, sparse LibSVM, multiclass, ranking} × page sizes
+//! {1-page, 64-row} × budgets {1,3} × threads {1,4} × devices {1,3},
+//! including values exactly on cut boundaries and NaN/missing rows
+//! (default-direction traversal). Also pins the streaming prediction
+//! peak-memory contract (O(batch_rows × n_cols) transient) and the
+//! paged path's `max_resident_pages` residency bound.
+
+use std::path::PathBuf;
+
+use xgb_tpu::coordinator::device::ShardStorage;
+use xgb_tpu::coordinator::MultiDeviceCoordinator;
+use xgb_tpu::data::source::DMatrixSource;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::{load_csv, load_libsvm, save_csv, save_libsvm, DMatrix, Dataset};
+use xgb_tpu::data::{CsvSource, LibsvmSource};
+use xgb_tpu::gbm::{Booster, Learner, LearnerParams, ObjectiveKind};
+use xgb_tpu::predict;
+use xgb_tpu::Float;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("xgb_tpu_cpred_{name}_{}", std::process::id()))
+}
+
+fn params(objective: ObjectiveKind, threads: usize, devices: usize) -> LearnerParams {
+    LearnerParams {
+        objective,
+        num_rounds: 4,
+        max_depth: 3,
+        max_bins: 16,
+        n_devices: devices,
+        threads,
+        compress: true,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+fn train(p: LearnerParams, ds: &Dataset, valid: Option<&Dataset>) -> Booster {
+    Learner::from_params(p).unwrap().train(ds, valid).unwrap()
+}
+
+/// Float-path reference: margins + leaf indices over the raw matrix.
+fn float_reference(b: &Booster, x: &DMatrix) -> (Vec<Vec<Float>>, Vec<Vec<u32>>) {
+    let margins = predict::predict_margins(&b.trees, &b.base_score, x);
+    let leaves = predict::predict_leaf_indices(&b.trees[0], x);
+    (margins, leaves)
+}
+
+fn assert_margins_eq(a: &[Vec<Float>], b: &[Vec<Float>], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: group count");
+    for (k, (ga, gb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ga.len(), gb.len(), "{ctx}: group {k} length");
+        for (i, (x, y)) in ga.iter().zip(gb.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: group {k} row {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// The core sweep: train once per (threads, devices), then require the
+/// coordinator's quantised shard prediction — resident AND paged at
+/// every (page size, budget) — to reproduce the float path bit for bit.
+fn sweep_storage_parity(ds: &Dataset, objective: ObjectiveKind, ctx_name: &str) {
+    for devices in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let p = params(objective, threads, devices);
+            let booster = train(p.clone(), ds, None);
+            let (float_margins, float_leaves) = float_reference(&booster, &ds.x);
+
+            // resident packed shards
+            let resident = MultiDeviceCoordinator::from_dmatrix(&ds.x, p.coordinator_params())
+                .unwrap();
+            assert_eq!(
+                Some(&resident.cuts),
+                booster.cuts.as_ref(),
+                "{ctx_name}: coordinator and model must share cuts"
+            );
+            let (m, stats) = resident
+                .predict_margins(&booster.trees, &booster.base_score)
+                .unwrap();
+            assert_margins_eq(&float_margins, &m, &format!("{ctx_name} resident d={devices} t={threads}"));
+            assert!(stats.predict_wall_secs >= 0.0);
+            assert_eq!(stats.pages_loaded, 0, "resident prediction loads no pages");
+            let (l, _) = resident.predict_leaf_indices(&booster.trees[0]).unwrap();
+            assert_eq!(float_leaves, l, "{ctx_name} resident leaves d={devices} t={threads}");
+
+            // paged shards: 1-page (everything in one page) and 64-row
+            let shard_rows = ds.n_rows().div_ceil(devices);
+            for page_rows in [shard_rows + 1, 64usize] {
+                for budget in [1usize, 3] {
+                    let mut pp = p.coordinator_params();
+                    pp.max_resident_pages = budget;
+                    pp.page_rows = page_rows;
+                    let paged = MultiDeviceCoordinator::from_dmatrix(&ds.x, pp).unwrap();
+                    let ctx = format!(
+                        "{ctx_name} paged d={devices} t={threads} page_rows={page_rows} budget={budget}"
+                    );
+                    let (pm, pstats) = paged
+                        .predict_margins(&booster.trees, &booster.base_score)
+                        .unwrap();
+                    assert_margins_eq(&float_margins, &pm, &ctx);
+                    assert!(pstats.pages_loaded > 0, "{ctx}: must read spilled pages");
+                    // residency bound: budget x largest page of any shard
+                    let max_page = paged
+                        .devices
+                        .iter()
+                        .map(|d| match &d.storage {
+                            ShardStorage::Paged(ps) => ps.max_page_bytes(),
+                            _ => panic!("expected paged storage"),
+                        })
+                        .max()
+                        .unwrap();
+                    assert!(
+                        pstats.peak_resident_page_bytes <= budget * max_page,
+                        "{ctx}: peak {} > {budget} x {max_page}",
+                        pstats.peak_resident_page_bytes
+                    );
+                    let (pl, _) = paged.predict_leaf_indices(&booster.trees[0]).unwrap();
+                    assert_eq!(float_leaves, pl, "{ctx}: leaves");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_csv_storage_parity() {
+    // text round-trip so every float is exactly what a file reader sees
+    let g = generate(&DatasetSpec::airline_like(500), 41);
+    let path = tmp("dense.csv");
+    save_csv(&g.train, &path).unwrap();
+    let ds = load_csv(&path, 0, false).unwrap();
+    sweep_storage_parity(&ds, ObjectiveKind::BinaryLogistic, "dense-csv");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sparse_libsvm_storage_parity() {
+    let g = generate(&DatasetSpec::bosch_like(450), 43);
+    let path = tmp("sparse.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let ds = load_libsvm(&path).unwrap();
+    sweep_storage_parity(&ds, ObjectiveKind::BinaryLogistic, "sparse-libsvm");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn multiclass_storage_parity() {
+    let g = generate(&DatasetSpec::covtype_like(600), 45);
+    let mut p = params(ObjectiveKind::MultiSoftmax, 4, 3);
+    p.num_class = 7;
+    let booster = train(p.clone(), &g.train, None);
+    assert_eq!(booster.trees.len(), 7);
+    let (float_margins, float_leaves) = float_reference(&booster, &g.train.x);
+    let mut pp = p.coordinator_params();
+    pp.max_resident_pages = 2;
+    pp.page_rows = 64;
+    let paged = MultiDeviceCoordinator::from_dmatrix(&g.train.x, pp).unwrap();
+    let (m, _) = paged
+        .predict_margins(&booster.trees, &booster.base_score)
+        .unwrap();
+    assert_margins_eq(&float_margins, &m, "multiclass paged");
+    let (l, _) = paged.predict_leaf_indices(&booster.trees[0]).unwrap();
+    assert_eq!(float_leaves, l);
+    // transformed predictions (class ids) agree through the stream path
+    let mut src = DMatrixSource::from_dataset(&g.train, 97);
+    let streamed = booster.predict_from_source(&mut src).unwrap();
+    assert_eq!(booster.predict(&g.train.x), streamed);
+}
+
+#[test]
+fn ranking_stream_eval_parity() {
+    // qid groups ride the stream; ndcg via the compressed path must
+    // equal the float evaluation exactly
+    let g = generate(&DatasetSpec::ranking_like(500), 47);
+    let path = tmp("rank.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let ds = load_libsvm(&path).unwrap();
+    let booster = train(params(ObjectiveKind::RankPairwise, 1, 1), &ds, None);
+    let float_ndcg = booster.evaluate(&ds, "ndcg").unwrap();
+    for batch_rows in [33usize, 1024] {
+        let mut src = LibsvmSource::open(&path, batch_rows).unwrap();
+        let stream_ndcg = booster.evaluate_from_source(&mut src, "ndcg").unwrap();
+        assert_eq!(
+            float_ndcg.to_bits(),
+            stream_ndcg.to_bits(),
+            "batch_rows={batch_rows}: {float_ndcg} vs {stream_ndcg}"
+        );
+    }
+    let mut src = LibsvmSource::open(&path, 61).unwrap();
+    let (paged_ndcg, clamped) = booster.evaluate_paged(&mut src, "ndcg", 64, 2).unwrap();
+    assert_eq!(float_ndcg.to_bits(), paged_ndcg.to_bits());
+    assert_eq!(clamped, 0, "training-range input never clamps");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn streaming_prediction_matches_and_stays_bounded() {
+    // dense CSV streamed straight from the file — predictions must be
+    // bit-identical to the in-memory float path for every batch size and
+    // thread count, with transient bytes bounded by the batch
+    let g = generate(&DatasetSpec::airline_like(700), 49);
+    let path = tmp("stream.csv");
+    save_csv(&g.train, &path).unwrap();
+    let ds = load_csv(&path, 0, false).unwrap();
+    for threads in [1usize, 4] {
+        let mut p = params(ObjectiveKind::BinaryLogistic, threads, 2);
+        p.num_rounds = 3;
+        let booster = train(p, &ds, None);
+        let float = booster.predict(&ds.x);
+        for batch_rows in [7usize, 64, ds.n_rows()] {
+            let mut src = CsvSource::open(&path, 0, false, batch_rows).unwrap();
+            let (preds, sm) = booster.predict_stream(&mut src).unwrap();
+            assert_eq!(
+                float, preds,
+                "threads={threads} batch_rows={batch_rows}: streamed predictions"
+            );
+            assert_eq!(sm.n_rows, ds.n_rows());
+            // O(batch_rows x n_cols) transient: floats (4B) + unclamped
+            // bins (4B) per cell, plus small per-row overhead
+            let bound = batch_rows * ds.n_cols() * 8 + (batch_rows + 1) * 16;
+            assert!(
+                sm.peak_transient_bytes <= bound,
+                "threads={threads} batch_rows={batch_rows}: {} > {bound}",
+                sm.peak_transient_bytes
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn paged_streaming_prediction_matches() {
+    // LibSVM file -> pack_source spill -> paged traversal: predictions
+    // identical to float; residency budget respected
+    let g = generate(&DatasetSpec::bosch_like(400), 51);
+    let path = tmp("paged.libsvm");
+    save_libsvm(&g.train, &path).unwrap();
+    let ds = load_libsvm(&path).unwrap();
+    let booster = train(params(ObjectiveKind::BinaryLogistic, 4, 1), &ds, None);
+    let float = booster.predict(&ds.x);
+    for (page_rows, budget) in [(64usize, 1usize), (64, 3), (ds.n_rows() + 1, 1)] {
+        let mut src = LibsvmSource::open(&path, 53).unwrap();
+        let (preds, packed) = booster.predict_paged(&mut src, page_rows, budget).unwrap();
+        assert_eq!(float, preds, "page_rows={page_rows} budget={budget}");
+        assert_eq!(packed.labels, ds.y);
+        assert_eq!(packed.clamped_values, 0, "training-range input never clamps");
+        let stats = packed.store.take_round_stats();
+        assert!(stats.pages_loaded > 0);
+        assert!(
+            stats.peak_resident_bytes <= budget * packed.store.max_page_bytes(),
+            "page_rows={page_rows} budget={budget}: {} > {budget} x {}",
+            stats.peak_resident_bytes,
+            packed.store.max_page_bytes()
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cut_boundary_and_missing_rows_route_identically() {
+    // rows whose values fall exactly ON cut values (the v < cut edge)
+    // and rows that are entirely/partially missing (default-direction
+    // traversal) — quantised vs float must agree everywhere
+    let n = 400usize;
+    let mut vals = Vec::with_capacity(n * 3);
+    let mut rng = 13u64;
+    for i in 0..n {
+        // feature 0: small integer grid -> many values sit exactly on cuts
+        vals.push((i % 8) as Float);
+        // feature 1: some NaNs
+        rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+        vals.push(if rng % 5 == 0 {
+            Float::NAN
+        } else {
+            ((rng >> 33) % 100) as Float / 10.0
+        });
+        // feature 2: constant (single-bin feature)
+        vals.push(1.0);
+    }
+    let x = DMatrix::dense(vals, n, 3);
+    let y: Vec<Float> = (0..n)
+        .map(|i| if (i % 8) >= 4 { 1.0 } else { 0.0 })
+        .collect();
+    let ds = Dataset::new(x, y);
+    let booster = train(params(ObjectiveKind::BinaryLogistic, 1, 1), &ds, None);
+    let (float_margins, float_leaves) = float_reference(&booster, &ds.x);
+
+    // quantised values of feature 0 land exactly on cut values: verify
+    // the fixture actually exercises the boundary
+    let cuts = booster.cuts.as_ref().unwrap();
+    let f0 = cuts.feature_cuts(0);
+    assert!(
+        (0..8).any(|v| f0.contains(&(v as Float))),
+        "fixture should put values on cut boundaries: cuts {f0:?}"
+    );
+
+    let mut pp = params(ObjectiveKind::BinaryLogistic, 1, 1).coordinator_params();
+    pp.max_resident_pages = 1;
+    pp.page_rows = 64;
+    let paged = MultiDeviceCoordinator::from_dmatrix(&ds.x, pp).unwrap();
+    let (m, _) = paged
+        .predict_margins(&booster.trees, &booster.base_score)
+        .unwrap();
+    assert_margins_eq(&float_margins, &m, "cut-boundary paged");
+    let (l, _) = paged.predict_leaf_indices(&booster.trees[0]).unwrap();
+    assert_eq!(float_leaves, l);
+
+    let mut src = DMatrixSource::from_dataset(&ds, 37);
+    let streamed = booster.predict_from_source(&mut src).unwrap();
+    assert_eq!(booster.predict(&ds.x), streamed);
+}
+
+#[test]
+fn in_training_eval_is_bit_identical_to_float_scoring() {
+    // the boosting loop's per-round validation metric now comes off the
+    // quantised path; recomputing the final valid metric through the
+    // float path must give the exact same number
+    let g = generate(&DatasetSpec::higgs_like(900), 53);
+    for devices in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let booster = train(
+                params(ObjectiveKind::BinaryLogistic, threads, devices),
+                &g.train,
+                Some(&g.valid),
+            );
+            let recorded = booster.eval_history.last().unwrap().valid.unwrap();
+            let float = booster.evaluate(&g.valid, "accuracy").unwrap();
+            assert_eq!(
+                recorded.to_bits(),
+                float.to_bits(),
+                "devices={devices} threads={threads}: {recorded} vs {float}"
+            );
+        }
+    }
+}
+
+#[test]
+fn leaf_indices_respect_threads_knob() {
+    // the Booster surface honours `threads` and is bit-identical at
+    // every budget (the predict/mod.rs unit test pins the free function)
+    let g = generate(&DatasetSpec::higgs_like(20_000), 57);
+    let reference = train(params(ObjectiveKind::BinaryLogistic, 1, 1), &g.train, None);
+    let serial = reference.predict_leaf_indices(&g.train.x);
+    for threads in [2usize, 8] {
+        let mut b = train(params(ObjectiveKind::BinaryLogistic, 1, 1), &g.train, None);
+        assert_eq!(b.trees, reference.trees, "same config -> same trees");
+        b.params.threads = threads;
+        assert_eq!(
+            b.predict_leaf_indices(&g.train.x),
+            serial,
+            "threads = {threads}"
+        );
+    }
+}

@@ -220,6 +220,89 @@ fn prop_split_matches_brute_force() {
     });
 }
 
+/// Bin-threshold translation round-trips: for random trees over random
+/// cut grids, translating every float threshold with `threshold_to_bin`
+/// and routing rows by `bin < translated` visits exactly the leaves the
+/// float traversal visits — for every row (incl. NaN/missing and values
+/// exactly on cut boundaries), and for thresholds below the first cut /
+/// above the last (sentinel) cut, which translate to "all present
+/// right" / "all present left".
+#[test]
+fn prop_threshold_translation_matches_float_traversal() {
+    use xgb_tpu::predict::quantised::{threshold_to_bin, BinTree, QuantisedBatch};
+    use xgb_tpu::tree::RegTree;
+    check(0xb17bd, 30, |g: &mut Gen| {
+        let n = g.int(20, 300);
+        let cols = g.int(1, 5);
+        // values on a coarse grid so many land exactly on cut values;
+        // ~15% missing exercises the default direction
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| {
+                if g.bool(0.15) {
+                    Float::NAN
+                } else {
+                    g.int(0, 12) as Float - 6.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let cuts = HistogramCuts::from_dmatrix(&x, g.int(2, 16), None);
+
+        // grow a random tree whose thresholds are drawn from the cut
+        // grid (the trained-tree invariant) plus the two edge classes
+        let mut tree = RegTree::new_root(0.0, 1.0);
+        let mut frontier = vec![(0usize, 0usize)];
+        while let Some((nid, depth)) = frontier.pop() {
+            if depth >= 4 || g.bool(0.3) {
+                continue;
+            }
+            let f = g.int(0, cols - 1);
+            let fc = cuts.feature_cuts(f);
+            let threshold = match g.int(0, 9) {
+                // below the first cut (and below every data value, so the
+                // ambiguity-free "all present right" case)
+                0 => -100.0,
+                // above the sentinel: "all present left"
+                1 => *fc.last().unwrap() + 100.0,
+                _ => fc[g.int(0, fc.len() - 1)],
+            };
+            let (l, r) = tree.apply_split(
+                nid,
+                f as u32,
+                threshold,
+                g.bool(0.5),
+                1.0,
+                g.f32(-1.0, 1.0),
+                1.0,
+                g.f32(-1.0, 1.0),
+                1.0,
+            );
+            frontier.push((l, depth + 1));
+            frontier.push((r, depth + 1));
+        }
+
+        // the translation itself round-trips split bins exactly
+        for f in 0..cols {
+            for b in cuts.ptrs[f]..cuts.ptrs[f + 1] {
+                assert_eq!(
+                    threshold_to_bin(&cuts, f, cuts.cut_of_bin(b)),
+                    b + 1,
+                    "feature {f} bin {b}"
+                );
+            }
+        }
+
+        // and full traversal agrees with the float path on every row
+        let bt = BinTree::from_tree(&tree, &cuts);
+        let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+        for r in 0..n {
+            let float_leaf = tree.leaf_for_row(&x, r);
+            let bin_leaf = bt.leaf_for(|f| qb.feature_bin(r, f));
+            assert_eq!(float_leaf, bin_leaf, "row {r}");
+        }
+    });
+}
+
 /// Quantised histogram totals equal direct gradient sums per feature.
 #[test]
 fn prop_histogram_mass_conservation() {

@@ -131,4 +131,69 @@ if [[ -z "$EVAL_FLOAT" || "$EVAL_FLOAT" != "$EVAL_STREAM" ]]; then
     exit 1
 fi
 
+# Serving smoke: pipe the same rows through `serve` over stdin (labels
+# stripped, so requests are LibSVM-style sparse tokens with --col-base 1)
+# and require the shutdown fingerprint line to byte-match `predict`'s
+# checksum over the same file. Then rewrite the model file mid-stream and
+# `!reload`: the ack must report the epoch flip, every request must still
+# get exactly one response, and the stats line must count the swap.
+echo "==> serve smoke (CLI)"
+REQS="$SMOKE_DIR/requests.txt"
+cut -d' ' -f2- "$SMOKE_DIR/higgs.libsvm" > "$REQS"
+SERVE_OUT="$SMOKE_DIR/serve.out"
+SERVE_ERR="$SMOKE_DIR/serve.err"
+./target/release/xgb-tpu serve --model "$MODEL" --col-base 1 --batch-max 32 \
+    < "$REQS" > "$SERVE_OUT" 2> "$SERVE_ERR"
+SUM_SERVE=$(grep '^predictions:' "$SERVE_ERR" || true)
+echo "float:  $SUM_FLOAT"
+echo "serve:  $SUM_SERVE"
+if [[ -z "$SUM_SERVE" || "$SUM_SERVE" != "$SUM_FLOAT" ]]; then
+    echo "FAIL: served fingerprint does not byte-match predict's checksum line"
+    exit 1
+fi
+if [[ "$(wc -l < "$SERVE_OUT")" -ne "$(wc -l < "$REQS")" ]]; then
+    echo "FAIL: serve did not answer every request with exactly one line"
+    exit 1
+fi
+
+echo "==> serve hot-swap smoke (CLI)"
+MODEL2="$SMOKE_DIR/model2.txt"
+TRAINLOG="$SMOKE_DIR/train_log.csv"
+./target/release/xgb-tpu train --libsvm "$SMOKE_DIR/higgs.libsvm" \
+    --objective binary:logistic --num-rounds 5 --max-bins 32 --n-devices 2 \
+    --valid-frac 0 --model-out "$MODEL2" --log-file "$TRAINLOG" >/dev/null 2>&1
+# --log-file telemetry rides along: header + one record per round
+if [[ "$(wc -l < "$TRAINLOG")" -ne 6 ]]; then
+    echo "FAIL: --log-file wrote $(wc -l < "$TRAINLOG") lines, expected 6 (header + 5 rounds)"
+    exit 1
+fi
+SWAP_MODEL="$SMOKE_DIR/swap_model.txt"
+cp "$MODEL" "$SWAP_MODEL"
+SWAP_OUT="$SMOKE_DIR/swap.out"
+SWAP_ERR="$SMOKE_DIR/swap.err"
+# the brace group writes 200 requests, rewrites the model file on disk,
+# then issues !reload — so the swap lands mid-stream, with the remaining
+# requests served by the new epoch
+{
+    head -n 200 "$REQS"
+    cp "$MODEL2" "$SWAP_MODEL"
+    echo '!reload'
+    tail -n +201 "$REQS"
+} | ./target/release/xgb-tpu serve --model "$SWAP_MODEL" --col-base 1 \
+    --batch-max 32 > "$SWAP_OUT" 2> "$SWAP_ERR"
+if [[ "$(sed -n '201p' "$SWAP_OUT")" != "!ok epoch=2 swaps=1" ]]; then
+    echo "FAIL: expected the reload ack '!ok epoch=2 swaps=1' at response 201, got:"
+    sed -n '201p' "$SWAP_OUT"
+    exit 1
+fi
+EXPECT_LINES=$(( $(wc -l < "$REQS") + 1 ))
+if [[ "$(wc -l < "$SWAP_OUT")" -ne "$EXPECT_LINES" ]]; then
+    echo "FAIL: hot-swap stream answered $(wc -l < "$SWAP_OUT") lines, expected $EXPECT_LINES"
+    exit 1
+fi
+if ! grep -q 'swaps=1' "$SWAP_ERR"; then
+    echo "FAIL: serve stats do not report the hot-swap"
+    exit 1
+fi
+
 echo "CI OK"

@@ -1,0 +1,153 @@
+//! Serving throughput/latency sweep (the tentpole's acceptance bench):
+//! push a fixed request stream through the full serve path — line parse
+//! → bounded queue → micro-batch coalescing → FlatForest traversal →
+//! ordered reply writer — for every (batch_max × threads) grid point,
+//! and report rows/sec with the latency histogram's p50/p99 and the
+//! observed batch-size distribution. Every grid point also re-checks
+//! the determinism contract: the stream checksum must equal
+//! `prediction_checksum` of `Booster::predict` on the same rows.
+//!
+//! Knobs: `XGB_BENCH_ROWS` (training rows, default 4000),
+//! `XGB_BENCH_REQUESTS` (request lines, default 20000),
+//! `XGB_BENCH_OUT` (artifact path, default `BENCH_serving.json`).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use xgb_tpu::bench::Table;
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::DMatrix;
+use xgb_tpu::gbm::{Learner, LearnerParams};
+use xgb_tpu::predict::prediction_checksum;
+use xgb_tpu::serve::{ModelRegistry, ServeOptions, Server};
+use xgb_tpu::Float;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rows = env_usize("XGB_BENCH_ROWS", 4000);
+    let n_requests = env_usize("XGB_BENCH_REQUESTS", 20_000);
+    eprintln!("serve_throughput: rows={rows} requests={n_requests}");
+
+    // one model, one request stream, reused across the whole grid
+    let g = generate(&DatasetSpec::higgs_like(rows), 42);
+    let params = LearnerParams {
+        objective: "binary:logistic".parse().expect("infallible"),
+        num_rounds: 10,
+        max_depth: 5,
+        max_bins: 64,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let booster = Learner::from_params(params)?.train(&g.train, None)?;
+    let model_path = std::env::temp_dir().join(format!(
+        "xgb_tpu_serve_bench_{}.txt",
+        std::process::id()
+    ));
+    xgb_tpu::gbm::save_model_file(&booster, &model_path)?;
+
+    // request lines cycle the valid matrix; the parity reference is
+    // `predict` over the identical row sequence
+    let src = &g.valid.x;
+    let cols = src.n_cols();
+    let mut input = String::new();
+    let mut vals: Vec<Float> = Vec::with_capacity(n_requests * cols);
+    for i in 0..n_requests {
+        let r = i % src.n_rows();
+        for c in 0..cols {
+            let v = src.get(r, c).unwrap_or(Float::NAN);
+            vals.push(v);
+            if c > 0 {
+                input.push(',');
+            }
+            let _ = write!(input, "{v}");
+        }
+        input.push('\n');
+    }
+    let expected = booster.predict(&DMatrix::dense(vals, n_requests, cols));
+    let want_checksum = prediction_checksum(&expected);
+
+    let mut t = Table::new(&[
+        "batch_max", "threads", "rows/s", "p50 us", "p99 us", "mean batch", "batches",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &batch_max in &[1usize, 16, 64, 256] {
+        for &threads in &[1usize, 4] {
+            let registry = Arc::new(ModelRegistry::open(&model_path)?);
+            let opts = ServeOptions {
+                batch_max,
+                threads,
+                ..Default::default()
+            };
+            let server = Server::start(registry, opts, None);
+            let mut sink: Vec<u8> = Vec::with_capacity(n_requests * 12);
+            let start = Instant::now();
+            let summary = server.serve_stream(input.as_bytes(), &mut sink)?;
+            let secs = start.elapsed().as_secs_f64();
+            let stats = server.shutdown();
+            assert_eq!(summary.served, n_requests as u64);
+            assert_eq!(
+                summary.checksum, want_checksum,
+                "b={batch_max} t={threads}: served bits must match predict"
+            );
+            let rows_per_sec = n_requests as f64 / secs.max(1e-9);
+            t.add_row(vec![
+                format!("{batch_max}"),
+                format!("{threads}"),
+                format!("{rows_per_sec:.0}"),
+                format!("{}", stats.p50_us),
+                format!("{}", stats.p99_us),
+                format!("{:.2}", stats.mean_batch()),
+                format!("{}", stats.batches),
+            ]);
+            eprintln!(
+                "  batch_max={batch_max} threads={threads}: {rows_per_sec:.0} rows/s, \
+                 p50<={}us p99<={}us, mean batch {:.2}",
+                stats.p50_us,
+                stats.p99_us,
+                stats.mean_batch()
+            );
+            json_rows.push(format!(
+                "    {{\"batch_max\": {batch_max}, \"threads\": {threads}, \
+                 \"rows_per_sec\": {rows_per_sec:.1}, \"secs\": {secs:.6}, \
+                 \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \"mean_us\": {:.2}, \
+                 \"max_us\": {}, \"mean_batch\": {:.3}, \"batches\": {}, \
+                 \"queue_depth_max\": {}, \"checksum_ok\": true}}",
+                stats.p50_us,
+                stats.p90_us,
+                stats.p99_us,
+                stats.mean_us,
+                stats.max_us,
+                stats.mean_batch(),
+                stats.batches,
+                stats.queue_depth_max,
+            ));
+        }
+    }
+    println!("\n=== serve throughput: {n_requests} requests, {cols}-feature rows ===\n");
+    print!("{}", t.render());
+    println!(
+        "\nevery grid point's stream checksum matched predict's \
+         ({want_checksum:#018x}) — batching and threading change latency only"
+    );
+
+    let out_path =
+        std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"serve_throughput\",\n");
+    json.push_str(&format!("  \"train_rows\": {rows},\n"));
+    json.push_str(&format!("  \"requests\": {n_requests},\n"));
+    json.push_str(&format!("  \"features\": {cols},\n"));
+    json.push_str(&format!("  \"checksum\": \"{want_checksum:#018x}\",\n"));
+    json.push_str("  \"grid\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    eprintln!("wrote {out_path}");
+    std::fs::remove_file(&model_path).ok();
+    Ok(())
+}

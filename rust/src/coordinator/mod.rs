@@ -74,6 +74,15 @@
 //! measured time lands in [`BuildStats::predict_wall_secs`], pages read
 //! during prediction in [`BuildStats::pages_loaded`].
 //!
+//! Online serving (`xgb-tpu serve`, [`crate::serve`]) is the latency
+//! end of this same chain: the trained trees are translated to bin
+//! space once more ([`crate::predict::quantised::BinForest`]) and
+//! flattened into the SoA [`crate::serve::FlatForest`], and requests
+//! quantise row-locally against the frozen cuts — so a served response
+//! is bit-identical to the shard/stream/paged prediction paths above,
+//! with the same request-order determinism contract (see the serving
+//! lifecycle section in the crate docs).
+//!
 //! # Tree construction
 //!
 //! Per expanded node the coordinator:

@@ -365,14 +365,29 @@ impl Booster {
         }
     }
 
+    /// The frozen cuts, or a fail-fast error for legacy models.
+    ///
+    /// Serving (`crate::serve`) and every quantised prediction/eval path
+    /// require the cuts section; a model loaded with `cuts: None` (a
+    /// hand-assembled ensemble, or a file saved before the format's
+    /// `cuts` section existed) must error here — clearly, and naming the
+    /// fix — rather than panic later or silently fall back to float
+    /// traversal with a different fingerprint.
+    pub fn require_cuts(&self) -> Result<&crate::quantile::HistogramCuts> {
+        self.cuts.as_ref().context(
+            "model carries no quantisation cuts (`cuts: None`: a hand-assembled \
+             ensemble, or a model file saved before the `cuts` section was added to \
+             the format) — serving and quantised prediction/eval need the frozen \
+             cuts. Fix: retrain through gbm::Learner (or `xgb-tpu train`) and \
+             re-save with save_model_file / --model-out, which persists the cuts; \
+             float-matrix `predict` remains available for legacy files",
+        )
+    }
+
     /// The frozen cuts, or an error explaining why compressed prediction
     /// is unavailable for this model.
     fn cuts_for_prediction(&self) -> Result<&crate::quantile::HistogramCuts> {
-        self.cuts.as_ref().context(
-            "model carries no quantisation cuts (hand-assembled ensemble or a model \
-             saved before cuts were persisted) — compressed prediction needs them; \
-             retrain through gbm::Learner or predict from a float matrix instead",
-        )
+        self.require_cuts()
     }
 
     /// **Streaming quantised prediction**: one pass over a

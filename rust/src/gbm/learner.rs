@@ -181,6 +181,91 @@ impl Callback for EvalLogger {
     }
 }
 
+/// Machine-readable round-level training telemetry (ROADMAP item 5,
+/// lite): one record per evaluation appended to a file — the CLI's
+/// `--log-file` flag. Format follows the extension: `.json` / `.jsonl`
+/// emit one JSON object per line, anything else CSV with a header.
+/// Fields per record: `round`, `metric`, `train`, `valid` (empty/`null`
+/// when training without a validation set), `elapsed_secs` (wall clock
+/// since training began). Combine with `eval_every 1` for a full
+/// per-round trace; the file is truncated at `on_train_begin`, so one
+/// logger instance reused across `train` calls keeps only the last run.
+pub struct RecordLogger {
+    path: std::path::PathBuf,
+    json: bool,
+    file: Option<std::fs::File>,
+}
+
+impl RecordLogger {
+    /// Log records to `path` (created/truncated when training starts,
+    /// so constructing the logger never touches the filesystem).
+    pub fn new(path: impl Into<std::path::PathBuf>) -> Self {
+        let path = path.into();
+        let json = matches!(
+            path.extension().and_then(|e| e.to_str()),
+            Some("json") | Some("jsonl")
+        );
+        RecordLogger {
+            path,
+            json,
+            file: None,
+        }
+    }
+}
+
+impl Callback for RecordLogger {
+    fn on_train_begin(&mut self) -> Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&self.path)
+            .with_context(|| format!("creating training log {}", self.path.display()))?;
+        if !self.json {
+            writeln!(f, "round,metric,train,valid,elapsed_secs")?;
+        }
+        self.file = Some(f);
+        Ok(())
+    }
+
+    fn on_eval(&mut self, _ctx: &RoundContext, record: &EvalRecord) -> Result<CallbackAction> {
+        use std::io::Write as _;
+        if let Some(f) = self.file.as_mut() {
+            if self.json {
+                writeln!(
+                    f,
+                    "{{\"round\":{},\"metric\":\"{}\",\"train\":{},\"valid\":{},\"elapsed_secs\":{:.3}}}",
+                    record.round,
+                    record.metric,
+                    record.train,
+                    record
+                        .valid
+                        .map(|v| v.to_string())
+                        .unwrap_or_else(|| "null".to_string()),
+                    record.elapsed_secs
+                )?;
+            } else {
+                writeln!(
+                    f,
+                    "{},{},{},{},{:.3}",
+                    record.round,
+                    record.metric,
+                    record.train,
+                    record.valid.map(|v| v.to_string()).unwrap_or_default(),
+                    record.elapsed_secs
+                )?;
+            }
+        }
+        Ok(CallbackAction::Continue)
+    }
+
+    fn on_train_end(&mut self, _history: &[EvalRecord]) -> Result<()> {
+        use std::io::Write as _;
+        if let Some(mut f) = self.file.take() {
+            f.flush()
+                .with_context(|| format!("flushing training log {}", self.path.display()))?;
+        }
+        Ok(())
+    }
+}
+
 /// Stop training once the wall clock exceeds a budget. The round in
 /// flight completes, so the produced ensemble is always usable.
 pub struct TimeBudget {
@@ -715,6 +800,45 @@ mod tests {
         assert_eq!(learner.params().objective, ObjectiveKind::BinaryLogistic);
         assert_eq!(learner.params().num_rounds, 5);
         assert_eq!(learner.params().eval_metric, Some(MetricKind::Auc));
+    }
+
+    #[test]
+    fn record_logger_writes_csv_and_jsonl_traces() {
+        let g = generate(&DatasetSpec::higgs_like(1200), 11);
+        let dir = std::env::temp_dir();
+        let csv_path = dir.join(format!("xgb_tpu_recordlog_{}.csv", std::process::id()));
+        let json_path = dir.join(format!("xgb_tpu_recordlog_{}.jsonl", std::process::id()));
+        let mut p = quick(ObjectiveKind::BinaryLogistic, 4);
+        p.eval_every = 1;
+        let mut learner = Learner::from_params(p.clone())
+            .unwrap()
+            .with_callback(Box::new(RecordLogger::new(&csv_path)))
+            .with_callback(Box::new(RecordLogger::new(&json_path)));
+        learner.train(&g.train, Some(&g.valid)).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "round,metric,train,valid,elapsed_secs");
+        assert_eq!(lines.len(), 1 + 4, "one record per round:\n{csv}");
+        let fields: Vec<&str> = lines[1].split(',').collect();
+        assert_eq!(fields.len(), 5);
+        assert_eq!(fields[0], "1");
+        assert!(fields[2].parse::<f64>().is_ok(), "train metric parses");
+        assert!(fields[3].parse::<f64>().is_ok(), "valid metric parses");
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        assert_eq!(json.lines().count(), 4, "no header in jsonl:\n{json}");
+        assert!(json.lines().next().unwrap().starts_with("{\"round\":1,"));
+        // without a validation set the valid field is empty/null
+        let mut learner2 = Learner::from_params(p)
+            .unwrap()
+            .with_callback(Box::new(RecordLogger::new(&csv_path)))
+            .with_callback(Box::new(RecordLogger::new(&json_path)));
+        learner2.train(&g.train, None).unwrap();
+        let csv2 = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(csv2.lines().nth(1).unwrap().contains(",,"), "{csv2}");
+        let json2 = std::fs::read_to_string(&json_path).unwrap();
+        assert!(json2.contains("\"valid\":null"), "{json2}");
+        std::fs::remove_file(&csv_path).ok();
+        std::fs::remove_file(&json_path).ok();
     }
 
     #[test]

@@ -19,8 +19,8 @@ pub use booster::{Booster, BoosterParams, EvalRecord};
 pub use cv::{cross_validate, CvResult};
 pub use importance::{feature_importance, ImportanceKind};
 pub use learner::{
-    Callback, CallbackAction, EarlyStopping, EvalLogger, Learner, LearnerBuilder, RoundContext,
-    TimeBudget,
+    Callback, CallbackAction, EarlyStopping, EvalLogger, Learner, LearnerBuilder, RecordLogger,
+    RoundContext, TimeBudget,
 };
 pub use metric::{metric_by_name, Metric};
 pub use objective::{objective_by_name, Objective};
@@ -29,4 +29,6 @@ pub use params::{
     ValidationErrors,
 };
 pub use registry::{MetricRegistry, ObjectiveRegistry};
-pub use serialize::{load_model, load_model_file, save_model, save_model_file};
+pub use serialize::{
+    load_model, load_model_file, load_servable_model_file, save_model, save_model_file,
+};

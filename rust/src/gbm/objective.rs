@@ -29,7 +29,12 @@ where
 }
 
 /// A training objective.
-pub trait Objective: Send {
+///
+/// `Sync` is part of the contract so a [`crate::gbm::Booster`] can be
+/// shared behind an `Arc` by the serving stack (`crate::serve`): every
+/// objective is a plain parameter struct scored immutably at predict
+/// time, so the bound costs implementations nothing.
+pub trait Objective: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Number of model outputs per instance (1, or `k` for multiclass).

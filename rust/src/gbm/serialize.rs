@@ -292,6 +292,20 @@ pub fn load_model_file(path: impl AsRef<Path>) -> Result<Booster> {
     load_model(f)
 }
 
+/// Load a model for serving: [`load_model_file`] plus the fail-fast
+/// cuts check ([`Booster::require_cuts`]). The registry (`crate::serve`)
+/// loads exclusively through this, so a legacy `cuts: None` file is
+/// rejected at load/hot-swap time with the actionable retrain/re-save
+/// message — never mid-request.
+pub fn load_servable_model_file(path: impl AsRef<Path>) -> Result<Booster> {
+    let path = path.as_ref();
+    let booster = load_model_file(path)?;
+    booster
+        .require_cuts()
+        .with_context(|| format!("model {} is not servable", path.display()))?;
+    Ok(booster)
+}
+
 fn validate_tree(tree: &RegTree) -> Result<()> {
     let n = tree.n_nodes();
     let mut seen = vec![false; n];
@@ -412,6 +426,32 @@ mod tests {
         let mut src = crate::data::source::DMatrixSource::from_dataset(&ds, 8);
         let err = b.predict_from_source(&mut src).unwrap_err();
         assert!(format!("{err:#}").contains("cuts"), "{err:#}");
+    }
+
+    #[test]
+    fn servable_load_fails_fast_on_legacy_model() {
+        // a valid pre-cuts model file: loads fine in general, but the
+        // serving load path must reject it up front with the actionable
+        // retrain/re-save message — not panic or fall back to float
+        let legacy = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                      eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                      tree 0 0 nodes = 1\n0 leaf 0.5 1\n";
+        let path = std::env::temp_dir().join("xgb_tpu_legacy_model_test.txt");
+        std::fs::write(&path, legacy).unwrap();
+        assert!(load_model_file(&path).is_ok(), "plain load still works");
+        let err = load_servable_model_file(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cuts"), "{msg}");
+        assert!(msg.contains("retrain"), "names the fix: {msg}");
+        assert!(msg.contains("re-save"), "names the fix: {msg}");
+        assert!(msg.contains("not servable"), "names the load site: {msg}");
+        std::fs::remove_file(&path).ok();
+        // a cuts-carrying model passes the same gate
+        let (b, _) = trained("binary:logistic", 1);
+        let ok_path = std::env::temp_dir().join("xgb_tpu_servable_model_test.txt");
+        save_model_file(&b, &ok_path).unwrap();
+        assert!(load_servable_model_file(&ok_path).is_ok());
+        std::fs::remove_file(&ok_path).ok();
     }
 
     #[test]

@@ -105,6 +105,32 @@
 //! predict/eval all run from the compressed representation, pinned by
 //! `rust/tests/compressed_predict.rs`.
 //!
+//! ### Serving lifecycle: flat forest, hot-swap registry, micro-batches
+//!
+//! Online inference (`xgb-tpu serve`, module [`serve`]) extends the
+//! same chain one more link. A [`serve::ModelRegistry`] loads the model
+//! file (fail-fast if it carries no `cuts` section — legacy files must
+//! be retrained and re-saved), translates the trees to bin space
+//! ([`predict::quantised::BinForest`]) and flattens them into a
+//! [`serve::FlatForest`]: one contiguous SoA arena (`feature` / `split`
+//! / `left` / `miss` / `leaf` parallel arrays), each tree BFS-relabelled
+//! so its hot top levels lead and siblings sit adjacent, traversed
+//! branchlessly over shifted bins (`left + (bin >= split)` per level,
+//! missing and stored-NaN folded into the same unsigned compare).
+//! Requests stream in line-by-line ([`serve::protocol`]), coalesce in a
+//! bounded micro-batch queue ([`serve::queue`]) and score on the
+//! [`exec`] pool; `!reload` (or an mtime poll) atomically swaps the
+//! `Arc`'d model — in-flight batches finish on the old epoch, new
+//! batches see the new one.
+//!
+//! **Determinism contract:** each stream's responses return in request
+//! order (checked per reply), and every value is bit-identical to the
+//! `predict` CLI — same FNV-1a fingerprint — at every `--threads`,
+//! `--batch-max` and coalescing pattern, because flat traversal routes
+//! identically to `BinForest` (and hence to float traversal) and
+//! batches accumulate margins with the same chunk bracketing
+//! (`rust/tests/serving.rs`, `rust/tests/prop_invariants.rs`).
+//!
 //! ## Quickstart
 //!
 //! Training goes through the typed [`gbm::Learner`] façade: pick an
@@ -171,6 +197,7 @@ pub mod hist;
 pub mod predict;
 pub mod quantile;
 pub mod runtime;
+pub mod serve;
 pub mod tree;
 pub mod util;
 

@@ -19,6 +19,13 @@
 //!                 the paged path).
 //! * `eval`      — evaluate a metric over a labelled file through the
 //!                 same three paths.
+//! * `serve`     — low-latency online scoring: load a saved model into
+//!                 the flat SoA forest, answer line-based requests
+//!                 (dense CSV or sparse `idx:val`) over stdin/stdout or
+//!                 TCP (`--listen`), micro-batching them on the exec
+//!                 pool. Responses are bit-identical to `predict` (same
+//!                 checksum line); `!reload` or `--reload-poll-ms`
+//!                 hot-swaps the model file without dropping requests.
 //! * `export`    — write a synthetic dataset to CSV/LibSVM (streaming
 //!                 smoke-test fodder).
 //! * `datasets`  — print the Table 1 dataset registry.
@@ -52,6 +59,7 @@ fn main() {
         "train" => run_train(&args),
         "predict" => run_predict(&args),
         "eval" => run_eval(&args),
+        "serve" => run_serve(&args),
         "export" => run_export(&args),
         "datasets" => run_datasets(),
         "info" => run_info(&args),
@@ -74,7 +82,7 @@ fn main() {
 fn print_help() {
     println!(
         "xgb-tpu — multi-device gradient boosting (XGBoost GPU paper reproduction)\n\n\
-         USAGE: xgb-tpu <train|predict|eval|export|datasets|info> [--flag value ...]\n\n\
+         USAGE: xgb-tpu <train|predict|eval|serve|export|datasets|info> [--flag value ...]\n\n\
          train flags:\n\
            --dataset <name>       synthetic dataset (see `xgb-tpu datasets`)\n\
            --rows <n>             synthetic row count (default 20000)\n\
@@ -114,6 +122,9 @@ fn print_help() {
            --colsample-bytree <f> feature sampling rate per tree\n\
            --monotone-constraints \"1,0,-1\"  per-feature monotonicity\n\
            --model-out <path>     save the trained model (text format)\n\
+           --log-file <path>      per-round training telemetry: round, metric,\n\
+                                  train/valid value, wall-secs — CSV, or JSONL\n\
+                                  when the path ends .json/.jsonl\n\
            --importance [gain|cover|weight]  print feature importance\n\
            --seed <n>\n\n\
          predict flags:\n\
@@ -141,6 +152,23 @@ fn print_help() {
            --metric <name>        metric (default: the objective's default)\n\
            --stream / --max-resident-pages / --page-rows / --batch-rows /\n\
            --threads              same compressed paths as predict\n\n\
+         serve flags:\n\
+           --model <path>         model saved by train --model-out (must carry\n\
+                                  the cuts section; legacy files are rejected\n\
+                                  with a retrain/re-save error)\n\
+           --listen <addr:port>   serve TCP connections instead of stdin/stdout\n\
+           --batch-max <n>        rows coalesced per scored micro-batch (default 64)\n\
+           --batch-wait-us <n>    max wait for an open batch to fill (default 200)\n\
+           --queue-cap <n>        bounded queue depth = backpressure (default 1024)\n\
+           --threads <n>          scorer pool width (0 = all cores)\n\
+           --reload-poll-ms <n>   poll the model file's mtime and hot-swap on\n\
+                                  change (0 = off; `!reload` always works)\n\
+           --col-base <n>         subtracted from sparse request indices\n\
+                                  (1 for LibSVM-style 1-based requests)\n\
+           request lines: dense `0.5,,3.2` (empty/na/nan/? = missing) or\n\
+           sparse `3:1.5 17:0.25`; verbs: !reload !stats !quit !shutdown.\n\
+           One response line per request, in request order, bit-identical\n\
+           to predict (same `predictions:` checksum line on shutdown)\n\n\
          export flags:\n\
            --dataset <name>       synthetic dataset to write\n\
            --rows <n>             row count (default 20000)\n\
@@ -329,6 +357,60 @@ fn run_eval(args: &ArgParser) -> Result<()> {
     Ok(())
 }
 
+/// `serve` — low-latency online scoring (see `xgb_tpu::serve`). Default
+/// transport is stdin/stdout (one request line in, one response line
+/// out); `--listen addr:port` accepts TCP connections instead, one
+/// stream each, all feeding the shared micro-batch queue.
+fn run_serve(args: &ArgParser) -> Result<()> {
+    use std::time::Duration;
+    use xgb_tpu::serve::{ModelRegistry, ServeOptions, Server};
+
+    let model_path = args.get("model").context("--model required")?;
+    let opts = ServeOptions {
+        batch_max: args.get_parse("batch-max", 64usize),
+        batch_wait: Duration::from_micros(args.get_parse("batch-wait-us", 200u64)),
+        queue_cap: args.get_parse("queue-cap", 1024usize),
+        threads: args.get_parse("threads", 0usize),
+        col_base: args.get_parse("col-base", 0u32),
+    };
+    let poll_ms: u64 = args.get_parse("reload-poll-ms", 0u64);
+    let reload_poll = (poll_ms > 0).then(|| Duration::from_millis(poll_ms));
+    // fail-fast here: a legacy cuts-less model is rejected before any
+    // request is accepted, with the retrain/re-save fix in the message
+    let registry = std::sync::Arc::new(ModelRegistry::open(model_path)?);
+    {
+        let m = registry.current();
+        eprintln!(
+            "serving {model_path} (epoch {}): {} features, {} trees, {} nodes, \
+             {:.1} KB flat forest",
+            m.epoch,
+            m.n_features(),
+            m.flat().n_trees(),
+            m.flat().n_nodes(),
+            m.flat().bytes() as f64 / 1e3,
+        );
+    }
+    let server = Server::start(registry, opts, reload_poll);
+
+    if let Some(addr) = args.get("listen") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding serve listener on {addr}"))?;
+        eprintln!("listening on {addr} (a stream's `!shutdown` stops the server)");
+        server.serve_tcp(listener)?;
+        let stats = server.shutdown();
+        eprintln!("{}", stats.render());
+    } else {
+        let stdin = std::io::stdin();
+        let summary = server.serve_stream(stdin.lock(), std::io::stdout())?;
+        let stats = server.shutdown();
+        eprintln!("{}", stats.render());
+        // byte-identical to `predict`'s checksum line over the same
+        // rows — ci.sh compares the two
+        eprintln!("{}", summary.prediction_line());
+    }
+    Ok(())
+}
+
 fn learner_params_from_args(args: &ArgParser) -> Result<LearnerParams> {
     // config file first, CLI overrides
     let mut cfg = Config::new();
@@ -423,6 +505,9 @@ fn run_train(args: &ArgParser) -> Result<()> {
     // full cross-field validation before any work starts; every problem
     // in the flag/config set is reported at once
     let mut learner = Learner::from_params(params.clone())?;
+    if let Some(path) = args.get("log-file") {
+        learner.add_callback(Box::new(xgb_tpu::gbm::RecordLogger::new(path)));
+    }
     let backend = args.get_str("backend", "native");
     let booster = match backend.as_str() {
         "native" => learner.train(&train, valid.as_ref())?,
@@ -479,6 +564,9 @@ fn run_train_streaming(args: &ArgParser) -> Result<()> {
         xgb_tpu::exec::ExecContext::new(params.threads).threads(),
     );
     let mut learner = Learner::from_params(params.clone())?;
+    if let Some(path) = args.get("log-file") {
+        learner.add_callback(Box::new(xgb_tpu::gbm::RecordLogger::new(path)));
+    }
     let backend = args.get_str("backend", "native");
     let booster = match backend.as_str() {
         "native" => learner.train_from_source(source.as_mut(), None)?,

@@ -191,6 +191,15 @@ impl BinForest {
                 .collect(),
         }
     }
+
+    /// Flatten into the serving-side SoA arena
+    /// ([`crate::serve::FlatForest`]): same routing bit for bit, laid
+    /// out for traversal latency instead of translation convenience —
+    /// the serving stack's entry point into this module's equivalence
+    /// chain.
+    pub fn flatten(&self) -> Result<crate::serve::FlatForest> {
+        crate::serve::FlatForest::from_bin_forest(self)
+    }
 }
 
 /// Chunk-parallel margin accumulation over any per-row bin lookup — the

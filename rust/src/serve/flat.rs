@@ -1,0 +1,568 @@
+//! Cache-friendly flattened forest — the serving-side twin of
+//! [`crate::predict::quantised::BinForest`].
+//!
+//! `BinForest` keeps each tree as a `Vec<BinNode>` in the source
+//! `RegTree`'s node order (allocation order, i.e. roughly DFS), with
+//! 24-byte nodes and a two-way branch per level. Serving traffic scores
+//! a few rows at a time over and over, so the layout — not the
+//! arithmetic — dominates latency. *Booster* (arXiv 2011.02022) and the
+//! cache-aware design axis of XGBoost itself (arXiv 1603.02754) both
+//! point the same way: contiguous per-field arrays, hot levels first.
+//! [`FlatForest`] applies that:
+//!
+//! * **SoA arrays** — `feature`, `split`, `left`, `miss` are parallel
+//!   `u32` arrays and `leaf` a parallel [`Float`] array, one slot per
+//!   node, all trees concatenated into one arena. A traversal step
+//!   touches 16 bytes across four cache-resident streams instead of a
+//!   24-byte record.
+//! * **Hot-top-levels-first** — each tree is relabelled breadth-first,
+//!   so the top levels (hit by *every* row) are packed at the front of
+//!   the tree's range and stay in L1 across a block of rows.
+//! * **Children adjacent** — BFS enqueues left and right together, so
+//!   `right == left + 1` always, and the child step is the branchless
+//!   `nid = left + (bin >= split)`.
+//! * **Leaf sentinel** — `left == 0` marks a leaf. Slot 0 is the first
+//!   tree's root, which is never anybody's child, so 0 is free.
+//!
+//! # Shifted-bin encoding (the missing-value trick)
+//!
+//! `BinTree` routes `Option<u32>`: present bin `b` goes left iff
+//! `b < split`, missing follows `default_left`. A branchless step needs
+//! both cases in one unsigned compare. The flat side shifts every bin
+//! by one:
+//!
+//! * present bin `b`  →  `b + 1` (so `0` never means a value),
+//! * absent           →  [`ABSENT`]` == 0`,
+//! * stored NaN       →  [`NAN_BIN`]` == u32::MAX` (sparse streams can
+//!   carry explicit `nan` values: float traversal evaluates `NaN < t` =
+//!   false everywhere — "present, always right" — which `u32::MAX`
+//!   represents exactly, as in `QuantisedBatch`),
+//!
+//! and interior nodes store `split + 1` plus a `miss` substitute bin —
+//! `0` when `default_left`, `u32::MAX` when `default_right`. One step is
+//!
+//! ```text
+//! x = bins[feature]; if x == ABSENT { x = miss }; nid = left + (x >= split)
+//! ```
+//!
+//! Exactness, case by case against `BinTree::leaf_for`:
+//! * present `b`: `b + 1 < split + 1  ⇔  b < split` — identical;
+//! * missing, `default_left`: substitute `0 < split + 1` is always true
+//!   (`split + 1 ≥ 1`), so the row goes left — **including** the
+//!   pathological `split == 0` node (a hand-edited threshold below the
+//!   feature's first cut), which an unshifted substitute cannot express;
+//! * missing, `default_right`: substitute `u32::MAX < split + 1` is
+//!   false because construction rejects `split == u32::MAX`;
+//! * stored NaN: same compare as the `default_right` substitute — always
+//!   right, matching `Some(u32::MAX) < split` = false on the `BinTree`.
+//!
+//! Routing is therefore bit-identical to `BinForest`, which PR 5 pinned
+//! bit-identical to float traversal; margins accumulate in the same
+//! row-major tree order and chunk bracketing as
+//! `predict_margins_batch`, so served predictions carry the same FNV-1a
+//! fingerprint as the `predict` CLI.
+
+use anyhow::{ensure, Result};
+
+use crate::exec::{ExecContext, ROW_CHUNK};
+use crate::predict::quantised::{BinForest, QuantisedBatch};
+use crate::quantile::HistogramCuts;
+use crate::Float;
+
+/// Shifted bin of an absent value (see module docs).
+pub const ABSENT: u32 = 0;
+/// Shifted bin of a stored (explicit) NaN: present, always right.
+pub const NAN_BIN: u32 = u32::MAX;
+
+/// Rows traversed per tree before moving to the next tree — keeps a
+/// tree's hot top levels in L1 across the block while preserving the
+/// per-row tree-order accumulation bracketing bit for bit.
+pub const BLOCK_ROWS: usize = 64;
+
+/// An ensemble flattened to parallel SoA arrays (module docs). Grouped
+/// by output exactly like `Booster::trees` / `BinForest::groups`.
+#[derive(Debug, Clone)]
+pub struct FlatForest {
+    /// Split feature per node (0 at leaves).
+    feature: Vec<u32>,
+    /// Shifted exclusive-upper bin per interior node
+    /// (`BinNode::split + 1`); 0 at leaves.
+    split: Vec<u32>,
+    /// Absolute arena index of the left child; `right == left + 1`;
+    /// `0` marks a leaf (slot 0 is a root, never a child).
+    left: Vec<u32>,
+    /// Substitute shifted bin for absent lookups: [`ABSENT`] when the
+    /// node defaults left, [`NAN_BIN`] when it defaults right.
+    miss: Vec<u32>,
+    /// Leaf payload, parallel to the node arrays (0.0 at interiors).
+    leaf: Vec<Float>,
+    /// Arena index of each tree's root, all groups concatenated.
+    roots: Vec<u32>,
+    /// `roots[group_ptr[g]..group_ptr[g + 1]]` are output group `g`.
+    group_ptr: Vec<usize>,
+}
+
+impl FlatForest {
+    /// Flatten a bin-translated forest. Fails only on a forest whose
+    /// split bins reach `u32::MAX` (impossible for translated trees —
+    /// splits are bounded by the cut count — but the encoding's one
+    /// reserved value is checked, not assumed).
+    pub fn from_bin_forest(forest: &BinForest) -> Result<Self> {
+        let mut f = FlatForest {
+            feature: Vec::new(),
+            split: Vec::new(),
+            left: Vec::new(),
+            miss: Vec::new(),
+            leaf: Vec::new(),
+            roots: Vec::new(),
+            group_ptr: vec![0],
+        };
+        for group in &forest.groups {
+            for tree in group {
+                let root = f.push_tree(tree)?;
+                f.roots.push(root);
+            }
+            f.group_ptr.push(f.roots.len());
+        }
+        Ok(f)
+    }
+
+    /// Append one tree in BFS order; returns its root's arena index.
+    fn push_tree(&mut self, tree: &crate::predict::quantised::BinTree) -> Result<u32> {
+        let base = self.feature.len();
+        ensure!(
+            base + tree.nodes.len() <= u32::MAX as usize - 1,
+            "flat forest arena exceeds u32 indexing"
+        );
+        // BFS relabel: visit order IS the slot order, and a node's two
+        // children are enqueued together, so they land adjacent.
+        let mut order: Vec<usize> = Vec::with_capacity(tree.nodes.len());
+        order.push(0);
+        let mut head = 0;
+        while head < order.len() {
+            let n = &tree.nodes[order[head]];
+            head += 1;
+            if !n.is_leaf() {
+                order.push(n.left as usize);
+                order.push(n.right as usize);
+            }
+        }
+        let mut slot_of = vec![0u32; tree.nodes.len()];
+        for (i, &src) in order.iter().enumerate() {
+            slot_of[src] = (base + i) as u32;
+        }
+        for &src in &order {
+            let n = &tree.nodes[src];
+            if n.is_leaf() {
+                self.feature.push(0);
+                self.split.push(0);
+                self.left.push(0);
+                self.miss.push(0);
+                self.leaf.push(n.leaf_value);
+            } else {
+                ensure!(
+                    n.split < u32::MAX,
+                    "split bin {} leaves no room for the shifted encoding",
+                    n.split
+                );
+                self.feature.push(n.feature);
+                self.split.push(n.split + 1);
+                self.left.push(slot_of[n.left as usize]);
+                self.miss.push(if n.default_left { ABSENT } else { NAN_BIN });
+                self.leaf.push(0.0);
+            }
+        }
+        Ok(base as u32)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.group_ptr.len() - 1
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// Resident bytes of the arena (what the registry reports on load).
+    pub fn bytes(&self) -> usize {
+        self.feature.len() * 4 * 4
+            + self.leaf.len() * std::mem::size_of::<Float>()
+            + self.roots.len() * 4
+            + self.group_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Root arena indices of output group `g`.
+    #[inline]
+    pub fn group_roots(&self, g: usize) -> &[u32] {
+        &self.roots[self.group_ptr[g]..self.group_ptr[g + 1]]
+    }
+
+    /// Route one row (shifted bins via `bin_of(feature)`) from `root` to
+    /// its leaf value. Branchless child select; one unsigned compare per
+    /// level (module docs).
+    #[inline]
+    pub fn leaf_value(&self, root: u32, mut bin_of: impl FnMut(u32) -> u32) -> Float {
+        let mut nid = root as usize;
+        loop {
+            let l = self.left[nid];
+            if l == 0 {
+                return self.leaf[nid];
+            }
+            let mut x = bin_of(self.feature[nid]);
+            if x == ABSENT {
+                x = self.miss[nid];
+            }
+            nid = (l + (x >= self.split[nid]) as u32) as usize;
+        }
+    }
+
+    /// Margins for a batch — the flat twin of
+    /// `predict_margins_batch`, bit-identical to it (and hence to float
+    /// traversal) at every thread count: rows are chunked per output
+    /// group exactly like `margins_with_lookup`, and inside a chunk each
+    /// row still accumulates trees in forest order; the [`BLOCK_ROWS`]
+    /// interchange only reorders *which row* traverses next, never a
+    /// row's own `+=` bracketing.
+    pub fn predict_margins(
+        &self,
+        base_score: &[Float],
+        batch: &FlatBatch,
+        exec: &ExecContext,
+    ) -> Vec<Vec<Float>> {
+        let n = batch.n_rows();
+        let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+        for g in 0..self.n_groups() {
+            let roots = self.group_roots(g);
+            exec.for_each_slice_mut(&mut out[g], ROW_CHUNK, |_, start, chunk| {
+                let mut lo = 0;
+                while lo < chunk.len() {
+                    let hi = (lo + BLOCK_ROWS).min(chunk.len());
+                    for &root in roots {
+                        for (i, m) in chunk[lo..hi].iter_mut().enumerate() {
+                            let row = start + lo + i;
+                            *m += self.leaf_value(root, |f| batch.bin(row, f as usize));
+                        }
+                    }
+                    lo = hi;
+                }
+            });
+        }
+        out
+    }
+}
+
+/// A dense row-major batch of **shifted** bins (module docs): `0` =
+/// absent, present bin `b` stored as `b + 1`, stored NaN as
+/// [`NAN_BIN`]. The serving queue fills one per micro-batch.
+#[derive(Debug, Clone)]
+pub struct FlatBatch {
+    bins: Vec<u32>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl FlatBatch {
+    /// An all-absent batch to be filled with [`set_present`](Self::set_present).
+    pub fn zeroed(n_rows: usize, n_cols: usize) -> Self {
+        FlatBatch {
+            bins: vec![ABSENT; n_rows * n_cols],
+            n_rows,
+            n_cols,
+        }
+    }
+
+    /// Shift-encode a [`QuantisedBatch`] (`n_cols` = the model's feature
+    /// count; sparse batches don't carry it). Dense `u32::MAX` slots are
+    /// *absent* there and become [`ABSENT`]; sparse `u32::MAX` entries
+    /// are *stored NaN* and stay [`NAN_BIN`].
+    pub fn from_quantised(qb: &QuantisedBatch, n_cols: usize) -> Self {
+        let mut out = FlatBatch::zeroed(qb.n_rows(), n_cols);
+        match qb {
+            QuantisedBatch::Dense {
+                bins,
+                n_rows,
+                n_cols: qc,
+            } => {
+                for row in 0..*n_rows {
+                    for f in 0..*qc {
+                        let b = bins[row * qc + f];
+                        if b != u32::MAX {
+                            out.bins[row * out.n_cols + f] = b + 1;
+                        }
+                    }
+                }
+            }
+            QuantisedBatch::Sparse {
+                indptr, cols, bins, ..
+            } => {
+                for row in 0..qb.n_rows() {
+                    for k in indptr[row]..indptr[row + 1] {
+                        let f = cols[k] as usize;
+                        let b = bins[k];
+                        out.bins[row * out.n_cols + f] =
+                            if b == u32::MAX { NAN_BIN } else { b + 1 };
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Quantise and store one present float value (the protocol layer's
+    /// per-token path — same `bin_index_unclamped` mapping as
+    /// `QuantisedBatch::from_dmatrix`, so fingerprints match `predict`).
+    #[inline]
+    pub fn set_value(&mut self, row: usize, f: usize, v: Float, cuts: &HistogramCuts) {
+        self.bins[row * self.n_cols + f] = if v.is_nan() {
+            NAN_BIN
+        } else {
+            cuts.bin_index_unclamped(f, v) + 1
+        };
+    }
+
+    /// Mark a slot absent (dense-stream NaN: missing, not stored NaN).
+    #[inline]
+    pub fn set_absent(&mut self, row: usize, f: usize) {
+        self.bins[row * self.n_cols + f] = ABSENT;
+    }
+
+    #[inline]
+    pub fn bin(&self, row: usize, f: usize) -> u32 {
+        self.bins[row * self.n_cols + f]
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DMatrix;
+    use crate::predict::quantised::{BinNode, BinTree};
+    use crate::util::prop::{check, Gen};
+
+    /// Hand-build a bin-space stump: route on feature 0, split bin `s`.
+    fn stump(split: u32, default_left: bool) -> BinTree {
+        BinTree {
+            nodes: vec![
+                BinNode {
+                    feature: 0,
+                    split,
+                    left: 1,
+                    right: 2,
+                    default_left,
+                    leaf_value: 0.0,
+                },
+                leaf(-1.0),
+                leaf(1.0),
+            ],
+        }
+    }
+
+    fn leaf(v: Float) -> BinNode {
+        BinNode {
+            feature: 0,
+            split: 0,
+            left: crate::tree::regtree::NO_CHILD,
+            right: crate::tree::regtree::NO_CHILD,
+            default_left: false,
+            leaf_value: v,
+        }
+    }
+
+    fn flat_of(trees: Vec<BinTree>) -> FlatForest {
+        FlatForest::from_bin_forest(&BinForest {
+            groups: vec![trees],
+        })
+        .unwrap()
+    }
+
+    /// One row with a single shifted bin for feature 0.
+    fn route(f: &FlatForest, shifted: u32) -> Float {
+        f.leaf_value(0, |_| shifted)
+    }
+
+    #[test]
+    fn shifted_encoding_matches_bintree_per_case() {
+        for split in [0u32, 1, 5] {
+            for default_left in [true, false] {
+                let bt = stump(split, default_left);
+                let ff = flat_of(vec![bt.clone()]);
+                // every present bin around the split, plus missing and NaN
+                for b in 0..8u32 {
+                    let want = bt.leaf_value_for(|_| Some(b));
+                    assert_eq!(route(&ff, b + 1), want, "split={split} b={b}");
+                }
+                let want_missing = bt.leaf_value_for(|_| None);
+                assert_eq!(
+                    route(&ff, ABSENT),
+                    want_missing,
+                    "missing split={split} dl={default_left}"
+                );
+                let want_nan = bt.leaf_value_for(|_| Some(u32::MAX));
+                assert_eq!(route(&ff, NAN_BIN), want_nan, "stored-NaN split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_zero_default_left_routes_missing_left() {
+        // the case an unshifted substitute bin cannot represent
+        let ff = flat_of(vec![stump(0, true)]);
+        assert_eq!(route(&ff, ABSENT), -1.0); // missing → left
+        assert_eq!(route(&ff, 0 + 1), 1.0); // present bin 0 → right (0 < 0 false)
+    }
+
+    #[test]
+    fn bfs_layout_children_adjacent_leaf_sentinel() {
+        // depth-2 left-heavy tree: root(0) -> [a(1), leaf(2)], a -> [leaf(3), leaf(4)]
+        let t = BinTree {
+            nodes: vec![
+                BinNode {
+                    feature: 0,
+                    split: 2,
+                    left: 1,
+                    right: 2,
+                    default_left: true,
+                    leaf_value: 0.0,
+                },
+                BinNode {
+                    feature: 1,
+                    split: 3,
+                    left: 3,
+                    right: 4,
+                    default_left: false,
+                    leaf_value: 0.0,
+                },
+                leaf(10.0),
+                leaf(20.0),
+                leaf(30.0),
+            ],
+        };
+        let ff = flat_of(vec![t]);
+        assert_eq!(ff.n_nodes(), 5);
+        // BFS: root at 0, its children at 1,2 (adjacent), grandchildren 3,4
+        assert_eq!(ff.left[0], 1);
+        assert_eq!(ff.left[1], 3);
+        for leaf_slot in [2usize, 3, 4] {
+            assert_eq!(ff.left[leaf_slot], 0, "leaf sentinel");
+        }
+        assert_eq!(ff.leaf[2], 10.0);
+        assert_eq!(ff.leaf[3], 20.0);
+        assert_eq!(ff.leaf[4], 30.0);
+    }
+
+    #[test]
+    fn from_quantised_dense_and_sparse_shift_correctly() {
+        let x = DMatrix::dense(vec![0.5, Float::NAN, 3.5, 1.0], 2, 2);
+        let cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+        let fb = FlatBatch::from_quantised(&qb, 2);
+        // dense NaN slot is absent
+        assert_eq!(fb.bin(0, 1), ABSENT);
+        for row in 0..2 {
+            for f in 0..2 {
+                match qb.feature_bin(row, f) {
+                    Some(b) => assert_eq!(fb.bin(row, f), b + 1),
+                    None => assert_eq!(fb.bin(row, f), ABSENT),
+                }
+            }
+        }
+        // sparse with a stored NaN keeps the NAN_BIN sentinel
+        let xs = DMatrix::csr(vec![0, 1, 2], vec![0, 0], vec![Float::NAN, 2.0], 2, 2);
+        let qs = QuantisedBatch::from_dmatrix(&xs, &cuts, 0).unwrap();
+        let fs = FlatBatch::from_quantised(&qs, 2);
+        assert_eq!(fs.bin(0, 0), NAN_BIN);
+        assert_eq!(fs.bin(0, 1), ABSENT);
+    }
+
+    /// Randomised parity: flat traversal == BinTree == float traversal,
+    /// with missing values, stored bins on cut boundaries, multi-tree
+    /// accumulation and both thread counts.
+    #[test]
+    fn random_forest_flat_matches_bin_and_margins_match() {
+        check(0xf1a7, 25, |g: &mut Gen| {
+            let n = g.int(10, 200);
+            let cols = g.int(1, 4);
+            let vals: Vec<Float> = (0..n * cols)
+                .map(|_| {
+                    if g.bool(0.15) {
+                        Float::NAN
+                    } else {
+                        g.int(0, 10) as Float - 5.0
+                    }
+                })
+                .collect();
+            let x = DMatrix::dense(vals, n, cols);
+            let cuts = HistogramCuts::from_dmatrix(&x, g.int(2, 12), None);
+            let mut trees = Vec::new();
+            for _ in 0..g.int(1, 4) {
+                let mut t = crate::tree::RegTree::new_root(0.0, 1.0);
+                let mut frontier = vec![(0usize, 0usize)];
+                while let Some((nid, depth)) = frontier.pop() {
+                    if depth >= 3 || g.bool(0.35) {
+                        continue;
+                    }
+                    let f = g.int(0, cols - 1);
+                    let fc = cuts.feature_cuts(f);
+                    let threshold = fc[g.int(0, fc.len() - 1)];
+                    let (l, r) = t.apply_split(
+                        nid,
+                        f as u32,
+                        threshold,
+                        g.bool(0.5),
+                        1.0,
+                        g.f32(-1.0, 1.0),
+                        1.0,
+                        g.f32(-1.0, 1.0),
+                        1.0,
+                    );
+                    frontier.push((l, depth + 1));
+                    frontier.push((r, depth + 1));
+                }
+                trees.push(t);
+            }
+            let forest = BinForest::from_trees(&[trees.clone()], &cuts);
+            let flat = FlatForest::from_bin_forest(&forest).unwrap();
+            let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+            let fb = FlatBatch::from_quantised(&qb, cols);
+            // per-row leaf parity against both references
+            for row in 0..n {
+                for (ti, bt) in forest.groups[0].iter().enumerate() {
+                    let root = flat.group_roots(0)[ti];
+                    let flat_v = flat.leaf_value(root, |f| fb.bin(row, f as usize));
+                    let bin_v = bt.leaf_value_for(|f| qb.feature_bin(row, f));
+                    let float_v = {
+                        let leaf = trees[ti].leaf_for_row(&x, row);
+                        trees[ti].nodes[leaf].leaf_value
+                    };
+                    assert_eq!(flat_v.to_bits(), bin_v.to_bits(), "row {row} tree {ti}");
+                    assert_eq!(flat_v.to_bits(), float_v.to_bits(), "row {row} tree {ti}");
+                }
+            }
+            // block-accumulated margins parity at 1 and 4 threads
+            let base = [g.f32(-1.0, 1.0)];
+            let want = crate::predict::predict_margins(&[trees], &base, &x);
+            for t in [1usize, 4] {
+                let got = flat.predict_margins(&base, &fb, &ExecContext::new(t));
+                for row in 0..n {
+                    assert_eq!(
+                        got[0][row].to_bits(),
+                        want[0][row].to_bits(),
+                        "threads {t} row {row}"
+                    );
+                }
+            }
+        });
+    }
+}

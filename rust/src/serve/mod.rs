@@ -1,0 +1,62 @@
+//! Low-latency serving stack (`xgb-tpu serve`): flat SoA forest,
+//! hot-swap model registry, micro-batched scoring.
+//!
+//! Training optimises throughput over a fixed dataset; serving
+//! optimises latency over an endless trickle of single rows — the
+//! "heavy traffic from millions of users" half of the north star.
+//! This module is that second half, built entirely on the frozen-cuts
+//! prediction substrate PR 5 proved exact:
+//!
+//! ```text
+//! model file ──load──▶ Booster ──translate──▶ BinForest ──flatten──▶ FlatForest
+//!      ▲                 (float trees)        (bin thresholds)       (SoA arena)
+//!      │ !reload / mtime poll                                            │
+//! ModelRegistry ◀─────────── Arc hot-swap ────────────────────────────────┘
+//!      │ current()  (one clone per micro-batch)
+//! requests ─parse─▶ bounded queue ─coalesce─▶ FlatBatch ─score─▶ replies
+//!   (protocol.rs)     (queue.rs)              (flat.rs)        (in order)
+//! ```
+//!
+//! * [`flat`] — [`FlatForest`](flat::FlatForest): the ensemble as
+//!   parallel SoA arrays, BFS-relabelled so hot top levels lead and
+//!   children sit adjacent, traversed branchlessly over shifted bins.
+//!   Bit-identical to `BinForest` and float traversal (proof in the
+//!   module docs), so serving inherits PR 5's exactness.
+//! * [`registry`] — [`ModelRegistry`](registry::ModelRegistry):
+//!   `RwLock<Arc<ServedModel>>` hot-swap; in-flight micro-batches keep
+//!   the old epoch, new batches see the new one; `cuts: None` files are
+//!   rejected at (re)load with the retrain/re-save error.
+//! * [`queue`] — bounded-channel micro-batching with a single scorer
+//!   thread: backpressure by blocking, deterministic per-stream reply
+//!   order, parallelism only inside a batch.
+//! * [`protocol`] — the line grammar (dense CSV / sparse `idx:val` /
+//!   `!`-verbs), [`Server`](protocol::Server), and the incremental
+//!   FNV-1a [`Fingerprint`](protocol::Fingerprint) whose shutdown line
+//!   byte-matches the `predict` CLI's checksum.
+//! * [`stats`] — [`ServeStats`](stats::ServeStats): p50/p90/p99 latency
+//!   from a ×2 histogram, batch-size distribution, queue depth, swap
+//!   count; printed on shutdown, returned to the bench.
+//!
+//! # Determinism contract
+//!
+//! For a given model file and request stream, every response value is
+//! bit-identical to `predict` on the same rows regardless of
+//! `--threads`, `--batch-max`, `--batch-wait-us`, connection count, or
+//! how requests coalesced into batches — and each stream's responses
+//! arrive exactly in its request order (checked, not assumed, by the
+//! writer's sequence bookkeeping). The only observable nondeterminism
+//! is *which epoch* serves a row when a hot-swap races an in-flight
+//! stream, and even then each row is scored wholly by one epoch and
+//! batches never straddle a swap.
+
+pub mod flat;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+pub mod stats;
+
+pub use flat::{FlatBatch, FlatForest};
+pub use protocol::{parse_line, Control, Fingerprint, ParsedLine, Server, StreamSummary};
+pub use queue::{QueueHandle, Reply, RowValues, ScoreRequest, ServeOptions};
+pub use registry::{ModelRegistry, ServedModel};
+pub use stats::{ServeStats, StatsCollector};

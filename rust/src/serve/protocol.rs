@@ -1,0 +1,509 @@
+//! Line-based request/response protocol and the [`Server`] front door.
+//!
+//! One non-empty input line is one prediction request:
+//!
+//! * **dense CSV** — `0.5,,3.2,nan,7` — one value per model feature;
+//!   empty / `na` / `nan` / `?` (case-insensitive) are *missing*,
+//!   exactly the CSV loader's token rules, so a served file produces
+//!   the same floats — and therefore the same prediction bits — as
+//!   `predict --csv` on it;
+//! * **sparse** — `3:1.5 17:0.25` (any token containing `:`) —
+//!   `feature:value` pairs, `--col-base` subtracted from the raw index
+//!   (1 for LibSVM-style requests); an explicit `nan` *value* here is a
+//!   stored NaN (present, routes right everywhere), matching the
+//!   LibSVM loader and `QuantisedBatch`;
+//! * **control verbs** — `!reload` (hot-swap the model file; replies
+//!   `!ok epoch=N swaps=M` in stream position), `!stats` (JSON
+//!   [`ServeStats`] snapshot), `!quit` (end this stream), `!shutdown`
+//!   (end this stream and stop the TCP accept loop).
+//!
+//! Each request row is answered with one line: its prediction value(s)
+//! formatted exactly like `predict --out` (`{}` Display), or
+//! `!err <reason>`. Responses come back **in request order** — control
+//! responses included, via a queue flush barrier — and the writer
+//! verifies that order (`seq` bookkeeping), making the determinism
+//! contract a checked invariant rather than a hope. A running FNV-1a
+//! fingerprint over the served prediction bits (errors excluded) lets
+//! the shutdown line `predictions: n=… checksum=…` byte-match the
+//! `predict` CLI's checksum for the same rows.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::queue::{
+    start_scorer, QueueHandle, Reply, RowValues, ScoreRequest, ServeOptions,
+};
+use crate::serve::registry::ModelRegistry;
+use crate::serve::stats::{ServeStats, StatsCollector};
+use crate::Float;
+
+/// Parse one value token with the CSV loader's missing-value rules.
+fn parse_value(t: &str) -> Result<Float, String> {
+    let t = t.trim();
+    if t.is_empty()
+        || t.eq_ignore_ascii_case("na")
+        || t.eq_ignore_ascii_case("nan")
+        || t == "?"
+    {
+        return Ok(Float::NAN);
+    }
+    t.parse::<Float>()
+        .map_err(|_| format!("bad value {t:?}"))
+}
+
+/// Control verbs a stream can issue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    Reload,
+    Stats,
+    Quit,
+    Shutdown,
+}
+
+/// One classified input line.
+#[derive(Debug, Clone)]
+pub enum ParsedLine {
+    Row(RowValues),
+    Control(Control),
+    Empty,
+}
+
+/// Classify and parse one request line (module docs for the grammar).
+pub fn parse_line(line: &str, col_base: u32) -> Result<ParsedLine, String> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(ParsedLine::Empty);
+    }
+    if let Some(verb) = line.strip_prefix('!') {
+        return match verb.trim() {
+            "reload" => Ok(ParsedLine::Control(Control::Reload)),
+            "stats" => Ok(ParsedLine::Control(Control::Stats)),
+            "quit" => Ok(ParsedLine::Control(Control::Quit)),
+            "shutdown" => Ok(ParsedLine::Control(Control::Shutdown)),
+            other => Err(format!("unknown control verb {other:?}")),
+        };
+    }
+    if line.contains(':') {
+        let mut pairs = Vec::new();
+        for tok in line.split_whitespace() {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("bad sparse token {tok:?}"))?;
+            let c: u32 = idx
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad column index {idx:?}"))?;
+            if c < col_base {
+                return Err(format!(
+                    "column index {c} below the stream's column base {col_base}"
+                ));
+            }
+            pairs.push((c - col_base, parse_value(val)?));
+        }
+        return Ok(ParsedLine::Row(RowValues::Sparse(pairs)));
+    }
+    let vals = line
+        .split(',')
+        .map(parse_value)
+        .collect::<Result<Vec<Float>, String>>()?;
+    Ok(ParsedLine::Row(RowValues::Dense(vals)))
+}
+
+/// Incremental FNV-1a 64 over prediction bit patterns — identical, byte
+/// for byte, to [`crate::predict::prediction_checksum`] over the
+/// concatenated served values.
+#[derive(Debug, Clone)]
+pub struct Fingerprint {
+    hash: u64,
+    n: u64,
+}
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Self {
+        Fingerprint {
+            hash: 0xcbf2_9ce4_8422_2325,
+            n: 0,
+        }
+    }
+
+    pub fn update(&mut self, values: &[Float]) {
+        for v in values {
+            for b in v.to_bits().to_le_bytes() {
+                self.hash ^= b as u64;
+                self.hash = self.hash.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        self.n += values.len() as u64;
+    }
+
+    pub fn checksum(&self) -> u64 {
+        self.hash
+    }
+
+    /// Values hashed so far (`n=` in the summary line).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Per-stream outcome returned by [`Server::serve_stream`].
+#[derive(Debug, Clone)]
+pub struct StreamSummary {
+    /// Rows answered with predictions.
+    pub served: u64,
+    /// Rows answered with `!err`.
+    pub errors: u64,
+    /// Prediction values fingerprinted (`served × outputs_per_row`).
+    pub n_values: u64,
+    /// FNV-1a 64 over the served prediction bits, request order.
+    pub checksum: u64,
+    /// Whether this stream asked the whole server to shut down.
+    pub shutdown: bool,
+}
+
+impl StreamSummary {
+    /// The `predict` CLI's checksum line, byte for byte.
+    pub fn prediction_line(&self) -> String {
+        format!(
+            "predictions: n={} checksum={:#018x}",
+            self.n_values, self.checksum
+        )
+    }
+}
+
+struct ServerInner {
+    registry: Arc<ModelRegistry>,
+    opts: ServeOptions,
+    stats: Arc<StatsCollector>,
+    queue: QueueHandle,
+    shutdown: AtomicBool,
+}
+
+/// A running serving stack: registry + stats + one scorer thread (and
+/// optionally a reload poller). Streams attach via
+/// [`serve_stream`](Self::serve_stream) (stdin/stdout, in-memory tests,
+/// the bench) or [`serve_tcp`](Self::serve_tcp).
+pub struct Server {
+    inner: Arc<ServerInner>,
+    scorer: JoinHandle<()>,
+    poller: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the scorer (and the mtime poller when `reload_poll` is
+    /// set — the SIGHUP-style reload for pipelines that rewrite the
+    /// model file in place).
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        opts: ServeOptions,
+        reload_poll: Option<Duration>,
+    ) -> Server {
+        let stats = Arc::new(StatsCollector::new());
+        let (queue, scorer) = start_scorer(registry.clone(), opts.clone(), stats.clone());
+        let inner = Arc::new(ServerInner {
+            registry,
+            opts,
+            stats,
+            queue,
+            shutdown: AtomicBool::new(false),
+        });
+        let poller = reload_poll.map(|period| {
+            let inner = inner.clone();
+            std::thread::spawn(move || {
+                let mut elapsed = Duration::ZERO;
+                let tick = Duration::from_millis(20).min(period);
+                while !inner.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    elapsed += tick;
+                    if elapsed >= period {
+                        elapsed = Duration::ZERO;
+                        // a broken rewrite keeps the old model serving;
+                        // nothing useful to do with the error here
+                        let _ = inner.registry.reload_if_changed();
+                    }
+                }
+            })
+        });
+        Server {
+            inner,
+            scorer,
+            poller,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.inner.registry
+    }
+
+    /// Telemetry snapshot (includes the registry's swap count).
+    pub fn stats(&self) -> ServeStats {
+        self.inner.stats.snapshot(self.inner.registry.swaps())
+    }
+
+    /// Serve one request stream to completion (EOF or `!quit` /
+    /// `!shutdown`). The reader runs on the calling thread, responses
+    /// are written by a scoped writer thread, and the two meet only in
+    /// the reply channel — so queue backpressure can never deadlock the
+    /// response path.
+    pub fn serve_stream<R: BufRead, W: Write + Send>(
+        &self,
+        mut reader: R,
+        writer: W,
+    ) -> Result<StreamSummary> {
+        let inner = &self.inner;
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+        std::thread::scope(|scope| {
+            let writer_thread = scope.spawn(move || write_replies(writer, reply_rx));
+            let mut seq = 0u64;
+            let mut shutdown = false;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if reader.read_line(&mut line).context("reading request")? == 0 {
+                    break;
+                }
+                match parse_line(&line, inner.opts.col_base) {
+                    Ok(ParsedLine::Empty) => {}
+                    Ok(ParsedLine::Row(row)) => {
+                        inner.queue.enqueue(ScoreRequest {
+                            seq,
+                            row,
+                            enqueued: Instant::now(),
+                            reply: reply_tx.clone(),
+                        })?;
+                        seq += 1;
+                    }
+                    Ok(ParsedLine::Control(ctl)) => {
+                        // barrier first: every response for an earlier
+                        // request reaches the writer channel before the
+                        // control response — stream order is preserved
+                        inner.queue.flush()?;
+                        match ctl {
+                            Control::Reload => {
+                                let text = match inner.registry.reload() {
+                                    Ok(epoch) => format!(
+                                        "!ok epoch={epoch} swaps={}",
+                                        inner.registry.swaps()
+                                    ),
+                                    Err(e) => format!("!err reload failed: {e:#}"),
+                                };
+                                let _ = reply_tx.send(Reply::Control { text });
+                            }
+                            Control::Stats => {
+                                let snap = inner.stats.snapshot(inner.registry.swaps());
+                                let _ = reply_tx.send(Reply::Control {
+                                    text: format!("!ok {}", snap.to_json()),
+                                });
+                            }
+                            Control::Quit => break,
+                            Control::Shutdown => {
+                                inner.shutdown.store(true, Ordering::SeqCst);
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                    }
+                    Err(msg) => {
+                        inner.queue.flush()?;
+                        let _ = reply_tx.send(Reply::Control {
+                            text: format!("!err {msg}"),
+                        });
+                    }
+                }
+            }
+            // all replies into the channel, then close it so the writer
+            // drains and exits
+            inner.queue.flush()?;
+            drop(reply_tx);
+            let mut summary = writer_thread
+                .join()
+                .expect("serve writer thread panicked")?;
+            summary.shutdown = shutdown;
+            Ok(summary)
+        })
+    }
+
+    /// Accept loop: one reader thread per connection, all feeding the
+    /// shared micro-batch queue. Returns when a stream issues
+    /// `!shutdown`. Per-connection response order follows each
+    /// connection's own request order (FIFO queue + sequential scorer);
+    /// cross-connection batch composition is whatever arrival timing
+    /// produced — the values never depend on it.
+    pub fn serve_tcp(&self, listener: TcpListener) -> Result<()> {
+        listener
+            .set_nonblocking(true)
+            .context("serve listener nonblocking")?;
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                if self.inner.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        scope.spawn(move || {
+                            let Ok(read_half) = stream.try_clone() else {
+                                return;
+                            };
+                            // a failed/hung-up connection only ends its
+                            // own stream
+                            let _ = self.serve_stream(BufReader::new(read_half), stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accepting serve connection"),
+                }
+            }
+        })
+    }
+
+    /// Stop everything and return the final stats snapshot.
+    pub fn shutdown(self) -> ServeStats {
+        let Server {
+            inner,
+            scorer,
+            poller,
+        } = self;
+        inner.shutdown.store(true, Ordering::SeqCst);
+        let stats = inner.stats.clone();
+        let registry = inner.registry.clone();
+        // dropping the inner (and with it the queue handle) lets the
+        // scorer drain and exit; stream handles are scoped so none can
+        // still hold a clone here
+        drop(inner);
+        let _ = scorer.join();
+        if let Some(p) = poller {
+            let _ = p.join();
+        }
+        stats.snapshot(registry.swaps())
+    }
+}
+
+/// Writer half of one stream: drain replies in channel order, format,
+/// fingerprint, and *check* the per-stream ordering contract.
+fn write_replies<W: Write>(mut w: W, rx: mpsc::Receiver<Reply>) -> Result<StreamSummary> {
+    let mut fp = Fingerprint::new();
+    let mut served = 0u64;
+    let mut errors = 0u64;
+    let mut line = String::new();
+    for reply in rx {
+        match reply {
+            Reply::Scored { seq, values, .. } => {
+                anyhow::ensure!(
+                    seq == served + errors,
+                    "response order violation: got row {seq}, expected {}",
+                    served + errors
+                );
+                line.clear();
+                for (i, v) in values.iter().enumerate() {
+                    if i > 0 {
+                        line.push(' ');
+                    }
+                    // the exact Display formatting `predict --out` uses
+                    use std::fmt::Write as _;
+                    let _ = write!(line, "{v}");
+                }
+                writeln!(w, "{line}")?;
+                fp.update(&values);
+                served += 1;
+            }
+            Reply::Error { seq, message } => {
+                anyhow::ensure!(
+                    seq == served + errors,
+                    "response order violation: got row {seq}, expected {}",
+                    served + errors
+                );
+                writeln!(w, "!err {message}")?;
+                errors += 1;
+            }
+            Reply::Control { text } => writeln!(w, "{text}")?,
+        }
+    }
+    w.flush()?;
+    Ok(StreamSummary {
+        served,
+        errors,
+        n_values: fp.count(),
+        checksum: fp.checksum(),
+        shutdown: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_dense_with_missing_tokens() {
+        let ParsedLine::Row(RowValues::Dense(v)) =
+            parse_line("1.5,,na,NaN,?,2", 0).unwrap()
+        else {
+            panic!("expected dense row")
+        };
+        assert_eq!(v.len(), 6);
+        assert_eq!(v[0], 1.5);
+        assert!(v[1].is_nan() && v[2].is_nan() && v[3].is_nan() && v[4].is_nan());
+        assert_eq!(v[5], 2.0);
+    }
+
+    #[test]
+    fn parse_sparse_applies_col_base() {
+        let ParsedLine::Row(RowValues::Sparse(p)) =
+            parse_line("1:0.5 7:nan 12:3", 1).unwrap()
+        else {
+            panic!("expected sparse row")
+        };
+        assert_eq!(p[0].0, 0);
+        assert_eq!(p[0].1, 0.5);
+        assert_eq!(p[1].0, 6);
+        assert!(p[1].1.is_nan(), "stored NaN survives parsing");
+        assert_eq!(p[2], (11, 3.0));
+        assert!(parse_line("0:1", 1).is_err(), "index below col base");
+    }
+
+    #[test]
+    fn parse_controls_and_garbage() {
+        assert!(matches!(
+            parse_line("!reload", 0),
+            Ok(ParsedLine::Control(Control::Reload))
+        ));
+        assert!(matches!(
+            parse_line(" !stats ", 0),
+            Ok(ParsedLine::Control(Control::Stats))
+        ));
+        assert!(matches!(parse_line("", 0), Ok(ParsedLine::Empty)));
+        assert!(parse_line("!frobnicate", 0).is_err());
+        assert!(parse_line("1.0,abc", 0).is_err());
+        assert!(parse_line("x:1", 0).is_err());
+    }
+
+    #[test]
+    fn fingerprint_matches_prediction_checksum() {
+        let preds: Vec<Float> = vec![0.25, -1.5, Float::NAN, 0.0, -0.0, 1e-30];
+        let mut fp = Fingerprint::new();
+        // update in uneven slices — incrementality must not matter
+        fp.update(&preds[..2]);
+        fp.update(&preds[2..3]);
+        fp.update(&preds[3..]);
+        assert_eq!(fp.checksum(), crate::predict::prediction_checksum(&preds));
+        assert_eq!(fp.count(), preds.len() as u64);
+        assert_eq!(
+            Fingerprint::new().checksum(),
+            crate::predict::prediction_checksum(&[]),
+            "empty stream matches empty predict"
+        );
+    }
+}

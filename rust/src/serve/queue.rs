@@ -1,0 +1,408 @@
+//! Micro-batching request queue ([`QueueHandle`] → scorer thread).
+//!
+//! Readers (stdin or one thread per TCP connection) parse rows and push
+//! [`ScoreRequest`]s into one bounded `sync_channel` — the queue cap is
+//! the backpressure valve: when the scorer falls behind, `enqueue`
+//! blocks the reader instead of growing memory. A single scorer thread
+//! drains the channel into micro-batches:
+//!
+//! * take one request (blocking), then keep draining until the batch
+//!   holds [`ServeOptions::batch_max`] rows or
+//!   [`ServeOptions::batch_wait`] has elapsed since the batch opened —
+//!   under load batches fill instantly, when idle a lone request waits
+//!   at most `batch_wait`;
+//! * clone the registry's current model `Arc` **once per batch** —
+//!   every row of a batch is quantised and scored against that one
+//!   epoch, so a hot-swap never splits a batch (in-flight requests
+//!   finish on the old epoch);
+//! * quantise the rows into one [`FlatBatch`] and score it on the
+//!   shared [`ExecContext`] pool, then reply row by row **in batch
+//!   order**.
+//!
+//! # Determinism contract
+//!
+//! The channel is FIFO and the single scorer processes batches
+//! sequentially, replying in batch order — so each connection's
+//! responses come back exactly in the order its requests were sent,
+//! with values bit-identical to the `predict` CLI on the same rows,
+//! independent of `--threads`, `--batch-max` and how requests happened
+//! to coalesce. Parallelism only ever lives *inside* a batch
+//! (`for_each_slice_mut` row chunks), which is bit-stable by the PR 1
+//! exec contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::exec::ExecContext;
+use crate::serve::flat::FlatBatch;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::stats::StatsCollector;
+use crate::Float;
+
+/// Serving knobs (CLI flags of the `serve` subcommand).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Rows coalesced into one scored block (≥ 1).
+    pub batch_max: usize,
+    /// How long an open batch waits for more rows before scoring.
+    pub batch_wait: Duration,
+    /// Bounded queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+    /// Scorer pool width (`0` = all cores, `1` = serial).
+    pub threads: usize,
+    /// Subtracted from sparse `idx:val` column indices (1 for 1-based
+    /// LibSVM-style requests) — same convention as ingestion.
+    pub col_base: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            batch_max: 64,
+            batch_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            threads: 0,
+            col_base: 0,
+        }
+    }
+}
+
+/// One parsed request row, before quantisation.
+#[derive(Debug, Clone)]
+pub enum RowValues {
+    /// One float per model feature (NaN = missing).
+    Dense(Vec<Float>),
+    /// `(feature, value)` pairs, column base already subtracted; an
+    /// explicit NaN value is a *stored* NaN (present, always right).
+    Sparse(Vec<(u32, Float)>),
+}
+
+/// A row enqueued for scoring.
+pub struct ScoreRequest {
+    /// Caller-assigned sequence number, echoed in the reply.
+    pub seq: u64,
+    pub row: RowValues,
+    /// Enqueue instant — the latency histogram measures from here.
+    pub enqueued: Instant,
+    /// Where the reply goes (one channel per connection keeps per-
+    /// connection FIFO order).
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// What the scorer (or the control path) sends back.
+pub enum Reply {
+    /// `values` is one float per output (length 1, or `k` for
+    /// `multi:softprob`), bit-identical to the `predict` CLI.
+    Scored {
+        seq: u64,
+        epoch: u64,
+        values: Vec<Float>,
+    },
+    /// Malformed/incompatible row: excluded from the fingerprint.
+    Error { seq: u64, message: String },
+    /// Pre-formatted control response (`!ok ...`), routed through the
+    /// reply channel so it lands in stream order.
+    Control { text: String },
+}
+
+enum Request {
+    Score(ScoreRequest),
+    /// Barrier: acked only after every earlier request has been scored
+    /// *and its reply sent* — the ordering hook `!reload` uses.
+    Flush(mpsc::Sender<()>),
+}
+
+/// Cloneable producer side of the queue.
+#[derive(Clone)]
+pub struct QueueHandle {
+    tx: SyncSender<Request>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl QueueHandle {
+    /// Enqueue one row; blocks when the bounded queue is full
+    /// (backpressure). Errors only after scorer shutdown.
+    pub fn enqueue(&self, req: ScoreRequest) -> anyhow::Result<()> {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Request::Score(req))
+            .map_err(|_| anyhow::anyhow!("serve queue is shut down"))
+    }
+
+    /// Block until everything enqueued before this call has been scored
+    /// and replied to.
+    pub fn flush(&self) -> anyhow::Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Flush(ack_tx))
+            .map_err(|_| anyhow::anyhow!("serve queue is shut down"))?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scorer exited before flush ack"))
+    }
+}
+
+/// Spawn the scorer thread. It runs until every [`QueueHandle`] clone
+/// has been dropped, then drains and exits.
+pub fn start_scorer(
+    registry: Arc<ModelRegistry>,
+    opts: ServeOptions,
+    stats: Arc<StatsCollector>,
+) -> (QueueHandle, JoinHandle<()>) {
+    let (tx, rx) = mpsc::sync_channel(opts.queue_cap.max(1));
+    let depth = Arc::new(AtomicUsize::new(0));
+    let handle = QueueHandle {
+        tx,
+        depth: depth.clone(),
+    };
+    let join = std::thread::spawn(move || scorer_loop(rx, registry, opts, stats, depth));
+    (handle, join)
+}
+
+fn scorer_loop(
+    rx: Receiver<Request>,
+    registry: Arc<ModelRegistry>,
+    opts: ServeOptions,
+    stats: Arc<StatsCollector>,
+    depth: Arc<AtomicUsize>,
+) {
+    let exec = ExecContext::new(opts.threads);
+    let batch_max = opts.batch_max.max(1);
+    'outer: loop {
+        // block for the batch opener
+        let first = match rx.recv() {
+            Ok(Request::Score(r)) => r,
+            Ok(Request::Flush(ack)) => {
+                let _ = ack.send(());
+                continue;
+            }
+            Err(_) => break,
+        };
+        depth.fetch_sub(1, Ordering::SeqCst);
+        let mut batch = vec![first];
+        let mut pending_acks: Vec<mpsc::Sender<()>> = Vec::new();
+        let mut disconnected = false;
+        let deadline = Instant::now() + opts.batch_wait;
+        while batch.len() < batch_max && pending_acks.is_empty() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Request::Score(r)) => {
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                    batch.push(r);
+                }
+                // a flush closes the batch: its ack must come after
+                // these rows' replies
+                Ok(Request::Flush(ack)) => pending_acks.push(ack),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        score_batch(&batch, &registry, &exec, &stats, &depth);
+        for ack in pending_acks {
+            let _ = ack.send(());
+        }
+        if disconnected {
+            break 'outer;
+        }
+    }
+}
+
+fn score_batch(
+    batch: &[ScoreRequest],
+    registry: &ModelRegistry,
+    exec: &ExecContext,
+    stats: &StatsCollector,
+    depth: &AtomicUsize,
+) {
+    // one model per batch: the hot-swap atomicity unit
+    let model = registry.current();
+    let cuts = model.cuts();
+    let n_features = model.n_features();
+    let n = batch.len();
+    let mut fb = FlatBatch::zeroed(n, n_features);
+    let mut row_err: Vec<Option<String>> = vec![None; n];
+    for (i, req) in batch.iter().enumerate() {
+        match &req.row {
+            RowValues::Dense(vals) => {
+                if vals.len() != n_features {
+                    row_err[i] = Some(format!(
+                        "row has {} features but the model was trained on {n_features}",
+                        vals.len()
+                    ));
+                    continue;
+                }
+                for (f, &v) in vals.iter().enumerate() {
+                    // dense NaN is a MISSING value (DMatrix semantics),
+                    // not a stored NaN — leave the slot absent
+                    if !v.is_nan() {
+                        fb.set_value(i, f, v, cuts);
+                    }
+                }
+            }
+            RowValues::Sparse(pairs) => {
+                for &(f, v) in pairs {
+                    if (f as usize) < n_features {
+                        fb.set_value(i, f as usize, v, cuts);
+                    } else {
+                        row_err[i] = Some(format!(
+                            "row uses feature {f} but the model was trained on {n_features}"
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    let preds = model.predict_batch(&fb, exec);
+    let k = if n == 0 { 1 } else { (preds.len() / n).max(1) };
+    let mut errors = 0u64;
+    for (i, req) in batch.iter().enumerate() {
+        stats.record_latency(req.enqueued.elapsed());
+        let reply = match row_err[i].take() {
+            Some(message) => {
+                errors += 1;
+                Reply::Error {
+                    seq: req.seq,
+                    message,
+                }
+            }
+            None => Reply::Scored {
+                seq: req.seq,
+                epoch: model.epoch,
+                values: preds[i * k..(i + 1) * k].to_vec(),
+            },
+        };
+        // a hung-up connection just drops its replies
+        let _ = req.reply.send(reply);
+    }
+    stats.record_batch(n, depth.load(Ordering::SeqCst), errors);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetSpec};
+    use crate::gbm::params::LearnerParams;
+
+    fn serve_fixture(name: &str) -> (Arc<ModelRegistry>, crate::data::Dataset) {
+        let g = generate(&DatasetSpec::higgs_like(400), 9);
+        let params = LearnerParams {
+            objective: "binary:logistic".parse().expect("infallible"),
+            num_rounds: 3,
+            max_depth: 3,
+            max_bins: 16,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let booster = crate::gbm::Learner::from_params(params)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "xgb_tpu_queue_{name}_{}.txt",
+            std::process::id()
+        ));
+        crate::gbm::save_model_file(&booster, &path).unwrap();
+        let reg = Arc::new(ModelRegistry::open(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+        (reg, g.valid)
+    }
+
+    #[test]
+    fn scored_rows_match_predict_bitwise_in_order() {
+        let (reg, valid) = serve_fixture("parity");
+        let want = reg.current().booster().predict(&valid.x);
+        let n = valid.x.n_rows();
+        let stats = Arc::new(StatsCollector::new());
+        let opts = ServeOptions {
+            batch_max: 7,
+            threads: 2,
+            ..Default::default()
+        };
+        let (q, join) = start_scorer(reg.clone(), opts, stats.clone());
+        let (reply_tx, reply_rx) = mpsc::channel();
+        for row in 0..n {
+            let vals: Vec<Float> = (0..valid.x.n_cols())
+                .map(|c| valid.x.get(row, c).unwrap_or(Float::NAN))
+                .collect();
+            q.enqueue(ScoreRequest {
+                seq: row as u64,
+                row: RowValues::Dense(vals),
+                enqueued: Instant::now(),
+                reply: reply_tx.clone(),
+            })
+            .unwrap();
+        }
+        q.flush().unwrap();
+        drop(reply_tx);
+        let mut got = Vec::new();
+        for reply in reply_rx.iter().take(n) {
+            match reply {
+                Reply::Scored { seq, values, epoch } => {
+                    assert_eq!(seq, got.len() as u64, "FIFO reply order");
+                    assert_eq!(epoch, 1);
+                    got.push(values[0]);
+                }
+                Reply::Error { message, .. } => panic!("unexpected error: {message}"),
+                Reply::Control { .. } => panic!("unexpected control"),
+            }
+        }
+        assert_eq!(got.len(), n);
+        for (row, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "row {row}");
+        }
+        drop(q);
+        join.join().unwrap();
+        let s = stats.snapshot(0);
+        assert_eq!(s.requests, n as u64);
+        assert!(s.batches >= (n / 7) as u64);
+        assert!(!s.batch_sizes.is_empty());
+    }
+
+    #[test]
+    fn bad_rows_get_error_replies_not_panics() {
+        let (reg, _) = serve_fixture("badrow");
+        let n_features = reg.current().n_features();
+        let stats = Arc::new(StatsCollector::new());
+        let (q, join) = start_scorer(reg, ServeOptions::default(), stats.clone());
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // wrong arity dense + out-of-range sparse feature
+        q.enqueue(ScoreRequest {
+            seq: 0,
+            row: RowValues::Dense(vec![1.0; n_features + 3]),
+            enqueued: Instant::now(),
+            reply: reply_tx.clone(),
+        })
+        .unwrap();
+        q.enqueue(ScoreRequest {
+            seq: 1,
+            row: RowValues::Sparse(vec![(n_features as u32 + 10, 1.0)]),
+            enqueued: Instant::now(),
+            reply: reply_tx.clone(),
+        })
+        .unwrap();
+        q.flush().unwrap();
+        drop(reply_tx);
+        let replies: Vec<Reply> = reply_rx.iter().take(2).collect();
+        for r in &replies {
+            match r {
+                Reply::Error { message, .. } => {
+                    assert!(message.contains("features") || message.contains("feature"))
+                }
+                _ => panic!("expected error reply"),
+            }
+        }
+        drop(q);
+        join.join().unwrap();
+        assert_eq!(stats.snapshot(0).errors, 2);
+    }
+}

@@ -1,0 +1,257 @@
+//! Serving telemetry: latency/batch/queue statistics ([`ServeStats`]).
+//!
+//! The collector is a single mutex over plain counters plus a
+//! power-of-two latency histogram — one lock per scored batch on the
+//! (single) scorer thread, so contention is nil and recording stays off
+//! the reader/writer hot path. Quantiles come from the histogram:
+//! exact enough for p50/p90/p99 reporting (each bucket spans one
+//! doubling) with O(1) memory however long the server runs.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of ×2 latency buckets: bucket `i ≥ 1` holds latencies of bit
+/// length `i` (`[2^{i-1}, 2^i)` µs, upper edge `2^i`), bucket 0 holds
+/// sub-µs; 40 buckets cover out past 2^39 µs ≈ 6 days.
+const LAT_BUCKETS: usize = 40;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    lat_hist: Vec<u64>,
+    lat_sum_us: u64,
+    lat_max_us: u64,
+    batch_sizes: BTreeMap<usize, u64>,
+    queue_depth_max: usize,
+    queue_depth_sum: u64,
+}
+
+/// Thread-safe recorder the scorer feeds; snapshot with
+/// [`StatsCollector::snapshot`].
+#[derive(Debug)]
+pub struct StatsCollector {
+    inner: Mutex<Inner>,
+}
+
+impl Default for StatsCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StatsCollector {
+    pub fn new() -> Self {
+        StatsCollector {
+            inner: Mutex::new(Inner {
+                lat_hist: vec![0; LAT_BUCKETS],
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Record one scored micro-batch: its size, the queue depth left
+    /// behind after draining it, and whether each member succeeded.
+    pub fn record_batch(&self, batch_size: usize, queue_depth: usize, errors: u64) {
+        let mut s = self.inner.lock().unwrap();
+        s.batches += 1;
+        s.requests += batch_size as u64;
+        s.errors += errors;
+        *s.batch_sizes.entry(batch_size).or_insert(0) += 1;
+        s.queue_depth_max = s.queue_depth_max.max(queue_depth);
+        s.queue_depth_sum += queue_depth as u64;
+    }
+
+    /// Record one request's enqueue→scored latency.
+    pub fn record_latency(&self, lat: Duration) {
+        let us = lat.as_micros().min(u64::MAX as u128) as u64;
+        let mut s = self.inner.lock().unwrap();
+        let idx = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        s.lat_hist[idx] += 1;
+        s.lat_sum_us += us;
+        s.lat_max_us = s.lat_max_us.max(us);
+    }
+
+    /// Point-in-time copy of everything recorded so far.
+    pub fn snapshot(&self, swaps: u64) -> ServeStats {
+        let s = self.inner.lock().unwrap();
+        let total: u64 = s.lat_hist.iter().sum();
+        let q = |p: f64| -> u64 {
+            if total == 0 {
+                return 0;
+            }
+            let target = ((p * total as f64).ceil() as u64).max(1);
+            let mut seen = 0u64;
+            for (i, &c) in s.lat_hist.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    // upper edge of the bucket: conservative, monotone in p
+                    return if i == 0 { 1 } else { 1u64 << i };
+                }
+            }
+            s.lat_max_us
+        };
+        ServeStats {
+            requests: s.requests,
+            errors: s.errors,
+            batches: s.batches,
+            swaps,
+            p50_us: q(0.50),
+            p90_us: q(0.90),
+            p99_us: q(0.99),
+            mean_us: if s.requests == 0 {
+                0.0
+            } else {
+                s.lat_sum_us as f64 / s.requests as f64
+            },
+            max_us: s.lat_max_us,
+            batch_sizes: s.batch_sizes.iter().map(|(&k, &v)| (k, v)).collect(),
+            queue_depth_max: s.queue_depth_max,
+            queue_depth_mean: if s.batches == 0 {
+                0.0
+            } else {
+                s.queue_depth_sum as f64 / s.batches as f64
+            },
+        }
+    }
+}
+
+/// A snapshot of serving telemetry — printed on shutdown and returned
+/// to the bench harness.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub batches: u64,
+    /// Model hot-swaps performed by the registry.
+    pub swaps: u64,
+    /// Histogram-bucket (×2) upper-bound quantiles, µs.
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    /// `(batch size, count)` ascending — the coalescing distribution.
+    pub batch_sizes: Vec<(usize, u64)>,
+    pub queue_depth_max: usize,
+    pub queue_depth_mean: f64,
+}
+
+impl ServeStats {
+    /// Mean rows per scored batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Human summary, one stat per line (what `serve` prints to stderr
+    /// on shutdown).
+    pub fn render(&self) -> String {
+        let dist: Vec<String> = self
+            .batch_sizes
+            .iter()
+            .map(|(sz, n)| format!("{sz}x{n}"))
+            .collect();
+        format!(
+            "serve stats: requests={} errors={} batches={} swaps={}\n\
+             serve latency (us): p50<={} p90<={} p99<={} mean={:.1} max={}\n\
+             serve batches: mean_size={:.2} dist=[{}] queue_depth max={} mean={:.2}",
+            self.requests,
+            self.errors,
+            self.batches,
+            self.swaps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.mean_us,
+            self.max_us,
+            self.mean_batch(),
+            dist.join(","),
+            self.queue_depth_max,
+            self.queue_depth_mean,
+        )
+    }
+
+    /// Compact single-line JSON (bench artifact rows embed it).
+    pub fn to_json(&self) -> String {
+        let dist: Vec<String> = self
+            .batch_sizes
+            .iter()
+            .map(|(sz, n)| format!("[{sz},{n}]"))
+            .collect();
+        format!(
+            "{{\"requests\":{},\"errors\":{},\"batches\":{},\"swaps\":{},\
+             \"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\"mean_us\":{:.2},\"max_us\":{},\
+             \"mean_batch\":{:.3},\"batch_dist\":[{}],\
+             \"queue_depth_max\":{},\"queue_depth_mean\":{:.3}}}",
+            self.requests,
+            self.errors,
+            self.batches,
+            self.swaps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.mean_us,
+            self.max_us,
+            self.mean_batch(),
+            dist.join(","),
+            self.queue_depth_max,
+            self.queue_depth_mean,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_monotone_and_bucketed() {
+        let c = StatsCollector::new();
+        for us in [3u64, 5, 9, 17, 33, 65, 129, 257, 513, 1025] {
+            c.record_latency(Duration::from_micros(us));
+        }
+        c.record_batch(10, 3, 0);
+        let s = c.snapshot(2);
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.swaps, 2);
+        assert!(s.p50_us > 0);
+        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us);
+        // p99 bucket upper bound covers the max sample
+        assert!(s.p99_us >= 1025);
+        assert_eq!(s.max_us, 1025);
+        assert_eq!(s.batch_sizes, vec![(10, 1)]);
+        assert_eq!(s.queue_depth_max, 3);
+    }
+
+    #[test]
+    fn batch_distribution_accumulates() {
+        let c = StatsCollector::new();
+        c.record_batch(1, 0, 0);
+        c.record_batch(4, 1, 1);
+        c.record_batch(4, 2, 0);
+        let s = c.snapshot(0);
+        assert_eq!(s.requests, 9);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batch_sizes, vec![(1, 1), (4, 2)]);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-9);
+        assert!((s.queue_depth_mean - 1.0).abs() < 1e-9);
+        // render/json don't panic and carry the headline numbers
+        assert!(s.render().contains("requests=9"));
+        assert!(s.to_json().contains("\"requests\":9"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let s = StatsCollector::new().snapshot(0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

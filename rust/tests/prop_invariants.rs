@@ -303,6 +303,99 @@ fn prop_threshold_translation_matches_float_traversal() {
     });
 }
 
+/// Flattening preserves routing bit for bit: for random forests over
+/// random cut grids, the serving-side `FlatForest` (shifted-bin SoA
+/// arena, branchless traversal) returns exactly the leaf the `BinForest`
+/// and the float traversal return — row for row, tree for tree,
+/// including NaN/missing rows, values exactly on cut boundaries, and
+/// thresholds below the first / above the sentinel cut — and the batch
+/// margin accumulation matches the manual per-row tree-order sum at
+/// every thread count.
+#[test]
+fn prop_flat_forest_matches_bin_and_float_traversal() {
+    use xgb_tpu::predict::quantised::{BinForest, QuantisedBatch};
+    use xgb_tpu::serve::FlatBatch;
+    use xgb_tpu::tree::RegTree;
+    check(0xf1a7, 30, |g: &mut Gen| {
+        let n = g.int(20, 300);
+        let cols = g.int(1, 5);
+        // coarse value grid (many exact cut hits) + ~15% missing
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| {
+                if g.bool(0.15) {
+                    Float::NAN
+                } else {
+                    g.int(0, 12) as Float - 6.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let cuts = HistogramCuts::from_dmatrix(&x, g.int(2, 16), None);
+
+        // a small random forest whose thresholds are drawn from the cut
+        // grid (the trained-tree invariant) plus the two edge classes
+        let n_trees = g.int(1, 3);
+        let mut trees: Vec<RegTree> = Vec::new();
+        for _ in 0..n_trees {
+            let mut tree = RegTree::new_root(0.0, 1.0);
+            let mut frontier = vec![(0usize, 0usize)];
+            while let Some((nid, depth)) = frontier.pop() {
+                if depth >= 4 || g.bool(0.3) {
+                    continue;
+                }
+                let f = g.int(0, cols - 1);
+                let fc = cuts.feature_cuts(f);
+                let threshold = match g.int(0, 9) {
+                    0 => -100.0,
+                    1 => *fc.last().unwrap() + 100.0,
+                    _ => fc[g.int(0, fc.len() - 1)],
+                };
+                let (l, r) = tree.apply_split(
+                    nid,
+                    f as u32,
+                    threshold,
+                    g.bool(0.5),
+                    1.0,
+                    g.f32(-1.0, 1.0),
+                    1.0,
+                    g.f32(-1.0, 1.0),
+                    1.0,
+                );
+                frontier.push((l, depth + 1));
+                frontier.push((r, depth + 1));
+            }
+            trees.push(tree);
+        }
+
+        let bf = BinForest::from_trees(&[trees.clone()], &cuts);
+        let flat = bf.flatten().unwrap();
+        let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+        let fb = FlatBatch::from_quantised(&qb, cols);
+        let roots = flat.group_roots(0);
+        assert_eq!(roots.len(), trees.len());
+        for r in 0..n {
+            for (t, (tree, bt)) in trees.iter().zip(&bf.groups[0]).enumerate() {
+                let float_v = tree.nodes[tree.leaf_for_row(&x, r)].leaf_value;
+                let bin_v = bt.leaf_value_for(|f| qb.feature_bin(r, f));
+                let flat_v = flat.leaf_value(roots[t], |f| fb.bin(r, f as usize));
+                assert_eq!(float_v.to_bits(), bin_v.to_bits(), "row {r} tree {t}: bin");
+                assert_eq!(float_v.to_bits(), flat_v.to_bits(), "row {r} tree {t}: flat");
+            }
+        }
+
+        // batch margins: same bracketing as the per-row manual sum
+        let exec = xgb_tpu::exec::ExecContext::new(g.int(1, 3));
+        let margins = flat.predict_margins(&[0.5], &fb, &exec);
+        for r in 0..n {
+            let mut want = 0.5 as Float;
+            for bt in &bf.groups[0] {
+                want += bt.leaf_value_for(|f| qb.feature_bin(r, f));
+            }
+            assert_eq!(margins[0][r].to_bits(), want.to_bits(), "row {r} margin");
+        }
+    });
+}
+
 /// Quantised histogram totals equal direct gradient sums per feature.
 #[test]
 fn prop_histogram_mass_conservation() {

@@ -1,0 +1,379 @@
+//! Serving-stack parity suite: responses streamed through the full
+//! `serve` path (parse → micro-batch queue → FlatForest → reply writer)
+//! must be **bit-identical** to `Booster::predict` on the same rows —
+//! across {dense with missing, sparse with stored NaN + col base,
+//! multiclass softprob} × threads {1,4} × batch_max {1,7,64} — with
+//! responses in request order, the stream checksum equal to the
+//! `predict` CLI's FNV-1a fingerprint, and correctness preserved across
+//! a mid-stream atomic hot-swap (old rows on the old epoch, new rows on
+//! the new one) including swaps racing in-flight concurrent streams.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::data::{DMatrix, Dataset};
+use xgb_tpu::gbm::{Booster, Learner, LearnerParams};
+use xgb_tpu::predict::prediction_checksum;
+use xgb_tpu::serve::{ModelRegistry, ServeOptions, Server};
+use xgb_tpu::Float;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("xgb_tpu_serving_{name}_{}.txt", std::process::id()))
+}
+
+fn train(objective: &str, num_class: usize, rounds: usize, seed: u64, rows: usize) -> (Booster, Dataset) {
+    let spec = if num_class > 1 {
+        DatasetSpec::covtype_like(rows)
+    } else {
+        DatasetSpec::higgs_like(rows)
+    };
+    let g = generate(&spec, seed);
+    let params = LearnerParams {
+        objective: objective.parse().expect("known objective"),
+        num_class,
+        num_rounds: rounds,
+        max_depth: 3,
+        max_bins: 16,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let booster = Learner::from_params(params).unwrap().train(&g.train, None).unwrap();
+    (booster, g.valid)
+}
+
+/// Run one in-memory stream through a server and return its output
+/// lines + summary.
+fn run_stream(server: &Server, input: &str) -> (Vec<String>, xgb_tpu::serve::StreamSummary) {
+    let mut out: Vec<u8> = Vec::new();
+    let summary = server.serve_stream(input.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    (text.lines().map(|l| l.to_string()).collect(), summary)
+}
+
+/// Parse one response line into floats and compare bitwise against the
+/// expected slice (Display round-trips f32 exactly, so equality of the
+/// parsed bits is equality of the served bits).
+fn assert_line_matches(line: &str, want: &[Float], ctx: &str) {
+    let got: Vec<Float> = line
+        .split_whitespace()
+        .map(|t| t.parse::<Float>().unwrap())
+        .collect();
+    assert_eq!(got.len(), want.len(), "{ctx}: output arity; line {line:?}");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: value {i}: {g} vs {w}");
+    }
+}
+
+/// One parity case: request lines + the float matrix `predict` sees.
+struct Case {
+    name: &'static str,
+    booster: Booster,
+    requests: Vec<String>,
+    expected: Vec<Float>,
+    outputs_per_row: usize,
+    col_base: u32,
+}
+
+/// Dense requests from the valid matrix, with every third row's second
+/// feature blanked (empty token = missing, DMatrix semantics).
+fn dense_case(name: &'static str, objective: &str, num_class: usize, seed: u64) -> Case {
+    let (booster, valid) = train(objective, num_class, 3, seed, 400);
+    let n = valid.x.n_rows();
+    let cols = valid.x.n_cols();
+    let mut vals: Vec<Float> = Vec::with_capacity(n * cols);
+    let mut requests = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut toks: Vec<String> = Vec::with_capacity(cols);
+        for c in 0..cols {
+            let v = valid.x.get(r, c).unwrap_or(Float::NAN);
+            if c == 1 && r % 3 == 0 {
+                vals.push(Float::NAN);
+                toks.push(String::new());
+            } else {
+                vals.push(v);
+                toks.push(format!("{v}"));
+            }
+        }
+        requests.push(toks.join(","));
+    }
+    let x = DMatrix::dense(vals, n, cols);
+    let expected = booster.predict(&x);
+    let outputs_per_row = expected.len() / n;
+    Case {
+        name,
+        booster,
+        requests,
+        expected,
+        outputs_per_row,
+        col_base: 0,
+    }
+}
+
+/// Sparse LibSVM-style requests (1-based indices, `--col-base 1`): every
+/// fifth row omits feature 0 (missing), every seventh carries an
+/// explicit `nan` value on feature 2 (a STORED NaN — present, routes
+/// right at every split, unlike an absent slot's default direction).
+fn sparse_case(seed: u64) -> Case {
+    let (booster, valid) = train("binary:logistic", 1, 3, seed, 400);
+    let n = valid.x.n_rows();
+    let cols = valid.x.n_cols();
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<Float> = Vec::new();
+    let mut requests = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut toks: Vec<String> = Vec::new();
+        for c in 0..cols {
+            if c == 0 && r % 5 == 0 {
+                continue; // absent entry: default-direction routing
+            }
+            let v = if c == 2 && r % 7 == 0 {
+                Float::NAN // stored NaN
+            } else {
+                valid.x.get(r, c).unwrap_or(Float::NAN)
+            };
+            indices.push(c as u32);
+            values.push(v);
+            toks.push(if v.is_nan() {
+                format!("{}:nan", c + 1)
+            } else {
+                format!("{}:{v}", c + 1)
+            });
+        }
+        indptr.push(indices.len());
+        requests.push(toks.join(" "));
+    }
+    let x = DMatrix::csr(indptr, indices, values, n, cols);
+    let expected = booster.predict(&x);
+    Case {
+        name: "sparse-storednan",
+        booster,
+        requests,
+        expected,
+        outputs_per_row: 1,
+        col_base: 1,
+    }
+}
+
+/// The tentpole acceptance sweep: every case × threads × batch_max
+/// serves bit-identically to `predict`, in order, with the `predict`
+/// CLI's exact checksum.
+#[test]
+fn served_responses_bit_match_predict_across_threads_and_batching() {
+    let cases = [
+        dense_case("dense-binary", "binary:logistic", 1, 11),
+        sparse_case(12),
+        dense_case("multiclass-softprob", "multi:softprob", 7, 13),
+    ];
+    for case in &cases {
+        let path = tmp(case.name);
+        xgb_tpu::gbm::save_model_file(&case.booster, &path).unwrap();
+        let n = case.requests.len();
+        let k = case.outputs_per_row;
+        let input: String = case.requests.iter().map(|r| format!("{r}\n")).collect();
+        for threads in [1usize, 4] {
+            for batch_max in [1usize, 7, 64] {
+                let ctx = format!("{} t={threads} b={batch_max}", case.name);
+                let registry = Arc::new(ModelRegistry::open(&path).unwrap());
+                let opts = ServeOptions {
+                    batch_max,
+                    threads,
+                    col_base: case.col_base,
+                    ..Default::default()
+                };
+                let server = Server::start(registry, opts, None);
+                let (lines, summary) = run_stream(&server, &input);
+                assert_eq!(lines.len(), n, "{ctx}: one response per request");
+                for (r, line) in lines.iter().enumerate() {
+                    assert_line_matches(line, &case.expected[r * k..(r + 1) * k], &format!("{ctx} row {r}"));
+                }
+                assert_eq!(summary.served, n as u64, "{ctx}");
+                assert_eq!(summary.errors, 0, "{ctx}");
+                assert_eq!(summary.n_values, (n * k) as u64, "{ctx}");
+                assert_eq!(
+                    summary.checksum,
+                    prediction_checksum(&case.expected),
+                    "{ctx}: stream fingerprint == predict CLI checksum"
+                );
+                assert_eq!(
+                    summary.prediction_line(),
+                    format!(
+                        "predictions: n={} checksum={:#018x}",
+                        n * k,
+                        prediction_checksum(&case.expected)
+                    ),
+                    "{ctx}: the shutdown line byte-matches predict's"
+                );
+                let stats = server.shutdown();
+                assert_eq!(stats.requests, n as u64, "{ctx}");
+                assert!(stats.batches > 0 && stats.batches <= n as u64, "{ctx}");
+                if batch_max == 1 {
+                    assert_eq!(stats.batches, n as u64, "{ctx}: unit batches");
+                }
+                assert!(stats.p50_us > 0 && stats.p99_us >= stats.p50_us, "{ctx}: non-trivial latency stats");
+                assert!(!stats.batch_sizes.is_empty(), "{ctx}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Mid-stream `!reload`: rows before the verb are scored by the model
+/// loaded at open (epoch 1), the verb answers in stream position with
+/// the new epoch, rows after are scored by the rewritten file (epoch 2),
+/// and the stream checksum fingerprints exactly that A-then-B sequence.
+#[test]
+fn mid_stream_hot_swap_serves_old_then_new_epoch() {
+    let (a, valid) = train("binary:logistic", 1, 2, 21, 400);
+    let (b, _) = train("binary:logistic", 1, 4, 22, 400);
+    let path = tmp("hotswap");
+    xgb_tpu::gbm::save_model_file(&a, &path).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&path).unwrap());
+    let server = Server::start(registry, ServeOptions::default(), None);
+    // epoch 1 is in memory; the file on disk now carries model B
+    xgb_tpu::gbm::save_model_file(&b, &path).unwrap();
+
+    let n = valid.x.n_rows();
+    let cols = valid.x.n_cols();
+    let row_line = |r: usize| -> String {
+        (0..cols)
+            .map(|c| format!("{}", valid.x.get(r, c).unwrap_or(Float::NAN)))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let split = n / 2;
+    let mut input = String::new();
+    for r in 0..split {
+        input.push_str(&row_line(r));
+        input.push('\n');
+    }
+    input.push_str("!reload\n");
+    for r in split..n {
+        input.push_str(&row_line(r));
+        input.push('\n');
+    }
+
+    let want_a = a.predict(&valid.x);
+    let want_b = b.predict(&valid.x);
+    let (lines, summary) = run_stream(&server, &input);
+    assert_eq!(lines.len(), n + 1, "rows + the reload ack");
+    for r in 0..split {
+        assert_line_matches(&lines[r], &want_a[r..=r], &format!("pre-swap row {r}"));
+    }
+    assert_eq!(lines[split], "!ok epoch=2 swaps=1", "reload ack in stream position");
+    for r in split..n {
+        assert_line_matches(&lines[r + 1], &want_b[r..=r], &format!("post-swap row {r}"));
+    }
+    // fingerprint covers exactly the A-prefix then B-suffix values
+    let mut seq: Vec<Float> = want_a[..split].to_vec();
+    seq.extend_from_slice(&want_b[split..]);
+    assert_eq!(summary.checksum, prediction_checksum(&seq));
+    let stats = server.shutdown();
+    assert_eq!(stats.swaps, 1);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Hot-swap racing in-flight load: two concurrent streams hammer the
+/// queue while a third thread swaps the model file. Epoch atomicity
+/// means every response must equal model A's or model B's prediction
+/// for its row — never a mixture — and each stream still answers in
+/// its own request order.
+#[test]
+fn concurrent_streams_survive_hot_swap_with_per_row_epoch_atomicity() {
+    let (a, valid) = train("binary:logistic", 1, 2, 31, 400);
+    let (b, _) = train("binary:logistic", 1, 5, 32, 400);
+    let path = tmp("race");
+    xgb_tpu::gbm::save_model_file(&a, &path).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&path).unwrap());
+    let opts = ServeOptions {
+        batch_max: 8,
+        threads: 2,
+        ..Default::default()
+    };
+    let server = Server::start(registry, opts, None);
+    xgb_tpu::gbm::save_model_file(&b, &path).unwrap();
+
+    let n = valid.x.n_rows();
+    let cols = valid.x.n_cols();
+    let input: String = (0..n)
+        .map(|r| {
+            let toks: Vec<String> = (0..cols)
+                .map(|c| format!("{}", valid.x.get(r, c).unwrap_or(Float::NAN)))
+                .collect();
+            format!("{}\n", toks.join(","))
+        })
+        .collect();
+    let want_a = a.predict(&valid.x);
+    let want_b = b.predict(&valid.x);
+
+    std::thread::scope(|scope| {
+        let streams: Vec<_> = (0..2)
+            .map(|_| {
+                let server = &server;
+                let input = &input;
+                scope.spawn(move || run_stream(server, input))
+            })
+            .collect();
+        // swap while both streams are in flight
+        let swapper = scope.spawn(|| server.registry().reload().unwrap());
+        let epoch = swapper.join().unwrap();
+        assert_eq!(epoch, 2);
+        for handle in streams {
+            let (lines, summary) = handle.join().unwrap();
+            assert_eq!(lines.len(), n);
+            assert_eq!(summary.served, n as u64);
+            assert_eq!(summary.errors, 0);
+            for (r, line) in lines.iter().enumerate() {
+                let got: Float = line.parse().unwrap();
+                assert!(
+                    got.to_bits() == want_a[r].to_bits() || got.to_bits() == want_b[r].to_bits(),
+                    "row {r}: {got} is neither epoch's prediction"
+                );
+            }
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.swaps, 1);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Stream-order bookkeeping around control verbs and bad lines: `!stats`
+/// and parse errors answer in position (flush barrier), empty lines are
+/// skipped, `!quit` ends the stream without shutting the server down.
+#[test]
+fn controls_errors_and_quit_answer_in_stream_order() {
+    let (booster, valid) = train("binary:logistic", 1, 2, 41, 400);
+    let path = tmp("controls");
+    xgb_tpu::gbm::save_model_file(&booster, &path).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&path).unwrap());
+    let server = Server::start(registry, ServeOptions::default(), None);
+    let cols = valid.x.n_cols();
+    let row_line: String = (0..cols)
+        .map(|c| format!("{}", valid.x.get(0, c).unwrap_or(Float::NAN)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let want = booster.predict(&valid.x)[0];
+
+    let input = format!(
+        "{row_line}\n\n!stats\nnot,a,number\n{row_line}\n!quit\n{row_line}\n"
+    );
+    let (lines, summary) = run_stream(&server, &input);
+    assert_eq!(lines.len(), 4, "row, stats, error, row — nothing after !quit");
+    assert_line_matches(&lines[0], &[want], "first row");
+    assert!(lines[1].starts_with("!ok {"), "stats JSON in position: {}", lines[1]);
+    assert!(lines[1].contains("\"requests\":"), "{}", lines[1]);
+    assert!(lines[2].starts_with("!err "), "parse error in position: {}", lines[2]);
+    assert_line_matches(&lines[3], &[want], "second row");
+    assert_eq!(summary.served, 2);
+    assert_eq!(summary.errors, 0, "parse errors never reach the scorer");
+    assert!(!summary.shutdown, "!quit ends the stream, not the server");
+
+    // the server is still alive: a new stream serves normally
+    let (lines2, summary2) = run_stream(&server, &format!("{row_line}\n!shutdown\n"));
+    assert_eq!(lines2.len(), 1);
+    assert_line_matches(&lines2[0], &[want], "post-quit stream");
+    assert!(summary2.shutdown, "!shutdown flags the server to stop");
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}

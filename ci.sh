@@ -131,6 +131,29 @@ if [[ -z "$EVAL_FLOAT" || "$EVAL_FLOAT" != "$EVAL_STREAM" ]]; then
     exit 1
 fi
 
+# Kernel-mode smoke: the blocked hot-loop kernels (default) and the
+# scalar reference loops (XGB_SCALAR_KERNELS=1) must produce byte-
+# identical training metrics and prediction checksums — the CLI-level
+# pin of the bit-parity contract the kernel property tests enforce
+# in-process.
+echo "==> kernel-mode smoke (CLI)"
+SCALAR_FINAL=$(XGB_SCALAR_KERNELS=1 ./target/release/xgb-tpu train \
+    "${SMOKE_FLAGS[@]}" 2>/dev/null | grep '^final:' || true)
+echo "blocked: $MEM_FINAL"
+echo "scalar:  $SCALAR_FINAL"
+if [[ -z "$SCALAR_FINAL" || "$MEM_FINAL" != "$SCALAR_FINAL" ]]; then
+    echo "FAIL: scalar-kernel training metric does not match the blocked kernels"
+    exit 1
+fi
+SUM_SCALAR=$(XGB_SCALAR_KERNELS=1 ./target/release/xgb-tpu "${PRED_ARGS[@]}" \
+    --stream --batch-rows 64 2>&1 >/dev/null | grep '^predictions:' || true)
+echo "blocked: $SUM_FLOAT"
+echo "scalar:  $SUM_SCALAR"
+if [[ -z "$SUM_SCALAR" || "$SUM_FLOAT" != "$SUM_SCALAR" ]]; then
+    echo "FAIL: scalar-kernel prediction checksum does not match the blocked kernels"
+    exit 1
+fi
+
 # Serving smoke: pipe the same rows through `serve` over stdin (labels
 # stripped, so requests are LibSVM-style sparse tokens with --col-base 1)
 # and require the shutdown fingerprint line to byte-match `predict`'s

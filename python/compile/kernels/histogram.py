@@ -24,6 +24,14 @@ Shapes are static: callers (``compile/model.py`` and the Rust runtime via
 the AOT artifact) pad the last tile.  ``interpret=True`` everywhere — the
 CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU performance is
 estimated analytically in DESIGN.md §7.
+
+The native CPU builders mirror this kernel's block/accumulate/merge shape
+in scalar code: ``rust/src/hist`` decodes each block of rows through the
+multi-symbol unpacker (``rust/src/compress/unpack.rs``) and accumulates
+branchlessly into a one-slot-wider partial — the null symbol indexes a
+scratch slot discarded on merge, the moral equivalent of this kernel's
+zero one-hot row.  ``XGB_SCALAR_KERNELS=1`` selects the row-at-a-time
+reference loops there; both are bit-identical (see the hist module docs).
 """
 
 from functools import partial

@@ -2,19 +2,52 @@
 //! (the device-compute reference used by the Table 2 / Figure 2 numbers)
 //! vs the AOT-compiled Pallas one-hot-matmul artifact through PJRT.
 //!
-//! NOTE: the artifact runs the kernel in interpret mode on the CPU plugin;
-//! its wall-clock here is a correctness path, NOT a TPU performance proxy.
-//! The TPU estimate (VMEM footprint, MXU shapes) is static — DESIGN.md §7.
+//! Sweeps **Scalar vs Blocked** kernel modes (the blocked multi-symbol
+//! unpack + branchless null-scratch-slot accumulation of
+//! `rust/src/hist`, bit-identical by construction) for the quantized and
+//! bit-packed builders across thread counts {1,2,4,8} and two symbol
+//! widths (max_bins 16 and 256), plus the external-memory paged path.
+//! Emits a `BENCH_kernel.json` trajectory artifact (path override:
+//! `XGB_BENCH_OUT`) with cells/s, GB/s and blocked-over-scalar speedup
+//! per cell of the sweep — the perf baseline future PRs diff against.
+//!
+//! NOTE: the XLA artifact row runs the kernel in interpret mode on the
+//! CPU plugin; its wall-clock here is a correctness path, NOT a TPU
+//! performance proxy. The TPU estimate is static — DESIGN.md §7.
 
-use xgb_tpu::bench::{Runner, Table};
+use xgb_tpu::bench::{fmt_secs, Runner, Table};
+use xgb_tpu::compress::page::PagedMatrixBuilder;
 use xgb_tpu::compress::CompressedMatrix;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
-use xgb_tpu::hist::{build_histogram_compressed, build_histogram_quantized, Histogram};
+use xgb_tpu::exec::{ExecContext, KernelMode};
+use xgb_tpu::hist::{
+    build_histogram_compressed_par_mode, build_histogram_paged_mode,
+    build_histogram_quantized_par_mode, Histogram,
+};
 use xgb_tpu::quantile::{HistogramCuts, Quantizer};
 use xgb_tpu::GradPair;
 
 fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn mode_name(mode: KernelMode) -> &'static str {
+    match mode {
+        KernelMode::Blocked => "blocked",
+        KernelMode::Scalar => "scalar",
+    }
+}
+
+/// One sweep cell, ready for both the table and the JSON artifact.
+struct Cell {
+    builder: &'static str,
+    mode: KernelMode,
+    threads: usize,
+    max_bins: usize,
+    symbol_bits: u32,
+    mean_secs: f64,
+    cells_per_sec: f64,
+    gb_per_sec: f64,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -24,39 +57,117 @@ fn main() -> anyhow::Result<()> {
 
     let data = generate(&DatasetSpec::higgs_like(rows), 17);
     let n = data.train.n_rows();
-    let cuts = HistogramCuts::from_dmatrix(&data.train.x, 256, None);
-    let qm = Quantizer::new(cuts.clone()).quantize(&data.train.x);
-    let cm = CompressedMatrix::from_quantized(&qm);
     let grads: Vec<GradPair> = (0..n)
         .map(|i| GradPair::new((i % 7) as f32 / 7.0 - 0.5, 1.0))
         .collect();
     let rows_all: Vec<u32> = (0..n as u32).collect();
-    let cells = (n * qm.row_stride) as f64;
+    let threads_sweep = [1usize, 2, 4, 8];
+    let modes = [KernelMode::Scalar, KernelMode::Blocked];
 
-    let mut t = Table::new(&["engine", "mean", "cells/s (M)", "GB/s (u32 equiv)"]);
-    let mut h = Histogram::zeros(qm.n_bins);
-
-    let r1 = runner.run("native/u32", || {
-        h = Histogram::zeros(qm.n_bins);
-        build_histogram_quantized(&qm, &grads, &rows_all, &mut h);
-    });
-    t.add_row(vec![
-        "native u32 bins".into(),
-        xgb_tpu::bench::fmt_secs(r1.mean_secs),
-        format!("{:.1}", cells / r1.mean_secs / 1e6),
-        format!("{:.2}", cells * 4.0 / r1.mean_secs / 1e9),
+    let mut cells_out: Vec<Cell> = Vec::new();
+    let mut t = Table::new(&[
+        "kernel",
+        "bins",
+        "bits",
+        "threads",
+        "mean",
+        "cells/s (M)",
+        "GB/s (u32 equiv)",
+        "speedup vs scalar",
     ]);
 
-    let r2 = runner.run("native/packed", || {
-        h = Histogram::zeros(qm.n_bins);
-        build_histogram_compressed(&cm, &grads, &rows_all, &mut h);
-    });
-    t.add_row(vec![
-        "native bit-packed (§2.2)".into(),
-        xgb_tpu::bench::fmt_secs(r2.mean_secs),
-        format!("{:.1}", cells / r2.mean_secs / 1e6),
-        format!("{:.2}", cells * 4.0 / r2.mean_secs / 1e9),
-    ]);
+    for max_bins in [16usize, 256] {
+        let cuts = HistogramCuts::from_dmatrix(&data.train.x, max_bins, None);
+        let qm = Quantizer::new(cuts.clone()).quantize(&data.train.x);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let cells = (n * qm.row_stride) as f64;
+        let bits = cm.symbol_bits;
+        eprintln!("max_bins={max_bins}: n_bins={} symbol_bits={bits}", qm.n_bins);
+
+        // spill once per width for the paged sweep
+        let dir = std::env::temp_dir().join(format!(
+            "xgb_tpu_bench_kernel_{}_{max_bins}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let mut pb = PagedMatrixBuilder::new(
+            dir.join("bench.pages"),
+            qm.n_rows,
+            qm.n_features,
+            qm.row_stride,
+            qm.n_bins,
+            qm.dense,
+            8192,
+            2,
+        )?;
+        for r in 0..qm.n_rows {
+            pb.push_row(qm.row(r))?;
+        }
+        let store = pb.finish()?;
+
+        for threads in threads_sweep {
+            let exec = ExecContext::new(threads);
+            let mut h = Histogram::zeros(qm.n_bins);
+            for builder in ["quantized", "compressed", "paged"] {
+                let mut scalar_mean = 0.0f64;
+                for mode in modes {
+                    let label =
+                        format!("{builder}/{}/bins{max_bins}/t{threads}", mode_name(mode));
+                    let res = match builder {
+                        "quantized" => runner.run(&label, || {
+                            h = Histogram::zeros(qm.n_bins);
+                            build_histogram_quantized_par_mode(
+                                &qm, &grads, &rows_all, &mut h, &exec, mode,
+                            );
+                        }),
+                        "compressed" => runner.run(&label, || {
+                            h = Histogram::zeros(qm.n_bins);
+                            build_histogram_compressed_par_mode(
+                                &cm, &grads, &rows_all, &mut h, &exec, mode,
+                            );
+                        }),
+                        _ => runner.run(&label, || {
+                            h = Histogram::zeros(qm.n_bins);
+                            build_histogram_paged_mode(
+                                &store, &grads, &rows_all, &mut h, &exec, mode,
+                            )
+                            .unwrap();
+                        }),
+                    };
+                    if mode == KernelMode::Scalar {
+                        scalar_mean = res.mean_secs;
+                    }
+                    let speedup = if mode == KernelMode::Scalar {
+                        1.0
+                    } else {
+                        scalar_mean / res.mean_secs
+                    };
+                    t.add_row(vec![
+                        format!("{builder}/{}", mode_name(mode)),
+                        format!("{max_bins}"),
+                        format!("{bits}"),
+                        format!("{threads}"),
+                        fmt_secs(res.mean_secs),
+                        format!("{:.1}", cells / res.mean_secs / 1e6),
+                        format!("{:.2}", cells * 4.0 / res.mean_secs / 1e9),
+                        format!("{speedup:.2}x"),
+                    ]);
+                    cells_out.push(Cell {
+                        builder,
+                        mode,
+                        threads,
+                        max_bins,
+                        symbol_bits: bits,
+                        mean_secs: res.mean_secs,
+                        cells_per_sec: cells / res.mean_secs,
+                        gb_per_sec: cells * 4.0 / res.mean_secs / 1e9,
+                    });
+                }
+            }
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     // XLA artifact path (correctness engine; tile-sized workload)
     if let Some(dir) = xgb_tpu::runtime::find_artifact_dir(None) {
@@ -67,24 +178,67 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let grads_tile: Vec<f32> = (0..m.hist_rows * 2).map(|i| (i % 3) as f32).collect();
         let tile_cells = (m.hist_rows * m.hist_slots) as f64;
-        let r3 = runner.run("xla/pallas-interpret", || {
+        let r = runner.run("xla/pallas-interpret", || {
             artifacts.histogram_tile(&bins_tile, &grads_tile, 0).unwrap()
         });
         t.add_row(vec![
-            "xla pallas kernel (interpret, correctness path)".into(),
-            xgb_tpu::bench::fmt_secs(r3.mean_secs),
-            format!("{:.2}", tile_cells / r3.mean_secs / 1e6),
+            "xla pallas (interpret, correctness path)".into(),
+            "-".into(),
+            "-".into(),
+            "1".into(),
+            fmt_secs(r.mean_secs),
+            format!("{:.2}", tile_cells / r.mean_secs / 1e6),
+            "-".into(),
             "-".into(),
         ]);
     } else {
         eprintln!("artifacts not built; skipping XLA row");
     }
 
-    println!("\n=== L1 histogram kernel throughput ===\n");
+    println!("\n=== L1 histogram kernel throughput (scalar vs blocked) ===\n");
     print!("{}", t.render());
-    println!(
-        "\npacked/unpacked ratio: {:.2}x (paper §2.2: \"no visible performance penalty\")",
-        r2.mean_secs / r1.mean_secs
-    );
+
+    // trajectory artifact: one record per sweep cell, speedup keyed
+    // against the scalar cell of the same (builder, threads, max_bins)
+    let out_path =
+        std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernel.json".to_string());
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"kernel_hist\",\n");
+    json.push_str(&format!("  \"rows\": {n},\n"));
+    json.push_str(&format!(
+        "  \"warmup\": {}, \"iters\": {},\n",
+        runner.warmup, runner.iters
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, c) in cells_out.iter().enumerate() {
+        let scalar = cells_out
+            .iter()
+            .find(|s| {
+                s.mode == KernelMode::Scalar
+                    && s.builder == c.builder
+                    && s.threads == c.threads
+                    && s.max_bins == c.max_bins
+            })
+            .expect("scalar baseline ran first");
+        json.push_str(&format!(
+            "    {{\"builder\": \"{}\", \"mode\": \"{}\", \"threads\": {}, \"max_bins\": {}, \
+             \"symbol_bits\": {}, \"mean_secs\": {:.6e}, \"cells_per_sec\": {:.6e}, \
+             \"gb_per_sec\": {:.4}, \"speedup_vs_scalar\": {:.4}}}{}\n",
+            c.builder,
+            mode_name(c.mode),
+            c.threads,
+            c.max_bins,
+            c.symbol_bits,
+            c.mean_secs,
+            c.cells_per_sec,
+            c.gb_per_sec,
+            scalar.mean_secs / c.mean_secs,
+            if i + 1 == cells_out.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    eprintln!("wrote {out_path}");
     Ok(())
 }

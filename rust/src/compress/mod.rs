@@ -8,6 +8,14 @@
 //! plus the null/padding symbol), with branch-free unpacking on the hot
 //! path and a streaming iterator used by the histogram builder.
 //!
+//! Decoding is centralised in [`unpack`]: a block decoder that reads each
+//! packed word once and emits its symbols via a shift cascade. The
+//! scalar per-symbol decoders (`symbol_scalar`,
+//! `for_each_symbol_in_row_scalar`) are kept as the independent reference
+//! implementation the parity tests compare against (and the
+//! `XGB_SCALAR_KERNELS=1` escape hatch runs on — see
+//! [`crate::exec::KernelMode`]).
+//!
 //! With 256 bins/feature and a few dozen features the symbol width is
 //! 10–15 bits vs 32 for the raw float (or u32 bin) representation — the
 //! "four times or more" memory reduction the paper reports, measured by
@@ -16,6 +24,7 @@
 use crate::quantile::QuantizedMatrix;
 
 pub mod page;
+pub mod unpack;
 
 /// Bit-packed ELLPACK matrix.
 #[derive(Debug, Clone)]
@@ -24,6 +33,9 @@ pub struct CompressedMatrix {
     words: Vec<u64>,
     /// Bits per symbol = ⌈log2(n_symbols)⌉.
     pub symbol_bits: u32,
+    /// `(1 << symbol_bits) - 1`, hoisted at construction so the decode
+    /// hot loops never recompute it.
+    mask: u64,
     pub n_rows: usize,
     pub n_features: usize,
     pub row_stride: usize,
@@ -36,6 +48,13 @@ pub struct CompressedMatrix {
 pub fn bits_for_symbols(n_symbols: usize) -> u32 {
     debug_assert!(n_symbols >= 1);
     usize::BITS - (n_symbols - 1).max(1).leading_zeros()
+}
+
+/// `(1 << symbol_bits) - 1` without overflow at the full word width.
+#[inline]
+fn symbol_mask(symbol_bits: u32) -> u64 {
+    debug_assert!((1..=64).contains(&symbol_bits));
+    u64::MAX >> (64 - symbol_bits)
 }
 
 impl CompressedMatrix {
@@ -59,6 +78,7 @@ impl CompressedMatrix {
         CompressedMatrix {
             words,
             symbol_bits,
+            mask: symbol_mask(symbol_bits),
             n_rows: qm.n_rows,
             n_features: qm.n_features,
             row_stride: qm.row_stride,
@@ -91,6 +111,7 @@ impl CompressedMatrix {
         CompressedMatrix {
             words,
             symbol_bits,
+            mask: symbol_mask(symbol_bits),
             n_rows,
             n_features,
             row_stride,
@@ -109,10 +130,20 @@ impl CompressedMatrix {
         self.n_bins as u32
     }
 
-    /// Unpack the symbol at flat index `i` (branchless u128 double-word
-    /// read — the §2.2 "unpacked at runtime using bitwise operations").
+    /// Unpack the symbol at flat index `i` (the §2.2 "unpacked at runtime
+    /// using bitwise operations") — a branch-free two-word read through
+    /// [`unpack::unpack_one`] with the construction-time mask.
     #[inline(always)]
     pub fn symbol(&self, i: usize) -> u32 {
+        unpack::unpack_one(&self.words, self.symbol_bits, self.mask, i)
+    }
+
+    /// Scalar reference decoder: the original u128 double-word window
+    /// reconstruction, kept verbatim as the implementation the block
+    /// decoder is tested against (and as the `XGB_SCALAR_KERNELS=1`
+    /// reference path).
+    #[inline(always)]
+    pub fn symbol_scalar(&self, i: usize) -> u32 {
         let bit = i as u64 * self.symbol_bits as u64;
         let word = (bit >> 6) as usize;
         let off = (bit & 63) as u32;
@@ -125,31 +156,34 @@ impl CompressedMatrix {
             )
         };
         let pair = lo as u128 | ((hi as u128) << 64);
-        let mask = (1u64 << self.symbol_bits) - 1;
-        ((pair >> off) as u64 & mask) as u32
+        ((pair >> off) as u64 & self.mask) as u32
     }
 
-    /// Decode the symbols of rows `[row, row+1)` streaming a running bit
-    /// cursor — the histogram hot loop's entry point. `f` receives each
-    /// slot's symbol in order.
-    #[inline(always)]
+    /// Decode the symbols of row `row` in slot order through the block
+    /// decoder (a small stack buffer amortises each word read across its
+    /// symbols). `f` receives each slot's symbol in order.
+    #[inline]
     pub fn for_each_symbol_in_row(&self, row: usize, mut f: impl FnMut(u32)) {
-        let bits = self.symbol_bits as u64;
-        let mask = (1u64 << self.symbol_bits) - 1;
-        let mut bit = (row * self.row_stride) as u64 * bits;
-        for _ in 0..self.row_stride {
-            let word = (bit >> 6) as usize;
-            let off = (bit & 63) as u32;
-            // Safety: pad word guarantees word + 1 in bounds.
-            let (lo, hi) = unsafe {
-                (
-                    *self.words.get_unchecked(word),
-                    *self.words.get_unchecked(word + 1),
-                )
-            };
-            let pair = lo as u128 | ((hi as u128) << 64);
-            f(((pair >> off) as u64 & mask) as u32);
-            bit += bits;
+        let mut buf = [0u32; 64];
+        let start = row * self.row_stride;
+        let mut done = 0usize;
+        while done < self.row_stride {
+            let n = (self.row_stride - done).min(buf.len());
+            unpack::unpack_block(&self.words, self.symbol_bits, self.mask, start + done, &mut buf[..n]);
+            for &s in &buf[..n] {
+                f(s);
+            }
+            done += n;
+        }
+    }
+
+    /// Scalar reference twin of [`for_each_symbol_in_row`](Self::for_each_symbol_in_row):
+    /// a running bit cursor with one u128 window per symbol.
+    #[inline]
+    pub fn for_each_symbol_in_row_scalar(&self, row: usize, mut f: impl FnMut(u32)) {
+        let base = row * self.row_stride;
+        for s in 0..self.row_stride {
+            f(self.symbol_scalar(base + s));
         }
     }
 
@@ -165,23 +199,42 @@ impl CompressedMatrix {
     }
 
     /// Decode an entire row into `out` (length `row_stride`), including
-    /// null symbols. The histogram hot loop uses this with a reusable
-    /// scratch buffer to amortise unpack overhead.
+    /// null symbols — one block-decode call over the row's contiguous
+    /// symbol range.
     #[inline]
     pub fn decode_row_into(&self, row: usize, out: &mut [u32]) {
         debug_assert_eq!(out.len(), self.row_stride);
-        let base = row * self.row_stride;
-        for (s, o) in out.iter_mut().enumerate() {
-            *o = self.symbol(base + s);
-        }
+        unpack::unpack_block(
+            &self.words,
+            self.symbol_bits,
+            self.mask,
+            row * self.row_stride,
+            out,
+        );
+    }
+
+    /// Decode `n_rows` **consecutive** rows starting at `first_row` into
+    /// `out` (length `n_rows * row_stride`) — consecutive rows form one
+    /// contiguous symbol range, so the whole block is a single shift-
+    /// cascade pass. The blocked prediction kernels decode
+    /// [`crate::exec::BLOCK_ROWS`]-row groups through this.
+    #[inline]
+    pub fn decode_rows_block(&self, first_row: usize, n_rows: usize, out: &mut [u32]) {
+        debug_assert!(first_row + n_rows <= self.n_rows);
+        debug_assert_eq!(out.len(), n_rows * self.row_stride);
+        unpack::unpack_block(
+            &self.words,
+            self.symbol_bits,
+            self.mask,
+            first_row * self.row_stride,
+            out,
+        );
     }
 
     /// Fully decode back to a [`QuantizedMatrix`] (tests / parity checks).
     pub fn decode(&self) -> QuantizedMatrix {
         let mut bins = vec![0u32; self.n_rows * self.row_stride];
-        for (i, b) in bins.iter_mut().enumerate() {
-            *b = self.symbol(i);
-        }
+        unpack::unpack_block(&self.words, self.symbol_bits, self.mask, 0, &mut bins);
         QuantizedMatrix {
             bins,
             n_rows: self.n_rows,
@@ -326,6 +379,7 @@ impl CompressedMatrixBuilder {
         CompressedMatrix {
             words: self.words,
             symbol_bits: self.symbol_bits,
+            mask: symbol_mask(self.symbol_bits),
             n_rows: self.n_rows,
             n_features: self.n_features,
             row_stride: self.row_stride,
@@ -545,6 +599,47 @@ mod tests {
         assert_eq!(cm.symbol_bits, 13);
         for (i, &b) in bins.iter().enumerate() {
             assert_eq!(cm.symbol(i), b, "index {i}");
+        }
+    }
+
+    #[test]
+    fn block_decoder_matches_scalar_reference() {
+        // the dedup contract: every routed decoder (symbol /
+        // for_each_symbol_in_row / decode_row_into / decode_rows_block)
+        // agrees with the kept scalar u128 reference, across widths that
+        // exercise both the shift cascade and the straddle path
+        for (max_bins, seed) in [(4usize, 21u64), (16, 22), (256, 23)] {
+            let qm = random_quantized(97, 9, max_bins, seed);
+            let cm = CompressedMatrix::from_quantized(&qm);
+            for i in 0..qm.n_rows * qm.row_stride {
+                assert_eq!(cm.symbol(i), cm.symbol_scalar(i), "flat index {i}");
+            }
+            let mut via_scalar = Vec::new();
+            let mut via_block = Vec::new();
+            for r in 0..qm.n_rows {
+                cm.for_each_symbol_in_row_scalar(r, |s| via_scalar.push(s));
+                cm.for_each_symbol_in_row(r, |s| via_block.push(s));
+            }
+            assert_eq!(via_block, via_scalar);
+            assert_eq!(via_block, qm.bins);
+        }
+    }
+
+    #[test]
+    fn decode_rows_block_matches_per_row_decode() {
+        let qm = random_quantized(131, 7, 32, 29);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let stride = cm.row_stride;
+        let mut rowbuf = vec![0u32; stride];
+        // block sizes straddling every alignment, incl. the full matrix
+        for (first, n) in [(0usize, 1usize), (0, 64), (1, 63), (63, 65), (130, 1), (0, 131)] {
+            let mut block = vec![0u32; n * stride];
+            cm.decode_rows_block(first, n, &mut block);
+            for (j, r) in (first..first + n).enumerate() {
+                cm.decode_row_into(r, &mut rowbuf);
+                assert_eq!(&block[j * stride..(j + 1) * stride], &rowbuf[..], "row {r}");
+                assert_eq!(&rowbuf[..], qm.row(r), "row {r} vs source");
+            }
         }
     }
 }

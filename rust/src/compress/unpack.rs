@@ -1,0 +1,167 @@
+//! Multi-symbol block decoder for the bit-packed symbol stream — the
+//! §2.2 "unpacked at runtime using bitwise operations" hot path,
+//! restructured for data-level parallelism.
+//!
+//! The scalar decoder ([`super::CompressedMatrix::symbol_scalar`])
+//! re-derives a bit cursor and reassembles a u128 double-word window per
+//! symbol. This module instead reads each 64-bit word **once** and emits
+//! all `floor(64 / symbol_bits)` symbols it fully contains via a shift
+//! cascade (`cur >>= bits; cur & mask` — plain u64 ops the compiler can
+//! unroll and keep in registers), falling back to a two-word remainder
+//! path only for the one symbol per word that may straddle the boundary.
+//! For 8-bit symbols that is one word load + 8 shift/mask pairs instead
+//! of 8 independent u128 reconstructions.
+//!
+//! Both entry points require the packing invariant every constructor in
+//! [`super`] maintains: `words` carries one trailing pad word, so reading
+//! `words[word + 1]` is in bounds for every valid symbol index.
+
+/// Decode `out.len()` consecutive symbols starting at flat symbol index
+/// `start` into `out`. `mask == (1 << symbol_bits) - 1` (hoisted by the
+/// caller; [`super::CompressedMatrix`] stores it at construction).
+///
+/// Exactly equivalent to `out[i] = unpack_one(words, bits, mask,
+/// start + i)` — pinned by the tests below and by the cross-width
+/// property test in `rust/tests/prop_invariants.rs`.
+pub fn unpack_block(words: &[u64], symbol_bits: u32, mask: u64, start: usize, out: &mut [u32]) {
+    debug_assert!(symbol_bits >= 1 && symbol_bits <= 32);
+    debug_assert!(
+        out.is_empty()
+            || (start + out.len()) as u64 * symbol_bits as u64 <= (words.len() as u64 - 1) * 64,
+        "symbol range must fit the padded word stream"
+    );
+    let bits = symbol_bits as u64;
+    let mut bit = start as u64 * bits;
+    let mut i = 0usize;
+    while i < out.len() {
+        let word = (bit >> 6) as usize;
+        let off = (bit & 63) as u32;
+        let avail = 64 - off;
+        let lo = words[word] >> off;
+        let n_full = (avail / symbol_bits) as usize;
+        if n_full == 0 {
+            // Straddle: `avail ∈ [1, 63]` low bits of the symbol sit at
+            // the top of this word, the rest at the bottom of the next
+            // (the pad word guarantees `word + 1` is in bounds).
+            out[i] = ((lo | (words[word + 1] << avail)) & mask) as u32;
+            i += 1;
+            bit += bits;
+            continue;
+        }
+        // Shift cascade: every symbol fully inside this word, one shift +
+        // mask each, no second word touched.
+        let n = n_full.min(out.len() - i);
+        let mut cur = lo;
+        for o in &mut out[i..i + n] {
+            *o = (cur & mask) as u32;
+            cur >>= symbol_bits;
+        }
+        i += n;
+        bit += n as u64 * bits;
+    }
+}
+
+/// Random-access single-symbol unpack via a branch-free two-word read —
+/// no u128: the high word contributes `(hi << 1) << (63 - off)`, which is
+/// `hi << (64 - off)` for `off ≥ 1` and exactly 0 for `off == 0`, so the
+/// shift amount never reaches 64.
+#[inline(always)]
+pub fn unpack_one(words: &[u64], symbol_bits: u32, mask: u64, i: usize) -> u32 {
+    let bit = i as u64 * symbol_bits as u64;
+    let word = (bit >> 6) as usize;
+    let off = (bit & 63) as u32;
+    // Safety: every constructor pads the stream with one trailing word,
+    // so `word + 1` is in bounds for every valid symbol index.
+    let (lo, hi) = unsafe { (*words.get_unchecked(word), *words.get_unchecked(word + 1)) };
+    (((lo >> off) | ((hi << 1) << (63 - off))) & mask) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Reference: gather the symbol's bits one at a time.
+    fn bit_gather(words: &[u64], bits: u32, i: usize) -> u32 {
+        let mut v = 0u64;
+        for b in 0..bits as u64 {
+            let pos = i as u64 * bits as u64 + b;
+            let w = (pos / 64) as usize;
+            let o = pos % 64;
+            v |= ((words[w] >> o) & 1) << b;
+        }
+        v as u32
+    }
+
+    fn pack(symbols: &[u32], bits: u32) -> Vec<u64> {
+        let total_bits = symbols.len() as u64 * bits as u64;
+        let mut words = vec![0u64; total_bits.div_ceil(64) as usize + 1];
+        for (i, &sym) in symbols.iter().enumerate() {
+            let bit = i as u64 * bits as u64;
+            let word = (bit / 64) as usize;
+            let off = (bit % 64) as u32;
+            words[word] |= (sym as u64) << off;
+            if off + bits > 64 {
+                words[word + 1] |= (sym as u64) >> (64 - off);
+            }
+        }
+        words
+    }
+
+    #[test]
+    fn one_and_block_match_reference_across_widths() {
+        let mut rng = Pcg64::new(42);
+        for bits in [1u32, 3, 5, 8, 9, 13, 17, 20, 31, 32] {
+            let mask = ((1u128 << bits) - 1) as u64;
+            let n = 500;
+            let symbols: Vec<u32> =
+                (0..n).map(|_| (rng.next_u64() & mask) as u32).collect();
+            let words = pack(&symbols, bits);
+            for (i, &want) in symbols.iter().enumerate() {
+                assert_eq!(unpack_one(&words, bits, mask, i), want, "bits={bits} i={i}");
+                assert_eq!(bit_gather(&words, bits, i), want, "reference self-check");
+            }
+            let mut out = vec![0u32; n];
+            unpack_block(&words, bits, mask, 0, &mut out);
+            assert_eq!(out, symbols, "bits={bits} full-stream block");
+        }
+    }
+
+    #[test]
+    fn block_decode_at_odd_starts_and_lengths() {
+        let mut rng = Pcg64::new(7);
+        for bits in [5u32, 9, 13] {
+            let mask = (1u64 << bits) - 1;
+            let symbols: Vec<u32> =
+                (0..300).map(|_| (rng.next_u64() & mask) as u32).collect();
+            let words = pack(&symbols, bits);
+            for start in [0usize, 1, 4, 12, 63, 64, 65, 127, 200] {
+                for len in [0usize, 1, 2, 7, 8, 9, 64, 100] {
+                    if start + len > symbols.len() {
+                        continue;
+                    }
+                    let mut out = vec![u32::MAX; len];
+                    unpack_block(&words, bits, mask, start, &mut out);
+                    assert_eq!(
+                        out,
+                        &symbols[start..start + len],
+                        "bits={bits} start={start} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn straddle_path_exercised_every_offset() {
+        // 13-bit symbols cycle through all 64 phase offsets every 64
+        // symbols, hitting the straddle remainder path repeatedly
+        let bits = 13u32;
+        let mask = (1u64 << bits) - 1;
+        let symbols: Vec<u32> = (0..256).map(|i| (i * 31 + 7) as u32 & mask as u32).collect();
+        let words = pack(&symbols, bits);
+        let mut out = vec![0u32; symbols.len()];
+        unpack_block(&words, bits, mask, 0, &mut out);
+        assert_eq!(out, symbols);
+    }
+}

@@ -64,7 +64,14 @@ pub trait ParallelHistBackend: Send + Sync {
     ) -> Result<()>;
 }
 
-/// Pure-Rust histogram backend (also the `xgb-cpu-hist` baseline's engine).
+/// Pure-Rust histogram backend (also the `xgb-cpu-hist` baseline's
+/// engine). Dispatches to the blocked, branchless kernels of
+/// [`crate::hist`] by default (block symbol decode + null-scratch-slot
+/// accumulation — see that module's docs); `XGB_SCALAR_KERNELS=1`
+/// selects the row-at-a-time scalar reference. Both modes are
+/// bit-identical, so the coordinator's determinism contract (same
+/// result at every device count / thread count / page budget) is
+/// unaffected by the kernel choice.
 #[derive(Debug, Default, Clone)]
 pub struct NativeBackend;
 

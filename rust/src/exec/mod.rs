@@ -45,6 +45,54 @@ use std::sync::Mutex;
 /// reduction order fixed (see module docs).
 pub const ROW_CHUNK: usize = 8192;
 
+/// Rows per traversal block inside a `ROW_CHUNK`: a block of rows walks
+/// one tree (level-synchronously) before the next tree runs, keeping the
+/// tree's hot top levels in cache across the block. Interchanging *which
+/// row traverses next* never reorders any single row's `+=` chain, so
+/// blocked traversal is bit-identical to row-at-a-time (proved out by
+/// `serve/flat.rs::predict_margins`, now shared by the quantised
+/// prediction kernels in `predict/quantised.rs`).
+pub const BLOCK_ROWS: usize = 64;
+
+/// Rows per histogram micro-block: gradients are pre-converted to f64
+/// and packed symbols block-decoded `HIST_BLOCK_ROWS` rows at a time
+/// before the accumulation loop runs. Strictly smaller than `ROW_CHUNK`
+/// and always applied *inside* one chunk, so the f64 accumulation order
+/// is untouched (see `hist/mod.rs` module docs).
+pub const HIST_BLOCK_ROWS: usize = 8;
+
+/// Which inner-loop implementation the hot kernels run: the blocked,
+/// branchless kernels (default) or the original scalar loops kept as the
+/// bit-parity reference. Selected once per process from the
+/// `XGB_SCALAR_KERNELS` env var (`1`/any non-empty value other than `0`
+/// selects `Scalar`); benches and the property tests bypass the env and
+/// pass a mode explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Block-decoded, branchless kernels (`hist`/`predict` hot loops).
+    Blocked,
+    /// The original row-at-a-time scalar loops — the reference the
+    /// blocked kernels are pinned bit-identical to.
+    Scalar,
+}
+
+impl KernelMode {
+    /// The process-wide mode (env read once, then cached).
+    pub fn from_env() -> KernelMode {
+        static SCALAR: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        let scalar = *SCALAR.get_or_init(|| {
+            std::env::var("XGB_SCALAR_KERNELS")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false)
+        });
+        if scalar {
+            KernelMode::Scalar
+        } else {
+            KernelMode::Blocked
+        }
+    }
+}
+
 /// A thread budget for the parallel primitives. Cheap to clone/copy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecContext {

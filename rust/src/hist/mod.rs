@@ -32,12 +32,39 @@
 //! input, `build_histogram_*` and `build_histogram_*_par` agree **bit
 //! for bit** at every thread count; the parallel variants only change
 //! which OS thread computes each chunk.
+//!
+//! ## Blocked kernels and the null-scratch-slot trick
+//!
+//! Inside one chunk, the default [`crate::exec::KernelMode::Blocked`]
+//! kernels process rows in [`crate::exec::HIST_BLOCK_ROWS`]-row blocks:
+//! the block's `GradPair`s are converted to f64 **once** up front (the
+//! scalar loop runs `GradPairF64::from_single` per row per node per
+//! round) and packed symbols are block-decoded into a small scratch
+//! buffer through `compress::unpack` (each packed word read once, its
+//! symbols emitted by a shift cascade). The inner accumulation replaces
+//! the scalar `if b < null` branch with mask arithmetic: every partial
+//! histogram carries **one extra scratch slot** at index `n_bins`, the
+//! null symbol's own index, and each symbol adds at `min(b, n_bins)` —
+//! unconditionally in bounds (packed symbols are ≤ null by
+//! construction), with null/padding gradients landing in the scratch
+//! slot, which the chunk merge simply discards.
+//!
+//! **Bit-parity argument.** Blocking batches only non-floating-point
+//! work — symbol decode and the one-time gradient conversion. The f64
+//! adds into any given bin still happen strictly in row order within the
+//! chunk (the block passes iterate rows in sequence), and partials still
+//! fold in ascending chunk order, so the bracketing of every f64 sum is
+//! *unchanged* from the scalar reference: `KernelMode::Scalar` (env knob
+//! `XGB_SCALAR_KERNELS=1`) and `KernelMode::Blocked` agree bit for bit
+//! at every thread count, page size and budget. Pinned by the
+//! cross-width property test in `rust/tests/prop_invariants.rs` and the
+//! `ci.sh` checksum smoke.
 
 use anyhow::Result;
 
 use crate::compress::page::{PageHandle, PageStore};
 use crate::compress::CompressedMatrix;
-use crate::exec::{ExecContext, ROW_CHUNK};
+use crate::exec::{ExecContext, KernelMode, HIST_BLOCK_ROWS, ROW_CHUNK};
 use crate::quantile::QuantizedMatrix;
 use crate::GradPair;
 
@@ -110,13 +137,14 @@ impl Histogram {
         self.bins.fill(GradPairF64::default());
     }
 
-    /// Total gradient sum over one feature's bin range.
+    /// Total gradient sum over one feature's bin range. The range is
+    /// validated once by the subslice; the fold then iterates without
+    /// any per-element bounds re-check (same add order as before, so
+    /// split evaluation is bit-unchanged).
     pub fn feature_sum(&self, lo: usize, hi: usize) -> GradPairF64 {
-        let mut s = GradPairF64::default();
-        for b in &self.bins[lo..hi] {
-            s += *b;
-        }
-        s
+        self.bins[lo..hi]
+            .iter()
+            .fold(GradPairF64::default(), |acc, b| acc + *b)
     }
 
     /// `self = other − self` — the subtraction trick, computing this
@@ -167,17 +195,19 @@ pub fn subtract(parent: &Histogram, child: &Histogram) -> Histogram {
     out
 }
 
-/// Inner kernel over the uncompressed quantised matrix: sum one chunk of
-/// rows into `out` in row order.
-fn accumulate_quantized(
+/// Scalar reference kernel over the uncompressed quantised matrix: sum
+/// one chunk of rows in row order, one branchy add per symbol. Kept as
+/// the `KernelMode::Scalar` path the blocked kernel is pinned against.
+/// `bins` is the scratch-extended partial (`n_bins + 1` slots); the
+/// scalar loop never touches the scratch slot.
+fn accumulate_quantized_scalar(
     qm: &QuantizedMatrix,
     gradients: &[GradPair],
     rows: &[u32],
-    out: &mut Histogram,
+    bins: &mut [GradPairF64],
 ) {
     let null = qm.null_symbol();
     let stride = qm.row_stride;
-    let bins = &mut out.bins[..];
     for &r in rows {
         let r = r as usize;
         let g = GradPairF64::from_single(gradients[r]);
@@ -186,70 +216,150 @@ fn accumulate_quantized(
             // `b < null == n_bins` is the validity test AND the bounds
             // proof (quantizer guarantees symbols <= null).
             if b < null {
-                // Safety: b < n_bins == bins.len(), checked above.
+                // Safety: b < n_bins < bins.len(), checked above.
                 unsafe { *bins.get_unchecked_mut(b as usize) += g };
             }
         }
     }
 }
 
-/// Inner kernel over the bit-packed compressed matrix — the paper's §2.2
-/// "values are packed and unpacked at runtime using bitwise operations"
-/// path. Unpacks inline; no scratch decode buffer.
-fn accumulate_compressed(
+/// Blocked, branchless kernel over the uncompressed quantised matrix
+/// (module docs): per `HIST_BLOCK_ROWS` block, convert the gradients to
+/// f64 once, then add every symbol at `min(b, n_bins)` — nulls land in
+/// the scratch slot, real bins in place, no branch in the inner loop.
+/// The f64 adds stay strictly row-sequential, so the result is
+/// bit-identical to [`accumulate_quantized_scalar`].
+fn accumulate_quantized_blocked(
+    qm: &QuantizedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    bins: &mut [GradPairF64],
+) {
+    let scratch = bins.len() - 1; // == qm.n_bins, the null symbol's slot
+    let stride = qm.row_stride;
+    let mut g = [GradPairF64::default(); HIST_BLOCK_ROWS];
+    for block in rows.chunks(HIST_BLOCK_ROWS) {
+        for (gj, &r) in g.iter_mut().zip(block) {
+            *gj = GradPairF64::from_single(gradients[r as usize]);
+        }
+        for (j, &r) in block.iter().enumerate() {
+            let r = r as usize;
+            let gj = g[j];
+            for &b in &qm.bins[r * stride..(r + 1) * stride] {
+                let idx = (b as usize).min(scratch);
+                // Safety: idx <= scratch < bins.len() by the min above.
+                unsafe { *bins.get_unchecked_mut(idx) += gj };
+            }
+        }
+    }
+}
+
+/// Scalar reference kernel over the bit-packed compressed matrix — the
+/// original per-symbol u128 cursor decode plus the branchy add; the
+/// `KernelMode::Scalar` path.
+fn accumulate_compressed_scalar(
     cm: &CompressedMatrix,
     gradients: &[GradPair],
     rows: &[u32],
-    out: &mut Histogram,
+    bins: &mut [GradPairF64],
 ) {
     let null = cm.null_symbol();
-    let bins = &mut out.bins[..];
-    let n_bins = bins.len() as u32;
+    let n_bins = bins.len() as u32 - 1;
     for &r in rows {
         let r = r as usize;
         let g = GradPairF64::from_single(gradients[r]);
-        cm.for_each_symbol_in_row(r, |b| {
+        cm.for_each_symbol_in_row_scalar(r, |b| {
             // the packed mask can exceed n_bins, so `b < n_bins` (== null)
             // is both the null/padding filter and the bounds proof
             debug_assert!(b <= null);
             if b < n_bins {
-                // Safety: b < bins.len(), checked above.
+                // Safety: b < n_bins < bins.len(), checked above.
                 unsafe { *bins.get_unchecked_mut(b as usize) += g };
             }
         });
+    }
+}
+
+/// Blocked, branchless kernel over the bit-packed compressed matrix —
+/// the paper's §2.2 "packed and unpacked at runtime using bitwise
+/// operations" path restructured for data-level parallelism: each
+/// `HIST_BLOCK_ROWS` block decodes its rows through the multi-symbol
+/// shift-cascade decoder into a scratch buffer (each packed word read
+/// once) and converts its gradients once, then the branchless
+/// `min(b, n_bins)` accumulation runs over the decoded symbols in row
+/// order. Bit-identical to [`accumulate_compressed_scalar`].
+fn accumulate_compressed_blocked(
+    cm: &CompressedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    bins: &mut [GradPairF64],
+) {
+    let scratch = bins.len() - 1; // == cm.n_bins, the null symbol's slot
+    let stride = cm.row_stride;
+    let mut g = [GradPairF64::default(); HIST_BLOCK_ROWS];
+    let mut sym = vec![0u32; HIST_BLOCK_ROWS * stride];
+    for block in rows.chunks(HIST_BLOCK_ROWS) {
+        for (j, &r) in block.iter().enumerate() {
+            g[j] = GradPairF64::from_single(gradients[r as usize]);
+            cm.decode_row_into(r as usize, &mut sym[j * stride..(j + 1) * stride]);
+        }
+        for j in 0..block.len() {
+            let gj = g[j];
+            for &b in &sym[j * stride..(j + 1) * stride] {
+                let idx = (b as usize).min(scratch);
+                // Safety: idx <= scratch < bins.len() by the min above.
+                unsafe { *bins.get_unchecked_mut(idx) += gj };
+            }
+        }
+    }
+}
+
+/// Fold the real bins of a scratch-extended partial into `out` in
+/// ascending bin order; the trailing null-scratch slot is discarded
+/// (`zip` stops at `out.bins.len()`).
+fn fold_partial(out: &mut Histogram, partial: &[GradPairF64]) {
+    debug_assert_eq!(partial.len(), out.bins.len() + 1);
+    for (o, p) in out.bins.iter_mut().zip(partial.iter()) {
+        *o += *p;
     }
 }
 
 /// The canonical fixed-chunk accumulation shared by every builder (see
 /// module docs): identical bracketing whether chunks run inline or on the
-/// pool, so results are bit-identical at every thread count.
-fn chunked_build<F>(rows: &[u32], out: &mut Histogram, exec: &ExecContext, accumulate: F)
+/// pool, so results are bit-identical at every thread count. Every chunk
+/// accumulates into a zeroed scratch-extended partial (`n_bins + 1`
+/// slots — the extra slot is the blocked kernels' null scratch; the
+/// scalar kernels simply never touch it) whose real bins fold into `out`
+/// in ascending chunk order. Starting every f64 chain at `+0.0` keeps
+/// the fold bit-exact: a chain seeded at `+0.0` can never produce
+/// `-0.0`, and `+0.0 + x == x` bitwise for every such `x`.
+fn chunked_build<F>(n_bins: usize, rows: &[u32], out: &mut Histogram, exec: &ExecContext, accumulate: F)
 where
-    F: Fn(&[u32], &mut Histogram) + Sync,
+    F: Fn(&[u32], &mut [GradPairF64]) + Sync,
 {
+    let width = n_bins + 1;
     if rows.len() <= ROW_CHUNK {
-        // single chunk: summing into the zeroed `out` is the same
-        // bracketing as partial-then-add
-        accumulate(rows, out);
+        let mut partial = vec![GradPairF64::default(); width];
+        accumulate(rows, &mut partial);
+        fold_partial(out, &partial);
         return;
     }
     if exec.threads() <= 1 {
-        let mut partial = Histogram::zeros(out.n_bins());
+        let mut partial = vec![GradPairF64::default(); width];
         for chunk in rows.chunks(ROW_CHUNK) {
-            partial.reset();
+            partial.fill(GradPairF64::default());
             accumulate(chunk, &mut partial);
-            out.add(&partial);
+            fold_partial(out, &partial);
         }
     } else {
-        let n_bins = out.n_bins();
         let partials = exec.map_chunks(rows.len(), ROW_CHUNK, |_, r| {
-            let mut h = Histogram::zeros(n_bins);
-            accumulate(&rows[r], &mut h);
-            h
+            let mut p = vec![GradPairF64::default(); width];
+            accumulate(&rows[r], &mut p);
+            p
         });
         // merge in ascending chunk index — the determinism contract
         for p in &partials {
-            out.add(p);
+            fold_partial(out, p);
         }
     }
 }
@@ -268,7 +378,8 @@ pub fn build_histogram_quantized(
 
 /// Chunk-parallel histogram builder over the uncompressed quantised
 /// matrix — bit-identical to [`build_histogram_quantized`] at every
-/// thread count.
+/// thread count. Kernel mode comes from the environment
+/// (`XGB_SCALAR_KERNELS`, read once); both modes are bit-identical.
 pub fn build_histogram_quantized_par(
     qm: &QuantizedMatrix,
     gradients: &[GradPair],
@@ -276,10 +387,28 @@ pub fn build_histogram_quantized_par(
     out: &mut Histogram,
     exec: &ExecContext,
 ) {
+    build_histogram_quantized_par_mode(qm, gradients, rows, out, exec, KernelMode::from_env());
+}
+
+/// [`build_histogram_quantized_par`] with an explicit [`KernelMode`] —
+/// lets benches and parity tests compare Blocked vs Scalar in-process.
+pub fn build_histogram_quantized_par_mode(
+    qm: &QuantizedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+    mode: KernelMode,
+) {
     assert_eq!(out.n_bins(), qm.n_bins);
-    chunked_build(rows, out, exec, |chunk, h| {
-        accumulate_quantized(qm, gradients, chunk, h)
-    });
+    match mode {
+        KernelMode::Blocked => chunked_build(qm.n_bins, rows, out, exec, |chunk, bins| {
+            accumulate_quantized_blocked(qm, gradients, chunk, bins)
+        }),
+        KernelMode::Scalar => chunked_build(qm.n_bins, rows, out, exec, |chunk, bins| {
+            accumulate_quantized_scalar(qm, gradients, chunk, bins)
+        }),
+    }
 }
 
 /// Histogram builder over the bit-packed compressed matrix (§2.2).
@@ -294,7 +423,8 @@ pub fn build_histogram_compressed(
 
 /// Chunk-parallel histogram builder over the bit-packed compressed
 /// matrix — bit-identical to [`build_histogram_compressed`] at every
-/// thread count.
+/// thread count. Kernel mode comes from the environment
+/// (`XGB_SCALAR_KERNELS`, read once); both modes are bit-identical.
 pub fn build_histogram_compressed_par(
     cm: &CompressedMatrix,
     gradients: &[GradPair],
@@ -302,50 +432,106 @@ pub fn build_histogram_compressed_par(
     out: &mut Histogram,
     exec: &ExecContext,
 ) {
-    assert_eq!(out.n_bins(), cm.n_bins);
-    chunked_build(rows, out, exec, |chunk, h| {
-        accumulate_compressed(cm, gradients, chunk, h)
-    });
+    build_histogram_compressed_par_mode(cm, gradients, rows, out, exec, KernelMode::from_env());
 }
 
-/// Accumulate one fixed chunk of `rows` from spilled pages, fetching
-/// pages through `fetch` as the walk crosses page boundaries. The
-/// per-row arithmetic is identical to [`accumulate_compressed`] (each
-/// page *is* a `CompressedMatrix` over its row slice), so only the source
-/// of the packed words differs from the in-memory path. The previous
-/// page is dropped **before** the next is fetched, which is what keeps
-/// the prefetch pipeline inside the `max_resident_pages` budget.
+/// [`build_histogram_compressed_par`] with an explicit [`KernelMode`] —
+/// lets benches and parity tests compare Blocked vs Scalar in-process.
+pub fn build_histogram_compressed_par_mode(
+    cm: &CompressedMatrix,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+    mode: KernelMode,
+) {
+    assert_eq!(out.n_bins(), cm.n_bins);
+    match mode {
+        KernelMode::Blocked => chunked_build(cm.n_bins, rows, out, exec, |chunk, bins| {
+            accumulate_compressed_blocked(cm, gradients, chunk, bins)
+        }),
+        KernelMode::Scalar => chunked_build(cm.n_bins, rows, out, exec, |chunk, bins| {
+            accumulate_compressed_scalar(cm, gradients, chunk, bins)
+        }),
+    }
+}
+
+/// Accumulate one fixed chunk of `rows` from spilled pages into a
+/// scratch-extended partial, fetching pages through `fetch` as the walk
+/// crosses page boundaries. The per-row arithmetic matches the in-memory
+/// compressed kernels (each page *is* a `CompressedMatrix` over its row
+/// slice), so only the source of the packed words differs. Page fetch
+/// order is a pure function of the row list in both modes — the blocked
+/// variant resolves each row's page before decoding it, in row order —
+/// so prefetch scheduling and the residency budget are unaffected by
+/// `mode`. The previous page is dropped **before** the next is fetched,
+/// which is what keeps the pipeline inside `max_resident_pages`.
 fn accumulate_paged_chunk<F>(
     store: &PageStore,
     gradients: &[GradPair],
     chunk: &[u32],
-    out: &mut Histogram,
+    bins: &mut [GradPairF64],
     current: &mut Option<PageHandle>,
     fetch: &mut F,
+    mode: KernelMode,
 ) -> Result<()>
 where
     F: FnMut(usize) -> Result<PageHandle>,
 {
-    let bins = &mut out.bins[..];
-    let n_bins = bins.len() as u32;
-    for &r in chunk {
-        let r = r as usize;
-        let want = store.page_of_row(r);
-        if current.as_ref().map(|p| p.index) != Some(want) {
-            *current = None; // release before fetching: stay inside budget
-            *current = Some(fetch(want)?);
-        }
-        let page = current.as_ref().expect("page fetched above");
-        let local = r - page.first_row;
-        let g = GradPairF64::from_single(gradients[r]);
-        page.matrix.for_each_symbol_in_row(local, |b| {
-            // `b < n_bins` (== null symbol) is the padding filter and the
-            // bounds proof, exactly as in `accumulate_compressed`
-            if b < n_bins {
-                // Safety: b < bins.len(), checked above.
-                unsafe { *bins.get_unchecked_mut(b as usize) += g };
+    let n_bins = bins.len() as u32 - 1;
+    match mode {
+        KernelMode::Scalar => {
+            for &r in chunk {
+                let r = r as usize;
+                let want = store.page_of_row(r);
+                if current.as_ref().map(|p| p.index) != Some(want) {
+                    *current = None; // release before fetching: stay inside budget
+                    *current = Some(fetch(want)?);
+                }
+                let page = current.as_ref().expect("page fetched above");
+                let local = r - page.first_row;
+                let g = GradPairF64::from_single(gradients[r]);
+                page.matrix.for_each_symbol_in_row_scalar(local, |b| {
+                    // `b < n_bins` (== null symbol) is the padding filter
+                    // and the bounds proof
+                    if b < n_bins {
+                        // Safety: b < n_bins < bins.len(), checked above.
+                        unsafe { *bins.get_unchecked_mut(b as usize) += g };
+                    }
+                });
             }
-        });
+        }
+        KernelMode::Blocked => {
+            let scratch = bins.len() - 1;
+            let stride = store.shape.row_stride;
+            let mut g = [GradPairF64::default(); HIST_BLOCK_ROWS];
+            let mut sym = vec![0u32; HIST_BLOCK_ROWS * stride];
+            for block in chunk.chunks(HIST_BLOCK_ROWS) {
+                // pass 1 (row order): resolve pages, convert gradients,
+                // block-decode each row's symbols from its page
+                for (j, &r) in block.iter().enumerate() {
+                    let r = r as usize;
+                    let want = store.page_of_row(r);
+                    if current.as_ref().map(|p| p.index) != Some(want) {
+                        *current = None;
+                        *current = Some(fetch(want)?);
+                    }
+                    let page = current.as_ref().expect("page fetched above");
+                    g[j] = GradPairF64::from_single(gradients[r]);
+                    page.matrix
+                        .decode_row_into(r - page.first_row, &mut sym[j * stride..(j + 1) * stride]);
+                }
+                // pass 2 (row order): branchless accumulate from scratch
+                for j in 0..block.len() {
+                    let gj = g[j];
+                    for &b in &sym[j * stride..(j + 1) * stride] {
+                        let idx = (b as usize).min(scratch);
+                        // Safety: idx <= scratch < bins.len() by the min.
+                        unsafe { *bins.get_unchecked_mut(idx) += gj };
+                    }
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -353,7 +539,7 @@ where
 /// Drive the canonical fixed-chunk bracketing over spilled pages: chunk
 /// boundaries are `ROW_CHUNK` positions in the `rows` list (the same pure
 /// function of the row count the in-memory builders use — **never** a
-/// function of the page size), partials merge in ascending chunk index,
+/// function of the page size), partials fold in ascending chunk index,
 /// and pages are fetched in first-use order as the walk advances.
 fn paged_chunked_build<F>(
     store: &PageStore,
@@ -361,19 +547,23 @@ fn paged_chunked_build<F>(
     rows: &[u32],
     out: &mut Histogram,
     fetch: &mut F,
+    mode: KernelMode,
 ) -> Result<()>
 where
     F: FnMut(usize) -> Result<PageHandle>,
 {
+    let width = out.n_bins() + 1;
     let mut current: Option<PageHandle> = None;
+    let mut partial = vec![GradPairF64::default(); width];
     if rows.len() <= ROW_CHUNK {
-        return accumulate_paged_chunk(store, gradients, rows, out, &mut current, fetch);
+        accumulate_paged_chunk(store, gradients, rows, &mut partial, &mut current, fetch, mode)?;
+        fold_partial(out, &partial);
+        return Ok(());
     }
-    let mut partial = Histogram::zeros(out.n_bins());
     for chunk in rows.chunks(ROW_CHUNK) {
-        partial.reset();
-        accumulate_paged_chunk(store, gradients, chunk, &mut partial, &mut current, fetch)?;
-        out.add(&partial);
+        partial.fill(GradPairF64::default());
+        accumulate_paged_chunk(store, gradients, chunk, &mut partial, &mut current, fetch, mode)?;
+        fold_partial(out, &partial);
     }
     Ok(())
 }
@@ -403,6 +593,19 @@ pub fn build_histogram_paged(
     out: &mut Histogram,
     exec: &ExecContext,
 ) -> Result<()> {
+    build_histogram_paged_mode(store, gradients, rows, out, exec, KernelMode::from_env())
+}
+
+/// [`build_histogram_paged`] with an explicit [`KernelMode`] — lets
+/// benches and parity tests compare Blocked vs Scalar in-process.
+pub fn build_histogram_paged_mode(
+    store: &PageStore,
+    gradients: &[GradPair],
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+    mode: KernelMode,
+) -> Result<()> {
     assert_eq!(out.n_bins(), store.shape.n_bins);
     // first-use page sequence (consecutive dedup) — the prefetch schedule
     let mut seq: Vec<usize> = Vec::new();
@@ -413,7 +616,7 @@ pub fn build_histogram_paged(
         }
     }
     crate::compress::page::with_prefetched_pages(store, exec, seq, |fetch| {
-        paged_chunked_build(store, gradients, rows, out, &mut |p| fetch(p))
+        paged_chunked_build(store, gradients, rows, out, &mut |p| fetch(p), mode)
     })
 }
 
@@ -639,6 +842,76 @@ mod tests {
             )
             .unwrap();
             assert_eq!(paged, resident, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn blocked_and_scalar_modes_bit_identical() {
+        use crate::compress::page::PagedMatrixBuilder;
+        use crate::exec::KernelMode;
+        // sizes straddle HIST_BLOCK_ROWS and ROW_CHUNK boundaries
+        for n in [1usize, 7, 9, 63, 200, 9_000] {
+            let (qm, grads) = fixture(n, 5, 17 + n as u64);
+            let cm = CompressedMatrix::from_quantized(&qm);
+            let rows: Vec<u32> = (0..n as u32).collect();
+            for threads in [1usize, 4] {
+                let exec = crate::exec::ExecContext::new(threads);
+                let mut pairs: Vec<(Histogram, Histogram)> = Vec::new();
+                let mut qs = Histogram::zeros(qm.n_bins);
+                let mut qb = Histogram::zeros(qm.n_bins);
+                build_histogram_quantized_par_mode(
+                    &qm, &grads, &rows, &mut qs, &exec, KernelMode::Scalar,
+                );
+                build_histogram_quantized_par_mode(
+                    &qm, &grads, &rows, &mut qb, &exec, KernelMode::Blocked,
+                );
+                pairs.push((qs, qb));
+                let mut cs = Histogram::zeros(qm.n_bins);
+                let mut cb = Histogram::zeros(qm.n_bins);
+                build_histogram_compressed_par_mode(
+                    &cm, &grads, &rows, &mut cs, &exec, KernelMode::Scalar,
+                );
+                build_histogram_compressed_par_mode(
+                    &cm, &grads, &rows, &mut cb, &exec, KernelMode::Blocked,
+                );
+                pairs.push((cs, cb));
+                let path = std::env::temp_dir().join(format!(
+                    "xgb_tpu_hist_mode_{}_{n}_{threads}",
+                    std::process::id()
+                ));
+                let mut b = PagedMatrixBuilder::new(
+                    &path, qm.n_rows, qm.n_features, qm.row_stride, qm.n_bins, qm.dense, 77, 2,
+                )
+                .unwrap();
+                for r in 0..qm.n_rows {
+                    b.push_row(qm.row(r)).unwrap();
+                }
+                let store = b.finish().unwrap();
+                let mut ps = Histogram::zeros(qm.n_bins);
+                let mut pb = Histogram::zeros(qm.n_bins);
+                build_histogram_paged_mode(&store, &grads, &rows, &mut ps, &exec, KernelMode::Scalar)
+                    .unwrap();
+                build_histogram_paged_mode(
+                    &store,
+                    &grads,
+                    &rows,
+                    &mut pb,
+                    &exec,
+                    KernelMode::Blocked,
+                )
+                .unwrap();
+                pairs.push((ps, pb));
+                for (kind, (s, b)) in ["quantized", "compressed", "paged"].iter().zip(&pairs) {
+                    for (x, y) in s.bins.iter().zip(b.bins.iter()) {
+                        assert_eq!(
+                            x.grad.to_bits(),
+                            y.grad.to_bits(),
+                            "{kind} n={n} threads={threads}"
+                        );
+                        assert_eq!(x.hess.to_bits(), y.hess.to_bits());
+                    }
+                }
+            }
         }
     }
 

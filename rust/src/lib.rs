@@ -184,6 +184,25 @@
 //! partials in ascending chunk order (never completion order), so
 //! parallelism changes wall-clock only — trees, predictions and metrics
 //! do not move. `rust/tests/parallel_exec.rs` pins this contract.
+//!
+//! Within each chunk the hot loops run as **blocked, branchless
+//! kernels** — the CPU mirror of the paper's wide data-parallel GPU
+//! kernels. Histogram accumulation decodes each block of rows through a
+//! multi-symbol shift-cascade unpacker ([`compress::unpack`]; every
+//! packed 64-bit word read once), converts the block's gradients to f64
+//! once, and replaces the per-symbol validity branch with index
+//! arithmetic into a one-slot-wider partial histogram (`min(bin,
+//! n_bins)`: nulls land in a scratch slot discarded on merge — the
+//! "null-scratch-slot" trick, [`hist`] module docs). Bin-tree traversal
+//! advances `exec::BLOCK_ROWS` rows one tree level at a time with a
+//! branchless child select ([`predict::quantised`], [`serve`]). Both
+//! shapes batch only non-floating-point work — the f64/f32 adds stay
+//! strictly row-sequential inside each chunk — so blocked and scalar
+//! kernels are **bit-identical by construction**, not just numerically
+//! close. `XGB_SCALAR_KERNELS=1` selects the row-at-a-time scalar
+//! reference loops (kept as the independent implementation the property
+//! tests compare against); `rust/tests/prop_invariants.rs` and the
+//! `ci.sh` kernel-mode smoke pin the equivalence.
 
 pub mod baselines;
 pub mod bench;

@@ -71,7 +71,7 @@ use crate::compress::CompressedMatrix;
 use crate::data::loader::groups_from_qids;
 use crate::data::source::BatchSource;
 use crate::data::DMatrix;
-use crate::exec::{ExecContext, ROW_CHUNK};
+use crate::exec::{ExecContext, KernelMode, BLOCK_ROWS, ROW_CHUNK};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::partitioner::BinSource;
 use crate::tree::regtree::NO_CHILD;
@@ -202,12 +202,197 @@ impl BinForest {
     }
 }
 
+/// A block of rows whose bins can be looked up by block-local index —
+/// the abstraction the blocked traversal walks over. `prime` prepares
+/// rows `[row0, row0 + n)` (`n <= BLOCK_ROWS`); `bin(i, f)` answers for
+/// block-local row `i`. Implementations either pass lookups through
+/// ([`PlainBins`]) or batch the expensive part per block
+/// ([`DecodedBins`] unpacks a compressed block's symbols exactly once).
+trait BlockBins {
+    fn prime(&mut self, row0: usize, n: usize);
+    fn bin(&self, i: usize, f: usize) -> Option<u32>;
+}
+
+/// Pass-through [`BlockBins`] over any per-row lookup: `prime` just
+/// records the block origin.
+struct PlainBins<'a, L> {
+    lookup: &'a L,
+    row0: usize,
+}
+
+impl<L: Fn(usize, usize) -> Option<u32>> BlockBins for PlainBins<'_, L> {
+    #[inline]
+    fn prime(&mut self, row0: usize, _n: usize) {
+        self.row0 = row0;
+    }
+    #[inline]
+    fn bin(&self, i: usize, f: usize) -> Option<u32> {
+        (self.lookup)(self.row0 + i, f)
+    }
+}
+
+/// [`BlockBins`] over a bit-packed shard: `prime` runs the multi-symbol
+/// block decoder ([`CompressedMatrix::decode_rows_block`]) once per
+/// block — each packed word read once — and every tree-level lookup is
+/// then served from the scratch buffer instead of re-unpacking the same
+/// symbols per node visit. Routing is identical to the per-symbol path
+/// because the decoder is pinned symbol-for-symbol against it.
+struct DecodedBins<'a> {
+    cm: &'a CompressedMatrix,
+    cuts: &'a HistogramCuts,
+    scratch: Vec<u32>,
+    stride: usize,
+    dense: bool,
+    null: u32,
+}
+
+impl<'a> DecodedBins<'a> {
+    fn new(cm: &'a CompressedMatrix, cuts: &'a HistogramCuts) -> Self {
+        let stride = cm.row_stride;
+        DecodedBins {
+            cm,
+            cuts,
+            scratch: vec![0u32; BLOCK_ROWS * stride],
+            stride,
+            dense: cm.dense,
+            null: cm.n_bins as u32,
+        }
+    }
+}
+
+impl BlockBins for DecodedBins<'_> {
+    #[inline]
+    fn prime(&mut self, row0: usize, n: usize) {
+        self.cm
+            .decode_rows_block(row0, n, &mut self.scratch[..n * self.stride]);
+    }
+    #[inline]
+    fn bin(&self, i: usize, f: usize) -> Option<u32> {
+        BinSource::feature_bin_at(
+            |flat| self.scratch[flat],
+            i,
+            f,
+            self.cuts,
+            self.stride,
+            self.dense,
+            self.null,
+        )
+    }
+}
+
+/// Route a block of `n` rows to their leaves, one tree **level** at a
+/// time (the `serve/flat.rs::predict_margins` pattern): every sweep
+/// advances each still-interior row by one level with a branchless child
+/// select, so the per-row node sequence — and therefore the leaf —
+/// is exactly what [`BinTree::leaf_for`] visits row-at-a-time.
+fn walk_block<B: BlockBins>(tree: &BinTree, bins: &B, n: usize, nid: &mut [u32; BLOCK_ROWS]) {
+    nid[..n].fill(0);
+    if tree.nodes[0].is_leaf() {
+        return;
+    }
+    loop {
+        let mut any = false;
+        for i in 0..n {
+            let node = &tree.nodes[nid[i] as usize];
+            if node.is_leaf() {
+                continue;
+            }
+            any = true;
+            let go_left = match bins.bin(i, node.feature as usize) {
+                Some(b) => b < node.split,
+                None => node.default_left,
+            };
+            let child = [node.right, node.left];
+            nid[i] = child[go_left as usize] as u32;
+        }
+        if !any {
+            return;
+        }
+    }
+}
+
+/// Blocked twin of [`margins_with_lookup`]'s inner loop: rows advance in
+/// `BLOCK_ROWS` groups, each primed once and walked level-synchronously
+/// per tree. Per output slot the f32 adds still run in forest tree
+/// order starting from the base score — the identical chain the scalar
+/// path builds — so the result is bit-identical at every thread count.
+fn margins_blocked<B, M>(
+    forest: &BinForest,
+    base_score: &[Float],
+    n_rows: usize,
+    make: &M,
+    exec: &ExecContext,
+) -> Vec<Vec<Float>>
+where
+    B: BlockBins,
+    M: Fn() -> B + Sync,
+{
+    let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n_rows]).collect();
+    for (k, group) in forest.groups.iter().enumerate() {
+        exec.for_each_slice_mut(&mut out[k], ROW_CHUNK, |_, start, chunk| {
+            let mut bins = make();
+            let mut nid = [0u32; BLOCK_ROWS];
+            let mut lo = 0usize;
+            while lo < chunk.len() {
+                let n = BLOCK_ROWS.min(chunk.len() - lo);
+                bins.prime(start + lo, n);
+                for tree in group {
+                    walk_block(tree, &bins, n, &mut nid);
+                    for (i, m) in chunk[lo..lo + n].iter_mut().enumerate() {
+                        *m += tree.nodes[nid[i] as usize].leaf_value;
+                    }
+                }
+                lo += n;
+            }
+        });
+    }
+    out
+}
+
+/// Blocked twin of [`leaf_indices_with_lookup`] — pure index writes, so
+/// equivalence needs only the per-row routing argument of
+/// [`walk_block`].
+fn leaf_indices_blocked<B, M>(
+    trees: &[BinTree],
+    n_rows: usize,
+    make: &M,
+    exec: &ExecContext,
+) -> Vec<Vec<u32>>
+where
+    B: BlockBins,
+    M: Fn() -> B + Sync,
+{
+    trees
+        .iter()
+        .map(|t| {
+            let mut out = vec![0u32; n_rows];
+            exec.for_each_slice_mut(&mut out, ROW_CHUNK, |_, start, chunk| {
+                let mut bins = make();
+                let mut nid = [0u32; BLOCK_ROWS];
+                let mut lo = 0usize;
+                while lo < chunk.len() {
+                    let n = BLOCK_ROWS.min(chunk.len() - lo);
+                    bins.prime(start + lo, n);
+                    walk_block(t, &bins, n, &mut nid);
+                    chunk[lo..lo + n].copy_from_slice(&nid[..n]);
+                    lo += n;
+                }
+            });
+            out
+        })
+        .collect()
+}
+
 /// Chunk-parallel margin accumulation over any per-row bin lookup — the
 /// quantised twin of [`crate::predict::predict_margins_par`]: rows are
 /// chunked once per output group, each worker iterates the whole forest
 /// for its rows in tree order, so the floating-point accumulation
 /// bracketing (and therefore every bit of the result) is identical to
-/// the float path at every thread count.
+/// the float path at every thread count. In the default
+/// [`KernelMode::Blocked`] the rows advance through each tree in
+/// level-synchronous `BLOCK_ROWS` groups (bit-identical — see
+/// [`margins_blocked`]); `XGB_SCALAR_KERNELS=1` keeps the row-at-a-time
+/// reference walk.
 fn margins_with_lookup<L>(
     forest: &BinForest,
     base_score: &[Float],
@@ -218,6 +403,9 @@ fn margins_with_lookup<L>(
 where
     L: Fn(usize, usize) -> Option<u32> + Sync,
 {
+    if KernelMode::from_env() == KernelMode::Blocked {
+        return margins_blocked(forest, base_score, n_rows, &|| PlainBins { lookup, row0: 0 }, exec);
+    }
     let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n_rows]).collect();
     for (k, group) in forest.groups.iter().enumerate() {
         exec.for_each_slice_mut(&mut out[k], ROW_CHUNK, |_, start, chunk| {
@@ -243,6 +431,9 @@ fn leaf_indices_with_lookup<L>(
 where
     L: Fn(usize, usize) -> Option<u32> + Sync,
 {
+    if KernelMode::from_env() == KernelMode::Blocked {
+        return leaf_indices_blocked(trees, n_rows, &|| PlainBins { lookup, row0: 0 }, exec);
+    }
     trees
         .iter()
         .map(|t| {
@@ -277,7 +468,10 @@ pub fn predict_margins_quantized(
 }
 
 /// Margins straight from a bit-packed shard (§2.2): symbols unpack
-/// inline during traversal; the float matrix never exists.
+/// during traversal; the float matrix never exists. In the default
+/// blocked mode each `BLOCK_ROWS` block's symbols decode **once**
+/// through the multi-symbol unpacker and every tree-level lookup reads
+/// the scratch buffer; `XGB_SCALAR_KERNELS=1` unpacks per node visit.
 pub fn predict_margins_compressed(
     forest: &BinForest,
     base_score: &[Float],
@@ -285,6 +479,15 @@ pub fn predict_margins_compressed(
     cuts: &HistogramCuts,
     exec: &ExecContext,
 ) -> Vec<Vec<Float>> {
+    if KernelMode::from_env() == KernelMode::Blocked {
+        return margins_blocked(
+            forest,
+            base_score,
+            cm.n_rows,
+            &|| DecodedBins::new(cm, cuts),
+            exec,
+        );
+    }
     let src = BinSource::Compressed(cm);
     margins_with_lookup(
         forest,
@@ -306,13 +509,17 @@ pub fn leaf_indices_quantized(
     leaf_indices_with_lookup(trees, qm.n_rows, &|row, f| src.feature_bin(row, f, cuts), exec)
 }
 
-/// Leaf indices from a bit-packed shard.
+/// Leaf indices from a bit-packed shard (block-decoded like
+/// [`predict_margins_compressed`]).
 pub fn leaf_indices_compressed(
     trees: &[BinTree],
     cm: &CompressedMatrix,
     cuts: &HistogramCuts,
     exec: &ExecContext,
 ) -> Vec<Vec<u32>> {
+    if KernelMode::from_env() == KernelMode::Blocked {
+        return leaf_indices_blocked(trees, cm.n_rows, &|| DecodedBins::new(cm, cuts), exec);
+    }
     let src = BinSource::Compressed(cm);
     leaf_indices_with_lookup(trees, cm.n_rows, &|row, f| src.feature_bin(row, f, cuts), exec)
 }
@@ -350,6 +557,32 @@ pub fn predict_margins_paged(
 ) -> Result<Vec<Vec<Float>>> {
     let n = store.n_rows();
     let mut out: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+    if KernelMode::from_env() == KernelMode::Blocked {
+        // blocked walk over each resident page: per output slot the f32
+        // adds still run in forest tree order from the base score, so
+        // the result matches the scalar page walk bit for bit
+        walk_pages(store, exec, |page| {
+            let m = &page.matrix;
+            let mut bins = DecodedBins::new(m, cuts);
+            let mut nid = [0u32; BLOCK_ROWS];
+            let mut lo = 0usize;
+            while lo < m.n_rows {
+                let nb = BLOCK_ROWS.min(m.n_rows - lo);
+                bins.prime(lo, nb);
+                for (k, group) in forest.groups.iter().enumerate() {
+                    for tree in group {
+                        walk_block(tree, &bins, nb, &mut nid);
+                        for (i, &id) in nid[..nb].iter().enumerate() {
+                            out[k][page.first_row + lo + i] += tree.nodes[id as usize].leaf_value;
+                        }
+                    }
+                }
+                lo += nb;
+            }
+            Ok(())
+        })?;
+        return Ok(out);
+    }
     let (stride, dense, null) = (
         store.shape.row_stride,
         store.shape.dense,
@@ -391,6 +624,26 @@ pub fn leaf_indices_paged(
 ) -> Result<Vec<Vec<u32>>> {
     let n = store.n_rows();
     let mut out: Vec<Vec<u32>> = trees.iter().map(|_| vec![0u32; n]).collect();
+    if KernelMode::from_env() == KernelMode::Blocked {
+        walk_pages(store, exec, |page| {
+            let m = &page.matrix;
+            let mut bins = DecodedBins::new(m, cuts);
+            let mut nid = [0u32; BLOCK_ROWS];
+            let mut lo = 0usize;
+            while lo < m.n_rows {
+                let nb = BLOCK_ROWS.min(m.n_rows - lo);
+                bins.prime(lo, nb);
+                for (t, tree) in trees.iter().enumerate() {
+                    walk_block(tree, &bins, nb, &mut nid);
+                    let row0 = page.first_row + lo;
+                    out[t][row0..row0 + nb].copy_from_slice(&nid[..nb]);
+                }
+                lo += nb;
+            }
+            Ok(())
+        })?;
+        return Ok(out);
+    }
     let (stride, dense, null) = (
         store.shape.row_stride,
         store.shape.dense,
@@ -570,6 +823,24 @@ pub fn accumulate_bin_tree_par(
     exec: &ExecContext,
 ) {
     debug_assert_eq!(margins.len(), batch.n_rows());
+    if KernelMode::from_env() == KernelMode::Blocked {
+        let lookup = |row: usize, f: usize| batch.feature_bin(row, f);
+        exec.for_each_slice_mut(margins, ROW_CHUNK, |_, start, chunk| {
+            let mut bins = PlainBins { lookup: &lookup, row0: 0 };
+            let mut nid = [0u32; BLOCK_ROWS];
+            let mut lo = 0usize;
+            while lo < chunk.len() {
+                let n = BLOCK_ROWS.min(chunk.len() - lo);
+                bins.prime(start + lo, n);
+                walk_block(tree, &bins, n, &mut nid);
+                for (i, m) in chunk[lo..lo + n].iter_mut().enumerate() {
+                    *m += tree.nodes[nid[i] as usize].leaf_value;
+                }
+                lo += n;
+            }
+        });
+        return;
+    }
     exec.for_each_slice_mut(margins, ROW_CHUNK, |_, start, chunk| {
         for (i, m) in chunk.iter_mut().enumerate() {
             *m += tree.leaf_value_for(|f| batch.feature_bin(start + i, f));

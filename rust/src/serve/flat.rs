@@ -76,8 +76,11 @@ pub const NAN_BIN: u32 = u32::MAX;
 
 /// Rows traversed per tree before moving to the next tree — keeps a
 /// tree's hot top levels in L1 across the block while preserving the
-/// per-row tree-order accumulation bracketing bit for bit.
-pub const BLOCK_ROWS: usize = 64;
+/// per-row tree-order accumulation bracketing bit for bit. Shared with
+/// the training-side blocked traversal (`predict/quantised.rs`), which
+/// adopted this loop shape; re-exported from [`crate::exec`] so both
+/// stay in lockstep.
+pub use crate::exec::BLOCK_ROWS;
 
 /// An ensemble flattened to parallel SoA arrays (module docs). Grouped
 /// by output exactly like `Booster::trees` / `BinForest::groups`.

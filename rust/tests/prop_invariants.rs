@@ -396,6 +396,186 @@ fn prop_flat_forest_matches_bin_and_float_traversal() {
     });
 }
 
+/// The blocked, branchless histogram kernels (multi-symbol block unpack
+/// + null-scratch-slot accumulation, `rust/src/hist` module docs) are
+/// **bit-identical** to the scalar reference loops across symbol widths
+/// {1, 5, 8, 9, 13}, dense and sparse-with-nulls layouts, row counts
+/// straddling the `HIST_BLOCK_ROWS` and `ROW_CHUNK` boundaries, and
+/// thread counts {1, 4} — and the packed builder stays bit-identical to
+/// the unpacked one in both modes.
+#[test]
+fn prop_blocked_hist_matches_scalar_bitwise() {
+    use xgb_tpu::exec::{ExecContext, KernelMode};
+    use xgb_tpu::hist::{
+        build_histogram_compressed_par_mode, build_histogram_quantized_par_mode,
+    };
+    check(0xb10cd, 30, |g: &mut Gen| {
+        // n_bins = 2^bits - 1 makes the packed alphabet (n_bins + 1
+        // symbols incl. null) exactly `bits` wide
+        let bits = [1usize, 5, 8, 9, 13][g.int(0, 4)];
+        let n_bins = (1usize << bits) - 1;
+        // straddle HIST_BLOCK_ROWS (8), BLOCK_ROWS (64) and ROW_CHUNK
+        // (8192) boundaries
+        let n_rows = [1usize, 7, 8, 9, 63, 64, 65, 200, 8193][g.int(0, 8)];
+        let stride = g.int(1, 9);
+        let dense = g.bool(0.5);
+        let null_p = if dense { 0.0 } else { 0.3 };
+        let bins: Vec<u32> = (0..n_rows * stride)
+            .map(|_| {
+                if g.bool(null_p) {
+                    n_bins as u32 // null/padding symbol
+                } else {
+                    g.int(0, n_bins - 1) as u32
+                }
+            })
+            .collect();
+        let qm = xgb_tpu::quantile::QuantizedMatrix {
+            bins,
+            n_rows,
+            n_features: stride,
+            row_stride: stride,
+            n_bins,
+            dense,
+        };
+        let cm = CompressedMatrix::from_quantized(&qm);
+        assert_eq!(cm.symbol_bits, bits as u32, "width selection");
+        let grads = g.grad_pairs(n_rows);
+        let rows: Vec<u32> = (0..n_rows as u32).collect();
+        for threads in [1usize, 4] {
+            let exec = ExecContext::new(threads);
+            let build_q = |mode| {
+                let mut h = Histogram::zeros(n_bins);
+                build_histogram_quantized_par_mode(&qm, &grads, &rows, &mut h, &exec, mode);
+                h
+            };
+            let build_c = |mode| {
+                let mut h = Histogram::zeros(n_bins);
+                build_histogram_compressed_par_mode(&cm, &grads, &rows, &mut h, &exec, mode);
+                h
+            };
+            let qs = build_q(KernelMode::Scalar);
+            let qb = build_q(KernelMode::Blocked);
+            let cs = build_c(KernelMode::Scalar);
+            let cb = build_c(KernelMode::Blocked);
+            for (kind, (s, b)) in [("quantized", (&qs, &qb)), ("compressed", (&cs, &cb))] {
+                for (x, y) in s.bins.iter().zip(b.bins.iter()) {
+                    assert_eq!(
+                        x.grad.to_bits(),
+                        y.grad.to_bits(),
+                        "{kind} bits={bits} n={n_rows} stride={stride} threads={threads}"
+                    );
+                    assert_eq!(x.hess.to_bits(), y.hess.to_bits(), "{kind}");
+                }
+            }
+            assert_eq!(qb, cb, "packed vs unpacked, blocked mode");
+            assert_eq!(qs, cs, "packed vs unpacked, scalar mode");
+        }
+    });
+}
+
+/// The blocked, level-synchronous bin-tree traversal (default kernel
+/// mode of `predict/quantised.rs`) routes every row to exactly the leaf
+/// the row-at-a-time `BinTree` walk and the float traversal reach, and
+/// accumulates margins bit-identically, over both the unpacked and the
+/// bit-packed storages, at thread counts {1, 4} and row counts
+/// straddling the `BLOCK_ROWS` boundary.
+#[test]
+fn prop_blocked_traversal_matches_rowwise_and_float() {
+    use xgb_tpu::exec::ExecContext;
+    use xgb_tpu::predict::quantised::{
+        leaf_indices_compressed, predict_margins_compressed, predict_margins_quantized, BinForest,
+    };
+    use xgb_tpu::tree::RegTree;
+    check(0xb70c7, 20, |g: &mut Gen| {
+        let n = [1usize, 63, 64, 65, 130, 300][g.int(0, 5)];
+        let cols = g.int(1, 5);
+        // coarse value grid (many exact cut hits) + ~15% missing
+        let vals: Vec<Float> = (0..n * cols)
+            .map(|_| {
+                if g.bool(0.15) {
+                    Float::NAN
+                } else {
+                    g.int(0, 12) as Float - 6.0
+                }
+            })
+            .collect();
+        let x = DMatrix::dense(vals, n, cols);
+        let cuts = HistogramCuts::from_dmatrix(&x, g.int(2, 16), None);
+
+        // random forest whose thresholds are cut values (the trained-
+        // tree invariant)
+        let n_trees = g.int(1, 3);
+        let mut trees: Vec<RegTree> = Vec::new();
+        for _ in 0..n_trees {
+            let mut tree = RegTree::new_root(g.f32(-0.5, 0.5), 1.0);
+            let mut frontier = vec![(0usize, 0usize)];
+            while let Some((nid, depth)) = frontier.pop() {
+                if depth >= 4 || g.bool(0.3) {
+                    continue;
+                }
+                let f = g.int(0, cols - 1);
+                let fc = cuts.feature_cuts(f);
+                let threshold = fc[g.int(0, fc.len() - 1)];
+                let (l, r) = tree.apply_split(
+                    nid,
+                    f as u32,
+                    threshold,
+                    g.bool(0.5),
+                    1.0,
+                    g.f32(-1.0, 1.0),
+                    1.0,
+                    g.f32(-1.0, 1.0),
+                    1.0,
+                );
+                frontier.push((l, depth + 1));
+                frontier.push((r, depth + 1));
+            }
+            trees.push(tree);
+        }
+
+        let bf = BinForest::from_trees(&[trees.clone()], &cuts);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let cm = CompressedMatrix::from_quantized(&qm);
+        let base = [0.25 as Float];
+        let float = xgb_tpu::predict::predict_margins(&[trees.clone()], &base, &x);
+        for threads in [1usize, 4] {
+            let exec = ExecContext::new(threads);
+            let mq = predict_margins_quantized(&bf, &base, &qm, &cuts, &exec);
+            let mc = predict_margins_compressed(&bf, &base, &cm, &cuts, &exec);
+            let li = leaf_indices_compressed(&bf.groups[0], &cm, &cuts, &exec);
+            for r in 0..n {
+                // row-at-a-time reference walk over the same bins
+                let mut want = base[0];
+                for bt in &bf.groups[0] {
+                    want += bt.leaf_value_for(|f| qm.get(r, f));
+                }
+                assert_eq!(
+                    mq[0][r].to_bits(),
+                    want.to_bits(),
+                    "row {r} threads={threads}: blocked vs row-wise (quantized)"
+                );
+                assert_eq!(
+                    mc[0][r].to_bits(),
+                    want.to_bits(),
+                    "row {r} threads={threads}: blocked vs row-wise (compressed)"
+                );
+                assert_eq!(
+                    float[0][r].to_bits(),
+                    mq[0][r].to_bits(),
+                    "row {r} threads={threads}: blocked vs float"
+                );
+                for (t, bt) in bf.groups[0].iter().enumerate() {
+                    assert_eq!(
+                        li[t][r] as usize,
+                        bt.leaf_for(|f| qm.get(r, f)),
+                        "row {r} tree {t}: blocked leaf index"
+                    );
+                }
+            }
+        }
+    });
+}
+
 /// Quantised histogram totals equal direct gradient sums per feature.
 #[test]
 fn prop_histogram_mass_conservation() {

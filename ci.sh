@@ -154,6 +154,35 @@ if [[ -z "$SUM_SCALAR" || "$SUM_FLOAT" != "$SUM_SCALAR" ]]; then
     exit 1
 fi
 
+# Exec-mode smoke: the persistent parked worker pool (default) and the
+# scoped spawn-per-call reference engine (XGB_SCOPED_EXEC=1) must produce
+# byte-identical training metrics and prediction checksums — the CLI-
+# level pin of the engine-parity contract the exec property tests
+# enforce in-process.
+echo "==> exec-mode smoke (CLI)"
+SCOPED_FINAL=$(XGB_SCOPED_EXEC=1 ./target/release/xgb-tpu train \
+    "${SMOKE_FLAGS[@]}" --threads 4 2>/dev/null | grep '^final:' || true)
+POOL_FINAL=$(./target/release/xgb-tpu train \
+    "${SMOKE_FLAGS[@]}" --threads 4 2>/dev/null | grep '^final:' || true)
+echo "persistent: $POOL_FINAL"
+echo "scoped:     $SCOPED_FINAL"
+if [[ -z "$SCOPED_FINAL" || "$POOL_FINAL" != "$SCOPED_FINAL" ]]; then
+    echo "FAIL: scoped-engine training metric does not match the persistent pool"
+    exit 1
+fi
+if [[ -z "$MEM_FINAL" || "$MEM_FINAL" != "$POOL_FINAL" ]]; then
+    echo "FAIL: threads=4 training metric does not match the default run"
+    exit 1
+fi
+SUM_SCOPED=$(XGB_SCOPED_EXEC=1 ./target/release/xgb-tpu "${PRED_ARGS[@]}" \
+    --stream --batch-rows 64 2>&1 >/dev/null | grep '^predictions:' || true)
+echo "persistent: $SUM_FLOAT"
+echo "scoped:     $SUM_SCOPED"
+if [[ -z "$SUM_SCOPED" || "$SUM_FLOAT" != "$SUM_SCOPED" ]]; then
+    echo "FAIL: scoped-engine prediction checksum does not match the persistent pool"
+    exit 1
+fi
+
 # Serving smoke: pipe the same rows through `serve` over stdin (labels
 # stripped, so requests are LibSVM-style sparse tokens with --col-base 1)
 # and require the shutdown fingerprint line to byte-match `predict`'s

@@ -12,6 +12,7 @@ use xgb_tpu::bench::Table;
 use xgb_tpu::comm::CostModel;
 use xgb_tpu::coordinator::builder::project_scaling;
 use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+use xgb_tpu::exec::{set_exec_mode_override, ExecMode};
 use xgb_tpu::gbm::{Learner, LearnerParams, ObjectiveKind};
 
 fn env_usize(k: &str, d: usize) -> usize {
@@ -156,6 +157,78 @@ fn main() -> anyhow::Result<()> {
         w1 / w4.max(1e-9)
     );
 
+    // === exec engine: scoped spawn-per-call vs persistent parked pool ===
+    let exec_threads = 4usize;
+    // (engine, train s, wake s, wake ms/round, rounds/sec, allocs/round)
+    let mut engines: Vec<(&str, f64, f64, f64, f64, f64)> = Vec::new();
+    let mut engine_table = Table::new(&[
+        "engine",
+        "train (s)",
+        "wake/spawn (s)",
+        "overhead/round (us)",
+        "rounds/sec",
+        "allocs/round",
+        "arena reuse (MB)",
+    ]);
+    for (name, mode) in [
+        ("scoped", ExecMode::Scoped),
+        ("persistent", ExecMode::Persistent),
+    ] {
+        set_exec_mode_override(Some(mode));
+        let params = LearnerParams {
+            objective: ObjectiveKind::BinaryLogistic,
+            num_rounds: rounds,
+            max_bins: 256,
+            max_depth: 6,
+            n_devices: devices,
+            compress: true,
+            eval_every: 0,
+            threads: exec_threads,
+            ..Default::default()
+        };
+        let b = Learner::from_params(params)?.train(&data.train, None)?;
+        set_exec_mode_override(None);
+        let s = &b.build_stats;
+        let per_round_us = if s.hist_rounds > 0 {
+            s.wake_wall_secs / s.hist_rounds as f64 * 1e6
+        } else {
+            0.0
+        };
+        let allocs_per_round = if s.hist_rounds > 0 {
+            s.arena_allocs as f64 / s.hist_rounds as f64
+        } else {
+            0.0
+        };
+        let rounds_per_sec = b.n_rounds() as f64 / b.train_secs.max(1e-9);
+        engine_table.add_row(vec![
+            name.to_string(),
+            format!("{:.3}", b.train_secs),
+            format!("{:.4}", s.wake_wall_secs),
+            format!("{per_round_us:.1}"),
+            format!("{rounds_per_sec:.2}"),
+            format!("{allocs_per_round:.1}"),
+            format!("{:.2}", s.arena_bytes_reused as f64 / 1e6),
+        ]);
+        engines.push((
+            name,
+            b.train_secs,
+            s.wake_wall_secs,
+            per_round_us,
+            rounds_per_sec,
+            allocs_per_round,
+        ));
+        eprintln!(
+            "  engine={name}: train {:.3}s wake {:.4}s ({per_round_us:.1} us/round)",
+            b.train_secs, s.wake_wall_secs
+        );
+    }
+
+    println!(
+        "\n=== Exec engine: scoped spawn-per-call vs persistent pool \
+         ({devices} devices, {exec_threads} threads) ===\n"
+    );
+    print!("{}", engine_table.render());
+
     // machine-readable trajectory for future PRs
     let out_path =
         std::env::var("XGB_BENCH_OUT").unwrap_or_else(|_| "BENCH_scaling.json".to_string());
@@ -183,6 +256,19 @@ fn main() -> anyhow::Result<()> {
              \"partition_wall_secs\": {part:.6}, \"device_wall_secs\": {wall:.6}, \
              \"rows_per_sec\": {rps:.1}, \"speedup_vs_1\": {:.4}}}",
             w1 / wall.max(1e-9)
+        ));
+    }
+    json.push_str("],\n");
+    json.push_str(&format!("  \"exec_threads\": {exec_threads},\n"));
+    json.push_str("  \"exec_mode_sweep\": [");
+    for (i, (name, train, wake, per_round_us, rps, apr)) in engines.iter().enumerate() {
+        if i > 0 {
+            json.push_str(", ");
+        }
+        json.push_str(&format!(
+            "{{\"engine\": \"{name}\", \"train_secs\": {train:.6}, \
+             \"wake_wall_secs\": {wake:.6}, \"wake_us_per_round\": {per_round_us:.3}, \
+             \"rounds_per_sec\": {rps:.4}, \"allocs_per_round\": {apr:.2}}}"
         ));
     }
     json.push_str("]\n}\n");

@@ -22,7 +22,7 @@ use xgb_tpu::data::synthetic::{generate, DatasetSpec};
 use xgb_tpu::exec::{ExecContext, KernelMode};
 use xgb_tpu::hist::{
     build_histogram_compressed_par_mode, build_histogram_paged_mode,
-    build_histogram_quantized_par_mode, Histogram,
+    build_histogram_quantized_par_mode, HistArena, Histogram,
 };
 use xgb_tpu::quantile::{HistogramCuts, Quantizer};
 use xgb_tpu::GradPair;
@@ -63,6 +63,9 @@ fn main() -> anyhow::Result<()> {
     let rows_all: Vec<u32> = (0..n as u32).collect();
     let threads_sweep = [1usize, 2, 4, 8];
     let modes = [KernelMode::Scalar, KernelMode::Blocked];
+    // long-lived arena: the bench measures steady-state (recycled
+    // scratch) throughput, matching a training run after round 1
+    let arena = HistArena::default();
 
     let mut cells_out: Vec<Cell> = Vec::new();
     let mut t = Table::new(&[
@@ -117,19 +120,19 @@ fn main() -> anyhow::Result<()> {
                         "quantized" => runner.run(&label, || {
                             h = Histogram::zeros(qm.n_bins);
                             build_histogram_quantized_par_mode(
-                                &qm, &grads, &rows_all, &mut h, &exec, mode,
+                                &qm, &grads, &rows_all, &mut h, &exec, mode, &arena,
                             );
                         }),
                         "compressed" => runner.run(&label, || {
                             h = Histogram::zeros(qm.n_bins);
                             build_histogram_compressed_par_mode(
-                                &cm, &grads, &rows_all, &mut h, &exec, mode,
+                                &cm, &grads, &rows_all, &mut h, &exec, mode, &arena,
                             );
                         }),
                         _ => runner.run(&label, || {
                             h = Histogram::zeros(qm.n_bins);
                             build_histogram_paged_mode(
-                                &store, &grads, &rows_all, &mut h, &exec, mode,
+                                &store, &grads, &rows_all, &mut h, &exec, mode, &arena,
                             )
                             .unwrap();
                         }),

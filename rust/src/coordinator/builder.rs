@@ -13,8 +13,8 @@ use crate::coordinator::CoordinatorParams;
 use crate::compress::CompressedMatrixBuilder;
 use crate::data::source::{scan_source, BatchSource, DMatrixSource, IngestMeta, DEFAULT_BATCH_ROWS};
 use crate::data::DMatrix;
-use crate::exec::{ExecContext, ROW_CHUNK};
-use crate::hist::{subtract, GradPairF64, Histogram};
+use crate::exec::{BufferPool, ExecContext, ROW_CHUNK};
+use crate::hist::{GradPairF64, Histogram};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::{ExpandEntry, GrowthPolicy, PolicyQueue, RegTree, SplitEvaluator};
 use crate::{Float, GradPair};
@@ -86,6 +86,20 @@ pub struct BuildStats {
     /// loaded *during prediction* land in [`pages_loaded`](Self::pages_loaded)
     /// via the same per-store round counters as training.
     pub predict_wall_secs: f64,
+    /// **Measured** executor dispatch overhead: seconds spent submitting
+    /// task batches and waiting for parked workers to wake (persistent
+    /// engine), or spawning scoped threads (`XGB_SCOPED_EXEC=1`
+    /// reference). The scoped-vs-persistent delta of this number is the
+    /// per-round win the parked pool exists for.
+    pub wake_wall_secs: f64,
+    /// Bytes of pre-existing buffer capacity handed back out by the round
+    /// arenas (histogram partials, decode scratch, flat all-reduce
+    /// payloads, margin deltas) instead of being freshly allocated.
+    pub arena_bytes_reused: u64,
+    /// Fresh allocations the round arenas could **not** avoid (pool
+    /// misses). ~0 per tree after the warm-up round is the steady-state
+    /// target.
+    pub arena_allocs: u64,
 }
 
 impl BuildStats {
@@ -125,6 +139,9 @@ impl BuildStats {
             .peak_resident_page_bytes
             .max(other.peak_resident_page_bytes);
         self.predict_wall_secs += other.predict_wall_secs;
+        self.wake_wall_secs += other.wake_wall_secs;
+        self.arena_bytes_reused += other.arena_bytes_reused;
+        self.arena_allocs += other.arena_allocs;
     }
 
     /// Page-I/O seconds hidden by the async prefetch: the load work that
@@ -161,6 +178,16 @@ pub struct MultiDeviceCoordinator {
     col_rng: crate::util::Pcg64,
     /// Thread budget for the real parallel engine (`params.threads`).
     exec: ExecContext,
+    /// Round arenas owned by the coordinator: per-device histogram
+    /// accumulators and merged/stored histograms recycle through
+    /// `hist_pool`, flat all-reduce payloads through `flat_pool`, and
+    /// per-tree margin deltas through `delta_pool` (closed by the
+    /// booster via [`MultiDeviceCoordinator::recycle_deltas`]). After the
+    /// warm-up tree, steady-state rounds draw everything from these
+    /// pools — `BuildStats::arena_allocs` per tree goes to ~0.
+    hist_pool: BufferPool<GradPairF64>,
+    flat_pool: BufferPool<f64>,
+    delta_pool: BufferPool<Float>,
 }
 
 impl MultiDeviceCoordinator {
@@ -170,7 +197,7 @@ impl MultiDeviceCoordinator {
     /// in-memory [`DMatrixSource`], so every construction path shares one
     /// implementation.
     pub fn from_dmatrix(x: &DMatrix, params: CoordinatorParams) -> Result<Self> {
-        Self::with_backend(x, params, Box::new(NativeBackend))
+        Self::with_backend(x, params, Box::new(NativeBackend::default()))
     }
 
     /// Same, with an explicit histogram backend (the XLA runtime path).
@@ -199,7 +226,7 @@ impl MultiDeviceCoordinator {
         src: &mut dyn BatchSource,
         params: CoordinatorParams,
     ) -> Result<(Self, IngestMeta)> {
-        Self::from_source_with_backend(src, params, Box::new(NativeBackend))
+        Self::from_source_with_backend(src, params, Box::new(NativeBackend::default()))
     }
 
     /// [`from_source`](Self::from_source) with an explicit histogram
@@ -322,6 +349,9 @@ impl MultiDeviceCoordinator {
             n_rows,
             col_rng,
             exec,
+            hist_pool: BufferPool::default(),
+            flat_pool: BufferPool::default(),
+            delta_pool: BufferPool::default(),
         }
     }
 
@@ -367,13 +397,18 @@ impl MultiDeviceCoordinator {
     }
 
     /// All-reduce a set of per-device f64 buffers; returns (merged copy,
-    /// host seconds, simulated seconds, bytes/device).
+    /// host seconds, simulated seconds, bytes/device). The non-merged
+    /// buffers park in `flat_pool` for the next round instead of dropping.
     fn collective(&self, mut bufs: Vec<Vec<f64>>) -> (Vec<f64>, f64, f64, usize) {
         let host_t = Instant::now();
         let stats = allreduce(self.params.allreduce, &mut bufs);
         let host = host_t.elapsed().as_secs_f64();
         let sim = self.params.cost.time(&stats);
-        let merged = bufs.into_iter().next().unwrap();
+        let mut it = bufs.into_iter();
+        let merged = it.next().unwrap();
+        for spare in it {
+            self.flat_pool.put(spare);
+        }
         (merged, host, sim, stats.bytes_per_device)
     }
 
@@ -383,6 +418,7 @@ impl MultiDeviceCoordinator {
         let p = self.devices.len();
         let mut stats = BuildStats::new(p);
         let eta = self.params.eta;
+        let wake_before = self.exec.wake_wall_secs();
 
         // distribute gradients (every shard copies its slice concurrently)
         self.exec.parallel_map_mut(&mut self.devices, |_, d| {
@@ -403,6 +439,7 @@ impl MultiDeviceCoordinator {
         stats.allreduce_sim_secs += sim;
         stats.comm_bytes_per_device += bytes;
         let root_sum = GradPairF64::new(root_vec[0], root_vec[1]);
+        self.flat_pool.put(root_vec);
 
         let mut tree = RegTree::new_root(
             (eta * self.evaluator.leaf_weight(root_sum)) as Float,
@@ -494,7 +531,9 @@ impl MultiDeviceCoordinator {
             let depth_ok = max_depth == 0 || child_depth < max_depth;
 
             if !depth_ok {
-                hist_store.remove(&entry.nid);
+                if let Some(h) = hist_store.remove(&entry.nid) {
+                    self.hist_pool.put(h.bins);
+                }
                 continue;
             }
 
@@ -511,13 +550,21 @@ impl MultiDeviceCoordinator {
             round_secs += part_secs.iter().cloned().fold(0.0, f64::max);
             stats.simulated_secs += round_secs;
 
-            let parent_hist = hist_store
+            let mut parent_hist = hist_store
                 .remove(&entry.nid)
                 .expect("parent histogram must exist");
             let large_hist = if self.params.subtraction {
-                subtract(&parent_hist, &small_hist)
+                // subtraction trick, in place: the parent's buffer becomes
+                // the sibling. Elementwise `parent − small`, the exact
+                // expression of [`crate::hist::subtract`], so the result
+                // is bit-identical — minus the allocation.
+                for (pb, sb) in parent_hist.bins.iter_mut().zip(small_hist.bins.iter()) {
+                    *pb = *pb - *sb;
+                }
+                parent_hist
             } else {
                 // A3 ablation: build the larger sibling from its rows too
+                self.hist_pool.put(parent_hist.bins);
                 let (h, extra) = self.histogram_round(_large_nid, &mut stats)?;
                 stats.simulated_secs += extra;
                 h
@@ -555,7 +602,12 @@ impl MultiDeviceCoordinator {
                     bounds: left_bounds,
                     timestamp: 0,
                 });
-                hist_store.entry(left).or_insert_with(|| left_hist.clone());
+                if !hist_store.contains_key(&left) {
+                    // stored copies come from the pool too
+                    let mut bins = self.hist_pool.take(left_hist.bins.len());
+                    bins.copy_from_slice(&left_hist.bins);
+                    hist_store.insert(left, Histogram { bins });
+                }
             }
             if let Some(rs) = right_split {
                 queue.push(ExpandEntry {
@@ -566,12 +618,25 @@ impl MultiDeviceCoordinator {
                     bounds: right_bounds,
                     timestamp: 0,
                 });
-                hist_store.entry(right).or_insert_with(|| right_hist.clone());
+                if !hist_store.contains_key(&right) {
+                    let mut bins = self.hist_pool.take(right_hist.bins.len());
+                    bins.copy_from_slice(&right_hist.bins);
+                    hist_store.insert(right, Histogram { bins });
+                }
             }
+            self.hist_pool.put(small_hist.bins);
+            self.hist_pool.put(large_hist.bins);
         }
 
-        // margin deltas from final leaf assignment — no tree re-traversal
-        let mut deltas = vec![0.0 as Float; self.n_rows];
+        // unexpanded node histograms return to the pool for the next tree
+        for (_, h) in hist_store.drain() {
+            self.hist_pool.put(h.bins);
+        }
+
+        // margin deltas from final leaf assignment — no tree re-traversal.
+        // The buffer comes from the delta arena (cleared to 0.0); the
+        // booster hands it back via `recycle_deltas` after applying it.
+        let mut deltas = self.delta_pool.take(self.n_rows);
         for dev in &self.devices {
             for (nid, rows) in dev.partitioner.leaf_of_rows() {
                 let v = tree.nodes[nid].leaf_value;
@@ -583,6 +648,17 @@ impl MultiDeviceCoordinator {
 
         // drain this tree's paging counters from every spilled shard
         self.drain_page_stats(&mut stats);
+
+        // executor + arena accounting for this tree: wake/submit seconds
+        // accrued on the (shared, forked) engine, and the hit/miss
+        // counters of every round arena that fed the tree
+        stats.wake_wall_secs = self.exec.wake_wall_secs() - wake_before;
+        let mut arena = self.backend.drain_arena_stats();
+        arena.merge(self.hist_pool.drain_stats());
+        arena.merge(self.flat_pool.drain_stats());
+        arena.merge(self.delta_pool.drain_stats());
+        stats.arena_allocs = arena.misses;
+        stats.arena_bytes_reused = arena.bytes_reused;
 
         Ok(TreeBuildResult {
             tree,
@@ -608,34 +684,54 @@ impl MultiDeviceCoordinator {
         let n_bins = self.cuts.total_bins();
         let p = self.devices.len();
         let wall_t = Instant::now();
-        // per-device (flat partial, build seconds, cells visited)
+        // per-device (flat partial, build seconds, cells visited) — both
+        // the per-device accumulator and its flat all-reduce payload come
+        // from the coordinator's round arenas (the pools are internally
+        // synchronised, so concurrent shards take/put freely)
+        let hist_pool = &self.hist_pool;
+        let flat_pool = &self.flat_pool;
+        let flatten = |h: Histogram| -> Vec<f64> {
+            let mut flat = flat_pool.take(h.bins.len() * 2);
+            for (i, b) in h.bins.iter().enumerate() {
+                flat[2 * i] = b.grad;
+                flat[2 * i + 1] = b.hess;
+            }
+            hist_pool.put(h.bins);
+            flat
+        };
         let use_pool = self.exec.threads() > 1 && self.backend.as_parallel().is_some();
         let results: Vec<Result<(Vec<f64>, f64, u64)>> = if use_pool {
             let pb = self.backend.as_parallel().expect("checked above");
             let dev_exec = self.exec.fork(p);
             self.exec.parallel_map(&self.devices, |_, dev| {
                 let rows = dev.partitioner.node_rows(nid);
-                let mut h = Histogram::zeros(n_bins);
+                let mut h = Histogram {
+                    bins: hist_pool.take(n_bins),
+                };
                 let t = Instant::now();
                 pb.build_histogram_shard(dev, rows, &mut h, &dev_exec)?;
+                let secs = t.elapsed().as_secs_f64();
                 let cells = (rows.len() * dev.storage.row_stride()) as u64;
-                Ok((h.to_flat(), t.elapsed().as_secs_f64(), cells))
+                Ok((flatten(h), secs, cells))
             })
         } else {
             // pinned executor path: the backend owns thread-bound state
             // (or threads = 1), so every shard executes on this thread
             let devices = &self.devices;
             let backend = &mut self.backend;
-            let exec = self.exec;
+            let exec = self.exec.clone();
             devices
                 .iter()
                 .map(|dev| {
                     let rows = dev.partitioner.node_rows(nid);
-                    let mut h = Histogram::zeros(n_bins);
+                    let mut h = Histogram {
+                        bins: hist_pool.take(n_bins),
+                    };
                     let t = Instant::now();
                     backend.build_histogram(dev, rows, &mut h, &exec)?;
+                    let secs = t.elapsed().as_secs_f64();
                     let cells = (rows.len() * dev.storage.row_stride()) as u64;
-                    Ok((h.to_flat(), t.elapsed().as_secs_f64(), cells))
+                    Ok((flatten(h), secs, cells))
                 })
                 .collect()
         };
@@ -655,7 +751,20 @@ impl MultiDeviceCoordinator {
         stats.allreduce_sim_secs += sim;
         stats.comm_bytes_per_device += bytes;
         stats.hist_rounds += 1;
-        Ok((Histogram::from_flat(&merged), max_build + sim))
+        // merged histogram draws from the pool too; the flat payload parks
+        let mut bins = self.hist_pool.take(n_bins);
+        for (b, c) in bins.iter_mut().zip(merged.chunks_exact(2)) {
+            *b = GradPairF64::new(c[0], c[1]);
+        }
+        self.flat_pool.put(merged);
+        Ok((Histogram { bins }, max_build + sim))
+    }
+
+    /// Hand a spent per-tree delta buffer back to the round arena — the
+    /// booster calls this after folding [`TreeBuildResult::deltas`] into
+    /// its margin cache, closing the zero-allocation loop.
+    pub fn recycle_deltas(&self, deltas: Vec<Float>) {
+        self.delta_pool.put(deltas);
     }
 
     /// **Compressed end-to-end prediction** (§2.4 from the §2.2
@@ -689,6 +798,7 @@ impl MultiDeviceCoordinator {
         let p = self.devices.len();
         let mut stats = BuildStats::new(p);
         let wall = Instant::now();
+        let wake_before = self.exec.wake_wall_secs();
         let forest = crate::predict::quantised::BinForest::from_trees(trees, &self.cuts);
         let dev_exec = self.exec.fork(p);
         let shard_margins: Vec<Result<Vec<Vec<Float>>>> =
@@ -714,6 +824,7 @@ impl MultiDeviceCoordinator {
             }
         }
         stats.predict_wall_secs = wall.elapsed().as_secs_f64();
+        stats.wake_wall_secs = self.exec.wake_wall_secs() - wake_before;
         self.drain_page_stats(&mut stats);
         Ok((out, stats))
     }
@@ -1142,7 +1253,7 @@ mod tests {
                 &g.train.x,
                 simple_params(p),
                 cuts.clone(),
-                Box::new(NativeBackend),
+                Box::new(NativeBackend::default()),
             )
             .unwrap();
             let r = c.build_tree(&grads).unwrap();
@@ -1256,7 +1367,7 @@ mod tests {
                 &g.train.x,
                 params,
                 cuts.clone(),
-                Box::new(NativeBackend),
+                Box::new(NativeBackend::default()),
             )
             .unwrap();
             let r = c.build_tree(&grads).unwrap();

@@ -7,8 +7,8 @@ use anyhow::Result;
 
 use crate::compress::page::PageStore;
 use crate::compress::CompressedMatrix;
-use crate::exec::ExecContext;
-use crate::hist::{self, Histogram};
+use crate::exec::{ArenaStats, ExecContext, KernelMode};
+use crate::hist::{self, HistArena, Histogram};
 use crate::quantile::{HistogramCuts, QuantizedMatrix};
 use crate::tree::partitioner::BinSource;
 use crate::tree::{RowPartitioner, SplitCandidate};
@@ -47,6 +47,14 @@ pub trait HistBackend {
     fn as_parallel(&self) -> Option<&dyn ParallelHistBackend> {
         None
     }
+
+    /// Read-and-reset the backend's round-arena counters (buffer-pool
+    /// hits/misses/bytes reused since the last drain). Backends without
+    /// an arena report zeros; the coordinator folds this into
+    /// `BuildStats::{arena_allocs, arena_bytes_reused}` per tree.
+    fn drain_arena_stats(&mut self) -> ArenaStats {
+        ArenaStats::default()
+    }
 }
 
 /// The `Send + Sync` half of the [`HistBackend`] split: backends whose
@@ -72,8 +80,16 @@ pub trait ParallelHistBackend: Send + Sync {
 /// bit-identical, so the coordinator's determinism contract (same
 /// result at every device count / thread count / page budget) is
 /// unaffected by the kernel choice.
+///
+/// Owns the long-lived [`HistArena`]: per-chunk partials and blocked
+/// decode scratch recycle across every histogram round of the training
+/// run, so steady-state rounds allocate ~nothing in the hot loop. The
+/// arena is internally synchronised (concurrent shard builds on pool
+/// workers take/put through a mutex-guarded free list).
 #[derive(Debug, Default, Clone)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    arena: HistArena,
+}
 
 impl ParallelHistBackend for NativeBackend {
     fn build_histogram_shard(
@@ -83,18 +99,41 @@ impl ParallelHistBackend for NativeBackend {
         out: &mut Histogram,
         exec: &ExecContext,
     ) -> Result<()> {
+        let mode = KernelMode::from_env();
         match &shard.storage {
             ShardStorage::Quantized(qm) => {
-                hist::build_histogram_quantized_par(qm, &shard.gradients, rows, out, exec);
+                hist::build_histogram_quantized_par_mode(
+                    qm,
+                    &shard.gradients,
+                    rows,
+                    out,
+                    exec,
+                    mode,
+                    &self.arena,
+                );
                 Ok(())
             }
             ShardStorage::Compressed(cm) => {
-                hist::build_histogram_compressed_par(cm, &shard.gradients, rows, out, exec);
+                hist::build_histogram_compressed_par_mode(
+                    cm,
+                    &shard.gradients,
+                    rows,
+                    out,
+                    exec,
+                    mode,
+                    &self.arena,
+                );
                 Ok(())
             }
-            ShardStorage::Paged(ps) => {
-                hist::build_histogram_paged(ps, &shard.gradients, rows, out, exec)
-            }
+            ShardStorage::Paged(ps) => hist::build_histogram_paged_mode(
+                ps,
+                &shard.gradients,
+                rows,
+                out,
+                exec,
+                mode,
+                &self.arena,
+            ),
         }
     }
 }
@@ -116,6 +155,10 @@ impl HistBackend for NativeBackend {
 
     fn as_parallel(&self) -> Option<&dyn ParallelHistBackend> {
         Some(self)
+    }
+
+    fn drain_arena_stats(&mut self) -> ArenaStats {
+        self.arena.drain_stats()
     }
 }
 
@@ -230,7 +273,7 @@ impl DeviceShard {
         debug_assert_eq!(gradients.len(), self.n_rows());
         self.gradients.clear();
         self.gradients.extend_from_slice(gradients);
-        self.partitioner = RowPartitioner::new(self.n_rows());
+        self.partitioner.reset(self.n_rows());
     }
 
     /// Shard-local gradient sum over all rows (root reduction input).
@@ -303,7 +346,7 @@ mod tests {
         let rows: Vec<u32> = (0..32).collect();
         let mut h1 = Histogram::zeros(s1.storage.n_bins());
         let mut h2 = Histogram::zeros(s2.storage.n_bins());
-        let mut be = NativeBackend;
+        let mut be = NativeBackend::default();
         let exec = ExecContext::serial();
         be.build_histogram(&s1, &rows, &mut h1, &exec).unwrap();
         be.build_histogram(&s2, &rows, &mut h2, &exec).unwrap();

@@ -1,6 +1,31 @@
-//! Execution engine: a vendored, dependency-free scoped thread pool with
-//! `parallel_map` / `parallel_for` primitives and a **deterministic
+//! Execution engine: a dependency-free **persistent parked worker pool**
+//! with `parallel_map` / `parallel_for` primitives and a **deterministic
 //! fixed-chunk reduction order**.
+//!
+//! # Pool lifecycle: spawn once → park → wake → join-at-drop
+//!
+//! An [`ExecContext`] with `threads > 1` owns a pool of long-lived worker
+//! threads. Workers are spawned **once** (lazily, on the first parallel
+//! call) and then *park* on a condvar between calls; each parallel
+//! primitive publishes one *job* (an atomic task-claim counter plus a
+//! borrowed closure), wakes the pool, participates in its own job from
+//! the calling thread, and returns when every task has completed. Workers
+//! go back to parking — they are never re-spawned. Dropping the last
+//! clone of the context shuts the pool down and joins the workers.
+//!
+//! [`ExecContext::fork`] hands out *budget sub-slices of the same pool*:
+//! a forked context caps how many workers may join its jobs
+//! (`max_helpers`) but shares the worker threads, so nested device/shard
+//! parallelism (devices × chunks) never oversubscribes the machine. A
+//! pool worker that itself submits a nested job always participates in
+//! that job, so nesting cannot deadlock even when every worker is busy.
+//!
+//! The previous engine — scoped `std::thread::scope` spawning per call —
+//! is kept, byte-for-byte result-identical, behind `XGB_SCOPED_EXEC=1`
+//! (mirroring the `XGB_SCALAR_KERNELS` kernel-mode escape hatch) as the
+//! independent reference the property tests and the `ci.sh` exec-mode
+//! smoke compare against. Per-call wake/spawn overhead is measured either
+//! way and surfaced as `BuildStats::wake_wall_secs`.
 //!
 //! # Real threads vs the simulated multi-GPU clock
 //!
@@ -25,19 +50,28 @@
 //! order. Workers may *compute* chunks in any order (claims go through an
 //! atomic counter for load balance) but the merge is a fixed left-to-right
 //! fold, so `threads = 1` and `threads = 64` produce bit-identical
-//! histograms, trees, predictions and metrics. The regression test
-//! `rust/tests/parallel_exec.rs` pins this contract.
+//! histograms, trees, predictions and metrics — and the parked pool and
+//! the scoped engine are bit-identical to each other, because results are
+//! always slot-addressed by task index and never depend on which worker
+//! (pooled or freshly spawned) ran a task. `rust/tests/parallel_exec.rs`
+//! and the exec-mode property in `rust/tests/prop_invariants.rs` pin this.
 //!
-//! The pool is scoped (`std::thread::scope`): workers borrow the caller's
-//! stack data directly, no `'static` bounds, no channels, and a panicking
-//! worker propagates at the join as usual. Threads are spawned per call;
-//! for the millisecond-scale phases this engine serves, spawn cost is
-//! noise, and small inputs skip spawning entirely via the serial fast
-//! path.
+//! # Round arenas
+//!
+//! [`BufferPool`] is the reusable-buffer primitive behind the
+//! zero-allocation steady state: hot phases *take* a scratch buffer
+//! (recycled, cleared) and *put* it back after the round, so after the
+//! warm-up round the steady state allocates ~nothing. Pools count hits,
+//! misses (fresh allocations) and reused bytes ([`ArenaStats`]), which
+//! the coordinator aggregates into `BuildStats::arena_bytes_reused` /
+//! `arena_allocs`.
 
+use std::any::Any;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Default rows-per-chunk for row-wise phases (histograms, partitioning,
 /// gradients, prediction). Chunk boundaries are a pure function of the
@@ -61,6 +95,18 @@ pub const BLOCK_ROWS: usize = 64;
 /// is untouched (see `hist/mod.rs` module docs).
 pub const HIST_BLOCK_ROWS: usize = 8;
 
+/// Read a boolean env flag exactly once per process (`1`/any non-empty
+/// value other than `0` is true), caching the answer in the caller's
+/// `OnceLock`. Shared by every mode-selection env var so there is a
+/// single idiom and no per-call env reads or races.
+fn env_flag(var: &str, cell: &OnceLock<bool>) -> bool {
+    *cell.get_or_init(|| {
+        std::env::var(var)
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
 /// Which inner-loop implementation the hot kernels run: the blocked,
 /// branchless kernels (default) or the original scalar loops kept as the
 /// bit-parity reference. Selected once per process from the
@@ -79,13 +125,8 @@ pub enum KernelMode {
 impl KernelMode {
     /// The process-wide mode (env read once, then cached).
     pub fn from_env() -> KernelMode {
-        static SCALAR: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-        let scalar = *SCALAR.get_or_init(|| {
-            std::env::var("XGB_SCALAR_KERNELS")
-                .map(|v| !v.is_empty() && v != "0")
-                .unwrap_or(false)
-        });
-        if scalar {
+        static SCALAR: OnceLock<bool> = OnceLock::new();
+        if env_flag("XGB_SCALAR_KERNELS", &SCALAR) {
             KernelMode::Scalar
         } else {
             KernelMode::Blocked
@@ -93,10 +134,312 @@ impl KernelMode {
     }
 }
 
-/// A thread budget for the parallel primitives. Cheap to clone/copy.
+/// Which execution engine [`ExecContext::new`] builds: the persistent
+/// parked worker pool (default) or the original scoped spawn-per-call
+/// engine kept as the independent reference (`XGB_SCOPED_EXEC=1`). The
+/// two are bit-identical in every result; only wake/spawn overhead
+/// differs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Long-lived workers parked between calls (spawn once → park →
+    /// wake → join-at-drop).
+    Persistent,
+    /// `std::thread::scope` spawn-per-call — the reference engine.
+    Scoped,
+}
+
+/// 0 = follow the env, 1 = force Persistent, 2 = force Scoped.
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Process-wide override of the engine choice, for in-process
+/// mode-comparison tests and benches that cannot use the (once-cached)
+/// env var. Safe to flip mid-process *because* the engines are
+/// bit-identical: concurrently running code only ever differs in
+/// wake overhead, never in results.
+pub fn set_exec_mode_override(mode: Option<ExecMode>) {
+    let v = match mode {
+        None => 0,
+        Some(ExecMode::Persistent) => 1,
+        Some(ExecMode::Scoped) => 2,
+    };
+    MODE_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+impl ExecMode {
+    /// The process-wide mode: the test/bench override if set, else the
+    /// `XGB_SCOPED_EXEC` env var (read once, then cached).
+    pub fn from_env() -> ExecMode {
+        static SCOPED: OnceLock<bool> = OnceLock::new();
+        match MODE_OVERRIDE.load(Ordering::SeqCst) {
+            1 => ExecMode::Persistent,
+            2 => ExecMode::Scoped,
+            _ => {
+                if env_flag("XGB_SCOPED_EXEC", &SCOPED) {
+                    ExecMode::Scoped
+                } else {
+                    ExecMode::Persistent
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased pointer to a job's task closure. The pointer is only
+/// dereferenced between a successful task claim and that task's
+/// `pending` decrement, a window during which the submitting call is
+/// still blocked in [`WorkerPool::run_job`] — so the borrowed closure is
+/// guaranteed alive (see the safety comment in [`Job::execute`]).
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls from any thread are fine)
+// and the pointer's validity is enforced by the run_job completion wait.
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// One published batch of tasks: an atomic claim counter over
+/// `0..n_tasks`, the erased closure, and completion/panic bookkeeping.
+struct Job {
+    task: TaskPtr,
+    n_tasks: usize,
+    /// Next unclaimed task index (may overshoot `n_tasks`).
+    next: AtomicUsize,
+    /// Tasks not yet *completed*. The submitter returns only when this
+    /// hits zero — the memory-safety linchpin for the borrowed closure.
+    pending: AtomicUsize,
+    /// Workers that have joined this job (the submitter is not counted).
+    /// Capped at `max_helpers` so a forked budget never oversubscribes.
+    helpers: AtomicUsize,
+    max_helpers: usize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+    /// First panic payload from any task, resumed on the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Job {
+    /// May another parked worker usefully join? (Checked under the pool
+    /// mutex, so the helper cap is never overshot.)
+    fn joinable(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n_tasks
+            && self.helpers.load(Ordering::Relaxed) < self.max_helpers
+    }
+
+    /// Claim-and-run loop shared by the submitter and every helper.
+    fn execute(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_tasks {
+                break;
+            }
+            // SAFETY: we hold an unfinished claim on task `i`, so
+            // `pending >= 1` until the decrement below — and the
+            // submitter blocks in run_job until `pending == 0`, keeping
+            // the closure (a borrow of its stack) alive for this call.
+            let f = unsafe { &*self.task.0 };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = self.done.lock().unwrap();
+                *d = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolState {
+    /// Jobs with unclaimed tasks. Submitters push/remove; parked workers
+    /// scan for a joinable entry.
+    jobs: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Parked workers wait here; notified on job submission + shutdown.
+    work_cv: Condvar,
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.jobs.iter().find(|j| j.joinable()) {
+                    j.helpers.fetch_add(1, Ordering::Relaxed);
+                    break j.clone();
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job.execute();
+        // parked again on the next lock/wait above
+    }
+}
+
+/// The persistent pool: `n_workers` parked OS threads plus whatever
+/// thread calls in. Joined (after a shutdown flag + wake) when the last
+/// owning [`ExecContext`] clone drops.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n_workers: usize,
+    /// Accumulated submit/wake + post-claim join-wait nanos — the pool's
+    /// per-call overhead (everything that is not task execution on the
+    /// calling thread).
+    wake_nanos: AtomicU64,
+}
+
+impl WorkerPool {
+    fn start(n_workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n_workers);
+        for k in 0..n_workers {
+            let sh = shared.clone();
+            // a failed spawn just means fewer helpers; jobs still
+            // complete on the submitting thread
+            if let Ok(h) = std::thread::Builder::new()
+                .name(format!("xgb-exec-{k}"))
+                .spawn(move || worker_loop(sh))
+            {
+                handles.push(h);
+            }
+        }
+        WorkerPool {
+            shared,
+            n_workers: handles.len(),
+            handles,
+            wake_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish `n_tasks` tasks under a `budget`-thread cap, participate
+    /// from the calling thread, and return once every task completed.
+    /// Nested submissions from pool workers are fine: the submitter
+    /// always participates, so progress never depends on a free worker.
+    fn run_job(&self, budget: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(n_tasks > 0);
+        let t0 = Instant::now();
+        // lifetime erasure; validity is enforced by the completion wait
+        // below (see Job::execute safety comment)
+        let task = TaskPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+                as *const _
+        });
+        let job = Arc::new(Job {
+            task,
+            n_tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_tasks),
+            helpers: AtomicUsize::new(0),
+            max_helpers: budget.min(n_tasks).saturating_sub(1),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        if job.max_helpers > 0 {
+            self.shared.state.lock().unwrap().jobs.push(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        let submitted = t0.elapsed();
+        job.execute();
+        let wait_t = Instant::now();
+        {
+            let mut d = job.done.lock().unwrap();
+            while !*d {
+                d = job.done_cv.wait(d).unwrap();
+            }
+        }
+        let waited = wait_t.elapsed();
+        if job.max_helpers > 0 {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        self.wake_nanos.fetch_add(
+            (submitted.as_nanos() + waited.as_nanos()) as u64,
+            Ordering::Relaxed,
+        );
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pool storage shared by every clone/fork of a pooled [`ExecContext`].
+/// Workers are spawned lazily on the first parallel call (so contexts
+/// created only to *report* a thread count never spawn anything).
+struct LazyPool {
+    /// The root context's resolved budget; the pool spawns
+    /// `root_threads - 1` workers (the caller is the remaining thread).
+    root_threads: usize,
+    cell: OnceLock<WorkerPool>,
+}
+
+impl LazyPool {
+    fn get(&self) -> &WorkerPool {
+        self.cell
+            .get_or_init(|| WorkerPool::start(self.root_threads.saturating_sub(1)))
+    }
+}
+
+#[derive(Clone)]
+enum Engine {
+    /// `threads <= 1`: every primitive runs inline on the caller.
+    Serial,
+    /// Scoped spawn-per-call reference engine; the counter accumulates
+    /// measured spawn nanos (the scoped analogue of pool wake time).
+    Scoped(Arc<AtomicU64>),
+    /// The persistent parked pool (shared across clones and forks).
+    Pooled(Arc<LazyPool>),
+}
+
+/// A thread budget for the parallel primitives, backed by either the
+/// persistent pool or the scoped reference engine (module docs). Cheap
+/// to clone: clones and [`fork`](ExecContext::fork)s share one pool.
+#[derive(Clone)]
 pub struct ExecContext {
     threads: usize,
+    engine: Engine,
+}
+
+impl std::fmt::Debug for ExecContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mode = match self.engine {
+            Engine::Serial => "serial",
+            Engine::Scoped(_) => "scoped",
+            Engine::Pooled(_) => "pooled",
+        };
+        write!(f, "ExecContext({} threads, {mode})", self.threads)
+    }
 }
 
 impl Default for ExecContext {
@@ -109,18 +452,39 @@ impl Default for ExecContext {
 impl ExecContext {
     /// `threads = 0` resolves to the machine's available parallelism;
     /// `threads = 1` is the serial engine (no threads are ever spawned).
+    /// The engine is the persistent pool unless `XGB_SCOPED_EXEC=1` (or
+    /// a [`set_exec_mode_override`]) selects the scoped reference.
     pub fn new(threads: usize) -> Self {
+        Self::with_mode(threads, ExecMode::from_env())
+    }
+
+    /// Explicit-engine constructor for benches and mode-parity tests
+    /// (the env-independent analogue of the kernel `_mode` functions).
+    pub fn with_mode(threads: usize, mode: ExecMode) -> Self {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        ExecContext { threads }
+        if threads <= 1 {
+            return ExecContext::serial();
+        }
+        let engine = match mode {
+            ExecMode::Scoped => Engine::Scoped(Arc::new(AtomicU64::new(0))),
+            ExecMode::Persistent => Engine::Pooled(Arc::new(LazyPool {
+                root_threads: threads,
+                cell: OnceLock::new(),
+            })),
+        };
+        ExecContext { threads, engine }
     }
 
     /// The serial engine: every primitive runs inline on the caller.
     pub fn serial() -> Self {
-        ExecContext { threads: 1 }
+        ExecContext {
+            threads: 1,
+            engine: Engine::Serial,
+        }
     }
 
     /// Resolved worker count (>= 1).
@@ -130,11 +494,41 @@ impl ExecContext {
 
     /// Split this budget across `ways` concurrent consumers (e.g. give
     /// each of `p` device shards `threads / p` workers for its own
-    /// chunk-level parallelism). Never returns a zero budget.
+    /// chunk-level parallelism). Never returns a zero budget. The forked
+    /// context **shares this context's worker pool** — the sub-budget
+    /// caps how many pooled workers may join each of its jobs, so nested
+    /// parallelism never oversubscribes the root budget.
     pub fn fork(&self, ways: usize) -> ExecContext {
         ExecContext {
             threads: (self.threads / ways.max(1)).max(1),
+            engine: self.engine.clone(),
         }
+    }
+
+    /// Persistent workers currently spawned for this context's pool
+    /// (0 for the serial/scoped engines, and before the first parallel
+    /// call wakes the lazy pool).
+    pub fn pool_workers(&self) -> usize {
+        match &self.engine {
+            Engine::Pooled(p) => p.cell.get().map(|w| w.n_workers).unwrap_or(0),
+            _ => 0,
+        }
+    }
+
+    /// Accumulated engine overhead seconds: pool submit/wake + join-wait
+    /// time (persistent), or measured thread-spawn time (scoped). Shared
+    /// across clones/forks of one context; 0 for the serial engine.
+    pub fn wake_wall_secs(&self) -> f64 {
+        let nanos = match &self.engine {
+            Engine::Serial => 0,
+            Engine::Scoped(n) => n.load(Ordering::Relaxed),
+            Engine::Pooled(p) => p
+                .cell
+                .get()
+                .map(|w| w.wake_nanos.load(Ordering::Relaxed))
+                .unwrap_or(0),
+        };
+        nanos as f64 * 1e-9
     }
 
     /// Core primitive: run `f(0), f(1), …, f(n_tasks - 1)` and return the
@@ -149,21 +543,33 @@ impl ExecContext {
         if self.threads <= 1 || n_tasks <= 1 {
             return (0..n_tasks).map(f).collect();
         }
-        let n_workers = self.threads.min(n_tasks);
-        let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<R>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..n_workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_tasks {
-                        break;
-                    }
-                    let r = f(i);
-                    *slots[i].lock().unwrap() = Some(r);
+        match &self.engine {
+            Engine::Serial => unreachable!("serial engines have threads == 1"),
+            Engine::Pooled(pool) => {
+                pool.get().run_job(self.threads, n_tasks, &|i| {
+                    *slots[i].lock().unwrap() = Some(f(i));
                 });
             }
-        });
+            Engine::Scoped(spawn_nanos) => {
+                let n_workers = self.threads.min(n_tasks);
+                let next = AtomicUsize::new(0);
+                let t0 = Instant::now();
+                std::thread::scope(|scope| {
+                    for _ in 0..n_workers {
+                        scope.spawn(|| loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n_tasks {
+                                break;
+                            }
+                            let r = f(i);
+                            *slots[i].lock().unwrap() = Some(r);
+                        });
+                    }
+                    spawn_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+            }
+        }
         slots
             .into_iter()
             .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
@@ -230,11 +636,12 @@ impl ExecContext {
     /// of the paged histogram build (the worker prefetches the next page
     /// from disk while the caller accumulates the current one). The
     /// worker thread is **in addition to** the configured `threads()`
-    /// budget (it spends its life blocked on I/O or a channel, not
-    /// computing, so it is not counted against the compute budget) and
-    /// always runs; callers that want a serial fallback (e.g.
-    /// `threads() <= 1`) should skip this call and inline both sides. A
-    /// panicking worker propagates at the scope join as usual.
+    /// budget and deliberately *not* a pool worker: it spends its life
+    /// blocked on I/O or a channel, not computing, so parking a compute
+    /// worker on it would waste a budget slot. It always runs; callers
+    /// that want a serial fallback (e.g. `threads() <= 1`) should skip
+    /// this call and inline both sides. A panicking worker propagates at
+    /// the scope join as usual.
     pub fn run_with_worker<R, W, F>(&self, worker: W, main: F) -> R
     where
         R: Send,
@@ -276,6 +683,104 @@ impl ExecContext {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Round arenas
+// ---------------------------------------------------------------------------
+
+/// Hit/miss/reuse counters of one or more [`BufferPool`]s. `misses` is
+/// the number of *fresh allocations* — the steady-state target is ~0 per
+/// round after warm-up (`BuildStats::arena_allocs`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Takes served from a recycled buffer.
+    pub hits: u64,
+    /// Takes that had to allocate fresh.
+    pub misses: u64,
+    /// Bytes of pre-existing capacity handed back out on hits.
+    pub bytes_reused: u64,
+}
+
+impl ArenaStats {
+    pub fn merge(&mut self, other: ArenaStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.bytes_reused += other.bytes_reused;
+    }
+}
+
+/// A reusable-buffer pool: the round-arena primitive. `take(len)` hands
+/// out a cleared, `len`-sized buffer (recycled when one is parked,
+/// freshly allocated otherwise — counted as a miss); `put` parks a
+/// buffer for the next round. Internally synchronised, so chunk workers
+/// can take/put concurrently; buffers carry their capacity across
+/// rounds, which is what makes the steady state allocation-free.
+#[derive(Debug)]
+pub struct BufferPool<T> {
+    free: Mutex<Vec<Vec<T>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_reused: AtomicU64,
+}
+
+impl<T> Default for BufferPool<T> {
+    fn default() -> Self {
+        BufferPool {
+            free: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_reused: AtomicU64::new(0),
+        }
+    }
+}
+
+impl<T: Clone + Default> BufferPool<T> {
+    /// A cleared buffer of exactly `len` elements (all `T::default()`).
+    pub fn take(&self, len: usize) -> Vec<T> {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_reused.fetch_add(
+                    (buf.capacity().min(len) * std::mem::size_of::<T>()) as u64,
+                    Ordering::Relaxed,
+                );
+                buf.clear();
+                buf.resize(len, T::default());
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![T::default(); len]
+            }
+        }
+    }
+
+    /// Park a buffer for reuse (empty-capacity buffers are dropped).
+    pub fn put(&self, buf: Vec<T>) {
+        if buf.capacity() > 0 {
+            self.free.lock().unwrap().push(buf);
+        }
+    }
+
+    /// Counters since construction (or the last [`drain_stats`](Self::drain_stats)).
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Read-and-reset the counters (per-tree/round accounting).
+    pub fn drain_stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits.swap(0, Ordering::Relaxed),
+            misses: self.misses.swap(0, Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +806,86 @@ mod tests {
             let par = ExecContext::new(t).parallel_map(&items, |i, &x| x * x + i as u64);
             assert_eq!(par, serial, "threads = {t}");
         }
+    }
+
+    #[test]
+    fn scoped_and_pooled_engines_agree() {
+        let items: Vec<u64> = (0..4096).collect();
+        let want = ExecContext::serial().parallel_map(&items, |i, &x| x * 3 + i as u64);
+        for t in [2usize, 4, 8] {
+            for mode in [ExecMode::Persistent, ExecMode::Scoped] {
+                let exec = ExecContext::with_mode(t, mode);
+                let got = exec.parallel_map(&items, |i, &x| x * 3 + i as u64);
+                assert_eq!(got, want, "threads = {t}, mode = {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_lifecycle_stable_across_100_calls() {
+        use std::collections::HashSet;
+        use std::sync::Mutex as StdMutex;
+        let exec = ExecContext::with_mode(4, ExecMode::Persistent);
+        assert_eq!(exec.pool_workers(), 0, "lazy: nothing spawned before first call");
+        let seen: StdMutex<HashSet<std::thread::ThreadId>> = StdMutex::new(HashSet::new());
+        let mut workers_after_first = None;
+        for call in 0..100 {
+            let out = exec.run_indexed(16, |i| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+                i * i
+            });
+            assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>(), "call {call}");
+            let w = exec.pool_workers();
+            assert!(w <= 3, "at most threads-1 persistent workers, got {w}");
+            match workers_after_first {
+                None => workers_after_first = Some(w),
+                Some(first) => assert_eq!(w, first, "worker count moved at call {call}"),
+            }
+        }
+        // every thread that ever ran a task is either the caller or one
+        // of the persistent workers — no thread was ever re-spawned
+        let distinct = seen.lock().unwrap().len();
+        assert!(
+            distinct <= exec.pool_workers() + 1,
+            "{distinct} distinct threads for {} workers + caller",
+            exec.pool_workers()
+        );
+        assert!(exec.wake_wall_secs() >= 0.0);
+    }
+
+    #[test]
+    fn nested_fork_submissions_complete_on_shared_pool() {
+        // devices × chunks on one pool: the outer job's workers submit
+        // inner jobs; the submitter-participates rule means this cannot
+        // deadlock even with every worker busy
+        let exec = ExecContext::with_mode(4, ExecMode::Persistent);
+        let dev_exec = exec.fork(2);
+        let per_dev: Vec<u64> = exec.run_indexed(2, |d| {
+            dev_exec
+                .map_chunks(10_000, 512, |_, r| r.map(|x| x as u64).sum::<u64>())
+                .into_iter()
+                .sum::<u64>()
+                + d as u64
+        });
+        let want: u64 = (0..10_000u64).sum();
+        assert_eq!(per_dev, vec![want, want + 1]);
+    }
+
+    #[test]
+    fn pooled_panic_propagates_to_submitter() {
+        let exec = ExecContext::with_mode(4, ExecMode::Persistent);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run_indexed(8, |i| {
+                if i == 5 {
+                    panic!("task 5 exploded");
+                }
+                i
+            })
+        }));
+        assert!(caught.is_err(), "panic must reach the submitter");
+        // the pool survives a panicked job: the next call works
+        let out = exec.run_indexed(8, |i| i + 1);
+        assert_eq!(out, (1..9).collect::<Vec<_>>());
     }
 
     #[test]
@@ -407,5 +992,25 @@ mod tests {
         for t in [2usize, 4, 8] {
             assert_eq!(s1.to_bits(), sum_with(t).to_bits(), "threads = {t}");
         }
+    }
+
+    #[test]
+    fn buffer_pool_recycles_capacity() {
+        let pool: BufferPool<u64> = BufferPool::default();
+        let a = pool.take(1000);
+        assert_eq!(a.len(), 1000);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (0, 1), "first take is a miss");
+        pool.put(a);
+        let b = pool.take(500);
+        assert_eq!(b.len(), 500);
+        assert!(b.iter().all(|&x| x == 0), "recycled buffers come back cleared");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_reused, 500 * 8);
+        pool.put(b);
+        let d = pool.drain_stats();
+        assert_eq!(d.hits, 1);
+        assert_eq!(pool.stats(), ArenaStats::default(), "drain resets");
     }
 }

@@ -290,7 +290,7 @@ impl Booster {
         valid: Option<&Dataset>,
     ) -> Result<Booster> {
         #[allow(deprecated)]
-        Self::train_with_backend(params, train, valid, Box::new(NativeBackend))
+        Self::train_with_backend(params, train, valid, Box::new(NativeBackend::default()))
     }
 
     /// Train with an explicit histogram backend (e.g. the XLA runtime).

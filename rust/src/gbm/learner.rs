@@ -328,7 +328,7 @@ impl Learner {
 
     /// Train with the native histogram backend.
     pub fn train(&mut self, train: &Dataset, valid: Option<&Dataset>) -> Result<Booster> {
-        self.train_with_backend(train, valid, Box::new(NativeBackend))
+        self.train_with_backend(train, valid, Box::new(NativeBackend::default()))
     }
 
     /// Train with an explicit histogram backend (e.g. the XLA runtime).
@@ -370,7 +370,7 @@ impl Learner {
         src: &mut dyn BatchSource,
         valid: Option<&Dataset>,
     ) -> Result<Booster> {
-        self.train_from_source_with_backend(src, valid, Box::new(NativeBackend))
+        self.train_from_source_with_backend(src, valid, Box::new(NativeBackend::default()))
     }
 
     /// [`train_from_source`](Self::train_from_source) with an explicit
@@ -464,8 +464,12 @@ impl Learner {
         }
 
         let mut sub_rng = crate::util::Pcg64::new(params.seed ^ 0x5b5a);
+        // round-arena out-param: the gradient buffers live outside the
+        // round loop and are rewritten in place every round — after the
+        // warm-up round the gradient phase allocates nothing
+        let mut grads: Vec<Vec<crate::GradPair>> = Vec::new();
         for round in 0..params.num_rounds {
-            let mut grads = objective.gradients_par(train, &margins, &exec);
+            objective.gradients_par_into(train, &margins, &exec, &mut grads);
             if params.subsample < 1.0 {
                 // exclude unsampled rows from this round's trees by zeroing
                 // their gradient mass (same rows for all k outputs)
@@ -490,6 +494,8 @@ impl Learner {
                 }
                 build_stats.accumulate(&result.stats);
                 trees[c].push(result.tree);
+                // spent delta buffer goes back to the coordinator's arena
+                coordinator.recycle_deltas(result.deltas);
             }
 
             let mut stop = false;

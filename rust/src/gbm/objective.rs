@@ -12,20 +12,34 @@ use crate::data::Dataset;
 use crate::exec::{ExecContext, ROW_CHUNK};
 use crate::{Float, GradPair};
 
-/// Chunk a single-output row-wise gradient map across the pool. Each
-/// row's pair is computed independently and chunks concatenate in index
-/// order, so the result is bit-identical to the serial map.
-fn rowwise_par<F>(n: usize, exec: &ExecContext, f: F) -> Vec<GradPair>
+/// Shape `out` as `k` gradient vectors of length `n` without dropping
+/// capacity — the round-arena idiom for the out-param gradient path:
+/// steady-state boosting rounds rewrite the same buffers in place.
+fn prepare_out(out: &mut Vec<Vec<GradPair>>, k: usize, n: usize) {
+    out.truncate(k);
+    while out.len() < k {
+        out.push(Vec::new());
+    }
+    for v in out.iter_mut() {
+        v.clear();
+        v.resize(n, GradPair::default());
+    }
+}
+
+/// Chunk a single-output row-wise gradient map across the pool, writing
+/// into the reusable out-param. Each row's pair is computed independently
+/// and chunks concatenate in index order, so the result is bit-identical
+/// to the serial map.
+fn rowwise_par_into<F>(n: usize, exec: &ExecContext, out: &mut Vec<Vec<GradPair>>, f: F)
 where
     F: Fn(usize) -> GradPair + Sync,
 {
-    let mut out = vec![GradPair::default(); n];
-    exec.for_each_slice_mut(&mut out, ROW_CHUNK, |_, start, chunk| {
+    prepare_out(out, 1, n);
+    exec.for_each_slice_mut(&mut out[0], ROW_CHUNK, |_, start, chunk| {
         for (i, g) in chunk.iter_mut().enumerate() {
             *g = f(start + i);
         }
     });
-    out
 }
 
 /// A training objective.
@@ -51,19 +65,38 @@ pub trait Objective: Send + Sync {
     /// * returns `n_outputs` gradient vectors, each length n.
     fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>>;
 
-    /// Chunk-parallel [`gradients`](Self::gradients) — must return the
-    /// same values bit for bit at every thread count. The default falls
-    /// back to the serial path; the row-wise objectives (squared error,
-    /// logistic) override with a pool-parallel map. Mirrors the paper's
-    /// §2.5 split: those two run on device, the rest stay host-serial.
+    /// Chunk-parallel [`gradients`](Self::gradients) into a reusable
+    /// out-param — must produce the same values bit for bit at every
+    /// thread count. `out` keeps its allocation across boosting rounds
+    /// (the learner passes the same buffer every round), so steady-state
+    /// gradient computation allocates nothing. The default falls back to
+    /// the serial path; the row-wise objectives (squared error, logistic)
+    /// override with a pool-parallel map, mirroring the paper's §2.5
+    /// split: those two run on device, the rest stay host-serial.
+    fn gradients_par_into(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
+        let _ = exec;
+        *out = self.gradients(ds, margins);
+    }
+
+    /// Allocating convenience over
+    /// [`gradients_par_into`](Self::gradients_par_into) (tests, one-shot
+    /// callers). Round loops should hold a buffer and call the `_into`
+    /// form instead.
     fn gradients_par(
         &self,
         ds: &Dataset,
         margins: &[Vec<Float>],
         exec: &ExecContext,
     ) -> Vec<Vec<GradPair>> {
-        let _ = exec;
-        self.gradients(ds, margins)
+        let mut out = Vec::new();
+        self.gradients_par_into(ds, margins, exec, &mut out);
+        out
     }
 
     /// Transform raw margins into the user-facing prediction
@@ -117,14 +150,15 @@ impl Objective for SquaredError {
             .collect()]
     }
 
-    fn gradients_par(
+    fn gradients_par_into(
         &self,
         ds: &Dataset,
         margins: &[Vec<Float>],
         exec: &ExecContext,
-    ) -> Vec<Vec<GradPair>> {
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
         let (y, m) = (&ds.y, &margins[0]);
-        vec![rowwise_par(y.len(), exec, |i| GradPair::new(m[i] - y[i], 1.0))]
+        rowwise_par_into(y.len(), exec, out, |i| GradPair::new(m[i] - y[i], 1.0));
     }
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
@@ -164,17 +198,18 @@ impl Objective for Logistic {
             .collect()]
     }
 
-    fn gradients_par(
+    fn gradients_par_into(
         &self,
         ds: &Dataset,
         margins: &[Vec<Float>],
         exec: &ExecContext,
-    ) -> Vec<Vec<GradPair>> {
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
         let (y, m) = (&ds.y, &margins[0]);
-        vec![rowwise_par(y.len(), exec, |i| {
+        rowwise_par_into(y.len(), exec, out, |i| {
             let p = sigmoid(m[i]);
             GradPair::new(p - y[i], (p * (1.0 - p)).max(1e-16))
-        })]
+        });
     }
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
@@ -254,12 +289,13 @@ impl Objective for Softmax {
     /// objectives: per-chunk k-way partials concatenate in ascending chunk
     /// order, making the result bit-identical to the serial path at every
     /// thread count.
-    fn gradients_par(
+    fn gradients_par_into(
         &self,
         ds: &Dataset,
         margins: &[Vec<Float>],
         exec: &ExecContext,
-    ) -> Vec<Vec<GradPair>> {
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
         let n = ds.y.len();
         let chunks: Vec<Vec<Vec<GradPair>>> = exec.map_chunks(n, ROW_CHUNK, |_, range| {
             let mut part: Vec<Vec<GradPair>> =
@@ -273,13 +309,19 @@ impl Objective for Softmax {
             }
             part
         });
-        let mut out: Vec<Vec<GradPair>> = (0..self.k).map(|_| Vec::with_capacity(n)).collect();
+        out.truncate(self.k);
+        while out.len() < self.k {
+            out.push(Vec::new());
+        }
+        for v in out.iter_mut() {
+            v.clear();
+            v.reserve(n);
+        }
         for part in chunks {
             for (c, v) in part.into_iter().enumerate() {
                 out[c].extend(v);
             }
         }
-        out
     }
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
@@ -349,12 +391,13 @@ impl Objective for PairwiseRank {
     /// accumulation order is untouched, and across groups the rows are
     /// disjoint. Bit-identical at every thread count
     /// (`pairwise_parallel_gradients_bit_identical`).
-    fn gradients_par(
+    fn gradients_par_into(
         &self,
         ds: &Dataset,
         margins: &[Vec<Float>],
         exec: &ExecContext,
-    ) -> Vec<Vec<GradPair>> {
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
         let n = ds.y.len();
         let m = &margins[0];
         let groups: Vec<usize> = if ds.groups.is_empty() {
@@ -388,11 +431,16 @@ impl Objective for PairwiseRank {
             }
             part
         });
-        let mut grads = Vec::with_capacity(n);
+        out.truncate(1);
+        if out.is_empty() {
+            out.push(Vec::new());
+        }
+        let grads = &mut out[0];
+        grads.clear();
+        grads.reserve(n);
         for part in parts {
             grads.extend(part);
         }
-        vec![grads]
     }
 
     fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {

@@ -64,9 +64,43 @@ use anyhow::Result;
 
 use crate::compress::page::{PageHandle, PageStore};
 use crate::compress::CompressedMatrix;
-use crate::exec::{ExecContext, KernelMode, HIST_BLOCK_ROWS, ROW_CHUNK};
+use crate::exec::{ArenaStats, BufferPool, ExecContext, KernelMode, HIST_BLOCK_ROWS, ROW_CHUNK};
 use crate::quantile::QuantizedMatrix;
 use crate::GradPair;
+
+/// Reusable round scratch for the histogram builders: the per-chunk
+/// scratch-extended partials (`n_bins + 1` slots) and the blocked
+/// kernels' per-block symbol decode buffers. Owned long-term by the
+/// executing backend (`coordinator::NativeBackend`), so after the
+/// warm-up round every chunk takes a recycled buffer instead of
+/// allocating — the steady-state training rounds allocate ~nothing
+/// here. Buffer reuse never changes *values*: partials come back
+/// cleared and the decode scratch is fully overwritten before reads,
+/// so the bit-identity contract is untouched.
+#[derive(Debug, Default)]
+pub struct HistArena {
+    /// Per-chunk partial histograms (`Vec<GradPairF64>`, width `n_bins + 1`).
+    pub partials: BufferPool<GradPairF64>,
+    /// Blocked-kernel symbol decode scratch (`HIST_BLOCK_ROWS × stride`).
+    pub sym: BufferPool<u32>,
+}
+
+impl HistArena {
+    /// Combined read-and-reset counters of both pools.
+    pub fn drain_stats(&self) -> ArenaStats {
+        let mut s = self.partials.drain_stats();
+        s.merge(self.sym.drain_stats());
+        s
+    }
+}
+
+impl Clone for HistArena {
+    /// Clones start with fresh (empty) pools — an arena is per-owner
+    /// scratch, not shared state.
+    fn clone(&self) -> Self {
+        HistArena::default()
+    }
+}
 
 /// Double-precision gradient pair used for histogram accumulation
 /// (XGBoost's `GradientPairPrecise`).
@@ -293,11 +327,12 @@ fn accumulate_compressed_blocked(
     gradients: &[GradPair],
     rows: &[u32],
     bins: &mut [GradPairF64],
+    sym_pool: &BufferPool<u32>,
 ) {
     let scratch = bins.len() - 1; // == cm.n_bins, the null symbol's slot
     let stride = cm.row_stride;
     let mut g = [GradPairF64::default(); HIST_BLOCK_ROWS];
-    let mut sym = vec![0u32; HIST_BLOCK_ROWS * stride];
+    let mut sym = sym_pool.take(HIST_BLOCK_ROWS * stride);
     for block in rows.chunks(HIST_BLOCK_ROWS) {
         for (j, &r) in block.iter().enumerate() {
             g[j] = GradPairF64::from_single(gradients[r as usize]);
@@ -312,6 +347,7 @@ fn accumulate_compressed_blocked(
             }
         }
     }
+    sym_pool.put(sym);
 }
 
 /// Fold the real bins of a scratch-extended partial into `out` in
@@ -333,33 +369,42 @@ fn fold_partial(out: &mut Histogram, partial: &[GradPairF64]) {
 /// in ascending chunk order. Starting every f64 chain at `+0.0` keeps
 /// the fold bit-exact: a chain seeded at `+0.0` can never produce
 /// `-0.0`, and `+0.0 + x == x` bitwise for every such `x`.
-fn chunked_build<F>(n_bins: usize, rows: &[u32], out: &mut Histogram, exec: &ExecContext, accumulate: F)
-where
+fn chunked_build<F>(
+    n_bins: usize,
+    rows: &[u32],
+    out: &mut Histogram,
+    exec: &ExecContext,
+    arena: &HistArena,
+    accumulate: F,
+) where
     F: Fn(&[u32], &mut [GradPairF64]) + Sync,
 {
     let width = n_bins + 1;
     if rows.len() <= ROW_CHUNK {
-        let mut partial = vec![GradPairF64::default(); width];
+        let mut partial = arena.partials.take(width);
         accumulate(rows, &mut partial);
         fold_partial(out, &partial);
+        arena.partials.put(partial);
         return;
     }
     if exec.threads() <= 1 {
-        let mut partial = vec![GradPairF64::default(); width];
+        let mut partial = arena.partials.take(width);
         for chunk in rows.chunks(ROW_CHUNK) {
             partial.fill(GradPairF64::default());
             accumulate(chunk, &mut partial);
             fold_partial(out, &partial);
         }
+        arena.partials.put(partial);
     } else {
         let partials = exec.map_chunks(rows.len(), ROW_CHUNK, |_, r| {
-            let mut p = vec![GradPairF64::default(); width];
+            let mut p = arena.partials.take(width);
             accumulate(&rows[r], &mut p);
             p
         });
         // merge in ascending chunk index — the determinism contract
-        for p in &partials {
-            fold_partial(out, p);
+        for p in partials {
+            fold_partial(out, &p);
+            arena.partials.put(p);
         }
     }
 }
@@ -387,11 +432,14 @@ pub fn build_histogram_quantized_par(
     out: &mut Histogram,
     exec: &ExecContext,
 ) {
-    build_histogram_quantized_par_mode(qm, gradients, rows, out, exec, KernelMode::from_env());
+    let arena = HistArena::default();
+    build_histogram_quantized_par_mode(qm, gradients, rows, out, exec, KernelMode::from_env(), &arena);
 }
 
-/// [`build_histogram_quantized_par`] with an explicit [`KernelMode`] —
-/// lets benches and parity tests compare Blocked vs Scalar in-process.
+/// [`build_histogram_quantized_par`] with an explicit [`KernelMode`] and
+/// a caller-owned [`HistArena`] — lets benches and parity tests compare
+/// Blocked vs Scalar in-process, and lets the training backend recycle
+/// chunk scratch across rounds.
 pub fn build_histogram_quantized_par_mode(
     qm: &QuantizedMatrix,
     gradients: &[GradPair],
@@ -399,13 +447,14 @@ pub fn build_histogram_quantized_par_mode(
     out: &mut Histogram,
     exec: &ExecContext,
     mode: KernelMode,
+    arena: &HistArena,
 ) {
     assert_eq!(out.n_bins(), qm.n_bins);
     match mode {
-        KernelMode::Blocked => chunked_build(qm.n_bins, rows, out, exec, |chunk, bins| {
+        KernelMode::Blocked => chunked_build(qm.n_bins, rows, out, exec, arena, |chunk, bins| {
             accumulate_quantized_blocked(qm, gradients, chunk, bins)
         }),
-        KernelMode::Scalar => chunked_build(qm.n_bins, rows, out, exec, |chunk, bins| {
+        KernelMode::Scalar => chunked_build(qm.n_bins, rows, out, exec, arena, |chunk, bins| {
             accumulate_quantized_scalar(qm, gradients, chunk, bins)
         }),
     }
@@ -432,11 +481,14 @@ pub fn build_histogram_compressed_par(
     out: &mut Histogram,
     exec: &ExecContext,
 ) {
-    build_histogram_compressed_par_mode(cm, gradients, rows, out, exec, KernelMode::from_env());
+    let arena = HistArena::default();
+    build_histogram_compressed_par_mode(cm, gradients, rows, out, exec, KernelMode::from_env(), &arena);
 }
 
-/// [`build_histogram_compressed_par`] with an explicit [`KernelMode`] —
-/// lets benches and parity tests compare Blocked vs Scalar in-process.
+/// [`build_histogram_compressed_par`] with an explicit [`KernelMode`] and
+/// a caller-owned [`HistArena`] — lets benches and parity tests compare
+/// Blocked vs Scalar in-process, and lets the training backend recycle
+/// chunk scratch across rounds.
 pub fn build_histogram_compressed_par_mode(
     cm: &CompressedMatrix,
     gradients: &[GradPair],
@@ -444,13 +496,14 @@ pub fn build_histogram_compressed_par_mode(
     out: &mut Histogram,
     exec: &ExecContext,
     mode: KernelMode,
+    arena: &HistArena,
 ) {
     assert_eq!(out.n_bins(), cm.n_bins);
     match mode {
-        KernelMode::Blocked => chunked_build(cm.n_bins, rows, out, exec, |chunk, bins| {
-            accumulate_compressed_blocked(cm, gradients, chunk, bins)
+        KernelMode::Blocked => chunked_build(cm.n_bins, rows, out, exec, arena, |chunk, bins| {
+            accumulate_compressed_blocked(cm, gradients, chunk, bins, &arena.sym)
         }),
-        KernelMode::Scalar => chunked_build(cm.n_bins, rows, out, exec, |chunk, bins| {
+        KernelMode::Scalar => chunked_build(cm.n_bins, rows, out, exec, arena, |chunk, bins| {
             accumulate_compressed_scalar(cm, gradients, chunk, bins)
         }),
     }
@@ -474,6 +527,7 @@ fn accumulate_paged_chunk<F>(
     current: &mut Option<PageHandle>,
     fetch: &mut F,
     mode: KernelMode,
+    arena: &HistArena,
 ) -> Result<()>
 where
     F: FnMut(usize) -> Result<PageHandle>,
@@ -505,7 +559,7 @@ where
             let scratch = bins.len() - 1;
             let stride = store.shape.row_stride;
             let mut g = [GradPairF64::default(); HIST_BLOCK_ROWS];
-            let mut sym = vec![0u32; HIST_BLOCK_ROWS * stride];
+            let mut sym = arena.sym.take(HIST_BLOCK_ROWS * stride);
             for block in chunk.chunks(HIST_BLOCK_ROWS) {
                 // pass 1 (row order): resolve pages, convert gradients,
                 // block-decode each row's symbols from its page
@@ -531,6 +585,7 @@ where
                     }
                 }
             }
+            arena.sym.put(sym);
         }
     }
     Ok(())
@@ -548,23 +603,30 @@ fn paged_chunked_build<F>(
     out: &mut Histogram,
     fetch: &mut F,
     mode: KernelMode,
+    arena: &HistArena,
 ) -> Result<()>
 where
     F: FnMut(usize) -> Result<PageHandle>,
 {
     let width = out.n_bins() + 1;
     let mut current: Option<PageHandle> = None;
-    let mut partial = vec![GradPairF64::default(); width];
+    let mut partial = arena.partials.take(width);
     if rows.len() <= ROW_CHUNK {
-        accumulate_paged_chunk(store, gradients, rows, &mut partial, &mut current, fetch, mode)?;
+        accumulate_paged_chunk(
+            store, gradients, rows, &mut partial, &mut current, fetch, mode, arena,
+        )?;
         fold_partial(out, &partial);
+        arena.partials.put(partial);
         return Ok(());
     }
     for chunk in rows.chunks(ROW_CHUNK) {
         partial.fill(GradPairF64::default());
-        accumulate_paged_chunk(store, gradients, chunk, &mut partial, &mut current, fetch, mode)?;
+        accumulate_paged_chunk(
+            store, gradients, chunk, &mut partial, &mut current, fetch, mode, arena,
+        )?;
         fold_partial(out, &partial);
     }
+    arena.partials.put(partial);
     Ok(())
 }
 
@@ -593,7 +655,8 @@ pub fn build_histogram_paged(
     out: &mut Histogram,
     exec: &ExecContext,
 ) -> Result<()> {
-    build_histogram_paged_mode(store, gradients, rows, out, exec, KernelMode::from_env())
+    let arena = HistArena::default();
+    build_histogram_paged_mode(store, gradients, rows, out, exec, KernelMode::from_env(), &arena)
 }
 
 /// [`build_histogram_paged`] with an explicit [`KernelMode`] — lets
@@ -605,6 +668,7 @@ pub fn build_histogram_paged_mode(
     out: &mut Histogram,
     exec: &ExecContext,
     mode: KernelMode,
+    arena: &HistArena,
 ) -> Result<()> {
     assert_eq!(out.n_bins(), store.shape.n_bins);
     // first-use page sequence (consecutive dedup) — the prefetch schedule
@@ -616,7 +680,7 @@ pub fn build_histogram_paged_mode(
         }
     }
     crate::compress::page::with_prefetched_pages(store, exec, seq, |fetch| {
-        paged_chunked_build(store, gradients, rows, out, &mut |p| fetch(p), mode)
+        paged_chunked_build(store, gradients, rows, out, &mut |p| fetch(p), mode, arena)
     })
 }
 
@@ -856,23 +920,24 @@ mod tests {
             let rows: Vec<u32> = (0..n as u32).collect();
             for threads in [1usize, 4] {
                 let exec = crate::exec::ExecContext::new(threads);
+                let arena = HistArena::default();
                 let mut pairs: Vec<(Histogram, Histogram)> = Vec::new();
                 let mut qs = Histogram::zeros(qm.n_bins);
                 let mut qb = Histogram::zeros(qm.n_bins);
                 build_histogram_quantized_par_mode(
-                    &qm, &grads, &rows, &mut qs, &exec, KernelMode::Scalar,
+                    &qm, &grads, &rows, &mut qs, &exec, KernelMode::Scalar, &arena,
                 );
                 build_histogram_quantized_par_mode(
-                    &qm, &grads, &rows, &mut qb, &exec, KernelMode::Blocked,
+                    &qm, &grads, &rows, &mut qb, &exec, KernelMode::Blocked, &arena,
                 );
                 pairs.push((qs, qb));
                 let mut cs = Histogram::zeros(qm.n_bins);
                 let mut cb = Histogram::zeros(qm.n_bins);
                 build_histogram_compressed_par_mode(
-                    &cm, &grads, &rows, &mut cs, &exec, KernelMode::Scalar,
+                    &cm, &grads, &rows, &mut cs, &exec, KernelMode::Scalar, &arena,
                 );
                 build_histogram_compressed_par_mode(
-                    &cm, &grads, &rows, &mut cb, &exec, KernelMode::Blocked,
+                    &cm, &grads, &rows, &mut cb, &exec, KernelMode::Blocked, &arena,
                 );
                 pairs.push((cs, cb));
                 let path = std::env::temp_dir().join(format!(
@@ -889,8 +954,16 @@ mod tests {
                 let store = b.finish().unwrap();
                 let mut ps = Histogram::zeros(qm.n_bins);
                 let mut pb = Histogram::zeros(qm.n_bins);
-                build_histogram_paged_mode(&store, &grads, &rows, &mut ps, &exec, KernelMode::Scalar)
-                    .unwrap();
+                build_histogram_paged_mode(
+                    &store,
+                    &grads,
+                    &rows,
+                    &mut ps,
+                    &exec,
+                    KernelMode::Scalar,
+                    &arena,
+                )
+                .unwrap();
                 build_histogram_paged_mode(
                     &store,
                     &grads,
@@ -898,6 +971,7 @@ mod tests {
                     &mut pb,
                     &exec,
                     KernelMode::Blocked,
+                    &arena,
                 )
                 .unwrap();
                 pairs.push((ps, pb));

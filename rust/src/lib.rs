@@ -179,6 +179,33 @@
 //!   `1` = serial). Measured per-phase wall-clock is reported in
 //!   `coordinator::BuildStats` alongside the simulated clock.
 //!
+//! The engine is a **persistent parked worker pool**: the first parallel
+//! call spawns `threads - 1` workers which then *park* on a condvar
+//! between calls — each subsequent round pays one wake broadcast (the
+//! cumulative cost is `exec::ExecContext::wake_wall_secs`, surfaced as
+//! `BuildStats::wake_wall_secs`) instead of `threads` spawn/join pairs,
+//! mirroring how a GPU keeps its SMs resident rather than re-launching a
+//! context per kernel. `ExecContext::fork` never spawns: a forked
+//! sub-context is a *budget sub-slice* of the same pool, so nested
+//! device × in-shard parallelism shares one set of OS threads. Workers
+//! join only when the pool is dropped. `XGB_SCOPED_EXEC=1` selects the
+//! previous spawn-per-call scoped engine, kept as the independent
+//! reference the property tests and the `ci.sh` exec-mode smoke compare
+//! against — both engines are bit-identical by construction because the
+//! chunking and merge order (below) never depend on which engine ran.
+//!
+//! On top of the pool sits a **round-arena layer**: the buffers a
+//! boosting round churns through — histogram partials and stored
+//! node histograms, flattened all-reduce payloads, decode blocks,
+//! partitioner scratch, per-round gradient vectors, the serve scorer's
+//! batch scratch — come from reusable pools (`exec::BufferPool`,
+//! `hist::HistArena`) that recycle capacity instead of reallocating, so
+//! the steady state allocates ~nothing after the first round.
+//! `BuildStats::arena_allocs` counts the fresh allocations per round
+//! (≈0 at steady state) and `BuildStats::arena_bytes_reused` the bytes
+//! served from recycled capacity; the serve path reports the analogous
+//! `ServeStats::arena_reuse`.
+//!
 //! Results are **bit-identical for every thread count**: all
 //! floating-point reductions split work into fixed-size chunks and merge
 //! partials in ascending chunk order (never completion order), so

@@ -522,7 +522,7 @@ fn run_train(args: &ArgParser) -> Result<()> {
         }
         other => bail!("unknown backend {other:?} (native|xla)"),
     };
-    let _ = NativeBackend; // referenced for doc visibility
+    let _ = NativeBackend::default(); // referenced for doc visibility
 
     report_booster(args, &booster, &params)
 }
@@ -628,6 +628,16 @@ fn report_booster(
         s.predict_wall_secs,
         s.total_compute_secs(),
         params.n_devices
+    );
+    println!(
+        "executor: wake={:.4}s arena_reused={:.2} MB allocs/round={:.1}",
+        s.wake_wall_secs,
+        s.arena_bytes_reused as f64 / 1e6,
+        if s.hist_rounds == 0 {
+            0.0
+        } else {
+            s.arena_allocs as f64 / s.hist_rounds as f64
+        }
     );
     if s.pages_loaded > 0 {
         println!(

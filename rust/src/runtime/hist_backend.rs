@@ -192,7 +192,7 @@ mod tests {
         let mut h_native = Histogram::zeros(n_bins);
         let mut h_xla = Histogram::zeros(n_bins);
         let exec = ExecContext::serial();
-        NativeBackend
+        NativeBackend::default()
             .build_histogram(&shard_owned, &rows, &mut h_native, &exec)
             .unwrap();
         XlaHistBackend::new(a)
@@ -230,7 +230,7 @@ mod tests {
         let mut h_native = Histogram::zeros(n_bins);
         let mut h_xla = Histogram::zeros(n_bins);
         let exec = ExecContext::serial();
-        NativeBackend
+        NativeBackend::default()
             .build_histogram(&shard, &rows, &mut h_native, &exec)
             .unwrap();
         XlaHistBackend::new(a)

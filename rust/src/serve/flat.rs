@@ -278,6 +278,21 @@ impl FlatBatch {
         }
     }
 
+    /// Reshape to `n_rows × n_cols` with every slot absent, reusing the
+    /// existing bin buffer — the serve scorer's per-micro-batch scratch
+    /// path. Returns `true` when the resize fit in the buffer's existing
+    /// capacity (an arena reuse, counted by `ServeStats::arena_reuse`),
+    /// `false` when it had to grow.
+    pub fn reset(&mut self, n_rows: usize, n_cols: usize) -> bool {
+        let len = n_rows * n_cols;
+        let reused = self.bins.capacity() >= len;
+        self.bins.clear();
+        self.bins.resize(len, ABSENT);
+        self.n_rows = n_rows;
+        self.n_cols = n_cols;
+        reused
+    }
+
     /// Shift-encode a [`QuantisedBatch`] (`n_cols` = the model's feature
     /// count; sparse batches don't carry it). Dense `u32::MAX` slots are
     /// *absent* there and become [`ABSENT`]; sparse `u32::MAX` entries

@@ -162,6 +162,14 @@ pub fn start_scorer(
     (handle, join)
 }
 
+/// Decode scratch owned by the scorer thread: the quantised batch and
+/// per-row error slots are cleared and refilled each micro-batch, never
+/// reallocated once grown — the serve-side arena.
+struct ScorerScratch {
+    fb: FlatBatch,
+    row_err: Vec<Option<String>>,
+}
+
 fn scorer_loop(
     rx: Receiver<Request>,
     registry: Arc<ModelRegistry>,
@@ -171,6 +179,10 @@ fn scorer_loop(
 ) {
     let exec = ExecContext::new(opts.threads);
     let batch_max = opts.batch_max.max(1);
+    let mut scratch = ScorerScratch {
+        fb: FlatBatch::zeroed(0, 0),
+        row_err: Vec::new(),
+    };
     'outer: loop {
         // block for the batch opener
         let first = match rx.recv() {
@@ -206,7 +218,7 @@ fn scorer_loop(
                 }
             }
         }
-        score_batch(&batch, &registry, &exec, &stats, &depth);
+        score_batch(&batch, &registry, &exec, &stats, &depth, &mut scratch);
         for ack in pending_acks {
             let _ = ack.send(());
         }
@@ -222,14 +234,22 @@ fn score_batch(
     exec: &ExecContext,
     stats: &StatsCollector,
     depth: &AtomicUsize,
+    scratch: &mut ScorerScratch,
 ) {
     // one model per batch: the hot-swap atomicity unit
     let model = registry.current();
     let cuts = model.cuts();
     let n_features = model.n_features();
     let n = batch.len();
-    let mut fb = FlatBatch::zeroed(n, n_features);
-    let mut row_err: Vec<Option<String>> = vec![None; n];
+    let fb_reused = scratch.fb.reset(n, n_features);
+    let err_reused = scratch.row_err.capacity() >= n;
+    scratch.row_err.clear();
+    scratch.row_err.resize(n, None);
+    if fb_reused && err_reused {
+        stats.record_arena_reuse();
+    }
+    let fb = &mut scratch.fb;
+    let row_err = &mut scratch.row_err;
     for (i, req) in batch.iter().enumerate() {
         match &req.row {
             RowValues::Dense(vals) => {
@@ -262,7 +282,7 @@ fn score_batch(
             }
         }
     }
-    let preds = model.predict_batch(&fb, exec);
+    let preds = model.predict_batch(fb, exec);
     let k = if n == 0 { 1 } else { (preds.len() / n).max(1) };
     let mut errors = 0u64;
     for (i, req) in batch.iter().enumerate() {

@@ -27,6 +27,7 @@ struct Inner {
     batch_sizes: BTreeMap<usize, u64>,
     queue_depth_max: usize,
     queue_depth_sum: u64,
+    arena_reuse: u64,
 }
 
 /// Thread-safe recorder the scorer feeds; snapshot with
@@ -62,6 +63,12 @@ impl StatsCollector {
         *s.batch_sizes.entry(batch_size).or_insert(0) += 1;
         s.queue_depth_max = s.queue_depth_max.max(queue_depth);
         s.queue_depth_sum += queue_depth as u64;
+    }
+
+    /// Record that a scored batch was served entirely from the scorer's
+    /// reusable scratch (no fresh decode-buffer allocation).
+    pub fn record_arena_reuse(&self) {
+        self.inner.lock().unwrap().arena_reuse += 1;
     }
 
     /// Record one request's enqueue→scored latency.
@@ -114,6 +121,7 @@ impl StatsCollector {
             } else {
                 s.queue_depth_sum as f64 / s.batches as f64
             },
+            arena_reuse: s.arena_reuse,
         }
     }
 }
@@ -137,6 +145,9 @@ pub struct ServeStats {
     pub batch_sizes: Vec<(usize, u64)>,
     pub queue_depth_max: usize,
     pub queue_depth_mean: f64,
+    /// Batches scored without allocating fresh scratch (the scorer's
+    /// decode buffers were recycled from the previous batch).
+    pub arena_reuse: u64,
 }
 
 impl ServeStats {
@@ -160,7 +171,7 @@ impl ServeStats {
         format!(
             "serve stats: requests={} errors={} batches={} swaps={}\n\
              serve latency (us): p50<={} p90<={} p99<={} mean={:.1} max={}\n\
-             serve batches: mean_size={:.2} dist=[{}] queue_depth max={} mean={:.2}",
+             serve batches: mean_size={:.2} dist=[{}] queue_depth max={} mean={:.2} arena_reuse={}",
             self.requests,
             self.errors,
             self.batches,
@@ -174,6 +185,7 @@ impl ServeStats {
             dist.join(","),
             self.queue_depth_max,
             self.queue_depth_mean,
+            self.arena_reuse,
         )
     }
 
@@ -188,7 +200,7 @@ impl ServeStats {
             "{{\"requests\":{},\"errors\":{},\"batches\":{},\"swaps\":{},\
              \"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\"mean_us\":{:.2},\"max_us\":{},\
              \"mean_batch\":{:.3},\"batch_dist\":[{}],\
-             \"queue_depth_max\":{},\"queue_depth_mean\":{:.3}}}",
+             \"queue_depth_max\":{},\"queue_depth_mean\":{:.3},\"arena_reuse\":{}}}",
             self.requests,
             self.errors,
             self.batches,
@@ -202,6 +214,7 @@ impl ServeStats {
             dist.join(","),
             self.queue_depth_max,
             self.queue_depth_mean,
+            self.arena_reuse,
         )
     }
 }
@@ -236,15 +249,20 @@ mod tests {
         c.record_batch(1, 0, 0);
         c.record_batch(4, 1, 1);
         c.record_batch(4, 2, 0);
+        c.record_arena_reuse();
+        c.record_arena_reuse();
         let s = c.snapshot(0);
         assert_eq!(s.requests, 9);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.arena_reuse, 2);
         assert_eq!(s.batch_sizes, vec![(1, 1), (4, 2)]);
         assert!((s.mean_batch() - 3.0).abs() < 1e-9);
         assert!((s.queue_depth_mean - 1.0).abs() < 1e-9);
         // render/json don't panic and carry the headline numbers
         assert!(s.render().contains("requests=9"));
+        assert!(s.render().contains("arena_reuse=2"));
         assert!(s.to_json().contains("\"requests\":9"));
+        assert!(s.to_json().contains("\"arena_reuse\":2"));
     }
 
     #[test]

@@ -171,6 +171,10 @@ pub struct RowPartitioner {
     segments: Vec<Option<Segment>>,
     scratch: Vec<u32>,
     scratch_right: Vec<u32>,
+    /// Per-chunk `(left, right)` runs for the chunk-parallel split path —
+    /// kept across splits and trees so steady-state repartitions reuse
+    /// the same buffers instead of allocating a pair per chunk.
+    chunk_scratch: Vec<(Vec<u32>, Vec<u32>)>,
 }
 
 impl RowPartitioner {
@@ -188,7 +192,25 @@ impl RowPartitioner {
             segments: vec![Some(Segment { begin: 0, end: n })],
             scratch: Vec::new(),
             scratch_right: Vec::new(),
+            chunk_scratch: Vec::new(),
         }
+    }
+
+    /// Back to the all-rows-in-root state without dropping a single
+    /// allocation — `rows`, `segments`, the stable-partition scratch and
+    /// the per-chunk buffers all keep their capacity. This is the
+    /// per-tree path in steady-state training ([`DeviceShard::begin_tree`]
+    /// calls it every boosting round).
+    ///
+    /// [`DeviceShard::begin_tree`]: crate::coordinator::DeviceShard::begin_tree
+    pub fn reset(&mut self, n_rows: usize) {
+        self.rows.clear();
+        self.rows.extend(0..n_rows as u32);
+        self.segments.clear();
+        self.segments.push(Some(Segment {
+            begin: 0,
+            end: n_rows,
+        }));
     }
 
     /// Rows currently in node `nid` (empty slice if untracked).
@@ -266,22 +288,32 @@ impl RowPartitioner {
                 }
             }
         } else {
-            let parts: Vec<(Vec<u32>, Vec<u32>)> = exec.map_chunks(n, ROW_CHUNK, |_, range| {
-                let mut l = Vec::with_capacity(range.len());
-                let mut r = Vec::new();
-                for &row in &slice[range] {
+            // Per-chunk buffers come from `chunk_scratch` (cleared, not
+            // reallocated); chunk boundaries and the chunk-order
+            // concatenation below are unchanged, so the layout stays
+            // bit-identical to the serial pass.
+            let n_chunks = n.div_ceil(ROW_CHUNK);
+            if self.chunk_scratch.len() < n_chunks {
+                self.chunk_scratch.resize_with(n_chunks, Default::default);
+            }
+            let parts = &mut self.chunk_scratch[..n_chunks];
+            exec.parallel_map_mut(parts, |ci, (l, r)| {
+                l.clear();
+                r.clear();
+                let lo = ci * ROW_CHUNK;
+                let hi = (lo + ROW_CHUNK).min(n);
+                for &row in &slice[lo..hi] {
                     if Self::goes_left(row, split, bins, cuts) {
                         l.push(row);
                     } else {
                         r.push(row);
                     }
                 }
-                (l, r)
             });
-            for (l, _) in &parts {
+            for (l, _) in parts.iter() {
                 self.scratch.extend_from_slice(l);
             }
-            for (_, r) in &parts {
+            for (_, r) in parts.iter() {
                 self.scratch_right.extend_from_slice(r);
             }
         }

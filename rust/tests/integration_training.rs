@@ -212,7 +212,7 @@ fn degenerate_gradients_yield_stump() {
     let mut c = MultiDeviceCoordinator::with_backend(
         &g.train.x,
         CoordinatorParams::default(),
-        Box::new(NativeBackend),
+        Box::new(NativeBackend::default()),
     )
     .unwrap();
     let grads = vec![xgb_tpu::GradPair::new(0.0, 1e-16); g.train.n_rows()];

@@ -407,7 +407,7 @@ fn prop_flat_forest_matches_bin_and_float_traversal() {
 fn prop_blocked_hist_matches_scalar_bitwise() {
     use xgb_tpu::exec::{ExecContext, KernelMode};
     use xgb_tpu::hist::{
-        build_histogram_compressed_par_mode, build_histogram_quantized_par_mode,
+        build_histogram_compressed_par_mode, build_histogram_quantized_par_mode, HistArena,
     };
     check(0xb10cd, 30, |g: &mut Gen| {
         // n_bins = 2^bits - 1 makes the packed alphabet (n_bins + 1
@@ -443,14 +443,15 @@ fn prop_blocked_hist_matches_scalar_bitwise() {
         let rows: Vec<u32> = (0..n_rows as u32).collect();
         for threads in [1usize, 4] {
             let exec = ExecContext::new(threads);
+            let arena = HistArena::default();
             let build_q = |mode| {
                 let mut h = Histogram::zeros(n_bins);
-                build_histogram_quantized_par_mode(&qm, &grads, &rows, &mut h, &exec, mode);
+                build_histogram_quantized_par_mode(&qm, &grads, &rows, &mut h, &exec, mode, &arena);
                 h
             };
             let build_c = |mode| {
                 let mut h = Histogram::zeros(n_bins);
-                build_histogram_compressed_par_mode(&cm, &grads, &rows, &mut h, &exec, mode);
+                build_histogram_compressed_par_mode(&cm, &grads, &rows, &mut h, &exec, mode, &arena);
                 h
             };
             let qs = build_q(KernelMode::Scalar);
@@ -571,6 +572,100 @@ fn prop_blocked_traversal_matches_rowwise_and_float() {
                         "row {r} tree {t}: blocked leaf index"
                     );
                 }
+            }
+        }
+    });
+}
+
+/// The persistent parked-pool engine is **bit-identical** to the scoped
+/// spawn-per-call reference engine across the full training pipeline:
+/// same trees, base score, eval history and predictions at thread counts
+/// {1, 2, 4, 8}, with multi-device shards (nested `ExecContext::fork`
+/// budget sub-slices over the one shared pool), on the fully resident,
+/// spilled-page and streamed-ingest data paths. Both engines share the
+/// fixed-chunk split and ascending-index merge by construction; this
+/// pins the contract end to end.
+#[test]
+fn prop_persistent_pool_matches_scoped_engine() {
+    use xgb_tpu::data::source::DMatrixSource;
+    use xgb_tpu::data::synthetic::{generate, DatasetSpec};
+    use xgb_tpu::exec::{set_exec_mode_override, ExecMode};
+    use xgb_tpu::gbm::{Learner, LearnerParams, ObjectiveKind};
+
+    check(0xec5d, 2, |g: &mut Gen| {
+        let ds = generate(
+            &DatasetSpec::higgs_like(g.int(150, 350)),
+            g.int(1, 1000) as u64,
+        );
+        // 3 devices ⇒ the coordinator forks the pool into per-shard
+        // budget sub-slices (nested parallelism, no extra threads)
+        let devices = [1usize, 3][g.int(0, 1)];
+        for threads in [1usize, 2, 4, 8] {
+            let params = LearnerParams {
+                objective: ObjectiveKind::BinaryLogistic,
+                num_rounds: 3,
+                max_depth: 3,
+                max_bins: 16,
+                n_devices: devices,
+                threads,
+                compress: true,
+                eval_every: 1,
+                ..Default::default()
+            };
+            let mut paged = params.clone();
+            paged.max_resident_pages = 2;
+            paged.page_rows = 64;
+            let run = |p: &LearnerParams, mode: ExecMode, streamed: bool| {
+                set_exec_mode_override(Some(mode));
+                let booster = if streamed {
+                    let mut src = DMatrixSource::from_dataset(&ds.train, 96);
+                    Learner::from_params(p.clone())
+                        .unwrap()
+                        .train_from_source(&mut src, Some(&ds.valid))
+                        .unwrap()
+                } else {
+                    Learner::from_params(p.clone())
+                        .unwrap()
+                        .train(&ds.train, Some(&ds.valid))
+                        .unwrap()
+                };
+                set_exec_mode_override(None);
+                booster
+            };
+            for (name, p, streamed) in [
+                ("resident", &params, false),
+                ("paged", &paged, false),
+                ("streamed", &params, true),
+            ] {
+                let scoped = run(p, ExecMode::Scoped, streamed);
+                let pooled = run(p, ExecMode::Persistent, streamed);
+                let ctx = format!("{name} devices={devices} threads={threads}");
+                assert_eq!(scoped.trees, pooled.trees, "{ctx}: trees");
+                assert_eq!(scoped.base_score, pooled.base_score, "{ctx}: base score");
+                assert_eq!(
+                    scoped.eval_history.len(),
+                    pooled.eval_history.len(),
+                    "{ctx}: eval history length"
+                );
+                for (a, b) in scoped.eval_history.iter().zip(pooled.eval_history.iter()) {
+                    assert_eq!(
+                        a.train.to_bits(),
+                        b.train.to_bits(),
+                        "{ctx} round {}: train metric",
+                        a.round
+                    );
+                    assert_eq!(
+                        a.valid.map(f64::to_bits),
+                        b.valid.map(f64::to_bits),
+                        "{ctx} round {}: valid metric",
+                        a.round
+                    );
+                }
+                assert_eq!(
+                    scoped.predict(&ds.valid.x),
+                    pooled.predict(&ds.valid.x),
+                    "{ctx}: predictions"
+                );
             }
         }
     });

@@ -248,4 +248,71 @@ if ! grep -q 'swaps=1' "$SWAP_ERR"; then
     exit 1
 fi
 
+# Distributed smoke: train the same file as 3 real OS processes over a
+# loopback TCP ring (ranks 1 and 2 in the background, rank 0 in the
+# foreground) and require rank 0's `final:` line AND its saved model's
+# streamed-predict checksum to byte-match a single-process --n-devices 3
+# run — the CLI-level pin of the wire ring's bit-identity contract. The
+# port base is randomised so parallel CI runs don't collide.
+echo "==> distributed-training smoke (CLI, 3 processes over loopback)"
+BASE_PORT=$(( 20000 + RANDOM % 20000 ))
+PEERS="127.0.0.1:$BASE_PORT,127.0.0.1:$((BASE_PORT+1)),127.0.0.1:$((BASE_PORT+2))"
+DIST_FLAGS=(--libsvm "$SMOKE_DIR/higgs.libsvm" --objective binary:logistic
+            --num-rounds 3 --max-bins 32 --valid-frac 0 --n-devices 3)
+MODEL3="$SMOKE_DIR/model3.txt"
+REF3_FINAL=$(./target/release/xgb-tpu train "${DIST_FLAGS[@]}" \
+    --model-out "$MODEL3" 2>/dev/null | grep '^final:' || true)
+DIST_MODEL="$SMOKE_DIR/model_dist.txt"
+./target/release/xgb-tpu train "${DIST_FLAGS[@]}" --dist-rank 1 \
+    --dist-peers "$PEERS" > "$SMOKE_DIR/rank1.log" 2>&1 &
+W1=$!
+./target/release/xgb-tpu train "${DIST_FLAGS[@]}" --dist-rank 2 \
+    --dist-peers "$PEERS" > "$SMOKE_DIR/rank2.log" 2>&1 &
+W2=$!
+# widen the trap while workers run so a failed rank 0 can't orphan them
+trap 'kill "$W1" "$W2" 2>/dev/null || true; rm -rf "$SMOKE_DIR"' EXIT
+DIST_FINAL=$(./target/release/xgb-tpu train "${DIST_FLAGS[@]}" --dist-rank 0 \
+    --dist-peers "$PEERS" --model-out "$DIST_MODEL" 2>/dev/null \
+    | grep '^final:' || true)
+WORKERS_OK=1
+wait "$W1" || WORKERS_OK=0
+wait "$W2" || WORKERS_OK=0
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+echo "single-process: $REF3_FINAL"
+echo "distributed:    $DIST_FINAL"
+if [[ "$WORKERS_OK" -ne 1 ]]; then
+    echo "FAIL: a distributed worker rank exited nonzero"
+    tail -n 5 "$SMOKE_DIR"/rank*.log
+    exit 1
+fi
+if [[ -z "$DIST_FINAL" || "$REF3_FINAL" != "$DIST_FINAL" ]]; then
+    echo "FAIL: distributed final metric does not byte-match the single-process run"
+    exit 1
+fi
+SUM_REF3=$(./target/release/xgb-tpu predict --model "$MODEL3" \
+    --libsvm "$SMOKE_DIR/higgs.libsvm" --out /dev/null --stream --batch-rows 64 \
+    2>&1 >/dev/null | grep '^predictions:' || true)
+SUM_DIST=$(./target/release/xgb-tpu predict --model "$DIST_MODEL" \
+    --libsvm "$SMOKE_DIR/higgs.libsvm" --out /dev/null --stream --batch-rows 64 \
+    2>&1 >/dev/null | grep '^predictions:' || true)
+echo "single-process: $SUM_REF3"
+echo "distributed:    $SUM_DIST"
+if [[ -z "$SUM_DIST" || "$SUM_REF3" != "$SUM_DIST" ]]; then
+    echo "FAIL: distributed model's streamed-predict checksum does not match single-process"
+    exit 1
+fi
+# no orphan worker processes, no lingering ring sockets
+ORPHANS=$(pgrep -f "xgb-tpu train.*--dist-rank" | wc -l || true)
+if [[ "$ORPHANS" -ne 0 ]]; then
+    echo "FAIL: $ORPHANS orphan distributed worker process(es) left running"
+    pkill -f "xgb-tpu train.*--dist-rank" || true
+    exit 1
+fi
+for port in "$BASE_PORT" "$((BASE_PORT+1))" "$((BASE_PORT+2))"; do
+    if (exec 3<>"/dev/tcp/127.0.0.1/$port") 2>/dev/null; then
+        echo "FAIL: port $port still accepting connections after the distributed smoke"
+        exit 1
+    fi
+done
+
 echo "CI OK"

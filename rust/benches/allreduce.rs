@@ -1,11 +1,47 @@
 //! Collective benchmark: the exact ring all-reduce simulation vs the
 //! gather+broadcast reference, host execution time and modeled NCCL-ring
 //! wall-clock across device counts and histogram sizes (§2.3's
-//! `AllReduceHistograms` step).
+//! `AllReduceHistograms` step) — plus the real TCP wire ring over
+//! loopback, comparing quantised vs raw chunk encodings by measured
+//! wire bytes.
+
+use std::net::TcpListener;
 
 use xgb_tpu::bench::{fmt_secs, Runner, Table};
-use xgb_tpu::comm::{allreduce, AllReduceAlgo, CostModel};
+use xgb_tpu::comm::{allreduce, AllReduceAlgo, CostModel, WirePayload, WireRing};
 use xgb_tpu::util::Pcg64;
+
+/// Run one wire-ring all-reduce with `p` in-process ranks over loopback;
+/// returns (wall seconds, max bytes actually sent by any rank).
+fn wire_round(p: usize, template: &[Vec<f64>], payload: WirePayload) -> (f64, usize) {
+    let listeners: Vec<TcpListener> = (0..p)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind loopback"))
+        .collect();
+    let peers: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(r, listener)| {
+            let peers = peers.clone();
+            let mut buf = template[r].clone();
+            std::thread::spawn(move || {
+                let mut ring = WireRing::establish_with_listener(r, &peers, listener, payload)
+                    .expect("ring assembly");
+                ring.allreduce(&mut buf).expect("wire allreduce")
+            })
+        })
+        .collect();
+    let max_sent = handles
+        .into_iter()
+        .map(|h| h.join().expect("rank thread").bytes_sent)
+        .max()
+        .unwrap_or(0);
+    (t0.elapsed().as_secs_f64(), max_sent)
+}
 
 fn main() -> anyhow::Result<()> {
     let runner = Runner::from_env();
@@ -48,6 +84,57 @@ fn main() -> anyhow::Result<()> {
         "\nshape: ring bytes/device ~ 2(p-1)/p * n * 8 (constant-ish in p);\n\
          serial leader traffic grows linearly in p -> ring wins at scale,\n\
          which is why the paper uses NCCL's ring."
+    );
+
+    // real TCP ring over loopback: histogram-shaped buffers (40% empty
+    // bins, f32-origin sums) so the quant codec's mask + narrow packing
+    // shows its wire-byte cut vs plain f64 chunks
+    let mut wt = Table::new(&[
+        "payload", "ranks", "hist elems", "wall time", "max wire bytes/rank",
+        "vs raw",
+    ]);
+    for &n in &[14_336usize, 123_904] {
+        for &p in &[2usize, 4] {
+            let mut rng = Pcg64::new((n * p) as u64);
+            let template: Vec<Vec<f64>> = (0..p)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| {
+                            if rng.next_u32() % 5 < 2 {
+                                0.0
+                            } else {
+                                (rng.next_f32() * 2.0 - 1.0) as f64
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let (_, raw_bytes) = wire_round(p, &template, WirePayload::Raw);
+            for payload in [WirePayload::Raw, WirePayload::Quant] {
+                let mut max_sent = 0;
+                let res = runner.run(format!("wire-{payload}/p{p}/n{n}"), || {
+                    let (secs, sent) = wire_round(p, &template, payload);
+                    max_sent = sent;
+                    secs
+                });
+                wt.add_row(vec![
+                    format!("{payload}"),
+                    format!("{p}"),
+                    format!("{n}"),
+                    fmt_secs(res.mean_secs),
+                    format!("{max_sent}"),
+                    format!("{:.0}%", max_sent as f64 / raw_bytes as f64 * 100.0),
+                ]);
+            }
+        }
+    }
+    println!("\n=== Wire ring (TCP loopback): quant vs raw chunk encoding ===\n");
+    print!("{}", wt.render());
+    println!(
+        "\nquant packs each chunk losslessly (zero-bin mask + trailing-zero\n\
+         shift + narrowest-width symbols), so its wire bytes land well under\n\
+         raw f64 on histogram-shaped data while the merged buffers stay\n\
+         bit-identical in both modes."
     );
     Ok(())
 }

@@ -1,20 +1,40 @@
-//! Collective communication substrate (paper §2.3: "The partial histograms
-//! are merged using an AllReduce operation provided by the NCCL library").
+//! Collective communication (paper §2.3: "The partial histograms are
+//! merged using an AllReduce operation provided by the NCCL library").
 //!
-//! This environment has no GPUs and no NCCL, so the collective is built
-//! from scratch and *executed exactly*: [`ring::ring_allreduce`] simulates
-//! the chunked ring schedule NCCL uses (reduce-scatter + all-gather),
-//! message by message, so every device ends with the true elementwise sum
-//! and the per-step traffic is accounted. A calibrated α–β
-//! [`cost::CostModel`] converts that traffic into the wall-clock a real
-//! NVLink ring would take — this is what the Figure 2 scaling bench
-//! reports (see DESIGN.md §5).
+//! Two implementations of the same NCCL-style chunked ring schedule
+//! (reduce-scatter + all-gather over [`ring::chunk_range`] boundaries):
+//!
+//! * **In-process simulation** — [`ring::ring_allreduce`] executes the
+//!   schedule message by message over the per-device buffers of one
+//!   process. It is the default `n_devices > 1` path, the reference the
+//!   wire engine is pinned against, and the input to the calibrated α–β
+//!   [`cost::CostModel`] that converts the accounted traffic
+//!   ([`AllReduceStats`], send-bytes convention) into the wall-clock a
+//!   real NVLink ring would take — which is what the Figure 2 scaling
+//!   bench and the ring-vs-serial ablation report.
+//! * **Real TCP transport** — [`net`] frames (length-prefixed,
+//!   FNV-1a-checksummed, read/write timeouts, connect retry with
+//!   backoff) carrying [`wire::WireRing`]'s multi-process ring. Same
+//!   chunk boundaries, same step order, same f64 operand order as the
+//!   simulation, so distributed merges are **bit-identical** to
+//!   in-process ones; chunk payloads ship raw or losslessly packed
+//!   through the `compress/` symbol machinery
+//!   ([`wire::WirePayload::Quant`]) to cut wire bytes. Engaged when
+//!   `CoordinatorParams::dist` is set (CLI `--dist-rank/--dist-peers`).
+//!
+//! The simulation is *not* legacy: single-process multi-device runs and
+//! every cost-model bench keep using it, and the wire engine inherits
+//! its correctness tests by construction (the distributed property suite
+//! asserts wire == simulation bit-for-bit).
 
 pub mod cost;
+pub mod net;
 pub mod ring;
+pub mod wire;
 
 pub use cost::CostModel;
 pub use ring::{ring_allreduce, serial_allreduce, AllReduceStats};
+pub use wire::{DistConfig, WirePayload, WireRing, WireStats};
 
 /// Strategy selector for histogram merging.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,321 @@
+//! Length-prefixed, checksummed frame transport for the distributed
+//! ring (`comm::wire`), built on std TCP only.
+//!
+//! ## Frame format
+//!
+//! Every message on a ring connection is one frame:
+//!
+//! ```text
+//! magic    u32 LE   0x5852_494e ("NIRX" LE) — catches cross-protocol
+//!                   connects (e.g. a serve client dialing a ring port)
+//! kind     u8       Hello | RawF64 | Quant (comm::wire payload codecs)
+//! len      u64 LE   payload byte count
+//! checksum u64 LE   FNV-1a 64 over the payload bytes (page::fnv1a64 —
+//!                   the same core that guards spilled pages and
+//!                   prediction fingerprints)
+//! payload  [u8; len]
+//! ```
+//!
+//! A truncated frame surfaces as a length/EOF error, a flipped payload
+//! bit as a checksum mismatch — never as a silently wrong histogram
+//! sum. Both are detected on the receive side before any bytes reach
+//! the dequantiser.
+//!
+//! ## Timeouts and retry
+//!
+//! * **Connect** retries with exponential backoff (10 ms doubling to
+//!   500 ms) for up to [`CONNECT_RETRY_TOTAL`], because peer processes
+//!   launch in arbitrary order and spend unequal time in ingest before
+//!   they bind their listeners.
+//! * **Established connections** carry [`IO_TIMEOUT`] read/write
+//!   timeouts as a failure detector: a healthy peer answers a ring step
+//!   in microseconds, so a timeout means the peer crashed or stalled,
+//!   and the error says which rank/address to look at.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::page::fnv1a64;
+
+/// First four bytes of every frame.
+pub const FRAME_MAGIC: u32 = 0x5852_494e;
+/// Fixed frame header size: magic + kind + len + checksum.
+pub const FRAME_HEADER_LEN: usize = 4 + 1 + 8 + 8;
+/// Hard cap on a single frame payload — a corrupt length field must not
+/// turn into a multi-gigabyte allocation before the checksum can veto it.
+pub const MAX_FRAME_LEN: u64 = 1 << 32;
+/// Read/write timeout on established ring connections (failure detector,
+/// not a polling interval — see module docs).
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Total budget for connect retries while the ring assembles.
+pub const CONNECT_RETRY_TOTAL: Duration = Duration::from_secs(60);
+
+/// What a frame's payload contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Ring-assembly handshake: `rank u64 LE, world u64 LE`.
+    Hello,
+    /// `n` f64 values as `n·8` little-endian bytes.
+    RawF64,
+    /// Losslessly packed f64s (`comm::wire::encode_payload` layout).
+    Quant,
+}
+
+impl FrameKind {
+    fn to_byte(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::RawF64 => 1,
+            FrameKind::Quant => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<FrameKind> {
+        match b {
+            0 => Ok(FrameKind::Hello),
+            1 => Ok(FrameKind::RawF64),
+            2 => Ok(FrameKind::Quant),
+            other => bail!("unknown frame kind byte {other:#04x}"),
+        }
+    }
+}
+
+/// Serialize one frame into `w`. Returns the total bytes written
+/// (header + payload) so callers can account wire traffic exactly.
+pub fn write_frame_to(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> Result<usize> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4] = kind.to_byte();
+    header[5..13].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    header[13..21].copy_from_slice(&fnv1a64(payload.iter().copied()).to_le_bytes());
+    w.write_all(&header).context("writing frame header")?;
+    w.write_all(payload).context("writing frame payload")?;
+    Ok(FRAME_HEADER_LEN + payload.len())
+}
+
+/// Read and verify one frame from `r`. A short read is a length error
+/// ("truncated frame"), a payload whose FNV-1a does not match the
+/// header is a checksum error — corrupted data never decodes.
+pub fn read_frame_from(r: &mut impl Read) -> Result<(FrameKind, Vec<u8>)> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header)
+        .context("truncated frame: short read inside the frame header")?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x}) — peer is not speaking the ring protocol");
+    }
+    let kind = FrameKind::from_byte(header[4])?;
+    let len = u64::from_le_bytes(header[5..13].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        bail!("frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap — corrupt length field?");
+    }
+    let want_sum = u64::from_le_bytes(header[13..21].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame: payload shorter than the declared {len} bytes"))?;
+    let got_sum = fnv1a64(payload.iter().copied());
+    if got_sum != want_sum {
+        bail!(
+            "frame checksum mismatch: payload hashes to {got_sum:#018x}, header declares {want_sum:#018x} — corrupted in transit"
+        );
+    }
+    Ok((kind, payload))
+}
+
+/// One ring connection: a TCP stream plus peer identity for error
+/// messages and exact sent/received byte counters.
+pub struct FramedStream {
+    stream: TcpStream,
+    /// Human-readable peer identity, e.g. `rank 2 (127.0.0.1:7003)`.
+    peer: String,
+    pub bytes_sent: usize,
+    pub bytes_received: usize,
+}
+
+impl FramedStream {
+    /// Wrap an established connection, arming [`IO_TIMEOUT`] read/write
+    /// timeouts on it.
+    pub fn new(stream: TcpStream, peer: String) -> Result<FramedStream> {
+        stream
+            .set_read_timeout(Some(IO_TIMEOUT))
+            .with_context(|| format!("setting read timeout towards {peer}"))?;
+        stream
+            .set_write_timeout(Some(IO_TIMEOUT))
+            .with_context(|| format!("setting write timeout towards {peer}"))?;
+        stream.set_nodelay(true).ok(); // latency over batching for ring steps
+        Ok(FramedStream {
+            stream,
+            peer,
+            bytes_sent: 0,
+            bytes_received: 0,
+        })
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    pub fn send(&mut self, kind: FrameKind, payload: &[u8]) -> Result<usize> {
+        let n = write_frame_to(&mut self.stream, kind, payload)
+            .map_err(|e| annotate_peer_error(e, &self.peer))?;
+        self.bytes_sent += n;
+        Ok(n)
+    }
+
+    pub fn recv(&mut self) -> Result<(FrameKind, Vec<u8>)> {
+        let (kind, payload) =
+            read_frame_from(&mut self.stream).map_err(|e| annotate_peer_error(e, &self.peer))?;
+        self.bytes_received += FRAME_HEADER_LEN + payload.len();
+        Ok((kind, payload))
+    }
+}
+
+/// Make IO failures actionable: name the peer, and translate a timeout
+/// into "the peer stalled" rather than a bare os error.
+fn annotate_peer_error(e: anyhow::Error, peer: &str) -> anyhow::Error {
+    let timed_out = e
+        .downcast_ref::<std::io::Error>()
+        .map(|io| matches!(io.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut))
+        .unwrap_or(false);
+    if timed_out {
+        e.context(format!(
+            "peer {peer} did not answer within {IO_TIMEOUT:?} — worker crashed or stalled?"
+        ))
+    } else {
+        e.context(format!("ring connection to {peer} failed"))
+    }
+}
+
+/// Dial `addr` with exponential backoff until `budget` elapses. Ring
+/// peers start in arbitrary order, so early connection refusals are
+/// expected and retried; only exhausting the budget is an error.
+pub fn connect_with_retry(addr: &str, peer: &str, budget: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    let mut backoff = Duration::from_millis(10);
+    let mut last_err: Option<std::io::Error> = None;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    let detail = last_err
+                        .map(|l| format!("{l}"))
+                        .unwrap_or_else(|| format!("{e}"));
+                    bail!(
+                        "could not connect to {peer} at {addr} within {budget:?}: {detail} — \
+                         is that worker running with the same --dist-peers list?"
+                    );
+                }
+                last_err = Some(e);
+                std::thread::sleep(backoff.min(deadline.saturating_duration_since(Instant::now())));
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Accept one connection on `listener` before `budget` elapses,
+/// polling non-blockingly so a never-arriving peer produces an
+/// actionable error instead of a hang.
+pub fn accept_with_deadline(
+    listener: &TcpListener,
+    peer: &str,
+    budget: Duration,
+) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("setting ring listener nonblocking")?;
+    let deadline = Instant::now() + budget;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("resetting accepted ring stream to blocking")?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "no connection from {peer} within {budget:?} — \
+                         is that worker running, and does its --dist-peers entry point at this process?"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).with_context(|| format!("accepting ring connection from {peer}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips() {
+        for payload in [&[][..], &[0u8][..], &[1, 2, 3, 0xff][..], &vec![7u8; 4096][..]] {
+            let mut buf = Vec::new();
+            let n = write_frame_to(&mut buf, FrameKind::RawF64, payload).unwrap();
+            assert_eq!(n, FRAME_HEADER_LEN + payload.len());
+            assert_eq!(buf.len(), n);
+            let (kind, got) = read_frame_from(&mut &buf[..]).unwrap();
+            assert_eq!(kind, FrameKind::RawF64);
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn flipped_payload_bit_is_a_checksum_error() {
+        let payload = vec![0x5au8; 257];
+        let mut buf = Vec::new();
+        write_frame_to(&mut buf, FrameKind::Quant, &payload).unwrap();
+        for flip_at in [FRAME_HEADER_LEN, buf.len() - 1, FRAME_HEADER_LEN + 100] {
+            let mut bad = buf.clone();
+            bad[flip_at] ^= 0x01;
+            let err = read_frame_from(&mut &bad[..]).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("checksum"),
+                "flip at {flip_at}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_a_length_error() {
+        let payload = vec![9u8; 64];
+        let mut buf = Vec::new();
+        write_frame_to(&mut buf, FrameKind::RawF64, &payload).unwrap();
+        for cut in [1, FRAME_HEADER_LEN - 1, FRAME_HEADER_LEN + 10, buf.len() - 1] {
+            let err = read_frame_from(&mut &buf[..cut]).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("truncated"),
+                "cut at {cut}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_kind_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame_to(&mut buf, FrameKind::Hello, &[1, 2]).unwrap();
+        let mut bad = buf.clone();
+        bad[0] ^= 0xff;
+        assert!(format!("{:#}", read_frame_from(&mut &bad[..]).unwrap_err()).contains("magic"));
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(
+            format!("{:#}", read_frame_from(&mut &bad[..]).unwrap_err()).contains("frame kind")
+        );
+    }
+
+    #[test]
+    fn oversized_length_field_is_rejected_before_allocating() {
+        let mut buf = Vec::new();
+        write_frame_to(&mut buf, FrameKind::RawF64, &[0u8; 8]).unwrap();
+        buf[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_frame_from(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+    }
+}

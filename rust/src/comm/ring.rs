@@ -16,14 +16,22 @@
 //! independent of host thread count.
 
 /// Traffic statistics of one collective, consumed by the cost model.
+///
+/// Convention: all byte figures count bytes **sent** by a device, never
+/// bytes received. Every send has a matching receive, so counting both
+/// would double every figure; counting sends only keeps ring and serial
+/// numbers in the same units (the serial leader's receives are exactly
+/// the followers' sends, and vice versa).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AllReduceStats {
     /// Number of participating devices.
     pub n_devices: usize,
     /// Elements per device buffer.
     pub n_elems: usize,
-    /// Bytes sent by each device over the whole collective (max over
-    /// devices — the ring is symmetric so all are equal).
+    /// Bytes sent by the busiest device over the whole collective (the
+    /// true max over devices). When `n % p != 0` the chunks are uneven,
+    /// so per-device totals differ by a few chunk-remainder elements;
+    /// when `p` divides `n` all devices send exactly this much.
     pub bytes_per_device: usize,
     /// Number of communication steps (latency terms).
     pub steps: usize,
@@ -41,8 +49,12 @@ impl AllReduceStats {
 }
 
 /// Chunk boundaries: chunk `c` covers `chunk_range(n, p, c)`.
+///
+/// Shared with the wire engine (`comm::wire`): the TCP ring uses the
+/// exact same boundaries so distributed merges are bit-identical to the
+/// in-process simulation.
 #[inline]
-fn chunk_range(n: usize, p: usize, c: usize) -> std::ops::Range<usize> {
+pub(crate) fn chunk_range(n: usize, p: usize, c: usize) -> std::ops::Range<usize> {
     let base = n / p;
     let rem = n % p;
     let start = c * base + c.min(rem);
@@ -64,18 +76,22 @@ pub fn ring_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
         return AllReduceStats::noop(n);
     }
 
-    let mut bytes_per_device = 0usize;
+    // Exact per-device send totals. With uneven chunks (`n % p != 0`) a
+    // device sends a different-sized chunk each step, and no device
+    // sends the largest chunk at every step, so summing the per-step max
+    // would overstate the busiest device's total. Track each device's
+    // actual bytes and report the true max.
+    let mut sent_bytes = vec![0usize; p];
 
     // Phase 1: reduce-scatter. Message payloads must be snapshotted per
     // step (all sends happen "simultaneously"), matching real NCCL
     // semantics where a step's send uses the pre-step buffer state.
     for step in 0..p - 1 {
         let mut messages: Vec<(usize, usize, Vec<f64>)> = Vec::with_capacity(p);
-        let mut step_max_bytes = 0usize;
         for d in 0..p {
             let c = (d + p - step) % p;
             let r = chunk_range(n, p, c);
-            step_max_bytes = step_max_bytes.max((r.end - r.start) * 8);
+            sent_bytes[d] += (r.end - r.start) * 8;
             messages.push((d, c, buffers[d][r].to_vec()));
         }
         for (d, c, payload) in messages {
@@ -85,18 +101,16 @@ pub fn ring_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
                 *x += *v;
             }
         }
-        bytes_per_device += step_max_bytes;
     }
 
     // Phase 2: all-gather. Device d now owns reduced chunk (d+1) mod p;
     // circulate the reduced chunks around the ring.
     for step in 0..p - 1 {
         let mut messages: Vec<(usize, usize, Vec<f64>)> = Vec::with_capacity(p);
-        let mut step_max_bytes = 0usize;
         for d in 0..p {
             let c = (d + 1 + p - step) % p;
             let r = chunk_range(n, p, c);
-            step_max_bytes = step_max_bytes.max((r.end - r.start) * 8);
+            sent_bytes[d] += (r.end - r.start) * 8;
             messages.push((d, c, buffers[d][r].to_vec()));
         }
         for (d, c, payload) in messages {
@@ -104,13 +118,12 @@ pub fn ring_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
             let r = chunk_range(n, p, c);
             buffers[dst][r].copy_from_slice(&payload);
         }
-        bytes_per_device += step_max_bytes;
     }
 
     AllReduceStats {
         n_devices: p,
         n_elems: n,
-        bytes_per_device,
+        bytes_per_device: sent_bytes.iter().copied().max().unwrap_or(0),
         steps: 2 * (p - 1),
     }
 }
@@ -137,8 +150,11 @@ pub fn serial_allreduce(buffers: &mut [Vec<f64>]) -> AllReduceStats {
     AllReduceStats {
         n_devices: p,
         n_elems: n,
-        // leader receives (p-1)·n and sends (p-1)·n — it is the bottleneck
-        bytes_per_device: 2 * (p - 1) * n * 8,
+        // Send-bytes convention (see `AllReduceStats`): the leader is the
+        // busiest sender with `(p-1)·n` elements broadcast out; its
+        // `(p-1)·n` receives are the followers' sends and are not counted
+        // here, exactly as the ring counts sends only.
+        bytes_per_device: (p - 1) * n * 8,
         steps: 2 * (p - 1),
     }
 }
@@ -227,18 +243,37 @@ mod tests {
 
     #[test]
     fn ring_bandwidth_is_optimal_factor() {
-        // bytes per device ≈ 2 (p-1)/p · n · 8
+        // bytes per device = 2 (p-1)/p · n · 8, exact when p divides n
         let p = 8;
         let n = 8000;
         let mut bufs = random_buffers(p, n, 11);
         let stats = ring_allreduce(&mut bufs);
-        let ideal = 2.0 * (p as f64 - 1.0) / p as f64 * n as f64 * 8.0;
-        let got = stats.bytes_per_device as f64;
-        assert!((got - ideal).abs() / ideal < 0.01, "{got} vs {ideal}");
-        // serial leader traffic is ~p/2x worse
+        let ideal = 2 * (p - 1) * n / p * 8;
+        assert_eq!(stats.bytes_per_device, ideal);
+        // Both algorithms count send-bytes only, so the serial leader's
+        // (p-1)·n·8 is exactly p/2× the ring figure (4× here at p=8).
         let mut bufs = random_buffers(p, n, 11);
         let serial = serial_allreduce(&mut bufs);
+        assert_eq!(serial.bytes_per_device, (p - 1) * n * 8);
+        assert_eq!(serial.bytes_per_device, stats.bytes_per_device * p / 2);
         assert!(serial.bytes_per_device > stats.bytes_per_device * 3);
+    }
+
+    #[test]
+    fn uneven_chunks_report_true_max_send_total() {
+        // n=257, p=8: chunk 0 has 33 elements, chunks 1..7 have 32.
+        // Reduce-scatter: device d sends every chunk except chunk d, so
+        // d=0 sends 257−33=224 elements and d=1..7 send 257−32=225.
+        // All-gather: device d sends every chunk except chunk (d+1)%p,
+        // so d=7 sends 224 and the rest send 225. Per-device totals:
+        // d=0 → 449, d=1..6 → 450, d=7 → 449. True max = 450 elements
+        // = 3600 bytes. (The old per-step-max accounting charged 33
+        // elements on all 14 steps: 33·14·8 = 3696 — no device ever
+        // sends that much.)
+        let mut bufs = random_buffers(8, 257, 13);
+        let stats = ring_allreduce(&mut bufs);
+        assert_eq!(stats.bytes_per_device, 3600);
+        assert_eq!(stats.steps, 14);
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! Multi-process TCP ring all-reduce — the real transport behind the
+//! schedule that `comm::ring` simulates.
+//!
+//! ## Determinism contract
+//!
+//! [`WireRing::allreduce`] runs the exact reduce-scatter + all-gather
+//! schedule of [`ring_allreduce`](crate::comm::ring::ring_allreduce):
+//! the same [`chunk_range`] boundaries, the same step order, and the
+//! same f64 operand order (`own[i] += received[i]` during
+//! reduce-scatter, overwrite during all-gather). Rank `r`'s buffer
+//! plays the role of device `r`'s buffer, so the merged result on
+//! every rank is **bit-identical** to what the in-process simulation
+//! produces over the same per-device buffers — which is what makes
+//! distributed trees byte-equal to single-process ones.
+//!
+//! ## Payload codecs
+//!
+//! * [`WirePayload::Raw`] ships each chunk as `n·8` little-endian f64
+//!   bytes.
+//! * [`WirePayload::Quant`] packs chunks through the `compress/`
+//!   symbol machinery **losslessly**: a nonzero bitmask drops the empty
+//!   histogram bins (plentiful in deep-node rounds), and the surviving
+//!   bit patterns are shifted by their common trailing-zero count and
+//!   bit-packed at the narrowest width that covers them (f32-origin
+//!   gradient sums carry ~29 zero low mantissa bits). Dequantisation
+//!   reconstructs the exact original bits, so bit-parity holds in both
+//!   modes; only the wire byte count differs.
+//!
+//! ## Topology
+//!
+//! Rank `r` listens on `peers[r]`, dials `peers[(r+1) % world]`
+//! (retry + backoff, peers start in any order) and accepts one
+//! connection from rank `(r−1) % world`, then the ends exchange
+//! `Hello{rank, world}` frames so a miswired ring fails fast with the
+//! offending rank in the message. Each step sends on a scoped thread
+//! while the receive runs on the caller — payloads larger than the
+//! socket buffers cannot deadlock the ring.
+
+use std::net::TcpListener;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::net::{
+    accept_with_deadline, connect_with_retry, FrameKind, FramedStream, CONNECT_RETRY_TOTAL,
+};
+use crate::comm::ring::chunk_range;
+use crate::compress::{CompressedMatrix, CompressedMatrixBuilder};
+
+/// How chunk payloads are encoded on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WirePayload {
+    /// Lossless packed encoding (default): zero-bin mask + trailing-zero
+    /// shift + narrowest-width bit packing.
+    #[default]
+    Quant,
+    /// Plain little-endian f64 bytes.
+    Raw,
+}
+
+impl std::str::FromStr for WirePayload {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "quant" | "quantised" | "quantized" => Ok(WirePayload::Quant),
+            "raw" | "f64" => Ok(WirePayload::Raw),
+            other => Err(format!(
+                "unknown wire payload {other:?} (expected quant|raw)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for WirePayload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WirePayload::Quant => write!(f, "quant"),
+            WirePayload::Raw => write!(f, "raw"),
+        }
+    }
+}
+
+/// Static description of one rank's place in a distributed run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DistConfig {
+    /// This process's rank in `0..peers.len()`.
+    pub rank: usize,
+    /// Listen addresses of every rank, rank-ordered and identical on
+    /// all processes.
+    pub peers: Vec<String>,
+    /// Chunk payload encoding.
+    pub payload: WirePayload,
+}
+
+/// Measured traffic of one (or several accumulated) wire collectives.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireStats {
+    /// Bytes this rank actually put on the wire (frame headers included).
+    pub bytes_sent: usize,
+    /// Frames this rank sent.
+    pub frames_sent: usize,
+    /// Communication steps executed.
+    pub steps: usize,
+}
+
+/// An established ring membership: one outgoing connection to the next
+/// rank, one incoming from the previous.
+pub struct WireRing {
+    rank: usize,
+    world: usize,
+    payload: WirePayload,
+    next: FramedStream,
+    prev: FramedStream,
+}
+
+impl WireRing {
+    /// Bind this rank's listener at `peers[rank]` and assemble the ring.
+    pub fn establish(cfg: &DistConfig) -> Result<WireRing> {
+        let world = cfg.peers.len();
+        if world < 2 {
+            bail!("distributed mode needs at least 2 peers, got {world}");
+        }
+        if cfg.rank >= world {
+            bail!("--dist-rank {} out of range for {world} peers", cfg.rank);
+        }
+        let addr = &cfg.peers[cfg.rank];
+        let listener = TcpListener::bind(addr).with_context(|| {
+            format!(
+                "binding the rank-{} ring listener at {addr} — port already in use (stale worker?) \
+                 or address not local to this host",
+                cfg.rank
+            )
+        })?;
+        Self::establish_with_listener(cfg.rank, &cfg.peers, listener, cfg.payload)
+    }
+
+    /// Assemble the ring over an already-bound listener (tests and
+    /// benches bind port 0 first so the peer list can carry the real
+    /// ephemeral ports before any rank starts connecting).
+    pub fn establish_with_listener(
+        rank: usize,
+        peers: &[String],
+        listener: TcpListener,
+        payload: WirePayload,
+    ) -> Result<WireRing> {
+        let world = peers.len();
+        if world < 2 {
+            bail!("distributed mode needs at least 2 peers, got {world}");
+        }
+        let next_rank = (rank + 1) % world;
+        let prev_rank = (rank + world - 1) % world;
+        // Dial next first: the connection parks in the peer listener's
+        // backlog even before that process calls accept, so the
+        // connect/accept order across ranks cannot deadlock.
+        let next_desc = format!("rank {next_rank} ({})", peers[next_rank]);
+        let stream = connect_with_retry(&peers[next_rank], &next_desc, CONNECT_RETRY_TOTAL)?;
+        let mut next = FramedStream::new(stream, next_desc)?;
+        let prev_desc = format!("rank {prev_rank} ({})", peers[prev_rank]);
+        let stream = accept_with_deadline(&listener, &prev_desc, CONNECT_RETRY_TOTAL)?;
+        let mut prev = FramedStream::new(stream, prev_desc)?;
+
+        // Handshake: tell next who we are, learn who connected to us.
+        let mut hello = [0u8; 16];
+        hello[0..8].copy_from_slice(&(rank as u64).to_le_bytes());
+        hello[8..16].copy_from_slice(&(world as u64).to_le_bytes());
+        next.send(FrameKind::Hello, &hello)?;
+        let (kind, payload_bytes) = prev.recv()?;
+        if kind != FrameKind::Hello || payload_bytes.len() != 16 {
+            bail!(
+                "ring handshake from {} malformed (kind {kind:?}, {} bytes)",
+                prev.peer(),
+                payload_bytes.len()
+            );
+        }
+        let got_rank = u64::from_le_bytes(payload_bytes[0..8].try_into().unwrap()) as usize;
+        let got_world = u64::from_le_bytes(payload_bytes[8..16].try_into().unwrap()) as usize;
+        if got_world != world {
+            bail!(
+                "ring handshake: {} believes the world has {got_world} ranks, this process {world} — \
+                 inconsistent --dist-peers lists",
+                prev.peer()
+            );
+        }
+        if got_rank != prev_rank {
+            bail!(
+                "ring handshake: expected rank {prev_rank} on the incoming connection, got rank {got_rank} — \
+                 inconsistent --dist-rank/--dist-peers wiring"
+            );
+        }
+        Ok(WireRing {
+            rank,
+            world,
+            payload,
+            next,
+            prev,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// All-reduce this rank's buffer in place against every other
+    /// rank's equally-sized buffer. Bit-identical to
+    /// [`ring_allreduce`](crate::comm::ring::ring_allreduce) over the
+    /// same per-rank buffers (see module docs).
+    pub fn allreduce(&mut self, buf: &mut [f64]) -> Result<WireStats> {
+        let p = self.world;
+        let r = self.rank;
+        let n = buf.len();
+        let mut stats = WireStats {
+            steps: 2 * (p - 1),
+            ..WireStats::default()
+        };
+
+        // Phase 1: reduce-scatter. Step indexing mirrors the simulation
+        // verbatim: at step s, device d sends chunk (d − s) mod p, so
+        // this rank receives chunk (r − 1 − s) mod p from rank r−1 and
+        // adds it into its own copy (own += received — the simulation's
+        // operand order).
+        for step in 0..p - 1 {
+            let send_c = (r + p - step) % p;
+            let recv_c = (r + 2 * p - 1 - step) % p;
+            let out = encode_payload(&buf[chunk_range(n, p, send_c)], self.payload);
+            let rr = chunk_range(n, p, recv_c);
+            let vals = exchange(&mut self.next, &mut self.prev, &out, rr.len(), &mut stats)?;
+            for (x, v) in buf[rr].iter_mut().zip(vals.iter()) {
+                *x += *v;
+            }
+        }
+
+        // Phase 2: all-gather — circulate the reduced chunks, overwrite
+        // on receive.
+        for step in 0..p - 1 {
+            let send_c = (r + 1 + p - step) % p;
+            let recv_c = (r + p - step) % p;
+            let out = encode_payload(&buf[chunk_range(n, p, send_c)], self.payload);
+            let rr = chunk_range(n, p, recv_c);
+            let vals = exchange(&mut self.next, &mut self.prev, &out, rr.len(), &mut stats)?;
+            buf[rr].copy_from_slice(&vals);
+        }
+        Ok(stats)
+    }
+}
+
+/// One ring step: send our encoded chunk to `next` on a scoped thread
+/// while receiving the incoming chunk from `prev` on the caller — the
+/// two directions progress independently, so chunks larger than the
+/// socket buffers cannot deadlock the ring.
+fn exchange(
+    next: &mut FramedStream,
+    prev: &mut FramedStream,
+    out: &(FrameKind, Vec<u8>),
+    expect_n: usize,
+    stats: &mut WireStats,
+) -> Result<Vec<f64>> {
+    let (sent, received) = std::thread::scope(|scope| {
+        let sender = scope.spawn(|| next.send(out.0, &out.1));
+        let received = prev.recv();
+        let sent = sender.join().expect("ring sender thread panicked");
+        (sent, received)
+    });
+    stats.bytes_sent += sent?;
+    stats.frames_sent += 1;
+    let (kind, bytes) = received?;
+    decode_payload(kind, &bytes, expect_n)
+        .with_context(|| format!("decoding chunk from {}", prev.peer()))
+}
+
+/// Encode a chunk for the wire. Lossless in both modes: decoding
+/// returns the exact input bit patterns.
+pub fn encode_payload(vals: &[f64], mode: WirePayload) -> (FrameKind, Vec<u8>) {
+    match mode {
+        WirePayload::Raw => {
+            let mut out = Vec::with_capacity(vals.len() * 8);
+            for v in vals {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            (FrameKind::RawF64, out)
+        }
+        WirePayload::Quant => (FrameKind::Quant, encode_quant(vals)),
+    }
+}
+
+/// Quant layout (all integers LE):
+///
+/// ```text
+/// n      u64   value count
+/// n_nz   u64   nonzero-bit-pattern count
+/// tz     u8    common trailing-zero shift of the nonzero patterns
+/// sw     u8    packed symbol width in bits (1..=32; 0 iff n_nz == 0)
+/// ns     u8    symbols per value (1..=2; 0 iff n_nz == 0)
+/// mask   ⌈n/64⌉ u64 words, bit i set iff value i is nonzero
+/// words  CompressedMatrixBuilder stream over the nonzero values
+///        (n_nz rows × ns symbols of sw bits, incl. the pad word)
+/// ```
+fn encode_quant(vals: &[f64]) -> Vec<u8> {
+    let n = vals.len();
+    let mut mask_words = vec![0u64; n.div_ceil(64)];
+    let mut nz: Vec<u64> = Vec::new();
+    for (i, v) in vals.iter().enumerate() {
+        let b = v.to_bits();
+        if b != 0 {
+            mask_words[i / 64] |= 1u64 << (i % 64);
+            nz.push(b);
+        }
+    }
+    let (tz, sw, ns, words) = if nz.is_empty() {
+        (0u32, 0u32, 0u32, Vec::new())
+    } else {
+        let tz = nz.iter().map(|b| b.trailing_zeros()).min().unwrap();
+        let width = nz.iter().map(|b| 64 - (b >> tz).leading_zeros()).max().unwrap();
+        let ns = width.div_ceil(32); // 1 or 2 → symbols stay u32-sized
+        let sw = width.div_ceil(ns);
+        let sym_mask = (1u64 << sw) - 1;
+        let mut b = CompressedMatrixBuilder::new(
+            nz.len(),
+            ns as usize,
+            ns as usize,
+            sym_mask as usize,
+            true,
+        );
+        let mut row = [0u32; 2];
+        for &bits in &nz {
+            let shifted = bits >> tz;
+            for (j, slot) in row.iter_mut().enumerate().take(ns as usize) {
+                *slot = ((shifted >> (j as u32 * sw)) & sym_mask) as u32;
+            }
+            b.push_row(&row[..ns as usize]);
+        }
+        (tz, sw, ns, b.finish().words().to_vec())
+    };
+    let mut out = Vec::with_capacity(19 + (mask_words.len() + words.len()) * 8);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(nz.len() as u64).to_le_bytes());
+    out.push(tz as u8);
+    out.push(sw as u8);
+    out.push(ns as u8);
+    for w in &mask_words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for w in &words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a chunk, validating the declared shape against `expect_n`
+/// and the byte count before touching any value. Corruption inside an
+/// intact frame cannot occur (the transport checksum vetoes it), so
+/// every error here points at a protocol bug, not line noise.
+pub fn decode_payload(kind: FrameKind, bytes: &[u8], expect_n: usize) -> Result<Vec<f64>> {
+    match kind {
+        FrameKind::Hello => bail!("unexpected Hello frame mid-collective"),
+        FrameKind::RawF64 => {
+            if bytes.len() != expect_n * 8 {
+                bail!(
+                    "raw chunk length mismatch: got {} bytes, expected {} ({expect_n} f64s)",
+                    bytes.len(),
+                    expect_n * 8
+                );
+            }
+            Ok(bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                .collect())
+        }
+        FrameKind::Quant => decode_quant(bytes, expect_n),
+    }
+}
+
+fn decode_quant(bytes: &[u8], expect_n: usize) -> Result<Vec<f64>> {
+    if bytes.len() < 19 {
+        bail!("quant chunk shorter than its 19-byte header");
+    }
+    let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let n_nz = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let (tz, sw, ns) = (bytes[16] as u32, bytes[17] as u32, bytes[18] as u32);
+    if n != expect_n {
+        bail!("quant chunk length mismatch: header declares {n} values, expected {expect_n}");
+    }
+    if n_nz > n {
+        bail!("quant chunk declares {n_nz} nonzeros out of {n} values");
+    }
+    let mask_len = n.div_ceil(64);
+    let n_words = if n_nz == 0 {
+        0
+    } else {
+        if !(1..=32).contains(&sw) || !(1..=2).contains(&ns) || tz > 63 {
+            bail!("quant chunk header out of range: tz={tz} sw={sw} ns={ns}");
+        }
+        ((n_nz * ns as usize) as u64 * sw as u64).div_ceil(64) as usize + 1
+    };
+    let want_len = 19 + (mask_len + n_words) * 8;
+    if bytes.len() != want_len {
+        bail!(
+            "quant chunk length mismatch: got {} bytes, shape needs {want_len}",
+            bytes.len()
+        );
+    }
+    let word_at = |i: usize| -> u64 {
+        u64::from_le_bytes(bytes[19 + i * 8..27 + i * 8].try_into().unwrap())
+    };
+    let mask_words: Vec<u64> = (0..mask_len).map(word_at).collect();
+    let set_bits: u32 = mask_words.iter().map(|w| w.count_ones()).sum();
+    if set_bits as usize != n_nz {
+        bail!("quant chunk mask has {set_bits} set bits but declares {n_nz} nonzeros");
+    }
+    if n > 0 && n % 64 != 0 && mask_words.last().map_or(false, |w| w >> (n % 64) != 0) {
+        bail!("quant chunk mask has bits set beyond value {n}");
+    }
+    let mut out = vec![0.0f64; n];
+    if n_nz == 0 {
+        return Ok(out);
+    }
+    let words: Vec<u64> = (mask_len..mask_len + n_words).map(word_at).collect();
+    let sym_mask = (1u64 << sw) - 1;
+    let m = CompressedMatrix::from_words(
+        words,
+        sw,
+        n_nz,
+        ns as usize,
+        ns as usize,
+        sym_mask as usize,
+        true,
+    );
+    let mut k = 0usize;
+    for (i, slot) in out.iter_mut().enumerate() {
+        if mask_words[i / 64] >> (i % 64) & 1 == 1 {
+            let mut bits = 0u64;
+            for j in 0..ns as usize {
+                bits |= (m.symbol(k * ns as usize + j) as u64) << (j as u32 * sw);
+            }
+            *slot = f64::from_bits(bits << tz);
+            k += 1;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn quant_codec_round_trips_exactly() {
+        let mut rng = Pcg64::new(0xc0dec);
+        let mut cases: Vec<Vec<f64>> = vec![
+            vec![],
+            vec![0.0],
+            vec![0.0; 257],
+            vec![-0.0, 0.0, 1.0, -1.0],
+            vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY, f64::MIN_POSITIVE],
+            vec![f64::from_bits(1), f64::from_bits(u64::MAX)],
+        ];
+        // f32-origin sums (the histogram regime): wide trailing-zero runs
+        let f32ish: Vec<f64> = (0..300)
+            .map(|_| (rng.next_f64() as f32 * 4.0 - 2.0) as f64)
+            .collect();
+        cases.push(f32ish);
+        // arbitrary f64 bit patterns incl. zeros
+        let arb: Vec<f64> = (0..513)
+            .map(|i| {
+                if i % 5 == 0 {
+                    0.0
+                } else {
+                    f64::from_bits(rng.next_u64())
+                }
+            })
+            .collect();
+        cases.push(arb);
+        for vals in cases {
+            for mode in [WirePayload::Quant, WirePayload::Raw] {
+                let (kind, bytes) = encode_payload(&vals, mode);
+                let got = decode_payload(kind, &bytes, vals.len()).unwrap();
+                assert_eq!(got.len(), vals.len());
+                for (g, w) in got.iter().zip(vals.iter()) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "mode {mode}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_beats_raw_on_sparse_f32_origin_payloads() {
+        // Histogram-shaped data: 40% empty bins, the rest sums of f32
+        // gradients — the regime the quant codec is built for.
+        let mut rng = Pcg64::new(7);
+        let vals: Vec<f64> = (0..4096)
+            .map(|i| {
+                if i % 5 < 2 {
+                    0.0
+                } else {
+                    (rng.next_f64() as f32 * 2.0 - 1.0) as f64
+                }
+            })
+            .collect();
+        let (_, quant) = encode_payload(&vals, WirePayload::Quant);
+        let (_, raw) = encode_payload(&vals, WirePayload::Raw);
+        assert!(
+            quant.len() * 10 < raw.len() * 9,
+            "quant {} bytes vs raw {} — expected >10% reduction",
+            quant.len(),
+            raw.len()
+        );
+    }
+
+    #[test]
+    fn malformed_quant_chunks_are_rejected() {
+        let (kind, bytes) = encode_payload(&[1.0, 2.0, 0.0], WirePayload::Quant);
+        // wrong expected length
+        assert!(decode_payload(kind, &bytes, 4).is_err());
+        // truncated body
+        assert!(decode_payload(kind, &bytes[..bytes.len() - 1], 3).is_err());
+        // raw with wrong byte count
+        assert!(decode_payload(FrameKind::RawF64, &[0u8; 12], 2).is_err());
+        // hello mid-collective
+        assert!(decode_payload(FrameKind::Hello, &[], 0).is_err());
+    }
+}

@@ -3,11 +3,12 @@
 //! and the simulated multi-GPU clock (DESIGN.md §5).
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{ensure, Context as _, Result};
 
-use crate::comm::{allreduce, CostModel};
+use crate::comm::{allreduce, AllReduceAlgo, CostModel, WireRing};
 use crate::coordinator::device::{DeviceShard, HistBackend, NativeBackend, ShardStorage};
 use crate::coordinator::CoordinatorParams;
 use crate::compress::CompressedMatrixBuilder;
@@ -188,6 +189,13 @@ pub struct MultiDeviceCoordinator {
     hist_pool: BufferPool<GradPairF64>,
     flat_pool: BufferPool<f64>,
     delta_pool: BufferPool<Float>,
+    /// Established TCP ring when this process is one rank of a
+    /// distributed run (`CoordinatorParams::dist`); `None` keeps every
+    /// collective on the in-process simulation. Mutex because
+    /// collectives take `&self` — they are strictly sequential (one per
+    /// histogram round on the coordinator thread), so the lock is never
+    /// contended.
+    dist: Option<Mutex<WireRing>>,
 }
 
 impl MultiDeviceCoordinator {
@@ -267,7 +275,7 @@ impl MultiDeviceCoordinator {
             &exec,
         )?;
         meta.peak_transient_bytes = meta.peak_batch_float_bytes.max(pass2_peak);
-        Ok((Self::assembled(params, cuts, devices, n, backend, exec), meta))
+        Ok((Self::assembled(params, cuts, devices, n, backend, exec)?, meta))
     }
 
     /// Quantile cut generation over the streaming fold: one incremental
@@ -326,10 +334,13 @@ impl MultiDeviceCoordinator {
             paging.as_ref(),
             &exec,
         )?;
-        Ok(Self::assembled(params, cuts, devices, n, backend, exec))
+        Self::assembled(params, cuts, devices, n, backend, exec)
     }
 
-    /// Final assembly shared by every construction path.
+    /// Final assembly shared by every construction path. In distributed
+    /// mode this is also where the TCP ring comes up: every rank runs
+    /// the same deterministic ingest, so by construction all ranks hold
+    /// identical cuts and shards when they meet here.
     fn assembled(
         params: CoordinatorParams,
         cuts: HistogramCuts,
@@ -337,10 +348,30 @@ impl MultiDeviceCoordinator {
         n_rows: usize,
         backend: Box<dyn HistBackend>,
         exec: ExecContext,
-    ) -> Self {
+    ) -> Result<Self> {
+        let dist = match &params.dist {
+            Some(cfg) => {
+                ensure!(
+                    cfg.peers.len() == params.n_devices,
+                    "distributed runs need n_devices ({}) == number of peers ({}): \
+                     rank r builds device r's partial and the wire ring supplies the rest",
+                    params.n_devices,
+                    cfg.peers.len()
+                );
+                ensure!(
+                    params.allreduce == AllReduceAlgo::Ring,
+                    "distributed mode implements the ring schedule only (got --allreduce {})",
+                    params.allreduce
+                );
+                Some(Mutex::new(
+                    WireRing::establish(cfg).context("assembling the distributed ring")?,
+                ))
+            }
+            None => None,
+        };
         let evaluator = SplitEvaluator::new(params.tree.clone());
         let col_rng = crate::util::Pcg64::new(params.seed ^ 0xc01_5a3f);
-        MultiDeviceCoordinator {
+        Ok(MultiDeviceCoordinator {
             params,
             cuts,
             devices,
@@ -352,7 +383,13 @@ impl MultiDeviceCoordinator {
             hist_pool: BufferPool::default(),
             flat_pool: BufferPool::default(),
             delta_pool: BufferPool::default(),
-        }
+            dist,
+        })
+    }
+
+    /// This process's rank when running distributed, else `None`.
+    fn dist_rank(&self) -> Option<usize> {
+        self.params.dist.as_ref().map(|d| d.rank)
     }
 
     /// Draw the per-tree feature mask (`None` when colsample is off).
@@ -399,7 +436,32 @@ impl MultiDeviceCoordinator {
     /// All-reduce a set of per-device f64 buffers; returns (merged copy,
     /// host seconds, simulated seconds, bytes/device). The non-merged
     /// buffers park in `flat_pool` for the next round instead of dropping.
-    fn collective(&self, mut bufs: Vec<Vec<f64>>) -> (Vec<f64>, f64, f64, usize) {
+    ///
+    /// Distributed mode (`params.dist`): `bufs` holds exactly one buffer
+    /// — the rank-local device's partial — and the TCP ring merges it
+    /// against the other ranks'. The wire engine runs the identical
+    /// chunk boundaries and f64 operand order as the simulation, so the
+    /// merged buffer is bit-identical to what a single-process
+    /// `n_devices == world` run computes. Simulated seconds are 0 there:
+    /// the wire time is real and lands in `allreduce_host_secs`, and the
+    /// byte figure is this rank's measured wire traffic (frame headers
+    /// included, quantisation applied).
+    fn collective(&self, mut bufs: Vec<Vec<f64>>) -> Result<(Vec<f64>, f64, f64, usize)> {
+        if let Some(ring) = &self.dist {
+            ensure!(
+                bufs.len() == 1,
+                "distributed collective expects only the rank-local partial, got {} buffers",
+                bufs.len()
+            );
+            let mut buf = bufs.pop().expect("checked above");
+            let host_t = Instant::now();
+            let wire = ring
+                .lock()
+                .expect("wire ring lock poisoned")
+                .allreduce(&mut buf)?;
+            let host = host_t.elapsed().as_secs_f64();
+            return Ok((buf, host, 0.0, wire.bytes_sent));
+        }
         let host_t = Instant::now();
         let stats = allreduce(self.params.allreduce, &mut bufs);
         let host = host_t.elapsed().as_secs_f64();
@@ -409,7 +471,7 @@ impl MultiDeviceCoordinator {
         for spare in it {
             self.flat_pool.put(spare);
         }
-        (merged, host, sim, stats.bytes_per_device)
+        Ok((merged, host, sim, stats.bytes_per_device))
     }
 
     /// Build one tree from the global gradient vector — Algorithm 1.
@@ -429,12 +491,19 @@ impl MultiDeviceCoordinator {
 
         // root gradient sum: tiny collective over (g, h) pairs (each
         // device's sum is computed serially within the device, so the
-        // value is independent of the thread count)
-        let sums: Vec<Vec<f64>> = self.exec.parallel_map(&self.devices, |_, d| {
-            let (g, h) = d.local_sum();
-            vec![g, h]
-        });
-        let (root_vec, host, sim, bytes) = self.collective(sums);
+        // value is independent of the thread count). Distributed: only
+        // the rank-local device sums locally; the wire ring supplies the
+        // other ranks' pairs.
+        let sums: Vec<Vec<f64>> = if let Some(rank) = self.dist_rank() {
+            let (g, h) = self.devices[rank].local_sum();
+            vec![vec![g, h]]
+        } else {
+            self.exec.parallel_map(&self.devices, |_, d| {
+                let (g, h) = d.local_sum();
+                vec![g, h]
+            })
+        };
+        let (root_vec, host, sim, bytes) = self.collective(sums)?;
         stats.allreduce_host_secs += host;
         stats.allreduce_sim_secs += sim;
         stats.comm_bytes_per_device += bytes;
@@ -699,7 +768,16 @@ impl MultiDeviceCoordinator {
             hist_pool.put(h.bins);
             flat
         };
-        let use_pool = self.exec.threads() > 1 && self.backend.as_parallel().is_some();
+        // distributed: this process builds only its own rank's shard —
+        // the wire collective supplies every other rank's partial. The
+        // single local shard takes the pinned path with the full
+        // chunk-parallel budget (bit-identical across thread counts).
+        let local: Vec<usize> = match self.dist_rank() {
+            Some(r) => vec![r],
+            None => (0..p).collect(),
+        };
+        let use_pool =
+            self.dist.is_none() && self.exec.threads() > 1 && self.backend.as_parallel().is_some();
         let results: Vec<Result<(Vec<f64>, f64, u64)>> = if use_pool {
             let pb = self.backend.as_parallel().expect("checked above");
             let dev_exec = self.exec.fork(p);
@@ -720,9 +798,10 @@ impl MultiDeviceCoordinator {
             let devices = &self.devices;
             let backend = &mut self.backend;
             let exec = self.exec.clone();
-            devices
+            local
                 .iter()
-                .map(|dev| {
+                .map(|&di| {
+                    let dev = &devices[di];
                     let rows = dev.partitioner.node_rows(nid);
                     let mut h = Histogram {
                         bins: hist_pool.take(n_bins),
@@ -739,14 +818,15 @@ impl MultiDeviceCoordinator {
 
         let mut partials: Vec<Vec<f64>> = Vec::with_capacity(p);
         let mut max_build = 0.0f64;
-        for (di, r) in results.into_iter().enumerate() {
+        for (i, r) in results.into_iter().enumerate() {
+            let di = local[i];
             let (flat, secs, cells) = r?;
             stats.hist_secs[di] += secs;
             stats.hist_cells += cells;
             max_build = max_build.max(secs);
             partials.push(flat);
         }
-        let (merged, host, sim, bytes) = self.collective(partials);
+        let (merged, host, sim, bytes) = self.collective(partials)?;
         stats.allreduce_host_secs += host;
         stats.allreduce_sim_secs += sim;
         stats.comm_bytes_per_device += bytes;

@@ -163,6 +163,15 @@ pub struct CoordinatorParams {
     /// Rows per sealed page when spilling (the page-size knob of the
     /// external-memory path). Ignored while fully resident.
     pub page_rows: usize,
+    /// Real multi-process training over TCP ([`crate::comm::wire`]).
+    /// `None` (the default) keeps every device in this process and merges
+    /// with the in-process simulation. `Some` makes this process one rank
+    /// of a wire ring: it builds only its own rank's device histograms
+    /// and merges over loopback/LAN with the exact chunk boundaries and
+    /// operand order of the simulation, so the trees are bit-identical
+    /// to a single-process run with `n_devices ==` world size. Requires
+    /// `n_devices == peers.len()` and [`AllReduceAlgo::Ring`].
+    pub dist: Option<crate::comm::DistConfig>,
 }
 
 impl Default for CoordinatorParams {
@@ -182,6 +191,7 @@ impl Default for CoordinatorParams {
             threads: 0,
             max_resident_pages: 0,
             page_rows: crate::compress::page::DEFAULT_PAGE_ROWS,
+            dist: None,
         }
     }
 }

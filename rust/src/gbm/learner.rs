@@ -43,7 +43,7 @@ use crate::gbm::booster::{Booster, EvalRecord};
 use crate::gbm::metric::Metric;
 use crate::gbm::params::{
     AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints, ObjectiveKind,
-    ValidationErrors,
+    ValidationErrors, WirePayload,
 };
 use crate::gbm::registry::{MetricRegistry, ObjectiveRegistry};
 use crate::predict::quantised::{self, QuantisedBatch};
@@ -643,6 +643,24 @@ impl LearnerBuilder {
         /// size). Results are bit-identical for every value.
         page_rows: usize
     );
+    setter!(
+        /// This process's rank in a distributed run; inert while
+        /// [`dist_peers`](Self::dist_peers) is empty.
+        dist_rank: usize
+    );
+    setter!(
+        /// `host:port` listen addresses of every rank, in rank order.
+        /// Non-empty engages the real TCP ring all-reduce: this process
+        /// builds only rank `dist_rank`'s device histograms and merges
+        /// over the wire, bit-identical to a single-process run with
+        /// `n_devices == dist_peers.len()`.
+        dist_peers: Vec<String>
+    );
+    setter!(
+        /// Wire encoding for distributed histogram chunks (`Quant` packs
+        /// losslessly through `compress/`, `Raw` ships plain f64 bytes).
+        dist_payload: WirePayload
+    );
 
     /// Evaluation metric (`None`/unset = the objective's default).
     pub fn eval_metric(mut self, metric: MetricKind) -> Self {
@@ -721,6 +739,18 @@ impl LearnerBuilder {
             "batch_rows" => parse_into!(batch_rows),
             "max_resident_pages" => parse_into!(max_resident_pages),
             "page_rows" => parse_into!(page_rows),
+            "dist_rank" => parse_into!(dist_rank),
+            "dist_peers" => {
+                self.params.dist_peers = if value.is_empty() {
+                    Vec::new()
+                } else {
+                    value.split(',').map(|p| p.trim().to_string()).collect()
+                }
+            }
+            "dist_payload" => match value.parse() {
+                Ok(v) => self.params.dist_payload = v,
+                Err(e) => err(e),
+            },
             other => err(format!("unknown parameter {other:?}")),
         }
         self

@@ -24,6 +24,7 @@ use crate::util::Config;
 // in the stack; the learner API re-exports them under their XGBoost-facing
 // names so the whole typed parameter surface lives in one module.
 pub use crate::comm::AllReduceAlgo as AllReduce;
+pub use crate::comm::WirePayload;
 pub use crate::tree::GrowthPolicy as GrowPolicy;
 
 /// Training objective selector (XGBoost-style names).
@@ -335,6 +336,24 @@ pub struct LearnerParams {
     /// Rows per sealed page when spilling (CLI `--page-rows`); ignored
     /// while fully resident. Bit-identity holds for every value.
     pub page_rows: usize,
+    /// This process's rank in a distributed run (CLI `--dist-rank`).
+    /// Ignored while [`dist_peers`](Self::dist_peers) is empty.
+    pub dist_rank: usize,
+    /// `host:port` listen addresses of every rank, in rank order (CLI
+    /// `--dist-peers`, comma-separated). Empty (the default) = train in
+    /// one process with simulated devices. Non-empty engages the real
+    /// TCP ring all-reduce ([`crate::comm::wire`]): each listed process
+    /// builds only its own rank's device histograms and merges over the
+    /// wire, producing trees **bit-identical** to a single-process run
+    /// with `n_devices == dist_peers.len()`. Requires `n_devices ==
+    /// dist_peers.len()`, `dist_rank < dist_peers.len()` and
+    /// `allreduce = ring`.
+    pub dist_peers: Vec<String>,
+    /// Wire encoding for distributed histogram chunks (CLI
+    /// `--dist-payload`): `quant` (default) packs through the
+    /// `compress/` symbol machinery losslessly, `raw` ships plain f64
+    /// bytes. Both are bit-identical; `quant` cuts wire bytes.
+    pub dist_payload: WirePayload,
 }
 
 impl Default for LearnerParams {
@@ -367,6 +386,9 @@ impl Default for LearnerParams {
             batch_rows: crate::data::source::DEFAULT_BATCH_ROWS,
             max_resident_pages: 0,
             page_rows: crate::compress::page::DEFAULT_PAGE_ROWS,
+            dist_rank: 0,
+            dist_peers: Vec::new(),
+            dist_payload: WirePayload::Quant,
         }
     }
 }
@@ -392,6 +414,15 @@ impl LearnerParams {
             None => None,
             Some("") => None,
             Some(s) => Some(s.parse().expect("infallible")),
+        };
+        let dist_payload: WirePayload = match cfg.get("dist_payload") {
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            None => d.dist_payload,
+        };
+        // comma-separated `host:port` list in rank order; empty = off
+        let dist_peers: Vec<String> = match cfg.get("dist_peers") {
+            None | Some("") => Vec::new(),
+            Some(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
         };
         let monotone_constraints: MonotoneConstraints = match cfg.get("monotone_constraints") {
             Some(s) => s
@@ -429,6 +460,9 @@ impl LearnerParams {
             batch_rows: cfg.get_parse("batch_rows", d.batch_rows)?,
             max_resident_pages: cfg.get_parse("max_resident_pages", d.max_resident_pages)?,
             page_rows: cfg.get_parse("page_rows", d.page_rows)?,
+            dist_rank: cfg.get_parse("dist_rank", d.dist_rank)?,
+            dist_peers,
+            dist_payload,
         })
     }
 
@@ -458,6 +492,15 @@ impl LearnerParams {
             threads: self.threads,
             max_resident_pages: self.max_resident_pages,
             page_rows: self.page_rows,
+            dist: if self.dist_peers.is_empty() {
+                None
+            } else {
+                Some(crate::comm::DistConfig {
+                    rank: self.dist_rank,
+                    peers: self.dist_peers.clone(),
+                    payload: self.dist_payload,
+                })
+            },
         }
     }
 
@@ -563,6 +606,38 @@ impl LearnerParams {
         }
         if self.page_rows == 0 {
             errs.push("page_rows must be >= 1".to_string());
+        }
+
+        // distributed cross-field rules (off while dist_peers is empty)
+        if !self.dist_peers.is_empty() {
+            if self.dist_peers.len() < 2 {
+                errs.push(format!(
+                    "dist_peers lists {} address; distributed training needs at least 2 \
+                     ranks (drop the flag to train in one process)",
+                    self.dist_peers.len()
+                ));
+            }
+            if self.dist_rank >= self.dist_peers.len() {
+                errs.push(format!(
+                    "dist_rank = {} is out of range for {} peers (ranks are 0-based)",
+                    self.dist_rank,
+                    self.dist_peers.len()
+                ));
+            }
+            if self.n_devices != self.dist_peers.len() {
+                errs.push(format!(
+                    "distributed runs need n_devices ({}) == number of dist_peers ({}): \
+                     each rank owns exactly one device shard",
+                    self.n_devices,
+                    self.dist_peers.len()
+                ));
+            }
+            if self.allreduce != AllReduce::Ring {
+                errs.push(format!(
+                    "distributed mode implements the ring schedule only (got allreduce = {})",
+                    self.allreduce
+                ));
+            }
         }
 
         // evaluation cadence
@@ -713,6 +788,67 @@ mod tests {
             ..Default::default()
         };
         assert!(!bad_page.validation_errors(None).is_empty());
+    }
+
+    #[test]
+    fn dist_rules_only_apply_when_peers_listed() {
+        // no peers: dist_rank/dist_payload are inert and nothing fires
+        let off = LearnerParams {
+            dist_rank: 7,
+            ..Default::default()
+        };
+        assert!(off.validate().is_ok());
+        assert!(off.coordinator_params().dist.is_none());
+
+        let peers = vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()];
+        let ok = LearnerParams {
+            dist_peers: peers.clone(),
+            dist_rank: 1,
+            n_devices: 2,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        let cp = ok.coordinator_params();
+        let dist = cp.dist.expect("peers listed => dist config");
+        assert_eq!(dist.rank, 1);
+        assert_eq!(dist.peers, peers);
+        assert_eq!(dist.payload, WirePayload::Quant);
+
+        // every cross-field rule fires at once
+        let bad = LearnerParams {
+            dist_peers: vec!["127.0.0.1:7001".to_string()], // violation: < 2 ranks
+            dist_rank: 3,                                   // violation: out of range
+            n_devices: 4,                                   // violation: != peers.len()
+            allreduce: AllReduce::Serial,                   // violation: ring only
+            ..Default::default()
+        };
+        let errs = bad.validation_errors(None);
+        assert!(errs.len() >= 4, "want all dist violations, got {errs:?}");
+        let joined = errs.join("\n");
+        assert!(joined.contains("at least 2"), "{joined}");
+        assert!(joined.contains("out of range"), "{joined}");
+        assert!(joined.contains("n_devices"), "{joined}");
+        assert!(joined.contains("ring"), "{joined}");
+    }
+
+    #[test]
+    fn from_config_reads_dist_fields() {
+        let cfg = Config::from_str_contents(
+            "dist_rank = 2\ndist_peers = \"127.0.0.1:9001, 127.0.0.1:9002,127.0.0.1:9003\"\n\
+             dist_payload = raw\nn_devices = 3\n",
+        )
+        .unwrap();
+        let p = LearnerParams::from_config(&cfg).unwrap();
+        assert_eq!(p.dist_rank, 2);
+        assert_eq!(
+            p.dist_peers,
+            vec!["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"]
+        );
+        assert_eq!(p.dist_payload, WirePayload::Raw);
+        assert!(p.validate().is_ok());
+
+        let bad = Config::from_str_contents("dist_payload = morse\n").unwrap();
+        assert!(LearnerParams::from_config(&bad).is_err());
     }
 
     #[test]

@@ -230,6 +230,26 @@
 //! reference loops (kept as the independent implementation the property
 //! tests compare against); `rust/tests/prop_invariants.rs` and the
 //! `ci.sh` kernel-mode smoke pin the equivalence.
+//!
+//! **Distributed transport** — the multi-device collective exists in two
+//! interchangeable forms. By default the per-device histogram partials
+//! live in one process and merge through the in-process ring simulation
+//! ([`comm::ring`]), which also feeds the calibrated α–β cost model.
+//! With `--dist-peers` (API: `dist_peers` on [`gbm::LearnerParams`]),
+//! each rank becomes its own OS process: it ingests the same input,
+//! builds only its own rank's device histograms, and merges them over a
+//! real TCP ring ([`comm::wire`]) — length-prefixed, FNV-1a-checksummed
+//! frames ([`comm::net`]) with connect retry + backoff during ring
+//! assembly and 30-second read/write timeouts afterwards, so a crashed
+//! peer surfaces as an actionable error naming the rank instead of a
+//! hang. The wire engine replays the simulation's exact chunk
+//! boundaries and f64 operand order, so a `w`-process run is
+//! **byte-identical** — trees, eval lines, prediction checksums — to a
+//! single-process run with `n_devices == w`
+//! (`prop_wire_ring_matches_simulation_bitwise` and the `ci.sh`
+//! distributed smoke pin this). Chunks ship quantised by default
+//! (lossless zero-bin mask + narrow bit-packing through [`compress`];
+//! `--dist-payload raw` for plain f64 bytes).
 
 pub mod baselines;
 pub mod bench;

@@ -100,6 +100,20 @@ fn print_help() {
                                   bit-identical for every value)\n\
            --compress <bool>      bit-packed shards (default true)\n\
            --allreduce ring|serial\n\
+           --dist-peers <list>    comma-separated host:port listen address of\n\
+                                  every rank, in rank order. Engages real\n\
+                                  multi-process training: each listed process\n\
+                                  runs `train` with the same data and flags\n\
+                                  plus its own --dist-rank, builds only its\n\
+                                  rank's device histograms, and merges them\n\
+                                  over a TCP ring all-reduce. Requires\n\
+                                  --n-devices == number of peers and the ring\n\
+                                  algorithm; trees are bit-identical to a\n\
+                                  single-process run with the same --n-devices\n\
+           --dist-rank <r>        this process's 0-based rank in --dist-peers\n\
+           --dist-payload quant|raw  wire encoding for histogram chunks\n\
+                                  (default quant: lossless bit-packing via the\n\
+                                  compression machinery; raw ships plain f64)\n\
            --backend native|xla   histogram execution engine\n\
            --stream               out-of-core ingestion: stream the input\n\
                                   through the two-pass sketch/quantise/pack\n\

@@ -269,9 +269,35 @@ impl Server {
             let mut seq = 0u64;
             let mut shutdown = false;
             let mut line = String::new();
-            loop {
+            'stream: loop {
                 line.clear();
-                if reader.read_line(&mut line).context("reading request")? == 0 {
+                // Retry on read timeouts: `serve_tcp` puts a read
+                // timeout on every accepted connection so an idle
+                // stream wakes up periodically to honour a server-wide
+                // `!shutdown` instead of parking in `read_line`
+                // forever. A timed-out `read_line` may already have
+                // consumed a partial line into `line`, so the buffer is
+                // cleared once per logical line — never between
+                // retries — and the partial content survives until the
+                // terminating newline arrives.
+                let n_read = loop {
+                    match reader.read_line(&mut line) {
+                        Ok(n) => break n,
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            if inner.shutdown.load(Ordering::SeqCst) {
+                                break 'stream;
+                            }
+                        }
+                        Err(e) => return Err(e).context("reading request"),
+                    }
+                };
+                if n_read == 0 {
                     break;
                 }
                 match parse_line(&line, inner.opts.col_base) {
@@ -352,6 +378,16 @@ impl Server {
                 }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
+                        // Idle connections must not pin the scope open:
+                        // without a read timeout a reader thread parks
+                        // in `read_line` indefinitely and
+                        // `thread::scope` can never join after
+                        // `!shutdown`. With one, every reader becomes a
+                        // periodic poll on the shutdown flag (the retry
+                        // loop in `serve_stream`).
+                        stream
+                            .set_read_timeout(Some(Duration::from_millis(50)))
+                            .context("setting serve read timeout")?;
                         scope.spawn(move || {
                             let Ok(read_half) = stream.try_clone() else {
                                 return;

@@ -338,6 +338,67 @@ fn concurrent_streams_survive_hot_swap_with_per_row_epoch_atomicity() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Regression: `!shutdown` must stop `serve_tcp` even while an idle
+/// client holds an open connection. Accepted streams used to get no
+/// read timeout, so the idle connection's reader thread parked in
+/// `read_line` forever and the accept loop's `thread::scope` could
+/// never join — the server hung on shutdown. With the timeout, idle
+/// readers poll the shutdown flag and the loop returns promptly.
+#[test]
+fn tcp_shutdown_returns_with_idle_connection_open() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    let (booster, valid) = train("binary:logistic", 1, 2, 51, 200);
+    let path = tmp("tcp_idle");
+    xgb_tpu::gbm::save_model_file(&booster, &path).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&path).unwrap());
+    let server = Arc::new(Server::start(registry, ServeOptions::default(), None));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    // deliberately NOT a scoped thread: if the accept loop regresses
+    // into the old hang, recv_timeout below fails the test instead of
+    // the test itself hanging on scope join
+    let accept_loop = std::thread::spawn(move || {
+        let r = srv.serve_tcp(listener);
+        let _ = done_tx.send(());
+        r
+    });
+
+    // idle client: connects and never sends a byte
+    let idle = TcpStream::connect(addr).unwrap();
+
+    // active client: one scored row, then a server-wide shutdown
+    let cols = valid.x.n_cols();
+    let row_line: String = (0..cols)
+        .map(|c| format!("{}", valid.x.get(0, c).unwrap_or(Float::NAN)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let want = booster.predict(&valid.x)[0];
+    let active = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(active.try_clone().unwrap());
+    writeln!(&active, "{row_line}").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_line_matches(resp.trim_end(), &[want], "tcp row");
+    writeln!(&active, "!shutdown").unwrap();
+
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("serve_tcp still blocked after !shutdown with an idle connection open");
+    accept_loop.join().unwrap().unwrap();
+    drop(idle);
+    drop(active);
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 /// Stream-order bookkeeping around control verbs and bad lines: `!stats`
 /// and parse errors answer in position (flush barrier), empty lines are
 /// skipped, `!quit` ends the stream without shutting the server down.

@@ -248,6 +248,80 @@ if ! grep -q 'swaps=1' "$SWAP_ERR"; then
     exit 1
 fi
 
+# Scenario smokes: the bit-identity contract extended to the scenario
+# surface — new objectives, categorical features, and training
+# continuation. Each pins two CLI runs (resident vs streamed, or
+# split-vs-uninterrupted) to byte-identical saved model files, the
+# strongest equality the CLI can observe.
+echo "==> quantile-objective smoke (CLI, resident vs streamed byte-compare)"
+QUANT_FLAGS=(--libsvm "$SMOKE_DIR/higgs.libsvm" --objective reg:quantile
+             --quantile-alpha 0.9 --num-rounds 3 --max-bins 32 --n-devices 2
+             --valid-frac 0)
+QMODEL_RES="$SMOKE_DIR/quantile_resident.txt"
+QMODEL_STR="$SMOKE_DIR/quantile_streamed.txt"
+./target/release/xgb-tpu train "${QUANT_FLAGS[@]}" \
+    --model-out "$QMODEL_RES" >/dev/null 2>&1
+./target/release/xgb-tpu train "${QUANT_FLAGS[@]}" --stream --batch-rows 32 \
+    --model-out "$QMODEL_STR" >/dev/null 2>&1
+if ! cmp -s "$QMODEL_RES" "$QMODEL_STR"; then
+    echo "FAIL: reg:quantile alpha=0.9 resident and streamed models differ"
+    exit 1
+fi
+if ! grep -q '^quantile_alpha = 0.9' "$QMODEL_RES"; then
+    echo "FAIL: quantile model file does not persist quantile_alpha = 0.9"
+    exit 1
+fi
+
+echo "==> categorical-feature smoke (CLI, cat: header, resident vs streamed)"
+CATCSV="$SMOKE_DIR/cat.csv"
+{
+    echo "cat:c0,f1,label"
+    awk 'BEGIN {
+        for (i = 0; i < 512; i++) {
+            c = i % 7;
+            y = (c == 1 || c == 4 || c == 6) ? 1 : 0;
+            printf "%d,%.4f,%d\n", c, (i % 97) / 97.0, y;
+        }
+    }'
+} > "$CATCSV"
+CAT_FLAGS=(--csv "$CATCSV" --header --label-col 2 --objective binary:logistic
+           --num-rounds 3 --max-bins 32 --n-devices 2 --valid-frac 0)
+CMODEL_RES="$SMOKE_DIR/cat_resident.txt"
+CMODEL_STR="$SMOKE_DIR/cat_streamed.txt"
+./target/release/xgb-tpu train "${CAT_FLAGS[@]}" \
+    --model-out "$CMODEL_RES" >/dev/null 2>&1
+./target/release/xgb-tpu train "${CAT_FLAGS[@]}" --stream --batch-rows 32 \
+    --model-out "$CMODEL_STR" >/dev/null 2>&1
+if ! cmp -s "$CMODEL_RES" "$CMODEL_STR"; then
+    echo "FAIL: categorical resident and streamed models differ"
+    exit 1
+fi
+if ! grep -q '^cuts categorical = ' "$CMODEL_RES"; then
+    echo "FAIL: categorical model file does not record the categorical feature set"
+    exit 1
+fi
+if ! grep -q ' cat ' "$CMODEL_RES"; then
+    echo "FAIL: categorical model contains no membership-split nodes"
+    exit 1
+fi
+
+echo "==> training-continuation smoke (CLI, 5+resume-5 vs train-10 byte-compare)"
+RES_FLAGS=(--libsvm "$SMOKE_DIR/higgs.libsvm" --objective binary:logistic
+           --max-bins 32 --n-devices 2 --valid-frac 0)
+RMODEL_FULL="$SMOKE_DIR/resume_full10.txt"
+RMODEL_HALF="$SMOKE_DIR/resume_half5.txt"
+RMODEL_CONT="$SMOKE_DIR/resume_cont10.txt"
+./target/release/xgb-tpu train "${RES_FLAGS[@]}" --num-rounds 10 \
+    --model-out "$RMODEL_FULL" >/dev/null 2>&1
+./target/release/xgb-tpu train "${RES_FLAGS[@]}" --num-rounds 5 \
+    --model-out "$RMODEL_HALF" >/dev/null 2>&1
+./target/release/xgb-tpu train "${RES_FLAGS[@]}" --num-rounds 5 \
+    --resume "$RMODEL_HALF" --model-out "$RMODEL_CONT" >/dev/null 2>&1
+if ! cmp -s "$RMODEL_FULL" "$RMODEL_CONT"; then
+    echo "FAIL: train(5)+resume(5) model does not byte-match train(10)"
+    exit 1
+fi
+
 # Distributed smoke: train the same file as 3 real OS processes over a
 # loopback TCP ring (ranks 1 and 2 in the background, rank 0 in the
 # foreground) and require rank 0's `final:` line AND its saved model's

@@ -12,7 +12,10 @@ use crate::comm::{allreduce, AllReduceAlgo, CostModel, WireRing};
 use crate::coordinator::device::{DeviceShard, HistBackend, NativeBackend, ShardStorage};
 use crate::coordinator::CoordinatorParams;
 use crate::compress::CompressedMatrixBuilder;
-use crate::data::source::{scan_source, BatchSource, DMatrixSource, IngestMeta, DEFAULT_BATCH_ROWS};
+use crate::data::source::{
+    scan_source_meta, scan_source_with_categories, BatchSource, DMatrixSource, IngestMeta,
+    DEFAULT_BATCH_ROWS,
+};
 use crate::data::DMatrix;
 use crate::exec::{BufferPool, ExecContext, ROW_CHUNK};
 use crate::hist::{GradPairF64, Histogram};
@@ -248,8 +251,10 @@ impl MultiDeviceCoordinator {
         ensure!(p >= 1, "need at least one device");
         let exec = ExecContext::new(params.threads);
 
-        // pass 1: incremental sketch + O(n) metadata
-        let (cuts, mut meta) = scan_source(src, params.max_bins, &exec)?;
+        // pass 1: incremental sketch + O(n) metadata (flagged categorical
+        // features get exact one-bin-per-category cuts instead)
+        let (cuts, mut meta) =
+            scan_source_with_categories(src, params.max_bins, &params.categorical, &exec)?;
         let n = meta.n_rows;
         ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
 
@@ -292,7 +297,8 @@ impl MultiDeviceCoordinator {
         ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
         let exec = ExecContext::new(params.threads);
         let mut src = DMatrixSource::new(x, DEFAULT_BATCH_ROWS);
-        let (cuts, _meta) = scan_source(&mut src, params.max_bins, &exec)?;
+        let (cuts, _meta) =
+            scan_source_with_categories(&mut src, params.max_bins, &params.categorical, &exec)?;
         Ok(cuts)
     }
 
@@ -335,6 +341,58 @@ impl MultiDeviceCoordinator {
             &exec,
         )?;
         Self::assembled(params, cuts, devices, n, backend, exec)
+    }
+
+    /// **Resume construction**: stream a source against externally
+    /// frozen cuts (the grid persisted in a serialized booster). Pass 1
+    /// is the sketch-free [`scan_source_meta`] — resuming must *not*
+    /// re-sketch, or the new stream would quantise on a different grid
+    /// than the loaded trees' bin translation assumes; pass 2 is the
+    /// ordinary shard assembler. The stream may present fewer trailing
+    /// features than the frozen grid (they quantise as missing) but
+    /// never more.
+    pub fn from_source_with_cuts(
+        src: &mut dyn BatchSource,
+        params: CoordinatorParams,
+        cuts: HistogramCuts,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<(Self, IngestMeta)> {
+        let p = params.n_devices;
+        ensure!(p >= 1, "need at least one device");
+        let exec = ExecContext::new(params.threads);
+        let mut meta = scan_source_meta(src)?;
+        ensure!(
+            meta.n_cols <= cuts.n_features(),
+            "stream has {} features but the frozen cuts cover {} — \
+             resume data must match the training schema",
+            meta.n_cols,
+            cuts.n_features()
+        );
+        meta.n_cols = cuts.n_features();
+        let n = meta.n_rows;
+        ensure!(n >= p, "fewer rows ({n}) than devices ({p})");
+        src.reset()?;
+        let bounds: Vec<usize> = (0..=p).map(|d| d * n / p).collect();
+        let strides = if meta.dense {
+            vec![meta.n_cols; p]
+        } else {
+            shard_strides(&meta.row_nnz, &bounds)
+        };
+        let paging = PagingSpec::from_params(&params)?;
+        let (devices, pass2_peak) = assemble_shards(
+            src,
+            &cuts,
+            meta.col_shift,
+            meta.n_cols,
+            &bounds,
+            &strides,
+            meta.dense,
+            params.compress,
+            paging.as_ref(),
+            &exec,
+        )?;
+        meta.peak_transient_bytes = meta.peak_batch_float_bytes.max(pass2_peak);
+        Ok((Self::assembled(params, cuts, devices, n, backend, exec)?, meta))
     }
 
     /// Final assembly shared by every construction path. In distributed
@@ -406,6 +464,17 @@ impl MultiDeviceCoordinator {
             mask[i] = true;
         }
         Some(mask)
+    }
+
+    /// Fast-forward the per-tree column-sampling stream past `n_trees`
+    /// already-built trees — resume's rng alignment: a continued run must
+    /// draw the same masks for tree `k + i` as an uninterrupted run, so
+    /// the stream consumes exactly what the skipped trees would have.
+    /// No-op (matching `sample_columns`) while colsample is off.
+    pub fn skip_column_samples(&mut self, n_trees: usize) {
+        for _ in 0..n_trees {
+            let _ = self.sample_columns();
+        }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -569,6 +638,11 @@ impl MultiDeviceCoordinator {
                 right_value,
                 s.right_sum.hess as Float,
             );
+            if s.is_categorical() {
+                // membership split: stamp the category set on the node
+                // (threshold stays 0.0 — routing is by the bitset)
+                tree.set_categories(entry.nid, s.categories);
+            }
 
             // RepartitionInstances on every device — all shards
             // concurrently on the pool (repartitioning never touches the
@@ -1386,6 +1460,42 @@ mod tests {
         // uses raw values with the recovered thresholds — they must agree.
         for row in 0..g.train.n_rows() {
             let pred = r.tree.predict_row(&g.train.x, row);
+            assert!(
+                (pred - r.deltas[row]).abs() < 1e-6,
+                "row {row}: {pred} vs {}",
+                r.deltas[row]
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_split_trains_and_routes_consistently() {
+        // the target depends on *membership* of f0 in {0, 5} — no single
+        // threshold separates it, a membership split does in one node
+        let n = 400;
+        let cats = [0.0f32, 1.0, 3.0, 5.0, 7.0];
+        let mut vals = Vec::with_capacity(n * 2);
+        let mut y: Vec<Float> = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = cats[i % cats.len()];
+            vals.push(c);
+            vals.push((i % 17) as Float * 0.1);
+            y.push(if c == 0.0 || c == 5.0 { 1.0 } else { -1.0 });
+        }
+        let x = DMatrix::dense(vals, n, 2);
+        let mut params = simple_params(2);
+        params.categorical = vec![0];
+        params.eta = 1.0;
+        let mut c = MultiDeviceCoordinator::from_dmatrix(&x, params).unwrap();
+        let grads: Vec<GradPair> = y.iter().map(|&t| GradPair::new(-t, 1.0)).collect();
+        let r = c.build_tree(&grads).unwrap();
+        assert!(
+            r.tree.nodes.iter().any(|nd| nd.cats != 0),
+            "training should pick a membership split"
+        );
+        // quantised training routing == float traversal on the raw values
+        for row in 0..n {
+            let pred = r.tree.predict_row(&x, row);
             assert!(
                 (pred - r.deltas[row]).abs() < 1e-6,
                 "row {row}: {pred} vs {}",

@@ -364,6 +364,8 @@ mod tests {
             gain: 1.0,
             left_sum: Default::default(),
             right_sum: Default::default(),
+            categories: 0,
+            cat_bins: 0,
         };
         s.repartition(0, &split, 1, 2, &cuts, &ExecContext::serial());
         assert!(s.partitioner.node_count(1) > 0);

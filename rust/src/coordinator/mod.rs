@@ -172,6 +172,13 @@ pub struct CoordinatorParams {
     /// to a single-process run with `n_devices ==` world size. Requires
     /// `n_devices == peers.len()` and [`AllReduceAlgo::Ring`].
     pub dist: Option<crate::comm::DistConfig>,
+    /// Feature indices treated as categorical (empty = all numeric).
+    /// Pass 1 of ingestion collects each flagged feature's exact distinct
+    /// category set (codes must be integers in `[0, 64)`) and rebuilds
+    /// its cuts one-bin-per-category
+    /// ([`crate::data::scan_source_with_categories`]); split evaluation
+    /// then searches membership partitions instead of thresholds.
+    pub categorical: Vec<usize>,
 }
 
 impl Default for CoordinatorParams {
@@ -192,6 +199,7 @@ impl Default for CoordinatorParams {
             max_resident_pages: 0,
             page_rows: crate::compress::page::DEFAULT_PAGE_ROWS,
             dist: None,
+            categorical: Vec::new(),
         }
     }
 }

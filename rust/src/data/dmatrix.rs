@@ -285,7 +285,8 @@ impl<'a> Iterator for RowIter<'a> {
     }
 }
 
-/// A labelled dataset: features + labels (+ optional ranking groups).
+/// A labelled dataset: features + labels (+ optional ranking groups or
+/// survival interval upper bounds).
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub x: DMatrix,
@@ -293,6 +294,12 @@ pub struct Dataset {
     /// Query-group boundaries for ranking tasks (`rank:pairwise`): group `g`
     /// spans rows `groups[g]..groups[g+1]`. Empty for non-ranking tasks.
     pub groups: Vec<usize>,
+    /// Per-row upper interval bounds for survival tasks (`survival:aft`):
+    /// `y` holds the lower bounds, this the uppers (`+∞` = right-censored,
+    /// equal to `y` = uncensored event). Empty for non-survival tasks —
+    /// [`Dataset::bounds_upper`] then reports `y` itself (every row an
+    /// uncensored event).
+    pub y_upper: Vec<Float>,
 }
 
 impl Dataset {
@@ -302,6 +309,7 @@ impl Dataset {
             x,
             y,
             groups: Vec::new(),
+            y_upper: Vec::new(),
         }
     }
 
@@ -312,7 +320,39 @@ impl Dataset {
             assert_eq!(*groups.last().unwrap(), y.len());
             assert!(groups.windows(2).all(|w| w[0] < w[1]));
         }
-        Dataset { x, y, groups }
+        Dataset {
+            x,
+            y,
+            groups,
+            y_upper: Vec::new(),
+        }
+    }
+
+    /// Survival dataset: `y` lower and `y_upper` upper interval bounds
+    /// (see the field docs for the censoring conventions).
+    pub fn with_bounds(x: DMatrix, y: Vec<Float>, y_upper: Vec<Float>) -> Self {
+        assert_eq!(x.n_rows(), y.len(), "labels/rows mismatch");
+        assert_eq!(y.len(), y_upper.len(), "bounds/labels mismatch");
+        debug_assert!(
+            y.iter().zip(y_upper.iter()).all(|(&lo, &up)| lo <= up),
+            "interval lower bounds must not exceed uppers"
+        );
+        Dataset {
+            x,
+            y,
+            groups: Vec::new(),
+            y_upper,
+        }
+    }
+
+    /// Upper interval bounds: `y_upper` when present, else `y` itself
+    /// (every label an exact, uncensored observation).
+    pub fn bounds_upper(&self) -> &[Float] {
+        if self.y_upper.is_empty() {
+            &self.y
+        } else {
+            &self.y_upper
+        }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -333,10 +373,14 @@ impl Dataset {
         rng.shuffle(&mut idx);
         let (valid_idx, train_idx) = idx.split_at(n_valid);
         let take = |rows: &[usize]| {
-            Dataset::new(
+            let mut d = Dataset::new(
                 self.x.take_rows(rows),
                 rows.iter().map(|&r| self.y[r]).collect(),
-            )
+            );
+            if !self.y_upper.is_empty() {
+                d.y_upper = rows.iter().map(|&r| self.y_upper[r]).collect();
+            }
+            d
         };
         (take(train_idx), take(valid_idx))
     }
@@ -462,5 +506,21 @@ mod tests {
     #[test]
     fn float_bytes_dense() {
         assert_eq!(sample_dense().float_bytes(), 9 * 4);
+    }
+
+    #[test]
+    fn bounds_default_to_labels() {
+        let ds = Dataset::new(sample_dense(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(ds.bounds_upper(), &[1.0, 2.0, 3.0]);
+        let b = Dataset::with_bounds(
+            sample_dense(),
+            vec![1.0, 2.0, 3.0],
+            vec![1.0, Float::INFINITY, 5.0],
+        );
+        assert_eq!(b.bounds_upper()[2], 5.0);
+        // split carries the bounds along with their rows
+        let (train, valid) = b.split(1.0 / 3.0, 7);
+        assert_eq!(train.y_upper.len(), train.y.len());
+        assert_eq!(valid.y_upper.len(), valid.y.len());
     }
 }

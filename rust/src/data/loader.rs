@@ -119,6 +119,32 @@ pub fn parse_csv(reader: impl Read, label_col: usize, has_header: bool) -> Resul
     Ok(Dataset::new(DMatrix::dense(values, n_rows, n_cols), labels))
 }
 
+/// Which feature columns a CSV header flags as categorical: a header cell
+/// spelled `cat:<name>` marks its column. Returned indices are in
+/// **feature** space (the label column removed), ready for
+/// `LearnerParams::categorical_features`. A headerless or tag-free file
+/// yields an empty list.
+pub fn csv_header_categoricals(path: impl AsRef<Path>, label_col: usize) -> Result<Vec<usize>> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut header = String::new();
+    BufReader::new(file)
+        .read_line(&mut header)
+        .context("reading csv header")?;
+    let mut cats = Vec::new();
+    let mut feature = 0usize;
+    for (i, cell) in header.trim().split(',').enumerate() {
+        if i == label_col {
+            continue;
+        }
+        if cell.trim().starts_with("cat:") {
+            cats.push(feature);
+        }
+        feature += 1;
+    }
+    Ok(cats)
+}
+
 fn parse_field(f: &str) -> Result<Float> {
     let t = f.trim();
     if t.is_empty() || t.eq_ignore_ascii_case("na") || t.eq_ignore_ascii_case("nan") || t == "?" {
@@ -430,6 +456,21 @@ mod tests {
     fn libsvm_bad_token_is_error() {
         assert!(parse_libsvm("1 nocolon\n".as_bytes()).is_err());
         assert!(parse_libsvm("1 a:1.0\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn csv_header_cat_tags_map_to_feature_indices() {
+        // label in column 1: feature indices skip over it
+        let data = "f_a,y,cat:color,f_b,cat:size\n0.5,1,3,0.25,7\n";
+        let path = std::env::temp_dir().join("xgb_tpu_loader_cat_header.csv");
+        std::fs::write(&path, data).unwrap();
+        let cats = csv_header_categoricals(&path, 1).unwrap();
+        assert_eq!(cats, vec![1, 3], "feature space, label column removed");
+        // no tags -> empty
+        let plain = "y,f1,f2\n1,2,3\n";
+        std::fs::write(&path, plain).unwrap();
+        assert!(csv_header_categoricals(&path, 0).unwrap().is_empty());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -9,8 +9,8 @@ pub mod source;
 pub mod synthetic;
 
 pub use dmatrix::{DMatrix, Dataset};
-pub use loader::{load_csv, load_libsvm, save_csv, save_libsvm};
+pub use loader::{csv_header_categoricals, load_csv, load_libsvm, save_csv, save_libsvm};
 pub use source::{
-    scan_source, BatchSource, CsvSource, DMatrixSource, IngestMeta, LibsvmSource, RowBatch,
-    SyntheticSource, DEFAULT_BATCH_ROWS,
+    scan_source, scan_source_meta, scan_source_with_categories, BatchSource, CsvSource,
+    DMatrixSource, IngestMeta, LibsvmSource, RowBatch, SyntheticSource, DEFAULT_BATCH_ROWS,
 };

@@ -73,6 +73,10 @@ pub struct RowBatch {
     /// Per-row query id (−1 = none). Empty when the source carries no
     /// ranking groups.
     pub qid: Vec<i64>,
+    /// Per-row upper interval bounds for survival tasks (`y` holds the
+    /// lowers). Empty when the source carries no interval labels — rows
+    /// are then exact observations.
+    pub y_upper: Vec<Float>,
 }
 
 impl RowBatch {
@@ -161,6 +165,7 @@ impl MemCursor {
         x: &DMatrix,
         y: &[Float],
         groups: &[usize],
+        y_upper: &[Float],
     ) -> Option<RowBatch> {
         let n = x.n_rows();
         if self.pos >= n {
@@ -187,11 +192,17 @@ impl MemCursor {
             }
             q
         };
+        let batch_upper = if y_upper.is_empty() {
+            Vec::new()
+        } else {
+            y_upper[self.pos..hi].to_vec()
+        };
         self.pos = hi;
         Some(RowBatch {
             x: batch_x,
             y: batch_y,
             qid,
+            y_upper: batch_upper,
         })
     }
 }
@@ -204,6 +215,7 @@ pub struct DMatrixSource<'a> {
     x: &'a DMatrix,
     y: Option<&'a [Float]>,
     groups: &'a [usize],
+    y_upper: &'a [Float],
     cursor: MemCursor,
 }
 
@@ -214,6 +226,7 @@ impl<'a> DMatrixSource<'a> {
             x,
             y: None,
             groups: &[],
+            y_upper: &[],
             cursor: MemCursor::new(batch_rows),
         }
     }
@@ -224,6 +237,7 @@ impl<'a> DMatrixSource<'a> {
             x: &ds.x,
             y: Some(&ds.y),
             groups: &ds.groups,
+            y_upper: &ds.y_upper,
             cursor: MemCursor::new(batch_rows),
         }
     }
@@ -238,7 +252,7 @@ impl BatchSource for DMatrixSource<'_> {
     fn next_batch(&mut self) -> Result<Option<RowBatch>> {
         let y: &[Float] = self.y.unwrap_or(&[]);
         debug_assert!(y.is_empty() || y.len() == self.x.n_rows());
-        Ok(self.cursor.next_batch(self.x, y, self.groups))
+        Ok(self.cursor.next_batch(self.x, y, self.groups, self.y_upper))
     }
 
     fn name(&self) -> &str {
@@ -287,7 +301,9 @@ impl BatchSource for SyntheticSource {
     }
 
     fn next_batch(&mut self) -> Result<Option<RowBatch>> {
-        Ok(self.cursor.next_batch(&self.ds.x, &self.ds.y, &self.ds.groups))
+        Ok(self
+            .cursor
+            .next_batch(&self.ds.x, &self.ds.y, &self.ds.groups, &self.ds.y_upper))
     }
 
     fn name(&self) -> &str {
@@ -362,6 +378,7 @@ impl BatchSource for CsvSource {
             x: DMatrix::dense(values, labels.len(), n_cols),
             y: labels,
             qid: Vec::new(),
+            y_upper: Vec::new(),
         }))
     }
 
@@ -442,6 +459,7 @@ impl BatchSource for LibsvmSource {
             x: DMatrix::csr(indptr, indices, values, n_rows, n_cols),
             y: labels,
             qid: qids,
+            y_upper: Vec::new(),
         }))
     }
 
@@ -498,6 +516,9 @@ pub struct IngestMeta {
     /// Whether batches are dense (positional ELLPACK layout) or sparse.
     pub dense: bool,
     pub labels: Vec<Float>,
+    /// Upper interval bounds aligned with `labels` (survival streams;
+    /// empty when every row is an exact observation).
+    pub labels_upper: Vec<Float>,
     /// Ranking group boundaries reconstructed from qids (empty = none).
     pub groups: Vec<usize>,
     /// Per-row present-value count (sparse streams only; empty for
@@ -523,12 +544,80 @@ impl IngestMeta {
         let x = DMatrix::csr(vec![0usize; n + 1], Vec::new(), Vec::new(), n, self.n_cols);
         let y = std::mem::take(&mut self.labels);
         let groups = std::mem::take(&mut self.groups);
-        if groups.is_empty() {
+        let upper = std::mem::take(&mut self.labels_upper);
+        let mut ds = if groups.is_empty() {
             Dataset::new(x, y)
         } else {
             Dataset::with_groups(x, y, groups)
+        };
+        ds.y_upper = upper;
+        ds
+    }
+}
+
+/// Fold one batch's row-aligned metadata into the accumulating
+/// [`IngestMeta`] — shared between the sketching pass ([`scan_source`])
+/// and the sketch-free resume pass ([`scan_source_meta`]) so both see
+/// exactly the same labels, bounds, groups and sparsity.
+fn fold_batch_meta(
+    meta: &mut IngestMeta,
+    qids: &mut Vec<i64>,
+    dense: &mut Option<bool>,
+    min_col: &mut u32,
+    raw_cols: bool,
+    batch: &RowBatch,
+) -> Result<()> {
+    let b_rows = batch.n_rows();
+    ensure!(b_rows > 0, "source yielded an empty batch");
+    let batch_dense = matches!(batch.x, DMatrix::Dense { .. });
+    match *dense {
+        None => *dense = Some(batch_dense),
+        Some(d) => ensure!(
+            d == batch_dense,
+            "source switched between dense and sparse batches"
+        ),
+    }
+    ensure!(batch.y.len() == b_rows, "batch labels/rows mismatch");
+    // Interval bounds: once any batch carries them, every row needs one;
+    // bound-less batches contribute exact observations (upper == label).
+    if !batch.y_upper.is_empty() || !meta.labels_upper.is_empty() {
+        if meta.labels_upper.is_empty() {
+            meta.labels_upper = meta.labels.clone();
+        }
+        if batch.y_upper.is_empty() {
+            meta.labels_upper.extend_from_slice(&batch.y);
+        } else {
+            ensure!(
+                batch.y_upper.len() == b_rows,
+                "batch interval bounds/rows mismatch"
+            );
+            meta.labels_upper.extend_from_slice(&batch.y_upper);
         }
     }
+    meta.labels.extend_from_slice(&batch.y);
+    if batch.qid.is_empty() {
+        qids.resize(qids.len() + b_rows, -1);
+    } else {
+        ensure!(batch.qid.len() == b_rows, "batch qids/rows mismatch");
+        qids.extend_from_slice(&batch.qid);
+    }
+    if let DMatrix::Csr {
+        indptr, indices, ..
+    } = &batch.x
+    {
+        for r in 0..b_rows {
+            meta.row_nnz.push((indptr[r + 1] - indptr[r]) as u32);
+        }
+        if raw_cols {
+            for &c in indices {
+                *min_col = (*min_col).min(c);
+            }
+        }
+    }
+    meta.peak_batch_float_bytes = meta.peak_batch_float_bytes.max(batch.x.float_bytes());
+    meta.n_batches += 1;
+    meta.n_rows += b_rows;
+    Ok(())
 }
 
 /// **Pass 1**: stream the whole source once, folding every batch into the
@@ -543,49 +632,52 @@ pub fn scan_source(
     max_bins: usize,
     exec: &ExecContext,
 ) -> Result<(HistogramCuts, IngestMeta)> {
+    scan_source_with_categories(src, max_bins, &[], exec)
+}
+
+/// [`scan_source`] with per-feature categorical flags: flagged columns
+/// additionally accumulate their **exact distinct value set** during the
+/// sketch pass, and the finished cuts replace those features' quantile
+/// cuts with one-bin-per-category cuts
+/// ([`HistogramCuts::apply_categories`]). Category codes must be
+/// non-negative integers below 64 (the split-bitset width); anything
+/// else fails loudly here rather than mis-binning silently.
+pub fn scan_source_with_categories(
+    src: &mut dyn BatchSource,
+    max_bins: usize,
+    categorical: &[usize],
+    exec: &ExecContext,
+) -> Result<(HistogramCuts, IngestMeta)> {
+    use std::collections::{BTreeMap, BTreeSet};
+
     let raw_cols = src.columns_are_raw();
     let mut sketch = StreamingSketch::new(max_bins);
     let mut meta = IngestMeta::default();
     let mut qids: Vec<i64> = Vec::new();
     let mut dense: Option<bool> = None;
     let mut min_col: u32 = u32::MAX;
+    // Raw column indices whose values we must collect. The column base
+    // of raw (LibSVM) streams is unresolved until the end of the pass,
+    // so watch both candidate raw columns (`f` and `f+1`) and pick the
+    // right one once the shift is known.
+    let wanted: BTreeSet<usize> = categorical
+        .iter()
+        .flat_map(|&f| [f, f + 1])
+        .collect();
+    let mut seen_values: BTreeMap<usize, BTreeSet<u32>> = BTreeMap::new();
 
     while let Some(batch) = src.next_batch()? {
-        let b_rows = batch.n_rows();
-        ensure!(b_rows > 0, "source yielded an empty batch");
-        let batch_dense = matches!(batch.x, DMatrix::Dense { .. });
-        match dense {
-            None => dense = Some(batch_dense),
-            Some(d) => ensure!(
-                d == batch_dense,
-                "source switched between dense and sparse batches"
-            ),
-        }
-        ensure!(batch.y.len() == b_rows, "batch labels/rows mismatch");
-        meta.labels.extend_from_slice(&batch.y);
-        if batch.qid.is_empty() {
-            qids.resize(qids.len() + b_rows, -1);
-        } else {
-            ensure!(batch.qid.len() == b_rows, "batch qids/rows mismatch");
-            qids.extend_from_slice(&batch.qid);
-        }
-        if let DMatrix::Csr {
-            indptr, indices, ..
-        } = &batch.x
-        {
-            for r in 0..b_rows {
-                meta.row_nnz.push((indptr[r + 1] - indptr[r]) as u32);
-            }
-            if raw_cols {
-                for &c in indices {
-                    min_col = min_col.min(c);
+        fold_batch_meta(&mut meta, &mut qids, &mut dense, &mut min_col, raw_cols, &batch)?;
+        if !wanted.is_empty() {
+            for r in 0..batch.n_rows() {
+                for (c, v) in batch.x.iter_row(r) {
+                    if wanted.contains(&c) {
+                        seen_values.entry(c).or_default().insert(v.to_bits());
+                    }
                 }
             }
         }
         sketch.fold(&batch.x, exec);
-        meta.peak_batch_float_bytes = meta.peak_batch_float_bytes.max(batch.x.float_bytes());
-        meta.n_batches += 1;
-        meta.n_rows += b_rows;
     }
 
     meta.dense = dense.unwrap_or(true);
@@ -596,8 +688,60 @@ pub fn scan_source(
     let feature_summaries = &summaries[shift.min(summaries.len())..];
     meta.n_cols = feature_summaries.len();
     meta.groups = groups_from_qids(&qids)?;
-    let cuts = HistogramCuts::from_summaries(feature_summaries, max_bins);
+    let mut cuts = HistogramCuts::from_summaries(feature_summaries, max_bins);
+
+    if !categorical.is_empty() {
+        let mut cat_values: BTreeMap<usize, Vec<Float>> = BTreeMap::new();
+        for &f in categorical {
+            ensure!(
+                f < meta.n_cols,
+                "categorical feature f{f} out of range (stream has {} features)",
+                meta.n_cols
+            );
+            let set = seen_values.get(&(f + shift)).cloned().unwrap_or_default();
+            ensure!(
+                !set.is_empty(),
+                "categorical feature f{f} has no present values in the stream"
+            );
+            let mut vals: Vec<Float> = set.iter().map(|&b| Float::from_bits(b)).collect();
+            for &v in &vals {
+                ensure!(
+                    v.is_finite() && v >= 0.0 && v < 64.0 && v.fract() == 0.0,
+                    "categorical feature f{f} has value {v} — category codes \
+                     must be integers in [0, 64)"
+                );
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).expect("finite values compare"));
+            cat_values.insert(f, vals);
+        }
+        cuts.apply_categories(&cat_values);
+    }
     Ok((cuts, meta))
+}
+
+/// Sketch-free pass 1 for **training continuation**: accumulates the same
+/// [`IngestMeta`] as [`scan_source`] (labels, interval bounds, groups,
+/// per-row nnz, column base) without building a quantile sketch — resume
+/// quantises against the cuts frozen in the serialized model, so
+/// sketching the new stream would be wasted work.
+pub fn scan_source_meta(src: &mut dyn BatchSource) -> Result<IngestMeta> {
+    let raw_cols = src.columns_are_raw();
+    let mut meta = IngestMeta::default();
+    let mut qids: Vec<i64> = Vec::new();
+    let mut dense: Option<bool> = None;
+    let mut min_col: u32 = u32::MAX;
+    let mut max_cols: usize = 0;
+
+    while let Some(batch) = src.next_batch()? {
+        fold_batch_meta(&mut meta, &mut qids, &mut dense, &mut min_col, raw_cols, &batch)?;
+        max_cols = max_cols.max(batch.x.n_cols());
+    }
+
+    meta.dense = dense.unwrap_or(true);
+    meta.col_shift = u32::from(raw_cols && min_col != u32::MAX && min_col >= 1);
+    meta.n_cols = max_cols.saturating_sub(meta.col_shift as usize);
+    meta.groups = groups_from_qids(&qids)?;
+    Ok(meta)
 }
 
 #[cfg(test)]
@@ -746,6 +890,88 @@ mod tests {
                 meta.peak_batch_float_bytes
             );
         }
+    }
+
+    #[test]
+    fn interval_bounds_stream_through_scan() {
+        let g = generate(&DatasetSpec::higgs_like(120), 23);
+        let n = g.train.n_rows();
+        let upper: Vec<Float> = g.train.y.iter().map(|&v| v + 1.0).collect();
+        let ds = Dataset::with_bounds(g.train.x.clone(), g.train.y.clone(), upper.clone());
+        let exec = ExecContext::serial();
+        // bounds survive batching at any batch size
+        for batch in [13usize, n] {
+            let mut src = DMatrixSource::from_dataset(&ds, batch);
+            let (_, mut meta) = scan_source(&mut src, 8, &exec).unwrap();
+            assert_eq!(meta.labels_upper, upper, "batch={batch}");
+            let out = meta.take_label_dataset();
+            assert_eq!(out.bounds_upper(), &upper[..]);
+            assert_eq!(out.n_rows(), n);
+        }
+        // bound-less streams keep labels_upper empty
+        let mut src = DMatrixSource::from_dataset(&g.train, 13);
+        let (_, meta) = scan_source(&mut src, 8, &exec).unwrap();
+        assert!(meta.labels_upper.is_empty());
+    }
+
+    #[test]
+    fn categorical_scan_builds_exact_category_bins() {
+        // f0 numeric, f1 categorical with codes {0, 3, 5}
+        let n = 90usize;
+        let mut v = Vec::new();
+        let mut rng = crate::util::Pcg64::new(7);
+        for r in 0..n {
+            v.push(rng.next_f32() * 4.0);
+            v.push([0.0, 3.0, 5.0][r % 3] as Float);
+        }
+        let ds = Dataset::new(DMatrix::dense(v, n, 2), vec![1.0; n]);
+        let exec = ExecContext::serial();
+        for batch in [11usize, n] {
+            let mut src = DMatrixSource::from_dataset(&ds, batch);
+            let (cuts, meta) =
+                scan_source_with_categories(&mut src, 16, &[1], &exec).unwrap();
+            assert_eq!(meta.n_cols, 2);
+            assert!(!cuts.is_categorical(0));
+            assert!(cuts.is_categorical(1));
+            assert_eq!(cuts.feature_bins(1), 3, "batch={batch}");
+            for (i, &c) in [0.0 as Float, 3.0, 5.0].iter().enumerate() {
+                let b = cuts.bin_index(1, c);
+                assert_eq!((b - cuts.ptrs[1]) as usize, i, "category {c}");
+                assert_eq!(cuts.category_of_local_bin(1, i), c);
+            }
+        }
+        // non-integer and out-of-range codes fail loudly
+        let bad = Dataset::new(DMatrix::dense(vec![0.5, 1.0, 2.0, 3.0], 4, 1), vec![0.0; 4]);
+        let mut src = DMatrixSource::from_dataset(&bad, 4);
+        let err = scan_source_with_categories(&mut src, 8, &[0], &exec).unwrap_err();
+        assert!(err.to_string().contains("category codes"), "{err}");
+        let big = Dataset::new(DMatrix::dense(vec![1.0, 64.0, 2.0, 3.0], 4, 1), vec![0.0; 4]);
+        let mut src = DMatrixSource::from_dataset(&big, 4);
+        assert!(scan_source_with_categories(&mut src, 8, &[0], &exec).is_err());
+        // out-of-range feature index
+        let mut src = DMatrixSource::from_dataset(&ds, 16);
+        assert!(scan_source_with_categories(&mut src, 8, &[2], &exec).is_err());
+    }
+
+    #[test]
+    fn scan_source_meta_matches_sketching_scan() {
+        let g = generate(&DatasetSpec::ranking_like(180), 29);
+        let path = tmp("meta_scan.libsvm");
+        save_libsvm(&g.train, &path).unwrap();
+        let exec = ExecContext::serial();
+        let mut src = LibsvmSource::open(&path, 19).unwrap();
+        let (_, full) = scan_source(&mut src, 16, &exec).unwrap();
+        let mut src2 = LibsvmSource::open(&path, 19).unwrap();
+        let light = scan_source_meta(&mut src2).unwrap();
+        assert_eq!(light.n_rows, full.n_rows);
+        assert_eq!(light.n_cols, full.n_cols);
+        assert_eq!(light.col_shift, full.col_shift);
+        assert_eq!(light.labels, full.labels);
+        assert_eq!(light.groups, full.groups);
+        assert_eq!(light.row_nnz, full.row_nnz);
+        assert_eq!(light.dense, full.dense);
+        assert_eq!(light.n_batches, full.n_batches);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

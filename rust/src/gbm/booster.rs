@@ -11,7 +11,6 @@ use anyhow::{Context, Result};
 use crate::coordinator::{BuildStats, CoordinatorParams, HistBackend, NativeBackend};
 use crate::data::Dataset;
 use crate::gbm::learner::Learner;
-use crate::gbm::metric::metric_by_name;
 use crate::gbm::objective::Objective;
 use crate::gbm::params::LearnerParams;
 use crate::gbm::registry::ObjectiveRegistry;
@@ -207,6 +206,10 @@ impl BoosterParams {
             batch_rows: self.batch_rows,
             max_resident_pages: self.max_resident_pages,
             page_rows: self.page_rows,
+            // scenario-shaping knobs (quantile α, tweedie ρ, AFT
+            // distribution/σ, categorical flags) have no legacy string
+            // field — the typed surface is the only way to set them
+            ..LearnerParams::default()
         })
     }
 
@@ -263,7 +266,8 @@ impl Booster {
         trees: Vec<Vec<RegTree>>,
         train_secs: f64,
     ) -> Result<Booster> {
-        let objective = ObjectiveRegistry::create(params.objective.name(), params.num_class)?;
+        let objective =
+            ObjectiveRegistry::create_with(params.objective.name(), &params.objective_params())?;
         anyhow::ensure!(trees.len() == objective.n_outputs(), "tree groups != outputs");
         Ok(Booster {
             params,
@@ -327,10 +331,17 @@ impl Booster {
     }
 
     /// Evaluate a named metric on a dataset (registry-resolved, so custom
-    /// metrics work here too).
+    /// metrics work here too). Bare parametrised names (`pinball`,
+    /// `tweedie-nloglik`, `aft-nloglik`) shape themselves from this
+    /// model's objective parameters; an explicit `@arg` still wins.
     pub fn evaluate(&self, ds: &Dataset, metric_name: &str) -> Result<f64> {
-        let metric = metric_by_name(metric_name)?;
+        let metric = self.resolve_metric(metric_name)?;
         Ok(metric.eval(ds, &self.predict(&ds.x)))
+    }
+
+    /// Registry lookup shaped by this model's objective parameters.
+    fn resolve_metric(&self, name: &str) -> Result<Box<dyn crate::gbm::metric::Metric>> {
+        crate::gbm::registry::MetricRegistry::create_for(name, &self.params.objective_params())
     }
 
     /// Name of the objective's default evaluation metric (what `evaluate`
@@ -467,7 +478,7 @@ impl Booster {
     ) -> Result<(f64, u64)> {
         let n_cols = self.cuts_for_prediction()?.n_features();
         let (preds, packed) = self.predict_paged(src, page_rows, max_resident_pages)?;
-        let metric = metric_by_name(metric_name)?;
+        let metric = self.resolve_metric(metric_name)?;
         let clamped = packed.clamped_values;
         let ds = Self::labels_dataset(n_cols, packed.labels, packed.groups);
         Ok((metric.eval(&ds, &preds), clamped))
@@ -485,7 +496,7 @@ impl Booster {
     ) -> Result<f64> {
         let n_cols = self.cuts_for_prediction()?.n_features();
         let (preds, sm) = self.predict_stream(src)?;
-        let metric = metric_by_name(metric_name)?;
+        let metric = self.resolve_metric(metric_name)?;
         let ds = Self::labels_dataset(n_cols, sm.labels, sm.groups);
         Ok(metric.eval(&ds, &preds))
     }

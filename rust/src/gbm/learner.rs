@@ -42,8 +42,8 @@ use crate::exec::ExecContext;
 use crate::gbm::booster::{Booster, EvalRecord};
 use crate::gbm::metric::Metric;
 use crate::gbm::params::{
-    AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints, ObjectiveKind,
-    ValidationErrors, WirePayload,
+    AftDistribution, AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints,
+    ObjectiveKind, ValidationErrors, WirePayload,
 };
 use crate::gbm::registry::{MetricRegistry, ObjectiveRegistry};
 use crate::predict::quantised::{self, QuantisedBatch};
@@ -352,7 +352,7 @@ impl Learner {
             params.coordinator_params(),
             backend,
         )?;
-        self.boost(params, coordinator, train, valid, t0)
+        self.boost(params, coordinator, train, valid, t0, None)
     }
 
     /// **Out-of-core training**: ingest a [`BatchSource`] through the
@@ -394,13 +394,132 @@ impl Learner {
             .check_n_features(meta.n_cols)
             .map_err(|e: String| anyhow::anyhow!(e))?;
         let train = meta.take_label_dataset();
-        self.boost(params, coordinator, &train, valid, t0)
+        self.boost(params, coordinator, &train, valid, t0, None)
+    }
+
+    /// **Training continuation**: boost `self.params.num_rounds` *further*
+    /// rounds on top of an existing (possibly serialized-and-reloaded)
+    /// booster. The prior model's frozen [`crate::quantile::HistogramCuts`]
+    /// are reused verbatim — `train` is quantised against the *original*
+    /// grid, never re-sketched — so the continued trees split on exactly
+    /// the bins the prior run saw. Objective (with its shaping params) and
+    /// `max_bins` must match the prior's persisted params; mismatches are
+    /// rejected before any work happens.
+    ///
+    /// Bit-parity contract: `train(a+b rounds)` ==
+    /// `train(a)` → serialize → reload → `resume(b)` — identical trees,
+    /// margins and eval records, for every thread and device count
+    /// (`rust/tests/scenarios.rs`).
+    pub fn resume(
+        &mut self,
+        prior: &Booster,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Booster> {
+        self.resume_with_backend(prior, train, valid, Box::new(NativeBackend::default()))
+    }
+
+    /// [`resume`](Self::resume) with an explicit histogram backend.
+    pub fn resume_with_backend(
+        &mut self,
+        prior: &Booster,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<Booster> {
+        let t0 = Instant::now();
+        let params = self.params.clone();
+        params
+            .monotone_constraints
+            .check_n_features(train.x.n_cols())
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+        let cuts = self.check_resume(prior)?;
+        let coordinator = MultiDeviceCoordinator::with_cuts(
+            &train.x,
+            params.coordinator_params(),
+            cuts,
+            backend,
+        )?;
+        self.boost(params, coordinator, train, valid, t0, Some(prior))
+    }
+
+    /// [`resume`](Self::resume) over a streamed [`BatchSource`]: pass 1
+    /// only scans labels/widths (no sketching — the cuts are frozen), pass
+    /// 2 quantises against the prior's grid. Bit-identical to the
+    /// in-memory resume for every batch size.
+    pub fn resume_from_source(
+        &mut self,
+        prior: &Booster,
+        src: &mut dyn BatchSource,
+        valid: Option<&Dataset>,
+    ) -> Result<Booster> {
+        self.resume_from_source_with_backend(prior, src, valid, Box::new(NativeBackend::default()))
+    }
+
+    /// [`resume_from_source`](Self::resume_from_source) with an explicit
+    /// histogram backend.
+    pub fn resume_from_source_with_backend(
+        &mut self,
+        prior: &Booster,
+        src: &mut dyn BatchSource,
+        valid: Option<&Dataset>,
+        backend: Box<dyn HistBackend>,
+    ) -> Result<Booster> {
+        let t0 = Instant::now();
+        let params = self.params.clone();
+        let cuts = self.check_resume(prior)?;
+        let (coordinator, mut meta) = MultiDeviceCoordinator::from_source_with_cuts(
+            src,
+            params.coordinator_params(),
+            cuts,
+            backend,
+        )?;
+        params
+            .monotone_constraints
+            .check_n_features(meta.n_cols)
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+        let train = meta.take_label_dataset();
+        self.boost(params, coordinator, &train, valid, t0, Some(prior))
+    }
+
+    /// Validate that this learner's params are compatible with continuing
+    /// `prior`, and hand back the frozen quantisation grid to reuse.
+    fn check_resume(&self, prior: &Booster) -> Result<crate::quantile::HistogramCuts> {
+        anyhow::ensure!(
+            self.params.objective == prior.params.objective,
+            "resume objective {:?} does not match the prior model's {:?}",
+            self.params.objective,
+            prior.params.objective
+        );
+        anyhow::ensure!(
+            self.params.objective_params() == prior.params.objective_params(),
+            "resume objective parameters (num_class / quantile_alpha / \
+             tweedie_variance_power / aft_distribution / aft_sigma) do not \
+             match the prior model's"
+        );
+        anyhow::ensure!(
+            self.params.max_bins == prior.params.max_bins,
+            "resume max_bins {} does not match the prior model's {} — the \
+             frozen cuts were sketched at the original resolution",
+            self.params.max_bins,
+            prior.params.max_bins
+        );
+        let cuts = prior.cuts.as_ref().context(
+            "prior booster carries no quantisation cuts — resume needs the \
+             frozen grid (serialized models persist it)",
+        )?;
+        Ok(cuts.clone())
     }
 
     /// The Figure-1 boosting loop over an already-constructed coordinator.
     /// `train` supplies labels/groups for gradients and metrics; its
     /// feature matrix is only touched by validation-free paths (the
-    /// streamed label dataset carries none).
+    /// streamed label dataset carries none). With `prior`, the loop
+    /// *continues* that model: margins are rebuilt from its trees over the
+    /// (re-quantised) training shards, the subsample/colsample rng streams
+    /// fast-forward past the rounds it already consumed, and round
+    /// numbering carries on from its last round — so `train(5)` →
+    /// serialize → reload → `resume(5)` is bit-identical to `train(10)`.
     fn boost(
         &mut self,
         params: LearnerParams,
@@ -408,13 +527,17 @@ impl Learner {
         train: &Dataset,
         valid: Option<&Dataset>,
         t0: Instant,
+        prior: Option<&Booster>,
     ) -> Result<Booster> {
-        let objective = ObjectiveRegistry::create(params.objective.name(), params.num_class)
+        let op = params.objective_params();
+        let objective = ObjectiveRegistry::create_with(params.objective.name(), &op)
             .context("resolving objective")?;
         let k = objective.n_outputs();
         let metric: Box<dyn Metric> = match &params.eval_metric {
-            Some(kind) => MetricRegistry::create(kind.name()).context("resolving eval_metric")?,
-            None => MetricRegistry::create(objective.default_metric())
+            Some(kind) => {
+                MetricRegistry::create_for(kind.name(), &op).context("resolving eval_metric")?
+            }
+            None => MetricRegistry::create_for(objective.default_metric(), &op)
                 .context("resolving the objective's default metric")?,
         };
         let minimize = metric.minimize();
@@ -433,9 +556,28 @@ impl Learner {
         // scoring (results are thread-count-invariant — see crate::exec)
         let exec = ExecContext::new(params.threads);
 
-        let base_score = objective.base_score(train);
+        let mut build_stats = BuildStats::default();
+        // continuation keeps the prior's base score: it was fit on the
+        // original objective/labels, and re-deriving it from the resume
+        // data would shift every margin and break `train(a+b)` parity
+        let base_score = match prior {
+            Some(b) => b.base_score.clone(),
+            None => objective.base_score(train),
+        };
         let n = train.n_rows();
-        let mut margins: Vec<Vec<Float>> = base_score.iter().map(|&b| vec![b; n]).collect();
+        let mut margins: Vec<Vec<Float>> = match prior {
+            // rebuild training margins by traversing the prior trees over
+            // the (re-quantised) shards — the same leaf values are summed
+            // in the same tree order as the original run's accumulated
+            // deltas, so the f32 addition sequence (and thus every
+            // continued gradient) is bit-identical
+            Some(b) => {
+                let (m, s) = coordinator.predict_margins(&b.trees, &base_score)?;
+                build_stats.accumulate(&s);
+                m
+            }
+            None => base_score.iter().map(|&b| vec![b; n]).collect(),
+        };
         let mut valid_margins: Option<Vec<Vec<Float>>> =
             valid.map(|v| base_score.iter().map(|&b| vec![b; v.n_rows()]).collect());
         // in-training eval runs on the compressed path: the validation
@@ -454,16 +596,42 @@ impl Learner {
             Some(v) => Some(QuantisedBatch::from_dmatrix(&v.x, &coordinator.cuts, 0)?),
             None => None,
         };
+        // replay the prior trees into the valid margins exactly as the
+        // original run accumulated them round by round: same bin-space
+        // translation, same per-tree addition order
+        if let Some(b) = prior {
+            if let (Some(vm), Some(qv)) = (valid_margins.as_mut(), quantised_valid.as_ref()) {
+                for (c, group) in b.trees.iter().enumerate() {
+                    for t in group {
+                        let bt = quantised::BinTree::from_tree(t, &coordinator.cuts);
+                        quantised::accumulate_bin_tree_par(&bt, qv, &mut vm[c], &exec);
+                    }
+                }
+            }
+        }
 
-        let mut trees: Vec<Vec<RegTree>> = vec![Vec::new(); k];
+        // the continued ensemble extends the prior's trees in place
+        let mut trees: Vec<Vec<RegTree>> = match prior {
+            Some(b) => b.trees.clone(),
+            None => vec![Vec::new(); k],
+        };
+        let offset = prior.map(|b| b.n_rounds()).unwrap_or(0);
         let mut eval_history: Vec<EvalRecord> = Vec::new();
-        let mut build_stats = BuildStats::default();
 
         for cb in self.callbacks.iter_mut().chain(implicit.iter_mut()) {
             cb.on_train_begin()?;
         }
 
         let mut sub_rng = crate::util::Pcg64::new(params.seed ^ 0x5b5a);
+        // fast-forward the shared rng streams past the rounds the prior
+        // run consumed, so round `offset + r` here draws exactly what
+        // round `offset + r` of an uninterrupted run would have drawn
+        if params.subsample < 1.0 {
+            for _ in 0..offset * n {
+                sub_rng.next_f64();
+            }
+        }
+        coordinator.skip_column_samples(offset * k);
         // round-arena out-param: the gradient buffers live outside the
         // round loop and are rewritten in place every round — after the
         // warm-up round the gradient phase allocates nothing
@@ -499,7 +667,11 @@ impl Learner {
             }
 
             let mut stop = false;
-            let do_eval = params.eval_every > 0 && (round + 1) % params.eval_every == 0;
+            // round numbering (records, callbacks, eval cadence) runs in
+            // the global frame: continuation round r is `offset + r + 1`,
+            // so a resumed history lines up with the uninterrupted one
+            let gr = offset + round + 1;
+            let do_eval = params.eval_every > 0 && gr % params.eval_every == 0;
             if do_eval || round + 1 == params.num_rounds {
                 let train_score = metric.eval(train, &objective.transform(&margins));
                 let valid_score = valid_margins
@@ -507,7 +679,7 @@ impl Learner {
                     .zip(valid)
                     .map(|(vm, v)| metric.eval(v, &objective.transform(vm)));
                 eval_history.push(EvalRecord {
-                    round: round + 1,
+                    round: gr,
                     metric: metric.name(),
                     train: train_score,
                     valid: valid_score,
@@ -515,8 +687,8 @@ impl Learner {
                 });
                 let record = eval_history.last().unwrap().clone();
                 let ctx = RoundContext {
-                    round: round + 1,
-                    num_rounds: params.num_rounds,
+                    round: gr,
+                    num_rounds: offset + params.num_rounds,
                     elapsed_secs: t0.elapsed().as_secs_f64(),
                     history: &eval_history,
                     minimize,
@@ -529,8 +701,8 @@ impl Learner {
             }
 
             let ctx = RoundContext {
-                round: round + 1,
-                num_rounds: params.num_rounds,
+                round: gr,
+                num_rounds: offset + params.num_rounds,
                 elapsed_secs: t0.elapsed().as_secs_f64(),
                 history: &eval_history,
                 minimize,
@@ -619,6 +791,27 @@ impl LearnerBuilder {
     setter!(monotone_constraints: MonotoneConstraints);
     setter!(seed: u64);
     setter!(verbose: bool);
+    setter!(
+        /// Target quantile for `reg:quantile` (pinball loss level α).
+        quantile_alpha: f64
+    );
+    setter!(
+        /// Tweedie variance power ρ ∈ (1, 2) for `reg:tweedie`.
+        tweedie_variance_power: f64
+    );
+    setter!(
+        /// Error distribution for `survival:aft` (normal | logistic).
+        aft_distribution: AftDistribution
+    );
+    setter!(
+        /// AFT scale parameter σ > 0.
+        aft_sigma: f64
+    );
+    setter!(
+        /// Feature indices treated as categorical (codes quantise to one
+        /// bin per category; splits are membership bitsets).
+        categorical_features: Vec<usize>
+    );
     setter!(
         /// Worker threads for the parallel engine (`0` = all cores, `1` =
         /// serial). Changes wall-clock only; results are bit-identical.
@@ -751,6 +944,19 @@ impl LearnerBuilder {
                 Ok(v) => self.params.dist_payload = v,
                 Err(e) => err(e),
             },
+            "quantile_alpha" => parse_into!(quantile_alpha),
+            "tweedie_variance_power" => parse_into!(tweedie_variance_power),
+            "aft_sigma" => parse_into!(aft_sigma),
+            "aft_distribution" => match value.parse() {
+                Ok(v) => self.params.aft_distribution = v,
+                Err(e) => err(e),
+            },
+            "categorical" | "categorical_features" => {
+                match crate::gbm::params::parse_feature_list(value) {
+                    Ok(v) => self.params.categorical_features = v,
+                    Err(e) => err(format!("{e:#}")),
+                }
+            }
             other => err(format!("unknown parameter {other:?}")),
         }
         self

@@ -221,6 +221,74 @@ impl Metric for Ndcg {
     }
 }
 
+/// Mean pinball loss at quantile `alpha` — the `reg:quantile` companion
+/// (resolved as `pinball` or `pinball@α` through the registry).
+pub struct Pinball {
+    pub alpha: f64,
+}
+impl Metric for Pinball {
+    fn name(&self) -> &'static str {
+        "pinball"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        ds.y.iter()
+            .zip(preds.iter())
+            .map(|(&y, &p)| crate::gbm::objective::pinball_loss(self.alpha, y as f64, p as f64))
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Mean Tweedie negative log-likelihood at variance power `rho` over
+/// mean-scale predictions (the objective's transform is the log link, so
+/// `preds` are `e^margin`; resolved as `tweedie-nloglik[@ρ]`).
+pub struct TweedieNll {
+    pub rho: f64,
+}
+impl Metric for TweedieNll {
+    fn name(&self) -> &'static str {
+        "tweedie-nloglik"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        ds.y.iter()
+            .zip(preds.iter())
+            .map(|(&y, &p)| {
+                let m = (p as f64).max(1e-30).ln();
+                crate::gbm::objective::tweedie_nll(self.rho, y as f64, m)
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Mean AFT negative log-likelihood over survival-time predictions
+/// (`preds` are `e^margin`; labels are the dataset's `(lower, upper]`
+/// interval bounds; resolved as `aft-nloglik[@dist,σ]`).
+pub struct AftNloglik {
+    pub dist: crate::gbm::params::AftDistribution,
+    pub sigma: f64,
+}
+impl Metric for AftNloglik {
+    fn name(&self) -> &'static str {
+        "aft-nloglik"
+    }
+    fn eval(&self, ds: &Dataset, preds: &[Float]) -> f64 {
+        let n = ds.y.len();
+        let yu = ds.bounds_upper();
+        ds.y.iter()
+            .zip(yu.iter())
+            .zip(preds.iter())
+            .map(|((&lo, &up), &p)| {
+                let m = (p as f64).max(1e-30).ln();
+                crate::gbm::objective::aft_nll(self.dist, self.sigma, lo as f64, up as f64, m)
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +363,38 @@ mod tests {
         let err = metric_by_name("nope").unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("rmse") && msg.contains("auc"), "{msg}");
+    }
+
+    #[test]
+    fn pinball_known_values() {
+        let d = ds(vec![2.0, 2.0]);
+        // preds 1.0 (under by 1) and 3.0 (over by 1) at α = 0.9:
+        // 0.9·1 + 0.1·1 over 2 rows
+        let m = Pinball { alpha: 0.9 };
+        assert!((m.eval(&d, &[1.0, 3.0]) - 0.5).abs() < 1e-9);
+        // exact predictions score 0
+        assert_eq!(m.eval(&d, &[2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn tweedie_nll_minimised_at_label_mean() {
+        let d = ds(vec![4.0, 4.0]);
+        let m = TweedieNll { rho: 1.5 };
+        let at_mean = m.eval(&d, &[4.0, 4.0]);
+        assert!(at_mean < m.eval(&d, &[2.0, 2.0]));
+        assert!(at_mean < m.eval(&d, &[8.0, 8.0]));
+    }
+
+    #[test]
+    fn aft_nloglik_prefers_in_interval_predictions() {
+        let x = DMatrix::dense(vec![0.0; 2], 2, 1);
+        let d = Dataset::with_bounds(x, vec![4.0, 2.0], vec![4.0, 8.0]);
+        let m = AftNloglik {
+            dist: crate::gbm::params::AftDistribution::Normal,
+            sigma: 1.0,
+        };
+        // predicting inside the interval beats predicting far outside
+        assert!(m.eval(&d, &[4.0, 4.0]) < m.eval(&d, &[0.5, 40.0]));
     }
 
     #[test]

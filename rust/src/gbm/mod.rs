@@ -25,8 +25,8 @@ pub use learner::{
 pub use metric::{metric_by_name, Metric};
 pub use objective::{objective_by_name, Objective};
 pub use params::{
-    AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints, ObjectiveKind,
-    ValidationErrors,
+    AftDistribution, AllReduce, GrowPolicy, LearnerParams, MetricKind, MonotoneConstraints,
+    ObjectiveKind, ObjectiveParams, ValidationErrors,
 };
 pub use registry::{MetricRegistry, ObjectiveRegistry};
 pub use serialize::{

@@ -472,6 +472,359 @@ impl PairwiseRank {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scenario objectives (quantile / Tweedie / AFT) and their shared math.
+//
+// The loss functions live here as standalone `pub` f64 helpers so that the
+// gradient code below, the matching metrics (`crate::gbm::metric`) and the
+// finite-difference property suite (`tests/prop_invariants.rs`) all
+// differentiate the *same* implementation — a sign or scale bug cannot hide
+// in a private copy.
+// ---------------------------------------------------------------------------
+
+use crate::gbm::params::AftDistribution;
+
+/// Pinball (quantile) loss at level `alpha` for one instance.
+/// `α·r` when the residual `r = y − m` is positive, `(α − 1)·r` otherwise.
+#[inline]
+pub fn pinball_loss(alpha: f64, y: f64, m: f64) -> f64 {
+    let r = y - m;
+    if r > 0.0 {
+        alpha * r
+    } else {
+        (alpha - 1.0) * r
+    }
+}
+
+/// Tweedie negative log-likelihood (up to an `m`-free constant) at variance
+/// power `rho` ∈ (1, 2) for one instance:
+/// `−y·e^{(1−ρ)m}/(1−ρ) + e^{(2−ρ)m}/(2−ρ)`.
+#[inline]
+pub fn tweedie_nll(rho: f64, y: f64, m: f64) -> f64 {
+    -y * ((1.0 - rho) * m).exp() / (1.0 - rho) + ((2.0 - rho) * m).exp() / (2.0 - rho)
+}
+
+/// Error function via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|error| < 1.5e-7 — far below the f32 gradient precision downstream).
+#[inline]
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal PDF.
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+#[inline]
+fn sigmoid64(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// AFT negative log-likelihood for one instance with interval label
+/// `(lower, upper]` and margin `m` (the model is `ln t = m + σ·ε`).
+///
+/// Label convention (mirrors XGBoost's `label_lower_bound` /
+/// `label_upper_bound`): `lower == upper > 0` is an uncensored event at
+/// that time; `upper = +∞` is right-censored; `lower <= 0` is
+/// left-censored (no lower bound); finite `lower < upper` is
+/// interval-censored. The censored likelihood `F(z_hi) − F(z_lo)` is
+/// clamped at `1e-12` before the log.
+pub fn aft_nll(dist: AftDistribution, sigma: f64, lower: f64, upper: f64, m: f64) -> f64 {
+    if lower > 0.0 && lower == upper {
+        // uncensored: −ln f(z), dropping m-free constants
+        let z = (lower.ln() - m) / sigma;
+        match dist {
+            AftDistribution::Normal => 0.5 * z * z,
+            AftDistribution::Logistic => -z + 2.0 * (1.0 + z.exp()).ln(),
+        }
+    } else {
+        let cdf = |z: f64| match dist {
+            AftDistribution::Normal => norm_cdf(z),
+            AftDistribution::Logistic => sigmoid64(z),
+        };
+        let f_hi = if upper.is_finite() {
+            cdf((upper.max(1e-12).ln() - m) / sigma)
+        } else {
+            1.0
+        };
+        let f_lo = if lower > 0.0 {
+            cdf((lower.ln() - m) / sigma)
+        } else {
+            0.0
+        };
+        -(f_hi - f_lo).max(1e-12).ln()
+    }
+}
+
+/// `reg:quantile` — pinball loss at quantile `alpha` ∈ (0, 1).
+///
+/// Subgradient convention at the kink: a strictly positive residual
+/// `y − m > 0` takes gradient `−α`; everything else — including `y == m`
+/// exactly — takes `1 − α`. The hessian is the constant 1.0 (the loss is
+/// piecewise linear; the unit hessian makes leaves average their
+/// subgradients, XGBoost's own choice).
+pub struct QuantileReg {
+    pub alpha: f64,
+}
+
+impl QuantileReg {
+    #[inline]
+    fn pair(&self, y: Float, m: Float) -> GradPair {
+        let g = if (y as f64) - (m as f64) > 0.0 {
+            -self.alpha
+        } else {
+            1.0 - self.alpha
+        };
+        GradPair::new(g as Float, 1.0)
+    }
+}
+
+impl Objective for QuantileReg {
+    fn name(&self) -> &'static str {
+        "reg:quantile"
+    }
+
+    fn base_score(&self, train: &Dataset) -> Vec<Float> {
+        // the empirical lower α-quantile: sorted label at ⌊α·(n−1)⌋
+        if train.y.is_empty() {
+            return vec![0.0];
+        }
+        let mut sorted = train.y.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("labels must not be NaN"));
+        let idx = (self.alpha * (sorted.len() - 1) as f64).floor() as usize;
+        vec![sorted[idx.min(sorted.len() - 1)]]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        vec![ds
+            .y
+            .iter()
+            .zip(margins[0].iter())
+            .map(|(&y, &m)| self.pair(y, m))
+            .collect()]
+    }
+
+    fn gradients_par_into(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
+        let (y, m) = (&ds.y, &margins[0]);
+        rowwise_par_into(y.len(), exec, out, |i| self.pair(y[i], m[i]));
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        margins[0].clone()
+    }
+
+    fn default_metric(&self) -> &'static str {
+        "pinball"
+    }
+}
+
+/// `reg:tweedie` — compound-Poisson deviance with variance power
+/// ρ ∈ (1, 2), log link: g = −y·e^{(1−ρ)m} + e^{(2−ρ)m},
+/// h = (ρ−1)·y·e^{(1−ρ)m} + (2−ρ)·e^{(2−ρ)m} (floored at 1e-16).
+/// Labels must be non-negative.
+pub struct Tweedie {
+    pub rho: f64,
+}
+
+impl Tweedie {
+    #[inline]
+    fn pair(&self, y: Float, m: Float) -> GradPair {
+        let (y, m) = (y as f64, m as f64);
+        let a = ((1.0 - self.rho) * m).exp();
+        let b = ((2.0 - self.rho) * m).exp();
+        let g = -y * a + b;
+        let h = ((self.rho - 1.0) * y * a + (2.0 - self.rho) * b).max(1e-16);
+        GradPair::new(g as Float, h as Float)
+    }
+}
+
+impl Objective for Tweedie {
+    fn name(&self) -> &'static str {
+        "reg:tweedie"
+    }
+
+    fn base_score(&self, train: &Dataset) -> Vec<Float> {
+        let mean = train.y.iter().map(|&y| y as f64).sum::<f64>() / train.y.len().max(1) as f64;
+        vec![mean.max(1e-6).ln() as Float]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        vec![ds
+            .y
+            .iter()
+            .zip(margins[0].iter())
+            .map(|(&y, &m)| self.pair(y, m))
+            .collect()]
+    }
+
+    fn gradients_par_into(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
+        let (y, m) = (&ds.y, &margins[0]);
+        rowwise_par_into(y.len(), exec, out, |i| self.pair(y[i], m[i]));
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        margins[0].iter().map(|&m| m.exp()).collect()
+    }
+
+    fn default_metric(&self) -> &'static str {
+        "tweedie-nloglik"
+    }
+}
+
+/// `survival:aft` — accelerated failure time over `(lower, upper]`
+/// interval labels (`Dataset::y` / `Dataset::y_upper`), error distribution
+/// normal or logistic, scale σ. Gradients are the exact first/second
+/// derivatives of [`aft_nll`] in f64, hessian floored at 1e-16 and both
+/// clamped into `[-1e15, 1e15]` before the f32 cast (extreme margins push
+/// the censored-likelihood ratio toward ±∞).
+pub struct SurvivalAft {
+    pub dist: AftDistribution,
+    pub sigma: f64,
+}
+
+impl SurvivalAft {
+    fn pair(&self, lower: Float, upper: Float, m: Float) -> GradPair {
+        let s = self.sigma;
+        let (lower, upper, m) = (lower as f64, upper as f64, m as f64);
+        let (g, h) = if lower > 0.0 && lower == upper {
+            // uncensored event
+            let z = (lower.ln() - m) / s;
+            match self.dist {
+                AftDistribution::Normal => (-z / s, 1.0 / (s * s)),
+                AftDistribution::Logistic => {
+                    let p = sigmoid64(z);
+                    ((1.0 - 2.0 * p) / s, 2.0 * p * (1.0 - p) / (s * s))
+                }
+            }
+        } else {
+            // censored interval: loss = −ln D, D = F(z_hi) − F(z_lo)
+            let pdf = |z: f64| match self.dist {
+                AftDistribution::Normal => norm_pdf(z),
+                AftDistribution::Logistic => {
+                    let p = sigmoid64(z);
+                    p * (1.0 - p)
+                }
+            };
+            let cdf = |z: f64| match self.dist {
+                AftDistribution::Normal => norm_cdf(z),
+                AftDistribution::Logistic => sigmoid64(z),
+            };
+            // df/dz, for the second derivative
+            let dpdf = |z: f64| match self.dist {
+                AftDistribution::Normal => -z * norm_pdf(z),
+                AftDistribution::Logistic => {
+                    let p = sigmoid64(z);
+                    p * (1.0 - p) * (1.0 - 2.0 * p)
+                }
+            };
+            let (f_hi, p_hi, dp_hi) = if upper.is_finite() {
+                let z = (upper.max(1e-12).ln() - m) / s;
+                (cdf(z), pdf(z), dpdf(z))
+            } else {
+                (1.0, 0.0, 0.0)
+            };
+            let (f_lo, p_lo, dp_lo) = if lower > 0.0 {
+                let z = (lower.ln() - m) / s;
+                (cdf(z), pdf(z), dpdf(z))
+            } else {
+                (0.0, 0.0, 0.0)
+            };
+            let d = (f_hi - f_lo).max(1e-12);
+            // dD/dm = (−1/σ)(f(z_hi) − f(z_lo)); d²D/dm² = (1/σ²)(f'(z_hi) − f'(z_lo))
+            let d1 = -(p_hi - p_lo) / s;
+            let d2 = (dp_hi - dp_lo) / (s * s);
+            let g = -d1 / d;
+            (g, -d2 / d + g * g)
+        };
+        let g = g.clamp(-1e15, 1e15);
+        let h = h.max(1e-16).min(1e15);
+        GradPair::new(g as Float, h as Float)
+    }
+}
+
+impl Objective for SurvivalAft {
+    fn name(&self) -> &'static str {
+        "survival:aft"
+    }
+
+    fn base_score(&self, train: &Dataset) -> Vec<Float> {
+        // mean representative log-time over the interval labels
+        let yu = train.bounds_upper();
+        let mut sum = 0.0f64;
+        for (i, &lo) in train.y.iter().enumerate() {
+            let (lo, up) = (lo as f64, yu[i] as f64);
+            sum += if lo > 0.0 && up.is_finite() {
+                0.5 * (lo.ln() + up.max(1e-12).ln())
+            } else if lo > 0.0 {
+                lo.ln()
+            } else if up.is_finite() && up > 0.0 {
+                up.ln()
+            } else {
+                0.0
+            };
+        }
+        vec![(sum / train.y.len().max(1) as f64) as Float]
+    }
+
+    fn gradients(&self, ds: &Dataset, margins: &[Vec<Float>]) -> Vec<Vec<GradPair>> {
+        let yu = ds.bounds_upper();
+        vec![ds
+            .y
+            .iter()
+            .zip(yu.iter())
+            .zip(margins[0].iter())
+            .map(|((&lo, &up), &m)| self.pair(lo, up, m))
+            .collect()]
+    }
+
+    fn gradients_par_into(
+        &self,
+        ds: &Dataset,
+        margins: &[Vec<Float>],
+        exec: &ExecContext,
+        out: &mut Vec<Vec<GradPair>>,
+    ) {
+        let (y, m) = (&ds.y, &margins[0]);
+        let yu = ds.bounds_upper();
+        rowwise_par_into(y.len(), exec, out, |i| self.pair(y[i], yu[i], m[i]));
+    }
+
+    fn transform(&self, margins: &[Vec<Float>]) -> Vec<Float> {
+        // predicted survival time on the original scale
+        margins[0].iter().map(|&m| m.exp()).collect()
+    }
+
+    fn default_metric(&self) -> &'static str {
+        "aft-nloglik"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -597,6 +950,119 @@ mod tests {
         assert!(SquaredError.supports_device());
         assert!(!Softmax { k: 3, prob_output: false }.supports_device());
         assert!(!PairwiseRank.supports_device());
+    }
+
+    #[test]
+    fn quantile_gradients_follow_subgradient_convention() {
+        let ds = tiny_ds(vec![1.0, 3.0, 2.0]);
+        let o = QuantileReg { alpha: 0.9 };
+        let g = o.gradients(&ds, &[vec![2.0, 2.0, 2.0]]);
+        // y < m → residual <= 0 → 1 − α
+        assert!((g[0][0].grad - 0.1).abs() < 1e-6);
+        // y > m → −α
+        assert!((g[0][1].grad + 0.9).abs() < 1e-6);
+        // y == m exactly: the kink takes the 1 − α branch
+        assert!((g[0][2].grad - 0.1).abs() < 1e-6);
+        for p in &g[0] {
+            assert_eq!(p.hess, 1.0);
+        }
+        // base score: lower α-quantile of sorted labels
+        let q = QuantileReg { alpha: 0.5 };
+        assert_eq!(q.base_score(&ds), vec![2.0]);
+        assert_eq!(QuantileReg { alpha: 0.01 }.base_score(&ds), vec![1.0]);
+    }
+
+    #[test]
+    fn tweedie_gradient_zero_at_log_mean() {
+        // at m = ln y the gradient is e^{(2−ρ)m}·(1 − y·e^{−m}) = 0
+        let o = Tweedie { rho: 1.5 };
+        let ds = tiny_ds(vec![4.0]);
+        let g = o.gradients(&ds, &[vec![4.0f32.ln()]]);
+        assert!(g[0][0].grad.abs() < 1e-5, "{}", g[0][0].grad);
+        assert!(g[0][0].hess > 0.0);
+        // transform is exp (log link)
+        assert!((o.transform(&[vec![0.0]])[0] - 1.0).abs() < 1e-6);
+        // zero labels keep a positive hessian (the floor + (2−ρ) term)
+        let g0 = o.gradients(&tiny_ds(vec![0.0]), &[vec![0.0]]);
+        assert!(g0[0][0].hess > 0.0);
+    }
+
+    #[test]
+    fn aft_uncensored_gradient_zero_at_log_time() {
+        for dist in [AftDistribution::Normal, AftDistribution::Logistic] {
+            let o = SurvivalAft { dist, sigma: 1.0 };
+            let ds = tiny_ds(vec![5.0]); // y_upper empty → uncensored at t=5
+            let g = o.gradients(&ds, &[vec![5.0f32.ln()]]);
+            assert!(g[0][0].grad.abs() < 1e-5, "{dist:?}: {}", g[0][0].grad);
+            assert!(g[0][0].hess > 0.0);
+            // margin below ln t: prediction too small → negative gradient
+            let lo = o.gradients(&ds, &[vec![0.0]]);
+            assert!(lo[0][0].grad < 0.0, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn aft_censored_gradients_point_into_the_interval() {
+        let x = DMatrix::dense(vec![0.0; 3], 3, 1);
+        // right-censored at 10, interval (2, 8], left-censored up to 3
+        let ds = Dataset::with_bounds(
+            x,
+            vec![10.0, 2.0, 0.0],
+            vec![Float::INFINITY, 8.0, 3.0],
+        );
+        let o = SurvivalAft {
+            dist: AftDistribution::Normal,
+            sigma: 1.0,
+        };
+        let g = o.gradients(&ds, &[vec![0.0, 0.0, 10.0]]);
+        // right-censored far below the bound: push the margin up
+        assert!(g[0][0].grad < 0.0);
+        // interval row with margin below the interval: push up too
+        assert!(g[0][1].grad < 0.0);
+        // left-censored with a huge margin: push down
+        assert!(g[0][2].grad > 0.0);
+        for p in &g[0] {
+            assert!(p.hess >= 1e-16 && p.hess.is_finite());
+        }
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        for (x, want) in [(0.0, 0.0), (1.0, 0.8427007), (-1.0, -0.8427007), (2.0, 0.9953223)] {
+            assert!((erf(x) - want).abs() < 1e-6, "erf({x})");
+        }
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn scenario_objectives_parallel_bit_identical() {
+        let n = 30_000usize;
+        let mut rng = crate::util::Pcg64::new(17);
+        let y: Vec<Float> = (0..n).map(|_| rng.next_f32() * 9.0 + 1.0).collect();
+        let yu: Vec<Float> = y
+            .iter()
+            .map(|&v| match rng.gen_range(3) {
+                0 => v,                  // uncensored
+                1 => Float::INFINITY,    // right-censored
+                _ => v + 2.0,            // interval
+            })
+            .collect();
+        let margins = vec![(0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect::<Vec<Float>>()];
+        let ds = Dataset::with_bounds(DMatrix::dense(vec![0.0; n], n, 1), y, yu);
+        let objs: Vec<Box<dyn Objective>> = vec![
+            Box::new(QuantileReg { alpha: 0.9 }),
+            Box::new(Tweedie { rho: 1.3 }),
+            Box::new(SurvivalAft { dist: AftDistribution::Normal, sigma: 1.0 }),
+            Box::new(SurvivalAft { dist: AftDistribution::Logistic, sigma: 0.7 }),
+        ];
+        for obj in &objs {
+            let serial = obj.gradients(&ds, &margins);
+            for t in [2usize, 8] {
+                let par = obj.gradients_par(&ds, &margins, &crate::exec::ExecContext::new(t));
+                assert_eq!(par, serial, "{} threads = {t}", obj.name());
+            }
+        }
     }
 
     #[test]

@@ -46,18 +46,30 @@ pub enum ObjectiveKind {
     MultiSoftprob,
     /// `rank:pairwise`.
     RankPairwise,
+    /// `reg:quantile` — pinball loss at [`LearnerParams::quantile_alpha`].
+    QuantileReg,
+    /// `reg:tweedie` — compound-Poisson deviance at
+    /// [`LearnerParams::tweedie_variance_power`] ∈ (1, 2).
+    Tweedie,
+    /// `survival:aft` — accelerated failure time over `(lower, upper)`
+    /// interval labels ([`LearnerParams::aft_distribution`] /
+    /// [`LearnerParams::aft_sigma`]).
+    SurvivalAft,
     /// A name resolved through the [`ObjectiveRegistry`] at build time.
     Custom(String),
 }
 
 impl ObjectiveKind {
     /// Canonical names of the built-in objectives.
-    pub const BUILTIN_NAMES: [&'static str; 5] = [
+    pub const BUILTIN_NAMES: [&'static str; 8] = [
         "reg:squarederror",
         "binary:logistic",
         "multi:softmax",
         "multi:softprob",
         "rank:pairwise",
+        "reg:quantile",
+        "reg:tweedie",
+        "survival:aft",
     ];
 
     /// The canonical name (what `Display` prints and model files store).
@@ -68,6 +80,9 @@ impl ObjectiveKind {
             ObjectiveKind::MultiSoftmax => "multi:softmax",
             ObjectiveKind::MultiSoftprob => "multi:softprob",
             ObjectiveKind::RankPairwise => "rank:pairwise",
+            ObjectiveKind::QuantileReg => "reg:quantile",
+            ObjectiveKind::Tweedie => "reg:tweedie",
+            ObjectiveKind::SurvivalAft => "survival:aft",
             ObjectiveKind::Custom(name) => name,
         }
     }
@@ -96,6 +111,9 @@ impl FromStr for ObjectiveKind {
             "multi:softmax" => ObjectiveKind::MultiSoftmax,
             "multi:softprob" => ObjectiveKind::MultiSoftprob,
             "rank:pairwise" => ObjectiveKind::RankPairwise,
+            "reg:quantile" => ObjectiveKind::QuantileReg,
+            "reg:tweedie" => ObjectiveKind::Tweedie,
+            "survival:aft" => ObjectiveKind::SurvivalAft,
             other => ObjectiveKind::Custom(other.to_string()),
         })
     }
@@ -121,9 +139,24 @@ pub enum MetricKind {
 }
 
 impl MetricKind {
-    /// Canonical names of the built-in metrics.
-    pub const BUILTIN_NAMES: [&'static str; 8] =
-        ["rmse", "mae", "logloss", "accuracy", "error", "auc", "merror", "ndcg"];
+    /// Canonical names of the built-in metrics. The last three are
+    /// parametrised — they also resolve in `name@param` form (e.g.
+    /// `pinball@0.9`, `tweedie-nloglik@1.3`, `aft-nloglik@logistic,1.5`)
+    /// and are represented as [`MetricKind::Custom`] so the parameter
+    /// survives the round-trip.
+    pub const BUILTIN_NAMES: [&'static str; 11] = [
+        "rmse",
+        "mae",
+        "logloss",
+        "accuracy",
+        "error",
+        "auc",
+        "merror",
+        "ndcg",
+        "pinball",
+        "tweedie-nloglik",
+        "aft-nloglik",
+    ];
 
     /// The canonical name (what `Display` prints).
     pub fn name(&self) -> &str {
@@ -164,6 +197,74 @@ impl FromStr for MetricKind {
             "ndcg" => MetricKind::Ndcg,
             other => MetricKind::Custom(other.to_string()),
         })
+    }
+}
+
+/// Error distribution of the accelerated-failure-time objective
+/// (`survival:aft`): the model is `ln t = margin + σ·ε` with `ε` drawn
+/// from this distribution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum AftDistribution {
+    #[default]
+    Normal,
+    Logistic,
+}
+
+impl AftDistribution {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AftDistribution::Normal => "normal",
+            AftDistribution::Logistic => "logistic",
+        }
+    }
+}
+
+impl fmt::Display for AftDistribution {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for AftDistribution {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "normal" => Ok(AftDistribution::Normal),
+            "logistic" => Ok(AftDistribution::Logistic),
+            other => Err(format!(
+                "unknown aft_distribution {other:?}; valid: normal, logistic"
+            )),
+        }
+    }
+}
+
+/// The objective-shaping parameters an [`ObjectiveRegistry`] factory needs
+/// beyond the objective's name — carried separately from [`LearnerParams`]
+/// so model loading and serving can construct objectives without a full
+/// learner configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectiveParams {
+    pub num_class: usize,
+    /// Target quantile of `reg:quantile`, in (0, 1).
+    pub quantile_alpha: f64,
+    /// Tweedie variance power ρ of `reg:tweedie`, in (1, 2).
+    pub tweedie_variance_power: f64,
+    /// Error distribution of `survival:aft`.
+    pub aft_distribution: AftDistribution,
+    /// Scale σ of `survival:aft`, > 0.
+    pub aft_sigma: f64,
+}
+
+impl Default for ObjectiveParams {
+    fn default() -> Self {
+        ObjectiveParams {
+            num_class: 1,
+            quantile_alpha: 0.5,
+            tweedie_variance_power: 1.5,
+            aft_distribution: AftDistribution::Normal,
+            aft_sigma: 1.0,
+        }
     }
 }
 
@@ -354,6 +455,26 @@ pub struct LearnerParams {
     /// `compress/` symbol machinery losslessly, `raw` ships plain f64
     /// bytes. Both are bit-identical; `quant` cuts wire bytes.
     pub dist_payload: WirePayload,
+    /// Target quantile α of `reg:quantile` (CLI `--quantile-alpha`), in
+    /// (0, 1). The subgradient-at-zero convention: residual `y − m > 0`
+    /// strictly takes gradient −α, everything else (including the kink at
+    /// 0) takes 1 − α.
+    pub quantile_alpha: f64,
+    /// Tweedie variance power ρ of `reg:tweedie` (CLI
+    /// `--tweedie-variance-power`), strictly inside (1, 2) — the
+    /// compound-Poisson regime.
+    pub tweedie_variance_power: f64,
+    /// Error distribution of `survival:aft` (CLI `--aft-distribution`).
+    pub aft_distribution: AftDistribution,
+    /// Scale σ of `survival:aft` (CLI `--aft-sigma`), > 0.
+    pub aft_sigma: f64,
+    /// Column indices treated as categorical (CLI `--categorical 3,7` or
+    /// `f3,f7`; csv loaders tag columns whose header name starts with
+    /// `cat:`). Flagged columns must hold non-negative integral category
+    /// codes in `[0, 64)`; the sketch then emits one bin per distinct
+    /// category and the tree builder evaluates partition (set-membership)
+    /// splits over those bins instead of ordered threshold splits.
+    pub categorical_features: Vec<usize>,
 }
 
 impl Default for LearnerParams {
@@ -389,8 +510,31 @@ impl Default for LearnerParams {
             dist_rank: 0,
             dist_peers: Vec::new(),
             dist_payload: WirePayload::Quant,
+            quantile_alpha: 0.5,
+            tweedie_variance_power: 1.5,
+            aft_distribution: AftDistribution::Normal,
+            aft_sigma: 1.0,
+            categorical_features: Vec::new(),
         }
     }
+}
+
+/// Parse a comma-separated feature-index list, accepting both `3,7` and
+/// `f3,f7` spellings (the CLI/config `categorical` key).
+pub fn parse_feature_list(s: &str) -> Result<Vec<usize>, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Ok(Vec::new());
+    }
+    t.split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            let digits = tok.strip_prefix('f').unwrap_or(tok);
+            digits
+                .parse::<usize>()
+                .map_err(|_| format!("categorical: cannot parse {tok:?} as a feature index"))
+        })
+        .collect()
 }
 
 impl LearnerParams {
@@ -431,6 +575,14 @@ impl LearnerParams {
                 .context("monotone_constraints")?,
             None => MonotoneConstraints::none(),
         };
+        let aft_distribution: AftDistribution = match cfg.get("aft_distribution") {
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            None => d.aft_distribution,
+        };
+        let categorical_features: Vec<usize> = match cfg.get("categorical") {
+            None | Some("") => Vec::new(),
+            Some(s) => parse_feature_list(s).map_err(|e| anyhow::anyhow!(e))?,
+        };
         Ok(LearnerParams {
             objective,
             num_class: cfg.get_parse("num_class", d.num_class)?,
@@ -463,7 +615,25 @@ impl LearnerParams {
             dist_rank: cfg.get_parse("dist_rank", d.dist_rank)?,
             dist_peers,
             dist_payload,
+            quantile_alpha: cfg.get_parse("quantile_alpha", d.quantile_alpha)?,
+            tweedie_variance_power: cfg
+                .get_parse("tweedie_variance_power", d.tweedie_variance_power)?,
+            aft_distribution,
+            aft_sigma: cfg.get_parse("aft_sigma", d.aft_sigma)?,
+            categorical_features,
         })
+    }
+
+    /// The objective-shaping subset of this configuration — what the
+    /// [`ObjectiveRegistry`] factories consume.
+    pub fn objective_params(&self) -> ObjectiveParams {
+        ObjectiveParams {
+            num_class: self.num_class,
+            quantile_alpha: self.quantile_alpha,
+            tweedie_variance_power: self.tweedie_variance_power,
+            aft_distribution: self.aft_distribution,
+            aft_sigma: self.aft_sigma,
+        }
     }
 
     /// Derive the coordinator configuration. Infallible now that every
@@ -492,6 +662,7 @@ impl LearnerParams {
             threads: self.threads,
             max_resident_pages: self.max_resident_pages,
             page_rows: self.page_rows,
+            categorical: self.categorical_features.clone(),
             dist: if self.dist_peers.is_empty() {
                 None
             } else {
@@ -637,6 +808,41 @@ impl LearnerParams {
                     "distributed mode implements the ring schedule only (got allreduce = {})",
                     self.allreduce
                 ));
+            }
+        }
+
+        // objective-shaping parameters (checked unconditionally — they
+        // have well-defined ranges whether or not the objective uses them)
+        let strictly_inside = |v: f64, lo: f64, hi: f64| v > lo && v < hi; // NaN fails
+        if !strictly_inside(self.quantile_alpha, 0.0, 1.0) {
+            errs.push(format!(
+                "quantile_alpha must be in (0, 1), got {}",
+                self.quantile_alpha
+            ));
+        }
+        if !strictly_inside(self.tweedie_variance_power, 1.0, 2.0) {
+            errs.push(format!(
+                "tweedie_variance_power must be in (1, 2), got {}",
+                self.tweedie_variance_power
+            ));
+        }
+        if !(self.aft_sigma > 0.0 && self.aft_sigma.is_finite()) {
+            errs.push(format!("aft_sigma must be > 0, got {}", self.aft_sigma));
+        }
+
+        // categorical feature list: indices must be distinct (and in range
+        // when the feature count is known this early)
+        let mut seen_cat = std::collections::BTreeSet::new();
+        for &f in &self.categorical_features {
+            if !seen_cat.insert(f) {
+                errs.push(format!("categorical lists feature {f} more than once"));
+            }
+            if let Some(n) = n_features {
+                if f >= n {
+                    errs.push(format!(
+                        "categorical feature index {f} is out of range (data has {n} features)"
+                    ));
+                }
             }
         }
 
@@ -879,6 +1085,106 @@ mod tests {
         assert_eq!(p.eval_metric, Some(MetricKind::Auc));
         assert_eq!(p.monotone_constraints.as_slice(), &[1, 0, -1]);
         assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn objective_param_ranges_validated() {
+        for (p, needle) in [
+            (
+                LearnerParams {
+                    quantile_alpha: 1.0,
+                    ..Default::default()
+                },
+                "quantile_alpha",
+            ),
+            (
+                LearnerParams {
+                    quantile_alpha: 0.0,
+                    ..Default::default()
+                },
+                "quantile_alpha",
+            ),
+            (
+                LearnerParams {
+                    tweedie_variance_power: 2.0,
+                    ..Default::default()
+                },
+                "tweedie_variance_power",
+            ),
+            (
+                LearnerParams {
+                    tweedie_variance_power: 1.0,
+                    ..Default::default()
+                },
+                "tweedie_variance_power",
+            ),
+            (
+                LearnerParams {
+                    aft_sigma: 0.0,
+                    ..Default::default()
+                },
+                "aft_sigma",
+            ),
+        ] {
+            let errs = p.validation_errors(None);
+            assert_eq!(errs.len(), 1, "{needle}: {errs:?}");
+            assert!(errs[0].contains(needle), "{}", errs[0]);
+        }
+        // in-range values are clean
+        let ok = LearnerParams {
+            objective: ObjectiveKind::QuantileReg,
+            quantile_alpha: 0.9,
+            tweedie_variance_power: 1.2,
+            aft_sigma: 2.0,
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn categorical_list_parses_and_validates() {
+        assert_eq!(parse_feature_list("3,7").unwrap(), vec![3, 7]);
+        assert_eq!(parse_feature_list("f3, f7").unwrap(), vec![3, 7]);
+        assert_eq!(parse_feature_list("").unwrap(), Vec::<usize>::new());
+        assert!(parse_feature_list("f3,x").is_err());
+
+        let dup = LearnerParams {
+            categorical_features: vec![2, 2],
+            ..Default::default()
+        };
+        assert!(dup.validation_errors(None)[0].contains("more than once"));
+        let oob = LearnerParams {
+            categorical_features: vec![5],
+            ..Default::default()
+        };
+        assert!(oob.validation_errors(None).is_empty());
+        assert!(oob.validation_errors(Some(4))[0].contains("out of range"));
+        assert_eq!(oob.coordinator_params().categorical, vec![5]);
+    }
+
+    #[test]
+    fn from_config_reads_scenario_fields() {
+        let cfg = Config::from_str_contents(
+            "objective = survival:aft\naft_distribution = logistic\naft_sigma = 0.5\n\
+             quantile_alpha = 0.9\ntweedie_variance_power = 1.3\ncategorical = \"f1,f4\"\n",
+        )
+        .unwrap();
+        let p = LearnerParams::from_config(&cfg).unwrap();
+        assert_eq!(p.objective, ObjectiveKind::SurvivalAft);
+        assert_eq!(p.aft_distribution, AftDistribution::Logistic);
+        assert_eq!(p.aft_sigma, 0.5);
+        assert_eq!(p.quantile_alpha, 0.9);
+        assert_eq!(p.tweedie_variance_power, 1.3);
+        assert_eq!(p.categorical_features, vec![1, 4]);
+        assert!(p.validate().is_ok());
+        let op = p.objective_params();
+        assert_eq!(op.aft_distribution, AftDistribution::Logistic);
+        assert_eq!(op.quantile_alpha, 0.9);
+
+        let bad = Config::from_str_contents("aft_distribution = cauchy\n").unwrap();
+        assert!(LearnerParams::from_config(&bad).is_err());
+        let bad = Config::from_str_contents("categorical = banana\n").unwrap();
+        assert!(LearnerParams::from_config(&bad).is_err());
     }
 
     #[test]

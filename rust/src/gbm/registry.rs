@@ -17,11 +17,16 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::gbm::metric::{Accuracy, Auc, ErrorRate, LogLoss, Mae, Metric, MultiError, Ndcg, Rmse};
-use crate::gbm::objective::{Logistic, Objective, PairwiseRank, Softmax, SquaredError};
-use crate::gbm::params::{MetricKind, ObjectiveKind};
+use crate::gbm::metric::{
+    Accuracy, AftNloglik, Auc, ErrorRate, LogLoss, Mae, Metric, MultiError, Ndcg, Pinball, Rmse,
+    TweedieNll,
+};
+use crate::gbm::objective::{
+    Logistic, Objective, PairwiseRank, QuantileReg, Softmax, SquaredError, SurvivalAft, Tweedie,
+};
+use crate::gbm::params::{AftDistribution, MetricKind, ObjectiveKind, ObjectiveParams};
 
 // Factories are Arc'd so lookups can clone them out and release the
 // registry lock before invoking — a factory may itself consult the
@@ -86,12 +91,41 @@ impl ObjectiveRegistry {
         names
     }
 
+    /// Instantiate an objective with the full objective-shaping parameter
+    /// set ([`ObjectiveParams`]) — the path the learner and model loader
+    /// take, so `reg:quantile`'s α, `reg:tweedie`'s ρ and `survival:aft`'s
+    /// distribution/σ come from the configuration instead of defaults.
+    pub fn create_with(name: &str, p: &ObjectiveParams) -> Result<Box<dyn Objective>> {
+        Ok(match name {
+            "reg:quantile" => Box::new(QuantileReg {
+                alpha: p.quantile_alpha,
+            }),
+            "reg:tweedie" => Box::new(Tweedie {
+                rho: p.tweedie_variance_power,
+            }),
+            "survival:aft" => Box::new(SurvivalAft {
+                dist: p.aft_distribution,
+                sigma: p.aft_sigma,
+            }),
+            other => return Self::create(other, p.num_class),
+        })
+    }
+
     /// Instantiate an objective by name. Unknown names error with the full
-    /// valid-name list.
+    /// valid-name list. The parametrised scenario objectives resolve with
+    /// their default parameters here; use
+    /// [`create_with`](Self::create_with) to shape them.
     pub fn create(name: &str, num_class: usize) -> Result<Box<dyn Objective>> {
         Ok(match name {
             "reg:squarederror" | "reg:linear" => Box::new(SquaredError),
             "binary:logistic" => Box::new(Logistic),
+            "reg:quantile" | "reg:tweedie" | "survival:aft" => {
+                let p = ObjectiveParams {
+                    num_class,
+                    ..Default::default()
+                };
+                return Self::create_with(name, &p);
+            }
             "multi:softmax" | "multi:softprob" => {
                 ensure!(
                     num_class >= 2,
@@ -145,9 +179,33 @@ impl MetricRegistry {
         MetricKind::BUILTIN_NAMES.iter().any(|&b| b == name)
     }
 
-    /// Is `name` resolvable right now (built-in or registered)?
+    /// Is `name` resolvable right now (built-in, a well-formed
+    /// parametrised form like `pinball@0.9`, or registered)?
     pub fn is_registered(name: &str) -> bool {
-        Self::is_builtin(name) || name == "acc" || custom_metrics().contains_key(name)
+        Self::is_builtin(name)
+            || name == "acc"
+            || matches!(parametrised_metric(name), Some(Ok(_)))
+            || custom_metrics().contains_key(name)
+    }
+
+    /// Instantiate the metric `name`, shaping the parametrised scenario
+    /// metrics from `op` when the name carries no explicit `@param` — the
+    /// learner's default-metric path, so `reg:quantile` at α = 0.9
+    /// evaluates `pinball` at 0.9 without the user spelling it out.
+    pub fn create_for(name: &str, op: &ObjectiveParams) -> Result<Box<dyn Metric>> {
+        Ok(match name {
+            "pinball" => Box::new(Pinball {
+                alpha: op.quantile_alpha,
+            }),
+            "tweedie-nloglik" => Box::new(TweedieNll {
+                rho: op.tweedie_variance_power,
+            }),
+            "aft-nloglik" => Box::new(AftNloglik {
+                dist: op.aft_distribution,
+                sigma: op.aft_sigma,
+            }),
+            other => return Self::create(other),
+        })
     }
 
     /// Every currently valid metric name (built-ins first, then registered
@@ -160,8 +218,13 @@ impl MetricRegistry {
     }
 
     /// Instantiate a metric by name. Unknown names error with the full
-    /// valid-name list.
+    /// valid-name list. The scenario metrics accept parameters after `@`:
+    /// `pinball@0.9`, `tweedie-nloglik@1.3`, `aft-nloglik@logistic,0.5`
+    /// (bare names take the [`ObjectiveParams`] defaults).
     pub fn create(name: &str) -> Result<Box<dyn Metric>> {
+        if let Some(parsed) = parametrised_metric(name) {
+            return parsed;
+        }
         Ok(match name {
             "rmse" => Box::new(Rmse),
             "mae" => Box::new(Mae),
@@ -184,6 +247,69 @@ impl MetricRegistry {
                 }
             }
         })
+    }
+}
+
+/// Parse the parametrised scenario-metric names. Returns `None` when the
+/// base name is not one of them (fall through to the static/custom
+/// lookup), `Some(Err(..))` when the base matches but the parameter text
+/// is malformed or out of range.
+fn parametrised_metric(name: &str) -> Option<Result<Box<dyn Metric>>> {
+    let (base, arg) = match name.split_once('@') {
+        Some((b, a)) => (b, Some(a)),
+        None => (name, None),
+    };
+    let d = ObjectiveParams::default();
+    match base {
+        "pinball" => Some((|| {
+            let alpha = match arg {
+                None => d.quantile_alpha,
+                Some(a) => a
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("pinball@α: cannot parse {a:?} as a number"))?,
+            };
+            ensure!(
+                alpha > 0.0 && alpha < 1.0,
+                "pinball@α requires α in (0, 1), got {alpha}"
+            );
+            Ok(Box::new(Pinball { alpha }) as Box<dyn Metric>)
+        })()),
+        "tweedie-nloglik" => Some((|| {
+            let rho = match arg {
+                None => d.tweedie_variance_power,
+                Some(a) => a
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("tweedie-nloglik@ρ: cannot parse {a:?} as a number"))?,
+            };
+            ensure!(
+                rho > 1.0 && rho < 2.0,
+                "tweedie-nloglik@ρ requires ρ in (1, 2), got {rho}"
+            );
+            Ok(Box::new(TweedieNll { rho }) as Box<dyn Metric>)
+        })()),
+        "aft-nloglik" => Some((|| {
+            let (dist, sigma) = match arg {
+                None => (d.aft_distribution, d.aft_sigma),
+                Some(a) => {
+                    let (dist_text, sigma_text) = match a.split_once(',') {
+                        Some((x, y)) => (x, Some(y)),
+                        None => (a, None),
+                    };
+                    let dist: AftDistribution =
+                        dist_text.parse().map_err(|e: String| anyhow!(e))?;
+                    let sigma = match sigma_text {
+                        None => d.aft_sigma,
+                        Some(s) => s
+                            .parse::<f64>()
+                            .map_err(|_| anyhow!("aft-nloglik@dist,σ: cannot parse {s:?}"))?,
+                    };
+                    (dist, sigma)
+                }
+            };
+            ensure!(sigma > 0.0, "aft-nloglik requires σ > 0, got {sigma}");
+            Ok(Box::new(AftNloglik { dist, sigma }) as Box<dyn Metric>)
+        })()),
+        _ => None,
     }
 }
 
@@ -229,6 +355,58 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("reg:squarederror"), "{msg}");
         assert!(msg.contains("binary:logistic"), "{msg}");
+        // the scenario objectives appear in the valid set too
+        assert!(msg.contains("reg:quantile"), "{msg}");
+        assert!(msg.contains("reg:tweedie"), "{msg}");
+        assert!(msg.contains("survival:aft"), "{msg}");
+    }
+
+    #[test]
+    fn scenario_objectives_shape_from_params() {
+        let p = ObjectiveParams {
+            quantile_alpha: 0.9,
+            tweedie_variance_power: 1.2,
+            aft_distribution: AftDistribution::Logistic,
+            aft_sigma: 0.5,
+            ..Default::default()
+        };
+        for name in ["reg:quantile", "reg:tweedie", "survival:aft"] {
+            assert!(ObjectiveRegistry::create_with(name, &p).is_ok(), "{name}");
+            // bare create resolves with defaults too
+            assert!(ObjectiveRegistry::create(name, 1).is_ok(), "{name}");
+        }
+        // create_with falls through to the classic path for other names
+        assert!(ObjectiveRegistry::create_with("binary:logistic", &p).is_ok());
+        assert!(ObjectiveRegistry::create_with("definitely:not", &p).is_err());
+    }
+
+    #[test]
+    fn parametrised_metrics_resolve() {
+        for name in [
+            "pinball",
+            "pinball@0.9",
+            "tweedie-nloglik",
+            "tweedie-nloglik@1.3",
+            "aft-nloglik",
+            "aft-nloglik@logistic",
+            "aft-nloglik@normal,0.5",
+        ] {
+            assert!(MetricRegistry::create(name).is_ok(), "{name}");
+            assert!(MetricRegistry::is_registered(name), "{name}");
+        }
+        for bad in ["pinball@2.0", "pinball@x", "tweedie-nloglik@3", "aft-nloglik@cauchy"] {
+            assert!(MetricRegistry::create(bad).is_err(), "{bad}");
+            assert!(!MetricRegistry::is_registered(bad), "{bad}");
+        }
+        // create_for shapes bare names from the objective params
+        let op = ObjectiveParams {
+            quantile_alpha: 0.75,
+            ..Default::default()
+        };
+        let m = MetricRegistry::create_for("pinball", &op).unwrap();
+        let d = Dataset::new(crate::data::DMatrix::dense(vec![0.0], 1, 1), vec![1.0]);
+        // under-prediction by 1 at α = 0.75 costs 0.75
+        assert!((m.eval(&d, &[0.0]) - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -10,17 +10,24 @@
 //! objective = binary:logistic
 //! num_class = 1
 //! eta = 0.3
+//! quantile_alpha = 0.9          (optional objective-shaping lines,
+//! tweedie_variance_power = 1.5   written only for the objectives that
+//! aft_distribution = normal      use them; absent in legacy files)
+//! aft_sigma = 1
 //! base_score = 0.5 [0.5 ...]
 //! groups = <k>
 //! group 0 trees = <t>
 //! tree 0 0 nodes = <n>
 //! <nid> split <feature> <threshold> <left> <right> <default L|R> <gain> <cover>
+//! <nid> cat <feature> <c0,c1,...> <left> <right> <default L|R> <gain> <cover>
 //! <nid> leaf <value> <cover>
 //! ...
 //! cuts features = <f>          (optional trailing section)
 //! cuts ptrs = <p0> <p1> ...
 //! cuts values = <v0> <v1> ...
 //! cuts minvals = <m0> <m1> ...
+//! cuts categorical = <f3> <f7> (optional, only when any feature is
+//!                               categorical)
 //! ```
 //!
 //! The trailing `cuts` section persists the frozen quantisation cuts the
@@ -30,6 +37,14 @@
 //! existed load fine (with `Booster::cuts = None`, float prediction
 //! only). Float values round-trip exactly — Rust's shortest `Display`
 //! form re-parses to the identical bits.
+//!
+//! A `cat` node is a categorical **membership** split: the
+//! comma-separated integer codes are the categories routed *left*
+//! (`Node::cats` bitset, value domain); everything else — including
+//! missing values when the default is `R` — routes right. The
+//! objective-shaping lines make reload → [`crate::gbm::Learner::resume`]
+//! reconstruct the exact training objective (a reloaded `reg:quantile`
+//! model evaluates `pinball` at its trained α, not the default).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
@@ -48,6 +63,23 @@ pub fn save_model(booster: &Booster, mut w: impl Write) -> Result<()> {
     writeln!(w, "objective = {}", booster.params.objective)?;
     writeln!(w, "num_class = {}", booster.params.num_class)?;
     writeln!(w, "eta = {}", booster.params.eta)?;
+    match booster.params.objective {
+        ObjectiveKind::QuantileReg => {
+            writeln!(w, "quantile_alpha = {}", booster.params.quantile_alpha)?;
+        }
+        ObjectiveKind::Tweedie => {
+            writeln!(
+                w,
+                "tweedie_variance_power = {}",
+                booster.params.tweedie_variance_power
+            )?;
+        }
+        ObjectiveKind::SurvivalAft => {
+            writeln!(w, "aft_distribution = {}", booster.params.aft_distribution)?;
+            writeln!(w, "aft_sigma = {}", booster.params.aft_sigma)?;
+        }
+        _ => {}
+    }
     let base: Vec<String> = booster.base_score.iter().map(|b| format!("{b}")).collect();
     writeln!(w, "base_score = {}", base.join(" "))?;
     writeln!(w, "groups = {}", booster.trees.len())?;
@@ -58,6 +90,22 @@ pub fn save_model(booster: &Booster, mut w: impl Write) -> Result<()> {
             for (nid, n) in tree.nodes.iter().enumerate() {
                 if n.is_leaf() {
                     writeln!(w, "{nid} leaf {} {}", n.leaf_value, n.cover)?;
+                } else if n.cats != 0 {
+                    let cats: Vec<String> = (0..64u32)
+                        .filter(|c| (n.cats >> c) & 1 == 1)
+                        .map(|c| c.to_string())
+                        .collect();
+                    writeln!(
+                        w,
+                        "{nid} cat {} {} {} {} {} {} {}",
+                        n.feature,
+                        cats.join(","),
+                        n.left,
+                        n.right,
+                        if n.default_left { "L" } else { "R" },
+                        n.gain,
+                        n.cover
+                    )?;
                 } else {
                     writeln!(
                         w,
@@ -82,6 +130,16 @@ pub fn save_model(booster: &Booster, mut w: impl Write) -> Result<()> {
         writeln!(w, "cuts values = {}", values.join(" "))?;
         let mins: Vec<String> = cuts.min_vals.iter().map(|v| format!("{v}")).collect();
         writeln!(w, "cuts minvals = {}", mins.join(" "))?;
+        if cuts.has_categorical() {
+            let flags: Vec<String> = cuts
+                .categorical
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c)
+                .map(|(f, _)| f.to_string())
+                .collect();
+            writeln!(w, "cuts categorical = {}", flags.join(" "))?;
+        }
     }
     Ok(())
 }
@@ -129,7 +187,32 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
     let objective = kv(&next()?, "objective")?;
     let num_class: usize = kv(&next()?, "num_class")?.parse()?;
     let eta: f64 = kv(&next()?, "eta")?.parse()?;
-    let base_score: Vec<Float> = kv(&next()?, "base_score")?
+    // optional objective-shaping lines (only the objectives that use them
+    // write them; legacy files jump straight to base_score)
+    let mut quantile_alpha: Option<f64> = None;
+    let mut tweedie_variance_power: Option<f64> = None;
+    let mut aft_distribution: Option<crate::gbm::params::AftDistribution> = None;
+    let mut aft_sigma: Option<f64> = None;
+    let base_line = loop {
+        let line = next()?;
+        let key = line.split('=').next().unwrap_or("").trim().to_string();
+        match key.as_str() {
+            "quantile_alpha" => quantile_alpha = Some(kv(&line, "quantile_alpha")?.parse()?),
+            "tweedie_variance_power" => {
+                tweedie_variance_power = Some(kv(&line, "tweedie_variance_power")?.parse()?)
+            }
+            "aft_distribution" => {
+                aft_distribution = Some(
+                    kv(&line, "aft_distribution")?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?,
+                )
+            }
+            "aft_sigma" => aft_sigma = Some(kv(&line, "aft_sigma")?.parse()?),
+            _ => break line,
+        }
+    };
+    let base_score: Vec<Float> = kv(&base_line, "base_score")?
         .split_whitespace()
         .map(|t| t.parse::<Float>().context("base_score"))
         .collect::<Result<_>>()?;
@@ -175,6 +258,35 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
                             leaf_value: 0.0,
                             gain: toks[7].parse()?,
                             cover: toks[8].parse()?,
+                            cats: 0,
+                        });
+                    }
+                    "cat" => {
+                        ensure!(toks.len() == 9, "bad cat line {line:?}");
+                        let mut cats: u64 = 0;
+                        for t in toks[3].split(',') {
+                            let c: u32 = t
+                                .parse()
+                                .with_context(|| format!("category code {t:?}"))?;
+                            ensure!(c < 64, "category code {c} out of range [0, 64)");
+                            cats |= 1u64 << c;
+                        }
+                        ensure!(cats != 0, "empty category set in {line:?}");
+                        nodes.push(Node {
+                            feature: toks[2].parse()?,
+                            // membership split: routing is the cats bitset
+                            threshold: 0.0,
+                            left: toks[4].parse()?,
+                            right: toks[5].parse()?,
+                            default_left: match toks[6] {
+                                "L" => true,
+                                "R" => false,
+                                other => bail!("bad default {other:?}"),
+                            },
+                            leaf_value: 0.0,
+                            gain: toks[7].parse()?,
+                            cover: toks[8].parse()?,
+                            cats,
                         });
                     }
                     other => bail!("unknown node kind {other:?}"),
@@ -243,10 +355,20 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
                     "cuts values must strictly ascend within feature {f}"
                 );
             }
+            // optional: which features hold one-category-per-bin cuts
+            let mut categorical = vec![false; n_features];
+            if let Some(line) = next_nonempty(&mut lines)? {
+                for t in kv(&line, "cuts categorical")?.split_whitespace() {
+                    let f: usize = t.parse().context("cuts categorical")?;
+                    ensure!(f < n_features, "categorical feature {f} out of range");
+                    categorical[f] = true;
+                }
+            }
             Some(crate::quantile::HistogramCuts {
                 ptrs,
                 values,
                 min_vals,
+                categorical,
             })
         }
     };
@@ -263,6 +385,14 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
                             node.feature,
                             c.n_features()
                         );
+                        // a membership split on a feature whose cuts are
+                        // NOT one-category-per-bin would route nonsense
+                        // through the bin-space traversal
+                        ensure!(
+                            node.cats == 0 || c.is_categorical(node.feature as usize),
+                            "membership split on non-categorical feature {}",
+                            node.feature
+                        );
                     }
                 }
             }
@@ -271,14 +401,20 @@ pub fn load_model(r: impl Read) -> Result<Booster> {
 
     // typed round-trip: the stored name parses back into ObjectiveKind
     // (user-registered names resolve through the ObjectiveRegistry when
-    // the booster is assembled below)
+    // the booster is assembled below); persisted shaping params feed the
+    // reconstructed objective so resume/eval behave as at training time
     let objective: ObjectiveKind = objective.parse().expect("infallible");
+    let d = LearnerParams::default();
     let params = LearnerParams {
         objective,
         num_class,
         eta,
         num_rounds: trees.first().map(|t| t.len()).unwrap_or(0),
-        ..Default::default()
+        quantile_alpha: quantile_alpha.unwrap_or(d.quantile_alpha),
+        tweedie_variance_power: tweedie_variance_power.unwrap_or(d.tweedie_variance_power),
+        aft_distribution: aft_distribution.unwrap_or(d.aft_distribution),
+        aft_sigma: aft_sigma.unwrap_or(d.aft_sigma),
+        ..d
     };
     let mut booster = Booster::from_parts(params, base_score, trees, 0.0)?;
     booster.cuts = cuts;
@@ -452,6 +588,98 @@ mod tests {
         save_model_file(&b, &ok_path).unwrap();
         assert!(load_servable_model_file(&ok_path).is_ok());
         std::fs::remove_file(&ok_path).ok();
+    }
+
+    #[test]
+    fn objective_shaping_params_round_trip() {
+        let g = generate(&DatasetSpec::higgs_like(1200), 77);
+        let params = LearnerParams {
+            objective: "reg:quantile".parse().expect("infallible"),
+            quantile_alpha: 0.9,
+            num_rounds: 3,
+            max_depth: 3,
+            max_bins: 16,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let b = crate::gbm::Learner::from_params(params)
+            .unwrap()
+            .train(&g.train, None)
+            .unwrap();
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains("quantile_alpha = 0.9"), "{text}");
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.params.quantile_alpha, 0.9);
+        assert_eq!(loaded.predict(&g.valid.x), b.predict(&g.valid.x));
+    }
+
+    #[test]
+    fn categorical_model_round_trips_and_routes() {
+        // f0 cycles a sparse integer vocabulary (a membership split can
+        // separate {0, 5} from {1, 3, 7} where thresholds cannot), f1 is
+        // continuous noise
+        let n = 300;
+        let cats = [0.0, 1.0, 3.0, 5.0, 7.0];
+        let mut xs: Vec<Float> = Vec::with_capacity(n * 2);
+        let mut y: Vec<Float> = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = cats[i % 5];
+            xs.push(c);
+            xs.push((i % 17) as Float * 0.1);
+            y.push(if c == 0.0 || c == 5.0 { 1.0 } else { 0.0 });
+        }
+        let ds = crate::data::Dataset::new(crate::data::DMatrix::dense(xs, n, 2), y);
+        let params = LearnerParams {
+            objective: "reg:squarederror".parse().expect("infallible"),
+            num_rounds: 3,
+            max_depth: 3,
+            max_bins: 16,
+            eta: 0.5,
+            eval_every: 0,
+            categorical_features: vec![0],
+            ..Default::default()
+        };
+        let b = crate::gbm::Learner::from_params(params)
+            .unwrap()
+            .train(&ds, None)
+            .unwrap();
+        let found_cat = b
+            .trees
+            .iter()
+            .flatten()
+            .flat_map(|t| t.nodes.iter())
+            .any(|n| n.cats != 0);
+        assert!(found_cat, "expected a membership split on this target");
+        let mut buf = Vec::new();
+        save_model(&b, &mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains(" cat 0 "), "{text}");
+        assert!(text.contains("cuts categorical = 0"), "{text}");
+        let loaded = load_model(buf.as_slice()).unwrap();
+        assert_eq!(loaded.trees, b.trees, "cat bitsets must round-trip");
+        assert_eq!(loaded.cuts, b.cuts, "categorical flags must round-trip");
+        assert_eq!(loaded.predict(&ds.x), b.predict(&ds.x));
+    }
+
+    #[test]
+    fn cat_node_on_non_categorical_feature_rejected() {
+        let bad = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                   eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                   tree 0 0 nodes = 3\n0 cat 0 1,3 1 2 L 0 1\n1 leaf 0.1 1\n2 leaf 0.2 1\n\
+                   cuts features = 1\ncuts ptrs = 0 2\ncuts values = 1 2\ncuts minvals = 0\n";
+        let err = load_model(bad.as_bytes()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("non-categorical"),
+            "{err:#}"
+        );
+        // out-of-range category codes fail fast too
+        let bad2 = "xgb-tpu-model v1\nobjective = reg:squarederror\nnum_class = 1\n\
+                    eta = 0.3\nbase_score = 0\ngroups = 1\ngroup 0 trees = 1\n\
+                    tree 0 0 nodes = 3\n0 cat 0 64 1 2 L 0 1\n1 leaf 0.1 1\n2 leaf 0.2 1\n";
+        let err2 = load_model(bad2.as_bytes()).unwrap_err();
+        assert!(format!("{err2:#}").contains("[0, 64)"), "{err2:#}");
     }
 
     #[test]

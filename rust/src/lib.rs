@@ -250,6 +250,63 @@
 //! distributed smoke pin this). Chunks ship quantised by default
 //! (lossless zero-bin mask + narrow bit-packing through [`compress`];
 //! `--dist-payload raw` for plain f64 bytes).
+//!
+//! ## Scenario surface
+//!
+//! Three workload families extend the core pipeline beyond plain
+//! regression/classification, each riding the same bit-identity
+//! contract across threads × devices × resident/paged/streamed
+//! (`rust/tests/scenarios.rs`):
+//!
+//! * **Objective contract** — an objective ([`gbm::Objective`],
+//!   registered by name in `gbm::ObjectiveRegistry`) maps margins to
+//!   per-row `(grad, hess)` pairs; `gradients_par` must be bit-identical
+//!   to the serial path at every thread count (chunk-concatenation, no
+//!   reductions). The derivatives are checked against central finite
+//!   differences of the reference losses for **every** registered
+//!   built-in (`prop_objective_gradients_match_finite_difference`, with
+//!   a coverage guard that fails when a new objective is registered
+//!   without a test). Two intentional conventions differ from the true
+//!   second derivative and are pinned rather than FD-checked:
+//!   `reg:quantile` (pinball loss; the subgradient at `y == margin`
+//!   takes the `y − margin ≤ 0` branch, i.e. grad `1 − α`, and the
+//!   hessian is the constant `1.0` Newton damping), and `multi:softmax`
+//!   (hessian `2·p·(1−p)`, XGBoost's convention, not the cross-entropy
+//!   `p·(1−p)`). `reg:tweedie` (`--tweedie-variance-power` ∈ (1,2)) and
+//!   `survival:aft` (normal/logistic log-likelihood over
+//!   `(lower, upper)` interval labels; `--aft-sigma`) are exact
+//!   derivatives of their NLLs, floored at `1e-16` like
+//!   `binary:logistic`.
+//!
+//! * **Categorical features** — features tagged via the loader's `cat:`
+//!   CSV-header prefix, `--categorical`, or
+//!   `LearnerBuilder::categorical_features` carry integer codes in
+//!   `[0, 64)`. Codes are
+//!   sketched like floats but cut at integer boundaries (one bin per
+//!   observed code), and splits on categorical features are
+//!   **membership** tests (gain-sorted greedy one-vs-rest growth): the
+//!   split node stores a u64 bitset over raw codes — bit `c` set ⇔ code
+//!   `c` routes left — written to the model file as a `cat` node line.
+//!   Missing values follow the learned default edge; values outside
+//!   `[0, 64)` route right, and non-integer values share the routing of
+//!   their integer truncation. At bin translation the code bitset
+//!   becomes a local-bin bitset against the frozen cuts, so float,
+//!   bin-tree and flat-serving traversal agree bit-for-bit on every
+//!   in-vocabulary value; a code never seen at training time routes
+//!   right on the float path but quantises to the nearest larger
+//!   trained code's bin on the compressed paths — keep inference data
+//!   in the training vocabulary when exact cross-path parity matters.
+//!
+//! * **Training continuation** — [`gbm::Learner::resume`] (CLI
+//!   `--resume model.txt`) loads a serialized [`gbm::Booster`],
+//!   revalidates the live params against the persisted ones (objective
+//!   + its shaping params, `max_bins`) and keeps boosting **against the
+//!   frozen cuts**: new data is quantised on the original grid, never
+//!   re-sketched, so `train(a)` then `resume(b)` is byte-identical —
+//!   model file included — to an uninterrupted `train(a + b)` (the
+//!   sampling RNG fast-forwards by the prior round count). Pinned by
+//!   `resume_reproduces_uninterrupted_run_bit_for_bit` and the `ci.sh`
+//!   continuation smoke.
 
 pub mod baselines;
 pub mod bench;

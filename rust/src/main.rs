@@ -89,7 +89,31 @@ fn print_help() {
            --csv <path>           train from CSV (--label-col, --header)\n\
            --libsvm <path>        train from LibSVM file\n\
            --config <path>        key=value parameter file\n\
-           --objective <name>     reg:squarederror|binary:logistic|multi:softmax|rank:pairwise\n\
+           --objective <name>     reg:squarederror|binary:logistic|multi:softmax|\n\
+                                  multi:softprob|rank:pairwise|reg:quantile|\n\
+                                  reg:tweedie|survival:aft\n\
+           --quantile-alpha <f>   target quantile of reg:quantile, in (0,1)\n\
+                                  (default 0.5; eval metric pinball@alpha)\n\
+           --tweedie-variance-power <f>  variance power of reg:tweedie, in\n\
+                                  (1,2) (default 1.5)\n\
+           --aft-distribution normal|logistic  error distribution of\n\
+                                  survival:aft (default normal)\n\
+           --aft-sigma <f>        scale of the AFT error distribution (>0,\n\
+                                  default 1)\n\
+           --categorical <list>   comma-separated feature indices (`3,7` or\n\
+                                  `f3,f7`) treated as categorical: integer\n\
+                                  codes in [0,64), one bin per category,\n\
+                                  membership (bitset) splits. A CSV trained\n\
+                                  with --header auto-flags columns whose\n\
+                                  header cell starts with `cat:`\n\
+           --resume <path>        continue boosting from a saved model:\n\
+                                  loads it, reuses its frozen cuts (the new\n\
+                                  data is quantised against the original\n\
+                                  grid, never re-sketched) and boosts\n\
+                                  --num-rounds further rounds. Objective\n\
+                                  (with its shaping flags) and --max-bins\n\
+                                  must match the saved model. train(a) +\n\
+                                  resume(b) is bit-identical to train(a+b)\n\
            --num-rounds <n>       boosting rounds (default 50)\n\
            --eta, --max-depth, --max-leaves, --max-bins, --lambda, --gamma,\n\
            --alpha, --min-child-weight, --num-class, --eval-metric,\n\
@@ -505,6 +529,7 @@ fn run_train(args: &ArgParser) -> Result<()> {
     if let Some(spec) = &spec {
         apply_spec_defaults(&mut params, spec, args);
     }
+    apply_csv_header_categoricals(&mut params, args)?;
     eprintln!(
         "training: {} rows x {} cols, objective={}, devices={}, threads={}, policy={}, compress={}",
         train.n_rows(),
@@ -523,16 +548,20 @@ fn run_train(args: &ArgParser) -> Result<()> {
         learner.add_callback(Box::new(xgb_tpu::gbm::RecordLogger::new(path)));
     }
     let backend = args.get_str("backend", "native");
+    let prior = load_resume_model(args)?;
     let booster = match backend.as_str() {
-        "native" => learner.train(&train, valid.as_ref())?,
+        "native" => match &prior {
+            Some(p) => learner.resume(p, &train, valid.as_ref())?,
+            None => learner.train(&train, valid.as_ref())?,
+        },
         "xla" => {
             let artifacts = std::sync::Arc::new(Artifacts::discover()?);
             eprintln!("xla backend on platform {}", artifacts.platform());
-            learner.train_with_backend(
-                &train,
-                valid.as_ref(),
-                Box::new(XlaHistBackend::new(artifacts)),
-            )?
+            let be = Box::new(XlaHistBackend::new(artifacts));
+            match &prior {
+                Some(p) => learner.resume_with_backend(p, &train, valid.as_ref(), be)?,
+                None => learner.train_with_backend(&train, valid.as_ref(), be)?,
+            }
         }
         other => bail!("unknown backend {other:?} (native|xla)"),
     };
@@ -549,6 +578,7 @@ fn run_train_streaming(args: &ArgParser) -> Result<()> {
     use xgb_tpu::data::{BatchSource, CsvSource, LibsvmSource, SyntheticSource};
 
     let mut params = learner_params_from_args(args)?;
+    apply_csv_header_categoricals(&mut params, args)?;
     let seed: u64 = args.get_parse("seed", 42u64);
     let mut source: Box<dyn BatchSource> = if let Some(path) = args.get("csv") {
         Box::new(CsvSource::open(
@@ -582,20 +612,65 @@ fn run_train_streaming(args: &ArgParser) -> Result<()> {
         learner.add_callback(Box::new(xgb_tpu::gbm::RecordLogger::new(path)));
     }
     let backend = args.get_str("backend", "native");
+    let prior = load_resume_model(args)?;
     let booster = match backend.as_str() {
-        "native" => learner.train_from_source(source.as_mut(), None)?,
+        "native" => match &prior {
+            Some(p) => learner.resume_from_source(p, source.as_mut(), None)?,
+            None => learner.train_from_source(source.as_mut(), None)?,
+        },
         "xla" => {
             let artifacts = std::sync::Arc::new(Artifacts::discover()?);
             eprintln!("xla backend on platform {}", artifacts.platform());
-            learner.train_from_source_with_backend(
-                source.as_mut(),
-                None,
-                Box::new(XlaHistBackend::new(artifacts)),
-            )?
+            let be = Box::new(XlaHistBackend::new(artifacts));
+            match &prior {
+                Some(p) => learner.resume_from_source_with_backend(p, source.as_mut(), None, be)?,
+                None => learner.train_from_source_with_backend(source.as_mut(), None, be)?,
+            }
         }
         other => bail!("unknown backend {other:?} (native|xla)"),
     };
     report_booster(args, &booster, &params)
+}
+
+/// `--resume <path>`: load the prior model to continue boosting from.
+fn load_resume_model(args: &ArgParser) -> Result<Option<xgb_tpu::gbm::Booster>> {
+    match args.get("resume") {
+        Some(path) => {
+            let prior = xgb_tpu::gbm::load_model_file(path)
+                .with_context(|| format!("loading resume model {path}"))?;
+            eprintln!(
+                "resuming from {path}: {} rounds already boosted",
+                prior.n_rounds()
+            );
+            Ok(Some(prior))
+        }
+        None => Ok(None),
+    }
+}
+
+/// CSV-with-header convenience: columns whose header cell starts with
+/// `cat:` are flagged categorical, unless `--categorical` was passed
+/// explicitly (the flag wins).
+fn apply_csv_header_categoricals(params: &mut LearnerParams, args: &ArgParser) -> Result<()> {
+    if args.has("categorical") || !args.flag("header") {
+        return Ok(());
+    }
+    let Some(path) = args.get("csv") else {
+        return Ok(());
+    };
+    let cats =
+        xgb_tpu::data::csv_header_categoricals(path, args.get_parse("label-col", 0usize))?;
+    if !cats.is_empty() {
+        eprintln!(
+            "csv header flags categorical features: {}",
+            cats.iter()
+                .map(|f| format!("f{f}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        params.categorical_features = cats;
+    }
+    Ok(())
 }
 
 fn report_booster(

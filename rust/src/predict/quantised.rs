@@ -95,19 +95,30 @@ pub fn threshold_to_bin(cuts: &HistogramCuts, feature: usize, threshold: Float) 
 }
 
 /// One node of a bin-translated tree. Interior nodes route on
-/// `feature`'s global bin: present rows go left iff `bin < split`
-/// (missing → `default_left`); leaves carry `leaf_value` unchanged from
-/// the source [`RegTree`].
+/// `feature`'s global bin: present rows go left iff `bin < split` — or,
+/// for membership nodes (`cats != 0`), iff the bit of the row's **local**
+/// bin (`bin − split`, with `split` repurposed as the feature's first
+/// global bin `ptrs[f]`) is set in `cats` (missing → `default_left`
+/// either way); leaves carry `leaf_value` unchanged from the source
+/// [`RegTree`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct BinNode {
     pub feature: u32,
     /// Exclusive upper global bin of the left subtree
-    /// ([`threshold_to_bin`] of the float threshold).
+    /// ([`threshold_to_bin`] of the float threshold). For membership
+    /// nodes this instead holds `cuts.ptrs[feature]`, the offset that
+    /// turns the row's global bin into the local bit index.
     pub split: u32,
     pub left: i32,
     pub right: i32,
     pub default_left: bool,
     pub leaf_value: Float,
+    /// Local-bin membership bitset of a categorical split (`0` = numeric
+    /// threshold node). Translated from the tree node's category-value
+    /// bitset via [`HistogramCuts::category_of_local_bin`] at
+    /// construction, so bin routing and float routing agree exactly on
+    /// every in-vocabulary value.
+    pub cats: u64,
 }
 
 impl BinNode {
@@ -133,17 +144,33 @@ impl BinTree {
             nodes: tree
                 .nodes
                 .iter()
-                .map(|n| BinNode {
-                    feature: n.feature,
-                    split: if n.is_leaf() {
-                        0
+                .map(|n| {
+                    let (split, cats) = if n.is_leaf() {
+                        (0, 0)
+                    } else if n.cats != 0 {
+                        // translate the category-VALUE bitset into the
+                        // feature's local-BIN bitset against these cuts
+                        let f = n.feature as usize;
+                        let mut bits = 0u64;
+                        for i in 0..cuts.feature_bins(f) {
+                            let c = cuts.category_of_local_bin(f, i);
+                            if c >= 0.0 && c < 64.0 && (n.cats >> (c as u32)) & 1 == 1 {
+                                bits |= 1 << i;
+                            }
+                        }
+                        (cuts.ptrs[f], bits)
                     } else {
-                        threshold_to_bin(cuts, n.feature as usize, n.threshold)
-                    },
-                    left: n.left,
-                    right: n.right,
-                    default_left: n.default_left,
-                    leaf_value: n.leaf_value,
+                        (threshold_to_bin(cuts, n.feature as usize, n.threshold), 0)
+                    };
+                    BinNode {
+                        feature: n.feature,
+                        split,
+                        left: n.left,
+                        right: n.right,
+                        default_left: n.default_left,
+                        leaf_value: n.leaf_value,
+                        cats,
+                    }
                 })
                 .collect(),
         }
@@ -161,6 +188,10 @@ impl BinTree {
                 return nid;
             }
             let go_left = match lookup(n.feature as usize) {
+                Some(b) if n.cats != 0 => {
+                    let local = b.wrapping_sub(n.split);
+                    local < 64 && (n.cats >> local) & 1 == 1
+                }
                 Some(b) => b < n.split,
                 None => n.default_left,
             };
@@ -299,6 +330,10 @@ fn walk_block<B: BlockBins>(tree: &BinTree, bins: &B, n: usize, nid: &mut [u32; 
             }
             any = true;
             let go_left = match bins.bin(i, node.feature as usize) {
+                Some(b) if node.cats != 0 => {
+                    let local = b.wrapping_sub(node.split);
+                    local < 64 && (node.cats >> local) & 1 == 1
+                }
                 Some(b) => b < node.split,
                 None => node.default_left,
             };
@@ -1277,6 +1312,45 @@ mod tests {
         assert_eq!(float, quant, "out-of-range values must route identically");
         assert_eq!(quant[2], 2.0, "1e9 exceeds the sentinel -> right");
         assert_eq!(quant[3], 2.0, "missing follows default right");
+    }
+
+    #[test]
+    fn categorical_bin_traversal_matches_float() {
+        // f0 categorical with codes {0, 2, 5}; f1 numeric
+        let n = 120usize;
+        let mut rng = Pcg64::new(11);
+        let mut vals = Vec::new();
+        for _ in 0..n {
+            vals.push([0.0 as Float, 2.0, 5.0][rng.gen_range(3)]);
+            vals.push(rng.next_f32() * 4.0);
+        }
+        let x = DMatrix::dense(vals, n, 2);
+        let mut cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let mut cat = std::collections::BTreeMap::new();
+        cat.insert(0usize, vec![0.0 as Float, 2.0, 5.0]);
+        cuts.apply_categories(&cat);
+        // root: f0 in {0, 5} ? left : right; left child splits numeric f1
+        let mut t = RegTree::new_root(0.0, 1.0);
+        let (l, _r) = t.apply_split(0, 0, 0.0, false, 1.0, -1.0, 1.0, 2.0, 1.0);
+        t.set_categories(0, (1 << 0) | (1 << 5));
+        let f1cut = cuts.feature_cuts(1)[1];
+        t.apply_split(l, 1, f1cut, true, 0.5, -2.0, 1.0, -0.5, 1.0);
+
+        let float: Vec<Float> = (0..n).map(|r| t.predict_row(&x, r)).collect();
+        let forest = BinForest::from_trees(&[vec![t.clone()]], &cuts);
+        let base = [0.0f32];
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let packed = CompressedMatrix::from_quantized(&qm);
+        let exec = ExecContext::serial();
+        let mq = predict_margins_quantized(&forest, &base, &qm, &cuts, &exec);
+        let mc = predict_margins_compressed(&forest, &base, &packed, &cuts, &exec);
+        let qb = QuantisedBatch::from_dmatrix(&x, &cuts, 0).unwrap();
+        let mb = predict_margins_batch(&forest, &base, &qb, &exec);
+        for r in 0..n {
+            assert_eq!(mq[0][r], float[r], "quantized row {r}");
+            assert_eq!(mc[0][r], float[r], "compressed row {r}");
+            assert_eq!(mb[0][r], float[r], "batch row {r}");
+        }
     }
 
     #[test]

@@ -26,6 +26,31 @@ pub struct HistogramCuts {
     /// Per-feature minimum seen value (kept for completeness / debugging,
     /// as XGBoost does).
     pub min_vals: Vec<Float>,
+    /// Per-feature categorical flag. **Empty means no categorical
+    /// features** (the common case; older serialized cuts deserialize to
+    /// this). When non-empty it has one entry per feature; a flagged
+    /// feature's bins hold exactly one category value each (bin `i` ↔ the
+    /// feature's `i`-th smallest category, see
+    /// [`category_of_local_bin`](Self::category_of_local_bin)) and splits
+    /// on it are bitset membership tests, not threshold comparisons.
+    pub categorical: Vec<bool>,
+}
+
+/// Sentinel cut strictly above `max_val`, so every present value falls in
+/// a bin (XGBoost uses `max * (1+2e)`; the `<= 0` branch and the
+/// bit-increment fallback handle negative and denormal maxima).
+fn sentinel_above(max_val: Float) -> Float {
+    let sentinel = if max_val > 0.0 {
+        max_val * (1.0 + 1e-5) + 1e-35
+    } else {
+        max_val * (1.0 - 1e-5) + 1e-35
+    };
+    if sentinel <= max_val {
+        // degenerate precision case
+        Float::from_bits(max_val.to_bits() + 1)
+    } else {
+        sentinel
+    }
 }
 
 impl HistogramCuts {
@@ -84,26 +109,77 @@ impl HistogramCuts {
                     }
                 }
             }
-            // final sentinel strictly above the max so every present value
-            // falls in a bin (XGBoost uses max * (1+2e); handle max<=0 too)
-            let sentinel = if max_val > 0.0 {
-                max_val * (1.0 + 1e-5) + 1e-35
-            } else {
-                max_val * (1.0 - 1e-5) + 1e-35
-            };
-            let sentinel = if sentinel <= max_val {
-                // degenerate precision case
-                Float::from_bits(max_val.to_bits() + 1)
-            } else {
-                sentinel
-            };
-            values.push(sentinel);
+            values.push(sentinel_above(max_val));
             ptrs.push(values.len() as u32);
         }
         HistogramCuts {
             ptrs,
             values,
             min_vals,
+            categorical: Vec::new(),
+        }
+    }
+
+    /// Replace the quantile cuts of the given features with
+    /// **one-bin-per-category** cuts and flag them categorical. `cats`
+    /// maps feature index → its ascending distinct category values; for
+    /// categories `c_0 < … < c_{K−1}` the feature's cuts become
+    /// `[c_1, …, c_{K−1}, sentinel]` (K bins), so the standard
+    /// upper-bound [`bin_index`](Self::bin_index) maps `c_i` to local bin
+    /// `i` **exactly** — the packed/float binning machinery needs no
+    /// categorical special case.
+    pub fn apply_categories(&mut self, cats: &std::collections::BTreeMap<usize, Vec<Float>>) {
+        let nf = self.n_features();
+        let mut ptrs: Vec<u32> = Vec::with_capacity(nf + 1);
+        let mut values: Vec<Float> = Vec::new();
+        let mut min_vals: Vec<Float> = Vec::with_capacity(nf);
+        let mut categorical = vec![false; nf];
+        ptrs.push(0);
+        for f in 0..nf {
+            if let Some(cat) = cats.get(&f) {
+                assert!(!cat.is_empty(), "empty category set for feature {f}");
+                debug_assert!(
+                    cat.windows(2).all(|w| w[0] < w[1]),
+                    "category values must be ascending and distinct"
+                );
+                categorical[f] = true;
+                min_vals.push(cat[0]);
+                values.extend_from_slice(&cat[1..]);
+                values.push(sentinel_above(*cat.last().unwrap()));
+            } else {
+                min_vals.push(self.min_vals[f]);
+                values.extend_from_slice(self.feature_cuts(f));
+            }
+            ptrs.push(values.len() as u32);
+        }
+        self.ptrs = ptrs;
+        self.values = values;
+        self.min_vals = min_vals;
+        self.categorical = categorical;
+    }
+
+    /// Whether feature `f` is categorical.
+    #[inline]
+    pub fn is_categorical(&self, f: usize) -> bool {
+        self.categorical.get(f).copied().unwrap_or(false)
+    }
+
+    /// Whether any feature is categorical.
+    pub fn has_categorical(&self) -> bool {
+        self.categorical.iter().any(|&c| c)
+    }
+
+    /// The category value held by local bin `local` of categorical
+    /// feature `f`: bin 0 holds the smallest category (`min_vals[f]`),
+    /// bin `i ≥ 1` holds the cut value `values[ptrs[f] + i − 1]` (each
+    /// category is the *lower edge* of its bin — i.e. the previous bin's
+    /// upper cut).
+    pub fn category_of_local_bin(&self, f: usize, local: usize) -> Float {
+        debug_assert!(self.is_categorical(f), "feature {f} is not categorical");
+        if local == 0 {
+            self.min_vals[f]
+        } else {
+            self.values[self.ptrs[f] as usize + local - 1]
         }
     }
 
@@ -175,7 +251,7 @@ impl HistogramCuts {
 
     /// In-memory size of the cut structure (for the memory-footprint bench).
     pub fn bytes(&self) -> usize {
-        self.ptrs.len() * 4 + self.values.len() * 4 + self.min_vals.len() * 4
+        self.ptrs.len() * 4 + self.values.len() * 4 + self.min_vals.len() * 4 + self.categorical.len()
     }
 }
 
@@ -283,6 +359,60 @@ mod tests {
         // single interior cut at the weighted median (~27)
         let c = cuts.feature_cuts(0)[0];
         assert!(c < 40.0, "weighted median cut {c}");
+    }
+
+    #[test]
+    fn categorical_cuts_map_each_category_to_its_own_bin() {
+        let vals: Vec<Float> = vec![2.0, 5.0, 7.0, 5.0, 2.0, 7.0, 2.0, 5.0];
+        let x = DMatrix::dense(vals, 8, 1);
+        let mut cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let mut cats = std::collections::BTreeMap::new();
+        cats.insert(0usize, vec![2.0 as Float, 5.0, 7.0]);
+        cuts.apply_categories(&cats);
+        assert!(cuts.is_categorical(0));
+        assert!(cuts.has_categorical());
+        assert_eq!(cuts.feature_bins(0), 3);
+        for (i, &c) in [2.0 as Float, 5.0, 7.0].iter().enumerate() {
+            assert_eq!(cuts.bin_index(0, c) as usize, i, "category {c}");
+            assert_eq!(cuts.category_of_local_bin(0, i), c);
+        }
+        // a single-category feature still gets one bin with a sentinel
+        let mut one = HistogramCuts::from_dmatrix(&DMatrix::dense(vec![3.0; 4], 4, 1), 4, None);
+        let mut c1 = std::collections::BTreeMap::new();
+        c1.insert(0usize, vec![3.0 as Float]);
+        one.apply_categories(&c1);
+        assert_eq!(one.feature_bins(0), 1);
+        assert_eq!(one.bin_index(0, 3.0), 0);
+        assert_eq!(one.category_of_local_bin(0, 0), 3.0);
+    }
+
+    #[test]
+    fn apply_categories_preserves_numeric_features() {
+        // f0 numeric uniform, f1 categorical {0,1,2}
+        let mut v = Vec::new();
+        for r in 0..9 {
+            v.push(r as Float);
+            v.push((r % 3) as Float);
+        }
+        let x = DMatrix::dense(v, 9, 2);
+        let mut cuts = HistogramCuts::from_dmatrix(&x, 4, None);
+        let numeric_before = cuts.feature_cuts(0).to_vec();
+        let min_before = cuts.min_vals[0];
+        let mut cats = std::collections::BTreeMap::new();
+        cats.insert(1usize, vec![0.0 as Float, 1.0, 2.0]);
+        cuts.apply_categories(&cats);
+        assert!(!cuts.is_categorical(0));
+        assert!(cuts.is_categorical(1));
+        assert_eq!(cuts.feature_cuts(0), &numeric_before[..]);
+        assert_eq!(cuts.min_vals[0], min_before);
+        assert_eq!(cuts.feature_bins(1), 3);
+        assert_eq!(cuts.total_bins(), cuts.values.len());
+        // global indexing stays contiguous after the rebuild
+        for f in 0..2 {
+            for b in cuts.ptrs[f]..cuts.ptrs[f + 1] {
+                assert_eq!(cuts.feature_of_bin(b), f);
+            }
+        }
     }
 
     #[test]

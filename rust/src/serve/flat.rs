@@ -56,6 +56,12 @@
 //! * stored NaN: same compare as the `default_right` substitute — always
 //!   right, matching `Some(u32::MAX) < split` = false on the `BinTree`.
 //!
+//! Categorical membership nodes (`cats != 0`) keep the same shifted
+//! encoding: `split` stores the feature's shifted first global bin, so
+//! `x - split` recovers the local bin tested against the bitset; absent
+//! follows the node default and [`NAN_BIN`] wraps past 64 (never a
+//! member, always right) — case-for-case the `BinTree` behaviour.
+//!
 //! Routing is therefore bit-identical to `BinForest`, which PR 5 pinned
 //! bit-identical to float traversal; margins accumulate in the same
 //! row-major tree order and chunk bracketing as
@@ -97,6 +103,12 @@ pub struct FlatForest {
     /// Substitute shifted bin for absent lookups: [`ABSENT`] when the
     /// node defaults left, [`NAN_BIN`] when it defaults right.
     miss: Vec<u32>,
+    /// Local-bin membership bitset for categorical splits (0 = numeric
+    /// node). Mirrors `BinNode::cats`: for a membership node `split`
+    /// holds the feature's *shifted* first global bin (`ptrs[f] + 1`),
+    /// so a shifted lookup `x` lands on local bin `x - split` and goes
+    /// left iff that bit is set.
+    cats: Vec<u64>,
     /// Leaf payload, parallel to the node arrays (0.0 at interiors).
     leaf: Vec<Float>,
     /// Arena index of each tree's root, all groups concatenated.
@@ -116,6 +128,7 @@ impl FlatForest {
             split: Vec::new(),
             left: Vec::new(),
             miss: Vec::new(),
+            cats: Vec::new(),
             leaf: Vec::new(),
             roots: Vec::new(),
             group_ptr: vec![0],
@@ -161,6 +174,7 @@ impl FlatForest {
                 self.split.push(0);
                 self.left.push(0);
                 self.miss.push(0);
+                self.cats.push(0);
                 self.leaf.push(n.leaf_value);
             } else {
                 ensure!(
@@ -168,10 +182,15 @@ impl FlatForest {
                     "split bin {} leaves no room for the shifted encoding",
                     n.split
                 );
+                // Membership nodes store `split = ptrs[f]`, numeric nodes
+                // the exclusive-upper split bin — both shift by one, so
+                // the shifted lookup subtracts back to the same local
+                // bin the BinTree computes.
                 self.feature.push(n.feature);
                 self.split.push(n.split + 1);
                 self.left.push(slot_of[n.left as usize]);
                 self.miss.push(if n.default_left { ABSENT } else { NAN_BIN });
+                self.cats.push(n.cats);
                 self.leaf.push(0.0);
             }
         }
@@ -193,6 +212,7 @@ impl FlatForest {
     /// Resident bytes of the arena (what the registry reports on load).
     pub fn bytes(&self) -> usize {
         self.feature.len() * 4 * 4
+            + self.cats.len() * 8
             + self.leaf.len() * std::mem::size_of::<Float>()
             + self.roots.len() * 4
             + self.group_ptr.len() * std::mem::size_of::<usize>()
@@ -205,8 +225,12 @@ impl FlatForest {
     }
 
     /// Route one row (shifted bins via `bin_of(feature)`) from `root` to
-    /// its leaf value. Branchless child select; one unsigned compare per
-    /// level (module docs).
+    /// its leaf value. Branchless child select for numeric nodes; one
+    /// unsigned compare per level (module docs). Membership nodes test
+    /// the local-bin bitset instead: shifted lookup and shifted stored
+    /// `ptrs[f]` subtract back to the local bin, absent follows the
+    /// node's default, and a stored NaN ([`NAN_BIN`]) wraps far past 64
+    /// — never in the set, always right — exactly like the `BinTree`.
     #[inline]
     pub fn leaf_value(&self, root: u32, mut bin_of: impl FnMut(u32) -> u32) -> Float {
         let mut nid = root as usize;
@@ -216,6 +240,17 @@ impl FlatForest {
                 return self.leaf[nid];
             }
             let mut x = bin_of(self.feature[nid]);
+            let c = self.cats[nid];
+            if c != 0 {
+                let go_left = if x == ABSENT {
+                    self.miss[nid] == ABSENT
+                } else {
+                    let local = x.wrapping_sub(self.split[nid]);
+                    local < 64 && (c >> local) & 1 == 1
+                };
+                nid = (l + !go_left as u32) as usize;
+                continue;
+            }
             if x == ABSENT {
                 x = self.miss[nid];
             }
@@ -380,6 +415,7 @@ mod tests {
                     right: 2,
                     default_left,
                     leaf_value: 0.0,
+                    cats: 0,
                 },
                 leaf(-1.0),
                 leaf(1.0),
@@ -395,6 +431,7 @@ mod tests {
             right: crate::tree::regtree::NO_CHILD,
             default_left: false,
             leaf_value: v,
+            cats: 0,
         }
     }
 
@@ -439,6 +476,41 @@ mod tests {
         let ff = flat_of(vec![stump(0, true)]);
         assert_eq!(route(&ff, ABSENT), -1.0); // missing → left
         assert_eq!(route(&ff, 0 + 1), 1.0); // present bin 0 → right (0 < 0 false)
+    }
+
+    #[test]
+    fn membership_split_matches_bintree_per_case() {
+        // Membership stump on feature 0: ptrs[f] = 3 (the feature's bins
+        // start at global bin 3), categories at local bins {0, 2, 5}.
+        for default_left in [true, false] {
+            let bt = BinTree {
+                nodes: vec![
+                    BinNode {
+                        feature: 0,
+                        split: 3, // repurposed: cuts.ptrs[f]
+                        left: 1,
+                        right: 2,
+                        default_left,
+                        leaf_value: 0.0,
+                        cats: (1 << 0) | (1 << 2) | (1 << 5),
+                    },
+                    leaf(-1.0),
+                    leaf(1.0),
+                ],
+            };
+            let ff = flat_of(vec![bt.clone()]);
+            // every nearby global bin, in and out of the feature's range
+            for b in 0..12u32 {
+                let want = bt.leaf_value_for(|_| Some(b));
+                assert_eq!(route(&ff, b + 1), want, "bin {b} dl={default_left}");
+            }
+            let want_missing = bt.leaf_value_for(|_| None);
+            assert_eq!(route(&ff, ABSENT), want_missing, "missing dl={default_left}");
+            // stored NaN: never a member, always right — same as BinTree
+            let want_nan = bt.leaf_value_for(|_| Some(u32::MAX));
+            assert_eq!(route(&ff, NAN_BIN), want_nan, "stored NaN");
+            assert_eq!(route(&ff, NAN_BIN), 1.0);
+        }
     }
 
     #[test]

@@ -337,8 +337,10 @@ impl RowPartitioner {
     }
 
     /// Routing decision on quantised data: row goes left iff its bin for
-    /// the split feature is `<= split_bin`; missing uses the learned
-    /// default direction.
+    /// the split feature is `<= split_bin` — or, for a categorical split,
+    /// iff the bit of its **local** bin is set in the candidate's
+    /// `cat_bins` membership set; missing uses the learned default
+    /// direction either way.
     #[inline]
     pub fn goes_left(
         row: u32,
@@ -347,6 +349,11 @@ impl RowPartitioner {
         cuts: &HistogramCuts,
     ) -> bool {
         match bins.feature_bin(row as usize, split.feature as usize, cuts) {
+            Some(b) if split.is_categorical() => {
+                let local = b - cuts.ptrs[split.feature as usize];
+                debug_assert!(local < 64, "categorical features have at most 64 bins");
+                (split.cat_bins >> local) & 1 == 1
+            }
             Some(b) => b <= split.split_bin,
             None => split.default_left,
         }
@@ -389,6 +396,8 @@ mod tests {
             gain: 1.0,
             left_sum: GradPairF64::default(),
             right_sum: GradPairF64::default(),
+            categories: 0,
+            cat_bins: 0,
         }
     }
 
@@ -527,6 +536,31 @@ mod tests {
             assert_eq!((pl, pr), (sl, sr), "threads = {t}");
             assert_eq!(par.node_rows(1), serial.node_rows(1), "threads = {t}");
             assert_eq!(par.node_rows(2), serial.node_rows(2), "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn categorical_split_routes_by_membership() {
+        // codes 0..4 cycling over 16 rows; left set = categories {0, 2}
+        let vals: Vec<Float> = (0..16).map(|i| (i % 4) as Float).collect();
+        let x = DMatrix::dense(vals, 16, 1);
+        let mut cuts = HistogramCuts::from_dmatrix(&x, 8, None);
+        let mut cm = std::collections::BTreeMap::new();
+        cm.insert(0usize, vec![0.0 as Float, 1.0, 2.0, 3.0]);
+        cuts.apply_categories(&cm);
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let src = BinSource::Quantized(&qm);
+        let mut split = split_at_bin(0);
+        split.categories = 0b0101;
+        split.cat_bins = 0b0101;
+        let mut p = RowPartitioner::new(16);
+        let (nl, nr) = p.apply_split(0, &split, 1, 2, &src, &cuts);
+        assert_eq!((nl, nr), (8, 8));
+        for &r in p.node_rows(1) {
+            assert!(r % 4 == 0 || r % 4 == 2, "row {r} wrongly left");
+        }
+        for &r in p.node_rows(2) {
+            assert!(r % 4 == 1 || r % 4 == 3, "row {r} wrongly right");
         }
     }
 

@@ -161,6 +161,8 @@ mod tests {
                 gain,
                 left_sum: GradPairF64::default(),
                 right_sum: GradPairF64::default(),
+                categories: 0,
+                cat_bins: 0,
             },
             node_sum: GradPairF64::default(),
             bounds: NodeBounds::default(),

@@ -11,9 +11,11 @@ use crate::Float;
 /// Sentinel for "no child".
 pub const NO_CHILD: i32 = -1;
 
-/// One tree node. Interior nodes split on `feature < threshold`
-/// (missing → `default_left`); leaves carry `leaf_value` (already scaled
-/// by the learning rate at construction time).
+/// One tree node. Interior nodes split on `feature < threshold`, or —
+/// when `cats != 0` — on category **membership**: bit `c` of `cats` set
+/// ⇔ raw value `c` routes left (missing → `default_left` either way);
+/// leaves carry `leaf_value` (already scaled by the learning rate at
+/// construction time).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
     pub feature: u32,
@@ -27,6 +29,12 @@ pub struct Node {
     /// Sum of hessians of the training rows that reached this node
     /// ("cover" in XGBoost dumps).
     pub cover: Float,
+    /// Category-value bitset of a membership split; `0` = threshold
+    /// split. Present float values are truncated to their integer code
+    /// for the test, so out-of-vocabulary non-integer values share the
+    /// routing of their truncation (documented in `lib.rs`); values
+    /// outside `[0, 64)` route right.
+    pub cats: u64,
 }
 
 impl Node {
@@ -40,6 +48,7 @@ impl Node {
             leaf_value: value,
             gain: 0.0,
             cover,
+            cats: 0,
         }
     }
 
@@ -119,6 +128,15 @@ impl RegTree {
         (left, right)
     }
 
+    /// Turn the just-split interior node `nid` into a category-membership
+    /// split (bit `c` of `cats` ⇔ raw value `c` routes left). Call right
+    /// after [`apply_split`](Self::apply_split) with the candidate's
+    /// category bitset; a zero bitset is a no-op (numeric split).
+    pub fn set_categories(&mut self, nid: usize, cats: u64) {
+        debug_assert!(!self.nodes[nid].is_leaf(), "leaves cannot carry categories");
+        self.nodes[nid].cats = cats;
+    }
+
     /// Route one example (by raw feature values) to its leaf; returns the
     /// node id.
     #[inline]
@@ -131,6 +149,9 @@ impl RegTree {
             }
             let go_left = match x.get(row, n.feature as usize) {
                 None => n.default_left,
+                Some(v) if n.cats != 0 => {
+                    v >= 0.0 && v < 64.0 && (n.cats >> (v as u32)) & 1 == 1
+                }
                 Some(v) => v < n.threshold,
             };
             nid = if go_left { n.left as usize } else { n.right as usize };
@@ -156,16 +177,33 @@ impl RegTree {
         if n.is_leaf() {
             out.push_str(&format!("{pad}{nid}:leaf={:.6},cover={:.1}\n", n.leaf_value, n.cover));
         } else {
-            out.push_str(&format!(
-                "{pad}{nid}:[f{}<{:.6}] yes={},no={},missing={},gain={:.4},cover={:.1}\n",
-                n.feature,
-                n.threshold,
-                n.left,
-                n.right,
-                if n.default_left { n.left } else { n.right },
-                n.gain,
-                n.cover
-            ));
+            if n.cats != 0 {
+                let cats: Vec<String> = (0..64)
+                    .filter(|c| (n.cats >> c) & 1 == 1)
+                    .map(|c| c.to_string())
+                    .collect();
+                out.push_str(&format!(
+                    "{pad}{nid}:[f{} in {{{}}}] yes={},no={},missing={},gain={:.4},cover={:.1}\n",
+                    n.feature,
+                    cats.join(","),
+                    n.left,
+                    n.right,
+                    if n.default_left { n.left } else { n.right },
+                    n.gain,
+                    n.cover
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{pad}{nid}:[f{}<{:.6}] yes={},no={},missing={},gain={:.4},cover={:.1}\n",
+                    n.feature,
+                    n.threshold,
+                    n.left,
+                    n.right,
+                    if n.default_left { n.left } else { n.right },
+                    n.gain,
+                    n.cover
+                ));
+            }
             self.dump_node(n.left as usize, indent + 1, out);
             self.dump_node(n.right as usize, indent + 1, out);
         }
@@ -176,6 +214,10 @@ impl RegTree {
     /// `python/compile/model.py::predict_ensemble`).
     pub fn to_arrays(&self, max_nodes: usize) -> TreeArrays {
         assert!(self.nodes.len() <= max_nodes, "tree exceeds artifact capacity");
+        assert!(
+            self.nodes.iter().all(|n| n.cats == 0),
+            "categorical splits are not supported by the array export"
+        );
         let mut a = TreeArrays {
             feature: vec![0; max_nodes],
             threshold: vec![0.0; max_nodes],
@@ -267,6 +309,37 @@ mod tests {
         assert_eq!(t.predict_row(&x, 2), -2.0);
         assert_eq!(t.max_depth(), 2);
         assert_eq!(t.n_leaves(), 3);
+    }
+
+    #[test]
+    fn categorical_membership_routing() {
+        // root: f0 in {1, 3} ? left : right; missing -> right
+        let mut t = RegTree::new_root(0.0, 8.0);
+        t.apply_split(0, 0, 0.0, false, 2.0, -1.0, 4.0, 2.0, 4.0);
+        t.set_categories(0, (1 << 1) | (1 << 3));
+        let x = DMatrix::dense(
+            vec![1.0, 3.0, 0.0, 2.0, 63.0, -1.0, 64.0, Float::NAN],
+            8,
+            1,
+        );
+        assert_eq!(t.predict_row(&x, 0), -1.0); // cat 1 -> left
+        assert_eq!(t.predict_row(&x, 1), -1.0); // cat 3 -> left
+        assert_eq!(t.predict_row(&x, 2), 2.0); // cat 0 -> right
+        assert_eq!(t.predict_row(&x, 3), 2.0); // cat 2 -> right
+        assert_eq!(t.predict_row(&x, 4), 2.0); // in-range, not in set
+        assert_eq!(t.predict_row(&x, 5), 2.0); // below range -> right
+        assert_eq!(t.predict_row(&x, 6), 2.0); // above range -> right
+        assert_eq!(t.predict_row(&x, 7), 2.0); // missing -> default right
+        let d = t.dump();
+        assert!(d.contains("[f0 in {1,3}]"), "{d}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported by the array export")]
+    fn to_arrays_rejects_categorical_nodes() {
+        let mut t = split_tree();
+        t.set_categories(0, 1);
+        t.to_arrays(8);
     }
 
     #[test]

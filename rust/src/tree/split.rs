@@ -78,13 +78,35 @@ impl Default for NodeBounds {
 pub struct SplitCandidate {
     pub feature: u32,
     /// Global bin index; rows with `bin <= split_bin` for this feature go
-    /// left. `threshold` is the corresponding raw-value cut.
+    /// left. `threshold` is the corresponding raw-value cut. For
+    /// categorical splits (`categories != 0`) both are routing-irrelevant
+    /// (`split_bin` keeps the last bin added to the left set for the
+    /// deterministic tie-break; `threshold` is 0).
     pub split_bin: u32,
     pub threshold: Float,
     pub default_left: bool,
     pub gain: f64,
     pub left_sum: GradPairF64,
     pub right_sum: GradPairF64,
+    /// Category-**value** membership bitset of a categorical split: bit
+    /// `c` set ⇔ raw value `c` routes left. `0` means this is a numeric
+    /// threshold split (an interior categorical split always has at
+    /// least one left category, so 0 is unambiguous). Category codes are
+    /// validated integers in `[0, 64)` at ingest, so a single `u64`
+    /// suffices and the candidate stays `Copy`.
+    pub categories: u64,
+    /// The same left-membership over the feature's **local bins** (bit
+    /// `i` ⇔ local bin `i` routes left) — what the packed/quantised
+    /// routing paths test without a bin→value lookup.
+    pub cat_bins: u64,
+}
+
+impl SplitCandidate {
+    /// Whether this is a category-membership split.
+    #[inline]
+    pub fn is_categorical(&self) -> bool {
+        self.categories != 0
+    }
 }
 
 /// Stateless gain calculator.
@@ -185,6 +207,17 @@ impl SplitEvaluator {
             if hi - lo < 2 {
                 continue; // single-bin feature cannot split
             }
+            if cuts.is_categorical(f) {
+                // categories have no order, so a monotone constraint on a
+                // categorical feature is meaningless — skip it entirely
+                if constraint != 0 {
+                    continue;
+                }
+                self.evaluate_categorical(
+                    &mut best, f, lo, hi, hist, cuts, node_sum, parent_gain, bounds,
+                );
+                continue;
+            }
             let present = hist.feature_sum(lo, hi);
             let missing = node_sum - present;
             // forward scan: accumulate present-left; try missing on each
@@ -198,13 +231,14 @@ impl SplitEvaluator {
                 let right = node_sum - left;
                 self.consider(
                     &mut best, f, b, cuts, false, left, right, parent_gain, constraint, bounds,
+                    0, 0,
                 );
                 // candidate B: missing goes left
                 let left_m = left_present + missing;
                 let right_m = node_sum - left_m;
                 self.consider(
                     &mut best, f, b, cuts, true, left_m, right_m, parent_gain, constraint,
-                    bounds,
+                    bounds, 0, 0,
                 );
             }
         }
@@ -264,6 +298,96 @@ impl SplitEvaluator {
         }
     }
 
+    /// Gain-sorted greedy categorical partition search (LightGBM-style),
+    /// plus the one-vs-rest candidates: category bins carrying gradient
+    /// mass in this node are (a) each tried alone on the left, and
+    /// (b) sorted by leaf-weight score `G/(H+λ)` and scanned as ordered
+    /// prefixes like a numeric feature. Categories absent from the node
+    /// (and at inference, out-of-vocabulary values) route right; missing
+    /// values follow the learned `default_left`. Deterministic by
+    /// construction: the score sort tie-breaks on bin index and the
+    /// histogram is already bit-identical across devices.
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate_categorical(
+        &self,
+        best: &mut Option<SplitCandidate>,
+        f: usize,
+        lo: usize,
+        hi: usize,
+        hist: &Histogram,
+        cuts: &HistogramCuts,
+        node_sum: GradPairF64,
+        parent_gain: f64,
+        bounds: NodeBounds,
+    ) {
+        let present = hist.feature_sum(lo, hi);
+        let missing = node_sum - present;
+        let lambda = self.params.lambda;
+        let occupied: Vec<usize> = (0..hi - lo)
+            .filter(|&i| {
+                let s = hist.bins[lo + i];
+                s.hess != 0.0 || s.grad != 0.0
+            })
+            .collect();
+        if occupied.len() < 2 {
+            return;
+        }
+        let cat_bit = |local: usize| -> u64 {
+            let c = cuts.category_of_local_bin(f, local);
+            debug_assert!(
+                c >= 0.0 && c < 64.0 && c.fract() == 0.0,
+                "category codes are validated at ingest"
+            );
+            1u64 << (c as u32)
+        };
+        // one-vs-rest over occupied categories
+        for &i in &occupied {
+            let left = hist.bins[lo + i];
+            let cats = cat_bit(i);
+            let bins = 1u64 << i;
+            self.consider(
+                best, f, lo + i, cuts, false, left, node_sum - left, parent_gain, 0, bounds,
+                cats, bins,
+            );
+            let left_m = left + missing;
+            self.consider(
+                best, f, lo + i, cuts, true, left_m, node_sum - left_m, parent_gain, 0,
+                bounds, cats, bins,
+            );
+        }
+        // gain-sorted greedy grouping
+        let mut order = occupied;
+        order.sort_by(|&a, &b| {
+            let sa = hist.bins[lo + a];
+            let sb = hist.bins[lo + b];
+            let ka = sa.grad / (sa.hess + lambda);
+            let kb = sb.grad / (sb.hess + lambda);
+            ka.partial_cmp(&kb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut left = GradPairF64::default();
+        let mut cats = 0u64;
+        let mut bins = 0u64;
+        for &i in &order {
+            left += hist.bins[lo + i];
+            cats |= cat_bit(i);
+            bins |= 1u64 << i;
+            // the full-prefix candidate is still meaningful with missing
+            // right; degenerate empty-right candidates are rejected by
+            // the feasibility/positive-gain checks in `consider`
+            self.consider(
+                best, f, lo + i, cuts, false, left, node_sum - left, parent_gain, 0, bounds,
+                cats, bins,
+            );
+            let left_m = left + missing;
+            self.consider(
+                best, f, lo + i, cuts, true, left_m, node_sum - left_m, parent_gain, 0,
+                bounds, cats, bins,
+            );
+        }
+    }
+
     #[inline]
     #[allow(clippy::too_many_arguments)]
     fn consider(
@@ -278,6 +402,8 @@ impl SplitEvaluator {
         parent_gain: f64,
         constraint: i8,
         bounds: NodeBounds,
+        categories: u64,
+        cat_bins: u64,
     ) {
         if !self.feasible(left) || !self.feasible(right) {
             return;
@@ -313,11 +439,17 @@ impl SplitEvaluator {
             *best = Some(SplitCandidate {
                 feature: feature as u32,
                 split_bin: bin as u32,
-                threshold: cuts.cut_of_bin(bin as u32),
+                threshold: if categories != 0 {
+                    0.0
+                } else {
+                    cuts.cut_of_bin(bin as u32)
+                },
                 default_left,
                 gain,
                 left_sum: left,
                 right_sum: right,
+                categories,
+                cat_bins,
             });
         }
     }
@@ -528,6 +660,90 @@ mod tests {
         });
         let s = ev.evaluate(&hist, &cuts, node_sum).unwrap();
         assert!(!s.default_left, "missing mass should go right: {s:?}");
+    }
+
+    fn categorical_fixture() -> (DMatrix, Vec<GradPair>, HistogramCuts) {
+        // codes {0,1,2,3}; {0,2} pull negative, {1,3} positive — only a
+        // membership split can separate them cleanly
+        let n = 40;
+        let mut vals = Vec::new();
+        let mut grads = Vec::new();
+        for i in 0..n {
+            vals.push((i % 4) as Float);
+            let g = if i % 4 == 0 || i % 4 == 2 { -1.0 } else { 1.0 };
+            grads.push(GradPair::new(g, 1.0));
+        }
+        let x = DMatrix::dense(vals, n, 1);
+        let mut cuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let mut cats = std::collections::BTreeMap::new();
+        cats.insert(0usize, vec![0.0 as Float, 1.0, 2.0, 3.0]);
+        cuts.apply_categories(&cats);
+        (x, grads, cuts)
+    }
+
+    #[test]
+    fn categorical_membership_split_beats_thresholds() {
+        let (x, grads, cuts) = categorical_fixture();
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..x.n_rows() as u32).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let ev = SplitEvaluator::new(TreeParams {
+            min_child_weight: 0.0,
+            ..Default::default()
+        });
+        let s = ev.evaluate(&hist, &cuts, node_sum).unwrap();
+        assert!(s.is_categorical(), "{s:?}");
+        assert!(
+            s.categories == 0b0101 || s.categories == 0b1010,
+            "left categories {:#06b}",
+            s.categories
+        );
+        assert_eq!(
+            s.cat_bins, s.categories,
+            "bins mirror values when codes are exactly 0..K"
+        );
+        let total = s.left_sum + s.right_sum;
+        assert!((total.grad - node_sum.grad).abs() < 1e-9);
+        assert!((total.hess - node_sum.hess).abs() < 1e-9);
+
+        // the same data split by ordered thresholds is strictly worse
+        let ncuts = HistogramCuts::from_dmatrix(&x, 16, None);
+        let nqm = Quantizer::new(ncuts.clone()).quantize(&x);
+        let mut nhist = Histogram::zeros(nqm.n_bins);
+        build_histogram_quantized(&nqm, &grads, &rows, &mut nhist);
+        let ns = ev.evaluate(&nhist, &ncuts, node_sum).unwrap();
+        assert!(!ns.is_categorical());
+        assert!(
+            s.gain > ns.gain + 1.0,
+            "membership gain {} vs threshold gain {}",
+            s.gain,
+            ns.gain
+        );
+    }
+
+    #[test]
+    fn monotone_constraint_skips_categorical_feature() {
+        let (x, grads, cuts) = categorical_fixture();
+        let qm = Quantizer::new(cuts.clone()).quantize(&x);
+        let rows: Vec<u32> = (0..x.n_rows() as u32).collect();
+        let mut hist = Histogram::zeros(qm.n_bins);
+        build_histogram_quantized(&qm, &grads, &rows, &mut hist);
+        let node_sum = grads.iter().fold(GradPairF64::default(), |a, g| {
+            a + GradPairF64::from_single(*g)
+        });
+        let ev = SplitEvaluator::new(TreeParams {
+            min_child_weight: 0.0,
+            monotone_constraints: vec![1],
+            ..Default::default()
+        });
+        assert!(
+            ev.evaluate(&hist, &cuts, node_sum).is_none(),
+            "categories are unordered — monotone-constrained cat feature must not split"
+        );
     }
 
     #[test]

@@ -1,0 +1,393 @@
+//! Scenario-diversity integration suite (ROADMAP #4): the scenario
+//! objectives (quantile / Tweedie / AFT) and categorical features train
+//! **bit-identically** across every execution strategy — {resident, paged,
+//! streamed} × thread counts × device counts — and training continuation
+//! (`Learner::resume`) reproduces an uninterrupted run bit for bit,
+//! including through a serialization round-trip of the intermediate model.
+//!
+//! These are the integration-level companions to the per-seam unit tests:
+//! a regression anywhere in the ingest → sketch → quantise → grow →
+//! predict pipeline that treats one strategy differently from another
+//! shows up here as a trees/metric/prediction mismatch.
+
+use xgb_tpu::data::source::DMatrixSource;
+use xgb_tpu::data::{DMatrix, Dataset};
+use xgb_tpu::gbm::{
+    load_model, save_model, AftDistribution, Booster, Learner, LearnerParams, ObjectiveKind,
+};
+use xgb_tpu::util::Pcg64;
+use xgb_tpu::Float;
+
+const N_TRAIN: usize = 300;
+const N_VALID: usize = 120;
+
+/// Dense feature block with ~10% missing values.
+fn features(rng: &mut Pcg64, n: usize, cols: usize) -> Vec<Float> {
+    (0..n * cols)
+        .map(|_| {
+            if rng.next_f64() < 0.1 {
+                Float::NAN
+            } else {
+                rng.next_f32() * 10.0 - 5.0
+            }
+        })
+        .collect()
+}
+
+fn row_signal(xs: &[Float], row: usize, cols: usize) -> Float {
+    xs[row * cols..(row + 1) * cols]
+        .iter()
+        .filter(|v| !v.is_nan())
+        .sum::<Float>()
+}
+
+/// Real-valued labels (quantile regression).
+fn regression_ds(seed: u64, n: usize) -> Dataset {
+    let cols = 4;
+    let mut rng = Pcg64::new(seed);
+    let xs = features(&mut rng, n, cols);
+    let y: Vec<Float> = (0..n)
+        .map(|r| row_signal(&xs, r, cols) + rng.next_f32() * 2.0)
+        .collect();
+    Dataset::new(DMatrix::dense(xs, n, cols), y)
+}
+
+/// Non-negative labels with a point mass at zero (Tweedie).
+fn tweedie_ds(seed: u64, n: usize) -> Dataset {
+    let cols = 4;
+    let mut rng = Pcg64::new(seed);
+    let xs = features(&mut rng, n, cols);
+    let y: Vec<Float> = (0..n)
+        .map(|r| {
+            if rng.next_f64() < 0.3 {
+                0.0
+            } else {
+                (row_signal(&xs, r, cols) + 6.0).max(0.0) + rng.next_f32()
+            }
+        })
+        .collect();
+    Dataset::new(DMatrix::dense(xs, n, cols), y)
+}
+
+/// Interval labels covering all four censoring shapes (AFT).
+fn aft_ds(seed: u64, n: usize) -> Dataset {
+    let cols = 4;
+    let mut rng = Pcg64::new(seed);
+    let xs = features(&mut rng, n, cols);
+    let mut lo = Vec::with_capacity(n);
+    let mut up = Vec::with_capacity(n);
+    for r in 0..n {
+        let t = (row_signal(&xs, r, cols) * 0.2).exp() + rng.next_f32();
+        match rng.gen_range(4) {
+            0 => {
+                lo.push(t);
+                up.push(t); // uncensored event
+            }
+            1 => {
+                lo.push(t);
+                up.push(Float::INFINITY); // right-censored
+            }
+            2 => {
+                lo.push(0.0);
+                up.push(t); // left-censored
+            }
+            _ => {
+                lo.push(t);
+                up.push(t + 1.0 + rng.next_f32() * 3.0); // interval
+            }
+        }
+    }
+    Dataset::with_bounds(DMatrix::dense(xs, n, cols), lo, up)
+}
+
+/// Two categorical features (codes 0..7) interleaved with two numeric
+/// ones; the label is a membership rule over non-contiguous codes, so a
+/// single membership split beats any ordered threshold on the codes.
+fn categorical_ds(seed: u64, n: usize) -> Dataset {
+    let cols = 4;
+    let mut rng = Pcg64::new(seed);
+    let mut xs = Vec::with_capacity(n * cols);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c0 = rng.gen_range(7) as Float;
+        let f1 = rng.next_f32() * 10.0 - 5.0;
+        let c2 = rng.gen_range(5) as Float;
+        let f3 = if rng.next_f64() < 0.1 {
+            Float::NAN
+        } else {
+            rng.next_f32() * 4.0
+        };
+        xs.extend_from_slice(&[c0, f1, c2, f3]);
+        let in_set = matches!(c0 as u32, 1 | 4 | 6) || c2 as u32 == 3;
+        let noise = rng.next_f64() < 0.08;
+        y.push((in_set != noise) as u32 as Float);
+    }
+    Dataset::new(DMatrix::dense(xs, n, cols), y)
+}
+
+fn base_params(objective: ObjectiveKind) -> LearnerParams {
+    LearnerParams {
+        objective,
+        num_rounds: 6,
+        max_depth: 3,
+        max_bins: 16,
+        compress: true,
+        eval_every: 1,
+        seed: 9,
+        ..Default::default()
+    }
+}
+
+/// Train under one strategy: in-memory when `streamed` is `None`, else
+/// through a [`DMatrixSource`] with the given batch size.
+fn run(p: &LearnerParams, train: &Dataset, valid: &Dataset, streamed: Option<usize>) -> Booster {
+    let mut l = Learner::from_params(p.clone()).unwrap();
+    match streamed {
+        Some(batch) => {
+            let mut src = DMatrixSource::from_dataset(train, batch);
+            l.train_from_source(&mut src, Some(valid)).unwrap()
+        }
+        None => l.train(train, Some(valid)).unwrap(),
+    }
+}
+
+/// Bit-level equality of everything a scenario observes: trees, base
+/// score, per-round metric history, and validation predictions.
+fn assert_same(a: &Booster, b: &Booster, valid: &Dataset, ctx: &str) {
+    assert_eq!(a.trees, b.trees, "{ctx}: trees");
+    assert_eq!(a.base_score, b.base_score, "{ctx}: base score");
+    assert_eq!(a.eval_history.len(), b.eval_history.len(), "{ctx}: history length");
+    for (x, y) in a.eval_history.iter().zip(b.eval_history.iter()) {
+        assert_eq!(x.round, y.round, "{ctx}: round numbering");
+        assert_eq!(x.train.to_bits(), y.train.to_bits(), "{ctx} round {}: train", x.round);
+        assert_eq!(
+            x.valid.map(f64::to_bits),
+            y.valid.map(f64::to_bits),
+            "{ctx} round {}: valid",
+            x.round
+        );
+    }
+    let (pa, pb) = (a.predict(&valid.x), b.predict(&valid.x));
+    assert_eq!(pa.len(), pb.len(), "{ctx}: prediction count");
+    for (i, (u, v)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: prediction {i}");
+    }
+}
+
+/// Every scenario (new objectives + categorical) × {resident, paged,
+/// streamed} × threads {1, 4} × devices {1, 3} produces bit-identical
+/// trees, metric histories and predictions.
+#[test]
+fn scenario_objectives_and_categorical_bit_identical_across_strategies() {
+    let quantile = {
+        let mut p = base_params(ObjectiveKind::QuantileReg);
+        p.quantile_alpha = 0.9;
+        p
+    };
+    let tweedie = {
+        let mut p = base_params(ObjectiveKind::Tweedie);
+        p.tweedie_variance_power = 1.3;
+        p
+    };
+    let aft_normal = base_params(ObjectiveKind::SurvivalAft);
+    let aft_logistic = {
+        let mut p = base_params(ObjectiveKind::SurvivalAft);
+        p.aft_distribution = AftDistribution::Logistic;
+        p.aft_sigma = 0.7;
+        p
+    };
+    let categorical = {
+        let mut p = base_params(ObjectiveKind::BinaryLogistic);
+        p.categorical_features = vec![0, 2];
+        p
+    };
+    let scenarios: Vec<(&str, LearnerParams, Dataset, Dataset)> = vec![
+        ("quantile", quantile, regression_ds(31, N_TRAIN), regression_ds(32, N_VALID)),
+        ("tweedie", tweedie, tweedie_ds(41, N_TRAIN), tweedie_ds(42, N_VALID)),
+        ("aft-normal", aft_normal, aft_ds(51, N_TRAIN), aft_ds(52, N_VALID)),
+        ("aft-logistic", aft_logistic, aft_ds(61, N_TRAIN), aft_ds(62, N_VALID)),
+        ("categorical", categorical, categorical_ds(71, N_TRAIN), categorical_ds(72, N_VALID)),
+    ];
+    for (name, base, train, valid) in &scenarios {
+        let reference = run(base, train, valid, None);
+        assert!(!reference.trees[0].is_empty(), "{name}: no trees trained");
+        for devices in [1usize, 3] {
+            for threads in [1usize, 4] {
+                let mut p = base.clone();
+                p.n_devices = devices;
+                p.threads = threads;
+                let mut paged = p.clone();
+                paged.max_resident_pages = 2;
+                paged.page_rows = 64;
+                let ctx = |s: &str| format!("{name} {s} devices={devices} threads={threads}");
+                assert_same(&run(&p, train, valid, None), &reference, valid, &ctx("resident"));
+                assert_same(&run(&paged, train, valid, None), &reference, valid, &ctx("paged"));
+                assert_same(&run(&p, train, valid, Some(7)), &reference, valid, &ctx("streamed"));
+            }
+        }
+    }
+}
+
+/// `train(5) → serialize → reload → resume(5)` equals `train(10)` bit for
+/// bit — trees, round-numbered metric history, predictions, and the saved
+/// model bytes — across threads × devices, in-memory and streamed, with
+/// row and column subsampling active so the continuation's rng
+/// fast-forward is exercised too.
+#[test]
+fn resume_reproduces_uninterrupted_run_bit_for_bit() {
+    let train = categorical_ds(81, N_TRAIN);
+    let valid = categorical_ds(82, N_VALID);
+    for devices in [1usize, 3] {
+        for threads in [1usize, 4] {
+            for streamed in [None, Some(7usize)] {
+                let mut p = base_params(ObjectiveKind::BinaryLogistic);
+                p.categorical_features = vec![0, 2];
+                p.n_devices = devices;
+                p.threads = threads;
+                p.num_rounds = 10;
+                p.subsample = 0.8;
+                p.colsample_bytree = 0.75;
+                let ctx = format!(
+                    "devices={devices} threads={threads} streamed={}",
+                    streamed.is_some()
+                );
+                let full = run(&p, &train, &valid, streamed);
+
+                let mut p5 = p.clone();
+                p5.num_rounds = 5;
+                let part1 = run(&p5, &train, &valid, streamed);
+                // the resumed run consumes the *persisted* artifact, so the
+                // frozen-cuts + shaping-param round-trip is in the loop
+                let mut bytes = Vec::new();
+                save_model(&part1, &mut bytes).unwrap();
+                let prior = load_model(&bytes[..]).unwrap();
+
+                let mut l2 = Learner::from_params(p5.clone()).unwrap();
+                let combined = match streamed {
+                    Some(batch) => {
+                        let mut src = DMatrixSource::from_dataset(&train, batch);
+                        l2.resume_from_source(&prior, &mut src, Some(&valid)).unwrap()
+                    }
+                    None => l2.resume(&prior, &train, Some(&valid)).unwrap(),
+                };
+
+                assert_eq!(combined.trees, full.trees, "{ctx}: trees");
+                assert_eq!(combined.base_score, full.base_score, "{ctx}: base score");
+                // the continuation records global rounds 6..=10, matching
+                // the tail of the uninterrupted history exactly
+                assert_eq!(combined.eval_history.len(), 5, "{ctx}: resumed history length");
+                for (c, f) in combined.eval_history.iter().zip(full.eval_history[5..].iter()) {
+                    assert_eq!(c.round, f.round, "{ctx}: round numbering");
+                    assert_eq!(c.train.to_bits(), f.train.to_bits(), "{ctx} round {}", c.round);
+                    assert_eq!(
+                        c.valid.map(f64::to_bits),
+                        f.valid.map(f64::to_bits),
+                        "{ctx} round {}",
+                        c.round
+                    );
+                }
+                let (pf, pc) = (full.predict(&valid.x), combined.predict(&valid.x));
+                for (i, (u, v)) in pf.iter().zip(pc.iter()).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: prediction {i}");
+                }
+                // 5 + resume-5 and train-10 persist to byte-identical files
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                save_model(&full, &mut a).unwrap();
+                save_model(&combined, &mut b).unwrap();
+                assert_eq!(a, b, "{ctx}: saved models must be byte-identical");
+            }
+        }
+    }
+}
+
+/// Mismatched continuation parameters are rejected up front with a clear
+/// error instead of silently training against a different grid.
+#[test]
+fn resume_rejects_mismatched_params() {
+    let train = regression_ds(91, N_TRAIN);
+    let valid = regression_ds(92, N_VALID);
+    let mut p = base_params(ObjectiveKind::QuantileReg);
+    p.quantile_alpha = 0.9;
+    let prior = run(&p, &train, &valid, None);
+
+    let resume_err = |params: LearnerParams| -> String {
+        match Learner::from_params(params)
+            .unwrap()
+            .resume(&prior, &train, Some(&valid))
+        {
+            Ok(_) => panic!("resume with mismatched params must fail"),
+            Err(e) => format!("{e:#}"),
+        }
+    };
+
+    // different objective
+    let mut other = base_params(ObjectiveKind::SquaredError);
+    other.num_rounds = 2;
+    let msg = resume_err(other);
+    assert!(msg.contains("objective"), "{msg}");
+
+    // same objective, different shaping parameter
+    let mut shifted = p.clone();
+    shifted.quantile_alpha = 0.5;
+    let msg = resume_err(shifted);
+    assert!(msg.contains("quantile_alpha"), "{msg}");
+
+    // different bin budget: the frozen grid cannot be re-derived
+    let mut coarser = p.clone();
+    coarser.max_bins = 8;
+    let msg = resume_err(coarser);
+    assert!(msg.contains("max_bins"), "{msg}");
+}
+
+/// Categorical membership splits survive serialization and route
+/// identically through the float, bin-translated and flat-serve paths.
+#[test]
+fn categorical_model_round_trips_through_serialization_and_flat_serving() {
+    use xgb_tpu::exec::ExecContext;
+    use xgb_tpu::predict::quantised::{BinForest, QuantisedBatch};
+    use xgb_tpu::serve::FlatBatch;
+
+    let train = categorical_ds(101, N_TRAIN);
+    let valid = categorical_ds(102, N_VALID);
+    let mut p = base_params(ObjectiveKind::BinaryLogistic);
+    p.categorical_features = vec![0, 2];
+    let booster = run(&p, &train, &valid, None);
+
+    let has_cat = booster
+        .trees
+        .iter()
+        .flatten()
+        .any(|t| t.nodes.iter().any(|nd| nd.cats != 0));
+    assert!(has_cat, "categorical training must produce membership splits");
+
+    // serialization round-trip: cat nodes + categorical cut flags persist,
+    // and the reloaded model predicts bit-identically
+    let mut bytes = Vec::new();
+    save_model(&booster, &mut bytes).unwrap();
+    let text = String::from_utf8(bytes.clone()).unwrap();
+    assert!(text.contains(" cat "), "membership nodes persist as `cat` records");
+    assert!(text.contains("cuts categorical ="), "categorical flags persist with the cuts");
+    let reloaded = load_model(&bytes[..]).unwrap();
+    assert_eq!(reloaded.trees, booster.trees, "trees round-trip");
+    let (pa, pb) = (booster.predict(&valid.x), reloaded.predict(&valid.x));
+    for (i, (u, v)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "reloaded prediction {i}");
+    }
+
+    // flat-serve parity: the SoA arena routes membership splits exactly
+    // like per-row float traversal, including missing and out-of-vocab
+    let cuts = booster.cuts.as_ref().expect("trained booster carries cuts");
+    let bf = BinForest::from_trees(&booster.trees, cuts);
+    let flat = bf.flatten().unwrap();
+    let qb = QuantisedBatch::from_dmatrix(&valid.x, cuts, 0).unwrap();
+    let fb = FlatBatch::from_quantised(&qb, valid.x.n_cols());
+    let exec = ExecContext::new(2);
+    let margins = flat.predict_margins(&booster.base_score, &fb, &exec);
+    for r in 0..valid.x.n_rows() {
+        let mut want = booster.base_score[0];
+        for t in &booster.trees[0] {
+            want += t.nodes[t.leaf_for_row(&valid.x, r)].leaf_value;
+        }
+        assert_eq!(margins[0][r].to_bits(), want.to_bits(), "flat margin row {r}");
+    }
+}
